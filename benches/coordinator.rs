@@ -1,0 +1,68 @@
+//! L3 coordinator microbenches: the pure-rust hot paths that wrap every
+//! PJRT call — dynamic batcher push/poll/take, batch assembly from the
+//! synthetic substrates, logits post-processing. These must be negligible
+//! next to the executable runtime (EXPERIMENTS.md §Perf verifies).
+
+use std::time::Duration;
+
+use cat::bench::Bench;
+use cat::coordinator::DynamicBatcher;
+use cat::data::{Rng, ShapeDataset, TextCorpus};
+use cat::metrics::{accuracy, token_nll};
+use cat::tensor::HostTensor;
+
+fn main() {
+    let mut bench = Bench::new("coordinator hot paths");
+    bench.warmup = 2;
+    bench.samples = 20;
+
+    bench.case("batcher_push_take_64", || {
+        let mut batcher = DynamicBatcher::new(8, Duration::from_millis(1));
+        for i in 0..64u32 {
+            batcher.push(i);
+        }
+        let mut total = 0usize;
+        while !batcher.is_empty() {
+            total += batcher.take(8).len();
+        }
+        assert_eq!(total, 64);
+    });
+
+    let ds = ShapeDataset::new(1);
+    let mut pixels = Vec::new();
+    let mut labels = Vec::new();
+    let mut start = 0u64;
+    bench.case("image_batch_8", || {
+        ds.fill_batch(start, 8, &mut pixels, &mut labels);
+        start += 8;
+    });
+
+    let corpus = TextCorpus::new(1024, 1);
+    let mut s = 0u64;
+    bench.case("lm_masked_batch_8x256", || {
+        let lb = corpus.masked_batch(s, 8, 256, 0.15);
+        s += 8;
+        assert_eq!(lb.tokens.len(), 8 * 256);
+    });
+
+    let mut rng = Rng::new(3);
+    let logits = HostTensor::f32(
+        vec![8, 256, 1024],
+        (0..8 * 256 * 1024).map(|_| rng.normal()).collect())
+        .expect("logits");
+    let targets: Vec<i32> = (0..8 * 256).map(|i| (i % 1024) as i32).collect();
+    let weights = vec![1.0f32; 8 * 256];
+    bench.case("token_nll_8x256x1024", || {
+        token_nll(&logits, &targets, &weights).expect("nll");
+    });
+
+    let cls = HostTensor::f32(
+        vec![256, 10], (0..2560).map(|_| rng.normal()).collect())
+        .expect("cls");
+    let lab: Vec<i32> = (0..256).map(|i| (i % 10) as i32).collect();
+    bench.case("accuracy_256x10", || {
+        accuracy(&cls, &lab).expect("acc");
+    });
+
+    print!("{}", bench.report());
+}

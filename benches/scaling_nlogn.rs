@@ -1,0 +1,67 @@
+//! Fig. 1 / complexity claim: measured forward wallclock of one mixing
+//! layer across N ∈ {64..2048} for attention (O(N^2)), CAT-gather (O(N^2),
+//! no qk matmul) and CAT-FFT (O(N log N)), next to the analytic FLOP
+//! model from `cat::complexity`.
+
+use cat::bench::Bench;
+use cat::complexity::{layer_cost, Mechanism};
+use cat::data::Rng;
+use cat::runtime::Runtime;
+use cat::tensor::HostTensor;
+
+const NS: [usize; 6] = [64, 128, 256, 512, 1024, 2048];
+
+fn inputs_for(rt: &Runtime, name: &str) -> Vec<xla::Literal> {
+    let entry = rt.config(name).expect("cfg").entry("forward").expect("fwd");
+    let mut rng = Rng::new(7);
+    entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            let data: Vec<f32> = (0..spec.num_elements())
+                .map(|_| 0.05 * rng.normal())
+                .collect();
+            HostTensor::f32(spec.shape.clone(), data)
+                .expect("t")
+                .to_literal()
+                .expect("lit")
+        })
+        .collect()
+}
+
+fn main() {
+    let rt = Runtime::from_env().expect("artifacts present?");
+    let mut bench = Bench::new("scaling (one mixing layer, d=256 h=8)");
+    bench.warmup = 1;
+    bench.samples = 5;
+
+    for &n in &NS {
+        for mech in ["attention", "cat_fft", "cat_gather"] {
+            let name = format!("scale_{n}_{mech}");
+            let exe = rt.load(&name, "forward").expect("load");
+            let inputs = inputs_for(&rt, &name);
+            bench.case(&name, || {
+                exe.execute_literals(&inputs.iter().collect::<Vec<_>>())
+                    .expect("exec");
+            });
+        }
+    }
+    print!("{}", bench.report());
+
+    println!("\nFig. 1 series: measured ms (and modeled GFLOP) per forward");
+    println!("{:>6} {:>12} {:>12} {:>12}   {:>10} {:>10} {:>10}",
+             "N", "attn ms", "catfft ms", "catgthr ms",
+             "attn GF", "catfft GF", "gthr GF");
+    for &n in &NS {
+        let ms = |m: &str| bench
+            .median_of(&format!("scale_{n}_{m}"))
+            .map(|t| t * 1e3)
+            .unwrap_or(f64::NAN);
+        let gf = |m: Mechanism| layer_cost(m, n, 256, 8).flops / 1e9;
+        println!("{n:>6} {:>12.3} {:>12.3} {:>12.3}   {:>10.3} {:>10.3} \
+                  {:>10.3}",
+                 ms("attention"), ms("cat_fft"), ms("cat_gather"),
+                 gf(Mechanism::Attention), gf(Mechanism::CatFft),
+                 gf(Mechanism::CatGather));
+    }
+}

@@ -1,0 +1,34 @@
+//! Table 1 (fast proxy): per-mechanism ViT *training-step* throughput on
+//! the ImageNet substitute. The full-accuracy grid is `examples/train_vit
+//! --table1`; this bench times the end-to-end train step — data generation
+//! + PJRT execute + state absorb — for each Table-1 mechanism.
+
+use cat::bench::Bench;
+use cat::runtime::Runtime;
+use cat::train::Trainer;
+
+fn main() {
+    let rt = Runtime::from_env().expect("artifacts present?");
+    let mut bench = Bench::new("table1 train step (ViT-B proxy)");
+    bench.warmup = 1;
+    bench.samples = 5;
+
+    let mechs = ["attention", "cat", "cat_alter"];
+    for mech in mechs {
+        let name = format!("vit_b_avg_{mech}");
+        let mut trainer = Trainer::new(&rt, &name, 0).expect("trainer");
+        bench.case(&name, || {
+            trainer.step(1e-3).expect("step");
+        });
+    }
+    print!("{}", bench.report());
+
+    let attn = bench.median_of("vit_b_avg_attention").expect("attn");
+    println!("\nTable 1 training-step wallclock (ViT-B proxy):");
+    for mech in mechs {
+        let name = format!("vit_b_avg_{mech}");
+        let t = bench.median_of(&name).expect("case");
+        println!("  {name:<24} {:>8.1} ms/step   vs attention {:.2}x",
+                 t * 1e3, attn / t);
+    }
+}

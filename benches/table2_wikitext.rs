@@ -1,0 +1,27 @@
+//! Table 2 (fast proxy): LM training-step throughput for masked and causal
+//! settings across mechanisms, on the WikiText substitute. Full PPL grid:
+//! `examples/train_lm --table2`. The causal rows exercise the zero-padded
+//! FFT causal CAT (our sub-quadratic extension; the paper's causal CAT is
+//! O(N^2)).
+
+use cat::bench::Bench;
+use cat::runtime::Runtime;
+use cat::train::Trainer;
+
+fn main() {
+    let rt = Runtime::from_env().expect("artifacts present?");
+    let mut bench = Bench::new("table2 train step (GPT-2 proxy, N=256)");
+    bench.warmup = 1;
+    bench.samples = 3;
+
+    for task in ["masked", "causal"] {
+        for mech in ["attention", "cat"] {
+            let name = format!("lm_gpt2_{task}_{mech}");
+            let mut trainer = Trainer::new(&rt, &name, 0).expect("trainer");
+            bench.case(&name, || {
+                trainer.step(1e-3).expect("step");
+            });
+        }
+    }
+    print!("{}", bench.report());
+}

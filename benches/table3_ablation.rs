@@ -1,0 +1,40 @@
+//! Table 3 / Fig. 2 (fast proxy): forward-pass cost of each circular
+//! parameterization (qkv / qv / q / v) on the ViT-L proxy, plus their
+//! parameter budgets — the cost side of the ablation; the accuracy side is
+//! `examples/ablation`.
+
+use cat::bench::Bench;
+use cat::runtime::{Runtime, TrainState};
+use cat::tensor::HostTensor;
+
+fn main() {
+    let rt = Runtime::from_env().expect("artifacts present?");
+    let mut bench = Bench::new("table3 forward (ViT-L proxy)");
+    bench.warmup = 1;
+    bench.samples = 5;
+
+    let mechs = ["attention", "cat_qkv", "cat", "cat_q", "cat_v"];
+    let mut budgets = Vec::new();
+    for mech in mechs {
+        let name = format!("vit_l_avg_{mech}");
+        let meta = rt.config(&name).expect("cfg").clone();
+        let exe = rt.load(&name, "forward").expect("load");
+        let state = TrainState::init(&rt, &name, 0).expect("init");
+        let images = HostTensor::zeros_f32(
+            vec![meta.batch_size, 3, 32, 32]).to_literal().expect("lit");
+        bench.case(&name, || {
+            let mut args: Vec<&xla::Literal> = state.params.iter().collect();
+            args.push(&images);
+            exe.execute_literals(&args).expect("exec");
+        });
+        budgets.push((name, meta.param_count));
+    }
+    print!("{}", bench.report());
+
+    println!("\nTable 3 parameter budgets (whole model):");
+    for (name, params) in &budgets {
+        let t = bench.median_of(name).expect("case");
+        println!("  {name:<24} {params:>10} params {:>9.2} ms/fwd",
+                 t * 1e3);
+    }
+}

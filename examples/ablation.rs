@@ -1,0 +1,40 @@
+//! Table 3 / Fig. 2 driver: the circular-parameterization ablation
+//! (qkv Averaged-Key / qv CAT / q-only / v-only vs standard attention)
+//! on the ViT-L proxy with avg pooling — accuracy + parameter budget.
+//!
+//!   cargo run --release --example ablation -- [--steps 300]
+
+use cat::harness;
+use cat::runtime::Runtime;
+
+fn main() -> cat::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let steps: u64 = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(300);
+    let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    let rt = Runtime::from_env()?;
+    let names = harness::table3_names();
+    let rows = harness::run_grid(&rt, &names, steps, seed, 16)?;
+    print!("{}", harness::render_table(
+        "Table 3 / Fig. 2 — circular qkv ablation (ViT-L proxy, avg pool)",
+        &rows));
+
+    // parameter budgets measured from the manifest, Fig.-2 style
+    println!("\nmeasured parameter budgets (mixing layers only excluded — \
+              whole model):");
+    for name in &names {
+        let c = rt.config(name)?;
+        println!("  {name:<22} {:>10} params", c.param_count);
+    }
+    if let Some(path) = get("--json") {
+        std::fs::write(&path,
+                       harness::rows_to_json(&rows).to_string_pretty())?;
+        eprintln!("rows -> {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! Quickstart: the 60-second tour of the public API.
+//!
+//! 1. open the artifact registry (PJRT CPU runtime),
+//! 2. initialize a CAT ViT from its AOT `init` artifact,
+//! 3. run one forward pass on a synthetic image batch,
+//! 4. take 20 training steps and watch the loss fall.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (after `make artifacts`)
+
+use cat::data::{BatchSource, ShapeDataset};
+use cat::runtime::Runtime;
+use cat::tensor::HostTensor;
+use cat::train::{Schedule, TrainOptions, Trainer};
+
+const MODEL: &str = "vit_b_avg_cat";
+
+fn main() -> cat::Result<()> {
+    // 1. runtime over ./artifacts (env CAT_ARTIFACTS overrides)
+    let rt = Runtime::from_env()?;
+    println!("PJRT platform: {}", rt.platform());
+    let meta = rt.config(MODEL)?;
+    println!("{MODEL}: d={} heads={} layers={} params={}",
+             meta.d_model, meta.n_heads, meta.n_layers, meta.param_count);
+
+    // 2-3. init params + one forward pass
+    let mut trainer = Trainer::new(&rt, MODEL, 0)?;
+    let ds = ShapeDataset::new(7);
+    let mut pixels = Vec::new();
+    let mut labels = Vec::new();
+    ds.fill_batch(0, meta.batch_size, &mut pixels, &mut labels);
+    let images = HostTensor::f32(
+        vec![meta.batch_size, 3, 32, 32], pixels)?;
+    let fwd = rt.load(MODEL, "forward")?;
+    let mut args: Vec<&xla::Literal> = trainer.state.params.iter().collect();
+    let img_lit = images.to_literal()?;
+    args.push(&img_lit);
+    let outs = fwd.execute_literals(&args)?;
+    let logits = HostTensor::from_literal(&outs[0])?;
+    println!("forward: logits shape {:?}, first row {:?}",
+             logits.shape,
+             &logits.as_f32()?[..meta.n_classes.min(4)]);
+
+    // 4. a short training run
+    let opts = TrainOptions {
+        steps: 20,
+        schedule: Schedule::constant(1e-3),
+        log_every: 5,
+        eval_batches: 4,
+        ..Default::default()
+    };
+    let report = trainer.run(&opts)?;
+    println!("loss: {:.4} -> {:.4} over {} steps ({:.2} steps/s)",
+             report.curve.losses[0],
+             report.curve.last().expect("nonempty curve"),
+             report.steps_done, report.steps_per_sec());
+    if let Some((k, v)) = report.final_metric() {
+        println!("held-out {k}: {v:.4}");
+    }
+    println!("quickstart OK");
+    Ok(())
+}

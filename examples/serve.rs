@@ -1,0 +1,102 @@
+//! Serving example: train a small CAT ViT briefly, then serve it through
+//! the router + dynamic batcher and fire concurrent traffic from client
+//! threads, reporting latency percentiles, throughput, batching occupancy
+//! — and accuracy, proving the served parameters are the trained ones.
+//!
+//!   cargo run --release --example serve -- [--requests 512] [--steps 100]
+
+use cat::coordinator::{server::WorkerSpec, ServeOptions, Server};
+use cat::data::ShapeDataset;
+use cat::runtime::Runtime;
+use cat::tensor::HostTensor;
+use cat::train::{Schedule, TrainOptions, Trainer};
+
+const MODEL: &str = "vit_b_avg_cat";
+
+fn main() -> cat::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |flag: &str| -> Option<u64> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+    };
+    let requests = get("--requests").unwrap_or(512) as usize;
+    let steps = get("--steps").unwrap_or(100);
+
+    let rt = Runtime::from_env()?;
+
+    // 1. train briefly so serving has real parameters
+    eprintln!("training {MODEL} for {steps} steps...");
+    let mut trainer = Trainer::new(&rt, MODEL, 0)?;
+    let report = trainer.run(&TrainOptions {
+        steps,
+        schedule: Schedule::new(1e-3, steps / 10, steps),
+        eval_batches: 8,
+        ..Default::default()
+    })?;
+    let (k, v) = report.final_metric().expect("metric");
+    eprintln!("trained: {k}={v:.3} at {:.2} steps/s", report.steps_per_sec());
+
+    // 2. serve the *trained* parameters (host copies cross the thread
+    //    boundary; the worker rebuilds literals in its own PJRT runtime)
+    let trained = trainer.state.params_host()?;
+    drop(trainer);
+    drop(rt);
+    let server = Server::spawn_specs(
+        cat::artifacts_dir(),
+        vec![WorkerSpec { model: MODEL.to_string(), params: Some(trained),
+                          seed: 0 }],
+        ServeOptions::default())?;
+    let handle = server.handle();
+
+    // held-out traffic from 8 concurrent client threads
+    let ds = ShapeDataset::new(999);
+    let n_clients = 8usize;
+    let per_client = requests / n_clients;
+    let t0 = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let h = handle.clone();
+        let ds = ds.clone();
+        clients.push(std::thread::spawn(move || -> cat::Result<usize> {
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let sample = ds.sample((c * per_client + i) as u64);
+                let input = HostTensor::f32(vec![3, 32, 32], sample.pixels)?;
+                let logits = h.infer(MODEL, input)?;
+                let row = logits.as_f32()?;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite"))
+                    .map(|(j, _)| j as i32)
+                    .expect("nonempty");
+                correct += (pred == sample.label) as usize;
+            }
+            Ok(correct)
+        }));
+    }
+    let mut correct = 0usize;
+    for t in clients {
+        correct += t.join().expect("client thread")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(handle);
+    let stats = server.shutdown();
+    let served = n_clients * per_client;
+
+    println!("\nserved {served} requests in {wall:.2}s = {:.1} req/s",
+             served as f64 / wall);
+    println!("served-model accuracy: {:.3} (trained {k}={v:.3})",
+             correct as f64 / served as f64);
+    for s in &stats {
+        println!("worker {}: {} requests / {} batches (occupancy {:.2})",
+                 s.model, s.requests, s.batches, s.mean_occupancy);
+        println!("latency p50 {}us p90 {}us p99 {}us max {}us mean {:.0}us",
+                 s.latency.quantile_us(0.5), s.latency.quantile_us(0.9),
+                 s.latency.quantile_us(0.99), s.latency.max_us(),
+                 s.latency.mean_us());
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! End-to-end driver (Table 2): masked + causal language modeling on the
+//! synthetic WikiText substitute, reporting word perplexity per mechanism.
+//!
+//!   cargo run --release --example train_lm -- --table2 --steps 200
+//!   cargo run --release --example train_lm -- --config lm_gpt2_masked_cat
+//!   cargo run --release --example train_lm -- --fused   (train_k8 path)
+
+use cat::harness;
+use cat::runtime::Runtime;
+use cat::train::{Schedule, TrainOptions, Trainer};
+
+fn main() -> cat::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |flag: &str| -> Option<String> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1).cloned())
+    };
+    let has = |flag: &str| args.iter().any(|a| a == flag);
+    let steps: u64 = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
+    let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+
+    let rt = Runtime::from_env()?;
+
+    if has("--fused") {
+        // fused-K-step demo: identical math, fewer host<->device round
+        // trips (EXPERIMENTS.md §Perf quantifies the gain)
+        let name = "lm_gpt2_masked_cat";
+        let opts = TrainOptions {
+            steps,
+            schedule: Schedule::new(2.5e-4, steps / 10, steps),
+            seed,
+            eval_batches: 8,
+            ..Default::default()
+        };
+        let mut t_seq = Trainer::new(&rt, name, seed)?;
+        let seq = t_seq.run(&opts)?;
+        let mut t_fused = Trainer::new(&rt, name, seed)?;
+        let fused = t_fused.run_fused(&opts, 8)?;
+        println!("sequential: {:.2} steps/s; fused(K=8): {:.2} steps/s \
+                  ({:.2}x)",
+                 seq.steps_per_sec(), fused.steps_per_sec(),
+                 fused.steps_per_sec() / seq.steps_per_sec());
+        println!("final ppl  sequential {:.3}  fused {:.3}",
+                 seq.final_metric().map(|m| m.1).unwrap_or(f64::NAN),
+                 fused.final_metric().map(|m| m.1).unwrap_or(f64::NAN));
+        return Ok(());
+    }
+
+    let names: Vec<String> = if let Some(cfg) = get("--config") {
+        vec![cfg]
+    } else {
+        harness::table2_names(has("--fast"))
+    };
+    let rows = harness::run_grid(&rt, &names, steps, seed, 8)?;
+    print!("{}", harness::render_table(
+        "Table 2 — WikiText-proxy LM grid (word PPL down)", &rows));
+    if let Some(path) = get("--json") {
+        std::fs::write(&path,
+                       harness::rows_to_json(&rows).to_string_pretty())?;
+        eprintln!("rows -> {path}");
+    }
+    Ok(())
+}

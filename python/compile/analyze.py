@@ -1,0 +1,133 @@
+"""Perf analysis for L1/L2 (EXPERIMENTS.md §Perf):
+
+* **L2** — parse each emitted HLO artifact and report an op histogram plus
+  dominant-cost estimates (dot/convolution/fft shapes), catching redundant
+  recomputation and fusion blockers.
+* **L1** — analytic VMEM footprint + MXU-utilization estimate per Pallas
+  kernel BlockSpec. `interpret=True` gives CPU-numpy timings only, so the
+  TPU story is *structural*: does each program's working set fit VMEM
+  (~16 MiB/core), and is the inner op MXU-shaped (matmul with >=128-ish
+  contraction) or VPU-shaped (elementwise)?
+
+Usage:
+  python -m compile.analyze --hlo ../artifacts/vit_b_avg_cat.forward.hlo.txt
+  python -m compile.analyze --vmem              # table over all kernels
+  python -m compile.analyze --summary ../artifacts   # top ops per artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import os
+import re
+import sys
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on modern TPUs
+
+OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+(\w+)\(")
+
+
+def op_histogram(hlo_text: str) -> collections.Counter:
+    ops = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = OP_RE.match(line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def dot_shapes(hlo_text: str):
+    """Rough list of dot/fft op result shapes (dominant cost terms)."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+                     r"(f32|c64)\[([\d,]*)\][^=]*\b(dot|fft)\(", line)
+        if m:
+            shape = [int(x) for x in m.group(2).split(",") if x]
+            out.append((m.group(3), m.group(1), shape))
+    return out
+
+
+def analyze_hlo(path: str) -> str:
+    with open(path) as f:
+        text = f.read()
+    ops = op_histogram(text)
+    lines = [f"{os.path.basename(path)}: {sum(ops.values())} instructions"]
+    for op, count in ops.most_common(12):
+        lines.append(f"  {op:<22} {count}")
+    dots = dot_shapes(text)
+    if dots:
+        lines.append(f"  dominant ops ({len(dots)} dot/fft):")
+        for kind, dt, shape in dots[:10]:
+            lines.append(f"    {kind:<4} {dt}{shape}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# L1: VMEM / MXU estimates per kernel BlockSpec
+# ---------------------------------------------------------------------------
+
+def kernel_vmem_table() -> str:
+    """Analytic working-set table for every Pallas kernel's BlockSpec,
+    over the shapes the paper's models actually run."""
+    rows = []
+
+    def row(kernel, cfg, floats, mxu):
+        rows.append((kernel, cfg, 4 * floats, mxu))
+
+    for (n, dh, bq) in [(256, 64, 64), (1024, 32, 64), (2048, 32, 64)]:
+        # attention: q block + K + V panels + score block
+        row("attention", f"N={n} dh={dh} BQ={bq}",
+            bq * dh + 2 * n * dh + bq * n,
+            f"MXU {bq}x{dh}x{n} + {bq}x{n}x{dh}")
+        # circulant gather: z + V panel + rolled panel + out block
+        row("cat_circulant", f"N={n} dh={dh} BI={bq}",
+            n + n * dh + bq * n + bq * dh,
+            f"MXU {bq}x{n}x{dh}")
+        # fft pointwise: z/v spectra (F = N/2+1), all VPU
+        f = n // 2 + 1
+        row("cat_fft_pointwise", f"N={n} dh={dh}",
+            2 * f + 4 * f * dh,
+            "VPU elementwise")
+        # linear attention: 3 panels + dh x dh accumulator
+        row("linear_attention", f"N={n} dh={dh}",
+            3 * n * dh + dh * dh + dh,
+            f"MXU {dh}x{n}x{dh}")
+    # layernorm: row block
+    row("layernorm", "BR=128 D=1024", 2 * 128 * 1024 + 2 * 1024,
+        "VPU reductions")
+
+    lines = [f"{'kernel':<20} {'config':<22} {'VMEM/block':>12} "
+             f"{'fits?':>6}  engine"]
+    for kernel, cfg, bytes_, mxu in rows:
+        fits = "yes" if bytes_ < VMEM_BYTES else "NO"
+        lines.append(f"{kernel:<20} {cfg:<22} {bytes_ / 1024:>9.1f}KiB "
+                     f"{fits:>6}  {mxu}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--hlo", help="analyze one HLO artifact")
+    ap.add_argument("--summary", help="top ops for every artifact in a dir")
+    ap.add_argument("--vmem", action="store_true",
+                    help="L1 kernel VMEM/MXU table")
+    args = ap.parse_args(argv)
+    if args.vmem:
+        print(kernel_vmem_table())
+    if args.hlo:
+        print(analyze_hlo(args.hlo))
+    if args.summary:
+        for f in sorted(os.listdir(args.summary)):
+            if f.endswith(".hlo.txt"):
+                path = os.path.join(args.summary, f)
+                with open(path) as fh:
+                    ops = op_histogram(fh.read())
+                top = ", ".join(f"{o}:{c}" for o, c in ops.most_common(5))
+                print(f"{f:<48} {sum(ops.values()):>6} insns  {top}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

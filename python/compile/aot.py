@@ -1,0 +1,309 @@
+"""AOT artifact emitter: lower every model entry point to HLO *text*.
+
+This is the only place python touches the pipeline; `make artifacts` runs it
+once and the rust runtime (rust/src/runtime/) is self-contained afterwards.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's xla_extension
+0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Per ModelConfig we emit up to four entries:
+
+  init        (seed:i32)                        -> (params...,)
+  forward     (params..., input)                -> (logits,)
+  train_step  (params..., m..., v..., step:f32,
+               batch..., lr:f32)                -> (params..., m..., v...,
+                                                    step', loss)
+  train_k8    same but batch axes have a leading K=8 and lr is (8,);
+              a lax.scan fuses 8 micro-steps per call (perf lever, only for
+              the e2e example configs)
+
+plus `manifest.json` describing every file: input/output tensor specs in
+call order, the parameter flattening (path strings), and the model config —
+the contract rust/src/runtime/artifact.rs parses.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--profile smoke]
+       [--only GLOB] [--force] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train_step as ts
+from .configs import ModelConfig, all_configs
+
+K_STEPS = 8
+# Configs that additionally get the fused K-step training artifact.
+K_STEP_CONFIGS = ("vit_b_avg_cat", "vit_b_avg_attention",
+                  "lm_gpt2_masked_cat")
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(name: str, x) -> Dict:
+    dt = {"float32": "f32", "int32": "i32", "uint32": "u32"}[str(x.dtype)]
+    return {"name": name, "shape": [int(s) for s in x.shape], "dtype": dt}
+
+
+def _param_template(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def batch_specs(cfg: ModelConfig, k: int = 0) -> List:
+    """Abstract batch tensors (optionally with a leading K axis)."""
+    b = cfg.batch_size
+    lead = (k,) if k else ()
+    if cfg.task == "vit":
+        return [
+            jax.ShapeDtypeStruct(
+                lead + (b, cfg.n_channels, cfg.image_size, cfg.image_size),
+                jnp.float32),
+            jax.ShapeDtypeStruct(lead + (b,), jnp.int32),
+        ]
+    if cfg.task in ("lm_masked", "lm_causal"):
+        n = cfg.seq_len
+        return [
+            jax.ShapeDtypeStruct(lead + (b, n), jnp.int32),
+            jax.ShapeDtypeStruct(lead + (b, n), jnp.int32),
+            jax.ShapeDtypeStruct(lead + (b, n), jnp.float32),
+        ]
+    # mixer
+    return [jax.ShapeDtypeStruct((b, cfg.seq_len, cfg.d_model), jnp.float32)]
+
+
+BATCH_NAMES = {
+    "vit": ["images", "labels"],
+    "lm_masked": ["tokens", "targets", "weights"],
+    "lm_causal": ["tokens", "targets", "weights"],
+    "mixer": ["x"],
+}
+
+
+# ---------------------------------------------------------------------------
+# entry builders: each returns (flat_fn, abstract_inputs, in_specs, out_specs)
+# ---------------------------------------------------------------------------
+
+def build_init(cfg: ModelConfig):
+    tmpl = _param_template(cfg)
+    leaves, paths = model.flatten_params(tmpl)
+
+    def fn(seed):
+        params = model.init_params(cfg, jax.random.PRNGKey(seed))
+        flat, _ = model.flatten_params(params)
+        return tuple(flat)
+
+    abstract = [jax.ShapeDtypeStruct((), jnp.int32)]
+    in_specs = [{"name": "seed", "shape": [], "dtype": "i32"}]
+    out_specs = [_spec(p, leaf) for p, leaf in zip(paths, leaves)]
+    return fn, abstract, in_specs, out_specs
+
+
+def build_forward(cfg: ModelConfig):
+    tmpl = _param_template(cfg)
+    leaves, paths = model.flatten_params(tmpl)
+    n_params = len(leaves)
+    binput = batch_specs(cfg)[0]
+
+    def fn(*args):
+        params = model.unflatten_params(cfg, list(args[:n_params]))
+        logits = model.forward(cfg, params, args[n_params], use_pallas=True)
+        return (logits,)
+
+    abstract = list(leaves) + [binput]
+    in_specs = ([_spec(p, leaf) for p, leaf in zip(paths, leaves)]
+                + [_spec(BATCH_NAMES[cfg.task][0], binput)])
+    out = jax.eval_shape(fn, *abstract)
+    out_specs = [_spec("logits", out[0])]
+    return fn, abstract, in_specs, out_specs
+
+
+def _opt_inputs(cfg: ModelConfig, k: int = 0):
+    tmpl = _param_template(cfg)
+    leaves, paths = model.flatten_params(tmpl)
+    n = len(leaves)
+    bspecs = batch_specs(cfg, k=k)
+    bnames = BATCH_NAMES[cfg.task]
+    lr_spec = (jax.ShapeDtypeStruct((k,), jnp.float32) if k
+               else jax.ShapeDtypeStruct((), jnp.float32))
+    abstract = (list(leaves) + list(leaves) + list(leaves)
+                + [jax.ShapeDtypeStruct((), jnp.float32)]
+                + bspecs + [lr_spec])
+    in_specs = ([_spec(f"param{p}", l) for p, l in zip(paths, leaves)]
+                + [_spec(f"m{p}", l) for p, l in zip(paths, leaves)]
+                + [_spec(f"v{p}", l) for p, l in zip(paths, leaves)]
+                + [{"name": "step", "shape": [], "dtype": "f32"}]
+                + [_spec(nm, b) for nm, b in zip(bnames, bspecs)]
+                + [_spec("lr", lr_spec)])
+    return tmpl, leaves, paths, n, bspecs, abstract, in_specs
+
+
+def build_train_step(cfg: ModelConfig):
+    tmpl, leaves, paths, n, bspecs, abstract, in_specs = _opt_inputs(cfg)
+
+    def fn(*args):
+        params = model.unflatten_params(cfg, list(args[:n]))
+        m = model.unflatten_params(cfg, list(args[n:2 * n]))
+        v = model.unflatten_params(cfg, list(args[2 * n:3 * n]))
+        step = args[3 * n]
+        nb = len(bspecs)
+        batch = tuple(args[3 * n + 1:3 * n + 1 + nb])
+        lr = args[3 * n + 1 + nb]
+        p2, m2, v2, s2, loss = ts.train_step(cfg, params, m, v, step, batch,
+                                             lr, use_pallas="train")
+        fp, _ = model.flatten_params(p2)
+        fm, _ = model.flatten_params(m2)
+        fv, _ = model.flatten_params(v2)
+        return tuple(fp) + tuple(fm) + tuple(fv) + (s2, loss)
+
+    out_specs = ([_spec(f"param{p}", l) for p, l in zip(paths, leaves)]
+                 + [_spec(f"m{p}", l) for p, l in zip(paths, leaves)]
+                 + [_spec(f"v{p}", l) for p, l in zip(paths, leaves)]
+                 + [{"name": "step", "shape": [], "dtype": "f32"},
+                    {"name": "loss", "shape": [], "dtype": "f32"}])
+    return fn, abstract, in_specs, out_specs
+
+
+def build_train_k(cfg: ModelConfig, k: int = K_STEPS):
+    tmpl, leaves, paths, n, bspecs, abstract, in_specs = _opt_inputs(cfg, k=k)
+
+    def fn(*args):
+        params = model.unflatten_params(cfg, list(args[:n]))
+        m = model.unflatten_params(cfg, list(args[n:2 * n]))
+        v = model.unflatten_params(cfg, list(args[2 * n:3 * n]))
+        step = args[3 * n]
+        nb = len(bspecs)
+        batches = tuple(args[3 * n + 1:3 * n + 1 + nb])
+        lrs = args[3 * n + 1 + nb]
+        p2, m2, v2, s2, losses = ts.train_k_steps(
+            cfg, params, m, v, step, batches, lrs, use_pallas="train")
+        fp, _ = model.flatten_params(p2)
+        fm, _ = model.flatten_params(m2)
+        fv, _ = model.flatten_params(v2)
+        return tuple(fp) + tuple(fm) + tuple(fv) + (s2, losses)
+
+    out_specs = ([_spec(f"param{p}", l) for p, l in zip(paths, leaves)]
+                 + [_spec(f"m{p}", l) for p, l in zip(paths, leaves)]
+                 + [_spec(f"v{p}", l) for p, l in zip(paths, leaves)]
+                 + [{"name": "step", "shape": [], "dtype": "f32"},
+                    {"name": "losses", "shape": [k], "dtype": "f32"}])
+    return fn, abstract, in_specs, out_specs
+
+
+def entries_for(cfg: ModelConfig) -> List[str]:
+    if cfg.task == "mixer":
+        return ["forward"]
+    out = ["init", "forward", "train_step"]
+    if cfg.name in K_STEP_CONFIGS:
+        out.append("train_k8")
+    return out
+
+
+BUILDERS = {
+    "init": build_init,
+    "forward": build_forward,
+    "train_step": build_train_step,
+    "train_k8": build_train_k,
+}
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def emit_config(cfg: ModelConfig, out_dir: str, force: bool) -> Dict:
+    tmpl = _param_template(cfg)
+    leaves, paths = model.flatten_params(tmpl)
+    meta = {
+        "task": cfg.task, "mechanism": cfg.mechanism,
+        "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "n_layers": cfg.n_layers, "seq_len": cfg.seq_len,
+        "n_tokens": cfg.n_tokens, "pool": cfg.pool,
+        "image_size": cfg.image_size, "patch_size": cfg.patch_size,
+        "n_classes": cfg.n_classes, "n_channels": cfg.n_channels,
+        "vocab_size": cfg.vocab_size, "cat_impl": cfg.cat_impl,
+        "batch_size": cfg.batch_size, "grad_clip": cfg.grad_clip,
+        "weight_decay": cfg.weight_decay, "causal": cfg.causal,
+        "param_count": int(sum(
+            int(jnp.prod(jnp.asarray(l.shape))) if l.shape else 1
+            for l in leaves)),
+        "params": [_spec(p, l) for p, l in zip(paths, leaves)],
+        "entries": {},
+    }
+    for entry in entries_for(cfg):
+        fname = f"{cfg.name}.{entry}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        fn, abstract, in_specs, out_specs = BUILDERS[entry](cfg)
+        if force or not os.path.exists(path):
+            t0 = time.time()
+            lowered = jax.jit(fn).lower(*abstract)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  {fname}: {len(text) / 1e6:.2f} MB "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        meta["entries"][entry] = {
+            "file": fname, "inputs": in_specs, "outputs": out_specs,
+        }
+    return meta
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default="default",
+                    choices=["default", "smoke"])
+    ap.add_argument("--only", default=None,
+                    help="glob over config names (still writes full manifest"
+                         " for emitted subset)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfgs = all_configs(args.profile)
+    if args.only:
+        cfgs = [c for c in cfgs if fnmatch.fnmatch(c.name, args.only)]
+    if args.list:
+        for c in cfgs:
+            print(c.name, entries_for(c))
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "configs": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    t0 = time.time()
+    for i, cfg in enumerate(cfgs):
+        print(f"[{i + 1}/{len(cfgs)}] {cfg.name}", flush=True)
+        manifest["configs"][cfg.name] = emit_config(cfg, args.out_dir,
+                                                    args.force)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['configs'])} configs "
+          f"({time.time() - t0:.0f}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,209 @@
+"""Model/task configurations and the named artifact registry.
+
+Every AOT artifact is produced from a `ModelConfig`. The preset names here
+are the contract with the rust side: `aot.py` writes one HLO file per
+(config, entry) plus `manifest.json`, and `rust/src/runtime/artifact.rs`
+looks artifacts up by these names.
+
+Scale note (DESIGN.md §Substitutions): the paper's backbones (ViT CLIP-B/L,
+Transformer-XL, GPT-2 small) are scaled down uniformly so the mechanism
+contrast — the quantity every table measures — is preserved while a single
+CPU core can train them. `clip_b`→`vit_b_proxy` (d=192, h=12, 4 layers),
+`clip_l`→`vit_l_proxy` (d=256, h=16, 6 layers), `gpt2s`→`lm_gpt2_proxy`
+(d=192, h=12, 4 layers), `txl`→`lm_txl_proxy` (d=160, h=10, 4 layers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+MECHANISMS = (
+    "attention",   # standard softmax attention (baseline)
+    "cat",         # paper default: qv, merged query-key W_A + W_V
+    "cat_alter",   # alternate layers: even=attention, odd=cat
+    "cat_qkv",     # Averaged-Key ablation (Table 3)
+    "cat_q",       # q-only ablation (Table 3)
+    "cat_v",       # v-only ablation (Table 3)
+    "linear",      # linear attention baseline (Sec. 5.5)
+)
+
+CAT_IMPLS = ("fft", "gather")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """A complete specification of one model variant.
+
+    task: "vit" (image classification), "lm_masked", "lm_causal",
+          or "mixer" (a single token-mixing layer — used by the
+          complexity/speedup microbenches).
+    """
+
+    name: str
+    task: str
+    mechanism: str
+    d_model: int
+    n_heads: int
+    n_layers: int
+    seq_len: int               # token count N seen by attention
+    mlp_ratio: int = 4
+    # vit-only
+    pool: str = "avg"          # "avg" | "token"
+    image_size: int = 32
+    patch_size: int = 4
+    n_classes: int = 10
+    n_channels: int = 3
+    # lm-only
+    vocab_size: int = 1024
+    # cat options
+    cat_impl: str = "fft"      # "fft" | "gather"
+    # causal softmax (strictly causal, our default) vs the paper-literal
+    # global-softmax-then-mask (leaks future info through the denominator —
+    # see kernels/ref.py docstring and DESIGN.md §Paper-gaps)
+    causal_renorm: bool = True
+    # train-time
+    batch_size: int = 8
+    weight_decay: float = 1e-4
+    grad_clip: float = 0.0     # 0 = off; paper clips LM at 0.25
+
+    def __post_init__(self):
+        assert self.task in ("vit", "lm_masked", "lm_causal", "mixer"), self.task
+        assert self.mechanism in MECHANISMS, self.mechanism
+        assert self.cat_impl in CAT_IMPLS, self.cat_impl
+        assert self.d_model % self.n_heads == 0, (self.d_model, self.n_heads)
+        assert self.pool in ("avg", "token"), self.pool
+        if self.task == "vit":
+            assert self.image_size % self.patch_size == 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def n_tokens(self) -> int:
+        """Sequence length entering the transformer blocks."""
+        if self.task == "vit":
+            return self.n_patches + (1 if self.pool == "token" else 0)
+        return self.seq_len
+
+    @property
+    def causal(self) -> bool:
+        return self.task == "lm_causal"
+
+    def layer_mechanism(self, layer: int) -> str:
+        """Per-layer mechanism; implements CAT-Alter's 50/50 split."""
+        if self.mechanism == "cat_alter":
+            return "attention" if layer % 2 == 0 else "cat"
+        return self.mechanism
+
+
+def _vit(name: str, mech: str, pool: str, d: int, h: int, layers: int,
+         **kw) -> ModelConfig:
+    return ModelConfig(name=name, task="vit", mechanism=mech, d_model=d,
+                       n_heads=h, n_layers=layers, seq_len=0, pool=pool, **kw)
+
+
+def _lm(name: str, mech: str, task: str, d: int, h: int, layers: int,
+        n: int = 256, **kw) -> ModelConfig:
+    kw.setdefault("grad_clip", 0.25)
+    kw.setdefault("cat_impl", "gather" if task == "lm_causal" else "fft")
+    return ModelConfig(name=name, task=task, mechanism=mech, d_model=d,
+                       n_heads=h, n_layers=layers, seq_len=n, **kw)
+
+
+def _mixer(name: str, mech: str, d: int, h: int, n: int,
+           **kw) -> ModelConfig:
+    return ModelConfig(name=name, task="mixer", mechanism=mech, d_model=d,
+                       n_heads=h, n_layers=1, seq_len=n, batch_size=1, **kw)
+
+
+def table1_configs() -> List[ModelConfig]:
+    """Table 1: ViT {B,L proxies} x {token, avg} x {attn, CAT, CAT-Alter}."""
+    out = []
+    for size, (d, h, layers) in (("b", (192, 12, 4)), ("l", (256, 16, 6))):
+        for pool in ("token", "avg"):
+            for mech in ("attention", "cat", "cat_alter"):
+                out.append(_vit(f"vit_{size}_{pool}_{mech}", mech, pool,
+                                d, h, layers))
+    return out
+
+
+def table2_configs() -> List[ModelConfig]:
+    """Table 2: {TXL, GPT-2 proxies} x {masked, causal} x mechanisms."""
+    out = []
+    for arch, (d, h, layers) in (("txl", (160, 10, 4)), ("gpt2", (192, 12, 4))):
+        for task in ("lm_masked", "lm_causal"):
+            for mech in ("attention", "cat", "cat_alter"):
+                out.append(_lm(f"lm_{arch}_{task[3:]}_{mech}", mech, task,
+                               d, h, layers))
+    return out
+
+
+def table3_configs() -> List[ModelConfig]:
+    """Table 3 / Fig. 2 ablation on the ViT-L proxy, avg pool.
+
+    attention + cat (qv) are shared with Table 1 (vit_l_avg_*).
+    """
+    d, h, layers = 256, 16, 6
+    return [
+        _vit("vit_l_avg_cat_qkv", "cat_qkv", "avg", d, h, layers),
+        _vit("vit_l_avg_cat_q", "cat_q", "avg", d, h, layers),
+        _vit("vit_l_avg_cat_v", "cat_v", "avg", d, h, layers),
+    ]
+
+
+def linear_baseline_config() -> ModelConfig:
+    """Sec. 5.5: linear attention on the ViT-L proxy (instability demo)."""
+    return _vit("vit_l_avg_linear", "linear", "avg", 256, 16, 6)
+
+
+def mixer_configs() -> List[ModelConfig]:
+    """Fig. 1 / §4.4 microbench artifacts: one mixing layer, f(x)->(B,N,D).
+
+    `speedup_n256_*`: CLIP-L-like width at N=256 (the paper's V100 claim).
+    `scale_{n}_*`: scaling sweep for the O(N^2) vs O(N log N) series.
+    """
+    out = []
+    for mech, impl in (("attention", "fft"), ("cat", "fft"),
+                       ("cat", "gather"), ("linear", "fft")):
+        suffix = mech if mech != "cat" else f"cat_{impl}"
+        out.append(_mixer(f"speedup_n256_{suffix}", mech, d=512, h=16,
+                          n=256, cat_impl=impl))
+    for n in (64, 128, 256, 512, 1024, 2048):
+        for mech, impl in (("attention", "fft"), ("cat", "fft"),
+                           ("cat", "gather")):
+            suffix = mech if mech != "cat" else f"cat_{impl}"
+            out.append(_mixer(f"scale_{n}_{suffix}", mech, d=256, h=8,
+                              n=n, cat_impl=impl))
+    return out
+
+
+def all_configs(profile: str = "default") -> List[ModelConfig]:
+    """The artifact registry.
+
+    profile "smoke": a 2-config subset for fast CI-style runs.
+    profile "default": everything the tables/figures need.
+    """
+    if profile == "smoke":
+        return [
+            _vit("vit_b_avg_cat", "cat", "avg", 192, 12, 4),
+            _lm("lm_gpt2_causal_attention", "attention", "lm_causal",
+                192, 12, 4),
+        ]
+    cfgs = (table1_configs() + table2_configs() + table3_configs()
+            + [linear_baseline_config()] + mixer_configs())
+    names = [c.name for c in cfgs]
+    assert len(names) == len(set(names)), "duplicate config names"
+    return cfgs
+
+
+def by_name(name: str) -> ModelConfig:
+    for c in all_configs():
+        if c.name == name:
+            return c
+    raise KeyError(name)

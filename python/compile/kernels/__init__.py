@@ -1,0 +1,16 @@
+"""L1 Pallas kernels for CAT + baselines (all interpret=True).
+
+Modules:
+  attention         — fused softmax attention (O(N^2) baseline)
+  cat_circulant     — gather-based circulant apply (paper's practical CAT)
+  cat_fft_pointwise — frequency-domain pointwise kernel + full FFT path
+  linear_attention  — elu-kernel linear attention (instability baseline)
+  layernorm         — fused LayerNorm
+  ref               — pure-jnp oracles for all of the above
+"""
+
+from . import (attention, cat_circulant, cat_fft_pointwise, layernorm,
+               linear_attention, ref)
+
+__all__ = ["attention", "cat_circulant", "cat_fft_pointwise", "layernorm",
+           "linear_attention", "ref"]

@@ -1,0 +1,70 @@
+"""Fused softmax-attention Pallas kernel (the O(N^2) baseline).
+
+Blockwise over queries: the grid is (batch*heads, N // BLOCK_Q). Each
+program loads one query block plus the full K/V panel for its (b, h) slice
+into VMEM, computes the scaled scores on the MXU, applies an exact row
+softmax (the whole row is resident, so no online rescaling is needed), and
+writes one output block.
+
+VMEM budget per program (f32): BLOCK_Q*dh + 2*N*dh + BLOCK_Q*N floats.
+For the paper's ViT CLIP-L shape (N=256, dh=64, BLOCK_Q=64) that is
+~0.3 MiB — far under the ~16 MiB VMEM of a TPU core, leaving room for
+double buffering. DESIGN.md §Perf records the estimate per configuration.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels lower to plain HLO and the BlockSpec schedule is
+what we validate + analyze.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float,
+                      causal: bool, block_q: int):
+    """One (bh, q-block) program: exact softmax over the full key row."""
+    q = q_ref[0]                                  # (BQ, dh)
+    k = k_ref[0]                                  # (N, dh)
+    v = v_ref[0]                                  # (N, dh)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if causal:
+        qi = pl.program_id(1) * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, scores.shape, 0)
+        kj = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        scores = jnp.where(kj <= qi, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = False, block_q: int = 64) -> jax.Array:
+    """Fused attention. q,k,v: (BH, N, dh) -> (BH, N, dh)."""
+    bh, n, dh = q.shape
+    # largest divisor of N not exceeding the requested block (token-pooled
+    # ViTs have N = patches + 1, e.g. 65 -> blocks of 13)
+    block_q = min(block_q, n)
+    while n % block_q:
+        block_q -= 1
+    scale = 1.0 / (dh ** 0.5)
+    kernel = functools.partial(_attention_kernel, scale=scale,
+                               causal=causal, block_q=block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, n, dh), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,79 @@
+"""Frequency-domain pointwise-multiply Pallas kernel for the CAT FFT path.
+
+The O(N log N) CAT pipeline is
+
+    Z = rfft(z*)          # (BH, F)         — lowered by XLA's native FFT
+    V = rfft(v, axis=-2)  # (BH, F, dh)
+    O = conj(Z)[:, :, None] * V               <-- THIS KERNEL
+    o = irfft(O, n=N, axis=-2)
+
+XLA owns the FFT butterflies (a hand-written Pallas FFT would fight the MXU
+rather than use it — see DESIGN.md §Hardware-Adaptation); the elementwise
+complex product, the only O(N·dh) inner loop the mechanism adds, is
+expressed as a Pallas kernel over split real/imag planes so the hot loop is
+kernel-owned and VMEM-tiled.
+
+conj(Z) * V with Z = zr + i·zi, V = vr + i·vi:
+    re = zr*vr + zi*vi
+    im = zr*vi - zi*vr
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pointwise_kernel(zr_ref, zi_ref, vr_ref, vi_ref, or_ref, oi_ref):
+    zr = zr_ref[0][:, None]                      # (F, 1)
+    zi = zi_ref[0][:, None]
+    vr = vr_ref[0]                               # (F, dh)
+    vi = vi_ref[0]
+    or_ref[0] = zr * vr + zi * vi
+    oi_ref[0] = zr * vi - zi * vr
+
+
+def fft_pointwise(zf: jax.Array, vf: jax.Array) -> jax.Array:
+    """conj(zf)[..., None] * vf over split real/imag Pallas planes.
+
+    zf: complex (BH, F); vf: complex (BH, F, dh). Returns complex (BH, F, dh).
+    """
+    bh, f = zf.shape
+    dh = vf.shape[-1]
+    assert vf.shape == (bh, f, dh)
+    zr, zi = jnp.real(zf).astype(jnp.float32), jnp.imag(zf).astype(jnp.float32)
+    vr, vi = jnp.real(vf).astype(jnp.float32), jnp.imag(vf).astype(jnp.float32)
+    out_shape = (
+        jax.ShapeDtypeStruct((bh, f, dh), jnp.float32),
+        jax.ShapeDtypeStruct((bh, f, dh), jnp.float32),
+    )
+    o_r, o_i = pl.pallas_call(
+        _pointwise_kernel,
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, f), lambda b: (b, 0)),
+            pl.BlockSpec((1, f), lambda b: (b, 0)),
+            pl.BlockSpec((1, f, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, f, dh), lambda b: (b, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, f, dh), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, f, dh), lambda b: (b, 0, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(zr, zi, vr, vi)
+    return jax.lax.complex(o_r, o_i)
+
+
+def circulant_apply_fft(z: jax.Array, v: jax.Array) -> jax.Array:
+    """Full O(N log N) CAT apply: irfft(kernelized conj(Z)·V).
+
+    z: (BH, N) softmaxed weights; v: (BH, N, dh). Returns (BH, N, dh).
+    """
+    n = z.shape[-1]
+    zf = jnp.fft.rfft(z, axis=-1)
+    vf = jnp.fft.rfft(v, axis=-2)
+    of = fft_pointwise(zf, vf)
+    return jnp.fft.irfft(of, n=n, axis=-2).astype(v.dtype)

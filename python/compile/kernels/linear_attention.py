@@ -1,0 +1,49 @@
+"""Linear-attention Pallas kernel (the paper's unstable O(N) baseline).
+
+Sec. 5.5 reports that kernel-based linear attention (Performer /
+Katharopoulos et al.) repeatedly diverged (NaN loss) on CLIP-L under the
+shared training recipe. We implement it so the instability experiment is
+reproducible (`examples/train_vit --mechanism linear`).
+
+Feature map: phi(x) = elu(x) + 1. Non-causal form; per (b, h) program:
+
+    out = phi(Q) (phi(K)^T V) / (phi(Q) · sum_n phi(K))
+
+Both contractions are MXU matmuls over VMEM-resident panels; nothing N x N
+is ever formed. VMEM per program: 3*N*dh + dh*dh + dh floats.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _phi(x):
+    return jnp.where(x > 0, x + 1.0, jnp.exp(x))
+
+
+def _linear_attention_kernel(q_ref, k_ref, v_ref, o_ref):
+    fq = _phi(q_ref[0])                                      # (N, dh)
+    fk = _phi(k_ref[0])                                      # (N, dh)
+    v = v_ref[0]                                             # (N, dh)
+    kv = jnp.dot(fk.T, v, preferred_element_type=jnp.float32)   # (dh, dh)
+    ksum = jnp.sum(fk, axis=0)                               # (dh,)
+    num = jnp.dot(fq, kv, preferred_element_type=jnp.float32)   # (N, dh)
+    den = jnp.dot(fq, ksum[:, None],
+                  preferred_element_type=jnp.float32)        # (N, 1)
+    o_ref[0] = (num / (den + 1e-6)).astype(o_ref.dtype)
+
+
+def linear_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Non-causal linear attention. q,k,v: (BH, N, dh) -> (BH, N, dh)."""
+    bh, n, dh = q.shape
+    return pl.pallas_call(
+        _linear_attention_kernel,
+        grid=(bh,),
+        in_specs=[pl.BlockSpec((1, n, dh), lambda b: (b, 0, 0))] * 3,
+        out_specs=pl.BlockSpec((1, n, dh), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n, dh), q.dtype),
+        interpret=True,
+    )(q, k, v)

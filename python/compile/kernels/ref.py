@@ -1,0 +1,223 @@
+"""Pure-jnp reference oracles for every L1 kernel and mechanism.
+
+These are the correctness ground truth: each Pallas kernel in this package
+must match its `ref_*` counterpart to float32 tolerance (see
+python/tests/test_kernels.py), and the FFT-based CAT path must match the
+naive circulant-matrix construction exactly (up to rounding).
+
+Conventions
+-----------
+* ``Roll(z)`` follows the paper (Sec. 4.2): ``Roll(z)[i, j] = z[(j - i) % N]``
+  (0-indexed), so ``(Roll(z) @ v)[i] = sum_k z[k] * v[(i + k) % N]`` — a
+  circular *cross-correlation* of ``z`` with ``v``. In the frequency domain
+  this is ``irfft(conj(rfft(z)) * rfft(v))``.
+* The causal variant (Sec. 5.4) "shifts z so that z_1 appears to the
+  immediate left of z_0": row ``i`` reads ``z[i - j]`` at column ``j <= i``
+  — a lower-triangular Toeplitz / causal *convolution*
+  ``out[i] = sum_{j<=i} w[i-j] v[j]``, so the weight applied to value ``j``
+  is derived from token ``i-j <= i`` (causal). The paper evaluates this
+  with an O(N^2) implementation (Table 2 lists causal CAT as O(N^2)); we
+  also provide an O(N log N) zero-padded-FFT equivalent (linear
+  convolution), which the paper leaves to future work.
+
+  **Paper gap (documented, tested):** applying the *global* softmax before
+  masking — the paper's literal formula — leaks future information through
+  the softmax denominator (every weight is divided by a sum over all N
+  logits, including future tokens'). ``renorm=True`` (our default for
+  causal LMs) instead normalizes each row over its visible prefix,
+  i.e. a *causal softmax* ``p_i[j] = e^{z[i-j]} / sum_{k<=i} e^{z[k]}`` —
+  strictly causal and still softmax-structured. ``renorm=False`` keeps the
+  paper-literal global denominator; `test_mechanisms.py::test_causal_leak`
+  demonstrates the leak it causes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# elementary ops
+# ---------------------------------------------------------------------------
+
+def ref_softmax(x: jax.Array, axis: int = -1) -> jax.Array:
+    """Numerically stable softmax (max-subtracted)."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def ref_layernorm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+                  eps: float = 1e-5) -> jax.Array:
+    """LayerNorm over the trailing axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+# ---------------------------------------------------------------------------
+# standard attention
+# ---------------------------------------------------------------------------
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = False) -> jax.Array:
+    """Softmax attention. q,k,v: (..., N, dh). Returns (..., N, dh)."""
+    dh = q.shape[-1]
+    scores = jnp.einsum("...id,...jd->...ij", q, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    if causal:
+        n = q.shape[-2]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        scores = jnp.where(mask, scores, jnp.asarray(-1e30, scores.dtype))
+    p = ref_softmax(scores, axis=-1)
+    return jnp.einsum("...ij,...jd->...id", p, v)
+
+
+# ---------------------------------------------------------------------------
+# circulant machinery (the core of CAT)
+# ---------------------------------------------------------------------------
+
+def roll_matrix(z: jax.Array) -> jax.Array:
+    """Materialize Roll(z) for a length-N vector z: R[i, j] = z[(j-i) % N]."""
+    n = z.shape[-1]
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return z[..., (j - i) % n]
+
+
+def causal_roll_matrix(z: jax.Array) -> jax.Array:
+    """Causal (shifted) roll: T[i, j] = z[(i - j) % N] for j <= i, else 0.
+
+    Row ``i`` reads only ``z[0..i]`` — the convolution orientation of the
+    paper's causal shift (see module docstring).
+    """
+    n = z.shape[-1]
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    r = z[..., (i - j) % n]
+    return jnp.where(j <= i, r, jnp.zeros_like(r))
+
+
+def ref_circulant_apply(z: jax.Array, v: jax.Array) -> jax.Array:
+    """Naive O(N^2): Roll(z) @ v. z: (..., N), v: (..., N, dh)."""
+    return jnp.einsum("...ij,...jd->...id", roll_matrix(z), v)
+
+
+def ref_circulant_apply_fft(z: jax.Array, v: jax.Array) -> jax.Array:
+    """O(N log N) equivalent via rFFT: irfft(conj(Z) * V) per channel."""
+    n = z.shape[-1]
+    zf = jnp.fft.rfft(z, axis=-1)                      # (..., F)
+    vf = jnp.fft.rfft(v, axis=-2)                      # (..., F, dh)
+    of = jnp.conj(zf)[..., None] * vf
+    return jnp.fft.irfft(of, n=n, axis=-2).astype(v.dtype)
+
+
+def ref_causal_circulant_apply(z: jax.Array, v: jax.Array,
+                               renorm: bool = True) -> jax.Array:
+    """Naive O(N^2) causal CAT: lower-triangular Toeplitz apply.
+
+    ``out[i] = sum_{j<=i} z[i-j] v[j]``; with ``renorm=True`` each row is
+    divided by its visible weight mass ``sum_{k<=i} z[k]`` — combined with
+    ``z = exp(logits - max)`` upstream this realizes the causal softmax.
+    """
+    t = causal_roll_matrix(z)
+    if renorm:
+        t = t / jnp.clip(jnp.sum(t, axis=-1, keepdims=True), 1e-9)
+    return jnp.einsum("...ij,...jd->...id", t, v)
+
+
+def ref_causal_circulant_apply_fft(z: jax.Array, v: jax.Array,
+                                   renorm: bool = True) -> jax.Array:
+    """O(N log N) causal CAT via zero-padded rFFT (linear convolution).
+
+    ``out[i] = sum_{j<=i} z[i-j] v[j]`` is a causal *linear* convolution —
+    computable exactly with a length-2N FFT. The paper lists causal CAT as
+    O(N^2); this is the sub-quadratic causal formulation its future-work
+    section gestures at. ``renorm`` divides by ``cumsum(z)`` (causal
+    softmax denominator) in O(N).
+    """
+    n = z.shape[-1]
+    zf = jnp.fft.rfft(z, n=2 * n, axis=-1)
+    vf = jnp.fft.rfft(v, n=2 * n, axis=-2)
+    full = jnp.fft.irfft(zf[..., None] * vf, n=2 * n, axis=-2)
+    out = full[..., :n, :].astype(v.dtype)
+    if renorm:
+        denom = jnp.cumsum(z, axis=-1)[..., None]
+        out = out / jnp.clip(denom, 1e-9)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CAT mechanism oracles (multi-head)
+# ---------------------------------------------------------------------------
+
+def ref_cat(x: jax.Array, w_a: jax.Array, w_v: jax.Array,
+            n_heads: int, causal: bool = False,
+            use_fft: bool = True, renorm: bool = False) -> jax.Array:
+    """Full multi-head CAT (the paper's qv default).
+
+    x: (B, N, D); w_a: (D, H); w_v: (D, D). Returns (B, N, D).
+    """
+    b, n, d = x.shape
+    dh = d // n_heads
+    z = x @ w_a                                        # (B, N, H)
+    v = (x @ w_v).reshape(b, n, n_heads, dh)
+    z = jnp.moveaxis(z, -1, 1)                         # (B, H, N)
+    v = jnp.moveaxis(v, 2, 1)                          # (B, H, N, dh)
+    if causal:
+        fn = ref_causal_circulant_apply_fft if use_fft else \
+            ref_causal_circulant_apply
+        if renorm:
+            # causal softmax: exp(logits - max) / cumulative mass
+            e = jnp.exp(z - jnp.max(z, axis=-1, keepdims=True))
+            o = fn(e, v, renorm=True)
+        else:
+            # paper-literal: global softmax, then masked roll (leaky
+            # denominator — see module docstring)
+            o = fn(ref_softmax(z, axis=-1), v, renorm=False)
+    else:
+        zs = ref_softmax(z, axis=-1)
+        fn = ref_circulant_apply_fft if use_fft else ref_circulant_apply
+        o = fn(zs, v)
+    return jnp.moveaxis(o, 1, 2).reshape(b, n, d)
+
+
+def ref_averaged_key(x: jax.Array, w_q: jax.Array, w_k: jax.Array,
+                     w_v: jax.Array, n_heads: int) -> jax.Array:
+    """Averaged-Key (qkv) ablation: z = Q @ mean_i(K_i), per head."""
+    b, n, d = x.shape
+    dh = d // n_heads
+    q = (x @ w_q).reshape(b, n, n_heads, dh)
+    k = (x @ w_k).reshape(b, n, n_heads, dh)
+    v = (x @ w_v).reshape(b, n, n_heads, dh)
+    kbar = jnp.mean(k, axis=1)                         # (B, H, dh)
+    z = jnp.einsum("bnhd,bhd->bhn", q, kbar) / jnp.sqrt(
+        jnp.asarray(dh, x.dtype))
+    zs = ref_softmax(z, axis=-1)                       # (B, H, N)
+    vh = jnp.moveaxis(v, 2, 1)                         # (B, H, N, dh)
+    o = ref_circulant_apply_fft(zs, vh)
+    return jnp.moveaxis(o, 1, 2).reshape(b, n, d)
+
+
+# ---------------------------------------------------------------------------
+# linear attention baseline (Performer/Katharopoulos-style)
+# ---------------------------------------------------------------------------
+
+def _phi(x: jax.Array) -> jax.Array:
+    """elu(x) + 1 positive feature map."""
+    return jnp.where(x > 0, x + 1.0, jnp.exp(x))
+
+
+def ref_linear_attention(q: jax.Array, k: jax.Array,
+                         v: jax.Array) -> jax.Array:
+    """Non-causal linear attention: (phi(Q) (phi(K)^T V)) / (phi(Q) sum phi(K)).
+
+    q,k,v: (..., N, dh). O(N dh^2) — never materializes N x N.
+    """
+    fq, fk = _phi(q), _phi(k)
+    kv = jnp.einsum("...nd,...ne->...de", fk, v)
+    ksum = jnp.sum(fk, axis=-2)
+    num = jnp.einsum("...nd,...de->...ne", fq, kv)
+    den = jnp.einsum("...nd,...d->...n", fq, ksum)[..., None]
+    return num / (den + 1e-6)

@@ -1,0 +1,312 @@
+"""The six token-mixing mechanisms the paper evaluates, multi-head.
+
+Each mechanism is a pair (init, apply):
+
+  init_mechanism(cfg, mech, key, n_tokens) -> param dict
+  apply_mechanism(cfg, mech, params, x, *, causal, use_pallas) -> (B, N, D)
+
+`use_pallas` has three values:
+  True     — every hot loop through the L1 kernels (inference artifacts);
+  "train"  — differentiable: CAT's circulant still runs the Pallas kernel
+             (cat_circulant.circulant_apply_diff carries a custom_vjp whose
+             backward is itself two circulant kernels), everything else uses
+             the reference math (interpret-mode pallas_call has no autodiff
+             rule for the fused attention/LN kernels);
+  False    — pure-jnp reference everywhere (oracle path).
+pytest asserts all routes agree for every mechanism.
+
+Parameter budgets (paper's Tables 1-3 accounting, per layer):
+
+  attention  : 3 d^2                  (W_Q, W_K, W_V; no output projection —
+                                       the paper counts 3d^2 for attention,
+                                       so no mechanism gets a W_O)
+  cat (qv)   : (d + h) d              (W_V: d^2, W_A: h d)
+  cat_qkv    : 3 d^2                  (Averaged-Key)
+  cat_q      : (n + h) d              (W_A: h d, per-position value table nd)
+  cat_v      : (n + d) d              (learned weight table nd, W_V: d^2)
+  cat_alter  : (2d + h/2) d avg       (alternating attention / cat layers)
+  linear     : 3 d^2
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as k_attn
+from .kernels import cat_circulant as k_circ
+from .kernels import cat_fft_pointwise as k_fft
+from .kernels import linear_attention as k_lin
+from .kernels import ref
+
+
+def _dense_init(key, shape, scale=0.02):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def init_mechanism(cfg, mech: str, key: jax.Array,
+                   n_tokens: int) -> Dict[str, jax.Array]:
+    """Parameters for one mixing layer of mechanism `mech`."""
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 4)
+    if mech == "attention" or mech == "linear":
+        return {"wq": _dense_init(ks[0], (d, d)),
+                "wk": _dense_init(ks[1], (d, d)),
+                "wv": _dense_init(ks[2], (d, d))}
+    if mech == "cat":
+        return {"wa": _dense_init(ks[0], (d, h)),
+                "wv": _dense_init(ks[1], (d, d))}
+    if mech == "cat_qkv":
+        return {"wq": _dense_init(ks[0], (d, d)),
+                "wk": _dense_init(ks[1], (d, d)),
+                "wv": _dense_init(ks[2], (d, d))}
+    if mech == "cat_q":
+        # weights learned from input (W_A), values from a learned
+        # per-position table: (n + h) d parameters.
+        return {"wa": _dense_init(ks[0], (d, h)),
+                "pv": jnp.ones((n_tokens, d), jnp.float32)
+                + _dense_init(ks[1], (n_tokens, d))}
+    if mech == "cat_v":
+        # weights from a learned per-position table (input-independent),
+        # values from W_V: (n + d) d parameters.
+        return {"za": _dense_init(ks[0], (n_tokens, d)),
+                "wv": _dense_init(ks[1], (d, d))}
+    raise ValueError(f"unknown mechanism {mech}")
+
+
+def mechanism_param_count(cfg, mech: str, n_tokens: int) -> int:
+    """Closed-form parameter count; tested against the actual pytree."""
+    d, h, n = cfg.d_model, cfg.n_heads, n_tokens
+    return {
+        "attention": 3 * d * d,
+        "linear": 3 * d * d,
+        "cat": (d + h) * d,
+        "cat_qkv": 3 * d * d,
+        "cat_q": (n + h) * d,
+        "cat_v": (n + d) * d,
+    }[mech]
+
+
+# ---------------------------------------------------------------------------
+# head plumbing
+# ---------------------------------------------------------------------------
+
+def _split_heads(t: jax.Array, h: int) -> jax.Array:
+    """(B, N, D) -> (B*H, N, dh)."""
+    b, n, d = t.shape
+    dh = d // h
+    return t.reshape(b, n, h, dh).transpose(0, 2, 1, 3).reshape(b * h, n, dh)
+
+
+def _merge_heads(t: jax.Array, b: int, h: int) -> jax.Array:
+    """(B*H, N, dh) -> (B, N, D)."""
+    bh, n, dh = t.shape
+    return t.reshape(b, h, n, dh).transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+
+
+def _prep_weights(cfg, z: jax.Array, causal: bool) -> jax.Array:
+    """Logits (BH, N) -> weight vector for the circulant dispatch.
+
+    Non-causal (and paper-literal causal, `causal_renorm=False`): global
+    softmax over positions. Causal with renorm (default): exp(z - max); the
+    causal-softmax denominator (cumulative mass) is applied inside the
+    circulant as the per-row renormalization.
+    """
+    if causal and cfg.causal_renorm:
+        return jnp.exp(z - jnp.max(z, axis=-1, keepdims=True))
+    return ref.ref_softmax(z, axis=-1)
+
+
+def _circulant(cfg, zs: jax.Array, v: jax.Array, *, causal: bool,
+               use_pallas: bool) -> jax.Array:
+    """Dispatch the circulant apply. zs: (BH, N) softmaxed; v: (BH, N, dh)."""
+    if causal:
+        if use_pallas is True:
+            return k_circ.circulant_apply(zs, v, causal=True,
+                                          renorm=cfg.causal_renorm)
+        # "train" and False: differentiable reference math (the causal
+        # gather kernel has no autodiff rule).
+        if cfg.cat_impl == "fft":
+            return ref.ref_causal_circulant_apply_fft(
+                zs, v, renorm=cfg.causal_renorm)
+        return ref.ref_causal_circulant_apply(zs, v,
+                                              renorm=cfg.causal_renorm)
+    if use_pallas is True:
+        if cfg.cat_impl == "fft":
+            return k_fft.circulant_apply_fft(zs, v)
+        return k_circ.circulant_apply(zs, v)
+    if use_pallas == "train":
+        # Pallas kernel with the circulant custom_vjp: the training hot
+        # path of the paper's mechanism stays kernel-owned.
+        return k_circ.circulant_apply(zs, v)
+    if cfg.cat_impl == "fft":
+        return ref.ref_circulant_apply_fft(zs, v)
+    return ref.ref_circulant_apply(zs, v)
+
+
+# ---------------------------------------------------------------------------
+# per-mechanism apply
+# ---------------------------------------------------------------------------
+
+def _apply_attention(cfg, p, x, *, causal, use_pallas):
+    b, n, d = x.shape
+    h = cfg.n_heads
+    q = _split_heads(x @ p["wq"], h)
+    k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    if use_pallas is True:
+        o = k_attn.attention(q, k, v, causal=causal)
+    else:
+        o = ref.ref_attention(q, k, v, causal=causal)
+    return _merge_heads(o, b, h)
+
+
+def _apply_cat(cfg, p, x, *, causal, use_pallas):
+    b, n, d = x.shape
+    h = cfg.n_heads
+    z = (x @ p["wa"]).transpose(0, 2, 1).reshape(b * h, n)   # (BH, N)
+    zs = _prep_weights(cfg, z, causal)
+    v = _split_heads(x @ p["wv"], h)
+    o = _circulant(cfg, zs, v, causal=causal, use_pallas=use_pallas)
+    return _merge_heads(o, b, h)
+
+
+def _apply_cat_qkv(cfg, p, x, *, causal, use_pallas):
+    """Averaged-Key: z = Q @ mean(K) per head, then circulant apply.
+
+    In causal mode the global key average would leak future tokens into
+    every weight, so we use the *cumulative* (prefix) mean instead:
+    z[i] = q[i] . mean(k[0..i]) — each weight entry depends only on its own
+    prefix, preserving strict causality.
+    """
+    b, n, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    q = _split_heads(x @ p["wq"], h)                  # (BH, N, dh)
+    k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    if causal:
+        counts = jnp.arange(1, n + 1, dtype=x.dtype)[None, :, None]
+        kbar = jnp.cumsum(k, axis=1) / counts         # (BH, N, dh)
+        z = jnp.einsum("bnd,bnd->bn", q, kbar) / jnp.sqrt(
+            jnp.asarray(dh, x.dtype))
+    else:
+        kbar = jnp.mean(k, axis=1)                    # (BH, dh)
+        z = jnp.einsum("bnd,bd->bn", q, kbar) / jnp.sqrt(
+            jnp.asarray(dh, x.dtype))                 # (BH, N)
+    zs = _prep_weights(cfg, z, causal)
+    o = _circulant(cfg, zs, v, causal=causal, use_pallas=use_pallas)
+    return _merge_heads(o, b, h)
+
+
+def _apply_cat_q(cfg, p, x, *, causal, use_pallas):
+    """q-only: learned W_A weights; values are x gated by a learned table."""
+    b, n, d = x.shape
+    h = cfg.n_heads
+    z = (x @ p["wa"]).transpose(0, 2, 1).reshape(b * h, n)
+    zs = _prep_weights(cfg, z, causal)
+    v = _split_heads(x * p["pv"][None, :, :], h)
+    o = _circulant(cfg, zs, v, causal=causal, use_pallas=use_pallas)
+    return _merge_heads(o, b, h)
+
+
+def _apply_cat_v(cfg, p, x, *, causal, use_pallas):
+    """v-only: input-independent learned weight table; values via W_V.
+
+    The (N, D) logit table is reduced to one logit per (position, head) by
+    averaging each head's dh-sized channel group — parameter count (n+d)d
+    per the paper, with no extra learnables in the reduction.
+    """
+    b, n, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    za = jnp.mean(p["za"].reshape(n, h, dh), axis=-1)  # (N, H)
+    zl = jnp.broadcast_to(za.T[None], (b, h, n)).reshape(b * h, n)
+    zs = _prep_weights(cfg, zl, causal)
+    v = _split_heads(x @ p["wv"], h)
+    o = _circulant(cfg, zs, v, causal=causal, use_pallas=use_pallas)
+    return _merge_heads(o, b, h)
+
+
+def _apply_linear(cfg, p, x, *, causal, use_pallas):
+    if causal:
+        raise NotImplementedError(
+            "causal linear attention is out of scope (paper uses it on ViT)")
+    b, n, d = x.shape
+    h = cfg.n_heads
+    q = _split_heads(x @ p["wq"], h)
+    k = _split_heads(x @ p["wk"], h)
+    v = _split_heads(x @ p["wv"], h)
+    if use_pallas is True:
+        o = k_lin.linear_attention(q, k, v)
+    else:
+        o = ref.ref_linear_attention(q, k, v)
+    return _merge_heads(o, b, h)
+
+
+_APPLY = {
+    "attention": _apply_attention,
+    "cat": _apply_cat,
+    "cat_qkv": _apply_cat_qkv,
+    "cat_q": _apply_cat_q,
+    "cat_v": _apply_cat_v,
+    "linear": _apply_linear,
+}
+
+
+def apply_mechanism(cfg, mech: str, params, x: jax.Array, *,
+                    causal: bool = False,
+                    use_pallas: bool = True) -> jax.Array:
+    """Mix tokens with mechanism `mech`. x: (B, N, D) -> (B, N, D)."""
+    return _APPLY[mech](cfg, params, x, causal=causal, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention extension (paper Sec. 4.2: the Averaged-Key structure
+# "seamlessly handles cross-attention scenarios")
+# ---------------------------------------------------------------------------
+
+def init_cross_mechanism(cfg, mech: str, key: jax.Array) -> Dict[str, jax.Array]:
+    """Parameters for one *cross*-attention layer (queries from x,
+    keys/values from a context sequence of the same length)."""
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if mech not in ("attention", "cat_qkv"):
+        raise ValueError(f"cross-attention supports attention/cat_qkv, got {mech}")
+    return {"wq": _dense_init(ks[0], (d, d)),
+            "wk": _dense_init(ks[1], (d, d)),
+            "wv": _dense_init(ks[2], (d, d))}
+
+
+def apply_cross(cfg, mech: str, p, x: jax.Array, ctx: jax.Array, *,
+                use_pallas: bool = False) -> jax.Array:
+    """Cross-attend x (B, N, D) over ctx (B, N, D).
+
+    * attention: standard cross-attention softmax(Q(x) K(ctx)^T) V(ctx).
+    * cat_qkv (Averaged-Key CAT): z = Q(x) . mean(K(ctx)) per head, then a
+      circulant apply over V(ctx) — the paper's argument for why the qkv
+      variant extends to cross-attention with no structural change. The
+      context must have the same length as x (circulant weights are
+      indexed by output position); aligned encoder-decoder setups satisfy
+      this, and pytest pins the equal-length contract.
+    """
+    b, n, d = x.shape
+    assert ctx.shape == x.shape, "cross-CAT requires len(ctx) == len(x)"
+    h = cfg.n_heads
+    dh = d // h
+    q = _split_heads(x @ p["wq"], h)
+    k = _split_heads(ctx @ p["wk"], h)
+    v = _split_heads(ctx @ p["wv"], h)
+    if mech == "attention":
+        if use_pallas is True:
+            o = k_attn.attention(q, k, v)
+        else:
+            o = ref.ref_attention(q, k, v)
+        return _merge_heads(o, b, h)
+    kbar = jnp.mean(k, axis=1)
+    z = jnp.einsum("bnd,bd->bn", q, kbar) / jnp.sqrt(jnp.asarray(dh, x.dtype))
+    zs = ref.ref_softmax(z, axis=-1)
+    o = _circulant(cfg, zs, v, causal=False, use_pallas=use_pallas)
+    return _merge_heads(o, b, h)

@@ -1,0 +1,191 @@
+"""L2 model zoo: ViT (token/avg pooling), masked/causal LM, and the bare
+token-mixer — all parameterized over the six mechanisms in mechanisms.py.
+
+The architectures mirror the paper's setups (Sec. 5.1-5.2) scaled per
+DESIGN.md §Substitutions:
+
+* ViT: non-overlapping patch embedding, learned positional embedding,
+  pre-LN transformer blocks, GELU MLP (ratio 4), final LN, linear head.
+  `pool="token"` prepends a learnable CLS token (CLIP-style); `pool="avg"`
+  mean-pools the sequence.
+* LM: token + position embeddings, pre-LN decoder blocks (causal masking
+  for `lm_causal`, bidirectional for `lm_masked`), final LN, untied output
+  head. Masked-LM corruption happens on the rust side; the model just sees
+  (tokens, targets, loss-weights).
+* Mixer: a single mechanism application on a raw (B, N, D) tensor — the
+  unit the Fig. 1 / §4.4 microbenches time.
+
+Parameters are plain nested dicts (pytrees); `flatten_params` fixes the
+deterministic ordering shared with the rust runtime via the manifest.
+
+Dropout note: the paper applies dropout 0.1 to the LM; our proxy runs are a
+few hundred steps on synthetic data where dropout only adds variance, so all
+artifacts are deterministic (documented substitution).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import mechanisms
+from .configs import ModelConfig
+from .kernels import layernorm as k_ln
+from .kernels import ref
+
+
+def _dense(key, shape, scale=0.02):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def _ln_params(d: int) -> Dict[str, jax.Array]:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_block(cfg: ModelConfig, layer: int, key) -> Dict:
+    d = cfg.d_model
+    k_mix, k_mlp1, k_mlp2 = jax.random.split(key, 3)
+    mech = cfg.layer_mechanism(layer)
+    return {
+        "ln1": _ln_params(d),
+        "mix": mechanisms.init_mechanism(cfg, mech, k_mix, cfg.n_tokens),
+        "ln2": _ln_params(d),
+        "mlp": {
+            "w1": _dense(k_mlp1, (d, cfg.mlp_ratio * d)),
+            "b1": jnp.zeros((cfg.mlp_ratio * d,), jnp.float32),
+            "w2": _dense(k_mlp2, (cfg.mlp_ratio * d, d)),
+            "b2": jnp.zeros((d,), jnp.float32),
+        },
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    """Full parameter pytree for `cfg`."""
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    blocks = {f"block{i:02d}": init_block(cfg, i, keys[i])
+              for i in range(cfg.n_layers)}
+    if cfg.task == "mixer":
+        return {"mix": mechanisms.init_mechanism(
+            cfg, cfg.mechanism, keys[-1], cfg.n_tokens)}
+    d = cfg.d_model
+    params: Dict = {"blocks": blocks, "ln_f": _ln_params(d)}
+    if cfg.task == "vit":
+        pdim = cfg.patch_size * cfg.patch_size * cfg.n_channels
+        params["patch"] = {"w": _dense(keys[-1], (pdim, d)),
+                           "b": jnp.zeros((d,), jnp.float32)}
+        params["pos"] = _dense(keys[-2], (cfg.n_tokens, d))
+        if cfg.pool == "token":
+            params["cls"] = _dense(keys[-3], (d,))
+        params["head"] = {"w": _dense(keys[-4], (d, cfg.n_classes)),
+                          "b": jnp.zeros((cfg.n_classes,), jnp.float32)}
+    else:  # lm
+        params["tok"] = _dense(keys[-1], (cfg.vocab_size, d))
+        params["pos"] = _dense(keys[-2], (cfg.seq_len, d))
+        params["head"] = {"w": _dense(keys[-4], (d, cfg.vocab_size)),
+                          "b": jnp.zeros((cfg.vocab_size,), jnp.float32)}
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
+
+
+def flatten_params(params) -> Tuple[List[jax.Array], List[str]]:
+    """Deterministic flattening; path strings are recorded in the manifest."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    leaves, paths = [], []
+    for path, leaf in flat:
+        paths.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return leaves, paths
+
+
+def unflatten_params(cfg: ModelConfig, leaves: List[jax.Array]):
+    """Rebuild the pytree from manifest-ordered leaves."""
+    template = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, p, use_pallas):
+    if use_pallas is True:
+        return k_ln.layernorm(x, p["g"], p["b"])
+    return ref.ref_layernorm(x, p["g"], p["b"])
+
+
+def apply_block(cfg: ModelConfig, layer: int, p: Dict, x: jax.Array, *,
+                use_pallas: bool) -> jax.Array:
+    """Pre-LN transformer block: x + Mix(LN(x)); x + MLP(LN(x))."""
+    mech = cfg.layer_mechanism(layer)
+    h = _layernorm(x, p["ln1"], use_pallas)
+    x = x + mechanisms.apply_mechanism(cfg, mech, p["mix"], h,
+                                       causal=cfg.causal,
+                                       use_pallas=use_pallas)
+    h = _layernorm(x, p["ln2"], use_pallas)
+    h = jax.nn.gelu(h @ p["mlp"]["w1"] + p["mlp"]["b1"])
+    return x + (h @ p["mlp"]["w2"] + p["mlp"]["b2"])
+
+
+def patchify(cfg: ModelConfig, images: jax.Array) -> jax.Array:
+    """(B, C, S, S) -> (B, n_patches, P*P*C)."""
+    b = images.shape[0]
+    c, s, p = cfg.n_channels, cfg.image_size, cfg.patch_size
+    g = s // p
+    x = images.reshape(b, c, g, p, g, p)
+    x = x.transpose(0, 2, 4, 3, 5, 1)           # (B, g, g, p, p, C)
+    return x.reshape(b, g * g, p * p * c)
+
+
+def forward_vit(cfg: ModelConfig, params: Dict, images: jax.Array, *,
+                use_pallas: bool = True) -> jax.Array:
+    """Images (B, C, S, S) -> logits (B, n_classes)."""
+    x = patchify(cfg, images) @ params["patch"]["w"] + params["patch"]["b"]
+    if cfg.pool == "token":
+        cls = jnp.broadcast_to(params["cls"][None, None, :],
+                               (x.shape[0], 1, cfg.d_model))
+        x = jnp.concatenate([cls, x], axis=1)
+    x = x + params["pos"][None]
+    for i in range(cfg.n_layers):
+        x = apply_block(cfg, i, params["blocks"][f"block{i:02d}"], x,
+                        use_pallas=use_pallas)
+    x = _layernorm(x, params["ln_f"], use_pallas)
+    pooled = x[:, 0, :] if cfg.pool == "token" else jnp.mean(x, axis=1)
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def forward_lm(cfg: ModelConfig, params: Dict, tokens: jax.Array, *,
+               use_pallas: bool = True) -> jax.Array:
+    """Tokens (B, N) int32 -> logits (B, N, V)."""
+    x = jnp.take(params["tok"], tokens, axis=0) + params["pos"][None]
+    for i in range(cfg.n_layers):
+        x = apply_block(cfg, i, params["blocks"][f"block{i:02d}"], x,
+                        use_pallas=use_pallas)
+    x = _layernorm(x, params["ln_f"], use_pallas)
+    return x @ params["head"]["w"] + params["head"]["b"]
+
+
+def forward_mixer(cfg: ModelConfig, params: Dict, x: jax.Array, *,
+                  use_pallas: bool = True) -> jax.Array:
+    """Bare mechanism application for the microbenches. (B,N,D)->(B,N,D)."""
+    return mechanisms.apply_mechanism(cfg, cfg.mechanism, params["mix"], x,
+                                      causal=cfg.causal,
+                                      use_pallas=use_pallas)
+
+
+def forward(cfg: ModelConfig, params: Dict, inputs: jax.Array, *,
+            use_pallas: bool = True) -> jax.Array:
+    if cfg.task == "vit":
+        return forward_vit(cfg, params, inputs, use_pallas=use_pallas)
+    if cfg.task in ("lm_masked", "lm_causal"):
+        return forward_lm(cfg, params, inputs, use_pallas=use_pallas)
+    return forward_mixer(cfg, params, inputs, use_pallas=use_pallas)

@@ -1,0 +1,150 @@
+"""Whole-training-step computation, AOT-lowered so rust drives the loop.
+
+One artifact = one jitted function
+
+    train_step(params, m, v, step, batch..., lr)
+        -> (params', m', v', step+1, loss)
+
+with AdamW (paper recipe: betas 0.9/0.999, weight decay 1e-4 applied to
+matrix-shaped weights only), optional global-norm gradient clipping (0.25
+for the LM runs, per Sec. 5.2), and the task loss:
+
+* vit:   softmax cross-entropy over classes, labels (B,) int32;
+* lm_*:  token-level softmax cross-entropy with a per-position weight mask
+         (masked LM: weights are 1 on corrupted positions; causal LM:
+         weights are all 1 and targets are the next token — both prepared
+         by the rust data pipeline, so the artifact signature is uniform).
+
+Training routes CAT's circulant through the Pallas custom_vjp
+(kernels.cat_circulant.circulant_apply_diff); the other mechanisms
+differentiate through the reference math (pytest pins ref == pallas).
+
+`train_k_steps` additionally lowers a `lax.scan` over K micro-steps so the
+rust hot loop can amortize host<->device parameter round-trips — the main
+L3 perf lever measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ModelConfig
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def vit_loss(cfg: ModelConfig, params, images, labels, *,
+             use_pallas: bool) -> jax.Array:
+    logits = model.forward_vit(cfg, params, images, use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, targets, weights, *,
+            use_pallas: bool) -> jax.Array:
+    logits = model.forward_lm(cfg, params, tokens, use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.clip(jnp.sum(weights), 1.0)
+    return jnp.sum(nll * weights) / denom
+
+
+def loss_fn(cfg: ModelConfig, params, batch: Tuple[jax.Array, ...], *,
+            use_pallas: bool = False) -> jax.Array:
+    if cfg.task == "vit":
+        images, labels = batch
+        return vit_loss(cfg, params, images, labels, use_pallas=use_pallas)
+    tokens, targets, weights = batch
+    return lm_loss(cfg, params, tokens, targets, weights,
+                   use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def _decay_mask(params) -> Dict:
+    """Weight decay on matrix-shaped leaves only (no biases/LN/pos/cls)."""
+    return jax.tree_util.tree_map(lambda p: jnp.asarray(
+        1.0 if p.ndim >= 2 else 0.0, jnp.float32), params)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                        for g in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(cfg: ModelConfig, params, m, v, step, grads, lr):
+    """One AdamW step. `step` is the 1-based float step AFTER this update."""
+    if cfg.grad_clip > 0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+    t = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    mask = _decay_mask(params)
+
+    def upd(p, mm, vv, g, dm):
+        mm = ADAM_B1 * mm + (1.0 - ADAM_B1) * g
+        vv = ADAM_B2 * vv + (1.0 - ADAM_B2) * jnp.square(g)
+        mhat = mm / bc1
+        vhat = vv / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+                      + cfg.weight_decay * dm * p)
+        return p, mm, vv
+
+    out = jax.tree_util.tree_map(upd, params, m, v, grads, mask)
+    new_params = jax.tree_util.tree_map(lambda o: o[0], out,
+                                        is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, new_m, new_v, t
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, batch, lr, *,
+               use_pallas: bool = False):
+    """One fused fwd+bwd+AdamW step. Returns (params', m', v', step', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch, use_pallas=use_pallas))(params)
+    new_params, new_m, new_v, t = adamw_update(cfg, params, m, v, step,
+                                               grads, lr)
+    return new_params, new_m, new_v, t, loss
+
+
+def train_k_steps(cfg: ModelConfig, params, m, v, step, batches, lrs, *,
+                  use_pallas: bool = False):
+    """K fused micro-steps via lax.scan.
+
+    batches: pytree of arrays with a leading K axis; lrs: (K,) float32.
+    Returns (params', m', v', step', losses (K,)).
+    """
+
+    def body(carry, xs):
+        params, m, v, step = carry
+        batch, lr = xs
+        params, m, v, step, loss = train_step(cfg, params, m, v, step,
+                                              batch, lr,
+                                              use_pallas=use_pallas)
+        return (params, m, v, step), loss
+
+    (params, m, v, step), losses = jax.lax.scan(
+        body, (params, m, v, step), (batches, lrs))
+    return params, m, v, step, losses
+
+
+def zeros_like_tree(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)

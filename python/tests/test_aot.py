@@ -1,0 +1,133 @@
+"""AOT pipeline tests: manifest consistency, HLO round-trip through the
+XLA CPU client (the same engine the rust runtime drives via PJRT)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.configs import all_configs, by_name
+
+jax.config.update("jax_platform_name", "cpu")
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def load_manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_registry_has_every_table_config():
+    names = {c.name for c in all_configs()}
+    # Table 1 grid
+    for size in ("b", "l"):
+        for pool in ("token", "avg"):
+            for mech in ("attention", "cat", "cat_alter"):
+                assert f"vit_{size}_{pool}_{mech}" in names
+    # Table 2 grid
+    for arch in ("txl", "gpt2"):
+        for task in ("masked", "causal"):
+            for mech in ("attention", "cat", "cat_alter"):
+                assert f"lm_{arch}_{task}_{mech}" in names
+    # Table 3 ablation
+    for mech in ("cat_qkv", "cat_q", "cat_v"):
+        assert f"vit_l_avg_{mech}" in names
+    # Sec 5.5 + Fig 1 / Sec 4.4
+    assert "vit_l_avg_linear" in names
+    assert "speedup_n256_attention" in names
+    assert "scale_1024_cat_fft" in names
+
+
+@needs_artifacts
+def test_manifest_covers_registry():
+    m = load_manifest()
+    for cfg in all_configs():
+        assert cfg.name in m["configs"], cfg.name
+        entry = m["configs"][cfg.name]
+        for e in aot.entries_for(cfg):
+            assert e in entry["entries"], (cfg.name, e)
+            f = entry["entries"][e]["file"]
+            assert os.path.exists(os.path.join(ART, f)), f
+
+
+@needs_artifacts
+def test_manifest_param_specs_match_model():
+    m = load_manifest()
+    cfg = by_name("vit_b_avg_cat")
+    tmpl = jax.eval_shape(lambda: model.init_params(cfg, jax.random.PRNGKey(0)))
+    leaves, paths = model.flatten_params(tmpl)
+    specs = m["configs"][cfg.name]["params"]
+    assert len(specs) == len(leaves)
+    for spec, leaf, path in zip(specs, leaves, paths):
+        assert spec["name"] == path
+        assert tuple(spec["shape"]) == tuple(leaf.shape)
+
+
+@needs_artifacts
+def test_train_step_io_arity():
+    """inputs == params*3 + step + batch + lr; outputs == params*3 + 2."""
+    m = load_manifest()
+    for name in ("vit_b_avg_cat", "lm_gpt2_causal_attention"):
+        c = m["configs"][name]
+        n = len(c["params"])
+        ts = c["entries"]["train_step"]
+        nbatch = 2 if c["task"] == "vit" else 3
+        assert len(ts["inputs"]) == 3 * n + 1 + nbatch + 1
+        assert len(ts["outputs"]) == 3 * n + 2
+        assert ts["outputs"][-1]["name"] == "loss"
+
+
+@needs_artifacts
+def test_hlo_text_compiles_and_matches_jax():
+    """Golden round-trip: compile the emitted HLO text with the XLA CPU
+    client and compare numerics against the in-process jax function — the
+    exact contract the rust runtime relies on."""
+    from jax._src.lib import xla_client as xc
+    m = load_manifest()
+    name = "vit_b_avg_cat"
+    cfg = by_name(name)
+    entry = m["configs"][name]["entries"]["forward"]
+    with open(os.path.join(ART, entry["file"])) as f:
+        hlo_text = f.read()
+
+    backend = jax.devices("cpu")[0].client
+    mod = xc._xla.hlo_module_from_text(hlo_text)
+    comp = xc._xla.XlaComputation(mod.as_serialized_hlo_module_proto())
+    mlir = xc._xla.mlir.xla_computation_to_mlir_module(comp)
+    exe = backend.compile_and_load(mlir, backend.local_devices(),
+                                   xc.CompileOptions())
+    # Execute via jax for reference
+    params = model.init_params(cfg, jax.random.PRNGKey(7))
+    leaves, _ = model.flatten_params(params)
+    imgs = jax.random.normal(jax.random.PRNGKey(8),
+                             (cfg.batch_size, 3, 32, 32))
+    want = model.forward(cfg, params, imgs, use_pallas=True)
+
+    args = [np.asarray(l) for l in leaves] + [np.asarray(imgs)]
+    out = exe.execute_sharded(
+        [backend.buffer_from_pyval(a) for a in args])
+    got = out.disassemble_into_single_device_arrays()[0][0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-4)
+
+
+def test_entries_for_shapes():
+    assert aot.entries_for(by_name("scale_256_cat_fft")) == ["forward"]
+    assert "train_k8" in aot.entries_for(by_name("vit_b_avg_cat"))
+    assert "train_k8" not in aot.entries_for(by_name("vit_l_avg_cat"))
+
+
+def test_batch_specs_lm_uniform():
+    cfg = by_name("lm_gpt2_masked_cat")
+    specs = aot.batch_specs(cfg)
+    assert [tuple(s.shape) for s in specs] == [(8, 256), (8, 256), (8, 256)]
+    assert [str(s.dtype) for s in specs] == ["int32", "int32", "float32"]

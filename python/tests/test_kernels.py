@@ -1,0 +1,240 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes/dtypes per the repro brief; fixed-seed cases pin
+the exact numerics the rust golden tests rely on.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as k_attn
+from compile.kernels import cat_circulant as k_circ
+from compile.kernels import cat_fft_pointwise as k_fft
+from compile.kernels import layernorm as k_ln
+from compile.kernels import linear_attention as k_lin
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+def softmaxed(key, shape):
+    return jax.nn.softmax(rand(key, shape), axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("bh,n,dh", [(2, 64, 16), (6, 128, 32), (1, 256, 8)])
+def test_attention_matches_ref(bh, n, dh, causal):
+    q, k, v = rand(0, (bh, n, dh)), rand(1, (bh, n, dh)), rand(2, (bh, n, dh))
+    out = k_attn.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, R.ref_attention(q, k, v, causal=causal),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_attention_rows_are_convex():
+    """Attention output lies in the convex hull of values (softmax rows sum
+    to 1 and are nonnegative)."""
+    bh, n, dh = 2, 64, 8
+    q, k = rand(0, (bh, n, dh)), rand(1, (bh, n, dh))
+    v = jnp.ones((bh, n, dh))
+    out = k_attn.attention(q, k, v)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bh=st.integers(1, 4),
+       n_pow=st.integers(4, 8),
+       dh=st.sampled_from([4, 8, 16, 32]),
+       block_q=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_attention_hypothesis(bh, n_pow, dh, block_q, seed):
+    n = 2 ** n_pow
+    q = rand(seed, (bh, n, dh))
+    k = rand(seed + 1, (bh, n, dh))
+    v = rand(seed + 2, (bh, n, dh))
+    out = k_attn.attention(q, k, v, block_q=min(block_q, n))
+    np.testing.assert_allclose(out, R.ref_attention(q, k, v),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# circulant (CAT core)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,n,dh", [(2, 64, 16), (4, 128, 8), (1, 256, 32)])
+def test_circulant_gather_matches_naive(bh, n, dh):
+    z, v = softmaxed(0, (bh, n)), rand(1, (bh, n, dh))
+    np.testing.assert_allclose(k_circ.circulant_apply(z, v),
+                               R.ref_circulant_apply(z, v),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 32, 64, 100, 256])
+def test_fft_equals_circulant_matrix(n):
+    """The paper's core identity: FFT pointwise == Roll(z) @ v exactly
+    (up to float rounding), for power-of-two AND non-power-of-two N."""
+    z, v = softmaxed(0, (3, n)), rand(1, (3, n, 8))
+    np.testing.assert_allclose(R.ref_circulant_apply_fft(z, v),
+                               R.ref_circulant_apply(z, v),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(k_fft.circulant_apply_fft(z, v),
+                               R.ref_circulant_apply(z, v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_roll_matrix_structure():
+    """Roll(z) row 1 == paper's [z_N, z_1, ..., z_{N-1}] layout."""
+    z = jnp.arange(1.0, 6.0)                     # z_1..z_5 (paper 1-indexed)
+    r = R.roll_matrix(z)
+    np.testing.assert_allclose(r[0], jnp.array([1., 2., 3., 4., 5.]))
+    np.testing.assert_allclose(r[1], jnp.array([5., 1., 2., 3., 4.]))
+    np.testing.assert_allclose(r[-1], jnp.array([2., 3., 4., 5., 1.]))
+
+
+def test_circulant_rows_sum_to_one():
+    """Global softmax weighting: each Roll(softmax(z)) row sums to 1, so a
+    constant value sequence is preserved."""
+    z = softmaxed(0, (4, 64))
+    v = jnp.ones((4, 64, 8))
+    np.testing.assert_allclose(k_circ.circulant_apply(z, v),
+                               jnp.ones_like(v), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bh=st.integers(1, 4), n_pow=st.integers(3, 8),
+       dh=st.sampled_from([4, 8, 16]), seed=st.integers(0, 2 ** 16))
+def test_circulant_hypothesis(bh, n_pow, dh, seed):
+    n = 2 ** n_pow
+    z, v = softmaxed(seed, (bh, n)), rand(seed + 1, (bh, n, dh))
+    naive = R.ref_circulant_apply(z, v)
+    np.testing.assert_allclose(k_circ.circulant_apply(z, v), naive,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(k_fft.circulant_apply_fft(z, v), naive,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_circulant_custom_vjp_matches_ref_grad():
+    z = softmaxed(0, (4, 64))
+    v = rand(1, (4, 64, 16))
+
+    def f_pallas(z, v):
+        return jnp.sum(jnp.sin(k_circ.circulant_apply(z, v)))
+
+    def f_ref(z, v):
+        return jnp.sum(jnp.sin(R.ref_circulant_apply(z, v)))
+
+    gp = jax.grad(f_pallas, argnums=(0, 1))(z, v)
+    gr = jax.grad(f_ref, argnums=(0, 1))(z, v)
+    np.testing.assert_allclose(gp[0], gr[0], rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(gp[1], gr[1], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# causal circulant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("renorm", [True, False])
+@pytest.mark.parametrize("n", [32, 64, 100])
+def test_causal_circulant_gather_vs_naive(n, renorm):
+    z = jnp.exp(rand(0, (3, n)))
+    v = rand(1, (3, n, 8))
+    np.testing.assert_allclose(
+        k_circ.circulant_apply(z, v, causal=True, renorm=renorm),
+        R.ref_causal_circulant_apply(z, v, renorm=renorm),
+        rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("renorm", [True, False])
+def test_causal_fft_equals_naive(renorm):
+    """The sub-quadratic causal formulation (zero-padded FFT) is exact."""
+    z = jnp.exp(rand(0, (3, 64)))
+    v = rand(1, (3, 64, 8))
+    np.testing.assert_allclose(
+        R.ref_causal_circulant_apply_fft(z, v, renorm=renorm),
+        R.ref_causal_circulant_apply(z, v, renorm=renorm),
+        rtol=1e-4, atol=1e-5)
+
+
+def test_causal_first_row_uses_only_first_value():
+    """out[0] must be z[0]*v[0] (/z[0] if renormed) — nothing else."""
+    z = jnp.exp(rand(0, (2, 32)))
+    v = rand(1, (2, 32, 4))
+    out = R.ref_causal_circulant_apply(z, v, renorm=True)
+    np.testing.assert_allclose(out[:, 0], v[:, 0], rtol=1e-5)
+    out2 = R.ref_causal_circulant_apply(z, v, renorm=False)
+    np.testing.assert_allclose(out2[:, 0], z[:, :1] * v[:, 0], rtol=1e-5)
+
+
+def test_causal_no_future_dependence():
+    """Perturbing v[j] never changes out[i] for i < j (value causality)."""
+    z = jnp.exp(rand(0, (1, 32)))
+    v = rand(1, (1, 32, 4))
+    out = R.ref_causal_circulant_apply_fft(z, v)
+    v2 = v.at[:, 20].add(7.0)
+    out2 = R.ref_causal_circulant_apply_fft(z, v2)
+    np.testing.assert_allclose(out[:, :20], out2[:, :20], atol=1e-5)
+    assert float(jnp.max(jnp.abs(out[:, 20:] - out2[:, 20:]))) > 1e-4
+
+
+# ---------------------------------------------------------------------------
+# fft pointwise kernel in isolation
+# ---------------------------------------------------------------------------
+
+def test_fft_pointwise_is_conj_multiply():
+    zf = (rand(0, (3, 17)) + 1j * rand(1, (3, 17))).astype(jnp.complex64)
+    vf = (rand(2, (3, 17, 5)) + 1j * rand(3, (3, 17, 5))).astype(jnp.complex64)
+    out = k_fft.fft_pointwise(zf, vf)
+    np.testing.assert_allclose(out, jnp.conj(zf)[..., None] * vf,
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(64, 32), (5, 7, 48), (3, 130, 16)])
+def test_layernorm_matches_ref(shape):
+    x = rand(0, shape)
+    g = 1.0 + 0.1 * rand(1, shape[-1:])
+    b = 0.1 * rand(2, shape[-1:])
+    np.testing.assert_allclose(k_ln.layernorm(x, g, b),
+                               R.ref_layernorm(x, g, b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_output_statistics():
+    x = 3.0 + 5.0 * rand(0, (128, 64))
+    out = k_ln.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(jnp.mean(out, -1), jnp.zeros(128), atol=1e-4)
+    np.testing.assert_allclose(jnp.std(out, -1), jnp.ones(128), atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# linear attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,n,dh", [(2, 64, 16), (4, 128, 8)])
+def test_linear_attention_matches_ref(bh, n, dh):
+    q, k, v = rand(0, (bh, n, dh)), rand(1, (bh, n, dh)), rand(2, (bh, n, dh))
+    np.testing.assert_allclose(k_lin.linear_attention(q, k, v),
+                               R.ref_linear_attention(q, k, v),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_linear_attention_is_not_softmax():
+    """Sanity: linear attention deviates from exact softmax attention —
+    the fidelity gap the paper's Sec. 5.5 instability stems from."""
+    q, k, v = rand(0, (2, 64, 16)), rand(1, (2, 64, 16)), rand(2, (2, 64, 16))
+    lin = R.ref_linear_attention(q, k, v)
+    soft = R.ref_attention(q, k, v)
+    assert float(jnp.max(jnp.abs(lin - soft))) > 1e-2

@@ -1,0 +1,161 @@
+//! Micro-benchmark harness (criterion replacement for the offline build):
+//! warmup + fixed-sample timing with mean/median/p10/p90 reporting and a
+//! machine-readable JSON dump.
+//!
+//! Every `benches/*.rs` target sets `harness = false` and drives this from
+//! its `main()`. Methodology: `warmup` untimed iterations, then `samples`
+//! timed iterations; the median is the headline number (robust to OS
+//! scheduling noise on the single-core testbed).
+
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl Sample {
+    pub fn median(&self) -> f64 {
+        percentile(&self.samples, 0.5)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn p10(&self) -> f64 {
+        percentile(&self.samples, 0.10)
+    }
+
+    pub fn p90(&self) -> f64 {
+        percentile(&self.samples, 0.90)
+    }
+}
+
+fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite timings"));
+    let idx = ((v.len() - 1) as f64 * q).round() as usize;
+    v[idx]
+}
+
+/// A group of related benchmark cases, printed as one table.
+pub struct Bench {
+    title: String,
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<Sample>,
+}
+
+impl Bench {
+    pub fn new(title: &str) -> Self {
+        Self {
+            title: title.to_string(),
+            warmup: 2,
+            samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` (one call = one iteration).
+    pub fn case<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Sample {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        eprintln!("  {name:<34} median {:>10.3} ms  (p10 {:>8.3} / p90 \
+                   {:>8.3})",
+                  percentile(&samples, 0.5) * 1e3,
+                  percentile(&samples, 0.1) * 1e3,
+                  percentile(&samples, 0.9) * 1e3);
+        self.results.push(Sample { name: name.to_string(), samples });
+        self.results.last().expect("just pushed")
+    }
+
+    pub fn median_of(&self, name: &str) -> Option<f64> {
+        self.results.iter().find(|s| s.name == name).map(|s| s.median())
+    }
+
+    pub fn results(&self) -> &[Sample] {
+        &self.results
+    }
+
+    /// Formatted summary table.
+    pub fn report(&self) -> String {
+        let mut s = format!("\n== {} ==\n", self.title);
+        s.push_str(&format!("{:<36} {:>12} {:>12} {:>12}\n",
+                            "case", "median ms", "mean ms", "p90 ms"));
+        for r in &self.results {
+            s.push_str(&format!("{:<36} {:>12.3} {:>12.3} {:>12.3}\n",
+                                r.name, r.median() * 1e3, r.mean() * 1e3,
+                                r.p90() * 1e3));
+        }
+        s
+    }
+
+    /// JSON dump for EXPERIMENTS.md tooling.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("title".into(), Json::from(self.title.as_str())),
+            ("results".into(), Json::Arr(
+                self.results
+                    .iter()
+                    .map(|r| Json::Obj(vec![
+                        ("name".into(), Json::from(r.name.as_str())),
+                        ("median_s".into(), Json::Num(r.median())),
+                        ("mean_s".into(), Json::Num(r.mean())),
+                    ]))
+                    .collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_ordering() {
+        let xs = vec![5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn case_runs_expected_iterations() {
+        let mut bench = Bench::new("t");
+        bench.warmup = 1;
+        bench.samples = 5;
+        let mut count = 0;
+        bench.case("counter", || {
+            count += 1;
+        });
+        assert_eq!(count, 6);
+        assert_eq!(bench.results()[0].samples.len(), 5);
+        assert!(bench.median_of("counter").is_some());
+        assert!(bench.report().contains("counter"));
+    }
+
+    #[test]
+    fn json_dump_parses() {
+        let mut bench = Bench::new("t");
+        bench.warmup = 0;
+        bench.samples = 2;
+        bench.case("x", || {});
+        let parsed = crate::json::parse(&bench.to_json().to_string()).unwrap();
+        assert_eq!(parsed.req("title").unwrap().as_str().unwrap(), "t");
+    }
+}

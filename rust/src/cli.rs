@@ -1,0 +1,136 @@
+//! Tiny argument parser (clap replacement for the offline build): GNU-ish
+//! `--flag value` / `--switch` parsing with typed getters and an auto
+//! usage string. Subcommand = first non-flag argument.
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Flags that take a value (everything else `--x` is a boolean switch).
+pub fn parse_with(valued: &[&str], raw: impl Iterator<Item = String>)
+                  -> Result<Args> {
+    let mut args = Args::default();
+    let raw: Vec<String> = raw.collect();
+    let mut i = 0;
+    while i < raw.len() {
+        let a = &raw[i];
+        if let Some(name) = a.strip_prefix("--") {
+            if let Some((k, v)) = name.split_once('=') {
+                args.flags.insert(k.to_string(), v.to_string());
+            } else if valued.contains(&name) {
+                let v = raw.get(i + 1)
+                    .ok_or_else(|| anyhow!("--{name} needs a value"))?;
+                args.flags.insert(name.to_string(), v.clone());
+                i += 1;
+            } else {
+                args.switches.push(name.to_string());
+            }
+        } else if args.command.is_none() && args.positional.is_empty() {
+            args.command = Some(a.clone());
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Parse std::env::args (skipping argv[0]).
+pub fn parse(valued: &[&str]) -> Result<Args> {
+    parse_with(valued, std::env::args().skip(1))
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T)
+                                          -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>()
+                .map_err(|_| anyhow!("--{name}: cannot parse '{v}'")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required flag --{name}"))
+    }
+
+    /// Error on unknown command (help text for the caller to print).
+    pub fn expect_command(&self, known: &[&str]) -> Result<&str> {
+        match &self.command {
+            Some(c) if known.contains(&c.as_str()) => Ok(c),
+            Some(c) => bail!("unknown command '{c}'; known: {known:?}"),
+            None => bail!("missing command; known: {known:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_vec(valued: &[&str], v: &[&str]) -> Args {
+        parse_with(valued, v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse_vec(&["steps", "config"],
+                          &["train", "--steps", "100", "--fused",
+                            "--config", "vit_b_avg_cat"]);
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("config"), Some("vit_b_avg_cat"));
+        assert!(a.has("fused"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse_vec(&[], &["run", "--steps=42"]);
+        assert_eq!(a.parse_or("steps", 0u64).unwrap(), 42);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse_with(&["x"], ["--x"].iter().map(|s| s.to_string()))
+            .is_err());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse_vec(&[], &["cmd"]);
+        assert_eq!(a.parse_or("steps", 7u64).unwrap(), 7);
+        assert!(a.require("config").is_err());
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+    }
+
+    #[test]
+    fn expect_command_validates() {
+        let a = parse_vec(&[], &["list"]);
+        assert_eq!(a.expect_command(&["list", "train"]).unwrap(), "list");
+        assert!(a.expect_command(&["train"]).is_err());
+    }
+}

@@ -1,0 +1,158 @@
+//! Analytic cost models behind Fig. 1 and the complexity columns of
+//! Tables 1-3: FLOPs and peak activation memory of one token-mixing layer
+//! for each mechanism, as a function of (N, D, H).
+//!
+//! These are the formulas the paper argues from — O(N^2 D) attention vs
+//! O(N log N · D) CAT — made concrete so `cargo bench --bench
+//! scaling_nlogn` can print the predicted series next to the measured
+//! wallclock and EXPERIMENTS.md can report where the crossover falls.
+
+/// Mechanism identifiers shared with the artifact registry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mechanism {
+    Attention,
+    CatGather,
+    CatFft,
+    Linear,
+}
+
+impl Mechanism {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "attention" => Self::Attention,
+            "cat_gather" | "gather" => Self::CatGather,
+            "cat_fft" | "cat" | "fft" => Self::CatFft,
+            "linear" => Self::Linear,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Attention => "attention",
+            Self::CatGather => "cat_gather",
+            Self::CatFft => "cat_fft",
+            Self::Linear => "linear",
+        }
+    }
+}
+
+/// Cost of one mixing layer (forward), in FLOPs and f32 activation bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCost {
+    pub flops: f64,
+    pub mem_bytes: f64,
+    pub learnable_params: f64,
+}
+
+/// FLOP/memory model for one layer. Conventions: a multiply-add = 2 FLOPs;
+/// FFT of length n costs 5 n log2 n FLOPs (standard radix-2 accounting);
+/// projections count d->d matmuls at 2 N D^2.
+pub fn layer_cost(mech: Mechanism, n: usize, d: usize, h: usize) -> LayerCost {
+    let nf = n as f64;
+    let df = d as f64;
+    let hf = h as f64;
+    let proj = 2.0 * nf * df * df; // one D x D projection over N tokens
+    match mech {
+        Mechanism::Attention => LayerCost {
+            // q,k,v projections + QK^T + softmax + PV
+            flops: 3.0 * proj + 2.0 * nf * nf * df * 2.0 + 5.0 * nf * nf,
+            // N x N attention matrix dominates
+            mem_bytes: 4.0 * (nf * nf + 3.0 * nf * df),
+            learnable_params: 3.0 * df * df,
+        },
+        Mechanism::CatGather => LayerCost {
+            // W_A (d->h) + W_V + the N x N circulant apply (no qk matmul,
+            // no softmax over N^2 — softmax is over N only)
+            flops: proj + 2.0 * nf * df * hf + 2.0 * nf * nf * df + 5.0 * nf * hf,
+            // the rolled panel is materialized blockwise: block_i x N per
+            // program, never the full N x N in HBM; host model counts the
+            // VMEM-resident panel
+            mem_bytes: 4.0 * (64.0_f64.min(nf) * nf + 2.0 * nf * df),
+            learnable_params: (df + hf) * df,
+        },
+        Mechanism::CatFft => {
+            // rfft(z): H transforms of length N; rfft(V)/irfft: D channels
+            let fft = 5.0 * nf * (nf.log2().max(1.0)) * (hf + 2.0 * df);
+            LayerCost {
+                flops: proj + 2.0 * nf * df * hf + fft + 6.0 * nf * df,
+                mem_bytes: 4.0 * (3.0 * nf * df),
+                learnable_params: (df + hf) * df,
+            }
+        }
+        Mechanism::Linear => LayerCost {
+            // q,k,v projections + two N d_h^2 contractions per head
+            flops: 3.0 * proj + 4.0 * nf * df * (df / hf),
+            mem_bytes: 4.0 * (3.0 * nf * df + df * df / hf),
+            learnable_params: 3.0 * df * df,
+        },
+    }
+}
+
+/// The N at which CAT-FFT's modeled FLOPs drop below attention's.
+pub fn crossover_n(d: usize, h: usize) -> usize {
+    for p in 3..20 {
+        let n = 1usize << p;
+        let a = layer_cost(Mechanism::Attention, n, d, h).flops;
+        let c = layer_cost(Mechanism::CatFft, n, d, h).flops;
+        if c < a {
+            return n;
+        }
+    }
+    usize::MAX
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_is_quadratic_in_n() {
+        let c1 = layer_cost(Mechanism::Attention, 256, 512, 8).flops;
+        let c2 = layer_cost(Mechanism::Attention, 1024, 512, 8).flops;
+        // x4 N with N^2 term dominant at large N: ratio between 4 and 16
+        assert!(c2 / c1 > 4.0 && c2 / c1 <= 16.0, "ratio {}", c2 / c1);
+    }
+
+    #[test]
+    fn cat_fft_subquadratic() {
+        // doubling N should grow CAT-FFT by barely more than 2x at large N
+        let c1 = layer_cost(Mechanism::CatFft, 4096, 256, 8).flops;
+        let c2 = layer_cost(Mechanism::CatFft, 8192, 256, 8).flops;
+        assert!(c2 / c1 < 2.4, "ratio {}", c2 / c1);
+    }
+
+    #[test]
+    fn cat_beats_attention_at_large_n() {
+        let n = 8192;
+        let a = layer_cost(Mechanism::Attention, n, 512, 8);
+        let c = layer_cost(Mechanism::CatFft, n, 512, 8);
+        assert!(c.flops < a.flops);
+        assert!(c.mem_bytes < a.mem_bytes);
+    }
+
+    #[test]
+    fn param_budgets_match_paper() {
+        let d = 1024usize;
+        let h = 16usize;
+        let a = layer_cost(Mechanism::Attention, 256, d, h).learnable_params;
+        let c = layer_cost(Mechanism::CatFft, 256, d, h).learnable_params;
+        assert_eq!(a, 3.0 * (d * d) as f64);
+        assert_eq!(c, ((d + h) * d) as f64);
+    }
+
+    #[test]
+    fn crossover_is_finite_and_moderate() {
+        let n = crossover_n(512, 8);
+        assert!(n < 16384, "crossover {n}");
+    }
+
+    #[test]
+    fn mechanism_parse_roundtrip() {
+        for m in [Mechanism::Attention, Mechanism::CatGather,
+                  Mechanism::CatFft, Mechanism::Linear] {
+            assert_eq!(Mechanism::parse(m.name()), Some(m));
+        }
+        assert_eq!(Mechanism::parse("nope"), None);
+    }
+}

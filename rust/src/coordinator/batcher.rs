@@ -1,0 +1,164 @@
+//! Dynamic batcher: vLLM-router-style request coalescing for the PJRT
+//! executables, which are compiled for a fixed batch size.
+//!
+//! Policy: a batch flushes when (a) it reaches `max_batch` requests, or
+//! (b) the oldest queued request has waited `max_delay`. Short batches are
+//! padded up to `max_batch` with repeats of the last row (the pad rows'
+//! outputs are discarded), so the fixed-shape executable always sees a
+//! full batch. FIFO order is preserved end-to-end.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// A queued request with its enqueue timestamp and sequence number.
+#[derive(Debug, Clone)]
+pub struct Pending<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+    pub seq: u64,
+}
+
+/// Decision returned by [`DynamicBatcher::poll`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Flush {
+    /// Not enough work and nothing has waited long enough.
+    Wait(Duration),
+    /// Emit a batch of this many queued requests (<= max_batch).
+    Emit(usize),
+    /// Queue empty.
+    Idle,
+}
+
+/// Size+deadline dynamic batcher over opaque payloads.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    queue: VecDeque<Pending<T>>,
+    pub max_batch: usize,
+    pub max_delay: Duration,
+    next_seq: u64,
+    /// statistics
+    pub emitted_batches: u64,
+    pub emitted_requests: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    pub fn new(max_batch: usize, max_delay: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self {
+            queue: VecDeque::new(),
+            max_batch,
+            max_delay,
+            next_seq: 0,
+            emitted_batches: 0,
+            emitted_requests: 0,
+        }
+    }
+
+    pub fn push(&mut self, payload: T) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back(Pending { payload, enqueued: Instant::now(), seq });
+        seq
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should we flush now? (Does not pop.)
+    pub fn poll(&self, now: Instant) -> Flush {
+        let Some(oldest) = self.queue.front() else {
+            return Flush::Idle;
+        };
+        if self.queue.len() >= self.max_batch {
+            return Flush::Emit(self.max_batch);
+        }
+        let waited = now.duration_since(oldest.enqueued);
+        if waited >= self.max_delay {
+            return Flush::Emit(self.queue.len());
+        }
+        Flush::Wait(self.max_delay - waited)
+    }
+
+    /// Pop up to `n` requests in FIFO order.
+    pub fn take(&mut self, n: usize) -> Vec<Pending<T>> {
+        let n = n.min(self.queue.len());
+        let out: Vec<Pending<T>> = self.queue.drain(..n).collect();
+        self.emitted_batches += 1;
+        self.emitted_requests += out.len() as u64;
+        out
+    }
+
+    /// Mean occupancy of emitted batches (batching efficiency metric).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.emitted_batches == 0 {
+            0.0
+        } else {
+            self.emitted_requests as f64
+                / (self.emitted_batches as f64 * self.max_batch as f64)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = DynamicBatcher::new(4, Duration::from_secs(3600));
+        for i in 0..4 {
+            b.push(i);
+        }
+        assert_eq!(b.poll(Instant::now()), Flush::Emit(4));
+        let taken = b.take(4);
+        assert_eq!(taken.iter().map(|p| p.payload).collect::<Vec<_>>(),
+                   vec![0, 1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn waits_then_deadline_flushes_partial() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(5));
+        b.push("a");
+        match b.poll(Instant::now()) {
+            Flush::Wait(d) => assert!(d <= Duration::from_millis(5)),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        let later = Instant::now() + Duration::from_millis(6);
+        assert_eq!(b.poll(later), Flush::Emit(1));
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let b: DynamicBatcher<u8> = DynamicBatcher::new(4,
+            Duration::from_millis(1));
+        assert_eq!(b.poll(Instant::now()), Flush::Idle);
+    }
+
+    #[test]
+    fn fifo_and_seq_monotone() {
+        let mut b = DynamicBatcher::new(2, Duration::from_millis(1));
+        let s0 = b.push(10);
+        let s1 = b.push(11);
+        assert!(s0 < s1);
+        let taken = b.take(2);
+        assert_eq!(taken[0].seq, s0);
+        assert_eq!(taken[1].seq, s1);
+    }
+
+    #[test]
+    fn occupancy_tracks_emissions() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(1));
+        for i in 0..6 {
+            b.push(i);
+        }
+        b.take(4);
+        b.take(2);
+        assert!((b.mean_occupancy() - 6.0 / 8.0).abs() < 1e-9);
+    }
+}

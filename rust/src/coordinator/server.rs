@@ -1,0 +1,418 @@
+//! The serving loop: thread-based request router + per-model workers.
+//!
+//! Architecture (vLLM-router shaped, scaled to one CPU, std-only — the
+//! offline vendor snapshot has no async runtime, so the event loop is
+//! plain threads + mpsc channels, which on a single core is also the
+//! faster choice):
+//!
+//! ```text
+//!   clients ──mpsc──▶ Router thread ──per-model mpsc──▶ ModelWorker
+//!      ▲                                                 (batcher + PJRT)
+//!      └──────────────── oneshot responses ◀─────────────┘
+//! ```
+//!
+//! The router owns a registry of model workers keyed by config name and
+//! forwards requests; each worker runs a dynamic batcher
+//! ([`super::batcher`]) in front of its compiled `forward` executable,
+//! pads short batches to the artifact's fixed batch size, executes, and
+//! splits the logits back out to per-request responses. Backpressure is
+//! bounded sync_channels end-to-end.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail};
+
+use super::batcher::{DynamicBatcher, Flush};
+use crate::metrics::LatencyHistogram;
+use crate::runtime::{Executable, Runtime, TrainState};
+use crate::tensor::{HostTensor, TensorData};
+use crate::Result;
+
+/// Everything a worker thread needs to build its own PJRT stack.
+///
+/// The xla crate's handles (`PjRtClient`, `Literal`, executables) hold
+/// `Rc`s and raw PJRT pointers — they are `!Send` by design — so each
+/// worker thread constructs its *own* `Runtime` + executable from the
+/// artifact directory, and parameters cross the thread boundary as plain
+/// [`HostTensor`]s (trained checkpoints) or as a seed (fresh init).
+pub struct WorkerSpec {
+    pub model: String,
+    /// trained parameters (host copies, manifest order); None -> init(seed)
+    pub params: Option<Vec<HostTensor>>,
+    pub seed: i32,
+}
+
+/// One inference request: a single example (no batch dim) for `model`.
+pub struct InferRequest {
+    pub model: String,
+    pub input: HostTensor,
+    pub resp: SyncSender<Result<HostTensor>>,
+    pub enqueued: Instant,
+}
+
+/// Client handle to the router (cheap to clone, thread-safe).
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: SyncSender<InferRequest>,
+}
+
+impl ServeHandle {
+    /// Submit one example and block until its logits row is ready.
+    pub fn infer(&self, model: &str, input: HostTensor) -> Result<HostTensor> {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = InferRequest {
+            model: model.to_string(),
+            input,
+            resp: tx,
+            enqueued: Instant::now(),
+        };
+        self.tx.send(req).map_err(|_| anyhow!("router is down"))?;
+        rx.recv().map_err(|_| anyhow!("worker dropped request"))?
+    }
+}
+
+/// Final statistics from a drained worker.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub model: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_occupancy: f64,
+    pub latency: LatencyHistogram,
+}
+
+/// Options for batching behaviour.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    pub max_delay: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self { max_delay: Duration::from_millis(4), queue_depth: 256 }
+    }
+}
+
+/// Serving coordinator: router thread + one worker thread per model.
+pub struct Server {
+    handle: ServeHandle,
+    stats_rx: Receiver<WorkerStats>,
+    router: std::thread::JoinHandle<()>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn workers for `models` with freshly-initialized parameters
+    /// (each must have `forward` + `init` entries). Production serving
+    /// passes trained parameters via [`Server::spawn_specs`] (see
+    /// `examples/serve.rs`).
+    pub fn spawn(artifacts: PathBuf, models: &[String], opts: ServeOptions,
+                 seed: i32) -> Result<Self> {
+        let specs = models
+            .iter()
+            .map(|m| WorkerSpec { model: m.clone(), params: None, seed })
+            .collect();
+        Self::spawn_specs(artifacts, specs, opts)
+    }
+
+    /// Spawn one worker thread per spec. Each worker builds its own PJRT
+    /// runtime over `artifacts` (xla handles are `!Send`; see
+    /// [`WorkerSpec`]).
+    pub fn spawn_specs(artifacts: PathBuf, specs: Vec<WorkerSpec>,
+                       opts: ServeOptions) -> Result<Self> {
+        let (tx, rx) = mpsc::sync_channel::<InferRequest>(opts.queue_depth);
+        let (stats_tx, stats_rx) = mpsc::channel();
+
+        let mut worker_txs: HashMap<String, SyncSender<InferRequest>> =
+            HashMap::new();
+        let mut workers = Vec::new();
+        // workers report readiness so spawn() fails fast on bad configs
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        for spec in specs {
+            let (wtx, wrx) = mpsc::sync_channel(opts.queue_depth);
+            worker_txs.insert(spec.model.clone(), wtx);
+            let stats_tx = stats_tx.clone();
+            let ready_tx = ready_tx.clone();
+            let dir = artifacts.clone();
+            workers.push(std::thread::spawn(move || {
+                let built = build_worker(&dir, &spec);
+                match built {
+                    Ok((exe, params)) => {
+                        let _ = ready_tx.send(Ok(spec.model.clone()));
+                        drop(ready_tx);
+                        worker_loop(spec.model, exe, params, wrx, opts,
+                                    stats_tx);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..workers.len() {
+            match ready_rx.recv() {
+                Ok(Ok(_)) => {}
+                Ok(Err(e)) => return Err(e.context("worker startup")),
+                Err(_) => bail!("worker thread died during startup"),
+            }
+        }
+
+        let router = std::thread::spawn(move || {
+            while let Ok(req) = rx.recv() {
+                match worker_txs.get(&req.model) {
+                    Some(wtx) => {
+                        // bounded channel -> this blocks when the worker is
+                        // saturated: backpressure to the client
+                        let _ = wtx.send(req);
+                    }
+                    None => {
+                        let model = req.model.clone();
+                        let _ = req.resp
+                            .send(Err(anyhow!("unknown model '{model}'")));
+                    }
+                }
+            }
+            // rx closed: worker_txs drop here, workers drain and exit
+        });
+
+        Ok(Self { handle: ServeHandle { tx }, stats_rx, router, workers })
+    }
+
+    pub fn handle(&self) -> ServeHandle {
+        self.handle.clone()
+    }
+
+    /// Close the intake, join every thread, collect worker statistics.
+    /// All outstanding `ServeHandle` clones must be dropped first.
+    pub fn shutdown(self) -> Vec<WorkerStats> {
+        drop(self.handle);
+        let _ = self.router.join();
+        for w in self.workers {
+            let _ = w.join();
+        }
+        let mut out = Vec::new();
+        while let Ok(s) = self.stats_rx.try_recv() {
+            out.push(s);
+        }
+        out
+    }
+}
+
+/// Build a worker's thread-local PJRT stack from its spec.
+fn build_worker(dir: &PathBuf, spec: &WorkerSpec)
+                -> Result<(std::sync::Arc<Executable>, Vec<xla::Literal>)> {
+    let rt = Runtime::new(dir.clone())?;
+    let exe = rt.load(&spec.model, "forward")?;
+    let params = match &spec.params {
+        Some(host) => host
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?,
+        None => TrainState::init(&rt, &spec.model, spec.seed)?.params,
+    };
+    Ok((exe, params))
+}
+
+/// Worker thread: dynamic batcher in front of one executable.
+fn worker_loop(model: String, exe: std::sync::Arc<Executable>,
+               params: Vec<xla::Literal>, rx: Receiver<InferRequest>,
+               opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>) {
+    let max_batch = exe.meta.inputs.last()
+        .map(|s| s.shape.first().copied().unwrap_or(1))
+        .unwrap_or(1);
+    let mut batcher: DynamicBatcher<InferRequest> =
+        DynamicBatcher::new(max_batch, opts.max_delay);
+    let mut latency = LatencyHistogram::default();
+    let mut requests = 0u64;
+    let mut open = true;
+
+    while open || !batcher.is_empty() {
+        // fill: block when empty, then drain whatever is ready
+        if open && batcher.is_empty() {
+            match rx.recv() {
+                Ok(req) => {
+                    batcher.push(req);
+                }
+                Err(_) => {
+                    open = false;
+                    continue;
+                }
+            }
+        }
+        while open && batcher.len() < batcher.max_batch {
+            match rx.try_recv() {
+                Ok(req) => {
+                    batcher.push(req);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        match batcher.poll(Instant::now()) {
+            Flush::Emit(n) => {
+                flush(&exe, &params, &mut batcher, n, &mut latency,
+                      &mut requests);
+            }
+            Flush::Wait(d) if open => {
+                // wait out the deadline, absorbing new arrivals
+                match rx.recv_timeout(d) {
+                    Ok(req) => {
+                        batcher.push(req);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                    }
+                }
+            }
+            Flush::Wait(_) => {
+                // intake closed: flush the remainder immediately
+                let n = batcher.len();
+                flush(&exe, &params, &mut batcher, n, &mut latency,
+                      &mut requests);
+            }
+            Flush::Idle => {}
+        }
+    }
+
+    let _ = stats_tx.send(WorkerStats {
+        model,
+        requests,
+        batches: batcher.emitted_batches,
+        mean_occupancy: batcher.mean_occupancy(),
+        latency,
+    });
+}
+
+/// Execute one padded batch and fan results back out.
+fn flush(exe: &Executable, params: &[xla::Literal],
+         batcher: &mut DynamicBatcher<InferRequest>, n: usize,
+         latency: &mut LatencyHistogram, requests: &mut u64) {
+    if n == 0 {
+        return;
+    }
+    let pending = batcher.take(n);
+    let result = run_batch(exe, params,
+                           &pending.iter()
+                               .map(|p| &p.payload.input)
+                               .collect::<Vec<_>>());
+    match result {
+        Ok(rows) => {
+            for (p, row) in pending.into_iter().zip(rows) {
+                latency.record(p.payload.enqueued.elapsed());
+                *requests += 1;
+                let _ = p.payload.resp.send(Ok(row));
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch execute failed: {e}");
+            for p in pending {
+                let _ = p.payload.resp.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}
+
+/// Pad examples to the executable's batch size, run, split logits rows.
+fn run_batch(exe: &Executable, params: &[xla::Literal],
+             inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+    let spec = exe.meta.inputs.last().expect("input spec");
+    let max_batch = spec.shape[0];
+    let row_shape: Vec<usize> = spec.shape[1..].to_vec();
+    let row_len: usize = row_shape.iter().product();
+
+    let n = inputs.len();
+    if n == 0 || n > max_batch {
+        bail!("bad flush size {n} (max {max_batch})");
+    }
+    let mut full_shape = vec![max_batch];
+    full_shape.extend(&row_shape);
+
+    // assemble + pad with repeats of the last row, preserving dtype
+    let batch_t = match spec.dtype.as_str() {
+        "i32" => {
+            let mut data: Vec<i32> = Vec::with_capacity(max_batch * row_len);
+            for t in inputs {
+                if t.shape != row_shape {
+                    bail!("request shape {:?} != expected {:?}",
+                          t.shape, row_shape);
+                }
+                data.extend_from_slice(t.as_i32()?);
+            }
+            let last: Vec<i32> = data[data.len() - row_len..].to_vec();
+            for _ in n..max_batch {
+                data.extend_from_slice(&last);
+            }
+            HostTensor::i32(full_shape, data)?
+        }
+        _ => {
+            let mut data: Vec<f32> = Vec::with_capacity(max_batch * row_len);
+            for t in inputs {
+                if t.shape != row_shape {
+                    bail!("request shape {:?} != expected {:?}",
+                          t.shape, row_shape);
+                }
+                match &t.data {
+                    TensorData::F32(v) => data.extend_from_slice(v),
+                    TensorData::I32(v) => {
+                        data.extend(v.iter().map(|&x| x as f32))
+                    }
+                }
+            }
+            let last: Vec<f32> = data[data.len() - row_len..].to_vec();
+            for _ in n..max_batch {
+                data.extend_from_slice(&last);
+            }
+            HostTensor::f32(full_shape, data)?
+        }
+    };
+
+    // argument list: params (closed over by the worker) then the batch
+    let batch_lit = batch_t.to_literal()?;
+    let mut refs: Vec<&xla::Literal> = params.iter().collect();
+    refs.push(&batch_lit);
+    let outs = exe.execute_literals(&refs)?;
+    let logits = HostTensor::from_literal(&outs[0])?;
+    split_rows(&logits, n)
+}
+
+/// Split a (B, ...) logits tensor into the first n rows.
+pub fn split_rows(logits: &HostTensor, n: usize) -> Result<Vec<HostTensor>> {
+    let b = *logits.shape.first()
+        .ok_or_else(|| anyhow!("logits must have a batch dim"))?;
+    if n > b {
+        bail!("asked for {n} rows of a batch of {b}");
+    }
+    let row_shape: Vec<usize> = logits.shape[1..].to_vec();
+    let row_len: usize = row_shape.iter().product();
+    let data = logits.as_f32()?;
+    (0..n)
+        .map(|i| HostTensor::f32(row_shape.clone(),
+                                 data[i * row_len..(i + 1) * row_len]
+                                     .to_vec()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_rows_basic() {
+        let t = HostTensor::f32(vec![3, 2],
+                                vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let rows = split_rows(&t, 2).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(rows[1].as_f32().unwrap(), &[3.0, 4.0]);
+        assert!(split_rows(&t, 4).is_err());
+    }
+}

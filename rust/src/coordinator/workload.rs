@@ -1,0 +1,161 @@
+//! Serving workload generators: arrival processes for driving the router
+//! under realistic traffic shapes (steady Poisson, diurnal ramp, bursts).
+//!
+//! The paper's efficiency claims are about per-op cost; a serving
+//! deployment cares how that interacts with batching under load. The
+//! `serve` example and the coordinator bench use these generators so the
+//! reported latency/occupancy numbers come from a principled arrival
+//! process rather than a closed loop.
+
+use std::time::Duration;
+
+use crate::data::rng::Rng;
+
+/// An arrival process: yields successive inter-arrival gaps.
+#[derive(Debug, Clone)]
+pub enum Arrivals {
+    /// Poisson process with constant rate (req/s).
+    Poisson { rate: f64 },
+    /// Poisson modulated by a sinusoid: rate * (1 + depth*sin(2πt/period)).
+    Diurnal { rate: f64, depth: f64, period: Duration },
+    /// Markov-modulated on/off bursts: `burst_rate` while on, `idle_rate`
+    /// while off; exponential dwell times.
+    Bursty {
+        burst_rate: f64,
+        idle_rate: f64,
+        mean_burst: Duration,
+        mean_idle: Duration,
+    },
+}
+
+/// Stateful sampler over an [`Arrivals`] spec.
+#[derive(Debug, Clone)]
+pub struct ArrivalSampler {
+    spec: Arrivals,
+    rng: Rng,
+    /// elapsed virtual time (seconds)
+    t: f64,
+    /// Bursty: in-burst flag + remaining dwell
+    burst_on: bool,
+    dwell_left: f64,
+}
+
+impl ArrivalSampler {
+    pub fn new(spec: Arrivals, seed: u64) -> Self {
+        Self { spec, rng: Rng::new(seed), t: 0.0, burst_on: true,
+               dwell_left: 0.0 }
+    }
+
+    fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -(1.0 - self.rng.uniform()).ln() / rate
+    }
+
+    /// Next inter-arrival gap.
+    pub fn next_gap(&mut self) -> Duration {
+        let gap = match self.spec.clone() {
+            Arrivals::Poisson { rate } => self.exp(rate),
+            Arrivals::Diurnal { rate, depth, period } => {
+                let phase = std::f64::consts::TAU * self.t
+                    / period.as_secs_f64().max(1e-9);
+                let r = (rate * (1.0 + depth * phase.sin())).max(1e-3);
+                self.exp(r)
+            }
+            Arrivals::Bursty { burst_rate, idle_rate, mean_burst,
+                               mean_idle } => {
+                if self.dwell_left <= 0.0 {
+                    self.burst_on = !self.burst_on;
+                    let mean = if self.burst_on { mean_burst } else { mean_idle };
+                    self.dwell_left = self.exp(1.0 / mean.as_secs_f64()
+                        .max(1e-9));
+                }
+                let rate = if self.burst_on { burst_rate } else { idle_rate };
+                let g = self.exp(rate.max(1e-3));
+                self.dwell_left -= g;
+                g
+            }
+        };
+        self.t += gap;
+        Duration::from_secs_f64(gap)
+    }
+
+    /// Generate the full schedule of `n` arrival offsets from t=0.
+    pub fn schedule(&mut self, n: usize) -> Vec<Duration> {
+        let mut t = Duration::ZERO;
+        (0..n)
+            .map(|_| {
+                t += self.next_gap();
+                t
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_mean_rate_is_right() {
+        let mut s = ArrivalSampler::new(Arrivals::Poisson { rate: 100.0 }, 1);
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| s.next_gap().as_secs_f64()).sum();
+        let rate = n as f64 / total;
+        assert!((rate - 100.0).abs() < 5.0, "measured rate {rate}");
+    }
+
+    #[test]
+    fn schedule_is_monotone() {
+        let mut s = ArrivalSampler::new(Arrivals::Poisson { rate: 50.0 }, 2);
+        let sched = s.schedule(500);
+        assert_eq!(sched.len(), 500);
+        for w in sched.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    #[test]
+    fn diurnal_rate_varies() {
+        let mut s = ArrivalSampler::new(
+            Arrivals::Diurnal { rate: 100.0, depth: 0.9,
+                                period: Duration::from_secs(1) }, 3);
+        // gaps drawn near the trough should on average exceed gaps at peak;
+        // just sanity-check dispersion is wider than flat Poisson
+        let gaps: Vec<f64> = (0..5000)
+            .map(|_| s.next_gap().as_secs_f64())
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean).powi(2)).sum::<f64>()
+            / gaps.len() as f64;
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.05, "coefficient of variation^2 {cv2} not >1 \
+                             (modulated Poisson is over-dispersed)");
+    }
+
+    #[test]
+    fn bursty_alternates_phases() {
+        let mut s = ArrivalSampler::new(
+            Arrivals::Bursty {
+                burst_rate: 1000.0,
+                idle_rate: 1.0,
+                mean_burst: Duration::from_millis(50),
+                mean_idle: Duration::from_millis(50),
+            }, 4);
+        let gaps: Vec<f64> = (0..2000)
+            .map(|_| s.next_gap().as_secs_f64())
+            .collect();
+        let tiny = gaps.iter().filter(|g| **g < 0.005).count();
+        let large = gaps.iter().filter(|g| **g > 0.05).count();
+        assert!(tiny > 100, "no burst gaps ({tiny})");
+        assert!(large > 5, "no idle gaps ({large})");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = ArrivalSampler::new(Arrivals::Poisson { rate: 10.0 }, 9)
+            .schedule(50);
+        let b = ArrivalSampler::new(Arrivals::Poisson { rate: 10.0 }, 9)
+            .schedule(50);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,210 @@
+//! Image augmentation: random resized crop + horizontal flip — the paper's
+//! ImageNet training recipe (Sec. 5.2: "random cropping and horizontal
+//! flipping").
+//!
+//! Operates on CHW f32 buffers host-side, before upload. Off by default in
+//! the table harness: the proxy runs are a few hundred steps on an
+//! infinite generator (no overfitting to fight), and enabling it would
+//! change the recorded tables; it exists for recipe fidelity and for
+//! longer runs (`cat train --augment`).
+
+use super::rng::Rng;
+
+/// Augmentation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct AugmentConfig {
+    /// probability of a horizontal flip
+    pub flip_prob: f64,
+    /// minimum crop scale (area fraction); 1.0 disables cropping
+    pub min_crop_scale: f32,
+    pub enabled: bool,
+}
+
+impl Default for AugmentConfig {
+    fn default() -> Self {
+        Self { flip_prob: 0.5, min_crop_scale: 0.7, enabled: true }
+    }
+}
+
+impl AugmentConfig {
+    pub fn disabled() -> Self {
+        Self { enabled: false, ..Self::default() }
+    }
+}
+
+/// Augment one CHW image of side `size` in place (via a scratch buffer).
+pub fn augment_image(img: &mut [f32], channels: usize, size: usize,
+                     cfg: &AugmentConfig, rng: &mut Rng) {
+    debug_assert_eq!(img.len(), channels * size * size);
+    if !cfg.enabled {
+        return;
+    }
+    if cfg.min_crop_scale < 1.0 {
+        let scale = cfg.min_crop_scale
+            + (1.0 - cfg.min_crop_scale) * rng.uniform() as f32;
+        let crop = ((size as f32) * scale.sqrt()).round().max(1.0) as usize;
+        if crop < size {
+            let max_off = size - crop;
+            let ox = rng.below(max_off + 1);
+            let oy = rng.below(max_off + 1);
+            random_crop_resize(img, channels, size, crop, ox, oy);
+        }
+    }
+    if rng.bernoulli(cfg.flip_prob) {
+        hflip(img, channels, size);
+    }
+}
+
+/// Crop a `crop`x`crop` window at (ox, oy) and bilinearly resize back to
+/// `size`x`size`, per channel, in place.
+fn random_crop_resize(img: &mut [f32], channels: usize, size: usize,
+                      crop: usize, ox: usize, oy: usize) {
+    let pix = size * size;
+    let mut out = vec![0f32; img.len()];
+    let ratio = crop as f32 / size as f32;
+    for c in 0..channels {
+        let src = &img[c * pix..(c + 1) * pix];
+        let dst = &mut out[c * pix..(c + 1) * pix];
+        for y in 0..size {
+            // sample position inside the crop window
+            let fy = oy as f32 + (y as f32 + 0.5) * ratio - 0.5;
+            let y0 = fy.floor().max(0.0) as usize;
+            let y1 = (y0 + 1).min(size - 1);
+            let wy = (fy - y0 as f32).clamp(0.0, 1.0);
+            for x in 0..size {
+                let fx = ox as f32 + (x as f32 + 0.5) * ratio - 0.5;
+                let x0 = fx.floor().max(0.0) as usize;
+                let x1 = (x0 + 1).min(size - 1);
+                let wx = (fx - x0 as f32).clamp(0.0, 1.0);
+                let v00 = src[y0 * size + x0];
+                let v01 = src[y0 * size + x1];
+                let v10 = src[y1 * size + x0];
+                let v11 = src[y1 * size + x1];
+                dst[y * size + x] = v00 * (1.0 - wy) * (1.0 - wx)
+                    + v01 * (1.0 - wy) * wx
+                    + v10 * wy * (1.0 - wx)
+                    + v11 * wy * wx;
+            }
+        }
+    }
+    img.copy_from_slice(&out);
+}
+
+/// Mirror each row, per channel, in place.
+fn hflip(img: &mut [f32], channels: usize, size: usize) {
+    let pix = size * size;
+    for c in 0..channels {
+        let plane = &mut img[c * pix..(c + 1) * pix];
+        for y in 0..size {
+            plane[y * size..(y + 1) * size].reverse();
+        }
+    }
+}
+
+/// Augment a whole CHW batch buffer; one independent rng stream per image
+/// (deterministic in (seed, batch index)).
+pub fn augment_batch(pixels: &mut [f32], batch: usize, channels: usize,
+                     size: usize, cfg: &AugmentConfig, seed: u64,
+                     batch_index: u64) {
+    if !cfg.enabled {
+        return;
+    }
+    let stride = channels * size * size;
+    for i in 0..batch {
+        let mut rng = Rng::new(seed ^ (batch_index.wrapping_mul(0x9E37)
+            .wrapping_add(i as u64)).wrapping_mul(0x2545_F491_4F6C_DD1D));
+        augment_image(&mut pixels[i * stride..(i + 1) * stride], channels,
+                      size, cfg, &mut rng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gradient_image(size: usize) -> Vec<f32> {
+        let mut img = vec![0f32; 3 * size * size];
+        for c in 0..3 {
+            for y in 0..size {
+                for x in 0..size {
+                    img[c * size * size + y * size + x] =
+                        x as f32 / size as f32 + c as f32;
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn disabled_is_identity() {
+        let mut img = gradient_image(16);
+        let orig = img.clone();
+        augment_image(&mut img, 3, 16, &AugmentConfig::disabled(),
+                      &mut Rng::new(1));
+        assert_eq!(img, orig);
+    }
+
+    #[test]
+    fn hflip_mirrors_and_is_involutive() {
+        let mut img = gradient_image(16);
+        let orig = img.clone();
+        hflip(&mut img, 3, 16);
+        assert!((img[0] - orig[15]).abs() < 1e-6);
+        hflip(&mut img, 3, 16);
+        for (a, b) in img.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn crop_resize_preserves_range_and_shape() {
+        let mut img = gradient_image(16);
+        random_crop_resize(&mut img, 3, 16, 12, 2, 1);
+        assert_eq!(img.len(), 3 * 16 * 16);
+        for c in 0..3 {
+            for &v in &img[c * 256..(c + 1) * 256] {
+                assert!(v >= c as f32 - 1e-4 && v <= c as f32 + 1.0 + 1e-4,
+                        "value {v} outside channel range");
+            }
+        }
+    }
+
+    #[test]
+    fn full_crop_is_near_identity() {
+        // crop == size with offset 0 should reproduce the image
+        let mut img = gradient_image(8);
+        let orig = img.clone();
+        random_crop_resize(&mut img, 3, 8, 8, 0, 0);
+        for (a, b) in img.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn augment_deterministic_per_index() {
+        let mut a = gradient_image(16);
+        let mut b = gradient_image(16);
+        let cfg = AugmentConfig::default();
+        augment_batch(&mut a, 1, 3, 16, &cfg, 7, 3);
+        augment_batch(&mut b, 1, 3, 16, &cfg, 7, 3);
+        assert_eq!(a, b);
+        let mut c = gradient_image(16);
+        augment_batch(&mut c, 1, 3, 16, &cfg, 7, 4);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn augment_changes_most_images() {
+        let mut changed = 0;
+        for i in 0..20 {
+            let mut img = gradient_image(16);
+            let orig = img.clone();
+            augment_batch(&mut img, 1, 3, 16, &AugmentConfig::default(),
+                          11, i);
+            if img != orig {
+                changed += 1;
+            }
+        }
+        assert!(changed >= 15, "only {changed}/20 augmented");
+    }
+}

@@ -1,0 +1,127 @@
+//! Batch assembly: turns the synthetic substrates into the exact
+//! `HostTensor` argument lists the AOT train/forward entries expect.
+//!
+//! One `BatchSource` per task; `next_train` / `eval_batch` return tensors
+//! in manifest input order (images+labels for ViT, tokens+targets+weights
+//! for LMs). Train and eval draw from disjoint index/stream ranges so the
+//! reported metrics are held-out.
+
+use super::augment::{augment_batch, AugmentConfig};
+use super::images::{ShapeDataset, CHANNELS, IMAGE_SIZE};
+use super::text::TextCorpus;
+use crate::runtime::ConfigMeta;
+use crate::tensor::HostTensor;
+use crate::Result;
+
+/// Offset separating eval streams from train streams.
+const EVAL_STREAM_BASE: u64 = 1 << 40;
+
+/// Task-aware batch generator bound to one model config.
+pub struct BatchSource {
+    meta: ConfigMeta,
+    images: Option<ShapeDataset>,
+    text: Option<TextCorpus>,
+    cursor: u64,
+    mask_prob: f64,
+    seed: u64,
+    /// train-time image augmentation (paper recipe: random crop + hflip);
+    /// disabled by default so short table runs stay comparable
+    augment: AugmentConfig,
+}
+
+impl BatchSource {
+    pub fn new(meta: &ConfigMeta, seed: u64) -> Self {
+        let images = meta.is_vit().then(|| ShapeDataset::new(seed));
+        let text = meta.is_lm()
+            .then(|| TextCorpus::new(meta.vocab_size, seed));
+        Self {
+            meta: meta.clone(),
+            images,
+            text,
+            cursor: 0,
+            mask_prob: 0.15,
+            seed,
+            augment: AugmentConfig::disabled(),
+        }
+    }
+
+    /// Enable the paper's train-time augmentation (eval stays clean).
+    pub fn set_augment(&mut self, cfg: AugmentConfig) {
+        self.augment = cfg;
+    }
+
+    /// Next training batch (advances the cursor). Image batches get the
+    /// train-time augmentation if enabled; eval batches never do.
+    pub fn next_train(&mut self) -> Result<Vec<HostTensor>> {
+        let b = self.meta.batch_size;
+        let mut out = self.batch_at(self.cursor, b)?;
+        if self.augment.enabled && self.images.is_some() {
+            if let crate::tensor::TensorData::F32(pixels) = &mut out[0].data {
+                augment_batch(pixels, b, CHANNELS, IMAGE_SIZE,
+                              &self.augment, self.seed,
+                              self.cursor / b.max(1) as u64);
+            }
+        }
+        self.cursor += b as u64;
+        Ok(out)
+    }
+
+    /// Deterministic held-out batch `i` (disjoint from the train range).
+    pub fn eval_batch(&self, i: u64) -> Result<Vec<HostTensor>> {
+        let b = self.meta.batch_size;
+        self.batch_at(EVAL_STREAM_BASE + i * b as u64, b)
+    }
+
+    fn batch_at(&self, start: u64, b: usize) -> Result<Vec<HostTensor>> {
+        if let Some(ds) = &self.images {
+            let mut pixels = Vec::new();
+            let mut labels = Vec::new();
+            ds.fill_batch(start, b, &mut pixels, &mut labels);
+            return Ok(vec![
+                HostTensor::f32(
+                    vec![b, CHANNELS, IMAGE_SIZE, IMAGE_SIZE], pixels)?,
+                HostTensor::i32(vec![b], labels)?,
+            ]);
+        }
+        let corpus = self.text.as_ref().expect("lm batch source");
+        let n = self.meta.seq_len;
+        let lb = if self.meta.causal {
+            corpus.causal_batch(start, b, n)
+        } else {
+            corpus.masked_batch(start, b, n, self.mask_prob)
+        };
+        Ok(vec![
+            HostTensor::i32(vec![b, n], lb.tokens)?,
+            HostTensor::i32(vec![b, n], lb.targets)?,
+            HostTensor::f32(vec![b, n], lb.weights)?,
+        ])
+    }
+
+    /// Ground-truth labels/targets+weights of an assembled batch, for
+    /// host-side metric computation against `forward` logits.
+    pub fn truth(batch: &[HostTensor]) -> Truth<'_> {
+        if batch.len() == 2 {
+            Truth::Labels(batch[1].as_i32().expect("labels i32"))
+        } else {
+            Truth::Tokens {
+                targets: batch[1].as_i32().expect("targets i32"),
+                weights: batch[2].as_f32().expect("weights f32"),
+            }
+        }
+    }
+
+    /// Inputs for the `forward` entry: everything except labels/targets.
+    pub fn forward_inputs(batch: &[HostTensor]) -> &[HostTensor] {
+        &batch[..1]
+    }
+
+    pub fn meta(&self) -> &ConfigMeta {
+        &self.meta
+    }
+}
+
+/// Ground truth view for metrics.
+pub enum Truth<'a> {
+    Labels(&'a [i32]),
+    Tokens { targets: &'a [i32], weights: &'a [f32] },
+}

@@ -1,0 +1,188 @@
+//! Synthetic ImageNet substitute: a procedural 10-class shape/texture
+//! dataset (DESIGN.md §Substitutions).
+//!
+//! Why this preserves the paper's Table-1 contrast: the ViT pipeline
+//! (patchify → token mixing → pool → classify) is identical to the
+//! ImageNet one; what the table measures is the *relative* accuracy of
+//! attention vs CAT vs CAT-Alter within a fixed backbone. The classes are
+//! designed so that global token mixing matters: some are local-texture
+//! classes (checker, dots), some need long-range aggregation (gradients,
+//! large shapes spanning many patches), so a mixer that cannot move
+//! information across the whole sequence measurably underperforms.
+//!
+//! Every image is generated from (seed, index) — infinite, deterministic,
+//! no storage. Class-balanced by construction: `label = index % 10`.
+
+use super::rng::Rng;
+
+pub const IMAGE_SIZE: usize = 32;
+pub const CHANNELS: usize = 3;
+pub const N_CLASSES: usize = 10;
+const PIX: usize = IMAGE_SIZE * IMAGE_SIZE;
+
+/// Names for reporting.
+pub const CLASS_NAMES: [&str; N_CLASSES] = [
+    "disk", "square", "cross", "h-stripes", "v-stripes",
+    "checker", "diagonal", "dots", "h-gradient", "radial",
+];
+
+/// One labeled sample: CHW f32 image in [-1, 1] plus class id.
+pub struct ImageSample {
+    pub pixels: Vec<f32>,
+    pub label: i32,
+}
+
+/// Deterministic generator: `sample(i)` is pure in (seed, i).
+#[derive(Debug, Clone)]
+pub struct ShapeDataset {
+    seed: u64,
+    /// additive pixel noise amplitude (makes the task non-trivial)
+    pub noise: f32,
+}
+
+impl ShapeDataset {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, noise: 0.35 }
+    }
+
+    pub fn sample(&self, index: u64) -> ImageSample {
+        let label = (index % N_CLASSES as u64) as usize;
+        let mut rng = Rng::new(self.seed ^ index.wrapping_mul(0x9E37_79B9));
+        let pixels = self.render(label, &mut rng);
+        ImageSample { pixels, label: label as i32 }
+    }
+
+    /// Render one CHW image of class `label` with randomized pose/colors.
+    fn render(&self, label: usize, rng: &mut Rng) -> Vec<f32> {
+        let s = IMAGE_SIZE as f32;
+        // random foreground/background colors, kept separated
+        let bg: [f32; 3] = [rng.range_f32(-0.8, 0.0),
+                            rng.range_f32(-0.8, 0.0),
+                            rng.range_f32(-0.8, 0.0)];
+        let fg: [f32; 3] = [rng.range_f32(0.2, 1.0),
+                            rng.range_f32(0.2, 1.0),
+                            rng.range_f32(0.2, 1.0)];
+        let cx = rng.range_f32(0.35 * s, 0.65 * s);
+        let cy = rng.range_f32(0.35 * s, 0.65 * s);
+        let r = rng.range_f32(0.2 * s, 0.38 * s);
+        let period = 2 + rng.below(4);           // stripe/checker period
+        let phase = rng.below(period);
+        let thick = 1.0 + rng.range_f32(0.0, 2.5);
+        let mut img = vec![0f32; CHANNELS * PIX];
+        for y in 0..IMAGE_SIZE {
+            for x in 0..IMAGE_SIZE {
+                let fx = x as f32 + 0.5;
+                let fy = y as f32 + 0.5;
+                let dx = fx - cx;
+                let dy = fy - cy;
+                let inside = match label {
+                    0 => dx * dx + dy * dy <= r * r,                // disk
+                    1 => dx.abs() <= r * 0.8 && dy.abs() <= r * 0.8, // square
+                    2 => dx.abs() <= thick || dy.abs() <= thick,     // cross
+                    3 => (y / period + phase) % 2 == 0,              // h-stripes
+                    4 => (x / period + phase) % 2 == 0,              // v-stripes
+                    5 => ((x / period) + (y / period) + phase) % 2 == 0, // checker
+                    6 => (dx - dy).abs() <= thick * 1.5,             // diagonal
+                    7 => {
+                        // dot lattice
+                        let gx = (x % 8) as f32 - 4.0;
+                        let gy = (y % 8) as f32 - 4.0;
+                        gx * gx + gy * gy <= 4.0
+                    }
+                    8 => false,                                      // gradient
+                    9 => false,                                      // radial
+                    _ => unreachable!(),
+                };
+                let t = match label {
+                    8 => fx / s,                                     // h-gradient
+                    9 => 1.0 - ((dx * dx + dy * dy).sqrt() / (0.7 * s)).min(1.0),
+                    _ => inside as u8 as f32,
+                };
+                for c in 0..CHANNELS {
+                    img[c * PIX + y * IMAGE_SIZE + x] =
+                        bg[c] + (fg[c] - bg[c]) * t;
+                }
+            }
+        }
+        // additive noise
+        for v in img.iter_mut() {
+            *v = (*v + self.noise * rng.normal()).clamp(-1.5, 1.5);
+        }
+        img
+    }
+
+    /// Fill flat CHW batch buffers starting at sample `start`.
+    pub fn fill_batch(&self, start: u64, batch: usize,
+                      pixels: &mut Vec<f32>, labels: &mut Vec<i32>) {
+        pixels.clear();
+        labels.clear();
+        pixels.reserve(batch * CHANNELS * PIX);
+        for i in 0..batch {
+            let s = self.sample(start + i as u64);
+            pixels.extend_from_slice(&s.pixels);
+            labels.push(s.label);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_index() {
+        let d = ShapeDataset::new(1);
+        let a = d.sample(12);
+        let b = d.sample(12);
+        assert_eq!(a.pixels, b.pixels);
+        assert_eq!(a.label, b.label);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let d = ShapeDataset::new(1);
+        for i in 0..30 {
+            assert_eq!(d.sample(i).label, (i % 10) as i32);
+        }
+    }
+
+    #[test]
+    fn pixel_range_and_size() {
+        let d = ShapeDataset::new(2);
+        let s = d.sample(5);
+        assert_eq!(s.pixels.len(), 3 * 32 * 32);
+        assert!(s.pixels.iter().all(|p| p.is_finite() && p.abs() <= 1.5));
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // mean-pixel statistics differ between e.g. stripes and gradient
+        let d = ShapeDataset::new(3);
+        let var = |class: u64| -> f32 {
+            let s = d.sample(class);
+            let m = s.pixels.iter().sum::<f32>() / s.pixels.len() as f32;
+            s.pixels.iter().map(|p| (p - m).powi(2)).sum::<f32>()
+                / s.pixels.len() as f32
+        };
+        // different draws of the same class with different seeds differ too
+        assert!((var(3) - var(8)).abs() > 1e-4);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = ShapeDataset::new(1).sample(0);
+        let b = ShapeDataset::new(2).sample(0);
+        assert_ne!(a.pixels, b.pixels);
+    }
+
+    #[test]
+    fn fill_batch_layout() {
+        let d = ShapeDataset::new(4);
+        let mut px = Vec::new();
+        let mut lb = Vec::new();
+        d.fill_batch(10, 4, &mut px, &mut lb);
+        assert_eq!(px.len(), 4 * 3 * 32 * 32);
+        assert_eq!(lb, vec![0, 1, 2, 3]);
+        assert_eq!(&px[..3 * 32 * 32], &d.sample(10).pixels[..]);
+    }
+}

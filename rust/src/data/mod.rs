@@ -1,0 +1,23 @@
+//! Data substrates: everything the paper's evaluation consumes, built from
+//! scratch (DESIGN.md §Substitutions maps each to its paper counterpart).
+//!
+//! * [`rng`] — deterministic SplitMix64 PRNG + Zipf sampler
+//! * [`images`] — procedural 10-class ImageNet substitute
+//! * [`text`] — Zipf-Markov corpus with planted long-range copies
+//!   (WikiText-103 substitute), masked/causal batch preparation
+//! * [`tokenizer`] — word-level tokenizer with byte fallback (serving path)
+//! * [`batch`] — manifest-ordered batch assembly per task
+
+pub mod augment;
+pub mod batch;
+pub mod images;
+pub mod rng;
+pub mod text;
+pub mod tokenizer;
+
+pub use augment::AugmentConfig;
+pub use batch::{BatchSource, Truth};
+pub use images::ShapeDataset;
+pub use rng::{Rng, Zipf};
+pub use text::TextCorpus;
+pub use tokenizer::Tokenizer;

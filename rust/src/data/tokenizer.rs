@@ -1,0 +1,163 @@
+//! Word-level tokenizer with frequency-built vocabulary and byte-level
+//! fallback — the serving-path substrate (`examples/serve.rs`) that maps
+//! user strings onto the synthetic-corpus id space.
+//!
+//! Ids 0..3 are reserved (PAD/MASK/COPY_MARK, matching `data::text`);
+//! unknown words degrade to per-byte ids hashed into a fixed fallback
+//! band so tokenization is total (never fails) and deterministic.
+
+use std::collections::HashMap;
+
+use super::text::FIRST_WORD;
+
+/// Frequency-ranked word vocabulary.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, i32>,
+    max_id: i32,
+    /// first id of the byte-fallback band (top 256 ids)
+    fallback_base: i32,
+}
+
+impl Tokenizer {
+    /// Build from a corpus of text: rank words by frequency, keep the top
+    /// `vocab_size - FIRST_WORD - 256` as real words, reserve the top 256
+    /// ids as the byte-fallback band.
+    pub fn build(texts: &[&str], vocab_size: usize) -> Self {
+        assert!(vocab_size > FIRST_WORD as usize + 256 + 16,
+                "vocab too small for fallback band");
+        let mut freq: HashMap<String, u64> = HashMap::new();
+        for t in texts {
+            for w in t.split_whitespace() {
+                let w = normalize(w);
+                if !w.is_empty() {
+                    *freq.entry(w).or_insert(0) += 1;
+                }
+            }
+        }
+        let mut words: Vec<(String, u64)> = freq.into_iter().collect();
+        words.sort_by(|a, b| b.1.cmp(&a.1).then_with(|| a.0.cmp(&b.0)));
+        let fallback_base = (vocab_size - 256) as i32;
+        let keep = (fallback_base - FIRST_WORD) as usize;
+        words.truncate(keep);
+        let vocab: Vec<String> = words.into_iter().map(|(w, _)| w).collect();
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), FIRST_WORD + i as i32))
+            .collect();
+        Self { vocab, index, max_id: vocab_size as i32 - 1, fallback_base }
+    }
+
+    pub fn vocab_len(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Tokenize a string; unknown words emit one byte-band id per byte.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::new();
+        for w in text.split_whitespace() {
+            let w = normalize(w);
+            if w.is_empty() {
+                continue;
+            }
+            if let Some(&id) = self.index.get(&w) {
+                out.push(id);
+            } else {
+                for b in w.bytes() {
+                    out.push(self.fallback_base + b as i32);
+                }
+            }
+        }
+        out
+    }
+
+    /// Best-effort decode (fallback ids render as `<bXX>`).
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut parts = Vec::with_capacity(ids.len());
+        for &id in ids {
+            if id >= self.fallback_base && id <= self.max_id {
+                parts.push(format!("<b{:02x}>", id - self.fallback_base));
+            } else if id >= FIRST_WORD
+                && ((id - FIRST_WORD) as usize) < self.vocab.len() {
+                parts.push(self.vocab[(id - FIRST_WORD) as usize].clone());
+            } else {
+                parts.push(format!("<{id}>"));
+            }
+        }
+        parts.join(" ")
+    }
+
+    /// Pad/truncate ids to exactly `n` (PAD = 0 on the right).
+    pub fn fit(&self, mut ids: Vec<i32>, n: usize) -> Vec<i32> {
+        ids.truncate(n);
+        ids.resize(n, 0);
+        ids
+    }
+}
+
+fn normalize(w: &str) -> String {
+    w.chars()
+        .filter(|c| c.is_alphanumeric())
+        .flat_map(|c| c.to_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::build(
+            &["the cat sat on the mat", "the dog sat on the log",
+              "cat and dog and cat"],
+            1024)
+    }
+
+    #[test]
+    fn frequent_words_get_small_ids() {
+        let t = tok();
+        let the = t.encode("the")[0];
+        let log = t.encode("log")[0];
+        assert!(the < log, "the={the} log={log}");
+        assert!(the >= FIRST_WORD);
+    }
+
+    #[test]
+    fn roundtrip_known_words() {
+        let t = tok();
+        let ids = t.encode("the cat sat");
+        assert_eq!(t.decode(&ids), "the cat sat");
+    }
+
+    #[test]
+    fn unknown_words_fall_back_to_bytes() {
+        let t = tok();
+        let ids = t.encode("zebra");
+        assert_eq!(ids.len(), "zebra".len());
+        assert!(ids.iter().all(|&i| i >= 1024 - 256 && i < 1024));
+    }
+
+    #[test]
+    fn encode_total_and_deterministic() {
+        let t = tok();
+        assert_eq!(t.encode("Hello, WORLD!"), t.encode("hello world"));
+        assert!(t.encode("").is_empty());
+    }
+
+    #[test]
+    fn fit_pads_and_truncates() {
+        let t = tok();
+        assert_eq!(t.fit(vec![5, 6], 4), vec![5, 6, 0, 0]);
+        assert_eq!(t.fit(vec![5, 6, 7, 8, 9], 3), vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let t = tok();
+        for &id in t.encode("the unknownword cat qq").iter() {
+            assert!((0..1024).contains(&id));
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! # cat-transformer — CAT: Circular-Convolutional Attention
+//!
+//! Rust + JAX + Pallas reproduction of *"CAT: Circular-Convolutional
+//! Attention for Sub-Quadratic Transformers"* (Yamada, NIPS 2025).
+//!
+//! Three-layer architecture (see `DESIGN.md`):
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the circulant
+//!   gather/FFT applies, fused attention baseline, LayerNorm.
+//! * **L2** — JAX model zoo (`python/compile/`): ViT + masked/causal LM over
+//!   six attention mechanisms, AdamW train step; AOT-lowered to HLO text.
+//! * **L3** — this crate: the coordinator. It owns the PJRT runtime
+//!   ([`runtime`]), the synthetic data substrates the paper's benchmarks
+//!   need ([`data`]), the training orchestrator ([`train`]), a serving
+//!   router + dynamic batcher ([`coordinator`]), metrics ([`metrics`]),
+//!   and the analytic complexity models behind Fig. 1 ([`complexity`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers every
+//! model once; the binaries here load `artifacts/*.hlo.txt` through the
+//! `xla` crate's PJRT CPU client and drive training/serving from rust.
+
+pub mod bench;
+pub mod cli;
+pub mod complexity;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod json;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+
+/// Crate-wide result type (anyhow for rich error reports).
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default artifact directory, overridable with `CAT_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("CAT_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

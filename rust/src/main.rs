@@ -1,0 +1,240 @@
+//! `cat` — the CAT coordinator CLI.
+//!
+//! Subcommands map 1:1 onto the paper's evaluation (DESIGN.md §5):
+//!
+//! ```text
+//! cat list                      # artifact registry
+//! cat train  --config NAME      # train one model, log loss + metric
+//! cat eval   --config NAME      # evaluate from a checkpoint
+//! cat serve  --config NAME      # batched inference demo over the router
+//! cat table1 [--fast]           # ImageNet-proxy grid   (Table 1)
+//! cat table2 [--fast]           # WikiText-proxy grid   (Table 2)
+//! cat table3                    # ablation grid         (Table 3 / Fig 2)
+//! cat complexity                # analytic Fig.-1 series
+//! ```
+
+use cat::cli;
+use cat::complexity::{crossover_n, layer_cost, Mechanism};
+use cat::coordinator::{ServeOptions, Server};
+use cat::data::ShapeDataset;
+use cat::harness;
+use cat::runtime::{Runtime, TrainState};
+use cat::tensor::HostTensor;
+use cat::train::{Schedule, TrainOptions, Trainer};
+
+const USAGE: &str = "usage: cat <command> [flags]
+commands:
+  list         list every artifact config in the manifest
+  train        --config NAME [--steps N] [--lr F] [--seed N]
+               [--checkpoint PATH] [--fused] [--augment]
+  eval         --config NAME [--checkpoint PATH] [--batches N] [--seed N]
+  serve        [--config NAME] [--requests N]
+  table1       [--fast] [--steps N] [--json PATH]    (paper Table 1)
+  table2       [--fast] [--steps N] [--json PATH]    (paper Table 2)
+  table3       [--steps N] [--json PATH]             (paper Table 3 / Fig 2)
+  complexity                                          (paper Fig 1)
+  validate     [--deep]   check manifest/artifact consistency
+global: --artifacts DIR (or env CAT_ARTIFACTS)";
+
+const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
+                          "batches", "requests", "json", "artifacts"];
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        eprintln!("\n{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> cat::Result<()> {
+    let args = cli::parse(VALUED)?;
+    if let Some(dir) = args.get("artifacts") {
+        std::env::set_var("CAT_ARTIFACTS", dir);
+    }
+    let cmd = args.expect_command(
+        &["list", "train", "eval", "serve", "table1", "table2", "table3",
+          "complexity", "validate"])?;
+    match cmd {
+        "list" => cmd_list(),
+        "validate" => {
+            let report = cat::runtime::validate(&cat::artifacts_dir(),
+                                                args.has("deep"))?;
+            print!("{}", report.render());
+            anyhow::ensure!(report.ok(), "artifact validation failed");
+            Ok(())
+        }
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
+        "table1" => cmd_table(&args, 1),
+        "table2" => cmd_table(&args, 2),
+        "table3" => cmd_table(&args, 3),
+        "complexity" => cmd_complexity(),
+        _ => unreachable!("validated above"),
+    }
+}
+
+fn cmd_list() -> cat::Result<()> {
+    let rt = Runtime::from_env()?;
+    println!("platform: {}", rt.platform());
+    for name in rt.manifest.names() {
+        let c = rt.manifest.config(name)?;
+        println!("{name:<28} task={:<10} mech={:<10} d={} h={} L={} \
+                  params={}",
+                 c.task, c.mechanism, c.d_model, c.n_heads, c.n_layers,
+                 c.param_count);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &cli::Args) -> cat::Result<()> {
+    let config = args.require("config")?;
+    let steps: u64 = args.parse_or("steps", 200)?;
+    let lr: f32 = args.parse_or("lr", 1e-3)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let rt = Runtime::from_env()?;
+    let mut trainer = Trainer::new(&rt, config, seed)?;
+    if args.has("augment") {
+        trainer.source_mut()
+            .set_augment(cat::data::AugmentConfig::default());
+    }
+    let opts = TrainOptions {
+        steps,
+        schedule: Schedule::new(lr, (steps / 10).max(1), steps),
+        seed,
+        eval_every: (steps / 4).max(1),
+        ..Default::default()
+    };
+    let report = if args.has("fused") {
+        trainer.run_fused(&opts, 8)?
+    } else {
+        trainer.run(&opts)?
+    };
+    println!("steps: {} wall: {:.1}s ({:.2} steps/s)",
+             report.steps_done, report.wall_seconds,
+             report.steps_per_sec());
+    if let Some((k, v)) = report.final_metric() {
+        println!("final {k}: {v:.4}");
+    }
+    if let Some(path) = args.get("checkpoint") {
+        trainer.state.save(std::path::Path::new(path))?;
+        println!("checkpoint -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &cli::Args) -> cat::Result<()> {
+    let config = args.require("config")?;
+    let batches: u64 = args.parse_or("batches", 16)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let rt = Runtime::from_env()?;
+    let mut trainer = Trainer::new(&rt, config, seed)?;
+    if let Some(path) = args.get("checkpoint") {
+        trainer.state = TrainState::load(std::path::Path::new(path))?;
+    }
+    let (k, v) = trainer.eval(batches)?;
+    println!("{k}: {v:.4}");
+    Ok(())
+}
+
+fn cmd_table(args: &cli::Args, which: u8) -> cat::Result<()> {
+    let rt = Runtime::from_env()?;
+    let default_steps = if which == 2 { 200 } else { 300 };
+    let steps: u64 = args.parse_or("steps", default_steps)?;
+    let (names, title, evals) = match which {
+        1 => (harness::table1_names(args.has("fast")),
+              "Table 1 — ImageNet-proxy, ViT (accuracy up)", 16),
+        2 => (harness::table2_names(args.has("fast")),
+              "Table 2 — WikiText-proxy LM (word PPL down)", 8),
+        _ => (harness::table3_names(),
+              "Table 3 / Fig. 2 — circular qkv ablation (ViT-L proxy, avg)",
+              16),
+    };
+    let rows = harness::run_grid(&rt, &names, steps, 0, evals)?;
+    print!("{}", harness::render_table(title, &rows));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path,
+                       harness::rows_to_json(&rows).to_string_pretty())?;
+        eprintln!("rows -> {path}");
+    }
+    Ok(())
+}
+
+fn cmd_complexity() -> cat::Result<()> {
+    println!("Fig. 1 analytic series (d=512, h=8): FLOPs per layer");
+    println!("{:>6} {:>14} {:>14} {:>14} {:>8}",
+             "N", "attention", "cat_gather", "cat_fft", "ratio");
+    for p in 6..13 {
+        let n = 1usize << p;
+        let a = layer_cost(Mechanism::Attention, n, 512, 8).flops;
+        let g = layer_cost(Mechanism::CatGather, n, 512, 8).flops;
+        let c = layer_cost(Mechanism::CatFft, n, 512, 8).flops;
+        println!("{n:>6} {a:>14.3e} {g:>14.3e} {c:>14.3e} {:>8.2}", a / c);
+    }
+    println!("modeled FLOP crossover (cat_fft < attention): N = {}",
+             crossover_n(512, 8));
+    Ok(())
+}
+
+/// Spin the router + one worker, fire `requests` single-image requests
+/// from client threads, report latency/throughput and batching efficiency.
+fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
+    let config = args.get_or("config", "vit_b_avg_cat").to_string();
+    let requests: usize = args.parse_or("requests", 256)?;
+    let rt = Runtime::from_env()?;
+    let meta = rt.config(&config)?.clone();
+    anyhow::ensure!(meta.is_vit(), "serve demo expects a ViT config");
+    drop(rt); // the worker thread builds its own runtime (xla is !Send)
+
+    let server = Server::spawn(cat::artifacts_dir(), &[config.clone()],
+                               ServeOptions::default(), 0)?;
+    let handle = server.handle();
+    let ds = ShapeDataset::new(123);
+    let t0 = std::time::Instant::now();
+    let n_clients = 8usize;
+    let per_client = requests / n_clients;
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let h = handle.clone();
+        let ds = ds.clone();
+        let model = config.clone();
+        clients.push(std::thread::spawn(move || -> cat::Result<usize> {
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let sample = ds.sample((c * per_client + i) as u64);
+                let input = HostTensor::f32(vec![3, 32, 32], sample.pixels)?;
+                let logits = h.infer(&model, input)?;
+                let row = logits.as_f32()?;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite"))
+                    .map(|(j, _)| j as i32)
+                    .expect("nonempty");
+                correct += (pred == sample.label) as usize;
+            }
+            Ok(correct)
+        }));
+    }
+    let mut correct = 0usize;
+    for c in clients {
+        correct += c.join().expect("client thread")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(handle);
+    let stats = server.shutdown();
+    let served = n_clients * per_client;
+    println!("served {served} requests in {wall:.2}s ({:.1} req/s)",
+             served as f64 / wall);
+    println!("accuracy (untrained init): {:.3}",
+             correct as f64 / served as f64);
+    for s in stats {
+        println!("worker {}: {} reqs / {} batches, occupancy {:.2}, \
+                  p50 {}us p99 {}us max {}us",
+                 s.model, s.requests, s.batches, s.mean_occupancy,
+                 s.latency.quantile_us(0.5), s.latency.quantile_us(0.99),
+                 s.latency.max_us());
+    }
+    Ok(())
+}

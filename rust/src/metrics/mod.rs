@@ -1,0 +1,265 @@
+//! Host-side metrics: classification accuracy, masked/causal perplexity,
+//! loss curves, and latency histograms for the serving path.
+
+use crate::data::Truth;
+use crate::tensor::HostTensor;
+use crate::Result;
+use anyhow::bail;
+
+/// Top-1 accuracy from (B, C) logits and (B,) labels.
+pub fn accuracy(logits: &HostTensor, labels: &[i32]) -> Result<f64> {
+    let [b, c] = logits.shape[..] else {
+        bail!("accuracy expects rank-2 logits, got {:?}", logits.shape)
+    };
+    if b != labels.len() {
+        bail!("batch mismatch: {b} logits vs {} labels", labels.len());
+    }
+    let data = logits.as_f32()?;
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &data[i * c..(i + 1) * c];
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite logits"))
+            .map(|(j, _)| j)
+            .expect("non-empty row");
+        if argmax == label as usize {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / b as f64)
+}
+
+/// Weighted token cross-entropy from (B, N, V) logits; returns
+/// (total_nll, total_weight). Perplexity = exp(total_nll / total_weight).
+pub fn token_nll(logits: &HostTensor, targets: &[i32], weights: &[f32])
+                 -> Result<(f64, f64)> {
+    let [b, n, v] = logits.shape[..] else {
+        bail!("token_nll expects rank-3 logits, got {:?}", logits.shape)
+    };
+    if b * n != targets.len() || targets.len() != weights.len() {
+        bail!("target/weight length mismatch");
+    }
+    let data = logits.as_f32()?;
+    let mut nll = 0.0f64;
+    let mut wsum = 0.0f64;
+    for i in 0..b * n {
+        let w = weights[i] as f64;
+        if w == 0.0 {
+            continue;
+        }
+        let row = &data[i * v..(i + 1) * v];
+        // stable log-softmax at the target index
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let logp = (row[targets[i] as usize] as f64) - m - lse.ln();
+        nll -= w * logp;
+        wsum += w;
+    }
+    Ok((nll, wsum))
+}
+
+/// Accumulates evaluation over batches; reports accuracy or word PPL.
+#[derive(Debug, Default, Clone)]
+pub struct EvalAccumulator {
+    correct_frac_sum: f64,
+    batches: usize,
+    nll: f64,
+    weight: f64,
+}
+
+impl EvalAccumulator {
+    pub fn update(&mut self, logits: &HostTensor, truth: &Truth<'_>)
+                  -> Result<()> {
+        match truth {
+            Truth::Labels(labels) => {
+                self.correct_frac_sum += accuracy(logits, labels)?;
+                self.batches += 1;
+            }
+            Truth::Tokens { targets, weights } => {
+                let (nll, w) = token_nll(logits, targets, weights)?;
+                self.nll += nll;
+                self.weight += w;
+                self.batches += 1;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn accuracy(&self) -> Option<f64> {
+        (self.batches > 0 && self.weight == 0.0)
+            .then(|| self.correct_frac_sum / self.batches as f64)
+    }
+
+    pub fn perplexity(&self) -> Option<f64> {
+        (self.weight > 0.0).then(|| (self.nll / self.weight).exp())
+    }
+
+    /// The headline metric, whichever task this is.
+    pub fn headline(&self) -> Option<(&'static str, f64)> {
+        self.accuracy()
+            .map(|a| ("acc", a))
+            .or_else(|| self.perplexity().map(|p| ("ppl", p)))
+    }
+}
+
+/// Simple power-of-two latency histogram (microseconds).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self { buckets: vec![0; 32], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: std::time::Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(31);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_us as f64 / self.count as f64 }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q * self.count as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return 1u64 << i;
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Running loss curve with EMA smoothing for progress logs.
+#[derive(Debug, Clone)]
+pub struct LossCurve {
+    pub steps: Vec<u64>,
+    pub losses: Vec<f32>,
+    ema: Option<f64>,
+    alpha: f64,
+}
+
+impl Default for LossCurve {
+    fn default() -> Self {
+        Self { steps: vec![], losses: vec![], ema: None, alpha: 0.05 }
+    }
+}
+
+impl LossCurve {
+    pub fn push(&mut self, step: u64, loss: f32) {
+        self.steps.push(step);
+        self.losses.push(loss);
+        let l = loss as f64;
+        self.ema = Some(match self.ema {
+            None => l,
+            Some(e) => e + self.alpha * (l - e),
+        });
+    }
+
+    pub fn ema(&self) -> Option<f64> {
+        self.ema
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        self.losses.last().copied()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.losses.iter().all(|l| l.is_finite())
+    }
+
+    /// First step at which loss became non-finite (divergence detection,
+    /// used by the Sec. 5.5 linear-attention instability experiment).
+    pub fn first_divergence(&self) -> Option<u64> {
+        self.steps
+            .iter()
+            .zip(&self.losses)
+            .find(|(_, l)| !l.is_finite())
+            .map(|(s, _)| *s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn accuracy_counts_argmax() {
+        let logits = HostTensor::f32(
+            vec![2, 3], vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.3]).unwrap();
+        assert_eq!(accuracy(&logits, &[1, 0]).unwrap(), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0]).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn token_nll_uniform_logits() {
+        // uniform logits over V=4 -> nll = ln 4 per weighted token
+        let logits = HostTensor::f32(vec![1, 2, 4], vec![0.0; 8]).unwrap();
+        let (nll, w) = token_nll(&logits, &[0, 3], &[1.0, 1.0]).unwrap();
+        assert!((nll / w - (4f64).ln()).abs() < 1e-9);
+        let (_, w0) = token_nll(&logits, &[0, 3], &[0.0, 1.0]).unwrap();
+        assert_eq!(w0, 1.0);
+    }
+
+    #[test]
+    fn eval_accumulator_ppl() {
+        let logits = HostTensor::f32(vec![1, 2, 4], vec![0.0; 8]).unwrap();
+        let mut acc = EvalAccumulator::default();
+        let targets = [0, 1];
+        let weights = [1.0, 1.0];
+        acc.update(&logits, &Truth::Tokens { targets: &targets,
+                                             weights: &weights }).unwrap();
+        let ppl = acc.perplexity().unwrap();
+        assert!((ppl - 4.0).abs() < 1e-9);
+        assert_eq!(acc.headline().unwrap().0, "ppl");
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::default();
+        for us in [10u64, 100, 1000, 10_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 4);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn loss_curve_divergence() {
+        let mut c = LossCurve::default();
+        c.push(1, 2.0);
+        c.push(2, f32::NAN);
+        assert!(!c.is_finite());
+        assert_eq!(c.first_divergence(), Some(2));
+    }
+}

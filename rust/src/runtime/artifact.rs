@@ -1,0 +1,263 @@
+//! Manifest parsing: the contract with `python/compile/aot.py`.
+//!
+//! `artifacts/manifest.json` describes every AOT-lowered entry point — file
+//! name, ordered input/output tensor specs, parameter flattening — plus the
+//! model configuration it was lowered from. Parsed with the in-tree JSON
+//! substrate ([`crate::json`]); this module is pure data, the PJRT plumbing
+//! lives in [`super::client`].
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context};
+
+use crate::json::Json;
+use crate::tensor::DType;
+use crate::Result;
+
+/// One tensor in an entry signature (call order is the Vec order).
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(Self {
+            name: v.req("name")?.as_str()?.to_string(),
+            shape: v.req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+        })
+    }
+
+    pub fn dtype(&self) -> Result<DType> {
+        DType::from_manifest(&self.dtype)
+    }
+
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered entry point (init / forward / train_step / train_k8).
+#[derive(Debug, Clone)]
+pub struct EntryMeta {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntryMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        Ok(Self {
+            file: v.req("file")?.as_str()?.to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+        })
+    }
+}
+
+/// Model configuration echoed into the manifest by aot.py.
+#[derive(Debug, Clone)]
+pub struct ConfigMeta {
+    pub task: String,
+    pub mechanism: String,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub n_tokens: usize,
+    pub pool: String,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub n_classes: usize,
+    pub n_channels: usize,
+    pub vocab_size: usize,
+    pub cat_impl: String,
+    pub batch_size: usize,
+    pub grad_clip: f64,
+    pub weight_decay: f64,
+    pub causal: bool,
+    pub param_count: usize,
+    pub params: Vec<TensorSpec>,
+    pub entries: BTreeMap<String, EntryMeta>,
+}
+
+impl ConfigMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let entries = v.req("entries")?
+            .as_obj()?
+            .iter()
+            .map(|(k, e)| Ok((k.clone(), EntryMeta::from_json(e)?)))
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Self {
+            task: v.req("task")?.as_str()?.to_string(),
+            mechanism: v.req("mechanism")?.as_str()?.to_string(),
+            d_model: v.req("d_model")?.as_usize()?,
+            n_heads: v.req("n_heads")?.as_usize()?,
+            n_layers: v.req("n_layers")?.as_usize()?,
+            seq_len: v.req("seq_len")?.as_usize()?,
+            n_tokens: v.req("n_tokens")?.as_usize()?,
+            pool: v.req("pool")?.as_str()?.to_string(),
+            image_size: v.req("image_size")?.as_usize()?,
+            patch_size: v.req("patch_size")?.as_usize()?,
+            n_classes: v.req("n_classes")?.as_usize()?,
+            n_channels: v.req("n_channels")?.as_usize()?,
+            vocab_size: v.req("vocab_size")?.as_usize()?,
+            cat_impl: v.req("cat_impl")?.as_str()?.to_string(),
+            batch_size: v.req("batch_size")?.as_usize()?,
+            grad_clip: v.req("grad_clip")?.as_f64()?,
+            weight_decay: v.req("weight_decay")?.as_f64()?,
+            causal: v.req("causal")?.as_bool()?,
+            param_count: v.req("param_count")?.as_usize()?,
+            params: v.req("params")?
+                .as_arr()?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<_>>()?,
+            entries,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntryMeta> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("entry '{name}' not in manifest"))
+    }
+
+    pub fn is_vit(&self) -> bool {
+        self.task == "vit"
+    }
+
+    pub fn is_lm(&self) -> bool {
+        self.task.starts_with("lm_")
+    }
+
+    /// Number of flattened parameter leaves.
+    pub fn n_param_leaves(&self) -> usize {
+        self.params.len()
+    }
+}
+
+/// The whole artifact registry.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub configs: BTreeMap<String, ConfigMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = crate::json::parse(text).context("parsing manifest.json")?;
+        let configs = v.req("configs")?
+            .as_obj()?
+            .iter()
+            .map(|(name, c)| {
+                let meta = ConfigMeta::from_json(c)
+                    .with_context(|| format!("config '{name}'"))?;
+                Ok((name.clone(), meta))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Self {
+            version: v.req("version")?.as_usize()? as u32,
+            configs,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make \
+                                      artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.configs
+            .get(name)
+            .ok_or_else(|| anyhow!("config '{name}' not in manifest \
+                                    ({} known)", self.configs.len()))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.configs.keys()
+    }
+
+    /// Absolute path of one entry's HLO text file.
+    pub fn hlo_path(&self, dir: &Path, config: &str, entry: &str)
+                    -> Result<PathBuf> {
+        let c = self.config(config)?;
+        let e = c.entry(entry)?;
+        Ok(dir.join(&e.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {
+        "m": {
+          "task": "vit", "mechanism": "cat", "d_model": 64,
+          "n_heads": 4, "n_layers": 2, "seq_len": 0, "n_tokens": 64,
+          "pool": "avg", "image_size": 32, "patch_size": 4,
+          "n_classes": 10, "n_channels": 3, "vocab_size": 1024,
+          "cat_impl": "fft", "batch_size": 8, "grad_clip": 0.0,
+          "weight_decay": 0.0001, "causal": false, "param_count": 123,
+          "params": [{"name": "['a']", "shape": [2, 3], "dtype": "f32"}],
+          "entries": {
+            "forward": {
+              "file": "m.forward.hlo.txt",
+              "inputs": [{"name": "['a']", "shape": [2,3], "dtype": "f32"},
+                         {"name": "images", "shape": [8,3,32,32],
+                          "dtype": "f32"}],
+              "outputs": [{"name": "logits", "shape": [8,10],
+                           "dtype": "f32"}]
+            }
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let c = m.config("m").unwrap();
+        assert!(c.is_vit());
+        assert_eq!(c.n_param_leaves(), 1);
+        let e = c.entry("forward").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.outputs[0].num_elements(), 80);
+        assert!(m.config("nope").is_err());
+        assert!(c.entry("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_roundtrip() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let spec = &m.config("m").unwrap().params[0];
+        assert_eq!(spec.dtype().unwrap(), DType::F32);
+    }
+
+    #[test]
+    fn missing_key_reports_config_name() {
+        let bad = r#"{"version": 1, "configs": {"broken": {"task": "vit"}}}"#;
+        let err = Manifest::parse(bad).unwrap_err().to_string();
+        assert!(err.contains("broken"), "{err}");
+    }
+}

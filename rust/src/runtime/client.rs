@@ -1,0 +1,136 @@
+//! The PJRT runtime: loads HLO-text artifacts, compiles them once on the
+//! CPU PJRT client, caches executables, and executes with host tensors.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`;
+//! outputs come back as one tuple literal (aot.py lowers with
+//! `return_tuple=True`) which we decompose into per-output literals.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context};
+
+use super::artifact::{ConfigMeta, EntryMeta, Manifest};
+use crate::tensor::HostTensor;
+use crate::Result;
+
+/// A compiled entry point plus its manifest signature.
+pub struct Executable {
+    pub config: String,
+    pub entry: String,
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// cumulative execute statistics (count, total seconds)
+    stats: Mutex<(u64, f64)>,
+}
+
+impl Executable {
+    /// Execute with literal inputs (owned or borrowed); returns decomposed
+    /// output literals.
+    pub fn execute_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("{}.{}: got {} inputs, manifest says {}",
+                  self.config, self.entry, inputs.len(),
+                  self.meta.inputs.len());
+        }
+        let t0 = Instant::now();
+        let result = self.exe.execute::<L>(inputs)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut s = self.stats.lock().unwrap();
+        s.0 += 1;
+        s.1 += dt;
+        if outs.len() != self.meta.outputs.len() {
+            bail!("{}.{}: got {} outputs, manifest says {}",
+                  self.config, self.entry, outs.len(),
+                  self.meta.outputs.len());
+        }
+        Ok(outs)
+    }
+
+    /// Execute with host tensors (convenience for data-pipeline callers).
+    pub fn execute(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let outs = self.execute_literals(&lits)?;
+        outs.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// (calls, total seconds) since creation.
+    pub fn exec_stats(&self) -> (u64, f64) {
+        *self.stats.lock().unwrap()
+    }
+}
+
+/// Owns the PJRT client and an executable cache keyed by (config, entry).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(dir: impl Into<PathBuf>) -> Result<Self> {
+        let dir = dir.into();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Self { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Create from the default artifact directory (env `CAT_ARTIFACTS`).
+    pub fn from_env() -> Result<Self> {
+        Self::new(crate::artifacts_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ConfigMeta> {
+        self.manifest.config(name)
+    }
+
+    /// Compile (or fetch from cache) one entry point.
+    pub fn load(&self, config: &str, entry: &str) -> Result<Arc<Executable>> {
+        let key = (config.to_string(), entry.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let meta = self.manifest.config(config)?.entry(entry)?.clone();
+        let path = self.dir.join(&meta.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 artifact path"))
+            .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+            .context("run `make artifacts`?")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {config}.{entry}: {e}"))?;
+        let compiled = Arc::new(Executable {
+            config: config.to_string(),
+            entry: entry.to_string(),
+            meta,
+            exe,
+            stats: Mutex::new((0, 0.0)),
+        });
+        eprintln!("[runtime] compiled {config}.{entry} in {:.2}s",
+                  t0.elapsed().as_secs_f64());
+        self.cache.lock().unwrap().insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Number of cached executables (diagnostics).
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

@@ -1,0 +1,17 @@
+//! PJRT runtime layer: artifact manifest, executable cache, training state.
+//!
+//! ```no_run
+//! use cat::runtime::Runtime;
+//! let rt = Runtime::from_env().unwrap();
+//! let fwd = rt.load("vit_b_avg_cat", "forward").unwrap();
+//! ```
+
+pub mod artifact;
+pub mod client;
+pub mod params;
+pub mod validate;
+
+pub use artifact::{ConfigMeta, EntryMeta, Manifest, TensorSpec};
+pub use client::{Executable, Runtime};
+pub use params::TrainState;
+pub use validate::validate;

@@ -1,0 +1,241 @@
+//! Training-state management: parameter/optimizer literals, initialization
+//! through the AOT `init` artifact, and binary checkpointing.
+//!
+//! The state layout mirrors the train_step signature from aot.py:
+//! `[params..., m..., v..., step]` — all `xla::Literal`s, fed to the
+//! executable in manifest order and replaced wholesale by its outputs.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::bail;
+
+use super::artifact::ConfigMeta;
+use super::client::Runtime;
+use crate::tensor::HostTensor;
+use crate::Result;
+
+/// Mutable training state for one model.
+pub struct TrainState {
+    /// flattened parameter leaves (manifest order)
+    pub params: Vec<xla::Literal>,
+    /// AdamW first-moment leaves
+    pub m: Vec<xla::Literal>,
+    /// AdamW second-moment leaves
+    pub v: Vec<xla::Literal>,
+    /// step counter (f32 scalar, advanced inside the executable)
+    pub step: xla::Literal,
+}
+
+impl TrainState {
+    /// Initialize parameters by executing the `init` artifact with `seed`,
+    /// and zero optimizer moments host-side from the manifest shapes.
+    pub fn init(rt: &Runtime, config: &str, seed: i32) -> Result<Self> {
+        let meta = rt.config(config)?.clone();
+        let init = rt.load(config, "init")?;
+        let seed_lit = HostTensor::scalar_i32(seed).to_literal()?;
+        let params = init.execute_literals(&[seed_lit])?;
+        if params.len() != meta.n_param_leaves() {
+            bail!("init returned {} leaves, manifest says {}",
+                  params.len(), meta.n_param_leaves());
+        }
+        let zeros = Self::zero_moments(&meta)?;
+        Ok(Self {
+            params,
+            m: zeros.0,
+            v: zeros.1,
+            step: HostTensor::scalar_f32(0.0).to_literal()?,
+        })
+    }
+
+    fn zero_moments(meta: &ConfigMeta)
+                    -> Result<(Vec<xla::Literal>, Vec<xla::Literal>)> {
+        let mut m = Vec::with_capacity(meta.params.len());
+        let mut v = Vec::with_capacity(meta.params.len());
+        for spec in &meta.params {
+            let z = HostTensor::zeros_f32(spec.shape.clone()).to_literal()?;
+            m.push(z);
+            let z = HostTensor::zeros_f32(spec.shape.clone()).to_literal()?;
+            v.push(z);
+        }
+        Ok((m, v))
+    }
+
+    /// Current step counter value.
+    pub fn step_value(&self) -> Result<f32> {
+        HostTensor::from_literal(&self.step)?.scalar_value_f32()
+    }
+
+    /// Assemble the leading `[params, m, v, step]` segment of a
+    /// train_step/train_k8 argument list.
+    pub fn opt_inputs(&self) -> Vec<&xla::Literal> {
+        let mut args: Vec<&xla::Literal> =
+            Vec::with_capacity(3 * self.params.len() + 1);
+        args.extend(self.params.iter());
+        args.extend(self.m.iter());
+        args.extend(self.v.iter());
+        args.push(&self.step);
+        args
+    }
+
+    /// Replace state from train_step outputs
+    /// `[params..., m..., v..., step, loss]`; returns the trailing
+    /// non-state outputs (step', loss — loss may be a (K,) vector for
+    /// the fused K-step artifact).
+    pub fn absorb(&mut self, mut outs: Vec<xla::Literal>)
+                  -> Result<Vec<xla::Literal>> {
+        let n = self.params.len();
+        if outs.len() < 3 * n + 2 {
+            bail!("train outputs too short: {} < {}", outs.len(), 3 * n + 2);
+        }
+        let rest = outs.split_off(3 * n);
+        let mut outs = outs;
+        self.v = outs.split_off(2 * n);
+        self.m = outs.split_off(n);
+        self.params = outs;
+        let mut rest = rest;
+        let tail = rest.split_off(1);
+        self.step = rest.pop().expect("step literal");
+        Ok(tail)
+    }
+
+    /// Copy parameters out as host tensors (checkpointing / inspection).
+    pub fn params_host(&self) -> Result<Vec<HostTensor>> {
+        self.params.iter().map(HostTensor::from_literal).collect()
+    }
+
+    // -- checkpointing ------------------------------------------------------
+    //
+    // Format: magic, version, step, then for each of params/m/v in manifest
+    // order: rank, dims..., f32 payload. Little-endian throughout.
+
+    const MAGIC: &'static [u8; 8] = b"CATCKPT1";
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(Self::MAGIC)?;
+        w.write_all(&self.step_value()?.to_le_bytes())?;
+        for group in [&self.params, &self.m, &self.v] {
+            w.write_all(&(group.len() as u32).to_le_bytes())?;
+            for lit in group.iter() {
+                let t = HostTensor::from_literal(lit)?;
+                let data = t.as_f32()?;
+                w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+                for &d in &t.shape {
+                    w.write_all(&(d as u64).to_le_bytes())?;
+                }
+                for &x in data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        if &magic != Self::MAGIC {
+            bail!("{path:?} is not a CAT checkpoint");
+        }
+        let mut f4 = [0u8; 4];
+        r.read_exact(&mut f4)?;
+        let step = f32::from_le_bytes(f4);
+        let mut groups: Vec<Vec<xla::Literal>> = Vec::with_capacity(3);
+        for _ in 0..3 {
+            r.read_exact(&mut f4)?;
+            let count = u32::from_le_bytes(f4) as usize;
+            let mut group = Vec::with_capacity(count);
+            for _ in 0..count {
+                r.read_exact(&mut f4)?;
+                let rank = u32::from_le_bytes(f4) as usize;
+                let mut shape = Vec::with_capacity(rank);
+                let mut d8 = [0u8; 8];
+                for _ in 0..rank {
+                    r.read_exact(&mut d8)?;
+                    shape.push(u64::from_le_bytes(d8) as usize);
+                }
+                let n: usize = shape.iter().product();
+                let mut data = vec![0f32; n];
+                for x in data.iter_mut() {
+                    r.read_exact(&mut f4)?;
+                    *x = f32::from_le_bytes(f4);
+                }
+                group.push(HostTensor::f32(shape, data)?.to_literal()?);
+            }
+            groups.push(group);
+        }
+        let v = groups.pop().expect("v group");
+        let m = groups.pop().expect("m group");
+        let params = groups.pop().expect("params group");
+        Ok(Self {
+            params,
+            m,
+            v,
+            step: HostTensor::scalar_f32(step).to_literal()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lit(vals: &[f32], shape: &[usize]) -> xla::Literal {
+        HostTensor::f32(shape.to_vec(), vals.to_vec())
+            .unwrap()
+            .to_literal()
+            .unwrap()
+    }
+
+    fn tiny_state() -> TrainState {
+        TrainState {
+            params: vec![lit(&[1.0, 2.0], &[2]), lit(&[3.0], &[1])],
+            m: vec![lit(&[0.1, 0.2], &[2]), lit(&[0.3], &[1])],
+            v: vec![lit(&[0.01, 0.02], &[2]), lit(&[0.03], &[1])],
+            step: HostTensor::scalar_f32(5.0).to_literal().unwrap(),
+        }
+    }
+
+    #[test]
+    fn absorb_splits_outputs() {
+        let mut st = tiny_state();
+        let outs = vec![
+            lit(&[10.0, 20.0], &[2]), lit(&[30.0], &[1]),   // params
+            lit(&[1.1, 2.2], &[2]), lit(&[3.3], &[1]),      // m
+            lit(&[0.5, 0.6], &[2]), lit(&[0.7], &[1]),      // v
+            HostTensor::scalar_f32(6.0).to_literal().unwrap(), // step
+            HostTensor::scalar_f32(0.25).to_literal().unwrap(), // loss
+        ];
+        let tail = st.absorb(outs).unwrap();
+        assert_eq!(st.step_value().unwrap(), 6.0);
+        let loss = HostTensor::from_literal(&tail[0]).unwrap();
+        assert_eq!(loss.scalar_value_f32().unwrap(), 0.25);
+        let p0 = HostTensor::from_literal(&st.params[0]).unwrap();
+        assert_eq!(p0.as_f32().unwrap(), &[10.0, 20.0]);
+        let v1 = HostTensor::from_literal(&st.v[1]).unwrap();
+        assert_eq!(v1.as_f32().unwrap(), &[0.7]);
+    }
+
+    #[test]
+    fn absorb_rejects_short_output() {
+        let mut st = tiny_state();
+        assert!(st.absorb(vec![lit(&[0.0], &[1])]).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let st = tiny_state();
+        let dir = std::env::temp_dir().join("cat_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.ckpt");
+        st.save(&path).unwrap();
+        let st2 = TrainState::load(&path).unwrap();
+        assert_eq!(st2.step_value().unwrap(), 5.0);
+        let a = HostTensor::from_literal(&st.params[0]).unwrap();
+        let b = HostTensor::from_literal(&st2.params[0]).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_file(path).ok();
+    }
+}

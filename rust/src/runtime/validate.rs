@@ -1,0 +1,255 @@
+//! Artifact validation: the preflight a deployment runs after `make
+//! artifacts` (`cat validate`). Checks, per manifest config:
+//!
+//! * every referenced HLO file exists and is non-empty;
+//! * entry signatures are self-consistent (train-step arity, init outputs
+//!   == parameter specs, forward batch dims match the config);
+//! * parameter counts match `param_count`;
+//! * (optionally, `deep=true`) each entry's HLO parses and compiles on
+//!   the PJRT client — expensive, catches text corruption.
+
+use std::path::Path;
+
+use super::artifact::{ConfigMeta, Manifest};
+use super::client::Runtime;
+use crate::Result;
+
+/// One finding; `fatal` distinguishes errors from advisories.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub config: String,
+    pub message: String,
+    pub fatal: bool,
+}
+
+/// Validation report over the whole registry.
+#[derive(Debug, Default)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub configs_checked: usize,
+    pub entries_checked: usize,
+}
+
+impl Report {
+    pub fn ok(&self) -> bool {
+        !self.findings.iter().any(|f| f.fatal)
+    }
+
+    fn err(&mut self, config: &str, message: String) {
+        self.findings.push(Finding { config: config.into(), message,
+                                     fatal: true });
+    }
+
+    fn warn(&mut self, config: &str, message: String) {
+        self.findings.push(Finding { config: config.into(), message,
+                                     fatal: false });
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!("validated {} configs / {} entries: {}\n",
+                            self.configs_checked, self.entries_checked,
+                            if self.ok() { "OK" } else { "FAILED" });
+        for f in &self.findings {
+            s.push_str(&format!("  [{}] {}: {}\n",
+                                if f.fatal { "ERROR" } else { "warn" },
+                                f.config, f.message));
+        }
+        s
+    }
+}
+
+fn check_config(report: &mut Report, dir: &Path, name: &str,
+                meta: &ConfigMeta) {
+    // parameter count consistency
+    let declared: usize = meta.params.iter().map(|p| p.num_elements()).sum();
+    if declared != meta.param_count {
+        report.err(name, format!(
+            "param specs sum to {declared}, param_count says {}",
+            meta.param_count));
+    }
+    for (entry, em) in &meta.entries {
+        report.entries_checked += 1;
+        let path = dir.join(&em.file);
+        match std::fs::metadata(&path) {
+            Err(e) => {
+                report.err(name, format!("{entry}: missing {path:?}: {e}"));
+                continue;
+            }
+            Ok(md) if md.len() == 0 => {
+                report.err(name, format!("{entry}: empty {path:?}"));
+                continue;
+            }
+            Ok(_) => {}
+        }
+        match entry.as_str() {
+            "init" => {
+                if em.outputs.len() != meta.params.len() {
+                    report.err(name, format!(
+                        "init outputs {} != {} param leaves",
+                        em.outputs.len(), meta.params.len()));
+                }
+                for (o, p) in em.outputs.iter().zip(&meta.params) {
+                    if o.shape != p.shape {
+                        report.err(name, format!(
+                            "init output '{}' shape {:?} != param {:?}",
+                            o.name, o.shape, p.shape));
+                    }
+                }
+            }
+            "forward" => {
+                let n = meta.params.len();
+                if em.inputs.len() != n + 1 {
+                    report.err(name, format!(
+                        "forward inputs {} != params+1 ({})",
+                        em.inputs.len(), n + 1));
+                } else if meta.task != "mixer" {
+                    let b = em.inputs[n].shape.first().copied().unwrap_or(0);
+                    if b != meta.batch_size {
+                        report.err(name, format!(
+                            "forward batch dim {b} != batch_size {}",
+                            meta.batch_size));
+                    }
+                }
+            }
+            e if e.starts_with("train") => {
+                let n = meta.params.len();
+                let nbatch = if meta.is_vit() { 2 } else { 3 };
+                let want = 3 * n + 1 + nbatch + 1;
+                if em.inputs.len() != want {
+                    report.err(name, format!(
+                        "{e}: {} inputs, expected {want}", em.inputs.len()));
+                }
+                if em.outputs.len() != 3 * n + 2 {
+                    report.err(name, format!(
+                        "{e}: {} outputs, expected {}", em.outputs.len(),
+                        3 * n + 2));
+                }
+                if em.outputs.last().map(|o| o.name.as_str())
+                    != Some("loss")
+                    && em.outputs.last().map(|o| o.name.as_str())
+                        != Some("losses") {
+                    report.warn(name, format!(
+                        "{e}: last output is not loss/losses"));
+                }
+            }
+            other => {
+                report.warn(name, format!("unknown entry kind '{other}'"));
+            }
+        }
+    }
+}
+
+/// Validate the manifest + files under `dir`. `deep` additionally
+/// compiles every entry on the PJRT client.
+pub fn validate(dir: &Path, deep: bool) -> Result<Report> {
+    let manifest = Manifest::load(dir)?;
+    let mut report = Report::default();
+    for (name, meta) in &manifest.configs {
+        report.configs_checked += 1;
+        check_config(&mut report, dir, name, meta);
+    }
+    if deep && report.ok() {
+        let rt = Runtime::new(dir.to_path_buf())?;
+        for name in manifest.configs.keys() {
+            for entry in manifest.configs[name].entries.keys() {
+                if let Err(e) = rt.load(name, entry) {
+                    report.err(name, format!("{entry}: compile failed: {e}"));
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{EntryMeta, TensorSpec};
+    use std::collections::BTreeMap;
+
+    fn spec(name: &str, shape: &[usize]) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(),
+                     dtype: "f32".into() }
+    }
+
+    fn tiny_meta(dir: &Path) -> ConfigMeta {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("m.init.hlo.txt"), "HloModule m").unwrap();
+        std::fs::write(dir.join("m.forward.hlo.txt"), "HloModule m").unwrap();
+        let mut entries = BTreeMap::new();
+        entries.insert("init".to_string(), EntryMeta {
+            file: "m.init.hlo.txt".into(),
+            inputs: vec![TensorSpec { name: "seed".into(), shape: vec![],
+                                      dtype: "i32".into() }],
+            outputs: vec![spec("['w']", &[2, 3])],
+        });
+        entries.insert("forward".to_string(), EntryMeta {
+            file: "m.forward.hlo.txt".into(),
+            inputs: vec![spec("['w']", &[2, 3]),
+                         spec("images", &[8, 3, 32, 32])],
+            outputs: vec![spec("logits", &[8, 10])],
+        });
+        ConfigMeta {
+            task: "vit".into(), mechanism: "cat".into(), d_model: 64,
+            n_heads: 4, n_layers: 1, seq_len: 0, n_tokens: 64,
+            pool: "avg".into(), image_size: 32, patch_size: 4,
+            n_classes: 10, n_channels: 3, vocab_size: 1024,
+            cat_impl: "fft".into(), batch_size: 8, grad_clip: 0.0,
+            weight_decay: 1e-4, causal: false, param_count: 6,
+            params: vec![spec("['w']", &[2, 3])],
+            entries,
+        }
+    }
+
+    #[test]
+    fn consistent_config_passes() {
+        let dir = std::env::temp_dir().join("cat_validate_ok");
+        let meta = tiny_meta(&dir);
+        let mut report = Report::default();
+        check_config(&mut report, &dir, "m", &meta);
+        assert!(report.ok(), "{}", report.render());
+    }
+
+    #[test]
+    fn bad_param_count_flagged() {
+        let dir = std::env::temp_dir().join("cat_validate_pc");
+        let mut meta = tiny_meta(&dir);
+        meta.param_count = 999;
+        let mut report = Report::default();
+        check_config(&mut report, &dir, "m", &meta);
+        assert!(!report.ok());
+        assert!(report.render().contains("param_count"));
+    }
+
+    #[test]
+    fn missing_file_flagged() {
+        let dir = std::env::temp_dir().join("cat_validate_missing");
+        let mut meta = tiny_meta(&dir);
+        meta.entries.get_mut("forward").unwrap().file = "nope.hlo.txt".into();
+        let mut report = Report::default();
+        check_config(&mut report, &dir, "m", &meta);
+        assert!(!report.ok());
+    }
+
+    #[test]
+    fn batch_dim_mismatch_flagged() {
+        let dir = std::env::temp_dir().join("cat_validate_batch");
+        let mut meta = tiny_meta(&dir);
+        meta.batch_size = 16;
+        let mut report = Report::default();
+        check_config(&mut report, &dir, "m", &meta);
+        assert!(!report.ok());
+        assert!(report.render().contains("batch dim"));
+    }
+
+    #[test]
+    fn init_shape_mismatch_flagged() {
+        let dir = std::env::temp_dir().join("cat_validate_init");
+        let mut meta = tiny_meta(&dir);
+        meta.entries.get_mut("init").unwrap().outputs =
+            vec![spec("['w']", &[9, 9])];
+        let mut report = Report::default();
+        check_config(&mut report, &dir, "m", &meta);
+        assert!(!report.ok());
+    }
+}

@@ -1,0 +1,179 @@
+//! Host-side tensors: the typed bridge between rust data pipelines and
+//! `xla::Literal` device buffers.
+//!
+//! Kept deliberately small — shape + flat data, f32 or i32 — because every
+//! heavy computation happens inside the AOT-compiled executables; the host
+//! only assembles batches, reads back logits/losses, and computes metrics.
+
+use crate::Result;
+use anyhow::{anyhow, bail};
+
+/// Element type of a [`HostTensor`]. Mirrors the manifest's dtype strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_manifest(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype in manifest: {other}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Flat data buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape plus contiguous row-major data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} ({n}) != data len {}", shape, data.len());
+        }
+        Ok(Self { shape, data: TensorData::F32(data) })
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} ({n}) != data len {}", shape, data.len());
+        }
+        Ok(Self { shape, data: TensorData::I32(data) })
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Self { shape: vec![], data: TensorData::I32(vec![v]) }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Convert to an `xla::Literal` (copies into XLA-managed memory).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+            TensorData::I32(v) => xla::Literal::vec1(v).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into host memory.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                HostTensor::f32(dims, lit.to_vec::<f32>()?)
+            }
+            xla::ElementType::S32 => {
+                HostTensor::i32(dims, lit.to_vec::<i32>()?)
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Scalar f32 view (loss read-back).
+    pub fn scalar_value_f32(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("expected scalar, got shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(HostTensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(HostTensor::i32(vec![2], vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar_f32(3.5);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.scalar_value_f32().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::from_manifest("f32").unwrap(), DType::F32);
+        assert_eq!(DType::from_manifest("i32").unwrap(), DType::I32);
+        assert!(DType::from_manifest("f64").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect())
+            .unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = HostTensor::i32(vec![4], vec![1, -2, 3, -4]).unwrap();
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

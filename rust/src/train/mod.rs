@@ -1,0 +1,258 @@
+//! Training orchestrator: drives the AOT train-step executables from rust.
+//!
+//! The loop body is: assemble a batch (rust substrates) → execute one
+//! `train_step` (params/m/v/step literals + batch + lr) → absorb the new
+//! state → log the loss. Evaluation periodically runs the `forward`
+//! artifact over held-out batches and computes accuracy/PPL host-side.
+//!
+//! `run_fused` drives the `train_k8` artifact instead, feeding K stacked
+//! batches per call to amortize host<->device round-trips — the L3 perf
+//! lever quantified in EXPERIMENTS.md §Perf.
+
+pub mod schedule;
+
+pub use schedule::Schedule;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::BatchSource;
+use crate::metrics::{EvalAccumulator, LossCurve};
+use crate::runtime::{Executable, Runtime, TrainState};
+use crate::tensor::HostTensor;
+use crate::Result;
+
+/// Configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    pub steps: u64,
+    pub schedule: Schedule,
+    pub seed: u64,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub log_every: u64,
+    /// stop early if the loss goes non-finite (records divergence)
+    pub stop_on_divergence: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        Self {
+            steps: 200,
+            schedule: Schedule::new(1e-3, 20, 200),
+            seed: 0,
+            eval_every: 0,
+            eval_batches: 8,
+            log_every: 25,
+            stop_on_divergence: true,
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub config: String,
+    pub curve: LossCurve,
+    pub evals: Vec<(u64, &'static str, f64)>,
+    pub steps_done: u64,
+    pub wall_seconds: f64,
+    pub diverged_at: Option<u64>,
+}
+
+impl TrainReport {
+    pub fn final_metric(&self) -> Option<(&'static str, f64)> {
+        self.evals.last().map(|(_, k, v)| (*k, *v))
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall_seconds > 0.0 {
+            self.steps_done as f64 / self.wall_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Orchestrates training + evaluation of one model config.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    config: String,
+    step_exe: Arc<Executable>,
+    forward_exe: Arc<Executable>,
+    pub state: TrainState,
+    source: BatchSource,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, config: &str, seed: u64) -> Result<Self> {
+        let meta = rt.config(config)?.clone();
+        let step_exe = rt.load(config, "train_step")?;
+        let forward_exe = rt.load(config, "forward")?;
+        let state = TrainState::init(rt, config, seed as i32)?;
+        let source = BatchSource::new(&meta, seed);
+        Ok(Self {
+            rt,
+            config: config.to_string(),
+            step_exe,
+            forward_exe,
+            state,
+            source,
+        })
+    }
+
+    /// One optimizer step; returns the loss.
+    pub fn step(&mut self, lr: f32) -> Result<f32> {
+        let batch = self.source.next_train()?;
+        let batch_lits: Vec<xla::Literal> = batch
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let lr_lit = HostTensor::scalar_f32(lr).to_literal()?;
+        let mut args = self.state.opt_inputs();
+        args.extend(batch_lits.iter());
+        args.push(&lr_lit);
+        let outs = self.step_exe.execute_literals(&args)?;
+        let tail = self.state.absorb(outs)?;
+        HostTensor::from_literal(&tail[0])?.scalar_value_f32()
+    }
+
+    /// Evaluate on `n_batches` held-out batches.
+    pub fn eval(&self, n_batches: u64) -> Result<(&'static str, f64)> {
+        let mut acc = EvalAccumulator::default();
+        for i in 0..n_batches {
+            let batch = self.source.eval_batch(i)?;
+            // params are already literals — pass by reference, no copies
+            let mut refs: Vec<&xla::Literal> = self.state.params.iter().collect();
+            let input_lits: Vec<xla::Literal> =
+                BatchSource::forward_inputs(&batch)
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<_>>()?;
+            refs.extend(input_lits.iter());
+            let outs = self.forward_exe.execute_literals(&refs)?;
+            let logits = HostTensor::from_literal(&outs[0])?;
+            acc.update(&logits, &BatchSource::truth(&batch))?;
+        }
+        acc.headline()
+            .ok_or_else(|| anyhow::anyhow!("no eval batches accumulated"))
+    }
+
+    /// Full training loop per `opts`.
+    pub fn run(&mut self, opts: &TrainOptions) -> Result<TrainReport> {
+        let mut curve = LossCurve::default();
+        let mut evals = Vec::new();
+        let t0 = Instant::now();
+        let mut diverged_at = None;
+        let mut done = 0;
+        for step in 0..opts.steps {
+            let lr = opts.schedule.lr(step);
+            let loss = self.step(lr)?;
+            curve.push(step, loss);
+            done = step + 1;
+            if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+                eprintln!("[{}] step {:>5} loss {:.4} (ema {:.4}) lr {:.2e}",
+                          self.config, step + 1, loss,
+                          curve.ema().unwrap_or(f64::NAN), lr);
+            }
+            if !loss.is_finite() {
+                diverged_at = Some(step);
+                if opts.stop_on_divergence {
+                    eprintln!("[{}] diverged at step {step} (loss={loss})",
+                              self.config);
+                    break;
+                }
+            }
+            if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+                let (k, v) = self.eval(opts.eval_batches)?;
+                eprintln!("[{}] step {:>5} {k} {:.4}", self.config,
+                          step + 1, v);
+                evals.push((step + 1, k, v));
+            }
+        }
+        if diverged_at.is_none() {
+            let (k, v) = self.eval(opts.eval_batches)?;
+            evals.push((done, k, v));
+        }
+        Ok(TrainReport {
+            config: self.config.clone(),
+            curve,
+            evals,
+            steps_done: done,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            diverged_at,
+        })
+    }
+
+    /// Fused K-step loop over the `train_k8` artifact (perf variant).
+    /// `opts.steps` is rounded down to a multiple of K.
+    pub fn run_fused(&mut self, opts: &TrainOptions, k: usize)
+                     -> Result<TrainReport> {
+        let fused = self.rt.load(&self.config, &format!("train_k{k}"))?;
+        let mut curve = LossCurve::default();
+        let t0 = Instant::now();
+        let rounds = opts.steps / k as u64;
+        let mut step = 0u64;
+        for _ in 0..rounds {
+            // gather K batches, then stack each tensor along a new leading
+            // K axis (manifest order is preserved per batch)
+            let mut rounds_batches = Vec::with_capacity(k);
+            let mut lrs = Vec::with_capacity(k);
+            for j in 0..k {
+                rounds_batches.push(self.source.next_train()?);
+                lrs.push(opts.schedule.lr(step + j as u64));
+            }
+            let n_tensors = rounds_batches[0].len();
+            let mut stacked: Vec<HostTensor> = Vec::with_capacity(n_tensors);
+            for ti in 0..n_tensors {
+                let mut shape = vec![k];
+                shape.extend(&rounds_batches[0][ti].shape);
+                let t = match &rounds_batches[0][ti].data {
+                    crate::tensor::TensorData::F32(_) => {
+                        let mut data = Vec::new();
+                        for rb in &rounds_batches {
+                            data.extend_from_slice(rb[ti].as_f32()?);
+                        }
+                        HostTensor::f32(shape, data)?
+                    }
+                    crate::tensor::TensorData::I32(_) => {
+                        let mut data = Vec::new();
+                        for rb in &rounds_batches {
+                            data.extend_from_slice(rb[ti].as_i32()?);
+                        }
+                        HostTensor::i32(shape, data)?
+                    }
+                };
+                stacked.push(t);
+            }
+            let batch_lits: Vec<xla::Literal> = stacked
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_>>()?;
+            let lr_lit = HostTensor::f32(vec![k], lrs)?.to_literal()?;
+            let mut args = self.state.opt_inputs();
+            args.extend(batch_lits.iter());
+            args.push(&lr_lit);
+            let outs = fused.execute_literals(&args)?;
+            let tail = self.state.absorb(outs)?;
+            let losses = HostTensor::from_literal(&tail[0])?;
+            for (j, &l) in losses.as_f32()?.iter().enumerate() {
+                curve.push(step + j as u64, l);
+            }
+            step += k as u64;
+        }
+        let (key, v) = self.eval(opts.eval_batches)?;
+        Ok(TrainReport {
+            config: self.config.clone(),
+            curve,
+            evals: vec![(step, key, v)],
+            steps_done: step,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+            diverged_at: None,
+        })
+    }
+
+    pub fn source_mut(&mut self) -> &mut BatchSource {
+        &mut self.source
+    }
+}

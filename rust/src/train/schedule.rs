@@ -1,0 +1,79 @@
+//! Learning-rate schedules, computed host-side and fed to the AOT
+//! train-step as a scalar input each step (the paper's recipe: linear
+//! warmup then cosine annealing; Sec. 5.2).
+
+/// Warmup + cosine decay to `min_frac * base_lr`.
+#[derive(Debug, Clone, Copy)]
+pub struct Schedule {
+    pub base_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    pub min_frac: f32,
+}
+
+impl Schedule {
+    pub fn new(base_lr: f32, warmup_steps: u64, total_steps: u64) -> Self {
+        Self { base_lr, warmup_steps, total_steps, min_frac: 0.0 }
+    }
+
+    /// Constant LR (used by short microbench runs).
+    pub fn constant(lr: f32) -> Self {
+        Self { base_lr: lr, warmup_steps: 0, total_steps: u64::MAX, min_frac: 1.0 }
+    }
+
+    pub fn lr(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.min_frac >= 1.0 {
+            return self.base_lr;
+        }
+        let t = (step - self.warmup_steps) as f32;
+        let total = (self.total_steps.saturating_sub(self.warmup_steps))
+            .max(1) as f32;
+        let frac = (t / total).min(1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * frac).cos());
+        self.base_lr * (self.min_frac + (1.0 - self.min_frac) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let s = Schedule::new(1.0, 10, 100);
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_zero() {
+        let s = Schedule::new(1.0, 0, 100);
+        assert!((s.lr(0) - 1.0).abs() < 1e-5);
+        assert!(s.lr(50) < s.lr(10));
+        assert!(s.lr(100) < 1e-6);
+        // past the end it stays at the floor
+        assert!(s.lr(500) < 1e-6);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::constant(0.3);
+        assert_eq!(s.lr(0), 0.3);
+        assert_eq!(s.lr(1_000_000), 0.3);
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        let s = Schedule::new(2.5e-4, 100, 1000);
+        let mut prev = f32::MAX;
+        for step in (100..1000).step_by(50) {
+            let lr = s.lr(step);
+            assert!(lr <= prev + 1e-9);
+            prev = lr;
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Property-based tests on the pure-rust L3 invariants, using an in-tree
+//! randomized-case harness (the offline vendor snapshot has no proptest):
+//! each property runs against `CASES` pseudo-random inputs drawn from the
+//! crate's deterministic [`cat::data::Rng`], so failures are reproducible
+//! — the failing case index + seed are in the panic message.
+
+use std::time::{Duration, Instant};
+
+use cat::complexity::{layer_cost, Mechanism};
+use cat::coordinator::{DynamicBatcher, Flush};
+use cat::data::{Rng, TextCorpus, Tokenizer};
+use cat::metrics::{accuracy, token_nll};
+use cat::tensor::HostTensor;
+use cat::train::Schedule;
+
+const CASES: usize = 64;
+const SEED: u64 = 0xCA7_CA7;
+
+/// Run `prop` for CASES pseudo-random cases with a labeled panic context.
+fn for_all(name: &str, mut prop: impl FnMut(&mut Rng)) {
+    let mut master = Rng::new(SEED);
+    for case in 0..CASES {
+        let mut rng = master.fork(case as u64);
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{name}' failed at case {case} (seed {SEED}): \
+                    {e:?}");
+        }
+    }
+}
+
+// ---------------- batcher ----------------
+
+#[test]
+fn batcher_preserves_fifo() {
+    for_all("batcher_preserves_fifo", |rng| {
+        let pushes = 1 + rng.below(200);
+        let max_batch = 1 + rng.below(16);
+        let mut b = DynamicBatcher::new(max_batch, Duration::from_millis(1));
+        for i in 0..pushes {
+            b.push(i);
+        }
+        let mut seen = Vec::new();
+        while !b.is_empty() {
+            let n = match b.poll(Instant::now() + Duration::from_secs(1)) {
+                Flush::Emit(n) => n,
+                other => panic!("expected Emit, got {other:?}"),
+            };
+            assert!(n <= max_batch);
+            for p in b.take(n) {
+                seen.push(p.payload);
+            }
+        }
+        assert_eq!(seen, (0..pushes).collect::<Vec<_>>());
+    });
+}
+
+#[test]
+fn batcher_full_always_flushes() {
+    for_all("batcher_full_always_flushes", |rng| {
+        let max_batch = 1 + rng.below(32);
+        let mut b = DynamicBatcher::new(max_batch, Duration::from_secs(3600));
+        for i in 0..max_batch {
+            b.push(i);
+        }
+        assert_eq!(b.poll(Instant::now()), Flush::Emit(max_batch));
+    });
+}
+
+// ---------------- tokenizer ----------------
+
+fn random_word(rng: &mut Rng) -> String {
+    let len = 1 + rng.below(8);
+    (0..len)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+#[test]
+fn tokenizer_total_and_in_vocab() {
+    let t = Tokenizer::build(&["the cat sat on the mat again and again"],
+                             2048);
+    for_all("tokenizer_total", |rng| {
+        let n_words = rng.below(30);
+        let text = (0..n_words)
+            .map(|_| random_word(rng))
+            .collect::<Vec<_>>()
+            .join(" ");
+        for id in t.encode(&text) {
+            assert!((0..2048).contains(&id), "id {id} out of vocab");
+        }
+    });
+}
+
+#[test]
+fn tokenizer_fit_exact_length() {
+    let t = Tokenizer::build(&["a b c"], 2048);
+    for_all("tokenizer_fit_exact", |rng| {
+        let ids: Vec<i32> = (0..rng.below(64))
+            .map(|_| rng.below(2048) as i32)
+            .collect();
+        let n = 1 + rng.below(64);
+        assert_eq!(t.fit(ids, n).len(), n);
+    });
+}
+
+#[test]
+fn tokenizer_encode_deterministic() {
+    let t = Tokenizer::build(&["alpha beta gamma delta"], 2048);
+    for_all("tokenizer_deterministic", |rng| {
+        let text = format!("{} {}", random_word(rng), random_word(rng));
+        assert_eq!(t.encode(&text), t.encode(&text));
+    });
+}
+
+// ---------------- schedule ----------------
+
+#[test]
+fn schedule_bounded_and_finite() {
+    for_all("schedule_bounded", |rng| {
+        let base = 10f32.powf(-(rng.below(6) as f32)) * 0.9;
+        let warmup = rng.below(50) as u64;
+        let total = warmup + 1 + rng.below(5000) as u64;
+        let s = Schedule::new(base, warmup, total);
+        let step = rng.below(10_000) as u64;
+        let lr = s.lr(step);
+        assert!(lr.is_finite());
+        assert!(lr >= 0.0 && lr <= base * (1.0 + 1e-6),
+                "lr {lr} base {base}");
+    });
+}
+
+// ---------------- rng ----------------
+
+#[test]
+fn rng_fork_reproducible() {
+    for_all("rng_fork_reproducible", |rng| {
+        let seed = rng.next_u64();
+        let tag = rng.next_u64();
+        let v1 = Rng::new(seed).fork(tag).next_u64();
+        let v2 = Rng::new(seed).fork(tag).next_u64();
+        assert_eq!(v1, v2);
+    });
+}
+
+// ---------------- corpus ----------------
+
+#[test]
+fn corpus_sequences_valid() {
+    let c = TextCorpus::new(512, 42);
+    for_all("corpus_sequences_valid", |rng| {
+        let stream = rng.below(1000) as u64;
+        let len = 1 + rng.below(300);
+        let s1 = c.sequence(stream, len);
+        let s2 = c.sequence(stream, len);
+        assert_eq!(s1, s2);
+        assert_eq!(s1.len(), len);
+        assert!(s1.iter().all(|&t| (0..512).contains(&t)));
+    });
+}
+
+#[test]
+fn masked_batch_only_corrupts_weighted() {
+    let c = TextCorpus::new(512, 9);
+    for_all("masked_batch_consistent", |rng| {
+        let b = c.masked_batch(rng.below(100) as u64, 2, 64, 0.15);
+        for i in 0..b.tokens.len() {
+            if b.weights[i] == 0.0 {
+                assert_eq!(b.tokens[i], b.targets[i]);
+            }
+        }
+    });
+}
+
+// ---------------- complexity model ----------------
+
+#[test]
+fn cost_monotone_in_n() {
+    for_all("cost_monotone_in_n", |rng| {
+        let n1 = 1usize << (4 + rng.below(8));
+        let n2 = n1 * 2;
+        for m in [Mechanism::Attention, Mechanism::CatGather,
+                  Mechanism::CatFft, Mechanism::Linear] {
+            let c1 = layer_cost(m, n1, 256, 8).flops;
+            let c2 = layer_cost(m, n2, 256, 8).flops;
+            assert!(c2 > c1, "{m:?} not monotone at N={n1}");
+        }
+    });
+}
+
+#[test]
+fn cat_param_budget_below_attention() {
+    for_all("cat_param_budget", |rng| {
+        let d = 1usize << (5 + rng.below(6));
+        let h = 1 + rng.below(d.min(32));
+        let cat = layer_cost(Mechanism::CatFft, 64, d, h).learnable_params;
+        let attn = layer_cost(Mechanism::Attention, 64, d, h)
+            .learnable_params;
+        assert!(cat < attn, "d={d} h={h}");
+    });
+}
+
+// ---------------- metrics ----------------
+
+#[test]
+fn accuracy_perfect_logits_is_one() {
+    for_all("accuracy_perfect_logits", |rng| {
+        let b = 1 + rng.below(32);
+        let labels: Vec<i32> = (0..b).map(|_| rng.below(8) as i32).collect();
+        let mut data = vec![0f32; b * 8];
+        for (i, &l) in labels.iter().enumerate() {
+            data[i * 8 + l as usize] = 10.0;
+        }
+        let logits = HostTensor::f32(vec![b, 8], data).expect("t");
+        assert_eq!(accuracy(&logits, &labels).expect("acc"), 1.0);
+    });
+}
+
+#[test]
+fn token_nll_uniform_is_log_v() {
+    for_all("token_nll_uniform", |rng| {
+        let v = 1usize << (2 + rng.below(6));
+        let n = 1 + rng.below(32);
+        let logits = HostTensor::f32(vec![1, n, v], vec![0.0; n * v])
+            .expect("t");
+        let targets: Vec<i32> = (0..n).map(|i| (i % v) as i32).collect();
+        let weights = vec![1.0f32; n];
+        let (nll, w) = token_nll(&logits, &targets, &weights).expect("nll");
+        assert!(((nll / w) - (v as f64).ln()).abs() < 1e-9);
+    });
+}
+
+// ---------------- json substrate ----------------
+
+#[test]
+fn json_roundtrip_random_values() {
+    use cat::json::Json;
+
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str((0..rng.below(8))
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect()),
+            4 => Json::Arr((0..rng.below(4))
+                .map(|_| random_json(rng, depth - 1))
+                .collect()),
+            _ => Json::Obj((0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect()),
+        }
+    }
+
+    for_all("json_roundtrip", |rng| {
+        let v = random_json(rng, 3);
+        let parsed = cat::json::parse(&v.to_string()).expect("parse");
+        assert_eq!(v, parsed);
+        let pretty = cat::json::parse(&v.to_string_pretty()).expect("pretty");
+        assert_eq!(v, pretty);
+    });
+}

@@ -64,5 +64,43 @@ fn main() {
         accuracy(&cls, &lab).expect("acc");
     });
 
+    // end-to-end native serving: router + batcher + native CAT-FFT model,
+    // 64 requests from 4 client threads (hermetic — no artifacts)
+    bench.samples = 5;
+    bench.case("native_serve_64_reqs", || {
+        use cat::coordinator::{ServeOptions, Server};
+        use cat::runtime::Backend;
+
+        let opts = ServeOptions {
+            backend: Backend::Native,
+            ..Default::default()
+        };
+        let server = Server::spawn(cat::artifacts_dir(),
+                                   &["bench_native".to_string()], opts, 0)
+            .expect("spawn native server");
+        let handle = server.handle();
+        let ds = ShapeDataset::new(5);
+        let mut clients = Vec::new();
+        for c in 0..4u64 {
+            let h = handle.clone();
+            let ds = ds.clone();
+            clients.push(std::thread::spawn(move || {
+                for i in 0..16u64 {
+                    let sample = ds.sample(c * 16 + i);
+                    let input =
+                        HostTensor::f32(vec![3, 32, 32], sample.pixels)
+                            .expect("input");
+                    h.infer("bench_native", input).expect("infer");
+                }
+            }));
+        }
+        for c in clients {
+            c.join().expect("client");
+        }
+        drop(handle);
+        let stats = server.shutdown();
+        assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 64);
+    });
+
     print!("{}", bench.report());
 }

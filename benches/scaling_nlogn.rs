@@ -1,45 +1,160 @@
-//! Fig. 1 / complexity claim: measured forward wallclock of one mixing
-//! layer across N ∈ {64..2048} for attention (O(N^2)), CAT-gather (O(N^2),
-//! no qk matmul) and CAT-FFT (O(N log N)), next to the analytic FLOP
-//! model from `cat::complexity`.
+//! Fig. 1 / complexity claim on real hardware: measured forward wallclock
+//! of one mixing layer for attention (O(N²)), CAT-gather (O(N²), no qk
+//! matmul) and CAT-FFT (O(N log N)), next to the analytic FLOP model from
+//! `cat::complexity`.
+//!
+//! Runs hermetically on the native Rust backend — no artifacts, no PJRT —
+//! and additionally times the AOT executables when the crate is built with
+//! `--features pjrt` and `artifacts/` exists. Emits `BENCH_scaling.json`.
+//!
+//!   cargo bench --bench scaling_nlogn              # full sweep
+//!   cargo bench --bench scaling_nlogn -- --smoke   # CI smoke (small N)
 
 use cat::bench::Bench;
-use cat::complexity::{layer_cost, Mechanism};
+use cat::complexity::{crossover_n, layer_cost, Mechanism};
 use cat::data::Rng;
-use cat::runtime::Runtime;
-use cat::tensor::HostTensor;
+use cat::json::Json;
+use cat::native::{AttentionLayer, CatImpl, CatLayer};
 
-const NS: [usize; 6] = [64, 128, 256, 512, 1024, 2048];
+const D: usize = 256;
+const H: usize = 8;
 
-fn inputs_for(rt: &Runtime, name: &str) -> Vec<xla::Literal> {
-    let entry = rt.config(name).expect("cfg").entry("forward").expect("fwd");
-    let mut rng = Rng::new(7);
-    entry
-        .inputs
-        .iter()
-        .map(|spec| {
-            let data: Vec<f32> = (0..spec.num_elements())
-                .map(|_| 0.05 * rng.normal())
-                .collect();
-            HostTensor::f32(spec.shape.clone(), data)
-                .expect("t")
-                .to_literal()
-                .expect("lit")
-        })
-        .collect()
+fn layer_input(n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(n as u64 ^ 0xF16);
+    (0..n * D).map(|_| 0.05 * rng.normal()).collect()
+}
+
+fn gflop(mech: Mechanism, n: usize) -> f64 {
+    layer_cost(mech, n, D, H).flops / 1e9
 }
 
 fn main() {
-    let rt = Runtime::from_env().expect("artifacts present?");
-    let mut bench = Bench::new("scaling (one mixing layer, d=256 h=8)");
-    bench.warmup = 1;
-    bench.samples = 5;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let ns: &[usize] = if smoke {
+        &[256, 512]
+    } else {
+        &[256, 512, 1024, 2048, 4096, 8192]
+    };
+    // the quadratic baselines get unbearably slow past this point; CAT-FFT
+    // runs the full sweep (that asymmetry is the paper's whole argument)
+    let quad_cap = if smoke { 512 } else { 2048 };
 
-    for &n in &NS {
+    let mut rng = Rng::new(7);
+    let cat = CatLayer::init(D, H, &mut rng);
+    let attn = AttentionLayer::init(D, H, &mut rng);
+
+    let mut bench =
+        Bench::new("native scaling (one mixing layer, d=256 h=8, B=1)");
+    bench.warmup = 1;
+    bench.samples = if smoke { 2 } else { 3 };
+
+    for &n in ns {
+        let x = layer_input(n);
+        bench.case(&format!("native_{n}_cat_fft"), || {
+            cat.forward(&x, 1, n, CatImpl::Fft).expect("cat_fft forward");
+        });
+        if n <= quad_cap {
+            bench.case(&format!("native_{n}_cat_gather"), || {
+                cat.forward(&x, 1, n, CatImpl::Gather)
+                    .expect("cat_gather forward");
+            });
+            bench.case(&format!("native_{n}_attention"), || {
+                attn.forward(&x, 1, n).expect("attention forward");
+            });
+        }
+    }
+    print!("{}", bench.report());
+
+    println!("\nFig. 1 series: measured native ms (and modeled GFLOP) per \
+              forward");
+    println!("{:>6} {:>12} {:>12} {:>12}   {:>10} {:>10} {:>10}",
+             "N", "attn ms", "catfft ms", "catgthr ms",
+             "attn GF", "catfft GF", "gthr GF");
+    for &n in ns {
+        let ms = |mech: &str| bench
+            .median_of(&format!("native_{n}_{mech}"))
+            .map(|t| t * 1e3)
+            .unwrap_or(f64::NAN);
+        println!("{n:>6} {:>12.3} {:>12.3} {:>12.3}   {:>10.3} {:>10.3} \
+                  {:>10.3}",
+                 ms("attention"), ms("cat_fft"), ms("cat_gather"),
+                 gflop(Mechanism::Attention, n), gflop(Mechanism::CatFft, n),
+                 gflop(Mechanism::CatGather, n));
+    }
+
+    println!();
+    if let (Some(t4k), Some(t8k)) =
+        (bench.median_of("native_4096_cat_fft"),
+         bench.median_of("native_8192_cat_fft")) {
+        println!("cat_fft growth 4096 -> 8192: {:.2}x  (sub-quadratic \
+                  target: < 3x)", t8k / t4k);
+    }
+    if let (Some(fft), Some(gather)) =
+        (bench.median_of(&format!("native_{quad_cap}_cat_fft")),
+         bench.median_of(&format!("native_{quad_cap}_cat_gather"))) {
+        println!("cat_fft vs gather at N={quad_cap}: {:.2}x faster",
+                 gather / fft);
+    }
+    match crossover_n(D, H) {
+        Some(n) => println!("modeled FLOP crossover (cat_fft < attention): \
+                             N = {n}"),
+        None => println!("modeled FLOP crossover: none below 2^23"),
+    }
+
+    let pjrt = pjrt_series(ns);
+
+    let mut obj = vec![
+        ("bench".to_string(), Json::from("scaling_nlogn")),
+        ("d".to_string(), Json::Num(D as f64)),
+        ("h".to_string(), Json::Num(H as f64)),
+        ("smoke".to_string(), Json::Bool(smoke)),
+        ("native".to_string(), bench.to_json()),
+        ("modeled_gflop".to_string(), Json::Arr(
+            ns.iter()
+                .map(|&n| Json::Obj(vec![
+                    ("n".to_string(), Json::Num(n as f64)),
+                    ("attention".to_string(),
+                     Json::Num(gflop(Mechanism::Attention, n))),
+                    ("cat_gather".to_string(),
+                     Json::Num(gflop(Mechanism::CatGather, n))),
+                    ("cat_fft".to_string(),
+                     Json::Num(gflop(Mechanism::CatFft, n))),
+                ]))
+                .collect())),
+    ];
+    if let Some(p) = pjrt {
+        obj.push(("pjrt".to_string(), p));
+    }
+    let out = Json::Obj(obj).to_string_pretty();
+    std::fs::write("BENCH_scaling.json", out)
+        .expect("write BENCH_scaling.json");
+    eprintln!("results -> BENCH_scaling.json");
+}
+
+/// Time the AOT `scale_{n}_{mech}` artifacts when available (pjrt builds
+/// with `make artifacts` done); None otherwise.
+#[cfg(feature = "pjrt")]
+fn pjrt_series(ns: &[usize]) -> Option<Json> {
+    use cat::runtime::Runtime;
+
+    let rt = match Runtime::from_env() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[pjrt series skipped: {e:#}]");
+            return None;
+        }
+    };
+    let mut bench = Bench::new("pjrt scaling (AOT mixing layer)");
+    bench.warmup = 1;
+    bench.samples = 3;
+    for &n in ns.iter().filter(|&&n| n <= 2048) {
         for mech in ["attention", "cat_fft", "cat_gather"] {
             let name = format!("scale_{n}_{mech}");
+            let Ok(meta) = rt.config(&name) else { continue };
+            let entry = meta.entry("forward").expect("forward entry").clone();
             let exe = rt.load(&name, "forward").expect("load");
-            let inputs = inputs_for(&rt, &name);
+            let inputs = cat::bench::entry_inputs(&entry, 7);
             bench.case(&name, || {
                 exe.execute_literals(&inputs.iter().collect::<Vec<_>>())
                     .expect("exec");
@@ -47,21 +162,10 @@ fn main() {
         }
     }
     print!("{}", bench.report());
+    Some(bench.to_json())
+}
 
-    println!("\nFig. 1 series: measured ms (and modeled GFLOP) per forward");
-    println!("{:>6} {:>12} {:>12} {:>12}   {:>10} {:>10} {:>10}",
-             "N", "attn ms", "catfft ms", "catgthr ms",
-             "attn GF", "catfft GF", "gthr GF");
-    for &n in &NS {
-        let ms = |m: &str| bench
-            .median_of(&format!("scale_{n}_{m}"))
-            .map(|t| t * 1e3)
-            .unwrap_or(f64::NAN);
-        let gf = |m: Mechanism| layer_cost(m, n, 256, 8).flops / 1e9;
-        println!("{n:>6} {:>12.3} {:>12.3} {:>12.3}   {:>10.3} {:>10.3} \
-                  {:>10.3}",
-                 ms("attention"), ms("cat_fft"), ms("cat_gather"),
-                 gf(Mechanism::Attention), gf(Mechanism::CatFft),
-                 gf(Mechanism::CatGather));
-    }
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_series(_ns: &[usize]) -> Option<Json> {
+    None
 }

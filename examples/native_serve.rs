@@ -1,0 +1,87 @@
+//! Hermetic serving example: router + dynamic batcher over the native
+//! Rust CAT-FFT backend. No artifacts, no PJRT, no Python — runs in a
+//! fresh checkout:
+//!
+//!   cargo run --release --example native_serve -- [--requests 512]
+//!
+//! Fires concurrent traffic from client threads and reports latency
+//! percentiles, throughput, and batching occupancy, mirroring
+//! `examples/serve.rs` (the PJRT version, which additionally trains).
+
+use cat::coordinator::{ServeOptions, Server};
+use cat::data::ShapeDataset;
+use cat::native::NativeVitConfig;
+use cat::runtime::Backend;
+use cat::tensor::HostTensor;
+
+const MODEL: &str = "native_cat_vit";
+
+fn main() -> cat::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let get = |flag: &str| -> Option<u64> {
+        args.iter()
+            .position(|a| a == flag)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|s| s.parse().ok())
+    };
+    let requests = get("--requests").unwrap_or(512) as usize;
+
+    let cfg = NativeVitConfig::default();
+    eprintln!("serving {MODEL}: native CAT-FFT, d={} h={} L={} tokens={}",
+              cfg.d_model, cfg.n_heads, cfg.n_layers, cfg.n_tokens());
+
+    let opts = ServeOptions {
+        backend: Backend::Native,
+        native: cfg,
+        ..Default::default()
+    };
+    let server = Server::spawn(cat::artifacts_dir(), &[MODEL.to_string()],
+                               opts, 0)?;
+    let handle = server.handle();
+    let ds = ShapeDataset::new(123);
+    let t0 = std::time::Instant::now();
+    let n_clients = 8usize;
+    let per_client = requests / n_clients;
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let h = handle.clone();
+        let ds = ds.clone();
+        clients.push(std::thread::spawn(move || -> cat::Result<usize> {
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let sample = ds.sample((c * per_client + i) as u64);
+                let input = HostTensor::f32(vec![3, 32, 32], sample.pixels)?;
+                let logits = h.infer(MODEL, input)?;
+                let row = logits.as_f32()?;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).expect("finite"))
+                    .map(|(j, _)| j as i32)
+                    .expect("nonempty");
+                correct += (pred == sample.label) as usize;
+            }
+            Ok(correct)
+        }));
+    }
+    let mut correct = 0usize;
+    for c in clients {
+        correct += c.join().expect("client thread")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(handle);
+    let stats = server.shutdown();
+    let served = n_clients * per_client;
+    println!("served {served} requests in {wall:.2}s ({:.1} req/s)",
+             served as f64 / wall);
+    println!("accuracy (untrained init; chance = 0.1): {:.3}",
+             correct as f64 / served as f64);
+    for s in stats {
+        println!("worker {}: {} reqs / {} batches, occupancy {:.2}, \
+                  p50 {}us p99 {}us max {}us",
+                 s.model, s.requests, s.batches, s.mean_occupancy,
+                 s.latency.quantile_us(0.5), s.latency.quantile_us(0.99),
+                 s.latency.max_us());
+    }
+    Ok(())
+}

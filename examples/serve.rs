@@ -47,7 +47,12 @@ fn main() -> cat::Result<()> {
         cat::artifacts_dir(),
         vec![WorkerSpec { model: MODEL.to_string(), params: Some(trained),
                           seed: 0 }],
-        ServeOptions::default())?;
+        ServeOptions {
+            // trained checkpoints serve through PJRT; the hermetic native
+            // demo is examples/native_serve.rs
+            backend: cat::runtime::Backend::Pjrt,
+            ..Default::default()
+        })?;
     let handle = server.handle();
 
     // held-out traffic from 8 concurrent client threads

@@ -11,6 +11,28 @@ use std::time::Instant;
 
 use crate::json::Json;
 
+/// Synthesize one literal per input spec of an AOT entry point (shared by
+/// the PJRT bench drivers): small-amplitude normal noise, deterministic
+/// in `seed`.
+#[cfg(feature = "pjrt")]
+pub fn entry_inputs(entry: &crate::runtime::EntryMeta, seed: u64)
+                    -> Vec<xla::Literal> {
+    let mut rng = crate::data::Rng::new(seed);
+    entry
+        .inputs
+        .iter()
+        .map(|spec| {
+            let data: Vec<f32> = (0..spec.num_elements())
+                .map(|_| 0.05 * rng.normal())
+                .collect();
+            crate::tensor::HostTensor::f32(spec.shape.clone(), data)
+                .expect("bench input tensor")
+                .to_literal()
+                .expect("bench input literal")
+        })
+        .collect()
+}
+
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
 pub struct Sample {

@@ -89,17 +89,15 @@ pub fn layer_cost(mech: Mechanism, n: usize, d: usize, h: usize) -> LayerCost {
     }
 }
 
-/// The N at which CAT-FFT's modeled FLOPs drop below attention's.
-pub fn crossover_n(d: usize, h: usize) -> usize {
-    for p in 3..20 {
-        let n = 1usize << p;
+/// The smallest power-of-two N (searched up to 2^23) at which CAT-FFT's
+/// modeled FLOPs drop below attention's; `None` if no crossover occurs in
+/// that range (sentinel-free by design — callers must handle the miss).
+pub fn crossover_n(d: usize, h: usize) -> Option<usize> {
+    (3..24).map(|p| 1usize << p).find(|&n| {
         let a = layer_cost(Mechanism::Attention, n, d, h).flops;
         let c = layer_cost(Mechanism::CatFft, n, d, h).flops;
-        if c < a {
-            return n;
-        }
-    }
-    usize::MAX
+        c < a
+    })
 }
 
 #[cfg(test)]
@@ -143,8 +141,12 @@ mod tests {
 
     #[test]
     fn crossover_is_finite_and_moderate() {
-        let n = crossover_n(512, 8);
+        let n = crossover_n(512, 8).expect("crossover exists for d=512 h=8");
         assert!(n < 16384, "crossover {n}");
+        // CAT-FFT must actually be cheaper at (and past) the crossover
+        let a = layer_cost(Mechanism::Attention, n, 512, 8).flops;
+        let c = layer_cost(Mechanism::CatFft, n, 512, 8).flops;
+        assert!(c < a);
     }
 
     #[test]

@@ -1,13 +1,14 @@
 //! L3 serving coordinator: request router, dynamic batcher, per-model
-//! workers over the PJRT executables (vLLM-router shaped; the paper's
-//! contribution lives at L1/L2 so this layer is a production-grade driver,
-//! per DESIGN.md §3).
+//! workers over a pluggable [`BatchExecutor`] — PJRT artifacts or the
+//! native Rust CAT executor, per [`crate::runtime::Backend`] (vLLM-router
+//! shaped; the paper's contribution lives at L1/L2 so this layer is a
+//! production-grade driver, per DESIGN.md §3 and §6).
 
 pub mod batcher;
 pub mod server;
 pub mod workload;
 
 pub use batcher::{DynamicBatcher, Flush, Pending};
-pub use server::{InferRequest, ServeHandle, ServeOptions, Server,
-                 WorkerStats};
+pub use server::{split_rows, BatchExecutor, InferRequest, ServeHandle,
+                 ServeOptions, Server, WorkerSpec, WorkerStats};
 pub use workload::{ArrivalSampler, Arrivals};

@@ -1,4 +1,5 @@
-//! The serving loop: thread-based request router + per-model workers.
+//! The serving loop: thread-based request router + per-model workers over
+//! a pluggable execution backend.
 //!
 //! Architecture (vLLM-router shaped, scaled to one CPU, std-only — the
 //! offline vendor snapshot has no async runtime, so the event loop is
@@ -7,40 +8,60 @@
 //!
 //! ```text
 //!   clients ──mpsc──▶ Router thread ──per-model mpsc──▶ ModelWorker
-//!      ▲                                                 (batcher + PJRT)
+//!      ▲                                        (batcher + BatchExecutor)
 //!      └──────────────── oneshot responses ◀─────────────┘
 //! ```
 //!
 //! The router owns a registry of model workers keyed by config name and
 //! forwards requests; each worker runs a dynamic batcher
-//! ([`super::batcher`]) in front of its compiled `forward` executable,
-//! pads short batches to the artifact's fixed batch size, executes, and
-//! splits the logits back out to per-request responses. Backpressure is
-//! bounded sync_channels end-to-end.
+//! ([`super::batcher`]) in front of one [`BatchExecutor`]:
+//!
+//! * [`Backend::Pjrt`] (feature `pjrt`) — the compiled `forward` artifact;
+//!   short batches are padded to the artifact's fixed batch size.
+//! * [`Backend::Native`] — [`crate::native::NativeCatModel`], the pure-Rust
+//!   CAT-FFT executor; shape-flexible, so batches run unpadded and serving
+//!   works in a fresh checkout with no artifacts and no XLA runtime.
+//!
+//! Backpressure is bounded sync_channels end-to-end.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail};
+use anyhow::{anyhow, bail, ensure};
 
 use super::batcher::{DynamicBatcher, Flush};
 use crate::metrics::LatencyHistogram;
-use crate::runtime::{Executable, Runtime, TrainState};
-use crate::tensor::{HostTensor, TensorData};
+use crate::native::{NativeCatModel, NativeVitConfig};
+use crate::runtime::Backend;
+use crate::tensor::HostTensor;
 use crate::Result;
 
-/// Everything a worker thread needs to build its own PJRT stack.
+/// One model's execution engine: turns a batch of single-example inputs
+/// into one output row per example. Implementations live worker-local
+/// (PJRT handles are `!Send`), so the trait needs no `Send` bound.
+pub trait BatchExecutor {
+    /// Largest batch the engine wants per call (the batcher's flush size).
+    fn max_batch(&self) -> usize;
+
+    /// Run `inputs` (each a single example, no batch dim) and return one
+    /// output row per input, in order.
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+}
+
+/// Everything a worker thread needs to build its own execution stack.
 ///
 /// The xla crate's handles (`PjRtClient`, `Literal`, executables) hold
 /// `Rc`s and raw PJRT pointers — they are `!Send` by design — so each
-/// worker thread constructs its *own* `Runtime` + executable from the
-/// artifact directory, and parameters cross the thread boundary as plain
-/// [`HostTensor`]s (trained checkpoints) or as a seed (fresh init).
+/// worker thread constructs its *own* executor from the spec; parameters
+/// cross the thread boundary as plain [`HostTensor`]s (trained
+/// checkpoints) or as a seed (fresh init). The native backend follows the
+/// same shape for uniformity.
 pub struct WorkerSpec {
     pub model: String,
-    /// trained parameters (host copies, manifest order); None -> init(seed)
+    /// trained parameters (host copies, manifest order); None -> init(seed).
+    /// PJRT-only: the native model always initializes from the seed.
     pub params: Option<Vec<HostTensor>>,
     pub seed: i32,
 }
@@ -84,16 +105,28 @@ pub struct WorkerStats {
     pub latency: LatencyHistogram,
 }
 
-/// Options for batching behaviour.
+/// Options for batching behaviour and backend selection.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     pub max_delay: Duration,
     pub queue_depth: usize,
+    /// Which engine each worker builds ([`Backend::detect_env`] default).
+    pub backend: Backend,
+    /// Shape of the native model when `backend == Native`.
+    pub native: NativeVitConfig,
+    /// Batcher flush size for the (shape-flexible) native engine.
+    pub native_max_batch: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        Self { max_delay: Duration::from_millis(4), queue_depth: 256 }
+        Self {
+            max_delay: Duration::from_millis(4),
+            queue_depth: 256,
+            backend: Backend::detect_env(),
+            native: NativeVitConfig::default(),
+            native_max_batch: 8,
+        }
     }
 }
 
@@ -106,10 +139,9 @@ pub struct Server {
 }
 
 impl Server {
-    /// Spawn workers for `models` with freshly-initialized parameters
-    /// (each must have `forward` + `init` entries). Production serving
-    /// passes trained parameters via [`Server::spawn_specs`] (see
-    /// `examples/serve.rs`).
+    /// Spawn workers for `models` with freshly-initialized parameters.
+    /// Production serving passes trained parameters via
+    /// [`Server::spawn_specs`] (see `examples/serve.rs`).
     pub fn spawn(artifacts: PathBuf, models: &[String], opts: ServeOptions,
                  seed: i32) -> Result<Self> {
         let specs = models
@@ -119,9 +151,9 @@ impl Server {
         Self::spawn_specs(artifacts, specs, opts)
     }
 
-    /// Spawn one worker thread per spec. Each worker builds its own PJRT
-    /// runtime over `artifacts` (xla handles are `!Send`; see
-    /// [`WorkerSpec`]).
+    /// Spawn one worker thread per spec. Each worker builds its own
+    /// executor over `artifacts` per `opts.backend` (PJRT handles are
+    /// `!Send`; see [`WorkerSpec`]).
     pub fn spawn_specs(artifacts: PathBuf, specs: Vec<WorkerSpec>,
                        opts: ServeOptions) -> Result<Self> {
         let (tx, rx) = mpsc::sync_channel::<InferRequest>(opts.queue_depth);
@@ -139,13 +171,11 @@ impl Server {
             let ready_tx = ready_tx.clone();
             let dir = artifacts.clone();
             workers.push(std::thread::spawn(move || {
-                let built = build_worker(&dir, &spec);
-                match built {
-                    Ok((exe, params)) => {
+                match build_worker(&dir, &spec, &opts) {
+                    Ok(exec) => {
                         let _ = ready_tx.send(Ok(spec.model.clone()));
                         drop(ready_tx);
-                        worker_loop(spec.model, exe, params, wrx, opts,
-                                    stats_tx);
+                        worker_loop(spec.model, exec, wrx, opts, stats_tx);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
@@ -203,30 +233,180 @@ impl Server {
     }
 }
 
-/// Build a worker's thread-local PJRT stack from its spec.
-fn build_worker(dir: &PathBuf, spec: &WorkerSpec)
-                -> Result<(std::sync::Arc<Executable>, Vec<xla::Literal>)> {
-    let rt = Runtime::new(dir.clone())?;
-    let exe = rt.load(&spec.model, "forward")?;
-    let params = match &spec.params {
-        Some(host) => host
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<Vec<_>>>()?,
-        None => TrainState::init(&rt, &spec.model, spec.seed)?.params,
-    };
-    Ok((exe, params))
+/// Build a worker's thread-local executor from its spec and the backend
+/// selection in `opts`.
+fn build_worker(dir: &std::path::Path, spec: &WorkerSpec,
+                opts: &ServeOptions) -> Result<Box<dyn BatchExecutor>> {
+    match opts.backend {
+        Backend::Native => {
+            ensure!(spec.params.is_none(),
+                    "{}: the native backend initializes from the seed; \
+                     checkpoint loading is a PJRT feature", spec.model);
+            Ok(Box::new(NativeWorker {
+                model: NativeCatModel::new(opts.native, spec.seed as u64),
+                max_batch: opts.native_max_batch.max(1),
+            }))
+        }
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => Ok(Box::new(PjrtWorker::build(dir, spec)?)),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => {
+            let _ = dir;
+            bail!("{}: built without the `pjrt` feature — rebuild with \
+                   `--features pjrt` or serve with the native backend",
+                  spec.model)
+        }
+    }
 }
 
-/// Worker thread: dynamic batcher in front of one executable.
-fn worker_loop(model: String, exe: std::sync::Arc<Executable>,
-               params: Vec<xla::Literal>, rx: Receiver<InferRequest>,
-               opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>) {
-    let max_batch = exe.meta.inputs.last()
-        .map(|s| s.shape.first().copied().unwrap_or(1))
-        .unwrap_or(1);
+// ---------------------------------------------------------------------------
+// native executor
+// ---------------------------------------------------------------------------
+
+/// Native CAT executor: shape-flexible, so batches run unpadded.
+struct NativeWorker {
+    model: NativeCatModel,
+    max_batch: usize,
+}
+
+impl BatchExecutor for NativeWorker {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let cfg = self.model.cfg;
+        let row_shape = vec![cfg.n_channels, cfg.image_size, cfg.image_size];
+        let row_len: usize = row_shape.iter().product();
+        let mut data: Vec<f32> = Vec::with_capacity(inputs.len() * row_len);
+        for t in inputs {
+            if t.shape != row_shape {
+                bail!("request shape {:?} != expected {:?}", t.shape,
+                      row_shape);
+            }
+            data.extend_from_slice(t.as_f32()?);
+        }
+        let logits = self.model.forward_batch(&data, inputs.len())?;
+        let all = HostTensor::f32(vec![inputs.len(), cfg.n_classes],
+                                  logits)?;
+        split_rows(&all, inputs.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT executor (feature `pjrt`)
+// ---------------------------------------------------------------------------
+
+/// PJRT executor: compiled `forward` artifact + parameter literals; pads
+/// short batches to the artifact's fixed batch size.
+#[cfg(feature = "pjrt")]
+struct PjrtWorker {
+    exe: std::sync::Arc<crate::runtime::Executable>,
+    params: Vec<xla::Literal>,
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtWorker {
+    fn build(dir: &std::path::Path, spec: &WorkerSpec) -> Result<PjrtWorker> {
+        use crate::runtime::{Runtime, TrainState};
+        let rt = Runtime::new(dir.to_path_buf())?;
+        let exe = rt.load(&spec.model, "forward")?;
+        let params = match &spec.params {
+            Some(host) => host
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<Vec<_>>>()?,
+            None => TrainState::init(&rt, &spec.model, spec.seed)?.params,
+        };
+        Ok(PjrtWorker { exe, params })
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl BatchExecutor for PjrtWorker {
+    fn max_batch(&self) -> usize {
+        self.exe.meta.inputs.last()
+            .map(|s| s.shape.first().copied().unwrap_or(1))
+            .unwrap_or(1)
+    }
+
+    /// Pad examples to the executable's batch size, run, split logits rows.
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        use crate::tensor::TensorData;
+
+        let spec = self.exe.meta.inputs.last().expect("input spec");
+        let max_batch = spec.shape[0];
+        let row_shape: Vec<usize> = spec.shape[1..].to_vec();
+        let row_len: usize = row_shape.iter().product();
+
+        let n = inputs.len();
+        if n == 0 || n > max_batch {
+            bail!("bad flush size {n} (max {max_batch})");
+        }
+        let mut full_shape = vec![max_batch];
+        full_shape.extend(&row_shape);
+
+        // assemble + pad with repeats of the last row, preserving dtype
+        let batch_t = match spec.dtype.as_str() {
+            "i32" => {
+                let mut data: Vec<i32> =
+                    Vec::with_capacity(max_batch * row_len);
+                for t in inputs {
+                    if t.shape != row_shape {
+                        bail!("request shape {:?} != expected {:?}",
+                              t.shape, row_shape);
+                    }
+                    data.extend_from_slice(t.as_i32()?);
+                }
+                let last: Vec<i32> = data[data.len() - row_len..].to_vec();
+                for _ in n..max_batch {
+                    data.extend_from_slice(&last);
+                }
+                HostTensor::i32(full_shape, data)?
+            }
+            _ => {
+                let mut data: Vec<f32> =
+                    Vec::with_capacity(max_batch * row_len);
+                for t in inputs {
+                    if t.shape != row_shape {
+                        bail!("request shape {:?} != expected {:?}",
+                              t.shape, row_shape);
+                    }
+                    match &t.data {
+                        TensorData::F32(v) => data.extend_from_slice(v),
+                        TensorData::I32(v) => {
+                            data.extend(v.iter().map(|&x| x as f32))
+                        }
+                    }
+                }
+                let last: Vec<f32> = data[data.len() - row_len..].to_vec();
+                for _ in n..max_batch {
+                    data.extend_from_slice(&last);
+                }
+                HostTensor::f32(full_shape, data)?
+            }
+        };
+
+        // argument list: params (closed over by the worker) then the batch
+        let batch_lit = batch_t.to_literal()?;
+        let mut refs: Vec<&xla::Literal> = self.params.iter().collect();
+        refs.push(&batch_lit);
+        let outs = self.exe.execute_literals(&refs)?;
+        let logits = HostTensor::from_literal(&outs[0])?;
+        split_rows(&logits, n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// worker loop (backend-agnostic)
+// ---------------------------------------------------------------------------
+
+/// Worker thread: dynamic batcher in front of one executor.
+fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
+               rx: Receiver<InferRequest>, opts: ServeOptions,
+               stats_tx: mpsc::Sender<WorkerStats>) {
     let mut batcher: DynamicBatcher<InferRequest> =
-        DynamicBatcher::new(max_batch, opts.max_delay);
+        DynamicBatcher::new(exec.max_batch(), opts.max_delay);
     let mut latency = LatencyHistogram::default();
     let mut requests = 0u64;
     let mut open = true;
@@ -258,7 +438,7 @@ fn worker_loop(model: String, exe: std::sync::Arc<Executable>,
         }
         match batcher.poll(Instant::now()) {
             Flush::Emit(n) => {
-                flush(&exe, &params, &mut batcher, n, &mut latency,
+                flush(exec.as_ref(), &mut batcher, n, &mut latency,
                       &mut requests);
             }
             Flush::Wait(d) if open => {
@@ -276,7 +456,7 @@ fn worker_loop(model: String, exe: std::sync::Arc<Executable>,
             Flush::Wait(_) => {
                 // intake closed: flush the remainder immediately
                 let n = batcher.len();
-                flush(&exe, &params, &mut batcher, n, &mut latency,
+                flush(exec.as_ref(), &mut batcher, n, &mut latency,
                       &mut requests);
             }
             Flush::Idle => {}
@@ -292,18 +472,16 @@ fn worker_loop(model: String, exe: std::sync::Arc<Executable>,
     });
 }
 
-/// Execute one padded batch and fan results back out.
-fn flush(exe: &Executable, params: &[xla::Literal],
-         batcher: &mut DynamicBatcher<InferRequest>, n: usize,
-         latency: &mut LatencyHistogram, requests: &mut u64) {
+/// Execute one batch through the executor and fan results back out.
+fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
+         n: usize, latency: &mut LatencyHistogram, requests: &mut u64) {
     if n == 0 {
         return;
     }
     let pending = batcher.take(n);
-    let result = run_batch(exe, params,
-                           &pending.iter()
-                               .map(|p| &p.payload.input)
-                               .collect::<Vec<_>>());
+    let result = exec.infer_batch(&pending.iter()
+        .map(|p| &p.payload.input)
+        .collect::<Vec<_>>());
     match result {
         Ok(rows) => {
             for (p, row) in pending.into_iter().zip(rows) {
@@ -319,69 +497,6 @@ fn flush(exe: &Executable, params: &[xla::Literal],
             }
         }
     }
-}
-
-/// Pad examples to the executable's batch size, run, split logits rows.
-fn run_batch(exe: &Executable, params: &[xla::Literal],
-             inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
-    let spec = exe.meta.inputs.last().expect("input spec");
-    let max_batch = spec.shape[0];
-    let row_shape: Vec<usize> = spec.shape[1..].to_vec();
-    let row_len: usize = row_shape.iter().product();
-
-    let n = inputs.len();
-    if n == 0 || n > max_batch {
-        bail!("bad flush size {n} (max {max_batch})");
-    }
-    let mut full_shape = vec![max_batch];
-    full_shape.extend(&row_shape);
-
-    // assemble + pad with repeats of the last row, preserving dtype
-    let batch_t = match spec.dtype.as_str() {
-        "i32" => {
-            let mut data: Vec<i32> = Vec::with_capacity(max_batch * row_len);
-            for t in inputs {
-                if t.shape != row_shape {
-                    bail!("request shape {:?} != expected {:?}",
-                          t.shape, row_shape);
-                }
-                data.extend_from_slice(t.as_i32()?);
-            }
-            let last: Vec<i32> = data[data.len() - row_len..].to_vec();
-            for _ in n..max_batch {
-                data.extend_from_slice(&last);
-            }
-            HostTensor::i32(full_shape, data)?
-        }
-        _ => {
-            let mut data: Vec<f32> = Vec::with_capacity(max_batch * row_len);
-            for t in inputs {
-                if t.shape != row_shape {
-                    bail!("request shape {:?} != expected {:?}",
-                          t.shape, row_shape);
-                }
-                match &t.data {
-                    TensorData::F32(v) => data.extend_from_slice(v),
-                    TensorData::I32(v) => {
-                        data.extend(v.iter().map(|&x| x as f32))
-                    }
-                }
-            }
-            let last: Vec<f32> = data[data.len() - row_len..].to_vec();
-            for _ in n..max_batch {
-                data.extend_from_slice(&last);
-            }
-            HostTensor::f32(full_shape, data)?
-        }
-    };
-
-    // argument list: params (closed over by the worker) then the batch
-    let batch_lit = batch_t.to_literal()?;
-    let mut refs: Vec<&xla::Literal> = params.iter().collect();
-    refs.push(&batch_lit);
-    let outs = exe.execute_literals(&refs)?;
-    let logits = HostTensor::from_literal(&outs[0])?;
-    split_rows(&logits, n)
 }
 
 /// Split a (B, ...) logits tensor into the first n rows.
@@ -414,5 +529,32 @@ mod tests {
         assert_eq!(rows[0].as_f32().unwrap(), &[1.0, 2.0]);
         assert_eq!(rows[1].as_f32().unwrap(), &[3.0, 4.0]);
         assert!(split_rows(&t, 4).is_err());
+    }
+
+    #[test]
+    fn native_worker_round_trips_a_batch() {
+        let cfg = NativeVitConfig::default();
+        let worker = NativeWorker {
+            model: NativeCatModel::new(cfg, 0),
+            max_batch: 4,
+        };
+        let image_len = cfg.n_channels * cfg.image_size * cfg.image_size;
+        let a = HostTensor::f32(
+            vec![cfg.n_channels, cfg.image_size, cfg.image_size],
+            vec![0.1; image_len]).unwrap();
+        let b = HostTensor::f32(
+            vec![cfg.n_channels, cfg.image_size, cfg.image_size],
+            vec![-0.2; image_len]).unwrap();
+        let rows = worker.infer_batch(&[&a, &b]).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.shape, vec![cfg.n_classes]);
+            assert!(row.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
+        // different inputs -> different logits
+        assert_ne!(rows[0], rows[1]);
+        // wrong shape rejected
+        let bad = HostTensor::f32(vec![1, 2], vec![0.0, 0.0]).unwrap();
+        assert!(worker.infer_batch(&[&bad]).is_err());
     }
 }

@@ -8,8 +8,11 @@
 
 use std::collections::BTreeMap;
 
+#[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+#[cfg(feature = "pjrt")]
 use crate::train::{Schedule, TrainOptions, Trainer};
+#[cfg(feature = "pjrt")]
 use crate::Result;
 
 /// One result row of a reproduction table.
@@ -61,6 +64,7 @@ fn budget_formula(mech: &str) -> &'static str {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn complexity_cols(mech: &str, causal: bool) -> (&'static str, &'static str) {
     match (mech, causal) {
         ("cat", false) | ("cat_qkv", false) | ("cat_q", false)
@@ -74,6 +78,7 @@ fn complexity_cols(mech: &str, causal: bool) -> (&'static str, &'static str) {
 }
 
 /// Train one config and evaluate; shared by every table driver.
+#[cfg(feature = "pjrt")]
 pub fn run_one(rt: &Runtime, name: &str, steps: u64, seed: u64,
                eval_batches: u64) -> Result<Row> {
     let meta = rt.config(name)?.clone();
@@ -151,6 +156,7 @@ pub fn table3_names() -> Vec<String> {
 }
 
 /// Run a list of configs and collect rows.
+#[cfg(feature = "pjrt")]
 pub fn run_grid(rt: &Runtime, names: &[String], steps: u64, seed: u64,
                 eval_batches: u64) -> Result<Vec<Row>> {
     let mut rows = Vec::with_capacity(names.len());

@@ -9,15 +9,21 @@
 //!   gather/FFT applies, fused attention baseline, LayerNorm.
 //! * **L2** — JAX model zoo (`python/compile/`): ViT + masked/causal LM over
 //!   six attention mechanisms, AdamW train step; AOT-lowered to HLO text.
-//! * **L3** — this crate: the coordinator. It owns the PJRT runtime
-//!   ([`runtime`]), the synthetic data substrates the paper's benchmarks
-//!   need ([`data`]), the training orchestrator ([`train`]), a serving
-//!   router + dynamic batcher ([`coordinator`]), metrics ([`metrics`]),
-//!   and the analytic complexity models behind Fig. 1 ([`complexity`]).
+//! * **L3** — this crate: the coordinator. It owns the execution backends
+//!   (the PJRT runtime in [`runtime`], feature `pjrt`, and the native
+//!   Rust CAT-FFT executor in [`native`]), the synthetic data substrates
+//!   the paper's benchmarks need ([`data`]), the training orchestrator
+//!   ([`train`]), a serving router + dynamic batcher ([`coordinator`]),
+//!   metrics ([`metrics`]), and the analytic complexity models behind
+//!   Fig. 1 ([`complexity`]).
 //!
-//! Python never runs on the request path: `make artifacts` lowers every
-//! model once; the binaries here load `artifacts/*.hlo.txt` through the
-//! `xla` crate's PJRT CPU client and drive training/serving from rust.
+//! Python never runs on the request path. With the `pjrt` feature,
+//! `make artifacts` lowers every model once and the binaries load
+//! `artifacts/*.hlo.txt` through the `xla` crate's PJRT CPU client. The
+//! default build has no artifact dependency at all: the native backend
+//! ([`native`], selected through [`runtime::Backend`]) computes CAT's
+//! forward pass — planned real-FFT circular convolution included — in
+//! pure Rust, so serving and the scaling benches run in a fresh checkout.
 
 pub mod bench;
 pub mod cli;
@@ -27,6 +33,7 @@ pub mod data;
 pub mod harness;
 pub mod json;
 pub mod metrics;
+pub mod native;
 pub mod runtime;
 pub mod tensor;
 pub mod train;

@@ -3,41 +3,55 @@
 //! Subcommands map 1:1 onto the paper's evaluation (DESIGN.md §5):
 //!
 //! ```text
-//! cat list                      # artifact registry
-//! cat train  --config NAME      # train one model, log loss + metric
-//! cat eval   --config NAME      # evaluate from a checkpoint
-//! cat serve  --config NAME      # batched inference demo over the router
-//! cat table1 [--fast]           # ImageNet-proxy grid   (Table 1)
-//! cat table2 [--fast]           # WikiText-proxy grid   (Table 2)
-//! cat table3                    # ablation grid         (Table 3 / Fig 2)
+//! cat list                      # artifact registry            [pjrt]
+//! cat train  --config NAME      # train one model              [pjrt]
+//! cat eval   --config NAME      # evaluate from a checkpoint   [pjrt]
+//! cat serve  [--backend B]      # batched inference over the router
+//! cat table1 [--fast]           # ImageNet-proxy grid          [pjrt]
+//! cat table2 [--fast]           # WikiText-proxy grid          [pjrt]
+//! cat table3                    # ablation grid                [pjrt]
 //! cat complexity                # analytic Fig.-1 series
 //! ```
+//!
+//! `serve` and `complexity` run in the default (hermetic) build; `serve`
+//! picks its backend per [`cat::runtime::Backend::detect_env`] — the
+//! native Rust CAT executor when no artifacts are present — and accepts
+//! `--backend native|pjrt` to force one. Everything else drives the PJRT
+//! runtime and needs `--features pjrt` plus `make artifacts`.
 
 use cat::cli;
 use cat::complexity::{crossover_n, layer_cost, Mechanism};
 use cat::coordinator::{ServeOptions, Server};
 use cat::data::ShapeDataset;
-use cat::harness;
-use cat::runtime::{Runtime, TrainState};
+use cat::runtime::Backend;
 use cat::tensor::HostTensor;
+
+#[cfg(feature = "pjrt")]
+use cat::harness;
+#[cfg(feature = "pjrt")]
+use cat::runtime::{Runtime, TrainState};
+#[cfg(feature = "pjrt")]
 use cat::train::{Schedule, TrainOptions, Trainer};
 
 const USAGE: &str = "usage: cat <command> [flags]
 commands:
-  list         list every artifact config in the manifest
-  train        --config NAME [--steps N] [--lr F] [--seed N]
+  list         list every artifact config in the manifest       [pjrt]
+  train        --config NAME [--steps N] [--lr F] [--seed N]    [pjrt]
                [--checkpoint PATH] [--fused] [--augment]
-  eval         --config NAME [--checkpoint PATH] [--batches N] [--seed N]
-  serve        [--config NAME] [--requests N]
-  table1       [--fast] [--steps N] [--json PATH]    (paper Table 1)
-  table2       [--fast] [--steps N] [--json PATH]    (paper Table 2)
-  table3       [--steps N] [--json PATH]             (paper Table 3 / Fig 2)
+  eval         --config NAME [--checkpoint PATH] [--batches N]  [pjrt]
+  serve        [--config NAME] [--requests N] [--backend pjrt|native]
+  table1       [--fast] [--steps N] [--json PATH]    (Table 1)  [pjrt]
+  table2       [--fast] [--steps N] [--json PATH]    (Table 2)  [pjrt]
+  table3       [--steps N] [--json PATH]   (Table 3 / Fig 2)    [pjrt]
   complexity                                          (paper Fig 1)
-  validate     [--deep]   check manifest/artifact consistency
-global: --artifacts DIR (or env CAT_ARTIFACTS)";
+  validate     [--deep]   check manifest/artifact consistency   [pjrt]
+global: --artifacts DIR (or env CAT_ARTIFACTS)
+[pjrt] commands need a build with `--features pjrt` + `make artifacts`;
+serve/complexity run hermetically on the native backend.";
 
 const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
-                          "batches", "requests", "json", "artifacts"];
+                          "batches", "requests", "json", "artifacts",
+                          "backend"];
 
 fn main() {
     if let Err(e) = run() {
@@ -56,7 +70,11 @@ fn run() -> cat::Result<()> {
         &["list", "train", "eval", "serve", "table1", "table2", "table3",
           "complexity", "validate"])?;
     match cmd {
+        "serve" => cmd_serve(&args),
+        "complexity" => cmd_complexity(),
+        #[cfg(feature = "pjrt")]
         "list" => cmd_list(),
+        #[cfg(feature = "pjrt")]
         "validate" => {
             let report = cat::runtime::validate(&cat::artifacts_dir(),
                                                 args.has("deep"))?;
@@ -64,17 +82,27 @@ fn run() -> cat::Result<()> {
             anyhow::ensure!(report.ok(), "artifact validation failed");
             Ok(())
         }
+        #[cfg(feature = "pjrt")]
         "train" => cmd_train(&args),
+        #[cfg(feature = "pjrt")]
         "eval" => cmd_eval(&args),
-        "serve" => cmd_serve(&args),
+        #[cfg(feature = "pjrt")]
         "table1" => cmd_table(&args, 1),
+        #[cfg(feature = "pjrt")]
         "table2" => cmd_table(&args, 2),
+        #[cfg(feature = "pjrt")]
         "table3" => cmd_table(&args, 3),
-        "complexity" => cmd_complexity(),
+        #[cfg(feature = "pjrt")]
         _ => unreachable!("validated above"),
+        #[cfg(not(feature = "pjrt"))]
+        other => anyhow::bail!(
+            "command '{other}' drives the PJRT runtime; rebuild with \
+             `cargo build --features pjrt`, or use `serve --backend \
+             native` / `complexity` which run hermetically"),
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_list() -> cat::Result<()> {
     let rt = Runtime::from_env()?;
     println!("platform: {}", rt.platform());
@@ -88,6 +116,7 @@ fn cmd_list() -> cat::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &cli::Args) -> cat::Result<()> {
     let config = args.require("config")?;
     let steps: u64 = args.parse_or("steps", 200)?;
@@ -124,6 +153,7 @@ fn cmd_train(args: &cli::Args) -> cat::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_eval(args: &cli::Args) -> cat::Result<()> {
     let config = args.require("config")?;
     let batches: u64 = args.parse_or("batches", 16)?;
@@ -138,6 +168,7 @@ fn cmd_eval(args: &cli::Args) -> cat::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_table(args: &cli::Args, which: u8) -> cat::Result<()> {
     let rt = Runtime::from_env()?;
     let default_steps = if which == 2 { 200 } else { 300 };
@@ -172,23 +203,66 @@ fn cmd_complexity() -> cat::Result<()> {
         let c = layer_cost(Mechanism::CatFft, n, 512, 8).flops;
         println!("{n:>6} {a:>14.3e} {g:>14.3e} {c:>14.3e} {:>8.2}", a / c);
     }
-    println!("modeled FLOP crossover (cat_fft < attention): N = {}",
-             crossover_n(512, 8));
+    match crossover_n(512, 8) {
+        Some(n) => println!("modeled FLOP crossover (cat_fft < attention): \
+                             N = {n}"),
+        None => println!("modeled FLOP crossover: none below 2^23"),
+    }
     Ok(())
 }
 
 /// Spin the router + one worker, fire `requests` single-image requests
 /// from client threads, report latency/throughput and batching efficiency.
+/// Works on either backend; the native path needs no artifacts at all.
 fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
-    let config = args.get_or("config", "vit_b_avg_cat").to_string();
+    let explicit_backend = args.get("backend").is_some();
+    let backend = match args.get("backend") {
+        Some(s) => Backend::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown backend '{s}' (expected pjrt|native)")
+        })?,
+        None => Backend::detect_env(),
+    };
+    let default_model = match backend {
+        Backend::Pjrt => "vit_b_avg_cat",
+        Backend::Native => "native_cat_vit",
+    };
+    let config = args.get_or("config", default_model).to_string();
     let requests: usize = args.parse_or("requests", 256)?;
-    let rt = Runtime::from_env()?;
-    let meta = rt.config(&config)?.clone();
-    anyhow::ensure!(meta.is_vit(), "serve demo expects a ViT config");
-    drop(rt); // the worker thread builds its own runtime (xla is !Send)
 
+    // Fail fast on the silent-misconfiguration path: a named config with
+    // no artifacts would otherwise serve the untrained native demo model
+    // under that label. Explicit --backend native opts back in.
+    if backend == Backend::Native && !explicit_backend
+        && args.get("config").is_some() {
+        anyhow::bail!(
+            "--config {config} requested but no artifacts were found, so \
+             the backend auto-detected as native (which serves the \
+             hermetic demo model, not this config); run `make artifacts` \
+             for the PJRT model, or pass --backend native explicitly to \
+             serve the native demo under this name");
+    }
+
+    #[cfg(feature = "pjrt")]
+    if backend == Backend::Pjrt {
+        let rt = Runtime::from_env()?;
+        let meta = rt.config(&config)?.clone();
+        anyhow::ensure!(meta.is_vit(), "serve demo expects a ViT config");
+        drop(rt); // the worker thread builds its own runtime (xla is !Send)
+    }
+    #[cfg(not(feature = "pjrt"))]
+    anyhow::ensure!(backend == Backend::Native,
+                    "built without the `pjrt` feature — use --backend \
+                     native");
+
+    match backend {
+        Backend::Native => eprintln!(
+            "[serve] backend=native model={config} (hermetic demo model: \
+             untrained CAT-FFT ViT, d=64 h=4 L=2)"),
+        Backend::Pjrt => eprintln!("[serve] backend=pjrt model={config}"),
+    }
+    let opts = ServeOptions { backend, ..Default::default() };
     let server = Server::spawn(cat::artifacts_dir(), &[config.clone()],
-                               ServeOptions::default(), 0)?;
+                               opts, 0)?;
     let handle = server.handle();
     let ds = ShapeDataset::new(123);
     let t0 = std::time::Instant::now();

@@ -1,0 +1,792 @@
+//! Native (pure-Rust) CAT executor: the paper's token-mixing mechanism
+//! computed directly on the host, with no PJRT artifacts in the loop.
+//!
+//! The forward pass mirrors `python/compile/kernels/ref.py` exactly:
+//!
+//! ```text
+//!   z  = x @ W_A                      (B, N, H)   merged d→h projection
+//!   p  = softmax(z) over N            (B, H, N)   one weight vector/head
+//!   v  = split_heads(x @ W_V)         (B, H, N, dh)
+//!   o[i] = Σ_k p[k] · v[(i+k) % N]                circular cross-correlation
+//!        = irfft(conj(rfft(p)) ⊙ rfft(v))         — O(N log N) per channel
+//!   out = merge_heads(o)              (B, N, D)
+//! ```
+//!
+//! [`CatImpl::Gather`] computes the same contraction as the naive O(N²)
+//! rolled gather — the correctness reference and the paper's Fig.-1
+//! baseline. Per the paper's parameter accounting (Tables 1–3) the
+//! mechanism has no output projection: the learnable budget is exactly
+//! `(d + h)·d` ([`CatLayer::param_count`]); the model-level output
+//! projection lives in [`NativeCatModel`]'s classifier head.
+//!
+//! Work is parallelized across batch×head (and across rows for the large
+//! projections) with scoped threads; each worker owns its scratch buffers,
+//! so the per-channel FFT loop is allocation-free.
+
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use super::fft::{rfft_plan, Complex, RfftPlan};
+use crate::data::Rng;
+use crate::Result;
+
+/// Which circulant apply computes the mixing contraction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CatImpl {
+    /// O(N log N): planned rfft → conjugate pointwise multiply → irfft.
+    Fft,
+    /// O(N²): naive rolled gather (correctness + crossover baseline).
+    Gather,
+}
+
+impl CatImpl {
+    pub fn name(self) -> &'static str {
+        match self {
+            CatImpl::Fft => "fft",
+            CatImpl::Gather => "gather",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// small dense linear algebra (shared by both native layers)
+// ---------------------------------------------------------------------------
+
+/// Upper bound on worker threads for one parallel section.
+fn worker_count(tasks: usize) -> usize {
+    let cores = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    cores.min(tasks).min(16).max(1)
+}
+
+/// `out = x @ w` with `x: (rows, inner)`, `w: (inner, cols)`, row-major.
+/// Splits across row blocks when the FLOP count justifies threads.
+pub fn matmul(x: &[f32], rows: usize, inner: usize, w: &[f32], cols: usize,
+              out: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * inner);
+    debug_assert_eq!(w.len(), inner * cols);
+    debug_assert_eq!(out.len(), rows * cols);
+    let workers = worker_count(rows);
+    if workers <= 1 || rows * inner * cols < (1 << 21) {
+        matmul_rows(x, inner, w, cols, out);
+        return;
+    }
+    let chunk_rows = (rows + workers - 1) / workers;
+    std::thread::scope(|s| {
+        for (ci, ochunk) in out.chunks_mut(chunk_rows * cols).enumerate() {
+            let r0 = ci * chunk_rows;
+            let nrows = ochunk.len() / cols;
+            let xchunk = &x[r0 * inner..(r0 + nrows) * inner];
+            s.spawn(move || {
+                matmul_rows(xchunk, inner, w, cols, ochunk);
+            });
+        }
+    });
+}
+
+/// Serial row-major matmul kernel (ikj order: streams `w` rows).
+fn matmul_rows(x: &[f32], inner: usize, w: &[f32], cols: usize,
+               out: &mut [f32]) {
+    out.fill(0.0);
+    for (xrow, orow) in x.chunks_exact(inner).zip(out.chunks_exact_mut(cols)) {
+        for (k, &xv) in xrow.iter().enumerate() {
+            let wrow = &w[k * cols..(k + 1) * cols];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+    }
+}
+
+/// Numerically stable in-place softmax over one row.
+pub fn softmax_in_place(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// `(b, n, h·dh)` → head-major `(b, h, n, dh)`.
+fn split_heads(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
+               dst: &mut [f32]) {
+    let d = h * dh;
+    for bi in 0..b {
+        for head in 0..h {
+            for i in 0..n {
+                let s = (bi * n + i) * d + head * dh;
+                let t = ((bi * h + head) * n + i) * dh;
+                dst[t..t + dh].copy_from_slice(&src[s..s + dh]);
+            }
+        }
+    }
+}
+
+/// Head-major `(b, h, n, dh)` → `(b, n, h·dh)`.
+fn merge_heads(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
+               dst: &mut [f32]) {
+    let d = h * dh;
+    for bi in 0..b {
+        for head in 0..h {
+            for i in 0..n {
+                let s = ((bi * h + head) * n + i) * dh;
+                let t = (bi * n + i) * d + head * dh;
+                dst[t..t + dh].copy_from_slice(&src[s..s + dh]);
+            }
+        }
+    }
+}
+
+/// Run one closure per task across scoped worker threads; every worker
+/// builds its scratch once and processes its bucket serially.
+/// `est_flops_per_task` gates threading: tiny workloads run serially so
+/// thread-spawn latency never dominates (important for the small-N
+/// crossover measurements and single-image serving).
+fn par_for_tasks<T, S, NS, F>(tasks: Vec<T>, est_flops_per_task: usize,
+                              new_scratch: NS, run: F)
+where
+    T: Send,
+    NS: Fn() -> S + Sync,
+    F: Fn(T, &mut S) + Sync,
+{
+    let total_work = tasks.len().saturating_mul(est_flops_per_task);
+    let workers = if total_work >= (1 << 20) {
+        worker_count(tasks.len())
+    } else {
+        1
+    };
+    if workers <= 1 {
+        let mut scratch = new_scratch();
+        for t in tasks {
+            run(t, &mut scratch);
+        }
+        return;
+    }
+    let mut buckets: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, t) in tasks.into_iter().enumerate() {
+        buckets[i % workers].push(t);
+    }
+    let run_ref = &run;
+    let scratch_ref = &new_scratch;
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            s.spawn(move || {
+                let mut scratch = scratch_ref();
+                for t in bucket {
+                    run_ref(t, &mut scratch);
+                }
+            });
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the CAT mixing layer
+// ---------------------------------------------------------------------------
+
+/// One CAT mixing layer: merged `W_A: (d, h)` plus `W_V: (d, d)`.
+pub struct CatLayer {
+    pub d: usize,
+    pub h: usize,
+    w_a: Vec<f32>,
+    w_v: Vec<f32>,
+}
+
+/// Per-worker FFT scratch: spectrum buffers + one column strip.
+struct ConvScratch {
+    plan: Option<Arc<RfftPlan>>,
+    zf: Vec<Complex>,
+    vf: Vec<Complex>,
+    col: Vec<f32>,
+}
+
+impl ConvScratch {
+    fn new(n: usize, mode: CatImpl) -> ConvScratch {
+        match mode {
+            CatImpl::Fft => {
+                let plan = rfft_plan(n);
+                let f = plan.spectrum_len();
+                ConvScratch {
+                    plan: Some(plan),
+                    zf: vec![Complex::ZERO; f],
+                    vf: vec![Complex::ZERO; f],
+                    col: vec![0.0; n],
+                }
+            }
+            CatImpl::Gather => ConvScratch {
+                plan: None,
+                zf: Vec::new(),
+                vf: Vec::new(),
+                col: Vec::new(),
+            },
+        }
+    }
+}
+
+/// One (batch, head) circulant apply: `o[i] = Σ_k zs[k] v[(i+k)%n]`.
+fn apply_circulant(zs: &[f32], v: &[f32], o: &mut [f32], n: usize,
+                   dh: usize, mode: CatImpl, scratch: &mut ConvScratch) {
+    match mode {
+        CatImpl::Fft => {
+            let plan = scratch.plan.as_ref().expect("fft scratch").clone();
+            let f = plan.spectrum_len();
+            plan.forward(zs, &mut scratch.zf);
+            for c in 0..dh {
+                for i in 0..n {
+                    scratch.col[i] = v[i * dh + c];
+                }
+                plan.forward(&scratch.col, &mut scratch.vf);
+                for k in 0..f {
+                    scratch.vf[k] = scratch.zf[k].conj() * scratch.vf[k];
+                }
+                plan.inverse(&mut scratch.vf, &mut scratch.col);
+                for i in 0..n {
+                    o[i * dh + c] = scratch.col[i];
+                }
+            }
+        }
+        CatImpl::Gather => {
+            for i in 0..n {
+                let orow = &mut o[i * dh..(i + 1) * dh];
+                orow.fill(0.0);
+                for k in 0..n {
+                    let w = zs[k];
+                    let vrow = &v[((i + k) % n) * dh..((i + k) % n) * dh + dh];
+                    for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                        *ov += w * vv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl CatLayer {
+    /// Deterministic init (0.02-scaled normal, matching `_dense_init` in
+    /// `python/compile/mechanisms.py`).
+    pub fn init(d: usize, h: usize, rng: &mut Rng) -> CatLayer {
+        assert!(h > 0 && d % h == 0, "d ({d}) must divide into h ({h}) heads");
+        let w_a = (0..d * h).map(|_| 0.02 * rng.normal()).collect();
+        let w_v = (0..d * d).map(|_| 0.02 * rng.normal()).collect();
+        CatLayer { d, h, w_a, w_v }
+    }
+
+    /// Learnable parameters: `(d + h)·d`, the paper's CAT budget.
+    pub fn param_count(&self) -> usize {
+        (self.d + self.h) * self.d
+    }
+
+    /// Mix tokens: `x: (b, n, d)` row-major → `(b, n, d)`.
+    pub fn forward(&self, x: &[f32], b: usize, n: usize, mode: CatImpl)
+                   -> Result<Vec<f32>> {
+        let (d, h) = (self.d, self.h);
+        let dh = d / h;
+        ensure!(x.len() == b * n * d,
+                "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
+        if mode == CatImpl::Fft {
+            ensure!(n.is_power_of_two(),
+                    "CAT-FFT needs power-of-two N, got {n}");
+        }
+
+        // z = x @ W_A, then head-major softmaxed weights (b, h, n)
+        let mut z = vec![0.0f32; b * n * h];
+        matmul(x, b * n, d, &self.w_a, h, &mut z);
+        let mut zs = vec![0.0f32; b * h * n];
+        for bi in 0..b {
+            for head in 0..h {
+                for i in 0..n {
+                    zs[(bi * h + head) * n + i] = z[(bi * n + i) * h + head];
+                }
+            }
+        }
+        for row in zs.chunks_mut(n) {
+            softmax_in_place(row);
+        }
+
+        // v = x @ W_V, head-major (b, h, n, dh)
+        let mut v = vec![0.0f32; b * n * d];
+        matmul(x, b * n, d, &self.w_v, d, &mut v);
+        let mut vh = vec![0.0f32; b * h * n * dh];
+        split_heads(&v, b, n, h, dh, &mut vh);
+
+        // per-(batch, head) circulant apply into head-major output
+        let mut oh = vec![0.0f32; b * h * n * dh];
+        let tasks: Vec<(&[f32], &[f32], &mut [f32])> = zs
+            .chunks(n)
+            .zip(vh.chunks(n * dh))
+            .zip(oh.chunks_mut(n * dh))
+            .map(|((zc, vc), oc)| (zc, vc, oc))
+            .collect();
+        let est = match mode {
+            CatImpl::Fft => 5 * n * (n.trailing_zeros() as usize + 1) * dh,
+            CatImpl::Gather => 2 * n * n * dh,
+        };
+        par_for_tasks(
+            tasks,
+            est,
+            || ConvScratch::new(n, mode),
+            |(zc, vc, oc), scratch| {
+                apply_circulant(zc, vc, oc, n, dh, mode, scratch);
+            },
+        );
+
+        let mut out = vec![0.0f32; b * n * d];
+        merge_heads(&oh, b, n, h, dh, &mut out);
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native softmax attention (the O(N²) wallclock baseline)
+// ---------------------------------------------------------------------------
+
+/// Standard multi-head softmax attention, row-streamed (O(N) scratch).
+pub struct AttentionLayer {
+    pub d: usize,
+    pub h: usize,
+    w_q: Vec<f32>,
+    w_k: Vec<f32>,
+    w_v: Vec<f32>,
+}
+
+impl AttentionLayer {
+    pub fn init(d: usize, h: usize, rng: &mut Rng) -> AttentionLayer {
+        assert!(h > 0 && d % h == 0, "d ({d}) must divide into h ({h}) heads");
+        let mut mk = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| 0.02 * rng.normal()).collect()
+        };
+        AttentionLayer {
+            d,
+            h,
+            w_q: mk(d * d),
+            w_k: mk(d * d),
+            w_v: mk(d * d),
+        }
+    }
+
+    /// Paper accounting: `3·d²` learnables.
+    pub fn param_count(&self) -> usize {
+        3 * self.d * self.d
+    }
+
+    /// `x: (b, n, d)` → `(b, n, d)` via softmax(QKᵀ/√dh)·V per head.
+    pub fn forward(&self, x: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
+        let (d, h) = (self.d, self.h);
+        let dh = d / h;
+        ensure!(x.len() == b * n * d,
+                "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
+        let mut proj = vec![0.0f32; b * n * d];
+        let mut heads = vec![vec![0.0f32; b * h * n * dh]; 3];
+        for (w, dst) in [&self.w_q, &self.w_k, &self.w_v]
+            .into_iter()
+            .zip(heads.iter_mut()) {
+            matmul(x, b * n, d, w, d, &mut proj);
+            split_heads(&proj, b, n, h, dh, dst);
+        }
+        let (qh, rest) = heads.split_at(1);
+        let (kh, vh) = rest.split_at(1);
+        let scale = 1.0 / (dh as f32).sqrt();
+
+        let mut oh = vec![0.0f32; b * h * n * dh];
+        let tasks: Vec<(&[f32], &[f32], &[f32], &mut [f32])> = qh[0]
+            .chunks(n * dh)
+            .zip(kh[0].chunks(n * dh))
+            .zip(vh[0].chunks(n * dh))
+            .zip(oh.chunks_mut(n * dh))
+            .map(|(((qc, kc), vc), oc)| (qc, kc, vc, oc))
+            .collect();
+        par_for_tasks(
+            tasks,
+            4 * n * n * dh,
+            || vec![0.0f32; n],
+            |(qc, kc, vc, oc), row| {
+                for i in 0..n {
+                    let q = &qc[i * dh..(i + 1) * dh];
+                    for j in 0..n {
+                        let k = &kc[j * dh..(j + 1) * dh];
+                        let mut dot = 0.0f32;
+                        for c in 0..dh {
+                            dot += q[c] * k[c];
+                        }
+                        row[j] = dot * scale;
+                    }
+                    softmax_in_place(row);
+                    let orow = &mut oc[i * dh..(i + 1) * dh];
+                    orow.fill(0.0);
+                    for j in 0..n {
+                        let w = row[j];
+                        let vrow = &vc[j * dh..(j + 1) * dh];
+                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                            *ov += w * vv;
+                        }
+                    }
+                }
+            },
+        );
+
+        let mut out = vec![0.0f32; b * n * d];
+        merge_heads(&oh, b, n, h, dh, &mut out);
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the native serving model (ViT-shaped CAT classifier)
+// ---------------------------------------------------------------------------
+
+/// Shape of the hermetic serving model (defaults match the ShapeDataset
+/// substrate: 3×32×32 images, 10 classes, 64 tokens).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeVitConfig {
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub image_size: usize,
+    pub patch_size: usize,
+    pub n_channels: usize,
+    pub n_classes: usize,
+    pub cat_impl: CatImpl,
+}
+
+impl Default for NativeVitConfig {
+    fn default() -> Self {
+        NativeVitConfig {
+            d_model: 64,
+            n_heads: 4,
+            n_layers: 2,
+            image_size: 32,
+            patch_size: 4,
+            n_channels: 3,
+            n_classes: 10,
+            cat_impl: CatImpl::Fft,
+        }
+    }
+}
+
+impl NativeVitConfig {
+    pub fn n_tokens(&self) -> usize {
+        let per_side = self.image_size / self.patch_size;
+        per_side * per_side
+    }
+
+    pub fn patch_dim(&self) -> usize {
+        self.patch_size * self.patch_size * self.n_channels
+    }
+}
+
+/// Learned scale/shift of a LayerNorm.
+struct LayerNorm {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+}
+
+impl LayerNorm {
+    fn identity(d: usize) -> LayerNorm {
+        LayerNorm { gamma: vec![1.0; d], beta: vec![0.0; d] }
+    }
+
+    /// Normalize each `d`-sized row of `src` into `dst`.
+    fn apply(&self, src: &[f32], dst: &mut [f32]) {
+        let d = self.gamma.len();
+        for (srow, drow) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
+            let mean = srow.iter().sum::<f32>() / d as f32;
+            let var = srow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                / d as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for c in 0..d {
+                drow[c] = (srow[c] - mean) * inv * self.gamma[c]
+                    + self.beta[c];
+            }
+        }
+    }
+}
+
+/// One transformer block: pre-LN CAT mixing + pre-LN 2×-wide ReLU MLP.
+struct Block {
+    ln1: LayerNorm,
+    cat: CatLayer,
+    ln2: LayerNorm,
+    mlp_w1: Vec<f32>,
+    mlp_b1: Vec<f32>,
+    mlp_w2: Vec<f32>,
+    mlp_b2: Vec<f32>,
+}
+
+/// Hermetic CAT image classifier served by the native backend: patch
+/// embedding + learned positions + [`Block`] stack + mean pool + linear
+/// head. Entirely deterministic in `(config, seed)`.
+pub struct NativeCatModel {
+    pub cfg: NativeVitConfig,
+    embed_w: Vec<f32>,
+    embed_b: Vec<f32>,
+    pos: Vec<f32>,
+    blocks: Vec<Block>,
+    ln_f: LayerNorm,
+    head_w: Vec<f32>,
+    head_b: Vec<f32>,
+}
+
+impl NativeCatModel {
+    pub fn new(cfg: NativeVitConfig, seed: u64) -> NativeCatModel {
+        let d = cfg.d_model;
+        let n = cfg.n_tokens();
+        let pd = cfg.patch_dim();
+        let mut rng = Rng::new(seed ^ 0xCA7_F00D);
+        let mut mk = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| 0.02 * rng.normal()).collect()
+        };
+        let embed_w = mk(pd * d);
+        let pos = mk(n * d);
+        let head_w = mk(d * cfg.n_classes);
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for layer in 0..cfg.n_layers {
+            let mut brng = rng.fork(layer as u64);
+            blocks.push(Block {
+                ln1: LayerNorm::identity(d),
+                cat: CatLayer::init(d, cfg.n_heads, &mut brng),
+                ln2: LayerNorm::identity(d),
+                mlp_w1: (0..d * 2 * d).map(|_| 0.02 * brng.normal()).collect(),
+                mlp_b1: vec![0.0; 2 * d],
+                mlp_w2: (0..2 * d * d).map(|_| 0.02 * brng.normal()).collect(),
+                mlp_b2: vec![0.0; d],
+            });
+        }
+        NativeCatModel {
+            cfg,
+            embed_w,
+            embed_b: vec![0.0; d],
+            pos,
+            blocks,
+            ln_f: LayerNorm::identity(d),
+            head_w,
+            head_b: vec![0.0; cfg.n_classes],
+        }
+    }
+
+    /// Total learnable scalars (diagnostics, `cat list --backend native`).
+    pub fn param_count(&self) -> usize {
+        let d = self.cfg.d_model;
+        let per_block = self.blocks.first().map_or(0, |b| {
+            b.cat.param_count()
+                + b.mlp_w1.len() + b.mlp_b1.len()
+                + b.mlp_w2.len() + b.mlp_b2.len()
+                + 2 * 2 * d
+        });
+        self.embed_w.len() + self.embed_b.len() + self.pos.len()
+            + self.blocks.len() * per_block
+            + 2 * d
+            + self.head_w.len() + self.head_b.len()
+    }
+
+    /// Classify a batch of CHW images: `(b, C·H·W)` flat → `(b, classes)`.
+    pub fn forward_batch(&self, images: &[f32], b: usize) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, n, pd) = (cfg.d_model, cfg.n_tokens(), cfg.patch_dim());
+        let image_len = cfg.n_channels * cfg.image_size * cfg.image_size;
+        ensure!(images.len() == b * image_len,
+                "images have {} elements, expected {}x{}", images.len(), b,
+                image_len);
+
+        // patchify: (b, n, patch_dim)
+        let per_side = cfg.image_size / cfg.patch_size;
+        let (ps, is) = (cfg.patch_size, cfg.image_size);
+        let mut patches = vec![0.0f32; b * n * pd];
+        for bi in 0..b {
+            let img = &images[bi * image_len..(bi + 1) * image_len];
+            for py in 0..per_side {
+                for px in 0..per_side {
+                    let tok = py * per_side + px;
+                    let dst = &mut patches[(bi * n + tok) * pd..][..pd];
+                    let mut w = 0;
+                    for c in 0..cfg.n_channels {
+                        for dy in 0..ps {
+                            for dx in 0..ps {
+                                dst[w] = img[c * is * is
+                                    + (py * ps + dy) * is
+                                    + px * ps + dx];
+                                w += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // embed + positions
+        let mut x = vec![0.0f32; b * n * d];
+        matmul(&patches, b * n, pd, &self.embed_w, d, &mut x);
+        for bi in 0..b {
+            for tok in 0..n {
+                let row = &mut x[(bi * n + tok) * d..][..d];
+                for c in 0..d {
+                    row[c] += self.embed_b[c] + self.pos[tok * d + c];
+                }
+            }
+        }
+
+        // block stack
+        let mut norm = vec![0.0f32; b * n * d];
+        for block in &self.blocks {
+            block.ln1.apply(&x, &mut norm);
+            let mixed = block.cat.forward(&norm, b, n, cfg.cat_impl)?;
+            for (xv, mv) in x.iter_mut().zip(&mixed) {
+                *xv += mv;
+            }
+            block.ln2.apply(&x, &mut norm);
+            let mut hid = vec![0.0f32; b * n * 2 * d];
+            matmul(&norm, b * n, d, &block.mlp_w1, 2 * d, &mut hid);
+            for row in hid.chunks_exact_mut(2 * d) {
+                for (v, &bias) in row.iter_mut().zip(&block.mlp_b1) {
+                    *v = (*v + bias).max(0.0);
+                }
+            }
+            let mut mlp = vec![0.0f32; b * n * d];
+            matmul(&hid, b * n, 2 * d, &block.mlp_w2, d, &mut mlp);
+            for (row, xrow) in mlp
+                .chunks_exact(d)
+                .zip(x.chunks_exact_mut(d)) {
+                for (xv, (&mv, &bias)) in
+                    xrow.iter_mut().zip(row.iter().zip(&block.mlp_b2)) {
+                    *xv += mv + bias;
+                }
+            }
+        }
+
+        // final LN, mean pool over tokens, classifier head
+        self.ln_f.apply(&x, &mut norm);
+        let mut pooled = vec![0.0f32; b * d];
+        for bi in 0..b {
+            let prow = &mut pooled[bi * d..(bi + 1) * d];
+            for tok in 0..n {
+                let row = &norm[(bi * n + tok) * d..][..d];
+                for c in 0..d {
+                    prow[c] += row[c];
+                }
+            }
+            for v in prow.iter_mut() {
+                *v /= n as f32;
+            }
+        }
+        let mut logits = vec![0.0f32; b * cfg.n_classes];
+        matmul(&pooled, b, d, &self.head_w, cfg.n_classes, &mut logits);
+        for row in logits.chunks_exact_mut(cfg.n_classes) {
+            for (v, &bias) in row.iter_mut().zip(&self.head_b) {
+                *v += bias;
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Classify one CHW image (serving single-example path).
+    pub fn forward_image(&self, image: &[f32]) -> Result<Vec<f32>> {
+        self.forward_batch(image, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_x(b: usize, n: usize, d: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..b * n * d).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn fft_matches_gather() {
+        let (b, n, d, h) = (2, 16, 12, 3);
+        let mut rng = Rng::new(7);
+        let layer = CatLayer::init(d, h, &mut rng);
+        let x = random_x(b, n, d, 9);
+        let fft = layer.forward(&x, b, n, CatImpl::Fft).unwrap();
+        let gather = layer.forward(&x, b, n, CatImpl::Gather).unwrap();
+        assert_eq!(fft.len(), gather.len());
+        for (i, (a, g)) in fft.iter().zip(&gather).enumerate() {
+            assert!((a - g).abs() < 1e-4, "element {i}: {a} vs {g}");
+        }
+    }
+
+    #[test]
+    fn cat_param_budget() {
+        let mut rng = Rng::new(0);
+        let layer = CatLayer::init(64, 4, &mut rng);
+        assert_eq!(layer.param_count(), (64 + 4) * 64);
+        let attn = AttentionLayer::init(64, 4, &mut rng);
+        assert_eq!(attn.param_count(), 3 * 64 * 64);
+        assert!(layer.param_count() < attn.param_count());
+    }
+
+    #[test]
+    fn gather_on_non_power_of_two_fft_rejected() {
+        let mut rng = Rng::new(1);
+        let layer = CatLayer::init(12, 3, &mut rng);
+        let x = random_x(1, 12, 12, 2);
+        assert!(layer.forward(&x, 1, 12, CatImpl::Gather).is_ok());
+        assert!(layer.forward(&x, 1, 12, CatImpl::Fft).is_err());
+    }
+
+    #[test]
+    fn zero_query_attention_averages_values() {
+        // W_Q = 0 -> uniform softmax -> every output row is mean_j(v_j)
+        let (b, n, d, h) = (1, 8, 8, 2);
+        let mut rng = Rng::new(3);
+        let mut layer = AttentionLayer::init(d, h, &mut rng);
+        layer.w_q.fill(0.0);
+        let x = random_x(b, n, d, 4);
+        let out = layer.forward(&x, b, n).unwrap();
+        for i in 1..n {
+            for c in 0..d {
+                assert!((out[i * d + c] - out[c]).abs() < 1e-5,
+                        "row {i} ch {c} differs under uniform attention");
+            }
+        }
+    }
+
+    #[test]
+    fn model_forward_is_deterministic_and_finite() {
+        let cfg = NativeVitConfig::default();
+        let model = NativeCatModel::new(cfg, 42);
+        let image_len = cfg.n_channels * cfg.image_size * cfg.image_size;
+        let mut rng = Rng::new(5);
+        let images: Vec<f32> =
+            (0..2 * image_len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let a = model.forward_batch(&images, 2).unwrap();
+        let b = model.forward_batch(&images, 2).unwrap();
+        assert_eq!(a.len(), 2 * cfg.n_classes);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+        // same seed -> same model; different seed -> different logits
+        let same = NativeCatModel::new(cfg, 42).forward_batch(&images, 2)
+            .unwrap();
+        assert_eq!(a, same);
+        let other = NativeCatModel::new(cfg, 43).forward_batch(&images, 2)
+            .unwrap();
+        assert_ne!(a, other);
+        assert!(model.param_count() > 0);
+    }
+
+    #[test]
+    fn model_fft_matches_gather_end_to_end() {
+        let mut cfg = NativeVitConfig::default();
+        cfg.n_layers = 1;
+        let image_len = cfg.n_channels * cfg.image_size * cfg.image_size;
+        let mut rng = Rng::new(11);
+        let images: Vec<f32> =
+            (0..image_len).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let fft_logits = NativeCatModel::new(cfg, 1)
+            .forward_image(&images).unwrap();
+        cfg.cat_impl = CatImpl::Gather;
+        let gather_logits = NativeCatModel::new(cfg, 1)
+            .forward_image(&images).unwrap();
+        for (a, g) in fft_logits.iter().zip(&gather_logits) {
+            assert!((a - g).abs() < 1e-3, "{a} vs {g}");
+        }
+    }
+}

@@ -1,0 +1,416 @@
+//! Planned FFTs for the native CAT backend: an iterative in-place radix-2
+//! complex FFT plus a packed real FFT (rfft/irfft), with all twiddle
+//! factors and bit-reversal permutations precomputed once per length in an
+//! [`FftPlan`] / [`RfftPlan`] and shared through a global plan cache
+//! ([`rfft_plan`]). The hot loops perform **zero allocation**: every
+//! transform runs in place over caller-provided buffers, so repeated
+//! same-length calls touch only the cached plan (see
+//! `plan_cache_stats`, asserted in `tests/native_backend.rs`).
+//!
+//! Conventions match `numpy.fft` (and therefore the JAX reference kernels
+//! in `python/compile/kernels/ref.py`):
+//!
+//! * `forward` computes `X[k] = Σ_j x[j]·exp(-2πi jk/n)` (no scaling);
+//! * `inverse` applies the `1/n` factor;
+//! * the real FFT of length `n` returns `n/2 + 1` spectrum bins, computed
+//!   through one complex FFT of length `n/2` (even/odd packing + an O(n)
+//!   untangle pass) — the "planned real-FFT" half of the CAT speedup.
+//!
+//! Lengths must be powers of two (the paper's sequence lengths all are;
+//! `CatLayer` validates before dispatching here).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Single-precision complex number (kept minimal: the offline build has no
+/// num-complex crate, and the FFT needs only ring operations).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Complex {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl Complex {
+    pub const ZERO: Complex = Complex { re: 0.0, im: 0.0 };
+
+    #[inline]
+    pub fn new(re: f32, im: f32) -> Complex {
+        Complex { re, im }
+    }
+
+    #[inline]
+    pub fn conj(self) -> Complex {
+        Complex { re: self.re, im: -self.im }
+    }
+
+    #[inline]
+    pub fn scale(self, s: f32) -> Complex {
+        Complex { re: self.re * s, im: self.im * s }
+    }
+
+    /// Squared magnitude (diagnostics / tests).
+    #[inline]
+    pub fn norm_sq(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+}
+
+impl std::ops::Add for Complex {
+    type Output = Complex;
+    #[inline]
+    fn add(self, o: Complex) -> Complex {
+        Complex { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl std::ops::Sub for Complex {
+    type Output = Complex;
+    #[inline]
+    fn sub(self, o: Complex) -> Complex {
+        Complex { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl std::ops::Mul for Complex {
+    type Output = Complex;
+    #[inline]
+    fn mul(self, o: Complex) -> Complex {
+        Complex {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+/// Twiddle `exp(-2πi k / n)` computed in f64 and rounded once.
+fn twiddle(k: usize, n: usize) -> Complex {
+    let angle = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+    Complex::new(angle.cos() as f32, angle.sin() as f32)
+}
+
+/// Precomputed radix-2 complex FFT of one power-of-two length.
+pub struct FftPlan {
+    n: usize,
+    /// bit-reversal permutation over 0..n
+    bitrev: Vec<u32>,
+    /// `twiddle[k] = exp(-2πi k / n)` for `k < max(n/2, 1)`
+    twiddle: Vec<Complex>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n >= 1 && n.is_power_of_two(),
+                "FFT length must be a power of two, got {n}");
+        let log2n = n.trailing_zeros();
+        let mut bitrev = vec![0u32; n];
+        for i in 1..n {
+            bitrev[i] = (bitrev[i >> 1] >> 1)
+                | (((i as u32) & 1) << (log2n - 1));
+        }
+        let twiddle = (0..(n / 2).max(1)).map(|k| twiddle(k, n)).collect();
+        FftPlan { n, bitrev, twiddle }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// In-place forward DFT (no scaling).
+    pub fn forward(&self, buf: &mut [Complex]) {
+        self.transform(buf, false);
+    }
+
+    /// In-place inverse DFT (scales by `1/n`).
+    pub fn inverse(&self, buf: &mut [Complex]) {
+        self.transform(buf, true);
+    }
+
+    fn transform(&self, buf: &mut [Complex], inverse: bool) {
+        let n = self.n;
+        assert_eq!(buf.len(), n, "buffer length != plan length");
+        for i in 0..n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut m = 2;
+        while m <= n {
+            let half = m / 2;
+            let stride = n / m;
+            let mut base = 0;
+            while base < n {
+                for j in 0..half {
+                    let mut w = self.twiddle[j * stride];
+                    if inverse {
+                        w = w.conj();
+                    }
+                    let t = w * buf[base + j + half];
+                    let u = buf[base + j];
+                    buf[base + j] = u + t;
+                    buf[base + j + half] = u - t;
+                }
+                base += m;
+            }
+            m *= 2;
+        }
+        if inverse {
+            let inv_n = 1.0 / n as f32;
+            for v in buf.iter_mut() {
+                *v = v.scale(inv_n);
+            }
+        }
+    }
+}
+
+/// Planned real FFT of length `n` via one complex FFT of length `n/2`.
+pub struct RfftPlan {
+    n: usize,
+    half: FftPlan,
+    /// `omega[k] = exp(-2πi k / n)` for `k <= n/4` (the untangle pass
+    /// touches pairs `(k, n/2 - k)`, so only the first quarter is needed)
+    omega: Vec<Complex>,
+}
+
+impl RfftPlan {
+    pub fn new(n: usize) -> RfftPlan {
+        assert!(n >= 1 && n.is_power_of_two(),
+                "rFFT length must be a power of two, got {n}");
+        RfftPlan {
+            n,
+            half: FftPlan::new((n / 2).max(1)),
+            omega: (0..=n / 4).map(|k| twiddle(k, n)).collect(),
+        }
+    }
+
+    /// Real input length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Spectrum bins: `n/2 + 1`.
+    pub fn spectrum_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Real forward FFT: `x` (length n) → `spec` (length n/2 + 1).
+    /// Allocation-free; `spec` doubles as the packed work buffer.
+    pub fn forward(&self, x: &[f32], spec: &mut [Complex]) {
+        let n = self.n;
+        assert_eq!(x.len(), n, "input length != plan length");
+        assert_eq!(spec.len(), self.spectrum_len(), "bad spectrum length");
+        if n == 1 {
+            spec[0] = Complex::new(x[0], 0.0);
+            return;
+        }
+        let h = n / 2;
+        // pack x[2k] + i·x[2k+1] and transform at half length
+        for k in 0..h {
+            spec[k] = Complex::new(x[2 * k], x[2 * k + 1]);
+        }
+        self.half.forward(&mut spec[..h]);
+        // untangle: X[k] = E_k + ω^k O_k over symmetric pairs (k, h-k)
+        let z0 = spec[0];
+        spec[0] = Complex::new(z0.re + z0.im, 0.0);
+        spec[h] = Complex::new(z0.re - z0.im, 0.0);
+        for k in 1..=h / 2 {
+            let zk = spec[k];
+            let zmk = spec[h - k];
+            let e = (zk + zmk.conj()).scale(0.5);
+            let d = zk - zmk.conj();
+            let o = Complex::new(d.im * 0.5, -d.re * 0.5); // d · (-i/2)
+            let w = self.omega[k];
+            spec[k] = e + w * o;
+            if k != h - k {
+                // ω^{h-k} = -conj(ω^k)
+                let whk = Complex::new(-w.re, w.im);
+                spec[h - k] = e.conj() + whk * o.conj();
+            }
+        }
+    }
+
+    /// Real inverse FFT: `spec` (length n/2 + 1, **destroyed**) → `out`
+    /// (length n). Allocation-free; includes the `1/n` scaling.
+    pub fn inverse(&self, spec: &mut [Complex], out: &mut [f32]) {
+        let n = self.n;
+        assert_eq!(out.len(), n, "output length != plan length");
+        assert_eq!(spec.len(), self.spectrum_len(), "bad spectrum length");
+        if n == 1 {
+            out[0] = spec[0].re;
+            return;
+        }
+        let h = n / 2;
+        // retangle: recover the packed half-length spectrum Z in place
+        let x0 = spec[0];
+        let xh = spec[h];
+        spec[0] = Complex::new((x0.re + xh.re) * 0.5,
+                               (x0.re - xh.re) * 0.5);
+        for k in 1..=h / 2 {
+            let xk = spec[k];
+            let xmk = spec[h - k];
+            let e = (xk + xmk.conj()).scale(0.5);
+            let d = (xk - xmk.conj()).scale(0.5);
+            let w = self.omega[k];
+            let o = w.conj() * d;
+            // Z[k] = E + i·O; Z[h-k] = conj(E) + i·conj(O)
+            spec[k] = Complex::new(e.re - o.im, e.im + o.re);
+            if k != h - k {
+                spec[h - k] = Complex::new(e.re + o.im, -e.im + o.re);
+            }
+        }
+        self.half.inverse(&mut spec[..h]);
+        for k in 0..h {
+            out[2 * k] = spec[k].re;
+            out[2 * k + 1] = spec[k].im;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// plan cache
+// ---------------------------------------------------------------------------
+
+static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<RfftPlan>>>> =
+    OnceLock::new();
+static PLAN_HITS: AtomicU64 = AtomicU64::new(0);
+static PLAN_MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Fetch (or build once) the shared real-FFT plan for length `n`.
+///
+/// Plans are immutable after construction, so one `Arc` serves every
+/// thread; repeat calls of the same length never allocate a new plan.
+pub fn rfft_plan(n: usize) -> Arc<RfftPlan> {
+    let cache = PLAN_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().expect("plan cache poisoned");
+    if let Some(plan) = map.get(&n) {
+        PLAN_HITS.fetch_add(1, Ordering::Relaxed);
+        return plan.clone();
+    }
+    PLAN_MISSES.fetch_add(1, Ordering::Relaxed);
+    let plan = Arc::new(RfftPlan::new(n));
+    map.insert(n, plan.clone());
+    plan
+}
+
+/// Cumulative (hits, misses) of the plan cache — misses is exactly the
+/// number of plans ever constructed through [`rfft_plan`].
+pub fn plan_cache_stats() -> (u64, u64) {
+    (PLAN_HITS.load(Ordering::Relaxed), PLAN_MISSES.load(Ordering::Relaxed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// O(n²) reference DFT in f64 (ground truth for the butterflies).
+    fn naive_dft(x: &[Complex]) -> Vec<Complex> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut re = 0.0f64;
+                let mut im = 0.0f64;
+                for (j, v) in x.iter().enumerate() {
+                    let ang = -2.0 * std::f64::consts::PI
+                        * ((k * j) % n) as f64
+                        / n as f64;
+                    let (s, c) = ang.sin_cos();
+                    re += v.re as f64 * c - v.im as f64 * s;
+                    im += v.re as f64 * s + v.im as f64 * c;
+                }
+                Complex::new(re as f32, im as f32)
+            })
+            .collect()
+    }
+
+    fn signal(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::data::Rng::new(seed);
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        for n in [1usize, 2, 4, 8, 32, 128] {
+            let plan = FftPlan::new(n);
+            let re = signal(n, 1);
+            let im = signal(n, 2);
+            let x: Vec<Complex> = re
+                .iter()
+                .zip(&im)
+                .map(|(&r, &i)| Complex::new(r, i))
+                .collect();
+            let mut buf = x.clone();
+            plan.forward(&mut buf);
+            let want = naive_dft(&x);
+            for (a, b) in buf.iter().zip(&want) {
+                assert!((*a - *b).norm_sq().sqrt() < 1e-3 * (n as f32).max(1.0),
+                        "n={n}: {a:?} vs {b:?}");
+            }
+            plan.inverse(&mut buf);
+            for (a, b) in buf.iter().zip(&x) {
+                assert!((*a - *b).norm_sq().sqrt() < 1e-4, "n={n} roundtrip");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_matches_complex_fft() {
+        for n in [1usize, 2, 4, 16, 64, 512] {
+            let x = signal(n, 3);
+            let rplan = RfftPlan::new(n);
+            let mut spec = vec![Complex::ZERO; rplan.spectrum_len()];
+            rplan.forward(&x, &mut spec);
+            let full: Vec<Complex> =
+                x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+            let want = naive_dft(&full);
+            for k in 0..rplan.spectrum_len() {
+                assert!((spec[k] - want[k]).norm_sq().sqrt() < 2e-3,
+                        "n={n} bin {k}: {:?} vs {:?}", spec[k], want[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_irfft_roundtrip() {
+        for n in [1usize, 2, 8, 64, 1024, 4096] {
+            let x = signal(n, 5);
+            let plan = RfftPlan::new(n);
+            let mut spec = vec![Complex::ZERO; plan.spectrum_len()];
+            let mut back = vec![0.0f32; n];
+            plan.forward(&x, &mut spec);
+            plan.inverse(&mut spec, &mut back);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-5, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cache_reuses_plans() {
+        // repeat calls must hand back the same Arc (pointer identity is
+        // immune to other tests concurrently caching different lengths)
+        let first = rfft_plan(2048);
+        let hits_before = plan_cache_stats().0;
+        for _ in 0..64 {
+            let p = rfft_plan(2048);
+            assert_eq!(p.len(), 2048);
+            assert!(Arc::ptr_eq(&first, &p),
+                    "repeat rfft_plan(2048) constructed a new plan");
+        }
+        assert!(plan_cache_stats().0 >= hits_before + 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_rejected() {
+        let _ = FftPlan::new(12);
+    }
+}

@@ -1,0 +1,21 @@
+//! Native backend: CAT computed in pure Rust, no PJRT artifacts required.
+//!
+//! Two layers:
+//!
+//! * [`fft`] — planned radix-2 complex FFT + packed real FFT with a global
+//!   per-length plan cache (twiddles and bit-reversal computed once, zero
+//!   allocation in the transform hot loops);
+//! * [`cat`] — the CAT mixing layer (FFT and O(N²) gather reference), a
+//!   native softmax-attention baseline, and the hermetic serving model
+//!   ([`NativeCatModel`]).
+//!
+//! This is the `Backend::Native` half of the backend story (DESIGN.md §6):
+//! the coordinator serves and the benches measure real CAT wallclock even
+//! in a fresh checkout with no `artifacts/` directory and no XLA runtime.
+
+pub mod cat;
+pub mod fft;
+
+pub use cat::{matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
+              NativeCatModel, NativeVitConfig};
+pub use fft::{plan_cache_stats, rfft_plan, Complex, FftPlan, RfftPlan};

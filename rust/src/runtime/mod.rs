@@ -1,17 +1,94 @@
-//! PJRT runtime layer: artifact manifest, executable cache, training state.
+//! Runtime layer: backend selection plus the PJRT execution stack.
+//!
+//! The artifact manifest ([`artifact`]) is always available — it is pure
+//! data. The PJRT pieces (executable cache, training state, deep
+//! validation) compile only with the `pjrt` feature; without it the
+//! coordinator runs on [`crate::native`], selected through [`Backend`].
 //!
 //! ```no_run
+//! # #[cfg(feature = "pjrt")] {
 //! use cat::runtime::Runtime;
 //! let rt = Runtime::from_env().unwrap();
 //! let fwd = rt.load("vit_b_avg_cat", "forward").unwrap();
+//! # }
 //! ```
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod params;
+#[cfg(feature = "pjrt")]
 pub mod validate;
 
 pub use artifact::{ConfigMeta, EntryMeta, Manifest, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use client::{Executable, Runtime};
+#[cfg(feature = "pjrt")]
 pub use params::TrainState;
+#[cfg(feature = "pjrt")]
 pub use validate::validate;
+
+/// Which execution engine computes forward passes.
+///
+/// * [`Backend::Pjrt`] — AOT-compiled HLO artifacts through the PJRT CPU
+///   client (feature `pjrt`; needs `make artifacts`).
+/// * [`Backend::Native`] — the in-crate Rust CAT executor
+///   ([`crate::native`]); hermetic, no artifacts, no Python anywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    Pjrt,
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "pjrt" => Some(Backend::Pjrt),
+            "native" => Some(Backend::Native),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Pjrt => "pjrt",
+            Backend::Native => "native",
+        }
+    }
+
+    /// Pick the best available backend: PJRT when it is compiled in *and*
+    /// an artifact manifest exists under `artifacts`, else native.
+    pub fn detect(artifacts: &std::path::Path) -> Backend {
+        if cfg!(feature = "pjrt")
+            && artifacts.join("manifest.json").exists() {
+            Backend::Pjrt
+        } else {
+            Backend::Native
+        }
+    }
+
+    /// [`Backend::detect`] over the default artifact directory.
+    pub fn detect_env() -> Backend {
+        Backend::detect(&crate::artifacts_dir())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [Backend::Pjrt, Backend::Native] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("tpu"), None);
+    }
+
+    #[test]
+    fn detect_falls_back_to_native() {
+        let dir = std::env::temp_dir().join("cat_no_artifacts_here");
+        assert_eq!(Backend::detect(&dir), Backend::Native);
+    }
+}

@@ -1,9 +1,11 @@
-//! Host-side tensors: the typed bridge between rust data pipelines and
-//! `xla::Literal` device buffers.
+//! Host-side tensors: the typed currency of the coordinator — batches in,
+//! logits out — and (with the `pjrt` feature) the bridge to `xla::Literal`
+//! device buffers.
 //!
 //! Kept deliberately small — shape + flat data, f32 or i32 — because every
-//! heavy computation happens inside the AOT-compiled executables; the host
-//! only assembles batches, reads back logits/losses, and computes metrics.
+//! heavy computation happens inside an execution backend (AOT executables
+//! or `crate::native`); the host only assembles batches, reads back
+//! logits/losses, and computes metrics.
 
 use crate::Result;
 use anyhow::{anyhow, bail};
@@ -103,6 +105,7 @@ impl HostTensor {
     }
 
     /// Convert to an `xla::Literal` (copies into XLA-managed memory).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -113,6 +116,7 @@ impl HostTensor {
     }
 
     /// Read a literal back into host memory.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -161,6 +165,7 @@ mod tests {
         assert!(DType::from_manifest("f64").is_err());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 3], (0..6).map(|i| i as f32).collect())
@@ -170,6 +175,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = HostTensor::i32(vec![4], vec![1, -2, 3, -4]).unwrap();

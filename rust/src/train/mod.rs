@@ -13,13 +13,21 @@ pub mod schedule;
 
 pub use schedule::Schedule;
 
+#[cfg(feature = "pjrt")]
 use std::sync::Arc;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use crate::data::BatchSource;
-use crate::metrics::{EvalAccumulator, LossCurve};
+use crate::metrics::LossCurve;
+#[cfg(feature = "pjrt")]
+use crate::metrics::EvalAccumulator;
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, Runtime, TrainState};
+#[cfg(feature = "pjrt")]
 use crate::tensor::HostTensor;
+#[cfg(feature = "pjrt")]
 use crate::Result;
 
 /// Configuration for one training run.
@@ -74,7 +82,9 @@ impl TrainReport {
     }
 }
 
-/// Orchestrates training + evaluation of one model config.
+/// Orchestrates training + evaluation of one model config (PJRT-only:
+/// training runs through the AOT `train_step` artifacts).
+#[cfg(feature = "pjrt")]
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
     config: String,
@@ -84,6 +94,7 @@ pub struct Trainer<'rt> {
     source: BatchSource,
 }
 
+#[cfg(feature = "pjrt")]
 impl<'rt> Trainer<'rt> {
     pub fn new(rt: &'rt Runtime, config: &str, seed: u64) -> Result<Self> {
         let meta = rt.config(config)?.clone();

@@ -10,16 +10,17 @@ use cat::complexity::{layer_cost, Mechanism};
 use cat::coordinator::{DynamicBatcher, Flush};
 use cat::data::{Rng, TextCorpus, Tokenizer};
 use cat::metrics::{accuracy, token_nll};
+use cat::native::{rfft_plan, CatImpl, CatLayer, Complex};
 use cat::tensor::HostTensor;
 use cat::train::Schedule;
 
 const CASES: usize = 64;
 const SEED: u64 = 0xCA7_CA7;
 
-/// Run `prop` for CASES pseudo-random cases with a labeled panic context.
-fn for_all(name: &str, mut prop: impl FnMut(&mut Rng)) {
+/// Run `prop` for `cases` pseudo-random cases with a labeled panic context.
+fn for_all_n(name: &str, cases: usize, mut prop: impl FnMut(&mut Rng)) {
     let mut master = Rng::new(SEED);
-    for case in 0..CASES {
+    for case in 0..cases {
         let mut rng = master.fork(case as u64);
         let result = std::panic::catch_unwind(
             std::panic::AssertUnwindSafe(|| prop(&mut rng)));
@@ -28,6 +29,11 @@ fn for_all(name: &str, mut prop: impl FnMut(&mut Rng)) {
                     {e:?}");
         }
     }
+}
+
+/// [`for_all_n`] at the default CASES count.
+fn for_all(name: &str, prop: impl FnMut(&mut Rng)) {
+    for_all_n(name, CASES, prop);
 }
 
 // ---------------- batcher ----------------
@@ -169,6 +175,101 @@ fn masked_batch_only_corrupts_weighted() {
             if b.weights[i] == 0.0 {
                 assert_eq!(b.tokens[i], b.targets[i]);
             }
+        }
+    });
+}
+
+// ---------------- native FFT (the paper's core identity) ----------------
+
+#[test]
+fn fft_roundtrip_recovers_input() {
+    // acceptance: rfft -> irfft within 1e-5, 256 random cases
+    for_all_n("fft_roundtrip", 256, |rng| {
+        let n = 1usize << (1 + rng.below(10)); // 2..=1024
+        let x: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let plan = rfft_plan(n);
+        let mut spec = vec![Complex::ZERO; plan.spectrum_len()];
+        let mut back = vec![0.0f32; n];
+        plan.forward(&x, &mut spec);
+        plan.inverse(&mut spec, &mut back);
+        for (a, b) in back.iter().zip(&x) {
+            assert!((a - b).abs() < 1e-5, "n={n}: {a} vs {b}");
+        }
+    });
+}
+
+#[test]
+fn fft_convolution_matches_gather_reference() {
+    // the convolution theorem — the identity CAT's O(N log N) claim rests
+    // on: irfft(conj(rfft(z)) ⊙ rfft(v)) == the naive rolled gather
+    for_all_n("conv_theorem", 256, |rng| {
+        let n = 1usize << (1 + rng.below(7)); // 2..=128
+        let dh = 1 + rng.below(4);
+        // softmax-like positive weights summing to 1 (the CAT regime)
+        let mut zs: Vec<f32> =
+            (0..n).map(|_| rng.uniform() as f32 + 1e-3).collect();
+        let total: f32 = zs.iter().sum();
+        for w in zs.iter_mut() {
+            *w /= total;
+        }
+        let v: Vec<f32> = (0..n * dh).map(|_| rng.normal()).collect();
+
+        // naive O(N²) gather: out[i, c] = Σ_k zs[k] · v[(i+k)%n, c]
+        let mut want = vec![0.0f32; n * dh];
+        for i in 0..n {
+            for k in 0..n {
+                let w = zs[k];
+                for c in 0..dh {
+                    want[i * dh + c] += w * v[((i + k) % n) * dh + c];
+                }
+            }
+        }
+
+        // FFT path, per channel
+        let plan = rfft_plan(n);
+        let f = plan.spectrum_len();
+        let mut zf = vec![Complex::ZERO; f];
+        plan.forward(&zs, &mut zf);
+        let mut vf = vec![Complex::ZERO; f];
+        let mut col = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n * dh];
+        for c in 0..dh {
+            for i in 0..n {
+                col[i] = v[i * dh + c];
+            }
+            plan.forward(&col, &mut vf);
+            for k in 0..f {
+                vf[k] = zf[k].conj() * vf[k];
+            }
+            plan.inverse(&mut vf, &mut col);
+            for i in 0..n {
+                got[i * dh + c] = col[i];
+            }
+        }
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() < 1e-4,
+                    "n={n} dh={dh} elem {i}: fft {a} vs gather {b}");
+        }
+    });
+}
+
+#[test]
+fn cat_layer_fft_matches_gather() {
+    // end-to-end layer equivalence across random (b, n, d, h) shapes
+    for_all_n("cat_layer_equiv", 32, |rng| {
+        let h = 1 + rng.below(4);
+        let dh = 1 + rng.below(4);
+        let d = h * dh;
+        let n = 1usize << (1 + rng.below(5)); // 2..=32
+        let b = 1 + rng.below(2);
+        let layer = CatLayer::init(d, h, rng);
+        let x: Vec<f32> = (0..b * n * d).map(|_| rng.normal()).collect();
+        let fft = layer.forward(&x, b, n, CatImpl::Fft).expect("fft");
+        let gather =
+            layer.forward(&x, b, n, CatImpl::Gather).expect("gather");
+        for (i, (a, g)) in fft.iter().zip(&gather).enumerate() {
+            assert!((a - g).abs() < 1e-4,
+                    "b={b} n={n} d={d} h={h} elem {i}: {a} vs {g}");
         }
     });
 }

@@ -1,6 +1,11 @@
 //! Integration tests over the PJRT runtime: artifact load, init/forward
 //! round trips, training descent, checkpoint restore, fused-step
-//! equivalence. Requires `make artifacts` (skipped gracefully otherwise).
+//! equivalence. Requires a `--features pjrt` build (the whole file is
+//! compiled out otherwise) and `make artifacts` (skipped gracefully when
+//! absent). The backend-agnostic serving path is covered hermetically in
+//! `tests/native_backend.rs`.
+
+#![cfg(feature = "pjrt")]
 
 use cat::data::BatchSource;
 use cat::metrics::EvalAccumulator;

@@ -1,0 +1,252 @@
+//! Offline-hermetic subset of the `anyhow` API.
+//!
+//! The build environment has no network and no registry snapshot, so the
+//! crate vendors the slice of `anyhow` it actually uses: [`Error`] (a
+//! message chain), [`Result`], the [`anyhow!`] / [`bail!`] / [`ensure!`]
+//! macros, and the [`Context`] extension trait. Semantics follow upstream
+//! anyhow: `{e}` prints the outermost message, `{e:#}` prints the whole
+//! chain, `{e:?}` prints the chain in `Caused by:` form, and `?` converts
+//! any `std::error::Error + Send + Sync + 'static` into [`Error`].
+//!
+//! Deliberately omitted (unused in this repo): downcasting, backtraces,
+//! `no_std` support. Swapping in the real crates.io `anyhow` is a one-line
+//! change in the workspace `Cargo.toml` if the vendor policy ever changes.
+
+use std::fmt::{self, Debug, Display};
+
+/// Error type: an ordered chain of messages, outermost context first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a single message (what [`anyhow!`] expands to).
+    pub fn msg<M>(message: M) -> Self
+    where
+        M: Display + Send + Sync + 'static,
+    {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message (kept as an inherent method to
+    /// match `anyhow::Error::context`).
+    pub fn context<C>(mut self, context: C) -> Self
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Flatten a `std::error::Error` and its `source()` chain.
+    fn from_std<E>(error: &E) -> Self
+    where
+        E: std::error::Error + ?Sized,
+    {
+        let mut chain = vec![error.to_string()];
+        let mut source = error.source();
+        while let Some(cause) = source {
+            chain.push(cause.to_string());
+            source = cause.source();
+        }
+        Error { chain }
+    }
+
+    /// The messages, outermost first (diagnostics / tests).
+    pub fn chain_messages(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, colon-separated, like anyhow
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, msg) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// The blanket `?` conversion. `Error` itself intentionally does NOT
+// implement `std::error::Error`, exactly like upstream anyhow — that is
+// what keeps this impl coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::from_std(&error)
+    }
+}
+
+/// Private dispatch trait so [`Context`] has one impl covering both
+/// `Result<T, impl std::error::Error>` and `Result<T, Error>` (the same
+/// shape upstream anyhow uses).
+pub mod ext {
+    use super::Error;
+    use std::fmt::Display;
+
+    pub trait StdError {
+        fn ext_context<C>(self, context: C) -> Error
+        where
+            C: Display + Send + Sync + 'static;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C>(self, context: C) -> Error
+        where
+            C: Display + Send + Sync + 'static,
+        {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context<C>(self, context: C) -> Error
+        where
+            C: Display + Send + Sync + 'static,
+        {
+            self.context(context)
+        }
+    }
+}
+
+/// Extension trait: attach context to the error branch of a `Result`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $(, $($arg:tt)*)?) => {
+        $crate::Error::msg(::std::format!($fmt $(, $($arg)*)?))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(
+                ::std::concat!("condition failed: ", ::std::stringify!($cond)),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        assert!(format!("{e:?}").contains("Caused by:"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", f().unwrap_err()), "disk on fire");
+    }
+
+    #[test]
+    fn context_on_std_and_anyhow_results() {
+        let r: Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+
+        let r2: Result<()> = Err(anyhow!("bad {}", 7));
+        let e2 = r2.with_context(|| format!("step {}", 3)).unwrap_err();
+        assert_eq!(format!("{e2:#}"), "step 3: bad 7");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x > 10 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert!(f(5).is_ok());
+        assert_eq!(format!("{}", f(-1).unwrap_err()), "negative: -1");
+        assert_eq!(format!("{}", f(11).unwrap_err()), "too big: 11");
+    }
+}

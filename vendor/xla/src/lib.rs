@@ -1,0 +1,287 @@
+//! Offline API stub of the `xla-rs` PJRT bindings.
+//!
+//! The `pjrt` feature of the `cat` crate compiles against this surface so
+//! the whole PJRT code path type-checks and its host-side logic stays
+//! tested in a hermetic, network-free build. The [`Literal`] container is
+//! fully functional (shape + data, reshape, tuple decomposition), which
+//! keeps `HostTensor` round-trips, checkpointing, and the `TrainState`
+//! unit tests real. The device half — [`PjRtClient`] and executable
+//! compilation — reports `PJRT unavailable` at runtime: there is no XLA
+//! runtime in this image.
+//!
+//! Deployments with the real bindings point the workspace at them via
+//! `[patch]` (the method/type names below match xla-rs, so no call-site
+//! changes are needed).
+
+use std::borrow::Borrow;
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Stub error type; carries only a message, like xla-rs' error Display.
+#[derive(Debug)]
+pub struct Error {
+    message: String,
+}
+
+impl Error {
+    fn new(message: impl Into<String>) -> Self {
+        Error { message: message.into() }
+    }
+
+    fn unavailable(what: &str) -> Self {
+        Error::new(format!(
+            "{what}: PJRT unavailable — built against the in-tree xla API \
+             stub (vendor/xla); install the real xla-rs bindings via a \
+             Cargo [patch] to execute artifacts"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the `cat` crate exchanges with PJRT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host types that map onto an [`ElementType`].
+pub trait NativeType: Copy {
+    const TY: ElementType;
+    fn read(data: &LiteralData) -> Option<&[Self]>;
+    fn store(v: Vec<Self>) -> LiteralData;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn read(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn store(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn read(data: &LiteralData) -> Option<&[Self]> {
+        match data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    fn store(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+}
+
+/// Array shape: dimensions plus element type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Flat payload of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal: the functional half of the stub.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: LiteralData,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal {
+            dims: vec![values.len() as i64],
+            data: T::store(values.to_vec()),
+        }
+    }
+
+    /// Tuple literal (what executables return with `return_tuple=True`).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: LiteralData::Tuple(elements) }
+    }
+
+    /// Same data, new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count()? as i64;
+        if want != have {
+            return Err(Error::new(format!(
+                "reshape to {dims:?} ({want} elements) from {have} elements"
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        let ty = match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+            LiteralData::Tuple(_) => {
+                return Err(Error::new("array_shape of a tuple literal"))
+            }
+        };
+        Ok(ArrayShape { dims: self.dims.clone(), ty })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::read(&self.data).map(|s| s.to_vec()).ok_or_else(|| {
+            Error::new("literal element type mismatch in to_vec")
+        })
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            LiteralData::Tuple(elements) => Ok(elements),
+            _ => Err(Error::new("to_tuple of a non-tuple literal")),
+        }
+    }
+
+    fn element_count(&self) -> Result<usize> {
+        match &self.data {
+            LiteralData::F32(v) => Ok(v.len()),
+            LiteralData::I32(v) => Ok(v.len()),
+            LiteralData::Tuple(_) => {
+                Err(Error::new("element_count of a tuple literal"))
+            }
+        }
+    }
+}
+
+/// Parsed HLO module (stub: retains only the source path for messages).
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// The real bindings parse HLO text; the stub only checks existence so
+    /// error messages stay accurate, then defers to compile-time failure.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error::new(format!("no such HLO file: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    path: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { path: proto.path.clone() }
+    }
+}
+
+/// PJRT client handle. `Rc` marker keeps the stub `!Send`/`!Sync`, matching
+/// the threading contract of the real bindings that the coordinator's
+/// worker architecture is built around.
+pub struct PjRtClient {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, computation: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable(&format!("compile({})", computation.path)))
+    }
+}
+
+/// A device buffer returned by `execute`.
+pub struct PjRtBuffer {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _not_send: PhantomData<Rc<()>>,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L])
+                                       -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]),
+                                    Literal::vec1(&[2.0f32])]);
+        let parts = t.clone().to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(err.contains("PJRT unavailable"), "{err}");
+    }
+}

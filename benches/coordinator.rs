@@ -102,5 +102,58 @@ fn main() {
         assert_eq!(stats.iter().map(|s| s.requests).sum::<u64>(), 64);
     });
 
+    // steady-state serving: ONE long-lived server, requests issued from
+    // this thread — after warmup, a request must spawn zero threads (the
+    // forward fans out over the persistent pool; PR 1 spawned scoped
+    // threads per parallel section). Asserted via the pool spawn counter.
+    {
+        use cat::coordinator::{ServeOptions, Server};
+        use cat::native::{pool, NativeVitConfig};
+        use cat::runtime::Backend;
+
+        // big enough that forwards genuinely engage the pool
+        let native = NativeVitConfig {
+            d_model: 128,
+            n_heads: 8,
+            patch_size: 2, // 256 tokens
+            ..Default::default()
+        };
+        let opts = ServeOptions {
+            backend: Backend::Native,
+            native,
+            ..Default::default()
+        };
+        let server = Server::spawn(cat::artifacts_dir(),
+                                   &["steady_native".to_string()], opts, 0)
+            .expect("spawn steady native server");
+        let handle = server.handle();
+        let ds = ShapeDataset::new(9);
+        let mut send = |tag: u64| {
+            let sample = ds.sample(tag);
+            let input = HostTensor::f32(vec![3, 32, 32], sample.pixels)
+                .expect("input");
+            handle.infer("steady_native", input).expect("infer");
+        };
+        for i in 0..8u64 {
+            send(i); // warmup: pool threads spawn here at the latest
+        }
+        let spawned_before = pool::stats().threads_spawned;
+        bench.case("native_serve_persistent_64_reqs", || {
+            for i in 0..64u64 {
+                send(1000 + i);
+            }
+        });
+        let spawned_after = pool::stats().threads_spawned;
+        assert_eq!(spawned_after, spawned_before,
+                   "steady-state requests spawned threads: {spawned_before} \
+                    -> {spawned_after}");
+        println!("steady-state serving: 0 thread spawns across {} pooled \
+                  requests (pool workers: {})",
+                 64 * (bench.warmup + bench.samples),
+                 pool::stats().workers);
+        drop(handle);
+        server.shutdown();
+    }
+
     print!("{}", bench.report());
 }

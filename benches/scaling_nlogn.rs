@@ -1,7 +1,9 @@
 //! Fig. 1 / complexity claim on real hardware: measured forward wallclock
 //! of one mixing layer for attention (O(N²)), CAT-gather (O(N²), no qk
 //! matmul) and CAT-FFT (O(N log N)), next to the analytic FLOP model from
-//! `cat::complexity`.
+//! `cat::complexity`. Also measures the serving-relevant batched case
+//! (batch 8 across the persistent worker pool) and reports FFT-path
+//! throughput in sequences/second.
 //!
 //! Runs hermetically on the native Rust backend — no artifacts, no PJRT —
 //! and additionally times the AOT executables when the crate is built with
@@ -9,19 +11,27 @@
 //!
 //!   cargo bench --bench scaling_nlogn              # full sweep
 //!   cargo bench --bench scaling_nlogn -- --smoke   # CI smoke (small N)
+//!   ... -- --smoke --check   # CI gate: exit 1 unless FFT beats gather
+//!                            # at N=1024
+//!
+//! The batch-8 series is the PR-2 acceptance surface: ≥1.5× FFT-path
+//! throughput at N≥1024 vs the PR-1 baseline (per-call thread spawns,
+//! scalar AoS FFT, per-channel gather/scatter).
 
 use cat::bench::Bench;
 use cat::complexity::{crossover_n, layer_cost, Mechanism};
 use cat::data::Rng;
 use cat::json::Json;
-use cat::native::{AttentionLayer, CatImpl, CatLayer};
+use cat::native::{pool, AttentionLayer, CatImpl, CatLayer};
 
 const D: usize = 256;
 const H: usize = 8;
+/// Batch size of the serving-shaped throughput cases.
+const B8: usize = 8;
 
-fn layer_input(n: usize) -> Vec<f32> {
+fn layer_input(b: usize, n: usize) -> Vec<f32> {
     let mut rng = Rng::new(n as u64 ^ 0xF16);
-    (0..n * D).map(|_| 0.05 * rng.normal()).collect()
+    (0..b * n * D).map(|_| 0.05 * rng.normal()).collect()
 }
 
 fn gflop(mech: Mechanism, n: usize) -> f64 {
@@ -31,29 +41,38 @@ fn gflop(mech: Mechanism, n: usize) -> f64 {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
+    let check = args.iter().any(|a| a == "--check");
     let ns: &[usize] = if smoke {
-        &[256, 512]
+        &[256, 512, 1024]
     } else {
         &[256, 512, 1024, 2048, 4096, 8192]
     };
     // the quadratic baselines get unbearably slow past this point; CAT-FFT
     // runs the full sweep (that asymmetry is the paper's whole argument)
-    let quad_cap = if smoke { 512 } else { 2048 };
+    let quad_cap = if smoke { 1024 } else { 2048 };
 
     let mut rng = Rng::new(7);
     let cat = CatLayer::init(D, H, &mut rng);
     let attn = AttentionLayer::init(D, H, &mut rng);
 
     let mut bench =
-        Bench::new("native scaling (one mixing layer, d=256 h=8, B=1)");
+        Bench::new("native scaling (one mixing layer, d=256 h=8)");
     bench.warmup = 1;
     bench.samples = if smoke { 2 } else { 3 };
 
     for &n in ns {
-        let x = layer_input(n);
+        let x = layer_input(1, n);
         bench.case(&format!("native_{n}_cat_fft"), || {
             cat.forward(&x, 1, n, CatImpl::Fft).expect("cat_fft forward");
         });
+        if n >= 1024 {
+            // serving-shaped batched case: one call, B8 sequences
+            let xb = layer_input(B8, n);
+            bench.case(&format!("native_{n}_cat_fft_b8"), || {
+                cat.forward(&xb, B8, n, CatImpl::Fft)
+                    .expect("cat_fft b8 forward");
+            });
+        }
         if n <= quad_cap {
             bench.case(&format!("native_{n}_cat_gather"), || {
                 cat.forward(&x, 1, n, CatImpl::Gather)
@@ -83,6 +102,18 @@ fn main() {
                  gflop(Mechanism::CatGather, n));
     }
 
+    println!("\nbatched FFT-path throughput (batch {B8}, the serving shape):");
+    for &n in ns.iter().filter(|&&n| n >= 1024) {
+        if let Some(t) = bench.median_of(&format!("native_{n}_cat_fft_b8")) {
+            println!("  N={n:<5} {:>9.3} ms/call  {:>9.1} seq/s",
+                     t * 1e3, B8 as f64 / t);
+        }
+    }
+    let ps = pool::stats();
+    println!("pool: {} workers, {} threads ever spawned, {} par sections, \
+              {} chunks", ps.workers, ps.threads_spawned, ps.par_sections,
+             ps.chunks_executed);
+
     println!();
     if let (Some(t4k), Some(t8k)) =
         (bench.median_of("native_4096_cat_fft"),
@@ -108,8 +139,27 @@ fn main() {
         ("bench".to_string(), Json::from("scaling_nlogn")),
         ("d".to_string(), Json::Num(D as f64)),
         ("h".to_string(), Json::Num(H as f64)),
+        ("batch_b8".to_string(), Json::Num(B8 as f64)),
         ("smoke".to_string(), Json::Bool(smoke)),
         ("native".to_string(), bench.to_json()),
+        ("fft_throughput_seq_per_s".to_string(), Json::Arr(
+            ns.iter()
+                .filter(|&&n| n >= 1024)
+                .filter_map(|&n| {
+                    bench.median_of(&format!("native_{n}_cat_fft_b8"))
+                        .map(|t| Json::Obj(vec![
+                            ("n".to_string(), Json::Num(n as f64)),
+                            ("seq_per_s".to_string(),
+                             Json::Num(B8 as f64 / t)),
+                        ]))
+                })
+                .collect())),
+        ("pool".to_string(), Json::Obj(vec![
+            ("workers".to_string(), Json::Num(ps.workers as f64)),
+            ("threads_spawned".to_string(),
+             Json::Num(ps.threads_spawned as f64)),
+            ("par_sections".to_string(), Json::Num(ps.par_sections as f64)),
+        ])),
         ("modeled_gflop".to_string(), Json::Arr(
             ns.iter()
                 .map(|&n| Json::Obj(vec![
@@ -130,6 +180,28 @@ fn main() {
     std::fs::write("BENCH_scaling.json", out)
         .expect("write BENCH_scaling.json");
     eprintln!("results -> BENCH_scaling.json");
+
+    if check {
+        // CI perf gate: at N=1024 the O(N log N) path must beat the
+        // O(N²) gather outright, or the sub-quadratic claim regressed
+        let fft = bench.median_of("native_1024_cat_fft");
+        let gather = bench.median_of("native_1024_cat_gather");
+        match (fft, gather) {
+            (Some(f), Some(g)) if f < g => {
+                eprintln!("perf gate OK: cat_fft {:.3} ms < cat_gather \
+                           {:.3} ms at N=1024", f * 1e3, g * 1e3);
+            }
+            (Some(f), Some(g)) => {
+                eprintln!("perf gate FAILED: cat_fft {:.3} ms >= cat_gather \
+                           {:.3} ms at N=1024", f * 1e3, g * 1e3);
+                std::process::exit(1);
+            }
+            _ => {
+                eprintln!("perf gate FAILED: N=1024 cases missing");
+                std::process::exit(1);
+            }
+        }
+    }
 }
 
 /// Time the AOT `scale_{n}_{mech}` artifacts when available (pjrt builds

@@ -4,11 +4,14 @@
 //! with `--features pjrt` + artifacts it also times the AOT-compiled
 //! forward passes, exactly like the original PJRT-only bench.
 //!
-//! Prints the paper-style ratio; EXPERIMENTS.md records the measured
+//! Prints the paper-style ratio and emits `BENCH_speedup.json` (same
+//! schema family as `BENCH_scaling.json`) so the perf trajectory is
+//! machine-readable PR over PR; EXPERIMENTS.md records the measured
 //! speedup next to the paper's ~1.10x.
 
 use cat::bench::Bench;
 use cat::data::Rng;
+use cat::json::Json;
 use cat::native::{AttentionLayer, CatImpl, CatLayer};
 
 const N: usize = 256;
@@ -43,12 +46,26 @@ fn main() {
     let attn_ms = bench.median_of("native_n256_attention").expect("attn");
     println!("\n§4.4 speedup at N=256 (paper: gather-CAT ~1.10x over \
               attention on V100; here: native rust on CPU):");
+    let mut speedups = Vec::new();
     for name in ["native_n256_attention", "native_n256_cat_gather",
                  "native_n256_cat_fft"] {
         let t = bench.median_of(name).expect("case");
         println!("  {name:<28} {:>9.3} ms   speedup vs attention {:.2}x",
                  t * 1e3, attn_ms / t);
+        speedups.push((name.to_string(), Json::Num(attn_ms / t)));
     }
+
+    let obj = Json::Obj(vec![
+        ("bench".to_string(), Json::from("speedup_n256")),
+        ("n".to_string(), Json::Num(N as f64)),
+        ("d".to_string(), Json::Num(D as f64)),
+        ("h".to_string(), Json::Num(H as f64)),
+        ("native".to_string(), bench.to_json()),
+        ("speedup_vs_attention".to_string(), Json::Obj(speedups)),
+    ]);
+    std::fs::write("BENCH_speedup.json", obj.to_string_pretty())
+        .expect("write BENCH_speedup.json");
+    eprintln!("results -> BENCH_speedup.json");
 
     pjrt_series();
 }

@@ -245,6 +245,7 @@ fn build_worker(dir: &std::path::Path, spec: &WorkerSpec,
             Ok(Box::new(NativeWorker {
                 model: NativeCatModel::new(opts.native, spec.seed as u64),
                 max_batch: opts.native_max_batch.max(1),
+                assembly: std::cell::RefCell::new(Vec::new()),
             }))
         }
         #[cfg(feature = "pjrt")]
@@ -264,9 +265,18 @@ fn build_worker(dir: &std::path::Path, spec: &WorkerSpec,
 // ---------------------------------------------------------------------------
 
 /// Native CAT executor: shape-flexible, so batches run unpadded.
+///
+/// The forward fans out over the persistent worker pool and runs its
+/// activations from per-thread bump arenas (DESIGN.md §7), so a
+/// steady-state request spawns zero threads and its tensor storage is
+/// all reused — what it allocates is the response tensors plus the
+/// pool's small per-section dispatch state. The batch-assembly buffer
+/// below is reused across flushes for the same reason (executors are
+/// worker-thread-local, hence the `RefCell`).
 struct NativeWorker {
     model: NativeCatModel,
     max_batch: usize,
+    assembly: std::cell::RefCell<Vec<f32>>,
 }
 
 impl BatchExecutor for NativeWorker {
@@ -277,8 +287,8 @@ impl BatchExecutor for NativeWorker {
     fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let cfg = self.model.cfg;
         let row_shape = vec![cfg.n_channels, cfg.image_size, cfg.image_size];
-        let row_len: usize = row_shape.iter().product();
-        let mut data: Vec<f32> = Vec::with_capacity(inputs.len() * row_len);
+        let mut data = self.assembly.borrow_mut();
+        data.clear();
         for t in inputs {
             if t.shape != row_shape {
                 bail!("request shape {:?} != expected {:?}", t.shape,
@@ -537,6 +547,7 @@ mod tests {
         let worker = NativeWorker {
             model: NativeCatModel::new(cfg, 0),
             max_batch: 4,
+            assembly: std::cell::RefCell::new(Vec::new()),
         };
         let image_len = cfg.n_channels * cfg.image_size * cfg.image_size;
         let a = HostTensor::f32(

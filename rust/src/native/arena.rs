@@ -1,0 +1,161 @@
+//! Bump arenas for the native hot path: zero-allocation forward passes.
+//!
+//! PR 1's `CatLayer::forward` allocated every intermediate (`z`, the
+//! softmax stripes, the split heads, the output halves) per call. At
+//! serving rates that is megabytes of malloc/free per request. This
+//! module replaces those with per-thread bump arenas: one contiguous
+//! `Vec<f32>` per arena that only ever grows, carved into disjoint `&mut`
+//! slices per frame with `split_at_mut` — after warmup, a same-shape
+//! forward performs **zero** tensor-sized heap allocation (asserted by
+//! `steady_state_does_not_grow` below and the serial-path test in
+//! `cat.rs`; what remains on fanned-out shapes is the pool's small
+//! per-section dispatch state, see `super::pool`).
+//!
+//! Three arenas per thread, one per nesting level, so a frame at one
+//! level can stay borrowed while an inner level opens its own:
+//!
+//! * **model** ([`with_model_arena`]) — `NativeCatModel::forward_batch`
+//!   intermediates (patches, activations, MLP buffers);
+//! * **layer** ([`with_layer_arena`]) — one mixing layer's frame
+//!   (projections, softmax stripes, spectra, transposed heads);
+//! * **task** ([`with_task_arena`]) — leaf scratch inside one parallel
+//!   task (FFT ping-pong buffers, per-stripe spectra, attention rows).
+//!   Pool workers persist ([`super::pool`]), so their task arenas warm
+//!   once and are reused for every chunk they ever run.
+//!
+//! Strict nesting contract: model ⊃ layer ⊃ task, each level entered at
+//! most once per thread at a time (the `RefCell` panics on violation
+//! rather than corrupting a frame). Slices come back **unzeroed** — every
+//! consumer must fully overwrite (all current users are matmul outputs,
+//! transposes, or FFT outputs, which do).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Cumulative count of arena backing-store growths across all threads;
+/// flat counter == allocation-free steady state.
+static GROWS: AtomicU64 = AtomicU64::new(0);
+
+/// Total arena backing-store growths so far (all threads, all arenas).
+pub fn arena_grows() -> u64 {
+    GROWS.load(Ordering::Relaxed)
+}
+
+/// A grow-only f32 bump arena. One [`Arena::frame`] call carves the
+/// backing store into disjoint mutable slices for one logical frame.
+#[derive(Default)]
+pub struct Arena {
+    buf: Vec<f32>,
+}
+
+impl Arena {
+    pub const fn new() -> Arena {
+        Arena { buf: Vec::new() }
+    }
+
+    /// Current backing capacity in f32 elements.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Borrow `K` disjoint mutable slices of the given lengths, growing
+    /// the backing store only if this frame is larger than any before it.
+    /// Contents are unspecified (previous frame's data) — callers must
+    /// fully overwrite. Heap-free at steady state: the carve-up itself
+    /// allocates nothing.
+    pub fn frame<const K: usize>(&mut self, lens: [usize; K])
+                                 -> [&mut [f32]; K] {
+        let total: usize = lens.iter().sum();
+        if self.buf.len() < total {
+            GROWS.fetch_add(1, Ordering::Relaxed);
+            self.buf.resize(total, 0.0);
+        }
+        let mut rest = self.buf.as_mut_slice();
+        lens.map(|len| {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            rest = tail;
+            head
+        })
+    }
+}
+
+thread_local! {
+    static MODEL: RefCell<Arena> = const { RefCell::new(Arena::new()) };
+    static LAYER: RefCell<Arena> = const { RefCell::new(Arena::new()) };
+    static TASK: RefCell<Arena> = const { RefCell::new(Arena::new()) };
+}
+
+/// This thread's model-level arena (`NativeCatModel::forward_batch`).
+pub fn with_model_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    MODEL.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// This thread's layer-level arena (one mixing-layer forward).
+pub fn with_layer_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    LAYER.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// This thread's leaf task arena (kernel scratch inside parallel tasks).
+pub fn with_task_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    TASK.with(|a| f(&mut a.borrow_mut()))
+}
+
+/// Capacities of this thread's (model, layer, task) arenas — flat across
+/// same-shape serial forwards proves the allocation-free steady state
+/// without racing other threads' growth (unlike [`arena_grows`]).
+pub fn thread_arena_capacities() -> (usize, usize, usize) {
+    (
+        MODEL.with(|a| a.borrow().capacity()),
+        LAYER.with(|a| a.borrow().capacity()),
+        TASK.with(|a| a.borrow().capacity()),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_slices_are_disjoint_and_sized() {
+        let mut arena = Arena::new();
+        let [a, b, c] = arena.frame([4, 0, 7]);
+        assert_eq!((a.len(), b.len(), c.len()), (4, 0, 7));
+        a.fill(1.0);
+        c.fill(2.0);
+        assert!(a.iter().all(|&v| v == 1.0));
+        assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn steady_state_does_not_grow() {
+        let mut arena = Arena::new();
+        let _ = arena.frame([256, 512]);
+        let cap = arena.capacity();
+        let before = arena_grows();
+        for _ in 0..100 {
+            let [a, b] = arena.frame([256, 512]);
+            a[0] = 1.0;
+            b[511] = 2.0;
+            // smaller frames reuse the same store too
+            let [_c] = arena.frame([100]);
+        }
+        assert_eq!(arena.capacity(), cap);
+        assert_eq!(arena_grows(), before,
+                   "same-shape frames must not reallocate");
+    }
+
+    #[test]
+    fn nested_levels_coexist() {
+        with_layer_arena(|layer| {
+            let [frame] = layer.frame([64]);
+            frame.fill(3.0);
+            // a task-level borrow while the layer frame is live
+            with_task_arena(|task| {
+                let [scratch] = task.frame([16]);
+                scratch.fill(4.0);
+                assert_eq!(scratch[0], 4.0);
+            });
+            assert_eq!(frame[0], 3.0);
+        });
+    }
+}

@@ -19,22 +19,30 @@
 //! `(d + h)·d` ([`CatLayer::param_count`]); the model-level output
 //! projection lives in [`NativeCatModel`]'s classifier head.
 //!
-//! Work is parallelized across batch×head (and across rows for the large
-//! projections) with scoped threads; each worker owns its scratch buffers,
-//! so the per-channel FFT loop is allocation-free.
-
-use std::sync::Arc;
+//! Execution model (DESIGN.md §7): parallel sections fan out over the
+//! persistent worker pool ([`super::pool`]) — no scoped threads, zero
+//! spawns at steady state — and every intermediate lives in the
+//! per-thread bump arenas ([`super::arena`]). The FFT path stores values
+//! **stripe-transposed**: each `(batch, head)` stripe holds its `dh`
+//! channels as contiguous length-`N` rows, so one
+//! [`SplitRfftPlan::rfft_many`] call transforms a whole stripe with no
+//! per-channel gather/scatter and cache-hot twiddle tables.
+//!
+//! [`SplitRfftPlan::rfft_many`]: super::fft::SplitRfftPlan::rfft_many
 
 use anyhow::ensure;
 
-use super::fft::{rfft_plan, Complex, RfftPlan};
+use super::arena;
+use super::fft::split_rfft_plan;
+use super::pool;
 use crate::data::Rng;
 use crate::Result;
 
 /// Which circulant apply computes the mixing contraction.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CatImpl {
-    /// O(N log N): planned rfft → conjugate pointwise multiply → irfft.
+    /// O(N log N): planned batched rfft → conjugate pointwise multiply →
+    /// irfft, split-complex across each head stripe.
     Fft,
     /// O(N²): naive rolled gather (correctness + crossover baseline).
     Gather,
@@ -53,36 +61,31 @@ impl CatImpl {
 // small dense linear algebra (shared by both native layers)
 // ---------------------------------------------------------------------------
 
-/// Upper bound on worker threads for one parallel section.
-fn worker_count(tasks: usize) -> usize {
-    let cores = std::thread::available_parallelism()
-        .map(|v| v.get())
-        .unwrap_or(1);
-    cores.min(tasks).min(16).max(1)
-}
-
 /// `out = x @ w` with `x: (rows, inner)`, `w: (inner, cols)`, row-major.
-/// Splits across row blocks when the FLOP count justifies threads.
+/// Splits across row blocks on the worker pool when the FLOP count
+/// justifies fanning out.
 pub fn matmul(x: &[f32], rows: usize, inner: usize, w: &[f32], cols: usize,
               out: &mut [f32]) {
     debug_assert_eq!(x.len(), rows * inner);
     debug_assert_eq!(w.len(), inner * cols);
     debug_assert_eq!(out.len(), rows * cols);
-    let workers = worker_count(rows);
-    if workers <= 1 || rows * inner * cols < (1 << 21) {
+    let chunks = pool::max_parallel_tasks().min(rows).max(1);
+    if chunks <= 1 || rows * inner * cols < (1 << 21) {
         matmul_rows(x, inner, w, cols, out);
         return;
     }
-    let chunk_rows = (rows + workers - 1) / workers;
-    std::thread::scope(|s| {
-        for (ci, ochunk) in out.chunks_mut(chunk_rows * cols).enumerate() {
+    let chunk_rows = (rows + chunks - 1) / chunks;
+    let tasks: Vec<(&[f32], &mut [f32])> = out
+        .chunks_mut(chunk_rows * cols)
+        .enumerate()
+        .map(|(ci, oc)| {
             let r0 = ci * chunk_rows;
-            let nrows = ochunk.len() / cols;
-            let xchunk = &x[r0 * inner..(r0 + nrows) * inner];
-            s.spawn(move || {
-                matmul_rows(xchunk, inner, w, cols, ochunk);
-            });
-        }
+            let nrows = oc.len() / cols;
+            (&x[r0 * inner..(r0 + nrows) * inner], oc)
+        })
+        .collect();
+    pool::run(tasks, 2 * chunk_rows * inner * cols, |(xc, oc)| {
+        matmul_rows(xc, inner, w, cols, oc);
     });
 }
 
@@ -144,49 +147,6 @@ fn merge_heads(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
     }
 }
 
-/// Run one closure per task across scoped worker threads; every worker
-/// builds its scratch once and processes its bucket serially.
-/// `est_flops_per_task` gates threading: tiny workloads run serially so
-/// thread-spawn latency never dominates (important for the small-N
-/// crossover measurements and single-image serving).
-fn par_for_tasks<T, S, NS, F>(tasks: Vec<T>, est_flops_per_task: usize,
-                              new_scratch: NS, run: F)
-where
-    T: Send,
-    NS: Fn() -> S + Sync,
-    F: Fn(T, &mut S) + Sync,
-{
-    let total_work = tasks.len().saturating_mul(est_flops_per_task);
-    let workers = if total_work >= (1 << 20) {
-        worker_count(tasks.len())
-    } else {
-        1
-    };
-    if workers <= 1 {
-        let mut scratch = new_scratch();
-        for t in tasks {
-            run(t, &mut scratch);
-        }
-        return;
-    }
-    let mut buckets: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
-    for (i, t) in tasks.into_iter().enumerate() {
-        buckets[i % workers].push(t);
-    }
-    let run_ref = &run;
-    let scratch_ref = &new_scratch;
-    std::thread::scope(|s| {
-        for bucket in buckets {
-            s.spawn(move || {
-                let mut scratch = scratch_ref();
-                for t in bucket {
-                    run_ref(t, &mut scratch);
-                }
-            });
-        }
-    });
-}
-
 // ---------------------------------------------------------------------------
 // the CAT mixing layer
 // ---------------------------------------------------------------------------
@@ -197,75 +157,6 @@ pub struct CatLayer {
     pub h: usize,
     w_a: Vec<f32>,
     w_v: Vec<f32>,
-}
-
-/// Per-worker FFT scratch: spectrum buffers + one column strip.
-struct ConvScratch {
-    plan: Option<Arc<RfftPlan>>,
-    zf: Vec<Complex>,
-    vf: Vec<Complex>,
-    col: Vec<f32>,
-}
-
-impl ConvScratch {
-    fn new(n: usize, mode: CatImpl) -> ConvScratch {
-        match mode {
-            CatImpl::Fft => {
-                let plan = rfft_plan(n);
-                let f = plan.spectrum_len();
-                ConvScratch {
-                    plan: Some(plan),
-                    zf: vec![Complex::ZERO; f],
-                    vf: vec![Complex::ZERO; f],
-                    col: vec![0.0; n],
-                }
-            }
-            CatImpl::Gather => ConvScratch {
-                plan: None,
-                zf: Vec::new(),
-                vf: Vec::new(),
-                col: Vec::new(),
-            },
-        }
-    }
-}
-
-/// One (batch, head) circulant apply: `o[i] = Σ_k zs[k] v[(i+k)%n]`.
-fn apply_circulant(zs: &[f32], v: &[f32], o: &mut [f32], n: usize,
-                   dh: usize, mode: CatImpl, scratch: &mut ConvScratch) {
-    match mode {
-        CatImpl::Fft => {
-            let plan = scratch.plan.as_ref().expect("fft scratch").clone();
-            let f = plan.spectrum_len();
-            plan.forward(zs, &mut scratch.zf);
-            for c in 0..dh {
-                for i in 0..n {
-                    scratch.col[i] = v[i * dh + c];
-                }
-                plan.forward(&scratch.col, &mut scratch.vf);
-                for k in 0..f {
-                    scratch.vf[k] = scratch.zf[k].conj() * scratch.vf[k];
-                }
-                plan.inverse(&mut scratch.vf, &mut scratch.col);
-                for i in 0..n {
-                    o[i * dh + c] = scratch.col[i];
-                }
-            }
-        }
-        CatImpl::Gather => {
-            for i in 0..n {
-                let orow = &mut o[i * dh..(i + 1) * dh];
-                orow.fill(0.0);
-                for k in 0..n {
-                    let w = zs[k];
-                    let vrow = &v[((i + k) % n) * dh..((i + k) % n) * dh + dh];
-                    for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                        *ov += w * vv;
-                    }
-                }
-            }
-        }
-    }
 }
 
 impl CatLayer {
@@ -283,22 +174,46 @@ impl CatLayer {
         (self.d + self.h) * self.d
     }
 
-    /// Mix tokens: `x: (b, n, d)` row-major → `(b, n, d)`.
+    /// Mix tokens: `x: (b, n, d)` row-major → freshly allocated
+    /// `(b, n, d)`. Benchmark/test convenience over [`Self::forward_into`].
     pub fn forward(&self, x: &[f32], b: usize, n: usize, mode: CatImpl)
                    -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; b * n * self.d];
+        self.forward_into(x, b, n, mode, &mut out)?;
+        Ok(out)
+    }
+
+    /// Mix tokens into `out` (fully overwritten). All tensor
+    /// intermediates come from the thread-local arenas, so after warmup
+    /// the only heap traffic is the pool's small per-section dispatch
+    /// state (task list + one boxed job per chunk) when a section fans
+    /// out — nothing proportional to the tensor sizes.
+    pub fn forward_into(&self, x: &[f32], b: usize, n: usize, mode: CatImpl,
+                        out: &mut [f32]) -> Result<()> {
         let (d, h) = (self.d, self.h);
-        let dh = d / h;
         ensure!(x.len() == b * n * d,
                 "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
+        ensure!(out.len() == b * n * d,
+                "out has {} elements, expected {}x{}x{}", out.len(), b, n, d);
         if mode == CatImpl::Fft {
             ensure!(n.is_power_of_two(),
                     "CAT-FFT needs power-of-two N, got {n}");
+            self.forward_fft_into(x, b, n, out);
+        } else {
+            self.forward_gather_into(x, b, n, out);
         }
+        Ok(())
+    }
 
-        // z = x @ W_A, then head-major softmaxed weights (b, h, n)
-        let mut z = vec![0.0f32; b * n * h];
-        matmul(x, b * n, d, &self.w_a, h, &mut z);
-        let mut zs = vec![0.0f32; b * h * n];
+    /// Shared projection preamble of both paths: `z = x @ W_A` transposed
+    /// into head-major weight rows `zs` (pre-softmax — the FFT path fuses
+    /// softmax into its first parallel section), `v = x @ W_V`. Keeping
+    /// this single keeps the FFT-vs-gather equivalence tests meaningful:
+    /// the two paths can only diverge in the circulant apply itself.
+    fn project(&self, x: &[f32], b: usize, n: usize, z: &mut [f32],
+               zs: &mut [f32], v: &mut [f32]) {
+        let (d, h) = (self.d, self.h);
+        matmul(x, b * n, d, &self.w_a, h, z);
         for bi in 0..b {
             for head in 0..h {
                 for i in 0..n {
@@ -306,40 +221,158 @@ impl CatLayer {
                 }
             }
         }
-        for row in zs.chunks_mut(n) {
-            softmax_in_place(row);
-        }
+        matmul(x, b * n, d, &self.w_v, d, v);
+    }
 
-        // v = x @ W_V, head-major (b, h, n, dh)
-        let mut v = vec![0.0f32; b * n * d];
-        matmul(x, b * n, d, &self.w_v, d, &mut v);
-        let mut vh = vec![0.0f32; b * h * n * dh];
-        split_heads(&v, b, n, h, dh, &mut vh);
+    /// O(N log N) path: stripe-transposed values, batched split-complex
+    /// real FFTs, frequency-domain conjugate product.
+    fn forward_fft_into(&self, x: &[f32], b: usize, n: usize,
+                        out: &mut [f32]) {
+        let (d, h) = (self.d, self.h);
+        let dh = d / h;
+        let plan = split_rfft_plan(n);
+        let f = plan.spectrum_len();
+        let log_term = n.trailing_zeros() as usize + 1;
+        arena::with_layer_arena(|la| {
+            let [z, zs, v, vt, zf_re, zf_im] = la.frame([
+                b * n * h, // z: (b·n, h) projection
+                b * h * n, // zs: head-major softmax stripes
+                b * n * d, // v: (b·n, d) projection
+                b * n * d, // vt: stripe-transposed (b·h, dh, n) values
+                b * h * f, // zf: weight spectra, split re/im
+                b * h * f,
+            ]);
 
-        // per-(batch, head) circulant apply into head-major output
-        let mut oh = vec![0.0f32; b * h * n * dh];
-        let tasks: Vec<(&[f32], &[f32], &mut [f32])> = zs
-            .chunks(n)
-            .zip(vh.chunks(n * dh))
-            .zip(oh.chunks_mut(n * dh))
-            .map(|((zc, vc), oc)| (zc, vc, oc))
-            .collect();
-        let est = match mode {
-            CatImpl::Fft => 5 * n * (n.trailing_zeros() as usize + 1) * dh,
-            CatImpl::Gather => 2 * n * n * dh,
-        };
-        par_for_tasks(
-            tasks,
-            est,
-            || ConvScratch::new(n, mode),
-            |(zc, vc, oc), scratch| {
-                apply_circulant(zc, vc, oc, n, dh, mode, scratch);
-            },
-        );
+            self.project(x, b, n, z, zs, v);
 
-        let mut out = vec![0.0f32; b * n * d];
-        merge_heads(&oh, b, n, h, dh, &mut out);
-        Ok(out)
+            // stripe-transpose v: channel c of stripe (bi, head) becomes
+            // one contiguous length-n row, the layout rfft_many consumes
+            // directly
+            {
+                let v = &*v;
+                let tasks: Vec<(usize, &mut [f32])> =
+                    vt.chunks_mut(dh * n).enumerate().collect();
+                pool::run(tasks, 4 * n * dh, |(si, stripe)| {
+                    let (bi, head) = (si / h, si % h);
+                    for (c, row) in stripe.chunks_exact_mut(n).enumerate() {
+                        let base = bi * n * d + head * dh + c;
+                        for (i, slot) in row.iter_mut().enumerate() {
+                            *slot = v[base + i * d];
+                        }
+                    }
+                });
+            }
+
+            // softmax each weight row, then one batched rfft per chunk
+            {
+                let tasks: Vec<((&mut [f32], &mut [f32]), &mut [f32])> = zs
+                    .chunks_mut(n)
+                    .zip(zf_re.chunks_mut(f))
+                    .zip(zf_im.chunks_mut(f))
+                    .collect();
+                pool::run(tasks, 6 * n * log_term, |((row, sre), sim)| {
+                    softmax_in_place(row);
+                    arena::with_task_arena(|ta| {
+                        let [scratch] = ta.frame([plan.scratch_len()]);
+                        plan.rfft(row, sre, sim, scratch);
+                    });
+                });
+            }
+
+            // per-stripe: batched rfft over the dh value rows, conjugate
+            // pointwise product with the stripe's weight spectrum, batched
+            // irfft back into the stripe in place
+            {
+                let zf_re = &*zf_re;
+                let zf_im = &*zf_im;
+                let tasks: Vec<(usize, &mut [f32])> =
+                    vt.chunks_mut(dh * n).enumerate().collect();
+                pool::run(tasks, 5 * n * log_term * dh, |(si, stripe)| {
+                    arena::with_task_arena(|ta| {
+                        let [vre, vim, scratch] = ta.frame(
+                            [dh * f, dh * f, plan.scratch_len()]);
+                        plan.rfft_many(stripe, dh, vre, vim, scratch);
+                        let zr = &zf_re[si * f..(si + 1) * f];
+                        let zi = &zf_im[si * f..(si + 1) * f];
+                        for c in 0..dh {
+                            let vr = &mut vre[c * f..(c + 1) * f];
+                            let vi = &mut vim[c * f..(c + 1) * f];
+                            for k in 0..f {
+                                // conj(zf) ⊙ vf
+                                let (br, bi) = (vr[k], vi[k]);
+                                vr[k] = zr[k] * br + zi[k] * bi;
+                                vi[k] = zr[k] * bi - zi[k] * br;
+                            }
+                        }
+                        plan.irfft_many(vre, vim, dh, stripe, scratch);
+                    });
+                });
+            }
+
+            // un-transpose the stripes into (b, n, d)
+            {
+                let vt = &*vt;
+                let tasks: Vec<(usize, &mut [f32])> =
+                    out.chunks_mut(n * d).enumerate().collect();
+                pool::run(tasks, 4 * n * d, |(bi, obatch)| {
+                    for head in 0..h {
+                        for c in 0..dh {
+                            let row = &vt[((bi * h + head) * dh + c) * n..]
+                                [..n];
+                            let off = head * dh + c;
+                            for (i, &val) in row.iter().enumerate() {
+                                obatch[i * d + off] = val;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    /// O(N²) path: the naive rolled gather, head-major.
+    fn forward_gather_into(&self, x: &[f32], b: usize, n: usize,
+                           out: &mut [f32]) {
+        let (d, h) = (self.d, self.h);
+        let dh = d / h;
+        arena::with_layer_arena(|la| {
+            let [z, zs, v, vh, oh] = la.frame([
+                b * n * h,
+                b * h * n,
+                b * n * d,
+                b * n * d,
+                b * n * d,
+            ]);
+            self.project(x, b, n, z, zs, v);
+            for row in zs.chunks_mut(n) {
+                softmax_in_place(row);
+            }
+            split_heads(v, b, n, h, dh, vh);
+
+            let zs = &*zs;
+            let vh = &*vh;
+            let tasks: Vec<((&[f32], &[f32]), &mut [f32])> = zs
+                .chunks(n)
+                .zip(vh.chunks(n * dh))
+                .zip(oh.chunks_mut(n * dh))
+                .collect();
+            pool::run(tasks, 2 * n * n * dh, |((zc, vc), oc)| {
+                for i in 0..n {
+                    let orow = &mut oc[i * dh..(i + 1) * dh];
+                    orow.fill(0.0);
+                    for k in 0..n {
+                        let w = zc[k];
+                        let j = (i + k) % n;
+                        let vrow = &vc[j * dh..j * dh + dh];
+                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                            *ov += w * vv;
+                        }
+                    }
+                }
+            });
+
+            merge_heads(oh, b, n, h, dh, out);
+        });
     }
 }
 
@@ -376,64 +409,76 @@ impl AttentionLayer {
         3 * self.d * self.d
     }
 
-    /// `x: (b, n, d)` → `(b, n, d)` via softmax(QKᵀ/√dh)·V per head.
+    /// `x: (b, n, d)` → freshly allocated `(b, n, d)` via
+    /// softmax(QKᵀ/√dh)·V per head.
     pub fn forward(&self, x: &[f32], b: usize, n: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; b * n * self.d];
+        self.forward_into(x, b, n, &mut out)?;
+        Ok(out)
+    }
+
+    /// Attention into `out` (fully overwritten); layer-arena backed.
+    pub fn forward_into(&self, x: &[f32], b: usize, n: usize,
+                        out: &mut [f32]) -> Result<()> {
         let (d, h) = (self.d, self.h);
         let dh = d / h;
         ensure!(x.len() == b * n * d,
                 "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
-        let mut proj = vec![0.0f32; b * n * d];
-        let mut heads = vec![vec![0.0f32; b * h * n * dh]; 3];
-        for (w, dst) in [&self.w_q, &self.w_k, &self.w_v]
-            .into_iter()
-            .zip(heads.iter_mut()) {
-            matmul(x, b * n, d, w, d, &mut proj);
-            split_heads(&proj, b, n, h, dh, dst);
-        }
-        let (qh, rest) = heads.split_at(1);
-        let (kh, vh) = rest.split_at(1);
+        ensure!(out.len() == b * n * d,
+                "out has {} elements, expected {}x{}x{}", out.len(), b, n, d);
         let scale = 1.0 / (dh as f32).sqrt();
+        arena::with_layer_arena(|la| {
+            let [proj, qh, kh, vh, oh] = la.frame([
+                b * n * d,
+                b * n * d,
+                b * n * d,
+                b * n * d,
+                b * n * d,
+            ]);
+            matmul(x, b * n, d, &self.w_q, d, proj);
+            split_heads(proj, b, n, h, dh, qh);
+            matmul(x, b * n, d, &self.w_k, d, proj);
+            split_heads(proj, b, n, h, dh, kh);
+            matmul(x, b * n, d, &self.w_v, d, proj);
+            split_heads(proj, b, n, h, dh, vh);
 
-        let mut oh = vec![0.0f32; b * h * n * dh];
-        let tasks: Vec<(&[f32], &[f32], &[f32], &mut [f32])> = qh[0]
-            .chunks(n * dh)
-            .zip(kh[0].chunks(n * dh))
-            .zip(vh[0].chunks(n * dh))
-            .zip(oh.chunks_mut(n * dh))
-            .map(|(((qc, kc), vc), oc)| (qc, kc, vc, oc))
-            .collect();
-        par_for_tasks(
-            tasks,
-            4 * n * n * dh,
-            || vec![0.0f32; n],
-            |(qc, kc, vc, oc), row| {
-                for i in 0..n {
-                    let q = &qc[i * dh..(i + 1) * dh];
-                    for j in 0..n {
-                        let k = &kc[j * dh..(j + 1) * dh];
-                        let mut dot = 0.0f32;
-                        for c in 0..dh {
-                            dot += q[c] * k[c];
+            let (qh, kh, vh) = (&*qh, &*kh, &*vh);
+            let tasks: Vec<(((&[f32], &[f32]), &[f32]), &mut [f32])> = qh
+                .chunks(n * dh)
+                .zip(kh.chunks(n * dh))
+                .zip(vh.chunks(n * dh))
+                .zip(oh.chunks_mut(n * dh))
+                .collect();
+            pool::run(tasks, 4 * n * n * dh, |(((qc, kc), vc), oc)| {
+                arena::with_task_arena(|ta| {
+                    let [row] = ta.frame([n]);
+                    for i in 0..n {
+                        let q = &qc[i * dh..(i + 1) * dh];
+                        for j in 0..n {
+                            let k = &kc[j * dh..(j + 1) * dh];
+                            let mut dot = 0.0f32;
+                            for c in 0..dh {
+                                dot += q[c] * k[c];
+                            }
+                            row[j] = dot * scale;
                         }
-                        row[j] = dot * scale;
-                    }
-                    softmax_in_place(row);
-                    let orow = &mut oc[i * dh..(i + 1) * dh];
-                    orow.fill(0.0);
-                    for j in 0..n {
-                        let w = row[j];
-                        let vrow = &vc[j * dh..(j + 1) * dh];
-                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                            *ov += w * vv;
+                        softmax_in_place(row);
+                        let orow = &mut oc[i * dh..(i + 1) * dh];
+                        orow.fill(0.0);
+                        for j in 0..n {
+                            let w = row[j];
+                            let vrow = &vc[j * dh..(j + 1) * dh];
+                            for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                                *ov += w * vv;
+                            }
                         }
                     }
-                }
-            },
-        );
+                });
+            });
 
-        let mut out = vec![0.0f32; b * n * d];
-        merge_heads(&oh, b, n, h, dh, &mut out);
-        Ok(out)
+            merge_heads(oh, b, n, h, dh, out);
+        });
+        Ok(())
     }
 }
 
@@ -521,7 +566,9 @@ struct Block {
 
 /// Hermetic CAT image classifier served by the native backend: patch
 /// embedding + learned positions + [`Block`] stack + mean pool + linear
-/// head. Entirely deterministic in `(config, seed)`.
+/// head. Entirely deterministic in `(config, seed)`. Activations live in
+/// the model arena, so after warmup a same-shape `forward_batch`
+/// allocates nothing tensor-sized beyond the returned logits.
 pub struct NativeCatModel {
     pub cfg: NativeVitConfig,
     embed_w: Vec<f32>,
@@ -594,94 +641,101 @@ impl NativeCatModel {
                 "images have {} elements, expected {}x{}", images.len(), b,
                 image_len);
 
-        // patchify: (b, n, patch_dim)
-        let per_side = cfg.image_size / cfg.patch_size;
-        let (ps, is) = (cfg.patch_size, cfg.image_size);
-        let mut patches = vec![0.0f32; b * n * pd];
-        for bi in 0..b {
-            let img = &images[bi * image_len..(bi + 1) * image_len];
-            for py in 0..per_side {
-                for px in 0..per_side {
-                    let tok = py * per_side + px;
-                    let dst = &mut patches[(bi * n + tok) * pd..][..pd];
-                    let mut w = 0;
-                    for c in 0..cfg.n_channels {
-                        for dy in 0..ps {
-                            for dx in 0..ps {
-                                dst[w] = img[c * is * is
-                                    + (py * ps + dy) * is
-                                    + px * ps + dx];
-                                w += 1;
+        arena::with_model_arena(|ma| {
+            let [patches, x, norm, mixed, hid, mlp, pooled] = ma.frame([
+                b * n * pd,
+                b * n * d,
+                b * n * d,
+                b * n * d,
+                b * n * 2 * d,
+                b * n * d,
+                b * d,
+            ]);
+
+            // patchify: (b, n, patch_dim)
+            let per_side = cfg.image_size / cfg.patch_size;
+            let (ps, is) = (cfg.patch_size, cfg.image_size);
+            for bi in 0..b {
+                let img = &images[bi * image_len..(bi + 1) * image_len];
+                for py in 0..per_side {
+                    for px in 0..per_side {
+                        let tok = py * per_side + px;
+                        let dst = &mut patches[(bi * n + tok) * pd..][..pd];
+                        let mut w = 0;
+                        for c in 0..cfg.n_channels {
+                            for dy in 0..ps {
+                                for dx in 0..ps {
+                                    dst[w] = img[c * is * is
+                                        + (py * ps + dy) * is
+                                        + px * ps + dx];
+                                    w += 1;
+                                }
                             }
                         }
                     }
                 }
             }
-        }
 
-        // embed + positions
-        let mut x = vec![0.0f32; b * n * d];
-        matmul(&patches, b * n, pd, &self.embed_w, d, &mut x);
-        for bi in 0..b {
-            for tok in 0..n {
-                let row = &mut x[(bi * n + tok) * d..][..d];
-                for c in 0..d {
-                    row[c] += self.embed_b[c] + self.pos[tok * d + c];
+            // embed + positions
+            matmul(patches, b * n, pd, &self.embed_w, d, x);
+            for bi in 0..b {
+                for tok in 0..n {
+                    let row = &mut x[(bi * n + tok) * d..][..d];
+                    for c in 0..d {
+                        row[c] += self.embed_b[c] + self.pos[tok * d + c];
+                    }
                 }
             }
-        }
 
-        // block stack
-        let mut norm = vec![0.0f32; b * n * d];
-        for block in &self.blocks {
-            block.ln1.apply(&x, &mut norm);
-            let mixed = block.cat.forward(&norm, b, n, cfg.cat_impl)?;
-            for (xv, mv) in x.iter_mut().zip(&mixed) {
-                *xv += mv;
-            }
-            block.ln2.apply(&x, &mut norm);
-            let mut hid = vec![0.0f32; b * n * 2 * d];
-            matmul(&norm, b * n, d, &block.mlp_w1, 2 * d, &mut hid);
-            for row in hid.chunks_exact_mut(2 * d) {
-                for (v, &bias) in row.iter_mut().zip(&block.mlp_b1) {
-                    *v = (*v + bias).max(0.0);
+            // block stack (buffers reused across blocks)
+            for block in &self.blocks {
+                block.ln1.apply(x, norm);
+                block.cat.forward_into(norm, b, n, cfg.cat_impl, mixed)?;
+                for (xv, mv) in x.iter_mut().zip(mixed.iter()) {
+                    *xv += mv;
+                }
+                block.ln2.apply(x, norm);
+                matmul(norm, b * n, d, &block.mlp_w1, 2 * d, hid);
+                for row in hid.chunks_exact_mut(2 * d) {
+                    for (v, &bias) in row.iter_mut().zip(&block.mlp_b1) {
+                        *v = (*v + bias).max(0.0);
+                    }
+                }
+                matmul(hid, b * n, 2 * d, &block.mlp_w2, d, mlp);
+                for (row, xrow) in mlp
+                    .chunks_exact(d)
+                    .zip(x.chunks_exact_mut(d)) {
+                    for (xv, (&mv, &bias)) in
+                        xrow.iter_mut().zip(row.iter().zip(&block.mlp_b2)) {
+                        *xv += mv + bias;
+                    }
                 }
             }
-            let mut mlp = vec![0.0f32; b * n * d];
-            matmul(&hid, b * n, 2 * d, &block.mlp_w2, d, &mut mlp);
-            for (row, xrow) in mlp
-                .chunks_exact(d)
-                .zip(x.chunks_exact_mut(d)) {
-                for (xv, (&mv, &bias)) in
-                    xrow.iter_mut().zip(row.iter().zip(&block.mlp_b2)) {
-                    *xv += mv + bias;
-                }
-            }
-        }
 
-        // final LN, mean pool over tokens, classifier head
-        self.ln_f.apply(&x, &mut norm);
-        let mut pooled = vec![0.0f32; b * d];
-        for bi in 0..b {
-            let prow = &mut pooled[bi * d..(bi + 1) * d];
-            for tok in 0..n {
-                let row = &norm[(bi * n + tok) * d..][..d];
-                for c in 0..d {
-                    prow[c] += row[c];
+            // final LN, mean pool over tokens, classifier head
+            self.ln_f.apply(x, norm);
+            pooled.fill(0.0);
+            for bi in 0..b {
+                let prow = &mut pooled[bi * d..(bi + 1) * d];
+                for tok in 0..n {
+                    let row = &norm[(bi * n + tok) * d..][..d];
+                    for c in 0..d {
+                        prow[c] += row[c];
+                    }
+                }
+                for v in prow.iter_mut() {
+                    *v /= n as f32;
                 }
             }
-            for v in prow.iter_mut() {
-                *v /= n as f32;
+            let mut logits = vec![0.0f32; b * cfg.n_classes];
+            matmul(pooled, b, d, &self.head_w, cfg.n_classes, &mut logits);
+            for row in logits.chunks_exact_mut(cfg.n_classes) {
+                for (v, &bias) in row.iter_mut().zip(&self.head_b) {
+                    *v += bias;
+                }
             }
-        }
-        let mut logits = vec![0.0f32; b * cfg.n_classes];
-        matmul(&pooled, b, d, &self.head_w, cfg.n_classes, &mut logits);
-        for row in logits.chunks_exact_mut(cfg.n_classes) {
-            for (v, &bias) in row.iter_mut().zip(&self.head_b) {
-                *v += bias;
-            }
-        }
-        Ok(logits)
+            Ok(logits)
+        })
     }
 
     /// Classify one CHW image (serving single-example path).
@@ -711,6 +765,38 @@ mod tests {
         for (i, (a, g)) in fft.iter().zip(&gather).enumerate() {
             assert!((a - g).abs() < 1e-4, "element {i}: {a} vs {g}");
         }
+    }
+
+    #[test]
+    fn fft_matches_gather_at_pool_scale() {
+        // large enough that every parallel section actually fans out
+        let (b, n, d, h) = (2, 512, 64, 4);
+        let mut rng = Rng::new(17);
+        let layer = CatLayer::init(d, h, &mut rng);
+        let x = random_x(b, n, d, 19);
+        let fft = layer.forward(&x, b, n, CatImpl::Fft).unwrap();
+        let gather = layer.forward(&x, b, n, CatImpl::Gather).unwrap();
+        for (i, (a, g)) in fft.iter().zip(&gather).enumerate() {
+            assert!((a - g).abs() < 1e-3, "element {i}: {a} vs {g}");
+        }
+    }
+
+    #[test]
+    fn serial_forward_is_allocation_free_after_warmup() {
+        // small shape => every section runs inline on this thread, so the
+        // arena growth counter is deterministic
+        let (b, n, d, h) = (1, 32, 16, 4);
+        let mut rng = Rng::new(23);
+        let layer = CatLayer::init(d, h, &mut rng);
+        let x = random_x(b, n, d, 29);
+        let mut out = vec![0.0f32; b * n * d];
+        layer.forward_into(&x, b, n, CatImpl::Fft, &mut out).unwrap();
+        let caps = arena::thread_arena_capacities();
+        for _ in 0..10 {
+            layer.forward_into(&x, b, n, CatImpl::Fft, &mut out).unwrap();
+        }
+        assert_eq!(arena::thread_arena_capacities(), caps,
+                   "steady-state forward_into grew this thread's arenas");
     }
 
     #[test]

@@ -1,11 +1,26 @@
-//! Planned FFTs for the native CAT backend: an iterative in-place radix-2
-//! complex FFT plus a packed real FFT (rfft/irfft), with all twiddle
-//! factors and bit-reversal permutations precomputed once per length in an
-//! [`FftPlan`] / [`RfftPlan`] and shared through a global plan cache
-//! ([`rfft_plan`]). The hot loops perform **zero allocation**: every
-//! transform runs in place over caller-provided buffers, so repeated
-//! same-length calls touch only the cached plan (see
-//! `plan_cache_stats`, asserted in `tests/native_backend.rs`).
+//! Planned FFTs for the native CAT backend, two tiers:
+//!
+//! * **Reference tier** — the PR-1 iterative in-place radix-2 complex FFT
+//!   ([`FftPlan`]) plus a packed real FFT ([`RfftPlan`]) over AoS
+//!   [`Complex`] values. Kept as the bit-exactness oracle: the property
+//!   tests pin the fast tier against it.
+//! * **Throughput tier** — [`SplitRfftPlan`]: a **split-complex** (SoA,
+//!   separate re/im `f32` slices) Stockham autosort FFT with a radix-4
+//!   main kernel and one radix-2 fallback stage when log₂N is odd. No
+//!   bit-reversal pass (Stockham self-sorts through ping-pong buffers),
+//!   flat `f32` inner loops the compiler auto-vectorizes, and a batched
+//!   API ([`SplitRfftPlan::rfft_many`] / [`SplitRfftPlan::irfft_many`])
+//!   that applies one plan across a whole `batch×head` stripe of
+//!   contiguous rows, so one plan fetch and one scratch frame serve the
+//!   stripe and the per-stage twiddle tables stay cache-hot from row to
+//!   row.
+//!
+//! All twiddle factors are precomputed per length in the plans and shared
+//! through global plan caches ([`rfft_plan`], [`split_rfft_plan`]). The
+//! hot loops perform **zero allocation**: transforms run over
+//! caller-provided buffers (the task arenas of [`super::arena`] in the
+//! CAT hot path), so repeated same-length calls touch only the cached
+//! plan (see [`plan_cache_stats`], asserted in `tests/native_backend.rs`).
 //!
 //! Conventions match `numpy.fft` (and therefore the JAX reference kernels
 //! in `python/compile/kernels/ref.py`):
@@ -89,7 +104,8 @@ fn twiddle(k: usize, n: usize) -> Complex {
     Complex::new(angle.cos() as f32, angle.sin() as f32)
 }
 
-/// Precomputed radix-2 complex FFT of one power-of-two length.
+/// Precomputed radix-2 complex FFT of one power-of-two length
+/// (reference tier; the hot path uses [`SplitRfftPlan`]).
 pub struct FftPlan {
     n: usize,
     /// bit-reversal permutation over 0..n
@@ -168,7 +184,8 @@ impl FftPlan {
     }
 }
 
-/// Planned real FFT of length `n` via one complex FFT of length `n/2`.
+/// Planned real FFT of length `n` via one complex FFT of length `n/2`
+/// (reference tier).
 pub struct RfftPlan {
     n: usize,
     half: FftPlan,
@@ -276,15 +293,378 @@ impl RfftPlan {
 }
 
 // ---------------------------------------------------------------------------
-// plan cache
+// split-complex Stockham tier (the serving hot path)
+// ---------------------------------------------------------------------------
+
+/// One Stockham stage: all butterflies of one radix pass, twiddles
+/// precomputed in SoA form so the `q` inner loop is flat f32 arithmetic.
+struct SplitStage {
+    /// sub-transform length at this stage
+    n_cur: usize,
+    /// stride (number of interleaved sub-transforms completed so far)
+    s: usize,
+    /// 4 for the main kernel, 2 for the final fallback pass
+    radix: u8,
+    /// `w1[p] = exp(-2πi p / n_cur)` for `p < n_cur/radix`
+    w1re: Vec<f32>,
+    w1im: Vec<f32>,
+    /// `w1²` / `w1³` (radix-4 stages only)
+    w2re: Vec<f32>,
+    w2im: Vec<f32>,
+    w3re: Vec<f32>,
+    w3im: Vec<f32>,
+}
+
+/// Planned split-complex real FFT: SoA buffers, radix-4 Stockham main
+/// kernel (radix-2 fallback for odd log₂), batched row API. This is what
+/// `CatLayer` drives; [`RfftPlan`] remains the correctness oracle.
+pub struct SplitRfftPlan {
+    n: usize,
+    /// half length (the packed complex transform length)
+    h: usize,
+    /// Stockham schedule for the length-`h` complex FFT
+    stages: Vec<SplitStage>,
+    /// untangle twiddles `exp(-2πi k / n)` for `k <= h/2`
+    om_re: Vec<f32>,
+    om_im: Vec<f32>,
+}
+
+impl SplitRfftPlan {
+    pub fn new(n: usize) -> SplitRfftPlan {
+        assert!(n >= 1 && n.is_power_of_two(),
+                "rFFT length must be a power of two, got {n}");
+        let h = n / 2;
+        let mut stages = Vec::new();
+        let mut n_cur = h;
+        let mut s = 1usize;
+        while n_cur >= 4 {
+            let m = n_cur / 4;
+            let mut st = SplitStage {
+                n_cur,
+                s,
+                radix: 4,
+                w1re: Vec::with_capacity(m),
+                w1im: Vec::with_capacity(m),
+                w2re: Vec::with_capacity(m),
+                w2im: Vec::with_capacity(m),
+                w3re: Vec::with_capacity(m),
+                w3im: Vec::with_capacity(m),
+            };
+            for p in 0..m {
+                let w1 = twiddle(p, n_cur);
+                let w2 = w1 * w1;
+                let w3 = w2 * w1;
+                st.w1re.push(w1.re);
+                st.w1im.push(w1.im);
+                st.w2re.push(w2.re);
+                st.w2im.push(w2.im);
+                st.w3re.push(w3.re);
+                st.w3im.push(w3.im);
+            }
+            stages.push(st);
+            n_cur /= 4;
+            s *= 4;
+        }
+        if n_cur == 2 {
+            // final radix-2 pass: n_cur == 2 means its only twiddle is
+            // ω⁰ = 1, so no tables are needed (stage_apply specializes)
+            stages.push(SplitStage {
+                n_cur: 2,
+                s,
+                radix: 2,
+                w1re: Vec::new(),
+                w1im: Vec::new(),
+                w2re: Vec::new(),
+                w2im: Vec::new(),
+                w3re: Vec::new(),
+                w3im: Vec::new(),
+            });
+        }
+        let omega: Vec<Complex> =
+            (0..=h / 2).map(|k| twiddle(k, n)).collect();
+        SplitRfftPlan {
+            n,
+            h,
+            stages,
+            om_re: omega.iter().map(|w| w.re).collect(),
+            om_im: omega.iter().map(|w| w.im).collect(),
+        }
+    }
+
+    /// Real input length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Spectrum bins per row: `n/2 + 1`.
+    pub fn spectrum_len(&self) -> usize {
+        self.n / 2 + 1
+    }
+
+    /// Required scratch length (f32 elements) for either direction:
+    /// two re/im ping-pong buffers of the half length.
+    pub fn scratch_len(&self) -> usize {
+        4 * self.h
+    }
+
+    /// Batched real forward FFT: `xs` is `rows` contiguous rows of length
+    /// `n`; spectra land in `spec_re`/`spec_im` as `rows` contiguous rows
+    /// of length `n/2 + 1`. `scratch` needs [`Self::scratch_len`]
+    /// elements. Allocation-free; rows are transformed back to back, so
+    /// the stage twiddle tables stay cache-hot across the whole batch.
+    pub fn rfft_many(&self, xs: &[f32], rows: usize, spec_re: &mut [f32],
+                     spec_im: &mut [f32], scratch: &mut [f32]) {
+        let (n, f) = (self.n, self.spectrum_len());
+        assert_eq!(xs.len(), rows * n, "input rows mismatch");
+        assert_eq!(spec_re.len(), rows * f, "spectrum re rows mismatch");
+        assert_eq!(spec_im.len(), rows * f, "spectrum im rows mismatch");
+        assert!(scratch.len() >= self.scratch_len(), "scratch too small");
+        let (scr_re, scr_im) = scratch[..2 * self.h].split_at_mut(self.h);
+        for r in 0..rows {
+            self.rfft_row(&xs[r * n..(r + 1) * n],
+                          &mut spec_re[r * f..(r + 1) * f],
+                          &mut spec_im[r * f..(r + 1) * f],
+                          scr_re, scr_im);
+        }
+    }
+
+    /// Batched real inverse FFT (with the `1/n` scaling): `rows`
+    /// contiguous spectrum rows → `rows` contiguous time rows in `out`.
+    /// Spectra are read-only. `scratch` needs [`Self::scratch_len`]
+    /// elements.
+    pub fn irfft_many(&self, spec_re: &[f32], spec_im: &[f32], rows: usize,
+                      out: &mut [f32], scratch: &mut [f32]) {
+        let (n, f) = (self.n, self.spectrum_len());
+        assert_eq!(spec_re.len(), rows * f, "spectrum re rows mismatch");
+        assert_eq!(spec_im.len(), rows * f, "spectrum im rows mismatch");
+        assert_eq!(out.len(), rows * n, "output rows mismatch");
+        assert!(scratch.len() >= self.scratch_len(), "scratch too small");
+        let h = self.h;
+        let (ping, pong) = scratch[..4 * h].split_at_mut(2 * h);
+        let (ping_re, ping_im) = ping.split_at_mut(h);
+        let (pong_re, pong_im) = pong.split_at_mut(h);
+        for r in 0..rows {
+            self.irfft_row(&spec_re[r * f..(r + 1) * f],
+                           &spec_im[r * f..(r + 1) * f],
+                           &mut out[r * n..(r + 1) * n],
+                           ping_re, ping_im, pong_re, pong_im);
+        }
+    }
+
+    /// Single-row forward convenience (`rfft_many` with `rows = 1`).
+    pub fn rfft(&self, x: &[f32], spec_re: &mut [f32], spec_im: &mut [f32],
+                scratch: &mut [f32]) {
+        self.rfft_many(x, 1, spec_re, spec_im, scratch);
+    }
+
+    /// Single-row inverse convenience (`irfft_many` with `rows = 1`).
+    pub fn irfft(&self, spec_re: &[f32], spec_im: &[f32], out: &mut [f32],
+                 scratch: &mut [f32]) {
+        self.irfft_many(spec_re, spec_im, 1, out, scratch);
+    }
+
+    fn rfft_row(&self, x: &[f32], sre: &mut [f32], sim: &mut [f32],
+                scr_re: &mut [f32], scr_im: &mut [f32]) {
+        let h = self.h;
+        if self.n == 1 {
+            sre[0] = x[0];
+            sim[0] = 0.0;
+            return;
+        }
+        {
+            // ping-pong the Stockham stages so the result lands in the
+            // spectrum row: even stage count starts there, odd starts in
+            // the scratch pair
+            let (are, aim) = (&mut sre[..h], &mut sim[..h]);
+            let even = self.stages.len() % 2 == 0;
+            let (mut src_re, mut src_im, mut dst_re, mut dst_im) = if even {
+                (are, aim, scr_re, scr_im)
+            } else {
+                (scr_re, scr_im, are, aim)
+            };
+            for k in 0..h {
+                src_re[k] = x[2 * k];
+                src_im[k] = x[2 * k + 1];
+            }
+            for st in &self.stages {
+                stage_apply(st, src_re, src_im, dst_re, dst_im);
+                std::mem::swap(&mut src_re, &mut dst_re);
+                std::mem::swap(&mut src_im, &mut dst_im);
+            }
+        }
+        // untangle in place over the h+1 spectrum bins
+        let (z0r, z0i) = (sre[0], sim[0]);
+        sre[0] = z0r + z0i;
+        sim[0] = 0.0;
+        sre[h] = z0r - z0i;
+        sim[h] = 0.0;
+        for k in 1..=h / 2 {
+            let (zkr, zki) = (sre[k], sim[k]);
+            let (zmr, zmi) = (sre[h - k], sim[h - k]);
+            let er = (zkr + zmr) * 0.5;
+            let ei = (zki - zmi) * 0.5;
+            let dr = zkr - zmr;
+            let di = zki + zmi;
+            let or_ = di * 0.5; // d · (-i/2)
+            let oi_ = -dr * 0.5;
+            let (wr, wi) = (self.om_re[k], self.om_im[k]);
+            sre[k] = er + or_ * wr - oi_ * wi;
+            sim[k] = ei + or_ * wi + oi_ * wr;
+            if k != h - k {
+                // ω^{h-k} = -conj(ω^k); spec[h-k] = conj(e) + ω^{h-k}·conj(o)
+                sre[h - k] = er - or_ * wr + oi_ * wi;
+                sim[h - k] = -ei + or_ * wi + oi_ * wr;
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn irfft_row(&self, sre: &[f32], sim: &[f32], out: &mut [f32],
+                 ping_re: &mut [f32], ping_im: &mut [f32],
+                 pong_re: &mut [f32], pong_im: &mut [f32]) {
+        let h = self.h;
+        if self.n == 1 {
+            out[0] = sre[0];
+            return;
+        }
+        // retangle into the packed half-length spectrum Z, storing the
+        // conjugate (negated im): the inverse transform runs the forward
+        // kernel on conj(Z) and conjugates back during the unpack
+        let (x0r, xhr) = (sre[0], sre[h]);
+        ping_re[0] = (x0r + xhr) * 0.5;
+        ping_im[0] = -((x0r - xhr) * 0.5);
+        for k in 1..=h / 2 {
+            let (xkr, xki) = (sre[k], sim[k]);
+            let (xmr, xmi) = (sre[h - k], sim[h - k]);
+            let er = (xkr + xmr) * 0.5;
+            let ei = (xki - xmi) * 0.5;
+            let dr = (xkr - xmr) * 0.5;
+            let di = (xki + xmi) * 0.5;
+            let (wr, wi) = (self.om_re[k], self.om_im[k]);
+            let or_ = wr * dr + wi * di; // conj(ω^k) · d
+            let oi_ = wr * di - wi * dr;
+            // Z[k] = E + i·O, stored conjugated
+            ping_re[k] = er - oi_;
+            ping_im[k] = -(ei + or_);
+            if k != h - k {
+                // Z[h-k] = conj(E) + i·conj(O), stored conjugated
+                ping_re[h - k] = er + oi_;
+                ping_im[h - k] = ei - or_;
+            }
+        }
+        let (mut src_re, mut src_im, mut dst_re, mut dst_im) =
+            (ping_re, ping_im, pong_re, pong_im);
+        for st in &self.stages {
+            stage_apply(st, src_re, src_im, dst_re, dst_im);
+            std::mem::swap(&mut src_re, &mut dst_re);
+            std::mem::swap(&mut src_im, &mut dst_im);
+        }
+        let inv = 1.0 / h as f32;
+        for k in 0..h {
+            out[2 * k] = src_re[k] * inv;
+            out[2 * k + 1] = -src_im[k] * inv;
+        }
+    }
+}
+
+/// One Stockham pass `src → dst`. For radix 4 with sub-length `n_cur`,
+/// stride `s`, `m = n_cur/4`: reads lanes `src[s·(p + m·r) ..][..s]`,
+/// writes lanes `dst[s·(4p + r) ..][..s]` with the DIF butterfly
+///
+/// ```text
+///   t0 = a + c   t1 = a − c   t2 = b + d   t3 = −i·(b − d)
+///   y0 = t0 + t2          y1 = ω¹ᵖ·(t1 + t3)
+///   y2 = ω²ᵖ·(t0 − t2)    y3 = ω³ᵖ·(t1 − t3)
+/// ```
+///
+/// The `q` inner loops run over equal-length `f32` slices — flat FMA
+/// chains the compiler vectorizes.
+fn stage_apply(st: &SplitStage, src_re: &[f32], src_im: &[f32],
+               dst_re: &mut [f32], dst_im: &mut [f32]) {
+    let s = st.s;
+    if st.radix == 4 {
+        let m = st.n_cur / 4;
+        for p in 0..m {
+            let (w1r, w1i) = (st.w1re[p], st.w1im[p]);
+            let (w2r, w2i) = (st.w2re[p], st.w2im[p]);
+            let (w3r, w3i) = (st.w3re[p], st.w3im[p]);
+            let a_r = &src_re[s * p..s * (p + 1)];
+            let a_i = &src_im[s * p..s * (p + 1)];
+            let b_r = &src_re[s * (p + m)..s * (p + m + 1)];
+            let b_i = &src_im[s * (p + m)..s * (p + m + 1)];
+            let c_r = &src_re[s * (p + 2 * m)..s * (p + 2 * m + 1)];
+            let c_i = &src_im[s * (p + 2 * m)..s * (p + 2 * m + 1)];
+            let d_r = &src_re[s * (p + 3 * m)..s * (p + 3 * m + 1)];
+            let d_i = &src_im[s * (p + 3 * m)..s * (p + 3 * m + 1)];
+            let o = 4 * p * s;
+            let (y0r, rest) = dst_re[o..o + 4 * s].split_at_mut(s);
+            let (y1r, rest) = rest.split_at_mut(s);
+            let (y2r, y3r) = rest.split_at_mut(s);
+            let (y0i, rest) = dst_im[o..o + 4 * s].split_at_mut(s);
+            let (y1i, rest) = rest.split_at_mut(s);
+            let (y2i, y3i) = rest.split_at_mut(s);
+            for q in 0..s {
+                let (ar, ai) = (a_r[q], a_i[q]);
+                let (br, bi) = (b_r[q], b_i[q]);
+                let (cr, ci) = (c_r[q], c_i[q]);
+                let (dr, di) = (d_r[q], d_i[q]);
+                let (t0r, t0i) = (ar + cr, ai + ci);
+                let (t1r, t1i) = (ar - cr, ai - ci);
+                let (t2r, t2i) = (br + dr, bi + di);
+                // t3 = -i·(b - d)
+                let (t3r, t3i) = (bi - di, dr - br);
+                y0r[q] = t0r + t2r;
+                y0i[q] = t0i + t2i;
+                let (u1r, u1i) = (t1r + t3r, t1i + t3i);
+                y1r[q] = u1r * w1r - u1i * w1i;
+                y1i[q] = u1r * w1i + u1i * w1r;
+                let (u2r, u2i) = (t0r - t2r, t0i - t2i);
+                y2r[q] = u2r * w2r - u2i * w2i;
+                y2i[q] = u2r * w2i + u2i * w2r;
+                let (u3r, u3i) = (t1r - t3r, t1i - t3i);
+                y3r[q] = u3r * w3r - u3i * w3i;
+                y3i[q] = u3r * w3i + u3i * w3r;
+            }
+        }
+    } else {
+        // radix-2 fallback pass: in this schedule it only ever runs as
+        // the final stage, where n_cur == 2 so the single twiddle is
+        // ω⁰ = 1 and the butterfly is a bare add/sub
+        debug_assert_eq!(st.n_cur, 2, "radix-2 pass is the final stage");
+        let a_r = &src_re[..s];
+        let a_i = &src_im[..s];
+        let b_r = &src_re[s..2 * s];
+        let b_i = &src_im[s..2 * s];
+        let (y0r, y1r) = dst_re[..2 * s].split_at_mut(s);
+        let (y0i, y1i) = dst_im[..2 * s].split_at_mut(s);
+        for q in 0..s {
+            let (ar, ai) = (a_r[q], a_i[q]);
+            let (br, bi) = (b_r[q], b_i[q]);
+            y0r[q] = ar + br;
+            y0i[q] = ai + bi;
+            y1r[q] = ar - br;
+            y1i[q] = ai - bi;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// plan caches
 // ---------------------------------------------------------------------------
 
 static PLAN_CACHE: OnceLock<Mutex<HashMap<usize, Arc<RfftPlan>>>> =
     OnceLock::new();
+static SPLIT_CACHE: OnceLock<Mutex<HashMap<usize, Arc<SplitRfftPlan>>>> =
+    OnceLock::new();
 static PLAN_HITS: AtomicU64 = AtomicU64::new(0);
 static PLAN_MISSES: AtomicU64 = AtomicU64::new(0);
 
-/// Fetch (or build once) the shared real-FFT plan for length `n`.
+/// Fetch (or build once) the shared reference real-FFT plan for length
+/// `n`.
 ///
 /// Plans are immutable after construction, so one `Arc` serves every
 /// thread; repeat calls of the same length never allocate a new plan.
@@ -301,8 +681,25 @@ pub fn rfft_plan(n: usize) -> Arc<RfftPlan> {
     plan
 }
 
-/// Cumulative (hits, misses) of the plan cache — misses is exactly the
-/// number of plans ever constructed through [`rfft_plan`].
+/// Fetch (or build once) the shared split-complex real-FFT plan for
+/// length `n` — the hot-path sibling of [`rfft_plan`], same caching
+/// contract, same hit/miss counters.
+pub fn split_rfft_plan(n: usize) -> Arc<SplitRfftPlan> {
+    let cache = SPLIT_CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = cache.lock().expect("split plan cache poisoned");
+    if let Some(plan) = map.get(&n) {
+        PLAN_HITS.fetch_add(1, Ordering::Relaxed);
+        return plan.clone();
+    }
+    PLAN_MISSES.fetch_add(1, Ordering::Relaxed);
+    let plan = Arc::new(SplitRfftPlan::new(n));
+    map.insert(n, plan.clone());
+    plan
+}
+
+/// Cumulative (hits, misses) across both plan caches — misses is exactly
+/// the number of plans ever constructed through [`rfft_plan`] /
+/// [`split_rfft_plan`].
 pub fn plan_cache_stats() -> (u64, u64) {
     (PLAN_HITS.load(Ordering::Relaxed), PLAN_MISSES.load(Ordering::Relaxed))
 }
@@ -394,23 +791,94 @@ mod tests {
     }
 
     #[test]
+    fn split_rfft_matches_radix2_reference() {
+        // every schedule shape: pure radix-4 (h = 4^k), radix-2-capped
+        // (h = 2·4^k), the degenerate lengths, and a large stripe
+        for n in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 1024, 4096, 8192] {
+            let x = signal(n, 11);
+            let rplan = RfftPlan::new(n);
+            let mut want = vec![Complex::ZERO; rplan.spectrum_len()];
+            rplan.forward(&x, &mut want);
+
+            let splan = SplitRfftPlan::new(n);
+            assert_eq!(splan.spectrum_len(), rplan.spectrum_len());
+            let f = splan.spectrum_len();
+            let mut sre = vec![0.0f32; f];
+            let mut sim = vec![0.0f32; f];
+            let mut scratch = vec![0.0f32; splan.scratch_len()];
+            splan.rfft(&x, &mut sre, &mut sim, &mut scratch);
+            for k in 0..f {
+                let tol = 1e-5 * (1.0 + want[k].norm_sq().sqrt());
+                assert!((sre[k] - want[k].re).abs() < tol
+                            && (sim[k] - want[k].im).abs() < tol,
+                        "n={n} bin {k}: split ({}, {}) vs radix-2 {:?}",
+                        sre[k], sim[k], want[k]);
+            }
+
+            let mut back = vec![0.0f32; n];
+            splan.irfft(&sre, &sim, &mut back, &mut scratch);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-5, "n={n} roundtrip: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_rfft_many_equals_per_row() {
+        let (n, rows) = (256usize, 7usize);
+        let plan = SplitRfftPlan::new(n);
+        let f = plan.spectrum_len();
+        let xs = signal(n * rows, 13);
+        let mut scratch = vec![0.0f32; plan.scratch_len()];
+
+        let mut bre = vec![0.0f32; rows * f];
+        let mut bim = vec![0.0f32; rows * f];
+        plan.rfft_many(&xs, rows, &mut bre, &mut bim, &mut scratch);
+
+        for r in 0..rows {
+            let mut sre = vec![0.0f32; f];
+            let mut sim = vec![0.0f32; f];
+            plan.rfft(&xs[r * n..(r + 1) * n], &mut sre, &mut sim,
+                      &mut scratch);
+            assert_eq!(&bre[r * f..(r + 1) * f], &sre[..], "row {r} re");
+            assert_eq!(&bim[r * f..(r + 1) * f], &sim[..], "row {r} im");
+        }
+
+        let mut back = vec![0.0f32; rows * n];
+        plan.irfft_many(&bre, &bim, rows, &mut back, &mut scratch);
+        for (a, b) in back.iter().zip(&xs) {
+            assert!((a - b).abs() < 1e-5, "batched roundtrip: {a} vs {b}");
+        }
+    }
+
+    #[test]
     fn plan_cache_reuses_plans() {
         // repeat calls must hand back the same Arc (pointer identity is
         // immune to other tests concurrently caching different lengths)
         let first = rfft_plan(2048);
+        let sfirst = split_rfft_plan(2048);
         let hits_before = plan_cache_stats().0;
         for _ in 0..64 {
             let p = rfft_plan(2048);
             assert_eq!(p.len(), 2048);
             assert!(Arc::ptr_eq(&first, &p),
                     "repeat rfft_plan(2048) constructed a new plan");
+            let sp = split_rfft_plan(2048);
+            assert!(Arc::ptr_eq(&sfirst, &sp),
+                    "repeat split_rfft_plan(2048) constructed a new plan");
         }
-        assert!(plan_cache_stats().0 >= hits_before + 64);
+        assert!(plan_cache_stats().0 >= hits_before + 128);
     }
 
     #[test]
     #[should_panic(expected = "power of two")]
     fn non_power_of_two_rejected() {
         let _ = FftPlan::new(12);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn split_non_power_of_two_rejected() {
+        let _ = SplitRfftPlan::new(24);
     }
 }

@@ -1,21 +1,30 @@
 //! Native backend: CAT computed in pure Rust, no PJRT artifacts required.
 //!
-//! Two layers:
+//! Four layers:
 //!
-//! * [`fft`] — planned radix-2 complex FFT + packed real FFT with a global
-//!   per-length plan cache (twiddles and bit-reversal computed once, zero
-//!   allocation in the transform hot loops);
-//! * [`cat`] — the CAT mixing layer (FFT and O(N²) gather reference), a
-//!   native softmax-attention baseline, and the hermetic serving model
-//!   ([`NativeCatModel`]).
+//! * [`pool`] — the persistent worker pool every parallel section runs
+//!   on: spawned once, channel-fed task chunks, zero thread spawns at
+//!   steady state ([`pool::stats`] is asserted by the serving benches);
+//! * [`arena`] — per-thread bump arenas (model / layer / task levels) so
+//!   forwards are allocation-free after warmup;
+//! * [`fft`] — planned FFTs: the radix-2 reference tier ([`FftPlan`],
+//!   [`RfftPlan`]) plus the split-complex Stockham radix-4 throughput
+//!   tier ([`SplitRfftPlan`]) with batched `rfft_many`/`irfft_many`,
+//!   both behind global per-length plan caches;
+//! * [`cat`] — the CAT mixing layer (batched-FFT and O(N²) gather
+//!   reference), a native softmax-attention baseline, and the hermetic
+//!   serving model ([`NativeCatModel`]).
 //!
 //! This is the `Backend::Native` half of the backend story (DESIGN.md §6):
 //! the coordinator serves and the benches measure real CAT wallclock even
 //! in a fresh checkout with no `artifacts/` directory and no XLA runtime.
 
+pub mod arena;
 pub mod cat;
 pub mod fft;
+pub mod pool;
 
 pub use cat::{matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
               NativeCatModel, NativeVitConfig};
-pub use fft::{plan_cache_stats, rfft_plan, Complex, FftPlan, RfftPlan};
+pub use fft::{plan_cache_stats, rfft_plan, split_rfft_plan, Complex,
+              FftPlan, RfftPlan, SplitRfftPlan};

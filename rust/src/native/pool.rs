@@ -1,0 +1,376 @@
+//! Persistent worker pool for the native hot path.
+//!
+//! PR 1 parallelized every forward with `std::thread::scope`, which spawns
+//! (and joins, and frees) one OS thread per worker per parallel section —
+//! fine for a one-shot bench, hostile to serving throughput where a single
+//! request crosses several parallel sections (two projections, the FFT
+//! stripe sweep, the merge). This module replaces all of that with one
+//! lazily-started global pool:
+//!
+//! * workers are spawned **once** ([`Pool::global`]) and live for the
+//!   process — steady-state serving spawns zero threads (asserted via
+//!   [`stats`] in `benches/coordinator.rs` and `tests/native_backend.rs`);
+//! * a parallel section chops its task list into contiguous chunks (one
+//!   per worker plus one for the caller, which participates instead of
+//!   idling) and feeds them through the shared task channel — workers
+//!   grab whatever chunk comes off the queue next, so load balances
+//!   across concurrent sections work-stealing-ishly;
+//! * per-worker scratch lives in the thread-local arenas of
+//!   [`super::arena`], which persist across jobs precisely because the
+//!   threads do.
+//!
+//! Scoped borrows: [`run`] erases task lifetimes to feed the 'static job
+//! queue, then blocks on a latch until every chunk has finished (normal
+//! return *or* unwind), which is exactly the guarantee that made
+//! `thread::scope` sound. A section issued from inside a pool worker runs
+//! inline — workers never wait on workers, so the pool cannot deadlock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Below this estimated per-section FLOP count a section runs inline:
+/// channel + wakeup latency would dominate (important for the small-N
+/// crossover measurements and single-image serving).
+const PAR_THRESHOLD: usize = 1 << 20;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Queue {
+    jobs: Mutex<VecDeque<Job>>,
+    available: Condvar,
+}
+
+static THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+static CHUNKS_EXECUTED: AtomicU64 = AtomicU64::new(0);
+static PAR_SECTIONS: AtomicU64 = AtomicU64::new(0);
+static INLINE_SECTIONS: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// Set inside pool workers; sections issued from a worker run inline.
+    static IS_POOL_WORKER: std::cell::Cell<bool> = const {
+        std::cell::Cell::new(false)
+    };
+}
+
+/// Cumulative pool counters ([`stats`]). `threads_spawned` moves only
+/// while the pool is warming up — the serving benches assert it is flat
+/// across steady-state requests.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolStats {
+    /// Worker threads the global pool runs (0 until first use).
+    pub workers: usize,
+    /// OS threads ever spawned by the pool (== `workers` after warmup).
+    pub threads_spawned: u64,
+    /// Task chunks executed on pool workers.
+    pub chunks_executed: u64,
+    /// Parallel sections that engaged the pool.
+    pub par_sections: u64,
+    /// Sections that ran inline (tiny work, lone task, or nested).
+    pub inline_sections: u64,
+}
+
+/// Snapshot the pool counters without forcing pool startup.
+pub fn stats() -> PoolStats {
+    PoolStats {
+        workers: POOL.get().map_or(0, |p| p.workers),
+        threads_spawned: THREADS_SPAWNED.load(Ordering::Relaxed),
+        chunks_executed: CHUNKS_EXECUTED.load(Ordering::Relaxed),
+        par_sections: PAR_SECTIONS.load(Ordering::Relaxed),
+        inline_sections: INLINE_SECTIONS.load(Ordering::Relaxed),
+    }
+}
+
+/// Upper bound on concurrent chunks one section should produce (pool
+/// workers + the participating caller). Chunk-count sizing for `matmul`
+/// and the CAT stripe sweep.
+pub fn max_parallel_tasks() -> usize {
+    hardware_workers() + 1
+}
+
+fn hardware_workers() -> usize {
+    static WORKERS: OnceLock<usize> = OnceLock::new();
+    // effectively immutable for the process; cache to keep the per-section
+    // gate check syscall-free on the hot path
+    *WORKERS.get_or_init(|| {
+        std::thread::available_parallelism()
+            .map(|v| v.get())
+            .unwrap_or(1)
+            .min(16)
+    })
+}
+
+/// Completion latch for one parallel section. Counted down by every
+/// chunk's drop guard, so unwinding chunks still release the caller.
+struct Latch {
+    remaining: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(count),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut r = self.remaining.lock().expect("latch poisoned");
+        *r -= 1;
+        if *r == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().expect("latch poisoned");
+        while *r > 0 {
+            r = self.done.wait(r).expect("latch poisoned");
+        }
+    }
+}
+
+/// Fires `count_down` on normal completion and on unwind; records the
+/// panic so the caller can re-raise after `wait`.
+struct CountGuard(Arc<Latch>);
+
+impl Drop for CountGuard {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            self.0.panicked.store(true, Ordering::Relaxed);
+        }
+        self.0.count_down();
+    }
+}
+
+/// The process-wide pool. Obtain through [`Pool::global`].
+pub struct Pool {
+    queue: Arc<Queue>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+impl Pool {
+    /// The lazily-started global pool; first call spawns the workers.
+    pub fn global() -> &'static Pool {
+        POOL.get_or_init(|| {
+            let workers = hardware_workers();
+            let queue = Arc::new(Queue {
+                jobs: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+            });
+            for _ in 0..workers {
+                let q = queue.clone();
+                THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+                std::thread::spawn(move || worker_loop(&q));
+            }
+            Pool { queue, workers }
+        })
+    }
+
+    fn enqueue(&self, job: Job) {
+        self.queue.jobs.lock().expect("pool queue poisoned").push_back(job);
+        self.queue.available.notify_one();
+    }
+
+    /// Run `f` over every task, fanning contiguous chunks across the
+    /// workers while the caller executes the first chunk itself. Returns
+    /// only after every task has completed; panics from worker chunks are
+    /// re-raised here.
+    pub fn run_scoped<'scope, T, F>(&self, tasks: Vec<T>, f: &'scope F)
+    where
+        T: Send + 'scope,
+        F: Fn(T) + Sync + 'scope,
+    {
+        let len = tasks.len();
+        let chunks = (self.workers + 1).min(len);
+        if chunks <= 1 {
+            INLINE_SECTIONS.fetch_add(1, Ordering::Relaxed);
+            for t in tasks {
+                f(t);
+            }
+            return;
+        }
+        PAR_SECTIONS.fetch_add(1, Ordering::Relaxed);
+        let mut iter = tasks.into_iter();
+        let mut own: Option<Vec<T>> = None;
+        let latch = Arc::new(Latch::new(chunks - 1));
+        for ci in 0..chunks {
+            let take = len / chunks + usize::from(ci < len % chunks);
+            let bucket: Vec<T> = iter.by_ref().take(take).collect();
+            if ci == 0 {
+                own = Some(bucket);
+                continue;
+            }
+            let guard_latch = latch.clone();
+            let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let _guard = CountGuard(guard_latch);
+                for t in bucket {
+                    f(t);
+                }
+            });
+            // SAFETY: the latch below blocks this call until every queued
+            // chunk has run to completion or unwound (CountGuard fires in
+            // both cases), so nothing borrowed for 'scope survives past
+            // this stack frame even though the queue holds the job as
+            // 'static. Tasks and closure state are Send; the queue moves
+            // them to exactly one worker.
+            let job: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Job,
+                >(job)
+            };
+            self.enqueue(job);
+        }
+        // the caller's own chunk must not unwind past the latch: queued
+        // chunks still borrow this frame until the wait completes
+        let own_result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                for t in own.expect("caller chunk") {
+                    f(t);
+                }
+            }));
+        latch.wait();
+        if let Err(payload) = own_result {
+            std::panic::resume_unwind(payload);
+        }
+        if latch.panicked.load(Ordering::Relaxed) {
+            panic!("pool worker chunk panicked");
+        }
+    }
+}
+
+fn worker_loop(queue: &Queue) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let job = {
+            let mut jobs = queue.jobs.lock().expect("pool queue poisoned");
+            loop {
+                if let Some(job) = jobs.pop_front() {
+                    break job;
+                }
+                jobs = queue.available.wait(jobs).expect("pool queue");
+            }
+        };
+        CHUNKS_EXECUTED.fetch_add(1, Ordering::Relaxed);
+        // keep the worker alive across panicking chunks; the section's
+        // CountGuard has already flagged the latch
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+    }
+}
+
+/// Parallel-for over `tasks`: the section entry point the native layers
+/// use. Tiny sections (under [`PAR_THRESHOLD`] estimated FLOPs), lone
+/// tasks, and sections issued from inside a pool worker run inline on the
+/// caller; everything else fans out through [`Pool::global`].
+pub fn run<'scope, T, F>(tasks: Vec<T>, est_flops_per_task: usize, f: F)
+where
+    T: Send + 'scope,
+    F: Fn(T) + Sync + 'scope,
+{
+    let total = tasks.len().saturating_mul(est_flops_per_task);
+    let nested = IS_POOL_WORKER.with(|w| w.get());
+    if tasks.len() <= 1 || total < PAR_THRESHOLD || nested
+        || hardware_workers() <= 1
+    {
+        INLINE_SECTIONS.fetch_add(1, Ordering::Relaxed);
+        for t in tasks {
+            f(t);
+        }
+        return;
+    }
+    Pool::global().run_scoped(tasks, &f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        let n = 512usize;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0))
+            .collect();
+        let tasks: Vec<usize> = (0..n).collect();
+        run(tasks, PAR_THRESHOLD, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn scoped_borrows_are_written_disjointly() {
+        let mut out = vec![0u64; 1024];
+        let tasks: Vec<(usize, &mut [u64])> =
+            out.chunks_mut(64).enumerate().collect();
+        run(tasks, PAR_THRESHOLD, |(ci, chunk)| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (ci * 64 + i) as u64;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn small_sections_run_inline_without_touching_the_pool() {
+        let before = stats().inline_sections;
+        let acc = std::sync::atomic::AtomicU64::new(0);
+        // single task => inline regardless of estimate
+        run(vec![7u64], usize::MAX, |v| {
+            acc.fetch_add(v, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), 7);
+        assert!(stats().inline_sections > before);
+    }
+
+    #[test]
+    fn pool_spawns_threads_once() {
+        if hardware_workers() <= 1 {
+            // single-core machine: every section runs inline by design
+            // and the pool never starts, so there is nothing to assert
+            eprintln!("single core: pool stays cold, skipping");
+            return;
+        }
+        // force startup, then hammer sections: spawn counter must be flat
+        let tasks: Vec<usize> = (0..64).collect();
+        run(tasks, PAR_THRESHOLD, |_| {});
+        let spawned = stats().threads_spawned;
+        assert!(spawned > 0, "pool never started");
+        for _ in 0..32 {
+            let tasks: Vec<usize> = (0..64).collect();
+            run(tasks, PAR_THRESHOLD, |_| {});
+        }
+        assert_eq!(stats().threads_spawned, spawned,
+                   "steady-state sections spawned new threads");
+        assert_eq!(stats().workers as u64, spawned);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller_and_pool_survives() {
+        let result = std::panic::catch_unwind(|| {
+            let tasks: Vec<usize> = (0..64).collect();
+            run(tasks, PAR_THRESHOLD, |i| {
+                assert!(i != 63, "deliberate task failure");
+            });
+        });
+        assert!(result.is_err(), "panic in a chunk must reach the caller");
+        // pool still functional afterwards
+        let mut out = vec![0usize; 128];
+        let tasks: Vec<(usize, &mut [usize])> =
+            out.chunks_mut(16).enumerate().collect();
+        run(tasks, PAR_THRESHOLD, |(ci, chunk)| {
+            chunk.fill(ci);
+        });
+        assert_eq!(out[127], 7);
+    }
+}

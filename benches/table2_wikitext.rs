@@ -1,23 +1,71 @@
-//! Table 2 (fast proxy): LM training-step throughput for masked and causal
-//! settings across mechanisms, on the WikiText substitute. Full PPL grid:
-//! `examples/train_lm --table2`. The causal rows exercise the zero-padded
-//! FFT causal CAT (our sub-quadratic extension; the paper's causal CAT is
-//! O(N^2)).
+//! Table 2, hermetic: trains the LM mechanism grid (masked + causal ×
+//! attention / cat) end-to-end on the native training subsystem against
+//! the Zipf-Markov WikiText substitute and reports word perplexity. The
+//! causal CAT rows exercise the zero-padded FFT causal convolution (this
+//! repo's sub-quadratic extension — the paper's causal CAT is O(N²)),
+//! including its backward. No artifacts, no PJRT.
+//!
+//!   cargo bench --bench table2_wikitext              # full proxy run
+//!   cargo bench --bench table2_wikitext -- --smoke   # CI smoke
+//!
+//! Always emits `BENCH_table2.json`. With `--features pjrt` + artifacts
+//! it additionally times the AOT train step per config.
 
-use cat::bench::Bench;
-use cat::runtime::Runtime;
-use cat::train::Trainer;
+use cat::cli;
+use cat::harness;
 
 fn main() {
-    let rt = Runtime::from_env().expect("artifacts present?");
-    let mut bench = Bench::new("table2 train step (GPT-2 proxy, N=256)");
+    let args = cli::parse(&["steps", "seed"]).expect("args");
+    let smoke = args.has("smoke");
+    let steps: u64 = args
+        .parse_or("steps", if smoke { 25 } else { 120 })
+        .expect("--steps");
+    let seed: u64 = args.parse_or("seed", 0).expect("--seed");
+    let eval_batches = if smoke { 2 } else { 8 };
+    let names: Vec<&str> = if smoke {
+        vec!["native_lm_masked_attention", "native_lm_masked_cat",
+             "native_lm_causal_attention", "native_lm_causal_cat"]
+    } else {
+        vec!["native_lm_masked_attention", "native_lm_masked_cat",
+             "native_lm_masked_cat_alter", "native_lm_causal_attention",
+             "native_lm_causal_cat"]
+    };
+
+    let rows = harness::run_native_grid(&names, steps, seed, eval_batches)
+        .expect("native table2 grid");
+    print!("{}", harness::render_table(
+        "Table 2 — WikiText-proxy LM grid, native training (word PPL down)",
+        &rows));
+    harness::write_bench_json("BENCH_table2.json", "table2_wikitext",
+                              smoke, steps, &rows)
+        .expect("write BENCH_table2.json");
+
+    pjrt_series();
+}
+
+/// AOT train-step wallclock per config when artifacts exist.
+#[cfg(feature = "pjrt")]
+fn pjrt_series() {
+    use cat::bench::Bench;
+    use cat::runtime::Runtime;
+    use cat::train::Trainer;
+
+    let rt = match Runtime::from_env() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[pjrt series skipped: {e:#}]");
+            return;
+        }
+    };
+    let mut bench = Bench::new("table2 train step (GPT-2 proxy, pjrt)");
     bench.warmup = 1;
     bench.samples = 3;
-
     for task in ["masked", "causal"] {
         for mech in ["attention", "cat"] {
             let name = format!("lm_gpt2_{task}_{mech}");
-            let mut trainer = Trainer::new(&rt, &name, 0).expect("trainer");
+            let Ok(mut trainer) = Trainer::new(&rt, &name, 0) else {
+                continue;
+            };
             bench.case(&name, || {
                 trainer.step(1e-3).expect("step");
             });
@@ -25,3 +73,6 @@ fn main() {
     }
     print!("{}", bench.report());
 }
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_series() {}

@@ -1,23 +1,84 @@
-//! Table 3 / Fig. 2 (fast proxy): forward-pass cost of each circular
-//! parameterization (qkv / qv / q / v) on the ViT-L proxy, plus their
-//! parameter budgets — the cost side of the ablation; the accuracy side is
-//! `examples/ablation`.
+//! Table 3 / Fig. 2, hermetic: the circular-parameterization ablation,
+//! trained natively. The grid covers the mechanism axis (softmax
+//! attention vs the merged-CAT apply via FFT vs the O(N²) gather
+//! reference — identical math, so their accuracies should agree) and the
+//! head-count axis (h ∈ {2, 4, 8}, which moves the `(d+h)·d` budget),
+//! reporting accuracy + whole-model parameter counts. No artifacts.
+//!
+//!   cargo bench --bench table3_ablation              # full proxy run
+//!   cargo bench --bench table3_ablation -- --smoke   # CI smoke
+//!
+//! Always emits `BENCH_table3.json`. With `--features pjrt` + artifacts
+//! it additionally times the AOT forward per paper parameterization.
 
-use cat::bench::Bench;
-use cat::runtime::{Runtime, TrainState};
-use cat::tensor::HostTensor;
+use cat::cli;
+use cat::harness;
+use cat::native::{Mixer, TrainConfig};
 
 fn main() {
-    let rt = Runtime::from_env().expect("artifacts present?");
-    let mut bench = Bench::new("table3 forward (ViT-L proxy)");
+    let args = cli::parse(&["steps", "seed"]).expect("args");
+    let smoke = args.has("smoke");
+    let steps: u64 = args
+        .parse_or("steps", if smoke { 30 } else { 150 })
+        .expect("--steps");
+    let seed: u64 = args.parse_or("seed", 0).expect("--seed");
+    let eval_batches = if smoke { 4 } else { 16 };
+
+    let mut grid: Vec<(String, TrainConfig, Option<&str>)> = vec![
+        ("native_vit_attention".into(),
+         TrainConfig::vit(Mixer::Attention, false),
+         Some("vit_b_avg_attention")),
+        ("native_vit_cat".into(), TrainConfig::vit(Mixer::CatFft, false),
+         Some("vit_b_avg_cat")),
+        ("native_vit_cat_gather".into(),
+         TrainConfig::vit(Mixer::CatGather, false), None),
+    ];
+    if !smoke {
+        for heads in [2usize, 8] {
+            let mut cfg = TrainConfig::vit(Mixer::CatFft, false);
+            cfg.n_heads = heads;
+            grid.push((format!("native_vit_cat_h{heads}"), cfg, None));
+        }
+    }
+
+    let rows = harness::run_native_cfgs(&grid, steps, seed, eval_batches)
+        .expect("native table3 grid");
+    print!("{}", harness::render_table(
+        "Table 3 / Fig. 2 — mechanism + head-count ablation, native \
+         training",
+        &rows));
+    println!("\nparameter budgets (whole model):");
+    for ((label, _, _), row) in grid.iter().zip(&rows) {
+        println!("  {label:<26} {:>10} params  {} {:.4}",
+                 row.params, row.metric_name, row.metric);
+    }
+    harness::write_bench_json("BENCH_table3.json", "table3_ablation",
+                              smoke, steps, &rows)
+        .expect("write BENCH_table3.json");
+
+    pjrt_series();
+}
+
+/// AOT forward wallclock per paper parameterization when artifacts exist.
+#[cfg(feature = "pjrt")]
+fn pjrt_series() {
+    use cat::bench::Bench;
+    use cat::runtime::{Runtime, TrainState};
+    use cat::tensor::HostTensor;
+
+    let rt = match Runtime::from_env() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("[pjrt series skipped: {e:#}]");
+            return;
+        }
+    };
+    let mut bench = Bench::new("table3 forward (ViT-L proxy, pjrt)");
     bench.warmup = 1;
     bench.samples = 5;
-
-    let mechs = ["attention", "cat_qkv", "cat", "cat_q", "cat_v"];
-    let mut budgets = Vec::new();
-    for mech in mechs {
+    for mech in ["attention", "cat_qkv", "cat", "cat_q", "cat_v"] {
         let name = format!("vit_l_avg_{mech}");
-        let meta = rt.config(&name).expect("cfg").clone();
+        let Ok(meta) = rt.config(&name).cloned() else { continue };
         let exe = rt.load(&name, "forward").expect("load");
         let state = TrainState::init(&rt, &name, 0).expect("init");
         let images = HostTensor::zeros_f32(
@@ -27,14 +88,9 @@ fn main() {
             args.push(&images);
             exe.execute_literals(&args).expect("exec");
         });
-        budgets.push((name, meta.param_count));
     }
     print!("{}", bench.report());
-
-    println!("\nTable 3 parameter budgets (whole model):");
-    for (name, params) in &budgets {
-        let t = bench.median_of(name).expect("case");
-        println!("  {name:<24} {params:>10} params {:>9.2} ms/fwd",
-                 t * 1e3);
-    }
 }
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_series() {}

@@ -1,28 +1,64 @@
 //! End-to-end driver (Table 2): masked + causal language modeling on the
-//! synthetic WikiText substitute, reporting word perplexity per mechanism.
+//! synthetic WikiText substitute, reporting word perplexity per
+//! mechanism. Hermetic by default — the native training subsystem trains
+//! through the (zero-padded, for causal) FFT with AdamW and needs no
+//! artifacts; `--backend pjrt` (or the PJRT-era flags `--fused` /
+//! `--table2` / `--fast`) drives the AOT grid / fused-K demo instead
+//! (feature `pjrt` + `make artifacts`).
 //!
-//!   cargo run --release --example train_lm -- --table2 --steps 200
-//!   cargo run --release --example train_lm -- --config lm_gpt2_masked_cat
-//!   cargo run --release --example train_lm -- --fused   (train_k8 path)
+//!   cargo run --release --example train_lm -- --steps 120
+//!   cargo run --release --example train_lm -- --config native_lm_causal_cat
+//!   cargo run --release --example train_lm -- --fused   (train_k8, pjrt)
+//!
+//! Both paths run through the shared `TrainBackend` loop
+//! (`cat::train::run_training`), so their reports are comparable.
 
+use cat::cli;
 use cat::harness;
-use cat::runtime::Runtime;
-use cat::train::{Schedule, TrainOptions, Trainer};
 
 fn main() -> cat::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let get = |flag: &str| -> Option<String> {
-        args.iter()
-            .position(|a| a == flag)
-            .and_then(|i| args.get(i + 1).cloned())
+    let args = cli::parse(&["steps", "seed", "config", "json", "backend"])?;
+    let steps: u64 = args.parse_or("steps", 120)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+
+    // PJRT-era invocations keep their old meaning instead of silently
+    // running the native grid
+    if args.get("backend") == Some("pjrt") || args.has("fused")
+        || args.has("table2") || args.has("fast") {
+        return pjrt_grid(&args, steps, seed);
+    }
+
+    let names: Vec<String> = if let Some(cfg) = args.get("config") {
+        vec![cfg.to_string()]
+    } else {
+        vec!["native_lm_masked_attention".into(),
+             "native_lm_masked_cat".into(),
+             "native_lm_masked_cat_alter".into(),
+             "native_lm_causal_attention".into(),
+             "native_lm_causal_cat".into()]
     };
-    let has = |flag: &str| args.iter().any(|a| a == flag);
-    let steps: u64 = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(200);
-    let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let rows = harness::run_native_grid(&name_refs, steps, seed, 8)?;
+    print!("{}", harness::render_table(
+        "Table 2 — WikiText-proxy LM grid, native training (word PPL down)",
+        &rows));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path,
+                       harness::rows_to_json(&rows).to_string_pretty())?;
+        eprintln!("rows -> {path}");
+    }
+    Ok(())
+}
+
+/// The original PJRT grid + the fused-K-step demo.
+#[cfg(feature = "pjrt")]
+fn pjrt_grid(args: &cli::Args, steps: u64, seed: u64) -> cat::Result<()> {
+    use cat::runtime::Runtime;
+    use cat::train::{Schedule, TrainOptions, Trainer};
 
     let rt = Runtime::from_env()?;
 
-    if has("--fused") {
+    if args.has("fused") {
         // fused-K-step demo: identical math, fewer host<->device round
         // trips (EXPERIMENTS.md §Perf quantifies the gain)
         let name = "lm_gpt2_masked_cat";
@@ -47,18 +83,26 @@ fn main() -> cat::Result<()> {
         return Ok(());
     }
 
-    let names: Vec<String> = if let Some(cfg) = get("--config") {
-        vec![cfg]
+    let names: Vec<String> = if let Some(cfg) = args.get("config") {
+        vec![cfg.to_string()]
     } else {
-        harness::table2_names(has("--fast"))
+        harness::table2_names(args.has("fast"))
     };
     let rows = harness::run_grid(&rt, &names, steps, seed, 8)?;
     print!("{}", harness::render_table(
         "Table 2 — WikiText-proxy LM grid (word PPL down)", &rows));
-    if let Some(path) = get("--json") {
-        std::fs::write(&path,
+    if let Some(path) = args.get("json") {
+        std::fs::write(path,
                        harness::rows_to_json(&rows).to_string_pretty())?;
         eprintln!("rows -> {path}");
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_grid(_args: &cli::Args, _steps: u64, _seed: u64) -> cat::Result<()> {
+    anyhow::bail!("this invocation names the PJRT path (--backend pjrt / \
+                   --fused / --table2 / --fast), which needs a build with \
+                   `--features pjrt` plus `make artifacts`; the default \
+                   native path runs hermetically")
 }

@@ -1,81 +1,114 @@
-//! End-to-end driver (Table 1 + Sec. 5.5): trains the ViT grid on the
-//! synthetic ImageNet substitute and prints the paper-style table.
+//! End-to-end driver (Table 1 + Sec. 5.5): trains the ViT grid and
+//! prints the paper-style table. Hermetic by default — the native
+//! training subsystem (gradients through the FFT, AdamW) needs no
+//! artifacts; `--backend pjrt` (or any of the PJRT-era flags
+//! `--table1` / `--fast` / `--mechanism`) drives the AOT grid instead
+//! (feature `pjrt` + `make artifacts`).
 //!
-//!   cargo run --release --example train_vit -- --table1 --steps 300
+//!   cargo run --release --example train_vit -- --steps 150
+//!   cargo run --release --example train_vit -- --config native_vit_cat
+//!   cargo run --release --example train_vit -- --backend pjrt --table1
 //!   cargo run --release --example train_vit -- --mechanism linear
-//!       (the Sec. 5.5 linear-attention instability probe: trains with an
-//!        aggressive LR and reports where/whether the loss diverges)
-//!   cargo run --release --example train_vit -- --config vit_l_avg_cat
+//!       (Sec. 5.5 linear-attention instability probe; PJRT build)
 //!
-//! This is the EXPERIMENTS.md §Table-1 end-to-end run: all three layers
-//! compose — rust data pipeline -> AOT train step (Pallas kernels inside)
-//! -> rust metrics.
+//! Both paths run through the shared `TrainBackend` loop
+//! (`cat::train::run_training`), so their reports are comparable.
 
+use cat::cli;
 use cat::harness;
-use cat::runtime::Runtime;
-use cat::train::{Schedule, TrainOptions, Trainer};
 
 fn main() -> cat::Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let get = |flag: &str| -> Option<String> {
-        args.iter()
-            .position(|a| a == flag)
-            .and_then(|i| args.get(i + 1).cloned())
-    };
-    let has = |flag: &str| args.iter().any(|a| a == flag);
-    let steps: u64 = get("--steps").and_then(|s| s.parse().ok()).unwrap_or(300);
-    let seed: u64 = get("--seed").and_then(|s| s.parse().ok()).unwrap_or(0);
+    let args = cli::parse(&["steps", "seed", "config", "json", "backend",
+                            "mechanism"])?;
+    let steps: u64 = args.parse_or("steps", 150)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
 
-    let rt = Runtime::from_env()?;
-
-    if has("--mechanism") && get("--mechanism").as_deref() == Some("linear") {
-        return linear_instability(&rt, steps, seed);
+    // PJRT-era invocations keep their old meaning instead of silently
+    // running the native grid
+    if args.get("backend") == Some("pjrt") || args.has("mechanism")
+        || args.has("table1") || args.has("fast") {
+        return pjrt_grid(&args, steps, seed);
     }
 
-    let names: Vec<String> = if let Some(cfg) = get("--config") {
-        vec![cfg]
+    let names: Vec<String> = if let Some(cfg) = args.get("config") {
+        vec![cfg.to_string()]
     } else {
-        harness::table1_names(has("--fast"))
+        vec!["native_vit_attention".into(), "native_vit_cat".into(),
+             "native_vit_cat_alter".into()]
     };
-    let rows = harness::run_grid(&rt, &names, steps, seed, 16)?;
+    let name_refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+    let rows = harness::run_native_grid(&name_refs, steps, seed, 16)?;
     print!("{}", harness::render_table(
-        "Table 1 — ImageNet-proxy ViT grid (accuracy up)", &rows));
-    if let Some(path) = get("--json") {
-        std::fs::write(&path,
+        "Table 1 — ImageNet-proxy ViT grid, native training (accuracy up)",
+        &rows));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path,
                        harness::rows_to_json(&rows).to_string_pretty())?;
         eprintln!("rows -> {path}");
     }
     Ok(())
 }
 
-/// Sec. 5.5: linear attention under the shared recipe, pushed with a hot
-/// LR the softmax models tolerate. Reports divergence step (NaN) or the
-/// final gap vs CAT — reproducing "repeated training instabilities".
-fn linear_instability(rt: &Runtime, steps: u64, seed: u64) -> cat::Result<()> {
-    println!("Sec 5.5 — linear attention instability probe (ViT-L proxy)");
-    for (name, lr) in [("vit_l_avg_linear", 3e-3), ("vit_l_avg_cat", 3e-3)] {
-        let mut trainer = Trainer::new(rt, name, seed)?;
-        let opts = TrainOptions {
-            steps,
-            schedule: Schedule::constant(lr),
-            seed,
-            log_every: (steps / 5).max(1),
-            stop_on_divergence: true,
-            eval_batches: 8,
-            ..Default::default()
-        };
-        let report = trainer.run(&opts)?;
-        match report.diverged_at {
-            Some(s) => println!(
-                "{name:<18} lr={lr:.0e}  DIVERGED at step {s} (NaN loss) — \
-                 matches the paper's reported instability"),
-            None => println!(
-                "{name:<18} lr={lr:.0e}  stable; final loss {:.4}, \
-                 {} = {:.4}",
-                report.curve.last().unwrap_or(f32::NAN),
-                report.final_metric().map(|m| m.0).unwrap_or("-"),
-                report.final_metric().map(|m| m.1).unwrap_or(f64::NAN)),
+/// The original PJRT grid (+ Sec. 5.5 linear-instability probe).
+#[cfg(feature = "pjrt")]
+fn pjrt_grid(args: &cli::Args, steps: u64, seed: u64) -> cat::Result<()> {
+    use cat::runtime::Runtime;
+    use cat::train::{Schedule, TrainOptions, Trainer};
+
+    let rt = Runtime::from_env()?;
+
+    if args.get("mechanism") == Some("linear") {
+        // Sec. 5.5: linear attention under a hot LR the softmax models
+        // tolerate; reports divergence step or the final gap vs CAT.
+        println!("Sec 5.5 — linear attention instability probe");
+        for (name, lr) in [("vit_l_avg_linear", 3e-3f32),
+                           ("vit_l_avg_cat", 3e-3)] {
+            let mut trainer = Trainer::new(&rt, name, seed)?;
+            let opts = TrainOptions {
+                steps,
+                schedule: Schedule::constant(lr),
+                seed,
+                log_every: (steps / 5).max(1),
+                stop_on_divergence: true,
+                eval_batches: 8,
+                ..Default::default()
+            };
+            let report = trainer.run(&opts)?;
+            match report.diverged_at {
+                Some(s) => println!(
+                    "{name:<18} lr={lr:.0e}  DIVERGED at step {s} (NaN \
+                     loss) — matches the paper's reported instability"),
+                None => println!(
+                    "{name:<18} lr={lr:.0e}  stable; final loss {:.4}, \
+                     {} = {:.4}",
+                    report.curve.last().unwrap_or(f32::NAN),
+                    report.final_metric().map(|m| m.0).unwrap_or("-"),
+                    report.final_metric().map(|m| m.1).unwrap_or(f64::NAN)),
+            }
         }
+        return Ok(());
+    }
+
+    let names: Vec<String> = if let Some(cfg) = args.get("config") {
+        vec![cfg.to_string()]
+    } else {
+        harness::table1_names(args.has("fast"))
+    };
+    let rows = harness::run_grid(&rt, &names, steps, seed, 16)?;
+    print!("{}", harness::render_table(
+        "Table 1 — ImageNet-proxy ViT grid (accuracy up)", &rows));
+    if let Some(path) = args.get("json") {
+        std::fs::write(path,
+                       harness::rows_to_json(&rows).to_string_pretty())?;
+        eprintln!("rows -> {path}");
     }
     Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_grid(_args: &cli::Args, _steps: u64, _seed: u64) -> cat::Result<()> {
+    anyhow::bail!("this invocation names the PJRT path (--backend pjrt / \
+                   --table1 / --fast / --mechanism), which needs a build \
+                   with `--features pjrt` plus `make artifacts`; the \
+                   default native path runs hermetically")
 }

@@ -8,11 +8,13 @@
 
 use std::collections::BTreeMap;
 
+use crate::native::{TaskKind, TrainConfig};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
+use crate::train::{native_spec, run_training, NativeTrainer, Schedule,
+                   TrainOptions};
 #[cfg(feature = "pjrt")]
-use crate::train::{Schedule, TrainOptions, Trainer};
-#[cfg(feature = "pjrt")]
+use crate::train::Trainer;
 use crate::Result;
 
 /// One result row of a reproduction table.
@@ -29,6 +31,8 @@ pub struct Row {
     pub paper_metric: Option<f64>,
     pub steps_per_sec: f64,
     pub diverged: bool,
+    /// Whole-model learnable scalars (0 when unknown).
+    pub params: usize,
 }
 
 /// Paper-reported numbers for shape comparison (Tables 1-3).
@@ -56,7 +60,7 @@ pub fn paper_reference() -> BTreeMap<&'static str, f64> {
 fn budget_formula(mech: &str) -> &'static str {
     match mech {
         "attention" | "linear" | "cat_qkv" => "3d^2",
-        "cat" => "(d+h)d",
+        "cat" | "cat_gather" => "(d+h)d",
         "cat_alter" => "(2d+h/2)d",
         "cat_q" => "(n+h)d",
         "cat_v" => "(n+d)d",
@@ -64,7 +68,6 @@ fn budget_formula(mech: &str) -> &'static str {
     }
 }
 
-#[cfg(feature = "pjrt")]
 fn complexity_cols(mech: &str, causal: bool) -> (&'static str, &'static str) {
     match (mech, causal) {
         ("cat", false) | ("cat_qkv", false) | ("cat_q", false)
@@ -113,7 +116,114 @@ pub fn run_one(rt: &Runtime, name: &str, steps: u64, seed: u64,
         paper_metric: paper_reference().get(name).copied(),
         steps_per_sec: report.steps_per_sec(),
         diverged: report.diverged_at.is_some(),
+        params: meta.param_count,
     })
+}
+
+/// Train one *native* config (hermetic — no artifacts) and produce a
+/// table row. `paper_key` selects the paper-reference column.
+pub fn run_native_cfg(label: &str, cfg: TrainConfig,
+                      paper_key: Option<&str>, steps: u64, seed: u64,
+                      eval_batches: u64) -> Result<Row> {
+    let mut trainer = NativeTrainer::from_config(label, cfg, seed)?;
+    let params = trainer.param_count();
+    let opts = TrainOptions {
+        steps,
+        schedule: Schedule::new(1e-3, (steps / 10).max(1), steps),
+        seed,
+        eval_every: 0,
+        eval_batches,
+        log_every: (steps / 4).max(1),
+        stop_on_divergence: true,
+    };
+    let report = run_training(&mut trainer, &opts)?;
+    let (metric_name, metric) = report
+        .final_metric()
+        .unwrap_or(("diverged", f64::NAN));
+    let mech = cfg.mechanism();
+    let (cx, mem) = complexity_cols(&mech, cfg.causal());
+    let (model, setting) = match cfg.task {
+        TaskKind::Vit { .. } => ("native_vit".to_string(),
+                                 "avg".to_string()),
+        TaskKind::Lm { causal, .. } => (
+            "native_lm".to_string(),
+            if causal { "causal".to_string() } else { "masked".to_string() },
+        ),
+    };
+    Ok(Row {
+        model,
+        setting,
+        mechanism: mech.clone(),
+        learnable: budget_formula(&mech).to_string(),
+        complexity: cx.to_string(),
+        memory: mem.to_string(),
+        metric_name,
+        metric,
+        paper_metric: paper_key
+            .and_then(|k| paper_reference().get(k).copied()),
+        steps_per_sec: report.steps_per_sec(),
+        diverged: report.diverged_at.is_some(),
+        params,
+    })
+}
+
+/// [`run_native_cfg`] via the [`native_spec`] registry.
+pub fn run_native_one(name: &str, steps: u64, seed: u64,
+                      eval_batches: u64) -> Result<Row> {
+    let spec = native_spec(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown native config '{name}'")
+    })?;
+    run_native_cfg(name, spec.cfg, spec.paper_key, steps, seed,
+                   eval_batches)
+}
+
+/// Run a grid of explicit `(label, config, paper_key)` entries (the
+/// ablation benches build custom shapes) and collect rows.
+pub fn run_native_cfgs(grid: &[(String, TrainConfig, Option<&str>)],
+                       steps: u64, seed: u64, eval_batches: u64)
+                       -> Result<Vec<Row>> {
+    let mut rows = Vec::with_capacity(grid.len());
+    for (label, cfg, paper_key) in grid {
+        eprintln!("=== {label} ({steps} steps, native) ===");
+        rows.push(run_native_cfg(label, *cfg, *paper_key, steps, seed,
+                                 eval_batches)?);
+    }
+    Ok(rows)
+}
+
+/// Run a list of registry-named native configs and collect rows
+/// (hermetic grid).
+pub fn run_native_grid(names: &[&str], steps: u64, seed: u64,
+                       eval_batches: u64) -> Result<Vec<Row>> {
+    let grid: Vec<(String, TrainConfig, Option<&str>)> = names
+        .iter()
+        .map(|name| {
+            native_spec(name)
+                .map(|s| (name.to_string(), s.cfg, s.paper_key))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("unknown native config '{name}'")
+                })
+        })
+        .collect::<Result<_>>()?;
+    run_native_cfgs(&grid, steps, seed, eval_batches)
+}
+
+/// Write the standard table-bench JSON artifact (`BENCH_table*.json`):
+/// bench id + run config + [`rows_to_json`] rows. Shared by the three
+/// table benches so the schema lives in one place.
+pub fn write_bench_json(path: &str, bench: &str, smoke: bool, steps: u64,
+                        rows: &[Row]) -> Result<()> {
+    use crate::json::Json;
+    let out = Json::Obj(vec![
+        ("bench".into(), Json::from(bench)),
+        ("backend".into(), Json::from("native")),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("steps".into(), Json::Num(steps as f64)),
+        ("rows".into(), rows_to_json(rows)),
+    ]);
+    std::fs::write(path, out.to_string_pretty())?;
+    eprintln!("results -> {path}");
+    Ok(())
 }
 
 /// Table 1: ImageNet-proxy ViT grid.
@@ -217,6 +327,7 @@ pub fn rows_to_json(rows: &[Row]) -> crate::json::Json {
                         .map(Json::Num).unwrap_or(Json::Null)),
                     ("steps_per_sec".into(), Json::Num(r.steps_per_sec)),
                     ("diverged".into(), Json::Bool(r.diverged)),
+                    ("params".into(), Json::Num(r.params as f64)),
                 ])
             })
             .collect(),
@@ -255,7 +366,7 @@ mod tests {
             mechanism: "linear".into(), learnable: "3d^2".into(),
             complexity: "O(N)".into(), memory: "O(N)".into(),
             metric_name: "acc", metric: f64::NAN, paper_metric: None,
-            steps_per_sec: 1.0, diverged: true,
+            steps_per_sec: 1.0, diverged: true, params: 0,
         };
         let s = render_table("t", &[row]);
         assert!(s.contains("NaN"));

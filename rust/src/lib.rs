@@ -23,7 +23,10 @@
 //! default build has no artifact dependency at all: the native backend
 //! ([`native`], selected through [`runtime::Backend`]) computes CAT's
 //! forward pass — planned real-FFT circular convolution included — in
-//! pure Rust, so serving and the scaling benches run in a fresh checkout.
+//! pure Rust, and since PR 3 also its *backward* pass
+//! ([`native::autograd`] + [`native::optim`], DESIGN.md §8), so
+//! serving, the scaling benches, and end-to-end training (`cat train`,
+//! the table benches) all run in a fresh checkout.
 
 pub mod bench;
 pub mod cli;

@@ -13,11 +13,14 @@
 //! cat complexity                # analytic Fig.-1 series
 //! ```
 //!
-//! `serve` and `complexity` run in the default (hermetic) build; `serve`
-//! picks its backend per [`cat::runtime::Backend::detect_env`] — the
-//! native Rust CAT executor when no artifacts are present — and accepts
-//! `--backend native|pjrt` to force one. Everything else drives the PJRT
-//! runtime and needs `--features pjrt` plus `make artifacts`.
+//! `serve`, `train`, `list` and `complexity` run in the default
+//! (hermetic) build: `serve` picks its backend per
+//! [`cat::runtime::Backend::detect_env`] — the native Rust CAT executor
+//! when no artifacts are present — and `train` defaults to the native
+//! training subsystem (`native::autograd` + AdamW, DESIGN.md §8), which
+//! trains end-to-end through the FFT with zero artifacts. Both accept
+//! `--backend native|pjrt` to force a path. Everything else drives the
+//! PJRT runtime and needs `--features pjrt` plus `make artifacts`.
 
 use cat::cli;
 use cat::complexity::{crossover_n, layer_cost, Mechanism};
@@ -25,19 +28,23 @@ use cat::coordinator::{ServeOptions, Server};
 use cat::data::ShapeDataset;
 use cat::runtime::Backend;
 use cat::tensor::HostTensor;
+use cat::train::{native_specs, run_training, NativeTrainer, Schedule,
+                 TrainOptions};
 
 #[cfg(feature = "pjrt")]
 use cat::harness;
 #[cfg(feature = "pjrt")]
 use cat::runtime::{Runtime, TrainState};
 #[cfg(feature = "pjrt")]
-use cat::train::{Schedule, TrainOptions, Trainer};
+use cat::train::Trainer;
 
 const USAGE: &str = "usage: cat <command> [flags]
 commands:
-  list         list every artifact config in the manifest       [pjrt]
-  train        --config NAME [--steps N] [--lr F] [--seed N]    [pjrt]
-               [--checkpoint PATH] [--fused] [--augment]
+  list         list native training configs (+ artifact manifest [pjrt])
+  train        [--config NAME] [--backend native|pjrt] [--steps N]
+               [--lr F] [--seed N] [--assert-improves]
+               (native: hermetic, default config native_vit_cat;
+                pjrt extras: [--checkpoint PATH] [--fused] [--augment])
   eval         --config NAME [--checkpoint PATH] [--batches N]  [pjrt]
   serve        [--config NAME] [--requests N] [--backend pjrt|native]
   table1       [--fast] [--steps N] [--json PATH]    (Table 1)  [pjrt]
@@ -47,7 +54,8 @@ commands:
   validate     [--deep]   check manifest/artifact consistency   [pjrt]
 global: --artifacts DIR (or env CAT_ARTIFACTS)
 [pjrt] commands need a build with `--features pjrt` + `make artifacts`;
-serve/complexity run hermetically on the native backend.";
+serve/train/list/complexity run hermetically on the native backend
+(hermetic table runs: `cargo bench --bench table1_imagenet` etc.).";
 
 const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "batches", "requests", "json", "artifacts",
@@ -72,8 +80,8 @@ fn run() -> cat::Result<()> {
     match cmd {
         "serve" => cmd_serve(&args),
         "complexity" => cmd_complexity(),
-        #[cfg(feature = "pjrt")]
         "list" => cmd_list(),
+        "train" => cmd_train(&args),
         #[cfg(feature = "pjrt")]
         "validate" => {
             let report = cat::runtime::validate(&cat::artifacts_dir(),
@@ -82,8 +90,6 @@ fn run() -> cat::Result<()> {
             anyhow::ensure!(report.ok(), "artifact validation failed");
             Ok(())
         }
-        #[cfg(feature = "pjrt")]
-        "train" => cmd_train(&args),
         #[cfg(feature = "pjrt")]
         "eval" => cmd_eval(&args),
         #[cfg(feature = "pjrt")]
@@ -97,27 +103,114 @@ fn run() -> cat::Result<()> {
         #[cfg(not(feature = "pjrt"))]
         other => anyhow::bail!(
             "command '{other}' drives the PJRT runtime; rebuild with \
-             `cargo build --features pjrt`, or use `serve --backend \
-             native` / `complexity` which run hermetically"),
+             `cargo build --features pjrt`, or use the hermetic commands \
+             (serve/train/list/complexity)"),
     }
 }
 
-#[cfg(feature = "pjrt")]
 fn cmd_list() -> cat::Result<()> {
-    let rt = Runtime::from_env()?;
-    println!("platform: {}", rt.platform());
-    for name in rt.manifest.names() {
-        let c = rt.manifest.config(name)?;
-        println!("{name:<28} task={:<10} mech={:<10} d={} h={} L={} \
-                  params={}",
-                 c.task, c.mechanism, c.d_model, c.n_heads, c.n_layers,
-                 c.param_count);
+    println!("native training configs (hermetic, `cat train`):");
+    for spec in native_specs() {
+        let cfg = spec.cfg;
+        println!("{:<28} mech={:<12} d={} h={} L={} N={} batch={}",
+                 spec.name, cfg.mechanism(), cfg.d_model, cfg.n_heads,
+                 cfg.n_layers, cfg.n_tokens(), cfg.batch_size);
+    }
+    #[cfg(feature = "pjrt")]
+    if let Ok(rt) = Runtime::from_env() {
+        println!("\nartifact manifest ({}):", rt.platform());
+        for name in rt.manifest.names() {
+            let c = rt.manifest.config(name)?;
+            println!("{name:<28} task={:<10} mech={:<10} d={} h={} L={} \
+                      params={}",
+                     c.task, c.mechanism, c.d_model, c.n_heads, c.n_layers,
+                     c.param_count);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &cli::Args) -> cat::Result<()> {
+    let backend = match args.get("backend") {
+        Some(s) => Backend::parse(s).ok_or_else(|| {
+            anyhow::anyhow!("unknown backend '{s}' (expected pjrt|native)")
+        })?,
+        // train defaults to the hermetic native subsystem unless a PJRT
+        // build has artifacts on disk AND names a manifest config
+        None => {
+            if cfg!(feature = "pjrt") && args.get("config").is_some()
+                && cat::train::native_spec(
+                    args.get("config").unwrap_or_default()).is_none() {
+                Backend::detect_env()
+            } else {
+                Backend::Native
+            }
+        }
+    };
+    match backend {
+        Backend::Native => cmd_train_native(args),
+        #[cfg(feature = "pjrt")]
+        Backend::Pjrt => cmd_train_pjrt(args),
+        #[cfg(not(feature = "pjrt"))]
+        Backend::Pjrt => anyhow::bail!(
+            "built without the `pjrt` feature — use --backend native"),
+    }
+}
+
+/// Hermetic training: native gradient engine + AdamW, zero artifacts.
+fn cmd_train_native(args: &cli::Args) -> cat::Result<()> {
+    for flag in ["checkpoint", "fused", "augment"] {
+        anyhow::ensure!(!args.has(flag),
+                        "--{flag} is a PJRT-path option; add --backend \
+                         pjrt (build with `--features pjrt` + `make \
+                         artifacts`) or drop the flag");
+    }
+    let config = args.get_or("config", "native_vit_cat");
+    let steps: u64 = args.parse_or("steps", 200)?;
+    let lr: f32 = args.parse_or("lr", 1e-3)?;
+    let seed: u64 = args.parse_or("seed", 0)?;
+    let mut trainer = NativeTrainer::new(config, seed)?;
+    eprintln!("[train] backend=native config={config} params={}",
+              trainer.param_count());
+    let opts = TrainOptions {
+        steps,
+        schedule: Schedule::new(lr, (steps / 10).max(1), steps),
+        seed,
+        eval_every: (steps / 4).max(1),
+        eval_batches: args.parse_or("batches", 8)?,
+        ..Default::default()
+    };
+    let report = run_training(&mut trainer, &opts)?;
+    println!("steps: {} wall: {:.1}s ({:.2} steps/s)",
+             report.steps_done, report.wall_seconds,
+             report.steps_per_sec());
+    if let Some((k, v)) = report.final_metric() {
+        println!("final {k}: {v:.4}");
+    }
+    anyhow::ensure!(report.diverged_at.is_none(),
+                    "training diverged at step {:?}", report.diverged_at);
+    if args.has("assert-improves") {
+        // CI smoke gate: last-quartile mean loss strictly below the first
+        let losses = &report.curve.losses;
+        anyhow::ensure!(losses.len() >= 4,
+                        "--assert-improves needs at least 4 recorded steps, \
+                         got {}", losses.len());
+        let q = (losses.len() / 4).max(1);
+        let head: f32 =
+            losses[..q].iter().sum::<f32>() / q as f32;
+        let tail: f32 =
+            losses[losses.len() - q..].iter().sum::<f32>() / q as f32;
+        anyhow::ensure!(tail < head,
+                        "loss did not decrease over {} steps: first-quartile \
+                         mean {head:.4} vs last {tail:.4}",
+                        report.steps_done);
+        println!("loss improved: {head:.4} -> {tail:.4} (quartile means)");
     }
     Ok(())
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_train(args: &cli::Args) -> cat::Result<()> {
+fn cmd_train_pjrt(args: &cli::Args) -> cat::Result<()> {
     let config = args.require("config")?;
     let steps: u64 = args.parse_or("steps", 200)?;
     let lr: f32 = args.parse_or("lr", 1e-3)?;

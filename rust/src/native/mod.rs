@@ -13,18 +13,31 @@
 //!   both behind global per-length plan caches;
 //! * [`cat`] — the CAT mixing layer (batched-FFT and O(N²) gather
 //!   reference), a native softmax-attention baseline, and the hermetic
-//!   serving model ([`NativeCatModel`]).
+//!   serving model ([`NativeCatModel`]);
+//! * [`autograd`] — reverse-mode gradients for the full CAT block
+//!   (frequency-domain circular-correlation backward, softmax-over-N,
+//!   LayerNorm/MLP/attention backwards) and the trainable
+//!   [`TrainModel`] behind `cat train --backend native` (DESIGN.md §8);
+//! * [`optim`] — [`AdamW`] with global-norm clipping, flat moment
+//!   vectors in the model's tensor visitor order.
 //!
 //! This is the `Backend::Native` half of the backend story (DESIGN.md §6):
-//! the coordinator serves and the benches measure real CAT wallclock even
-//! in a fresh checkout with no `artifacts/` directory and no XLA runtime.
+//! the coordinator serves, the benches measure, and the trainer *trains*
+//! real CAT models even in a fresh checkout with no `artifacts/`
+//! directory and no XLA runtime.
 
 pub mod arena;
+pub mod autograd;
 pub mod cat;
 pub mod fft;
+pub mod optim;
 pub mod pool;
 
+pub use autograd::{causal_corr_backward, causal_corr_forward,
+                   corr_backward, corr_forward, EvalOut, Mixer, TaskKind,
+                   TrainBatch, TrainConfig, TrainModel};
 pub use cat::{matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
               NativeCatModel, NativeVitConfig};
 pub use fft::{plan_cache_stats, rfft_plan, split_rfft_plan, Complex,
               FftPlan, RfftPlan, SplitRfftPlan};
+pub use optim::AdamW;

@@ -51,6 +51,20 @@ thread_local! {
     static IS_POOL_WORKER: std::cell::Cell<bool> = const {
         std::cell::Cell::new(false)
     };
+    /// Per-thread override: force every section issued from this thread
+    /// to run inline (see [`set_force_inline`]).
+    static FORCE_INLINE: std::cell::Cell<bool> = const {
+        std::cell::Cell::new(false)
+    };
+}
+
+/// Force (or stop forcing) every parallel section issued from the
+/// *calling thread* to run inline, pool untouched. Thread-local on
+/// purpose: the determinism tests in `tests/native_backend.rs` compare a
+/// pool-width-1 run against a fanned-out run from different test threads
+/// without perturbing unrelated tests in the same process.
+pub fn set_force_inline(on: bool) {
+    FORCE_INLINE.with(|f| f.set(on));
 }
 
 /// Cumulative pool counters ([`stats`]). `threads_spawned` moves only
@@ -275,7 +289,8 @@ where
 {
     let total = tasks.len().saturating_mul(est_flops_per_task);
     let nested = IS_POOL_WORKER.with(|w| w.get());
-    if tasks.len() <= 1 || total < PAR_THRESHOLD || nested
+    let forced = FORCE_INLINE.with(|f| f.get());
+    if tasks.len() <= 1 || total < PAR_THRESHOLD || nested || forced
         || hardware_workers() <= 1
     {
         INLINE_SECTIONS.fetch_add(1, Ordering::Relaxed);

@@ -1,34 +1,43 @@
-//! Training orchestrator: drives the AOT train-step executables from rust.
+//! Training orchestration, backend-agnostic.
 //!
-//! The loop body is: assemble a batch (rust substrates) → execute one
-//! `train_step` (params/m/v/step literals + batch + lr) → absorb the new
-//! state → log the loss. Evaluation periodically runs the `forward`
-//! artifact over held-out batches and computes accuracy/PPL host-side.
+//! [`TrainBackend`] is the seam: one `train_step(lr) -> loss` plus one
+//! `evaluate(batches) -> metric`, and [`run_training`] drives the shared
+//! loop (warmup+cosine LR, divergence detection, periodic eval, loss
+//! curve) against whichever implementation it is handed:
 //!
-//! `run_fused` drives the `train_k8` artifact instead, feeding K stacked
-//! batches per call to amortize host<->device round-trips — the L3 perf
-//! lever quantified in EXPERIMENTS.md §Perf.
+//! * [`NativeTrainer`] — the default. Pure-Rust end-to-end training on
+//!   the in-crate gradient engine (`native::autograd`, DESIGN.md §8) +
+//!   [`AdamW`]: hermetic, zero artifacts, deterministic in
+//!   `(config, seed)` regardless of pool width. Configs come from the
+//!   [`native_specs`] registry (`cat train --backend native`, the table
+//!   benches, the examples).
+//! * [`Trainer`] — the PJRT path (feature `pjrt`): drives the AOT
+//!   `train_step` executables exactly as before; `run`/`run_fused` are
+//!   unchanged entry points.
 
 pub mod schedule;
 
 pub use schedule::Schedule;
 
+use std::time::Instant;
+
+use crate::data::{ShapeDataset, TextCorpus};
+use crate::metrics::LossCurve;
+use crate::native::{AdamW, Mixer, TaskKind, TrainBatch, TrainConfig,
+                    TrainModel};
+use crate::Result;
+
 #[cfg(feature = "pjrt")]
 use std::sync::Arc;
-#[cfg(feature = "pjrt")]
-use std::time::Instant;
 
 #[cfg(feature = "pjrt")]
 use crate::data::BatchSource;
-use crate::metrics::LossCurve;
 #[cfg(feature = "pjrt")]
 use crate::metrics::EvalAccumulator;
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Executable, Runtime, TrainState};
 #[cfg(feature = "pjrt")]
 use crate::tensor::HostTensor;
-#[cfg(feature = "pjrt")]
-use crate::Result;
 
 /// Configuration for one training run.
 #[derive(Debug, Clone)]
@@ -82,8 +91,295 @@ impl TrainReport {
     }
 }
 
-/// Orchestrates training + evaluation of one model config (PJRT-only:
-/// training runs through the AOT `train_step` artifacts).
+// ---------------------------------------------------------------------------
+// the backend seam + the shared loop
+// ---------------------------------------------------------------------------
+
+/// What a training engine must provide for [`run_training`] to drive it.
+pub trait TrainBackend {
+    /// Config label for logs/reports.
+    fn label(&self) -> &str;
+    /// One optimizer step at learning rate `lr`; returns the loss.
+    fn train_step(&mut self, lr: f32) -> Result<f32>;
+    /// Evaluate on `n_batches` held-out batches →
+    /// `("acc", fraction)` or `("ppl", perplexity)`.
+    fn evaluate(&mut self, n_batches: u64) -> Result<(&'static str, f64)>;
+}
+
+/// The shared training loop: LR schedule, loss curve, divergence stop,
+/// periodic + final eval. Both backends run through here, so reports are
+/// comparable across them.
+pub fn run_training(backend: &mut dyn TrainBackend, opts: &TrainOptions)
+                    -> Result<TrainReport> {
+    let label = backend.label().to_string();
+    let mut curve = LossCurve::default();
+    let mut evals = Vec::new();
+    let t0 = Instant::now();
+    let mut diverged_at = None;
+    let mut done = 0;
+    for step in 0..opts.steps {
+        let lr = opts.schedule.lr(step);
+        let loss = backend.train_step(lr)?;
+        curve.push(step, loss);
+        done = step + 1;
+        if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
+            eprintln!("[{label}] step {:>5} loss {:.4} (ema {:.4}) lr {:.2e}",
+                      step + 1, loss, curve.ema().unwrap_or(f64::NAN), lr);
+        }
+        if !loss.is_finite() {
+            diverged_at = Some(step);
+            if opts.stop_on_divergence {
+                eprintln!("[{label}] diverged at step {step} (loss={loss})");
+                break;
+            }
+        }
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            let (k, v) = backend.evaluate(opts.eval_batches)?;
+            eprintln!("[{label}] step {:>5} {k} {:.4}", step + 1, v);
+            evals.push((step + 1, k, v));
+        }
+    }
+    // final eval, unless the last periodic eval already covered `done`
+    if diverged_at.is_none() && evals.last().map(|e| e.0) != Some(done) {
+        let (k, v) = backend.evaluate(opts.eval_batches)?;
+        evals.push((done, k, v));
+    }
+    Ok(TrainReport {
+        config: label,
+        curve,
+        evals,
+        steps_done: done,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        diverged_at,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// the native backend
+// ---------------------------------------------------------------------------
+
+/// Offset separating eval streams from train streams (mirrors
+/// `data::batch`'s held-out split).
+const EVAL_STREAM_BASE: u64 = 1 << 40;
+
+enum NativeData {
+    Vit(ShapeDataset),
+    Lm(TextCorpus),
+}
+
+/// Hermetic trainer: [`TrainModel`] + [`AdamW`] + the synthetic data
+/// substrates, behind [`TrainBackend`]. Bit-deterministic in
+/// `(config, seed)` — pool width does not change the loss curve.
+pub struct NativeTrainer {
+    label: String,
+    model: TrainModel,
+    opt: AdamW,
+    data: NativeData,
+    cursor: u64,
+    mask_prob: f64,
+    /// Reusable batch container: the ViT path refills its image/label
+    /// buffers in place every step (`ShapeDataset::fill_batch` clears +
+    /// reuses capacity), keeping the step hot loop allocation-free; the
+    /// LM corpus generators return fresh token Vecs by API.
+    batch: TrainBatch,
+}
+
+impl NativeTrainer {
+    /// Build from an explicit config (the table benches construct
+    /// ablation shapes directly).
+    pub fn from_config(label: &str, cfg: TrainConfig, seed: u64)
+                       -> Result<NativeTrainer> {
+        let model = TrainModel::new(cfg, seed)?;
+        let (data, batch) = match cfg.task {
+            TaskKind::Vit { .. } => (
+                NativeData::Vit(ShapeDataset::new(seed)),
+                TrainBatch::Vit { images: Vec::new(), labels: Vec::new() },
+            ),
+            TaskKind::Lm { vocab, .. } => (
+                NativeData::Lm(TextCorpus::new(vocab, seed)),
+                TrainBatch::Lm {
+                    tokens: Vec::new(),
+                    targets: Vec::new(),
+                    weights: Vec::new(),
+                },
+            ),
+        };
+        Ok(NativeTrainer {
+            label: label.to_string(),
+            model,
+            opt: AdamW::new(),
+            data,
+            cursor: 0,
+            mask_prob: 0.15,
+            batch,
+        })
+    }
+
+    /// Build from the [`native_specs`] registry by name.
+    pub fn new(name: &str, seed: u64) -> Result<NativeTrainer> {
+        let spec = native_spec(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown native config '{name}'; known: {:?}",
+                native_specs().iter().map(|s| s.name).collect::<Vec<_>>())
+        })?;
+        Self::from_config(name, spec.cfg, seed)
+    }
+
+    pub fn model(&self) -> &TrainModel {
+        &self.model
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.model.param_count()
+    }
+
+    /// Refill `self.batch` in place for stream position `start`.
+    fn fill_batch_at(&mut self, start: u64) {
+        let cfg = *self.model.cfg();
+        let b = cfg.batch_size;
+        match (&self.data, &mut self.batch, cfg.task) {
+            (NativeData::Vit(ds), TrainBatch::Vit { images, labels },
+             TaskKind::Vit { .. }) => {
+                ds.fill_batch(start, b, images, labels);
+            }
+            (NativeData::Lm(corpus),
+             TrainBatch::Lm { tokens, targets, weights },
+             TaskKind::Lm { causal, seq_len, .. }) => {
+                let lb = if causal {
+                    corpus.causal_batch(start, b, seq_len)
+                } else {
+                    corpus.masked_batch(start, b, seq_len, self.mask_prob)
+                };
+                *tokens = lb.tokens;
+                *targets = lb.targets;
+                *weights = lb.weights;
+            }
+            _ => unreachable!("data/batch/task wired together in from_config"),
+        }
+    }
+}
+
+impl TrainBackend for NativeTrainer {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn train_step(&mut self, lr: f32) -> Result<f32> {
+        self.fill_batch_at(self.cursor);
+        self.cursor += self.model.cfg().batch_size as u64;
+        let loss = self.model.loss_and_grad(&self.batch)?;
+        self.opt.step(lr, &mut self.model.opt_tensors())?;
+        Ok(loss)
+    }
+
+    fn evaluate(&mut self, n_batches: u64) -> Result<(&'static str, f64)> {
+        let b = self.model.cfg().batch_size as u64;
+        let is_vit = matches!(self.model.cfg().task, TaskKind::Vit { .. });
+        let mut correct = 0usize;
+        let mut examples = 0usize;
+        let mut nll = 0.0f64;
+        let mut weight = 0.0f64;
+        for i in 0..n_batches {
+            self.fill_batch_at(EVAL_STREAM_BASE + i * b);
+            let out = self.model.forward_eval(&self.batch)?;
+            correct += out.correct;
+            examples += out.examples;
+            nll += out.nll;
+            weight += out.weight;
+        }
+        if is_vit {
+            anyhow::ensure!(examples > 0, "no eval examples accumulated");
+            Ok(("acc", correct as f64 / examples as f64))
+        } else {
+            anyhow::ensure!(weight > 0.0, "no weighted eval tokens");
+            Ok(("ppl", (nll / weight).exp()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the native config registry
+// ---------------------------------------------------------------------------
+
+/// One named native training config: the hermetic counterpart of the
+/// PJRT artifact manifest.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainSpec {
+    pub name: &'static str,
+    pub cfg: TrainConfig,
+    /// Paper-table key for the reference column (None for extras).
+    pub paper_key: Option<&'static str>,
+}
+
+/// Every named native config: the Table-1 ViT grid, the Table-2 LM grid
+/// (masked + causal), the Table-3 ablation extras, and the CI smoke
+/// shape.
+pub fn native_specs() -> Vec<TrainSpec> {
+    vec![
+        TrainSpec {
+            name: "native_vit_attention",
+            cfg: TrainConfig::vit(Mixer::Attention, false),
+            paper_key: Some("vit_b_avg_attention"),
+        },
+        TrainSpec {
+            name: "native_vit_cat",
+            cfg: TrainConfig::vit(Mixer::CatFft, false),
+            paper_key: Some("vit_b_avg_cat"),
+        },
+        TrainSpec {
+            name: "native_vit_cat_alter",
+            cfg: TrainConfig::vit(Mixer::CatFft, true),
+            paper_key: Some("vit_b_avg_cat_alter"),
+        },
+        TrainSpec {
+            name: "native_vit_cat_gather",
+            cfg: TrainConfig::vit(Mixer::CatGather, false),
+            paper_key: None,
+        },
+        TrainSpec {
+            name: "native_lm_masked_attention",
+            cfg: TrainConfig::lm(Mixer::Attention, false, false),
+            paper_key: Some("lm_gpt2_masked_attention"),
+        },
+        TrainSpec {
+            name: "native_lm_masked_cat",
+            cfg: TrainConfig::lm(Mixer::CatFft, false, false),
+            paper_key: Some("lm_gpt2_masked_cat"),
+        },
+        TrainSpec {
+            name: "native_lm_masked_cat_alter",
+            cfg: TrainConfig::lm(Mixer::CatFft, false, true),
+            paper_key: Some("lm_gpt2_masked_cat_alter"),
+        },
+        TrainSpec {
+            name: "native_lm_causal_attention",
+            cfg: TrainConfig::lm(Mixer::Attention, true, false),
+            paper_key: Some("lm_gpt2_causal_attention"),
+        },
+        TrainSpec {
+            name: "native_lm_causal_cat",
+            cfg: TrainConfig::lm(Mixer::CatFft, true, false),
+            paper_key: Some("lm_gpt2_causal_cat"),
+        },
+        TrainSpec {
+            name: "native_tiny",
+            cfg: TrainConfig::tiny(),
+            paper_key: None,
+        },
+    ]
+}
+
+/// Look up one spec by name.
+pub fn native_spec(name: &str) -> Option<TrainSpec> {
+    native_specs().into_iter().find(|s| s.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// the PJRT backend (feature-gated; drives the AOT train-step artifacts)
+// ---------------------------------------------------------------------------
+
+/// Orchestrates training + evaluation of one model config through the
+/// AOT `train_step` artifacts (PJRT path).
 #[cfg(feature = "pjrt")]
 pub struct Trainer<'rt> {
     rt: &'rt Runtime,
@@ -134,7 +430,8 @@ impl<'rt> Trainer<'rt> {
         for i in 0..n_batches {
             let batch = self.source.eval_batch(i)?;
             // params are already literals — pass by reference, no copies
-            let mut refs: Vec<&xla::Literal> = self.state.params.iter().collect();
+            let mut refs: Vec<&xla::Literal> =
+                self.state.params.iter().collect();
             let input_lits: Vec<xla::Literal> =
                 BatchSource::forward_inputs(&batch)
                     .iter()
@@ -149,50 +446,9 @@ impl<'rt> Trainer<'rt> {
             .ok_or_else(|| anyhow::anyhow!("no eval batches accumulated"))
     }
 
-    /// Full training loop per `opts`.
+    /// Full training loop per `opts` (the shared [`run_training`] loop).
     pub fn run(&mut self, opts: &TrainOptions) -> Result<TrainReport> {
-        let mut curve = LossCurve::default();
-        let mut evals = Vec::new();
-        let t0 = Instant::now();
-        let mut diverged_at = None;
-        let mut done = 0;
-        for step in 0..opts.steps {
-            let lr = opts.schedule.lr(step);
-            let loss = self.step(lr)?;
-            curve.push(step, loss);
-            done = step + 1;
-            if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
-                eprintln!("[{}] step {:>5} loss {:.4} (ema {:.4}) lr {:.2e}",
-                          self.config, step + 1, loss,
-                          curve.ema().unwrap_or(f64::NAN), lr);
-            }
-            if !loss.is_finite() {
-                diverged_at = Some(step);
-                if opts.stop_on_divergence {
-                    eprintln!("[{}] diverged at step {step} (loss={loss})",
-                              self.config);
-                    break;
-                }
-            }
-            if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
-                let (k, v) = self.eval(opts.eval_batches)?;
-                eprintln!("[{}] step {:>5} {k} {:.4}", self.config,
-                          step + 1, v);
-                evals.push((step + 1, k, v));
-            }
-        }
-        if diverged_at.is_none() {
-            let (k, v) = self.eval(opts.eval_batches)?;
-            evals.push((done, k, v));
-        }
-        Ok(TrainReport {
-            config: self.config.clone(),
-            curve,
-            evals,
-            steps_done: done,
-            wall_seconds: t0.elapsed().as_secs_f64(),
-            diverged_at,
-        })
+        run_training(self, opts)
     }
 
     /// Fused K-step loop over the `train_k8` artifact (perf variant).
@@ -265,5 +521,90 @@ impl<'rt> Trainer<'rt> {
 
     pub fn source_mut(&mut self) -> &mut BatchSource {
         &mut self.source
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl TrainBackend for Trainer<'_> {
+    fn label(&self) -> &str {
+        &self.config
+    }
+
+    fn train_step(&mut self, lr: f32) -> Result<f32> {
+        self.step(lr)
+    }
+
+    fn evaluate(&mut self, n_batches: u64) -> Result<(&'static str, f64)> {
+        self.eval(n_batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let specs = native_specs();
+        for (i, a) in specs.iter().enumerate() {
+            for b in &specs[i + 1..] {
+                assert_ne!(a.name, b.name, "duplicate spec name");
+            }
+            assert!(native_spec(a.name).is_some());
+        }
+        assert!(native_spec("no_such_config").is_none());
+    }
+
+    #[test]
+    fn tiny_native_training_reduces_loss() {
+        // the CI smoke contract: ≥20 steps on the tiny config, loss at
+        // the end strictly below the start (quartile means for noise)
+        let mut t = NativeTrainer::new("native_tiny", 0).unwrap();
+        let opts = TrainOptions {
+            steps: 24,
+            schedule: Schedule::new(3e-3, 2, 24),
+            eval_batches: 1,
+            log_every: 0,
+            ..Default::default()
+        };
+        let report = run_training(&mut t, &opts).unwrap();
+        assert_eq!(report.steps_done, 24);
+        assert!(report.diverged_at.is_none());
+        assert!(report.curve.is_finite());
+        let losses = &report.curve.losses;
+        let q = losses.len() / 4;
+        let head: f32 = losses[..q].iter().sum::<f32>() / q as f32;
+        let tail: f32 = losses[losses.len() - q..].iter().sum::<f32>()
+            / q as f32;
+        assert!(tail < head,
+                "loss did not decrease: first-quartile mean {head:.4} vs \
+                 last {tail:.4}");
+        let (k, v) = report.final_metric().unwrap();
+        assert_eq!(k, "acc");
+        assert!((0.0..=1.0).contains(&v));
+    }
+
+    #[test]
+    fn same_seed_runs_are_identical() {
+        let opts = TrainOptions {
+            steps: 6,
+            schedule: Schedule::constant(1e-3),
+            eval_batches: 1,
+            log_every: 0,
+            ..Default::default()
+        };
+        let run = || {
+            let mut t = NativeTrainer::new("native_tiny", 7).unwrap();
+            run_training(&mut t, &opts).unwrap().curve.losses
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn lm_trainer_reports_ppl() {
+        let mut t = NativeTrainer::new("native_lm_masked_cat", 1).unwrap();
+        let (k, v) = t.evaluate(1).unwrap();
+        assert_eq!(k, "ppl");
+        assert!(v.is_finite() && v > 1.0);
     }
 }

@@ -304,3 +304,46 @@ fn measured_crossover_within_6x_of_model() {
             "measured crossover {measured} is more than 6x the modeled \
              {modeled}");
 }
+
+#[test]
+fn native_training_loss_curves_are_pool_width_invariant() {
+    // the training determinism contract (DESIGN.md §8): every parallel
+    // section in forward/backward writes disjoint outputs with per-task
+    // fixed-order accumulation, so the loss curve is bit-identical
+    // whether sections fan out across the pool or run inline on one
+    // thread — and across same-seed repeat runs.
+    use cat::train::{run_training, NativeTrainer, Schedule, TrainOptions};
+
+    let opts = TrainOptions {
+        steps: 8,
+        schedule: Schedule::new(1e-3, 2, 8),
+        seed: 5,
+        eval_every: 0,
+        eval_batches: 1,
+        log_every: 0,
+        stop_on_divergence: true,
+    };
+    // native_vit_cat is large enough (b·n·d = 64k, matmuls over 4M FLOPs)
+    // that its sections genuinely fan out when not forced inline
+    let run = |serial: bool| -> Vec<f32> {
+        if serial {
+            pool::set_force_inline(true);
+        }
+        let mut t = NativeTrainer::new("native_vit_cat", 5)
+            .expect("trainer");
+        let r = run_training(&mut t, &opts).expect("train");
+        if serial {
+            pool::set_force_inline(false);
+        }
+        r.curve.losses
+    };
+    let pooled_a = run(false);
+    let pooled_b = run(false);
+    let serial = run(true);
+    assert!(pooled_a.iter().all(|l| l.is_finite()));
+    assert_eq!(pooled_a, pooled_b,
+               "same-seed training runs produced different loss curves");
+    assert_eq!(pooled_a, serial,
+               "pool width changed the loss curve: fanned-out vs forced-\
+                inline runs must be bit-identical");
+}

@@ -436,3 +436,169 @@ fn json_roundtrip_random_values() {
         assert_eq!(v, pretty);
     });
 }
+
+// ---------------- native autograd (gradients of the core identity) --------
+
+/// Shared tolerance: |fd − g| within 1e-2 relative (f32 central
+/// differences), floored so near-zero pairs compare absolutely.
+fn grad_close(fd: f32, g: f32) -> bool {
+    (fd - g).abs() <= 1e-2 * fd.abs().max(g.abs()).max(5e-2)
+}
+
+#[test]
+fn circular_correlation_backward_matches_finite_difference() {
+    use cat::native::{corr_backward, corr_forward, softmax_in_place};
+    // acceptance: the frequency-domain backward of the paper's core
+    // identity (dv = conv(do, p), dp = corr(do, v)) against central
+    // differences, random shapes
+    for_all_n("corr_bwd_fd", 24, |rng| {
+        let n = 1usize << (2 + rng.below(4)); // 4..=32
+        let dh = 1 + rng.below(3);
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        softmax_in_place(&mut p);
+        let v: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let r: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let loss = |p: &[f32], v: &[f32]| -> f64 {
+            corr_forward(p, v, dh)
+                .iter()
+                .zip(&r)
+                .map(|(&o, &w)| (o * w) as f64)
+                .sum()
+        };
+        let (dp, dv) = corr_backward(&p, &v, &r, dh);
+        let eps = 1e-3f32;
+        for _ in 0..4 {
+            let j = rng.below(n);
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let lp = loss(&pp, &v);
+            pp[j] -= 2.0 * eps;
+            let lm = loss(&pp, &v);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(grad_close(fd, dp[j]),
+                    "n={n} dh={dh} dp[{j}]: fd {fd} vs {}", dp[j]);
+
+            let j2 = rng.below(dh * n);
+            let mut vv = v.clone();
+            vv[j2] += eps;
+            let lp = loss(&p, &vv);
+            vv[j2] -= 2.0 * eps;
+            let lm = loss(&p, &vv);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(grad_close(fd, dv[j2]),
+                    "n={n} dh={dh} dv[{j2}]: fd {fd} vs {}", dv[j2]);
+        }
+    });
+}
+
+#[test]
+fn causal_correlation_backward_matches_finite_difference() {
+    use cat::native::{causal_corr_backward, causal_corr_forward,
+                      softmax_in_place};
+    // same contract for the zero-padded causal convolution (the
+    // sub-quadratic causal CAT extension)
+    for_all_n("causal_bwd_fd", 16, |rng| {
+        let n = 1usize << (2 + rng.below(3)); // 4..=16
+        let dh = 1 + rng.below(2);
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        softmax_in_place(&mut p);
+        let v: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let r: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let loss = |p: &[f32], v: &[f32]| -> f64 {
+            causal_corr_forward(p, v, dh)
+                .iter()
+                .zip(&r)
+                .map(|(&o, &w)| (o * w) as f64)
+                .sum()
+        };
+        let (dp, dv) = causal_corr_backward(&p, &v, &r, dh);
+        let eps = 1e-3f32;
+        for _ in 0..3 {
+            let j = rng.below(n);
+            let mut pp = p.clone();
+            pp[j] += eps;
+            let lp = loss(&pp, &v);
+            pp[j] -= 2.0 * eps;
+            let lm = loss(&pp, &v);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(grad_close(fd, dp[j]),
+                    "n={n} dh={dh} dp[{j}]: fd {fd} vs {}", dp[j]);
+
+            let j2 = rng.below(dh * n);
+            let mut vv = v.clone();
+            vv[j2] += eps;
+            let lp = loss(&p, &vv);
+            vv[j2] -= 2.0 * eps;
+            let lm = loss(&p, &vv);
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            assert!(grad_close(fd, dv[j2]),
+                    "n={n} dh={dh} dv[{j2}]: fd {fd} vs {}", dv[j2]);
+        }
+    });
+}
+
+#[test]
+fn cat_block_gradients_match_finite_difference() {
+    use cat::native::{Mixer, TaskKind, TrainBatch, TrainConfig, TrainModel};
+    // acceptance: one full CAT block (embed → LN → softmax-over-N → FFT
+    // circular correlation → W_V → residual → LN → MLP → pool → CE),
+    // every tensor's dominant gradient coordinate against central
+    // differences, rel-err ≤ 1e-2 in f32
+    let cfg = TrainConfig {
+        d_model: 8,
+        n_heads: 2,
+        n_layers: 1,
+        batch_size: 2,
+        mixer: Mixer::CatFft,
+        alternate: false,
+        task: TaskKind::Vit {
+            image_size: 32,
+            patch_size: 16, // 4 tokens
+            n_channels: 3,
+            n_classes: 10,
+        },
+    };
+    let mut model = TrainModel::new(cfg, 3).expect("model");
+    let image_len = 3 * 32 * 32;
+    let mut rng = Rng::new(0xFD);
+    let batch = TrainBatch::Vit {
+        images: (0..2 * image_len).map(|_| rng.range_f32(-1.0, 1.0))
+            .collect(),
+        labels: vec![1, 7],
+    };
+    let loss0 = model.loss_and_grad(&batch).expect("loss+grad");
+    assert!(loss0.is_finite());
+    let infos = model.tensor_infos();
+    let mut checked = 0usize;
+    for (t, (name, len)) in infos.iter().enumerate() {
+        // the dominant coordinate of this tensor plus one random draw
+        let mut best = (0usize, 0.0f32);
+        for e in 0..*len {
+            let g = model.grad_at(t, e);
+            if g.abs() > best.1.abs() {
+                best = (e, g);
+            }
+        }
+        for e in [best.0, rng.below(*len)] {
+            let g = model.grad_at(t, e);
+            if g.abs() < 2e-3 {
+                continue; // fd noise floor dominates
+            }
+            let eps = 1e-2f32;
+            let orig = model.param_at(t, e);
+            model.perturb(t, e, eps);
+            let lp = model.forward_eval(&batch).expect("fd +").loss;
+            model.perturb(t, e, -2.0 * eps);
+            let lm = model.forward_eval(&batch).expect("fd -").loss;
+            // restore exactly (the ± walk can drift by an ulp)
+            let drift = orig - model.param_at(t, e) - eps;
+            model.perturb(t, e, eps + drift);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(grad_close(fd, g),
+                    "{name}[{e}]: fd {fd} vs analytic {g}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= 8,
+            "only {checked} gradient coordinates cleared the noise floor");
+}

@@ -12,6 +12,8 @@ use cat::metrics::{accuracy, token_nll};
 use cat::tensor::HostTensor;
 
 fn main() {
+    // no flags — but a typoed one must still error, not pass silently
+    let _args = cat::bench::bench_args("coordinator", &[], &[]);
     let mut bench = Bench::new("coordinator hot paths");
     bench.warmup = 2;
     bench.samples = 20;

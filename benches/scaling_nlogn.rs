@@ -39,9 +39,10 @@ fn gflop(mech: Mechanism, n: usize) -> f64 {
 }
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let smoke = args.iter().any(|a| a == "--smoke");
-    let check = args.iter().any(|a| a == "--check");
+    let args = cat::bench::bench_args("scaling_nlogn",
+                                      &["smoke", "check"], &[]);
+    let smoke = args.has("smoke");
+    let check = args.has("check");
     let ns: &[usize] = if smoke {
         &[256, 512, 1024]
     } else {

@@ -19,6 +19,8 @@ const D: usize = 512;
 const H: usize = 16;
 
 fn main() {
+    // no flags — but a typoed one must still error, not pass silently
+    let _args = cat::bench::bench_args("speedup_n256", &[], &[]);
     let mut rng = Rng::new(42);
     let cat = CatLayer::init(D, H, &mut rng);
     let attn = AttentionLayer::init(D, H, &mut rng);

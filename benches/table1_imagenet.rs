@@ -11,14 +11,14 @@
 //! `--features pjrt` and `artifacts/` present it additionally times the
 //! AOT train step per mechanism (the original PR-0 timing series).
 
-use cat::cli;
 use cat::harness;
 
 const NAMES: [&str; 3] =
     ["native_vit_attention", "native_vit_cat", "native_vit_cat_alter"];
 
 fn main() {
-    let args = cli::parse(&["steps", "seed"]).expect("args");
+    let args = cat::bench::bench_args("table1_imagenet", &["smoke"],
+                                      &["steps", "seed"]);
     let smoke = args.has("smoke");
     let steps: u64 = args
         .parse_or("steps", if smoke { 30 } else { 150 })

@@ -11,11 +11,11 @@
 //! Always emits `BENCH_table2.json`. With `--features pjrt` + artifacts
 //! it additionally times the AOT train step per config.
 
-use cat::cli;
 use cat::harness;
 
 fn main() {
-    let args = cli::parse(&["steps", "seed"]).expect("args");
+    let args = cat::bench::bench_args("table2_wikitext", &["smoke"],
+                                      &["steps", "seed"]);
     let smoke = args.has("smoke");
     let steps: u64 = args
         .parse_or("steps", if smoke { 25 } else { 120 })

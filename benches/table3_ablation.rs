@@ -11,12 +11,12 @@
 //! Always emits `BENCH_table3.json`. With `--features pjrt` + artifacts
 //! it additionally times the AOT forward per paper parameterization.
 
-use cat::cli;
 use cat::harness;
 use cat::native::{Mixer, TrainConfig};
 
 fn main() {
-    let args = cli::parse(&["steps", "seed"]).expect("args");
+    let args = cat::bench::bench_args("table3_ablation", &["smoke"],
+                                      &["steps", "seed"]);
     let smoke = args.has("smoke");
     let steps: u64 = args
         .parse_or("steps", if smoke { 30 } else { 150 })

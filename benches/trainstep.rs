@@ -1,0 +1,166 @@
+//! Training-throughput bench: steps/s of the full native train step
+//! (forward + backward + AdamW) per mixer × sequence length, with the
+//! tiled backward (blocked `xᵀ·dy`, fused softmax-bwd, stripe-batched
+//! causal FFT, panel-blocked attention backward — DESIGN.md §9) timed
+//! against the PR-3 naive reference kernels on identical models. The
+//! naive kernels are also the equivalence oracles of the tiled paths
+//! (`tests/proptests.rs`), so this bench measures exactly the pair that
+//! is proven numerically interchangeable.
+//!
+//!   cargo bench --bench trainstep              # full mixer × N grid
+//!   cargo bench --bench trainstep -- --smoke   # CI grid (small N)
+//!   ... -- --smoke --check   # CI gate: exit 1 unless the tiled
+//!                            # backward beats naive at every config
+//!
+//! Always emits `BENCH_trainstep.json`.
+
+use cat::bench::Bench;
+use cat::json::Json;
+use cat::native::{pool, set_naive_backward, Mixer, TaskKind, TrainConfig};
+use cat::train::{NativeTrainer, TrainBackend};
+
+/// Table-2-shaped LM trunk (d=64, h=4, L=2, batch 8) at sequence length
+/// `n` — the N axis moves both the FFT stripes and the O(N²) attention
+/// work, and the vocab-512 head keeps the `xᵀ·dy` block honest.
+fn lm_cfg(mixer: Mixer, causal: bool, n: usize) -> TrainConfig {
+    TrainConfig {
+        d_model: 64,
+        n_heads: 4,
+        n_layers: 2,
+        batch_size: 8,
+        mixer,
+        alternate: false,
+        task: TaskKind::Lm { vocab: 512, seq_len: n, causal },
+    }
+}
+
+struct Case {
+    label: String,
+    cfg: TrainConfig,
+}
+
+fn main() {
+    let args = cat::bench::bench_args("trainstep", &["smoke", "check"],
+                                      &["steps"]);
+    let smoke = args.has("smoke");
+    let check = args.has("check");
+    let ns: &[usize] = if smoke { &[128, 256] } else { &[128, 256, 512] };
+    let steps_per_sample: u64 = args
+        .parse_or("steps", if smoke { 4 } else { 8 })
+        .expect("--steps");
+
+    let mut cases = Vec::new();
+    for &n in ns {
+        cases.push(Case {
+            label: format!("cat_n{n}"),
+            cfg: lm_cfg(Mixer::CatFft, false, n),
+        });
+        cases.push(Case {
+            label: format!("cat_causal_n{n}"),
+            cfg: lm_cfg(Mixer::CatFft, true, n),
+        });
+        cases.push(Case {
+            label: format!("attention_n{n}"),
+            cfg: lm_cfg(Mixer::Attention, false, n),
+        });
+    }
+
+    let mut bench =
+        Bench::new("native train step (LM trunk d=64 h=4 L=2 b=8)");
+    bench.warmup = 1;
+    bench.samples = if smoke { 3 } else { 5 };
+
+    // one noisy sample on a loaded shared runner must not fail CI: a
+    // losing config gets one re-measure, and the gate carries a small
+    // noise grace (same spirit as the crossover test's retry + wide
+    // band in tests/native_backend.rs). Raw medians land in the JSON.
+    const GATE_MARGIN: f64 = 0.97;
+
+    let mut measure = |case: &Case, tag: &str| -> [f64; 2] {
+        let mut out = [0.0f64; 2]; // [tiled, naive] steps/s
+        for (slot, naive) in [(0usize, false), (1usize, true)] {
+            set_naive_backward(naive);
+            let mut t =
+                NativeTrainer::from_config(&case.label, case.cfg, 0)
+                    .expect("trainer");
+            // warm the plan caches / arenas / pool out of the timing
+            let warm = t.train_step(1e-3).expect("warm step");
+            assert!(warm.is_finite(), "{}: non-finite loss", case.label);
+            let mode = if naive { "naive" } else { "tiled" };
+            let sample =
+                bench.case(&format!("{}_{mode}{tag}", case.label), || {
+                    for _ in 0..steps_per_sample {
+                        t.train_step(1e-3).expect("train step");
+                    }
+                });
+            out[slot] = steps_per_sample as f64 / sample.median();
+        }
+        set_naive_backward(false);
+        out
+    };
+
+    println!("steps/s per mixer × N, tiled backward vs the naive \
+              reference kernels:");
+    let mut rows = Vec::new();
+    let mut regressions = Vec::new();
+    for case in &cases {
+        let mut steps_per_s = measure(case, "");
+        if steps_per_s[0] <= steps_per_s[1] {
+            eprintln!("  {}: tiled {:.2} <= naive {:.2} steps/s — noisy \
+                       sample? re-measuring once",
+                      case.label, steps_per_s[0], steps_per_s[1]);
+            steps_per_s = measure(case, "_retry");
+        }
+        let speedup = steps_per_s[0] / steps_per_s[1];
+        let ok = steps_per_s[0] > steps_per_s[1] * GATE_MARGIN;
+        println!("  {:<18} tiled {:>8.2} steps/s   naive {:>8.2}   \
+                  speedup {:.2}x{}",
+                 case.label, steps_per_s[0], steps_per_s[1], speedup,
+                 if ok { "" } else { "  [REGRESSION]" });
+        if !ok {
+            regressions.push(case.label.clone());
+        }
+        rows.push(Json::Obj(vec![
+            ("config".to_string(), Json::Str(case.label.clone())),
+            ("mixer".to_string(), Json::Str(case.cfg.mechanism())),
+            ("causal".to_string(), Json::Bool(case.cfg.causal())),
+            ("n".to_string(), Json::Num(case.cfg.n_tokens() as f64)),
+            ("tiled_steps_per_s".to_string(), Json::Num(steps_per_s[0])),
+            ("naive_steps_per_s".to_string(), Json::Num(steps_per_s[1])),
+            ("speedup".to_string(), Json::Num(speedup)),
+            ("gate_pass".to_string(), Json::Bool(ok)),
+        ]));
+    }
+    print!("{}", bench.report());
+
+    let ps = pool::stats();
+    let obj = Json::Obj(vec![
+        ("bench".to_string(), Json::from("trainstep")),
+        ("smoke".to_string(), Json::Bool(smoke)),
+        ("steps_per_sample".to_string(),
+         Json::Num(steps_per_sample as f64)),
+        ("configs".to_string(), Json::Arr(rows)),
+        ("pool".to_string(), Json::Obj(vec![
+            ("workers".to_string(), Json::Num(ps.workers as f64)),
+            ("threads_spawned".to_string(),
+             Json::Num(ps.threads_spawned as f64)),
+            ("par_sections".to_string(),
+             Json::Num(ps.par_sections as f64)),
+        ])),
+        ("timings".to_string(), bench.to_json()),
+    ]);
+    std::fs::write("BENCH_trainstep.json", obj.to_string_pretty())
+        .expect("write BENCH_trainstep.json");
+    eprintln!("results -> BENCH_trainstep.json");
+
+    if check {
+        if regressions.is_empty() {
+            eprintln!("perf gate OK: tiled backward beat the naive \
+                       reference at every measured config");
+        } else {
+            eprintln!("perf gate FAILED: tiled backward lost to the naive \
+                       reference at {regressions:?}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -11,6 +11,48 @@ use std::time::Instant;
 
 use crate::json::Json;
 
+/// Shared `CAT_SKIP_TIMING` gate for wallclock-sensitive assertions —
+/// the one parser for the variable (tests/native_backend.rs consults
+/// it; the bench `--check` gates deliberately do *not*, since they are
+/// the dedicated perf-smoke timing job): any non-empty value other
+/// than `0` / `false` (case-insensitive) skips — `CAT_SKIP_TIMING=1`,
+/// `=true` and `=yes` all work; unset, empty, `0` and `false` run the
+/// timings.
+pub fn skip_timing() -> bool {
+    match std::env::var("CAT_SKIP_TIMING") {
+        Ok(v) => {
+            let v = v.trim().to_ascii_lowercase();
+            !(v.is_empty() || v == "0" || v == "false")
+        }
+        Err(_) => false,
+    }
+}
+
+/// Parse + validate a bench binary's argv: only the given switches and
+/// valued flags are accepted (plus cargo's own `--bench` passthrough);
+/// anything else — e.g. a `--chekc` typo — prints the usage line and
+/// exits 2 instead of silently running the default sweep. Positionals
+/// (cargo test-filter strings) pass through untouched.
+pub fn bench_args(bench: &str, switches: &[&str], valued: &[&str])
+                  -> crate::cli::Args {
+    let mut known: Vec<&str> = switches.to_vec();
+    known.push("bench");
+    let parsed = crate::cli::parse(valued)
+        .and_then(|a| a.expect_no_unknown(&known, valued).map(|()| a));
+    match parsed {
+        Ok(a) => a,
+        Err(e) => {
+            let mut parts: Vec<String> =
+                switches.iter().map(|s| format!("[--{s}]")).collect();
+            parts.extend(valued.iter().map(|v| format!("[--{v} N]")));
+            eprintln!("error: {e:#}");
+            eprintln!("usage: cargo bench --bench {bench} -- {}",
+                      parts.join(" "));
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Synthesize one literal per input spec of an AOT entry point (shared by
 /// the PJRT bench drivers): small-amplitude normal noise, deterministic
 /// in `seed`.

@@ -77,6 +77,27 @@ impl Args {
             .ok_or_else(|| anyhow!("missing required flag --{name}"))
     }
 
+    /// Error on any switch or valued flag outside the given lists — so a
+    /// typoed `--chekc` fails loudly instead of silently running the
+    /// default behaviour (every bench validates its args through this,
+    /// via [`crate::bench::bench_args`]).
+    pub fn expect_no_unknown(&self, switches: &[&str], valued: &[&str])
+                             -> Result<()> {
+        for s in &self.switches {
+            if !switches.contains(&s.as_str()) {
+                bail!("unknown flag --{s} (known switches: {switches:?}, \
+                       valued flags: {valued:?})");
+            }
+        }
+        for k in self.flags.keys() {
+            if !valued.contains(&k.as_str()) {
+                bail!("--{k} does not take a value here (valued flags: \
+                       {valued:?})");
+            }
+        }
+        Ok(())
+    }
+
     /// Error on unknown command (help text for the caller to print).
     pub fn expect_command(&self, known: &[&str]) -> Result<&str> {
         match &self.command {
@@ -132,5 +153,17 @@ mod tests {
         let a = parse_vec(&[], &["list"]);
         assert_eq!(a.expect_command(&["list", "train"]).unwrap(), "list");
         assert!(a.expect_command(&["train"]).is_err());
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected() {
+        let a = parse_vec(&["steps"], &["--smoke", "--steps", "5"]);
+        assert!(a.expect_no_unknown(&["smoke"], &["steps"]).is_ok());
+        // the classic typo: --chekc must error, not silently no-op
+        let b = parse_vec(&["steps"], &["--smoke", "--chekc"]);
+        assert!(b.expect_no_unknown(&["smoke"], &["steps"]).is_err());
+        // a switch given a value through = form is rejected too
+        let c = parse_vec(&[], &["--smoke=1"]);
+        assert!(c.expect_no_unknown(&["smoke"], &[]).is_err());
     }
 }

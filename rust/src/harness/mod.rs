@@ -94,7 +94,7 @@ pub fn run_one(rt: &Runtime, name: &str, steps: u64, seed: u64,
         eval_every: 0,
         eval_batches,
         log_every: (steps / 4).max(1),
-        stop_on_divergence: true,
+        ..Default::default()
     };
     let mut trainer = Trainer::new(rt, name, seed)?;
     let report = trainer.run(&opts)?;
@@ -134,7 +134,7 @@ pub fn run_native_cfg(label: &str, cfg: TrainConfig,
         eval_every: 0,
         eval_batches,
         log_every: (steps / 4).max(1),
-        stop_on_divergence: true,
+        ..Default::default()
     };
     let report = run_training(&mut trainer, &opts)?;
     let (metric_name, metric) = report

@@ -43,7 +43,12 @@ commands:
   list         list native training configs (+ artifact manifest [pjrt])
   train        [--config NAME] [--backend native|pjrt] [--steps N]
                [--lr F] [--seed N] [--assert-improves]
+               [--save PATH] [--resume PATH]
                (native: hermetic, default config native_vit_cat;
+                --save/--resume checkpoint the full training state —
+                params, AdamW moments, data cursor — and a resumed run
+                re-plans warmup+cosine over the combined past+new steps,
+                entering at the stored optimizer step;
                 pjrt extras: [--checkpoint PATH] [--fused] [--augment])
   eval         --config NAME [--checkpoint PATH] [--batches N]  [pjrt]
   serve        [--config NAME] [--requests N] [--backend pjrt|native]
@@ -59,7 +64,7 @@ serve/train/list/complexity run hermetically on the native backend
 
 const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "batches", "requests", "json", "artifacts",
-                          "backend"];
+                          "backend", "save", "resume"];
 
 fn main() {
     if let Err(e) = run() {
@@ -172,9 +177,21 @@ fn cmd_train_native(args: &cli::Args) -> cat::Result<()> {
     let mut trainer = NativeTrainer::new(config, seed)?;
     eprintln!("[train] backend=native config={config} params={}",
               trainer.param_count());
+    if let Some(path) = args.get("resume") {
+        trainer.load_checkpoint(std::path::Path::new(path))?;
+        eprintln!("[train] resumed from {path} (opt step {}, stream \
+                   cursor {})", trainer.opt_steps(), trainer.cursor());
+    }
+    // a resumed run re-plans the warmup+cosine schedule over the
+    // combined past+new step count and enters it at the checkpoint's
+    // optimizer step — it never restarts the schedule from step zero
+    // (whether any warmup remains depends on the combined horizon)
+    let start = trainer.opt_steps();
+    let total = start + steps;
     let opts = TrainOptions {
         steps,
-        schedule: Schedule::new(lr, (steps / 10).max(1), steps),
+        schedule: Schedule::new(lr, (total / 10).max(1), total),
+        start_step: start,
         seed,
         eval_every: (steps / 4).max(1),
         eval_batches: args.parse_or("batches", 8)?,
@@ -206,11 +223,21 @@ fn cmd_train_native(args: &cli::Args) -> cat::Result<()> {
                         report.steps_done);
         println!("loss improved: {head:.4} -> {tail:.4} (quartile means)");
     }
+    if let Some(path) = args.get("save") {
+        trainer.save_checkpoint(std::path::Path::new(path))?;
+        println!("checkpoint -> {path}");
+    }
     Ok(())
 }
 
 #[cfg(feature = "pjrt")]
 fn cmd_train_pjrt(args: &cli::Args) -> cat::Result<()> {
+    for flag in ["save", "resume"] {
+        anyhow::ensure!(!args.has(flag),
+                        "--{flag} is a native-backend option (the PJRT \
+                         path uses --checkpoint); drop --backend pjrt or \
+                         use --checkpoint");
+    }
     let config = args.require("config")?;
     let steps: u64 = args.parse_or("steps", 200)?;
     let lr: f32 = args.parse_or("lr", 1e-3)?;

@@ -40,6 +40,8 @@
 //! step, a same-shape train step performs zero tensor-sized heap
 //! allocation.
 
+use std::cell::{Cell, RefCell};
+
 use anyhow::{bail, ensure};
 
 use super::arena;
@@ -51,6 +53,67 @@ use crate::Result;
 
 /// Serial-fallback threshold, matching [`matmul`]'s sizing logic.
 const PAR_FLOPS: usize = 1 << 21;
+
+/// Row-tile height of the blocked `xᵀ·dy` kernel: inside one k-chunk the
+/// row walk advances in tiles this tall so the `dy` tile stays cache-hot
+/// across the whole k sweep. Blocks only regroup the loop nest — for any
+/// fixed `(k, j)` the row accumulation stays flat-ascending.
+const XT_ROW_TILE: usize = 64;
+/// Column-tile width of the blocked `xᵀ·dy` kernel.
+const XT_COL_TILE: usize = 64;
+/// Minimum `inner` (k-rows of `dw`) before the k-parallel strategy can
+/// feed the pool; narrower weight gradients parallelize over row blocks
+/// with partial accumulators instead.
+const XT_K_PAR_MIN: usize = 64;
+/// Row-block length of the partial-accumulator strategies (the narrow
+/// `matmul_xt_acc` path and parallel [`colsum_acc`]). Shape-only by
+/// design: the 2-level summation tree it induces (flat-ascending inside
+/// a block, blocks reduced in ascending order) is a pure function of the
+/// operand shapes, never of the pool width (DESIGN.md §9).
+const ROW_BLOCK: usize = 256;
+/// Row-panel height of the stripe-blocked attention backward.
+const ATTN_PANEL: usize = 32;
+/// Column-tile width of the stripe-blocked attention backward.
+const ATTN_COL_TILE: usize = 64;
+
+thread_local! {
+    /// When set (always consulted on the *calling* thread — kernel
+    /// strategy is chosen before any parallel section fans out), the
+    /// backward pass routes through the pre-tiling PR-3 reference
+    /// kernels. Those references are the equivalence oracles for the
+    /// tiled paths (`tests/proptests.rs`) and the baseline that
+    /// `benches/trainstep.rs --check` must beat.
+    static NAIVE_BACKWARD: Cell<bool> = const { Cell::new(false) };
+    /// Caller-side grow-only buffer for the partial-accumulator
+    /// reductions; parallel tasks borrow disjoint `chunks_mut` of it.
+    static PARTIALS: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Route backward passes issued from this thread through the naive
+/// reference kernels (`true`) or the tiled production kernels (`false`,
+/// the default). Thread-local so concurrent tests cannot perturb each
+/// other.
+pub fn set_naive_backward(on: bool) {
+    NAIVE_BACKWARD.with(|f| f.set(on));
+}
+
+/// Is this thread currently routing backwards through the naive
+/// reference kernels?
+pub fn naive_backward() -> bool {
+    NAIVE_BACKWARD.with(|f| f.get())
+}
+
+/// Borrow this thread's partial-reduction buffer at `len` elements
+/// (grow-only; contents are stale — tasks must overwrite).
+fn with_partials<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PARTIALS.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < len {
+            p.resize(len, 0.0);
+        }
+        f(&mut p[..len])
+    })
+}
 
 fn ensure_len(buf: &mut Vec<f32>, len: usize) {
     if buf.len() != len {
@@ -111,12 +174,117 @@ pub fn matmul_wt(dy: &[f32], rows: usize, cols: usize, w: &[f32],
     });
 }
 
+/// Accumulate rows `r0..r0+rb` of the `xᵀ·dy` product into the k-rows
+/// `k0..k0+dwc.len()/cols` of `dw` (`dwc`), walking (k, j) tiles so one
+/// `dy` tile stays cache-hot across the whole k sweep. For any fixed
+/// `(k, j)` slot the row accumulation runs ascending.
+fn xt_block(x: &[f32], inner: usize, dy: &[f32], cols: usize, r0: usize,
+            rb: usize, k0: usize, dwc: &mut [f32]) {
+    let kb = dwc.len() / cols;
+    let mut j0 = 0;
+    while j0 < cols {
+        let jb = XT_COL_TILE.min(cols - j0);
+        for ki in 0..kb {
+            let k = k0 + ki;
+            let dwrow = &mut dwc[ki * cols + j0..ki * cols + j0 + jb];
+            for r in r0..r0 + rb {
+                let xv = x[r * inner + k];
+                if xv != 0.0 {
+                    let dyrow = &dy[r * cols + j0..r * cols + j0 + jb];
+                    for (w, &dv) in dwrow.iter_mut().zip(dyrow) {
+                        *w += xv * dv;
+                    }
+                }
+            }
+        }
+        j0 += jb;
+    }
+}
+
+/// [`xt_block`] over every row of `x`/`dy` in [`XT_ROW_TILE`] tiles —
+/// the serial and k-parallel tiled bodies. Per-slot summation order is
+/// flat row-ascending (tiles only partition the loop), i.e. identical
+/// to [`matmul_xt_acc_naive`].
+fn xt_tile_body(x: &[f32], rows: usize, inner: usize, dy: &[f32],
+                cols: usize, k0: usize, dwc: &mut [f32]) {
+    let mut r0 = 0;
+    while r0 < rows {
+        let rb = XT_ROW_TILE.min(rows - r0);
+        xt_block(x, inner, dy, cols, r0, rb, k0, dwc);
+        r0 += rb;
+    }
+}
+
 /// `dw += xᵀ @ dy`: `x: (rows, inner)`, `dy: (rows, cols)`,
-/// `dw: (inner, cols)`. Parallel over `k`-row blocks of `dw`; within a
-/// block the `r` accumulation runs serially ascending, so every `dw[k,j]`
-/// sums in the same order whatever the chunk count.
+/// `dw: (inner, cols)` — the weight-gradient hot spot of every dense
+/// layer. Tiled (DESIGN.md §9): the kernel walks (k, j) tiles inside
+/// [`XT_ROW_TILE`]-row blocks so the `dy` tile is reused across the k
+/// sweep instead of re-streamed once per k-row. Two parallel strategies,
+/// chosen by shape alone:
+///
+/// * `inner ≥ XT_K_PAR_MIN`: parallel over k-row chunks of `dw`; every
+///   `dw[k, j]` still sums its rows flat-ascending, so the result is
+///   bit-identical to the naive reference *and* across pool widths;
+/// * narrow `dw` with many rows: parallel over [`ROW_BLOCK`]-row blocks
+///   into per-task partial accumulators, reduced serially in ascending
+///   block order — a fixed 2-level summation tree, bit-identical across
+///   pool widths (though not to the flat naive order; equivalence vs the
+///   oracle is pinned at f32 tolerance in `tests/proptests.rs`).
 pub fn matmul_xt_acc(x: &[f32], rows: usize, inner: usize, dy: &[f32],
                      cols: usize, dw: &mut [f32]) {
+    debug_assert_eq!(x.len(), rows * inner);
+    debug_assert_eq!(dy.len(), rows * cols);
+    debug_assert_eq!(dw.len(), inner * cols);
+    if naive_backward() {
+        matmul_xt_acc_naive(x, rows, inner, dy, cols, dw);
+        return;
+    }
+    if rows * inner * cols < PAR_FLOPS {
+        xt_tile_body(x, rows, inner, dy, cols, 0, dw);
+        return;
+    }
+    if inner >= XT_K_PAR_MIN {
+        let chunks = pool::max_parallel_tasks().min(inner).max(1);
+        let chunk_k = (inner + chunks - 1) / chunks;
+        let tasks: Vec<(usize, &mut [f32])> =
+            dw.chunks_mut(chunk_k * cols).enumerate().collect();
+        pool::run(tasks, 2 * chunk_k * rows * cols, |(ci, dwc)| {
+            xt_tile_body(x, rows, inner, dy, cols, ci * chunk_k, dwc);
+        });
+        return;
+    }
+    // narrow dw, many rows: per-row-block partial accumulators
+    let n_blocks = (rows + ROW_BLOCK - 1) / ROW_BLOCK;
+    let tile = inner * cols;
+    with_partials(n_blocks * tile, |partials| {
+        let tasks: Vec<(usize, &mut [f32])> =
+            partials.chunks_mut(tile).enumerate().collect();
+        pool::run(tasks, 2 * ROW_BLOCK * tile, |(bi, part)| {
+            part.fill(0.0);
+            let r0 = bi * ROW_BLOCK;
+            let rb = ROW_BLOCK.min(rows - r0);
+            let mut sub = r0;
+            while sub < r0 + rb {
+                let sb = XT_ROW_TILE.min(r0 + rb - sub);
+                xt_block(x, inner, dy, cols, sub, sb, 0, part);
+                sub += sb;
+            }
+        });
+        // fixed-order reduction: ascending block index, serial
+        for part in partials.chunks_exact(tile) {
+            for (w, &pv) in dw.iter_mut().zip(part) {
+                *w += pv;
+            }
+        }
+    });
+}
+
+/// The PR-3 reference `xᵀ·dy`: each k-row of `dw` walks all `rows`
+/// serially (k-chunk parallel, no tiling). Kept as the equivalence
+/// oracle for [`matmul_xt_acc`] and as the baseline the `trainstep`
+/// bench's `--check` gate must beat.
+pub fn matmul_xt_acc_naive(x: &[f32], rows: usize, inner: usize,
+                           dy: &[f32], cols: usize, dw: &mut [f32]) {
     debug_assert_eq!(x.len(), rows * inner);
     debug_assert_eq!(dy.len(), rows * cols);
     debug_assert_eq!(dw.len(), inner * cols);
@@ -147,8 +315,44 @@ pub fn matmul_xt_acc(x: &[f32], rows: usize, inner: usize, dy: &[f32],
     });
 }
 
-/// `db[j] += Σ_r dy[r, j]` (bias gradients; serial, fixed order).
+/// `db[j] += Σ_r dy[r, j]` (bias gradients). Large shapes parallelize
+/// over [`ROW_BLOCK`]-row blocks into per-task partial sums reduced in
+/// ascending block order (the same fixed 2-level tree as
+/// [`matmul_xt_acc`]'s narrow strategy); small shapes run serial
+/// flat-ascending. Both orders are functions of the shape alone.
 pub fn colsum_acc(dy: &[f32], cols: usize, db: &mut [f32]) {
+    debug_assert_eq!(db.len(), cols);
+    let rows = if cols == 0 { 0 } else { dy.len() / cols };
+    if naive_backward() || rows * cols < (1 << 20) || rows < 2 * ROW_BLOCK {
+        colsum_acc_naive(dy, cols, db);
+        return;
+    }
+    let n_blocks = (rows + ROW_BLOCK - 1) / ROW_BLOCK;
+    with_partials(n_blocks * cols, |partials| {
+        let tasks: Vec<(usize, &mut [f32])> =
+            partials.chunks_mut(cols).enumerate().collect();
+        pool::run(tasks, 2 * ROW_BLOCK * cols, |(bi, part)| {
+            part.fill(0.0);
+            let r0 = bi * ROW_BLOCK;
+            let rb = ROW_BLOCK.min(rows - r0);
+            for dyrow in
+                dy[r0 * cols..(r0 + rb) * cols].chunks_exact(cols) {
+                for (b, &dv) in part.iter_mut().zip(dyrow) {
+                    *b += dv;
+                }
+            }
+        });
+        for part in partials.chunks_exact(cols) {
+            for (b, &pv) in db.iter_mut().zip(part) {
+                *b += pv;
+            }
+        }
+    });
+}
+
+/// The PR-3 reference column sum: fully serial, flat-ascending. Oracle
+/// for [`colsum_acc`] and the `trainstep` naive baseline.
+pub fn colsum_acc_naive(dy: &[f32], cols: usize, db: &mut [f32]) {
     debug_assert_eq!(db.len(), cols);
     for dyrow in dy.chunks_exact(cols) {
         for (b, dv) in db.iter_mut().zip(dyrow) {
@@ -375,6 +579,102 @@ fn causal_bwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
     dp.copy_from_slice(&row2[..n]);
 }
 
+/// Batched causal forward stripe: all `dh` channel rows are zero-padded
+/// into one `(dh, 2n)` block and swept with a single
+/// `rfft_many`/`irfft_many` pair, so the 2n plan's twiddle tables stay
+/// hot across the whole stripe instead of being re-walked per channel.
+/// Bit-identical to [`causal_fwd_stripe`] (`rfft_many` is a fixed
+/// per-row loop). Buffers: `pad2`/`out2`: `dh·2n`, `zre/zim`: `f₂`,
+/// `vre/vim`: `dh·f₂` where `f₂ = n + 1`.
+#[allow(clippy::too_many_arguments)]
+fn causal_fwd_stripe_batched(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
+                             dh: usize, out: &mut [f32], pad2: &mut [f32],
+                             zre: &mut [f32], zim: &mut [f32],
+                             vre: &mut [f32], vim: &mut [f32],
+                             out2: &mut [f32], scratch: &mut [f32]) {
+    let n = p.len();
+    let n2 = 2 * n;
+    let f = plan2.spectrum_len();
+    out2[..n].copy_from_slice(p);
+    out2[n..n2].fill(0.0);
+    plan2.rfft(&out2[..n2], zre, zim, scratch);
+    for c in 0..dh {
+        let row = &mut pad2[c * n2..(c + 1) * n2];
+        row[..n].copy_from_slice(&v[c * n..(c + 1) * n]);
+        row[n..].fill(0.0);
+    }
+    plan2.rfft_many(pad2, dh, vre, vim, scratch);
+    for c in 0..dh {
+        let vr = &mut vre[c * f..(c + 1) * f];
+        let vi = &mut vim[c * f..(c + 1) * f];
+        for k in 0..f {
+            let (re, im) = cmul(zre[k], zim[k], vr[k], vi[k]);
+            vr[k] = re;
+            vi[k] = im;
+        }
+    }
+    plan2.irfft_many(vre, vim, dh, out2, scratch);
+    for c in 0..dh {
+        out[c * n..(c + 1) * n].copy_from_slice(&out2[c * n2..c * n2 + n]);
+    }
+}
+
+/// Batched backward of the causal stripe: the `dh` padded `dout` and `v`
+/// rows each go through one `rfft_many` sweep, the conjugate products
+/// run per bin, and one `irfft_many` brings every `dv` row back.
+/// Bit-identical to [`causal_bwd_stripe`] (same per-row math, same
+/// ascending-channel accumulation into the `dp` spectrum).
+#[allow(clippy::too_many_arguments)]
+fn causal_bwd_stripe_batched(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
+                             dout: &[f32], dh: usize, dp: &mut [f32],
+                             dv: &mut [f32], pad2: &mut [f32],
+                             zre: &mut [f32], zim: &mut [f32],
+                             vre: &mut [f32], vim: &mut [f32],
+                             gre: &mut [f32], gim: &mut [f32],
+                             acc_re: &mut [f32], acc_im: &mut [f32],
+                             out2: &mut [f32], scratch: &mut [f32]) {
+    let n = p.len();
+    let n2 = 2 * n;
+    let f = plan2.spectrum_len();
+    out2[..n].copy_from_slice(p);
+    out2[n..n2].fill(0.0);
+    plan2.rfft(&out2[..n2], zre, zim, scratch);
+    for c in 0..dh {
+        let row = &mut pad2[c * n2..(c + 1) * n2];
+        row[..n].copy_from_slice(&dout[c * n..(c + 1) * n]);
+        row[n..].fill(0.0);
+    }
+    plan2.rfft_many(pad2, dh, gre, gim, scratch);
+    for c in 0..dh {
+        let row = &mut pad2[c * n2..(c + 1) * n2];
+        row[..n].copy_from_slice(&v[c * n..(c + 1) * n]);
+        row[n..].fill(0.0);
+    }
+    plan2.rfft_many(pad2, dh, vre, vim, scratch);
+    acc_re.fill(0.0);
+    acc_im.fill(0.0);
+    for c in 0..dh {
+        let gr = &mut gre[c * f..(c + 1) * f];
+        let gi = &mut gim[c * f..(c + 1) * f];
+        let vr = &vre[c * f..(c + 1) * f];
+        let vi = &vim[c * f..(c + 1) * f];
+        for k in 0..f {
+            let (ar, ai) = cmul_conj_a(vr[k], vi[k], gr[k], gi[k]);
+            acc_re[k] += ar;
+            acc_im[k] += ai;
+            let (re, im) = cmul_conj_a(zre[k], zim[k], gr[k], gi[k]);
+            gr[k] = re;
+            gi[k] = im;
+        }
+    }
+    plan2.irfft_many(gre, gim, dh, out2, scratch);
+    for c in 0..dh {
+        dv[c * n..(c + 1) * n].copy_from_slice(&out2[c * n2..c * n2 + n]);
+    }
+    plan2.irfft(acc_re, acc_im, &mut out2[..n2], scratch);
+    dp.copy_from_slice(&out2[..n]);
+}
+
 // ---------------------------------------------------------------------------
 // public reference API for the stripe kernels (grad-check tests)
 // ---------------------------------------------------------------------------
@@ -457,6 +757,53 @@ pub fn causal_corr_backward(p: &[f32], v: &[f32], dout: &[f32], dh: usize)
     (dp, dv)
 }
 
+/// Test entry: the batched causal stripe forward ([`causal_fwd_stripe_batched`],
+/// the production training path); must be bit-identical to
+/// [`causal_corr_forward`].
+pub fn causal_corr_forward_batched(p: &[f32], v: &[f32], dh: usize)
+                                   -> Vec<f32> {
+    let n = p.len();
+    assert_eq!(v.len(), dh * n);
+    let plan2 = split_rfft_plan(2 * n);
+    let f = plan2.spectrum_len();
+    let mut out = vec![0.0f32; dh * n];
+    let mut pad2 = vec![0.0f32; dh * 2 * n];
+    let mut out2 = vec![0.0f32; dh * 2 * n];
+    let (mut zre, mut zim) = (vec![0.0f32; f], vec![0.0f32; f]);
+    let (mut vre, mut vim) = (vec![0.0f32; dh * f], vec![0.0f32; dh * f]);
+    let mut scratch = vec![0.0f32; plan2.scratch_len()];
+    causal_fwd_stripe_batched(&plan2, p, v, dh, &mut out, &mut pad2,
+                              &mut zre, &mut zim, &mut vre, &mut vim,
+                              &mut out2, &mut scratch);
+    out
+}
+
+/// Test entry: the batched causal stripe backward
+/// ([`causal_bwd_stripe_batched`], the production training path); must
+/// be bit-identical to [`causal_corr_backward`].
+pub fn causal_corr_backward_batched(p: &[f32], v: &[f32], dout: &[f32],
+                                    dh: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = p.len();
+    assert_eq!(v.len(), dh * n);
+    assert_eq!(dout.len(), dh * n);
+    let plan2 = split_rfft_plan(2 * n);
+    let f = plan2.spectrum_len();
+    let mut dp = vec![0.0f32; n];
+    let mut dv = vec![0.0f32; dh * n];
+    let mut pad2 = vec![0.0f32; dh * 2 * n];
+    let mut out2 = vec![0.0f32; dh * 2 * n];
+    let (mut zre, mut zim) = (vec![0.0f32; f], vec![0.0f32; f]);
+    let (mut vre, mut vim) = (vec![0.0f32; dh * f], vec![0.0f32; dh * f]);
+    let (mut gre, mut gim) = (vec![0.0f32; dh * f], vec![0.0f32; dh * f]);
+    let (mut are, mut aim) = (vec![0.0f32; f], vec![0.0f32; f]);
+    let mut scratch = vec![0.0f32; plan2.scratch_len()];
+    causal_bwd_stripe_batched(&plan2, p, v, dout, dh, &mut dp, &mut dv,
+                              &mut pad2, &mut zre, &mut zim, &mut vre,
+                              &mut vim, &mut gre, &mut gim, &mut are,
+                              &mut aim, &mut out2, &mut scratch);
+    (dp, dv)
+}
+
 // ---------------------------------------------------------------------------
 // layout shuffles between (b, n, d) and per-(batch·head) stripes
 // ---------------------------------------------------------------------------
@@ -526,6 +873,188 @@ fn from_head_rows(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 }
 
 // ---------------------------------------------------------------------------
+// attention backward stripe kernels
+// ---------------------------------------------------------------------------
+
+/// PR-3 reference attention backward for one `(batch·head)` stripe:
+/// row-streamed — every row re-walks K, V, dK and dV end to end. Kept
+/// as the equivalence oracle for [`attn_bwd_stripe_panels`] and the
+/// `trainstep` naive baseline. `q`/`k`/`v`/`dost`: `(n, dh)`;
+/// `ps`: `(n, n)` softmax rows (zero above the diagonal when causal).
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_stripe_rows(q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
+                        dost: &[f32], n: usize, dh: usize, scale: f32,
+                        causal: bool, dqs: &mut [f32], dks: &mut [f32],
+                        dvs: &mut [f32]) {
+    dks.fill(0.0);
+    dvs.fill(0.0);
+    arena::with_task_arena(|ta| {
+        let [dprow] = ta.frame([n]);
+        for i in 0..n {
+            let lim = if causal { i + 1 } else { n };
+            let doi = &dost[i * dh..(i + 1) * dh];
+            let pi = &ps[i * n..(i + 1) * n];
+            let mut dsum = 0.0f32;
+            for (j, slot) in dprow.iter_mut().take(lim).enumerate() {
+                let vj = &v[j * dh..(j + 1) * dh];
+                let mut dot = 0.0f32;
+                for (a, bb) in doi.iter().zip(vj) {
+                    dot += a * bb;
+                }
+                *slot = dot;
+                dsum += dot * pi[j];
+            }
+            let qi = &q[i * dh..(i + 1) * dh];
+            let dqi = &mut dqs[i * dh..(i + 1) * dh];
+            dqi.fill(0.0);
+            for j in 0..lim {
+                let pj = pi[j];
+                let ds = pj * (dprow[j] - dsum) * scale;
+                let kj = &k[j * dh..(j + 1) * dh];
+                for (dq, &kv) in dqi.iter_mut().zip(kj) {
+                    *dq += ds * kv;
+                }
+                let dkj = &mut dks[j * dh..(j + 1) * dh];
+                for (dk_, &qv) in dkj.iter_mut().zip(qi) {
+                    *dk_ += ds * qv;
+                }
+                let dvj = &mut dvs[j * dh..(j + 1) * dh];
+                for (dv_, &dov) in dvj.iter_mut().zip(doi) {
+                    *dv_ += pj * dov;
+                }
+            }
+        }
+    });
+}
+
+/// Stripe-blocked attention backward for one `(batch·head)` stripe:
+/// rows advance in [`ATTN_PANEL`]-row panels whose dS panel lives in
+/// task-arena scratch, with the softmax backward fused into the panel
+/// pass and K/V/dK/dV walked in [`ATTN_COL_TILE`]-column tiles — the
+/// O(N²) row work streams those operands once per *panel* instead of
+/// once per row. Per-slot accumulation order is flat row-ascending, so
+/// the outputs are bit-identical to [`attn_bwd_stripe_rows`].
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd_stripe_panels(q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
+                          dost: &[f32], n: usize, dh: usize, scale: f32,
+                          causal: bool, dqs: &mut [f32], dks: &mut [f32],
+                          dvs: &mut [f32]) {
+    dqs.fill(0.0);
+    dks.fill(0.0);
+    dvs.fill(0.0);
+    arena::with_task_arena(|ta| {
+        let [ds] = ta.frame([ATTN_PANEL * n]);
+        let mut i0 = 0;
+        while i0 < n {
+            let rb = ATTN_PANEL.min(n - i0);
+            // 1. dS panel = dO·Vᵀ over column tiles (j < lim per row)
+            let mut j0 = 0;
+            while j0 < n && !(causal && j0 >= i0 + rb) {
+                let jb = ATTN_COL_TILE.min(n - j0);
+                for r in 0..rb {
+                    let i = i0 + r;
+                    let lim = if causal { i + 1 } else { n };
+                    if j0 >= lim {
+                        continue;
+                    }
+                    let je = jb.min(lim - j0);
+                    let doi = &dost[i * dh..(i + 1) * dh];
+                    let dsrow = &mut ds[r * n + j0..r * n + j0 + je];
+                    for (jj, slot) in dsrow.iter_mut().enumerate() {
+                        let vj = &v[(j0 + jj) * dh..(j0 + jj + 1) * dh];
+                        let mut dot = 0.0f32;
+                        for (a, bb) in doi.iter().zip(vj) {
+                            dot += a * bb;
+                        }
+                        *slot = dot;
+                    }
+                }
+                j0 += jb;
+            }
+            // 2. fused softmax backward per row (+ the q·k scale)
+            for r in 0..rb {
+                let i = i0 + r;
+                let lim = if causal { i + 1 } else { n };
+                let pi = &ps[i * n..i * n + lim];
+                let dsrow = &mut ds[r * n..r * n + lim];
+                let mut dsum = 0.0f32;
+                for (pv, dv) in pi.iter().zip(dsrow.iter()) {
+                    dsum += pv * dv;
+                }
+                for (pv, dv) in pi.iter().zip(dsrow.iter_mut()) {
+                    *dv = pv * (*dv - dsum) * scale;
+                }
+            }
+            // 3. dQ/dK/dV over column tiles: the (jb, dh) K, dK and dV
+            // tiles stay hot across the panel's row sweep
+            let mut j0 = 0;
+            while j0 < n && !(causal && j0 >= i0 + rb) {
+                let jb = ATTN_COL_TILE.min(n - j0);
+                for r in 0..rb {
+                    let i = i0 + r;
+                    let lim = if causal { i + 1 } else { n };
+                    if j0 >= lim {
+                        continue;
+                    }
+                    let je = jb.min(lim - j0);
+                    let qi = &q[i * dh..(i + 1) * dh];
+                    let doi = &dost[i * dh..(i + 1) * dh];
+                    let dqi = &mut dqs[i * dh..(i + 1) * dh];
+                    let pirow = &ps[i * n..(i + 1) * n];
+                    let dsrow = &ds[r * n..(r + 1) * n];
+                    for j in j0..j0 + je {
+                        let dsv = dsrow[j];
+                        let kj = &k[j * dh..(j + 1) * dh];
+                        for (dq, &kv) in dqi.iter_mut().zip(kj) {
+                            *dq += dsv * kv;
+                        }
+                        let dkj = &mut dks[j * dh..(j + 1) * dh];
+                        for (dk_, &qv) in dkj.iter_mut().zip(qi) {
+                            *dk_ += dsv * qv;
+                        }
+                        let pj = pirow[j];
+                        let dvj = &mut dvs[j * dh..(j + 1) * dh];
+                        for (dv_, &dov) in dvj.iter_mut().zip(doi) {
+                            *dv_ += pj * dov;
+                        }
+                    }
+                }
+                j0 += jb;
+            }
+            i0 += rb;
+        }
+    });
+}
+
+/// Reference/test entry: softmax-attention backward over one stripe.
+/// `q`/`k`/`v`/`dout`: `(n, dh)` token rows; `probs`: `(n, n)` softmax
+/// rows (zero above the diagonal when `causal`). Returns
+/// `(dq, dk, dv)`. `tiled` selects the stripe-blocked production
+/// kernel; `false` runs the row-streamed reference oracle.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_backward(q: &[f32], k: &[f32], v: &[f32], probs: &[f32],
+                          dout: &[f32], n: usize, dh: usize, causal: bool,
+                          tiled: bool) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    assert_eq!(q.len(), n * dh);
+    assert_eq!(k.len(), n * dh);
+    assert_eq!(v.len(), n * dh);
+    assert_eq!(probs.len(), n * n);
+    assert_eq!(dout.len(), n * dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dq = vec![0.0f32; n * dh];
+    let mut dk = vec![0.0f32; n * dh];
+    let mut dv = vec![0.0f32; n * dh];
+    if tiled {
+        attn_bwd_stripe_panels(q, k, v, probs, dout, n, dh, scale, causal,
+                               &mut dq, &mut dk, &mut dv);
+    } else {
+        attn_bwd_stripe_rows(q, k, v, probs, dout, n, dh, scale, causal,
+                             &mut dq, &mut dk, &mut dv);
+    }
+    (dq, dk, dv)
+}
+
+// ---------------------------------------------------------------------------
 // configuration
 // ---------------------------------------------------------------------------
 
@@ -565,7 +1094,7 @@ pub enum TaskKind {
 }
 
 /// Shape + mechanism of one trainable native model.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TrainConfig {
     pub d_model: usize,
     pub n_heads: usize,
@@ -1186,13 +1715,14 @@ fn mixer_fwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
                     let f2 = plan2.spectrum_len();
                     pool::run(tasks, 16 * n * log_term * dh, |(si, os)| {
                         arena::with_task_arena(|ta| {
-                            let [pad, row2, zre, zim, vre, vim, scratch] =
-                                ta.frame([2 * n, 2 * n, f2, f2, f2, f2,
+                            let [pad2, out2, zre, zim, vre, vim, scratch] =
+                                ta.frame([2 * n * dh, 2 * n * dh, f2, f2,
+                                          dh * f2, dh * f2,
                                           plan2.scratch_len()]);
-                            causal_fwd_stripe(
+                            causal_fwd_stripe_batched(
                                 &plan2, &p[si * n..(si + 1) * n],
                                 &vt[si * dh * n..(si + 1) * dh * n], dh,
-                                os, pad, zre, zim, vre, vim, row2,
+                                os, pad2, zre, zim, vre, vim, out2,
                                 scratch);
                         });
                     });
@@ -1534,6 +2064,7 @@ fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
             let p = &lc.p;
             let vt = &lc.vt;
             let dout_s = &*tmp3;
+            let naive = naive_backward();
             let log_term = n.trailing_zeros() as usize + 1;
             let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp1
                 .chunks_mut(dh * n)
@@ -1558,6 +2089,11 @@ fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
                                 dh, dps, dvs, zre, zim, vre, vim, gre,
                                 gim, are, aim, scratch);
                         });
+                        if !naive {
+                            // fused: the p row is still cache-hot
+                            softmax_bwd_in_place(
+                                &p[si * n..(si + 1) * n], dps);
+                        }
                     });
                 }
                 Mixer::CatFft => {
@@ -1565,19 +2101,40 @@ fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
                     let f2 = plan2.spectrum_len();
                     pool::run(tasks, 24 * n * log_term * dh,
                               |((si, dvs), dps)| {
-                        arena::with_task_arena(|ta| {
-                            let [pad, row2, zre, zim, vre, vim, gre, gim,
-                                 tre, tim, are, aim, scratch] = ta.frame(
-                                [2 * n, 2 * n, f2, f2, f2, f2, f2, f2, f2,
-                                 f2, f2, f2, plan2.scratch_len()]);
-                            causal_bwd_stripe(
-                                &plan2, &p[si * n..(si + 1) * n],
-                                &vt[si * dh * n..(si + 1) * dh * n],
-                                &dout_s[si * dh * n..(si + 1) * dh * n],
-                                dh, dps, dvs, pad, zre, zim, vre, vim,
-                                gre, gim, tre, tim, are, aim, row2,
-                                scratch);
-                        });
+                        if naive {
+                            arena::with_task_arena(|ta| {
+                                let [pad, row2, zre, zim, vre, vim, gre,
+                                     gim, tre, tim, are, aim, scratch] =
+                                    ta.frame(
+                                    [2 * n, 2 * n, f2, f2, f2, f2, f2,
+                                     f2, f2, f2, f2, f2,
+                                     plan2.scratch_len()]);
+                                causal_bwd_stripe(
+                                    &plan2, &p[si * n..(si + 1) * n],
+                                    &vt[si * dh * n..(si + 1) * dh * n],
+                                    &dout_s[si * dh * n..(si + 1) * dh * n],
+                                    dh, dps, dvs, pad, zre, zim, vre,
+                                    vim, gre, gim, tre, tim, are, aim,
+                                    row2, scratch);
+                            });
+                        } else {
+                            arena::with_task_arena(|ta| {
+                                let [pad2, out2, zre, zim, vre, vim, gre,
+                                     gim, are, aim, scratch] = ta.frame(
+                                    [2 * n * dh, 2 * n * dh, f2, f2,
+                                     dh * f2, dh * f2, dh * f2, dh * f2,
+                                     f2, f2, plan2.scratch_len()]);
+                                causal_bwd_stripe_batched(
+                                    &plan2, &p[si * n..(si + 1) * n],
+                                    &vt[si * dh * n..(si + 1) * dh * n],
+                                    &dout_s[si * dh * n..(si + 1) * dh * n],
+                                    dh, dps, dvs, pad2, zre, zim, vre,
+                                    vim, gre, gim, are, aim, out2,
+                                    scratch);
+                            });
+                            softmax_bwd_in_place(
+                                &p[si * n..(si + 1) * n], dps);
+                        }
                     });
                 }
                 Mixer::CatGather => {
@@ -1607,6 +2164,9 @@ fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
                             }
                             *slot = acc;
                         }
+                        if !naive {
+                            softmax_bwd_in_place(prow, dps);
+                        }
                     });
                 }
                 Mixer::Attention => bail!("mixer/params mismatch"),
@@ -1614,9 +2174,12 @@ fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
             from_stripes(tmp1, b, n, h, dh, tmp3); // dV in (b, n, d)
             matmul_xt_acc(&lc.xn1, bn, d, tmp3, d, gw_v);
             matmul_wt(tmp3, bn, d, w_v, d, dxn, false);
-            for (prow, dprow) in
-                lc.p.chunks_exact(n).zip(zs.chunks_exact_mut(n)) {
-                softmax_bwd_in_place(prow, dprow);
+            if naive {
+                // reference path: separate softmax-backward sweep
+                for (prow, dprow) in
+                    lc.p.chunks_exact(n).zip(zs.chunks_exact_mut(n)) {
+                    softmax_bwd_in_place(prow, dprow);
+                }
             }
             for bi in 0..b {
                 for head in 0..h {
@@ -1647,52 +2210,20 @@ fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
                 .zip(dkh.chunks_mut(n * dh))
                 .zip(dvh.chunks_mut(n * dh))
                 .collect();
+            let naive = naive_backward();
             pool::run(tasks, 6 * n * n * dh, |(((si, dqs), dks), dvs)| {
                 let q = &qh[si * n * dh..(si + 1) * n * dh];
                 let k = &kh[si * n * dh..(si + 1) * n * dh];
                 let v = &vh[si * n * dh..(si + 1) * n * dh];
                 let ps = &probs[si * n * n..(si + 1) * n * n];
                 let dost = &dos[si * n * dh..(si + 1) * n * dh];
-                dks.fill(0.0);
-                dvs.fill(0.0);
-                arena::with_task_arena(|ta| {
-                    let [dprow] = ta.frame([n]);
-                    for i in 0..n {
-                        let lim = if causal { i + 1 } else { n };
-                        let doi = &dost[i * dh..(i + 1) * dh];
-                        let pi = &ps[i * n..(i + 1) * n];
-                        let mut dsum = 0.0f32;
-                        for (j, slot) in
-                            dprow.iter_mut().take(lim).enumerate() {
-                            let vj = &v[j * dh..(j + 1) * dh];
-                            let mut dot = 0.0f32;
-                            for (a, bb) in doi.iter().zip(vj) {
-                                dot += a * bb;
-                            }
-                            *slot = dot;
-                            dsum += dot * pi[j];
-                        }
-                        let qi = &q[i * dh..(i + 1) * dh];
-                        let dqi = &mut dqs[i * dh..(i + 1) * dh];
-                        dqi.fill(0.0);
-                        for j in 0..lim {
-                            let pj = pi[j];
-                            let ds = pj * (dprow[j] - dsum) * scale;
-                            let kj = &k[j * dh..(j + 1) * dh];
-                            for (dq, &kv) in dqi.iter_mut().zip(kj) {
-                                *dq += ds * kv;
-                            }
-                            let dkj = &mut dks[j * dh..(j + 1) * dh];
-                            for (dk_, &qv) in dkj.iter_mut().zip(qi) {
-                                *dk_ += ds * qv;
-                            }
-                            let dvj = &mut dvs[j * dh..(j + 1) * dh];
-                            for (dv_, &dov) in dvj.iter_mut().zip(doi) {
-                                *dv_ += pj * dov;
-                            }
-                        }
-                    }
-                });
+                if naive {
+                    attn_bwd_stripe_rows(q, k, v, ps, dost, n, dh, scale,
+                                         causal, dqs, dks, dvs);
+                } else {
+                    attn_bwd_stripe_panels(q, k, v, ps, dost, n, dh, scale,
+                                           causal, dqs, dks, dvs);
+                }
             });
             from_head_rows(dqh, b, n, h, dh, tmp1);
             matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_q);
@@ -1781,6 +2312,17 @@ impl TrainModel {
             .into_iter()
             .zip(grads.tensors_mut())
             .map(|((_, p, decay), (_, g, _))| (p, g, decay))
+            .collect()
+    }
+
+    /// `(name, tensor)` pairs in the fixed visitor order — the
+    /// checkpoint serializer's contract (`train::NativeTrainer::
+    /// save_checkpoint`).
+    pub fn tensors_for_io(&mut self) -> Vec<(&'static str, &mut Vec<f32>)> {
+        self.params
+            .tensors_mut()
+            .into_iter()
+            .map(|(name, t, _)| (name, t))
             .collect()
     }
 
@@ -2044,5 +2586,118 @@ mod tests {
         assert_eq!(cat_mix, 2 * (d + h) * d); // two layers
         assert_eq!(attn_mix, 2 * 3 * d * d);
         assert!(cat.param_count() < attn.param_count());
+    }
+
+    #[test]
+    fn batched_causal_stripes_bit_match_per_row_reference() {
+        for (n, dh) in [(4usize, 1usize), (8, 3), (16, 4), (32, 2)] {
+            let p = softmax_vec(n, 21);
+            let v = randv(dh * n, 22);
+            let dout = randv(dh * n, 23);
+            assert_eq!(causal_corr_forward(&p, &v, dh),
+                       causal_corr_forward_batched(&p, &v, dh),
+                       "n={n} dh={dh} forward");
+            assert_eq!(causal_corr_backward(&p, &v, &dout, dh),
+                       causal_corr_backward_batched(&p, &v, &dout, dh),
+                       "n={n} dh={dh} backward");
+        }
+    }
+
+    #[test]
+    fn panel_attention_backward_bit_matches_row_reference() {
+        for (n, dh, causal) in
+            [(7usize, 3usize, false), (33, 5, true), (64, 16, false),
+             (97, 8, true)] {
+            let q = randv(n * dh, 31);
+            let k = randv(n * dh, 32);
+            let v = randv(n * dh, 33);
+            let dout = randv(n * dh, 34);
+            // softmax probe rows exactly as the forward caches them
+            let scale = 1.0 / (dh as f32).sqrt();
+            let mut probs = vec![0.0f32; n * n];
+            for i in 0..n {
+                let lim = if causal { i + 1 } else { n };
+                let prow = &mut probs[i * n..(i + 1) * n];
+                for (j, slot) in prow.iter_mut().take(lim).enumerate() {
+                    let mut dot = 0.0f32;
+                    for c in 0..dh {
+                        dot += q[i * dh + c] * k[j * dh + c];
+                    }
+                    *slot = dot * scale;
+                }
+                softmax_in_place(&mut prow[..lim]);
+                prow[lim..].fill(0.0);
+            }
+            let tiled = attention_backward(&q, &k, &v, &probs, &dout, n,
+                                           dh, causal, true);
+            let rows = attention_backward(&q, &k, &v, &probs, &dout, n,
+                                          dh, causal, false);
+            assert_eq!(tiled, rows, "n={n} dh={dh} causal={causal}");
+        }
+    }
+
+    #[test]
+    fn tiled_xt_matches_naive_on_both_strategies() {
+        // (rows, inner, cols) spanning: serial tiled, k-parallel (wide),
+        // and the narrow row-block partial strategy
+        for (rows, inner, cols, tol) in [
+            (37usize, 5usize, 9usize, 0.0f32),   // serial: bit-identical
+            (300, 96, 96, 0.0),                  // k-parallel: bit-identical
+            (3000, 48, 32, 1e-4),                // partials: 2-level tree
+        ] {
+            let x = randv(rows * inner, 41);
+            let dy = randv(rows * cols, 42);
+            let mut want = randv(inner * cols, 43); // accumulate semantics
+            let mut got = want.clone();
+            matmul_xt_acc_naive(&x, rows, inner, &dy, cols, &mut want);
+            matmul_xt_acc(&x, rows, inner, &dy, cols, &mut got);
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                let bound = tol * a.abs().max(b.abs()).max(1.0);
+                assert!((a - b).abs() <= bound,
+                        "rows={rows} inner={inner} cols={cols} \
+                         elem {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_colsum_matches_naive() {
+        let (rows, cols) = (2048usize, 600usize);
+        let dy = randv(rows * cols, 51);
+        let mut want = vec![0.5f32; cols];
+        let mut got = want.clone();
+        colsum_acc_naive(&dy, cols, &mut want);
+        colsum_acc(&dy, cols, &mut got);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(b.abs()).max(1.0),
+                    "col {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn tiled_reductions_are_pool_width_invariant() {
+        // the 2-level partial trees must not depend on how chunks land
+        // on workers: forced-inline vs fanned-out runs are bit-identical
+        let (rows, inner, cols) = (3000usize, 48usize, 64usize);
+        let x = randv(rows * inner, 61);
+        let dy = randv(rows * cols, 62);
+        // big enough that colsum_acc takes its parallel-partials path
+        let (crows, ccols) = (2048usize, 600usize);
+        let dy2 = randv(crows * ccols, 63);
+        let run = |inline: bool| -> (Vec<f32>, Vec<f32>) {
+            if inline {
+                pool::set_force_inline(true);
+            }
+            let mut dw = vec![0.0f32; inner * cols];
+            matmul_xt_acc(&x, rows, inner, &dy, cols, &mut dw);
+            let mut db = vec![0.0f32; ccols];
+            colsum_acc(&dy2, ccols, &mut db);
+            if inline {
+                pool::set_force_inline(false);
+            }
+            (dw, db)
+        };
+        assert_eq!(run(false), run(true),
+                   "pool width changed the tiled reduction results");
     }
 }

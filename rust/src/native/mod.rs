@@ -33,8 +33,12 @@ pub mod fft;
 pub mod optim;
 pub mod pool;
 
-pub use autograd::{causal_corr_backward, causal_corr_forward,
-                   corr_backward, corr_forward, EvalOut, Mixer, TaskKind,
+pub use autograd::{attention_backward, causal_corr_backward,
+                   causal_corr_backward_batched, causal_corr_forward,
+                   causal_corr_forward_batched, colsum_acc,
+                   colsum_acc_naive, corr_backward, corr_forward,
+                   matmul_xt_acc, matmul_xt_acc_naive, naive_backward,
+                   set_naive_backward, EvalOut, Mixer, TaskKind,
                    TrainBatch, TrainConfig, TrainModel};
 pub use cat::{matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
               NativeCatModel, NativeVitConfig};

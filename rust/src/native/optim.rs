@@ -49,6 +49,25 @@ impl AdamW {
         self.step
     }
 
+    /// Optimizer-state snapshot for checkpointing: `(step, m, v)` in the
+    /// flat visitor-order layout (empty before the first step).
+    pub fn state(&self) -> (u64, &[f32], &[f32]) {
+        (self.step, &self.m, &self.v)
+    }
+
+    /// Restore a snapshot captured by [`Self::state`]. The moment
+    /// vectors must agree with each other; the next [`Self::step`] call
+    /// still validates them against the model's parameter count.
+    pub fn restore(&mut self, step: u64, m: Vec<f32>, v: Vec<f32>)
+                   -> Result<()> {
+        ensure!(m.len() == v.len(),
+                "moment vectors disagree: m {} vs v {}", m.len(), v.len());
+        self.step = step;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
+
     /// One update over `(param, grad, decays)` tensors in the model's
     /// fixed visitor order. Returns the pre-clip global gradient norm.
     /// The first call sizes the moment vectors; later calls must pass

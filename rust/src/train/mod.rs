@@ -19,7 +19,10 @@ pub mod schedule;
 
 pub use schedule::Schedule;
 
+use std::path::Path;
 use std::time::Instant;
+
+use anyhow::{bail, ensure};
 
 use crate::data::{ShapeDataset, TextCorpus};
 use crate::metrics::LossCurve;
@@ -44,6 +47,12 @@ use crate::tensor::HostTensor;
 pub struct TrainOptions {
     pub steps: u64,
     pub schedule: Schedule,
+    /// Schedule offset: step `i` of this run is fed to the schedule as
+    /// `start_step + i`. A resumed run passes the checkpoint's optimizer
+    /// step here (with a schedule planned over the combined total) so
+    /// the LR sequence enters mid-schedule instead of restarting from
+    /// step zero (`cat train --resume`).
+    pub start_step: u64,
     pub seed: u64,
     pub eval_every: u64,
     pub eval_batches: u64,
@@ -57,6 +66,7 @@ impl Default for TrainOptions {
         Self {
             steps: 200,
             schedule: Schedule::new(1e-3, 20, 200),
+            start_step: 0,
             seed: 0,
             eval_every: 0,
             eval_batches: 8,
@@ -118,7 +128,7 @@ pub fn run_training(backend: &mut dyn TrainBackend, opts: &TrainOptions)
     let mut diverged_at = None;
     let mut done = 0;
     for step in 0..opts.steps {
-        let lr = opts.schedule.lr(step);
+        let lr = opts.schedule.lr(opts.start_step + step);
         let loss = backend.train_step(lr)?;
         curve.push(step, loss);
         done = step + 1;
@@ -176,6 +186,7 @@ pub struct NativeTrainer {
     opt: AdamW,
     data: NativeData,
     cursor: u64,
+    seed: u64,
     mask_prob: f64,
     /// Reusable batch container: the ViT path refills its image/label
     /// buffers in place every step (`ShapeDataset::fill_batch` clears +
@@ -210,6 +221,7 @@ impl NativeTrainer {
             opt: AdamW::new(),
             data,
             cursor: 0,
+            seed,
             mask_prob: 0.15,
             batch,
         })
@@ -227,6 +239,13 @@ impl NativeTrainer {
 
     pub fn model(&self) -> &TrainModel {
         &self.model
+    }
+
+    /// Optimizer steps taken so far (continues across checkpoint
+    /// resume — the CLI feeds this to `TrainOptions::start_step` so a
+    /// resumed run picks the LR schedule up where it left off).
+    pub fn opt_steps(&self) -> u64 {
+        self.opt.steps()
     }
 
     pub fn param_count(&self) -> usize {
@@ -294,6 +313,194 @@ impl TrainBackend for NativeTrainer {
             anyhow::ensure!(weight > 0.0, "no weighted eval tokens");
             Ok(("ppl", (nll / weight).exp()))
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// native checkpoints (plain little-endian, hermetic — DESIGN.md §9)
+// ---------------------------------------------------------------------------
+//
+// Layout (all integers u64 LE, all tensors f32 LE):
+//
+//   magic "CATCKPT1" | seed | cursor | config fingerprint (11 words) |
+//   opt step | n_tensors | per tensor: name_len + name bytes + len +
+//   len·f32 | m: len + len·f32 | v: len + len·f32
+//
+// The fingerprint + seed + tensor names make resume-into-the-wrong-model
+// a hard error instead of silent drift; cursor + moments + step make the
+// resumed loss sequence bit-identical to the uninterrupted run.
+
+/// Magic + version tag of the native checkpoint format.
+const CKPT_MAGIC: &[u8; 8] = b"CATCKPT1";
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(buf, xs.len() as u64);
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian reader over a checkpoint byte buffer.
+struct CkptReader<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> CkptReader<'a> {
+    /// Checked take: corrupt length words (including ones that would
+    /// overflow `off + n`) come back as errors, never as panics.
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.off.checked_add(n);
+        ensure!(end.is_some_and(|e| e <= self.buf.len()),
+                "checkpoint truncated at byte {} (wanted {n} more)",
+                self.off);
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let len = self.u64()?;
+        let bytes = usize::try_from(len)
+            .ok()
+            .and_then(|l| l.checked_mul(4));
+        let Some(bytes) = bytes else {
+            anyhow::bail!("corrupt checkpoint: tensor length {len} \
+                           overflows");
+        };
+        let b = self.take(bytes)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect())
+    }
+}
+
+/// Encode a [`TrainConfig`] as a fixed word sequence for the checkpoint
+/// header; any structural mismatch fails resume loudly.
+fn config_fingerprint(cfg: &TrainConfig) -> [u64; 11] {
+    let mixer = match cfg.mixer {
+        Mixer::CatFft => 0u64,
+        Mixer::CatGather => 1,
+        Mixer::Attention => 2,
+    };
+    let (tag, t0, t1, t2, t3) = match cfg.task {
+        TaskKind::Vit { image_size, patch_size, n_channels, n_classes } => {
+            (0u64, image_size as u64, patch_size as u64, n_channels as u64,
+             n_classes as u64)
+        }
+        TaskKind::Lm { vocab, seq_len, causal } => {
+            (1u64, vocab as u64, seq_len as u64, causal as u64, 0)
+        }
+    };
+    [cfg.d_model as u64, cfg.n_heads as u64, cfg.n_layers as u64,
+     cfg.batch_size as u64, mixer, cfg.alternate as u64, tag, t0, t1, t2,
+     t3]
+}
+
+impl NativeTrainer {
+    /// Current position in the deterministic training stream.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Serialize the full training state — parameters, AdamW moments and
+    /// step count, and the data-stream cursor — to `path` in the plain
+    /// little-endian native checkpoint format. A trainer restored with
+    /// [`Self::load_checkpoint`] continues with bit-identical losses.
+    pub fn save_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(CKPT_MAGIC);
+        put_u64(&mut buf, self.seed);
+        put_u64(&mut buf, self.cursor);
+        for w in config_fingerprint(self.model.cfg()) {
+            put_u64(&mut buf, w);
+        }
+        put_u64(&mut buf, self.opt.steps());
+        let tensors = self.model.tensors_for_io();
+        put_u64(&mut buf, tensors.len() as u64);
+        for (name, t) in &tensors {
+            put_u64(&mut buf, name.len() as u64);
+            buf.extend_from_slice(name.as_bytes());
+            put_f32s(&mut buf, t);
+        }
+        drop(tensors);
+        let (_, m, v) = self.opt.state();
+        put_f32s(&mut buf, m);
+        put_f32s(&mut buf, v);
+        std::fs::write(path, &buf).map_err(|e| {
+            anyhow::anyhow!("writing checkpoint {}: {e}", path.display())
+        })?;
+        Ok(())
+    }
+
+    /// Restore state saved by [`Self::save_checkpoint`]. The trainer
+    /// must have been built with the same `(config, seed)` — any
+    /// mismatch (shape, mixer, task, seed, tensor order) is an error.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<()> {
+        let raw = std::fs::read(path).map_err(|e| {
+            anyhow::anyhow!("reading checkpoint {}: {e}", path.display())
+        })?;
+        let mut r = CkptReader { buf: &raw, off: 0 };
+        ensure!(r.take(8)? == CKPT_MAGIC,
+                "{} is not a native CAT checkpoint", path.display());
+        let seed = r.u64()?;
+        ensure!(seed == self.seed,
+                "checkpoint was trained with seed {seed}, trainer uses {}",
+                self.seed);
+        let cursor = r.u64()?;
+        let want = config_fingerprint(self.model.cfg());
+        for (i, &w) in want.iter().enumerate() {
+            let got = r.u64()?;
+            ensure!(got == w,
+                    "checkpoint config mismatch at field {i}: {got} vs {w}");
+        }
+        let step = r.u64()?;
+        let n_tensors = r.u64()? as usize;
+        // parse + validate the whole payload into locals first, so an
+        // error (truncation, corrupt lengths) leaves the trainer
+        // untouched instead of half-restored
+        let infos = self.model.tensor_infos();
+        ensure!(n_tensors == infos.len(),
+                "checkpoint holds {n_tensors} tensors, model has {}",
+                infos.len());
+        let mut loaded: Vec<Vec<f32>> = Vec::with_capacity(infos.len());
+        for (name, len) in &infos {
+            let nl = r.u64()? as usize;
+            let nb = r.take(nl)?;
+            if nb != name.as_bytes() {
+                bail!("tensor order mismatch: checkpoint has {:?}, model \
+                       expects {name}", String::from_utf8_lossy(nb));
+            }
+            let data = r.f32s()?;
+            ensure!(data.len() == *len,
+                    "tensor {name}: checkpoint len {} vs model {len}",
+                    data.len());
+            loaded.push(data);
+        }
+        let m = r.f32s()?;
+        let v = r.f32s()?;
+        ensure!(r.off == raw.len(),
+                "{} trailing bytes after checkpoint payload",
+                raw.len() - r.off);
+        ensure!(m.len() == v.len(),
+                "moment vectors disagree: m {} vs v {}", m.len(), v.len());
+        // fully validated — commit atomically
+        let mut tensors = self.model.tensors_for_io();
+        for ((_, t), data) in tensors.iter_mut().zip(loaded) {
+            **t = data;
+        }
+        self.opt.restore(step, m, v)?;
+        self.cursor = cursor;
+        Ok(())
     }
 }
 
@@ -606,5 +813,40 @@ mod tests {
         let (k, v) = t.evaluate(1).unwrap();
         assert_eq!(k, "ppl");
         assert!(v.is_finite() && v > 1.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_bit_identically() {
+        let path = std::env::temp_dir()
+            .join(format!("cat_ckpt_test_{}.bin", std::process::id()));
+        // 3 steps, save, one more step → the resumed trainer must
+        // reproduce that next-step loss exactly (params + moments +
+        // step + cursor all round-trip)
+        let mut a = NativeTrainer::new("native_tiny", 3).unwrap();
+        for _ in 0..3 {
+            a.train_step(1e-3).unwrap();
+        }
+        a.save_checkpoint(&path).unwrap();
+        assert_eq!(a.cursor(), 3 * a.model.cfg().batch_size as u64);
+        let la = a.train_step(1e-3).unwrap();
+
+        let mut b = NativeTrainer::new("native_tiny", 3).unwrap();
+        b.load_checkpoint(&path).unwrap();
+        assert_eq!(b.cursor(), a.cursor() - a.model.cfg().batch_size as u64);
+        let lb = b.train_step(1e-3).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(),
+                   "resumed step loss diverged: {la} vs {lb}");
+        // and the run stays locked in step after that
+        let la2 = a.train_step(1e-3).unwrap();
+        let lb2 = b.train_step(1e-3).unwrap();
+        assert_eq!(la2.to_bits(), lb2.to_bits());
+
+        // wrong seed and wrong config both refuse to resume
+        let mut c = NativeTrainer::new("native_tiny", 4).unwrap();
+        assert!(c.load_checkpoint(&path).is_err(), "seed mismatch accepted");
+        let mut d = NativeTrainer::new("native_vit_cat", 3).unwrap();
+        assert!(d.load_checkpoint(&path).is_err(),
+                "config mismatch accepted");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -5,12 +5,15 @@
 //! complexity crossover.
 //!
 //! Timing-sensitive tests are median-of-5 and skip entirely under
-//! `CAT_SKIP_TIMING=1` so a loaded CI machine cannot fail them spuriously.
+//! `CAT_SKIP_TIMING` (any non-empty value other than `0`/`false` — the
+//! shared [`cat::bench::skip_timing`] helper) so a loaded CI machine
+//! cannot fail them spuriously.
 
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use cat::bench::skip_timing;
 use cat::complexity::crossover_n;
 use cat::coordinator::{ServeOptions, Server};
 use cat::data::Rng;
@@ -19,11 +22,6 @@ use cat::native::{plan_cache_stats, pool, rfft_plan, split_rfft_plan,
                   NativeVitConfig};
 use cat::runtime::Backend;
 use cat::tensor::HostTensor;
-
-/// `CAT_SKIP_TIMING=1` disables the wallclock-sensitive assertions.
-fn skip_timing() -> bool {
-    std::env::var("CAT_SKIP_TIMING").map(|v| v == "1").unwrap_or(false)
-}
 
 #[test]
 fn native_server_serves_without_artifacts() {
@@ -307,43 +305,53 @@ fn measured_crossover_within_6x_of_model() {
 
 #[test]
 fn native_training_loss_curves_are_pool_width_invariant() {
-    // the training determinism contract (DESIGN.md §8): every parallel
-    // section in forward/backward writes disjoint outputs with per-task
-    // fixed-order accumulation, so the loss curve is bit-identical
-    // whether sections fan out across the pool or run inline on one
-    // thread — and across same-seed repeat runs.
+    // the training determinism contract (DESIGN.md §8/§9): every
+    // parallel section in forward/backward writes disjoint outputs with
+    // fixed-order accumulation (including the tiled xᵀ·dy / colsum
+    // partial trees, the fused softmax backward, the batched causal
+    // stripes and the panel attention backward), so the loss curve is
+    // bit-identical whether sections fan out across the pool or run
+    // inline on one thread — and across same-seed repeat runs. The
+    // config grid covers every tiled backward path: CAT-FFT (vit),
+    // softmax attention, and the zero-padded causal CAT.
     use cat::train::{run_training, NativeTrainer, Schedule, TrainOptions};
 
-    let opts = TrainOptions {
-        steps: 8,
-        schedule: Schedule::new(1e-3, 2, 8),
-        seed: 5,
-        eval_every: 0,
-        eval_batches: 1,
-        log_every: 0,
-        stop_on_divergence: true,
-    };
-    // native_vit_cat is large enough (b·n·d = 64k, matmuls over 4M FLOPs)
-    // that its sections genuinely fan out when not forced inline
-    let run = |serial: bool| -> Vec<f32> {
-        if serial {
-            pool::set_force_inline(true);
-        }
-        let mut t = NativeTrainer::new("native_vit_cat", 5)
-            .expect("trainer");
-        let r = run_training(&mut t, &opts).expect("train");
-        if serial {
-            pool::set_force_inline(false);
-        }
-        r.curve.losses
-    };
-    let pooled_a = run(false);
-    let pooled_b = run(false);
-    let serial = run(true);
-    assert!(pooled_a.iter().all(|l| l.is_finite()));
-    assert_eq!(pooled_a, pooled_b,
-               "same-seed training runs produced different loss curves");
-    assert_eq!(pooled_a, serial,
-               "pool width changed the loss curve: fanned-out vs forced-\
-                inline runs must be bit-identical");
+    for (config, steps) in [("native_vit_cat", 8u64),
+                            ("native_vit_attention", 4),
+                            ("native_lm_causal_cat", 4)] {
+        let opts = TrainOptions {
+            steps,
+            schedule: Schedule::new(1e-3, 2, steps),
+            seed: 5,
+            eval_every: 0,
+            eval_batches: 1,
+            log_every: 0,
+            ..Default::default()
+        };
+        // the configs are large enough (b·n·d = 64k, matmuls over 4M
+        // FLOPs) that their sections genuinely fan out when not forced
+        // inline
+        let run = |serial: bool| -> Vec<f32> {
+            if serial {
+                pool::set_force_inline(true);
+            }
+            let mut t = NativeTrainer::new(config, 5).expect("trainer");
+            let r = run_training(&mut t, &opts).expect("train");
+            if serial {
+                pool::set_force_inline(false);
+            }
+            r.curve.losses
+        };
+        let pooled_a = run(false);
+        let pooled_b = run(false);
+        let serial = run(true);
+        assert!(pooled_a.iter().all(|l| l.is_finite()), "{config}");
+        assert_eq!(pooled_a, pooled_b,
+                   "{config}: same-seed training runs produced different \
+                    loss curves");
+        assert_eq!(pooled_a, serial,
+                   "{config}: pool width changed the loss curve — \
+                    fanned-out vs forced-inline runs must be \
+                    bit-identical");
+    }
 }

@@ -70,6 +70,14 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Should we flush now? (Does not pop.)
+    ///
+    /// The deadline is **inclusive**: a poll landing exactly on
+    /// `oldest.enqueued + max_delay` emits. The `>=` below is
+    /// load-bearing — with a strict `>`, the boundary instant would
+    /// return `Wait(0)`, and the server loop's `recv_timeout(0)` would
+    /// spin on the same instant instead of flushing
+    /// (`deadline_exact_boundary_flushes_not_waits` pins this). A
+    /// returned `Wait(d)` therefore always has `d > 0`.
     pub fn poll(&self, now: Instant) -> Flush {
         let Some(oldest) = self.queue.front() else {
             return Flush::Idle;
@@ -131,6 +139,35 @@ mod tests {
         }
         let later = Instant::now() + Duration::from_millis(6);
         assert_eq!(b.poll(later), Flush::Emit(1));
+    }
+
+    #[test]
+    fn deadline_exact_boundary_flushes_not_waits() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(5));
+        b.push(1u8);
+        let enq = b.queue.front().expect("just pushed").enqueued;
+        // exactly on the deadline: must emit — a zero-duration Wait here
+        // would make the serving loop recv_timeout(0) against the same
+        // instant forever
+        assert_eq!(b.poll(enq + Duration::from_millis(5)), Flush::Emit(1));
+        // past the deadline: still emits
+        assert_eq!(b.poll(enq + Duration::from_millis(6)), Flush::Emit(1));
+        // one tick before: waits, and the wait is strictly positive
+        let just_before =
+            enq + Duration::from_millis(5) - Duration::from_nanos(1);
+        match b.poll(just_before) {
+            Flush::Wait(d) => assert!(d > Duration::ZERO,
+                                      "zero-duration wait would spin"),
+            other => panic!("expected Wait just before deadline, got \
+                             {other:?}"),
+        }
+        // a clock reading from before the enqueue saturates to a full wait
+        // (Instant::duration_since clamps negative spans to zero)
+        match b.poll(enq - Duration::from_nanos(1)) {
+            Flush::Wait(d) => assert_eq!(d, Duration::from_millis(5)),
+            other => panic!("expected full Wait before enqueue time, got \
+                             {other:?}"),
+        }
     }
 
     #[test]

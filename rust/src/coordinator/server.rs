@@ -493,6 +493,17 @@ fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
         .map(|p| &p.payload.input)
         .collect::<Vec<_>>());
     match result {
+        // an executor returning the wrong row count is a bug, but zip()
+        // would hide it: the unmatched clients' response senders were
+        // silently dropped and they saw a bare "worker dropped request"
+        // with no cause. Turn it into an explicit error for everyone.
+        Ok(rows) if rows.len() != pending.len() => {
+            let msg = format!("executor returned {} rows for a batch of {}",
+                              rows.len(), pending.len());
+            for p in pending {
+                let _ = p.payload.resp.send(Err(anyhow!("{msg}")));
+            }
+        }
         Ok(rows) => {
             for (p, row) in pending.into_iter().zip(rows) {
                 latency.record(p.payload.enqueued.elapsed());
@@ -539,6 +550,28 @@ mod tests {
         assert_eq!(rows[0].as_f32().unwrap(), &[1.0, 2.0]);
         assert_eq!(rows[1].as_f32().unwrap(), &[3.0, 4.0]);
         assert!(split_rows(&t, 4).is_err());
+    }
+
+    #[test]
+    fn split_rows_error_paths() {
+        // asking for more rows than the batch holds
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]).unwrap();
+        assert!(split_rows(&t, 3).is_err());
+        // rank-0 tensor: no batch dimension to split
+        let scalar = HostTensor::scalar_f32(1.0);
+        assert!(split_rows(&scalar, 1).is_err());
+        // non-f32 logits are rejected, not transmuted
+        let ints = HostTensor::i32(vec![2, 2], vec![1, 2, 3, 4]).unwrap();
+        assert!(split_rows(&ints, 1).is_err());
+        // empty batch: n = 0 is fine (no rows), n > 0 is not
+        let empty = HostTensor::f32(vec![0, 4], vec![]).unwrap();
+        assert_eq!(split_rows(&empty, 0).unwrap().len(), 0);
+        assert!(split_rows(&empty, 1).is_err());
+        // rank-1 batch degenerates to scalar rows
+        let flat = HostTensor::f32(vec![3], vec![7.0, 8.0, 9.0]).unwrap();
+        let rows = split_rows(&flat, 2).unwrap();
+        assert_eq!(rows[1].as_f32().unwrap(), &[8.0]);
+        assert_eq!(rows[1].shape, Vec::<usize>::new());
     }
 
     #[test]

@@ -3,6 +3,9 @@
 //! across runs and platforms — the property every experiment in
 //! EXPERIMENTS.md relies on.
 
+use crate::Result;
+use anyhow::ensure;
+
 /// SplitMix64: tiny, fast, passes BigCrush as a 64-bit mixer.
 #[derive(Debug, Clone)]
 pub struct Rng {
@@ -65,23 +68,46 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Infallible constructor for in-tree literal parameters. Panics (with
+    /// the [`Zipf::try_new`] error) on invalid `(n, s)` — use `try_new`
+    /// for anything user- or data-derived.
     pub fn new(n: usize, s: f64) -> Self {
+        Self::try_new(n, s).expect("valid Zipf parameters")
+    }
+
+    /// Build the CDF, rejecting any parameterization whose weights are not
+    /// strictly positive and finite. Without this, a degenerate `s` (e.g.
+    /// a large negative exponent underflowing `k^s` to 0) produced
+    /// `inf/inf = NaN` CDF entries, and `sample`'s comparator `unwrap`
+    /// aborted the process at the first draw instead of erroring here.
+    pub fn try_new(n: usize, s: f64) -> Result<Self> {
+        ensure!(n > 0, "Zipf needs a non-empty support, got n=0");
+        ensure!(s.is_finite(), "Zipf exponent must be finite, got s={s}");
         let mut cdf = Vec::with_capacity(n);
-        let mut acc = 0.0;
+        let mut acc = 0.0f64;
         for k in 1..=n {
-            acc += 1.0 / (k as f64).powf(s);
+            let w = 1.0 / (k as f64).powf(s);
+            ensure!(w.is_finite() && w > 0.0,
+                    "Zipf weight 1/{k}^{s} = {w} is not a positive finite \
+                     number; pick a tamer exponent");
+            acc += w;
             cdf.push(acc);
         }
-        let total = acc;
+        ensure!(acc.is_finite() && acc > 0.0,
+                "Zipf total mass {acc} is not positive and finite (n={n}, \
+                 s={s})");
         for c in cdf.iter_mut() {
-            *c /= total;
+            *c /= acc;
         }
-        Self { cdf }
+        Ok(Self { cdf })
     }
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.uniform();
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        // total_cmp: a total order even on non-finite values, so a
+        // corrupted CDF can misreport a bucket but can never abort the
+        // process the way the old `partial_cmp(..).unwrap()` did
+        match self.cdf.binary_search_by(|c| c.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
@@ -147,6 +173,35 @@ mod tests {
         }
         assert!(counts[0] > counts[10]);
         assert!(counts[0] > 50 * counts[900].max(1) / 10);
+    }
+
+    #[test]
+    fn zipf_rejects_degenerate_parameters() {
+        // n = 0: no support
+        assert!(Zipf::try_new(0, 1.1).is_err());
+        // non-finite exponent
+        assert!(Zipf::try_new(10, f64::NAN).is_err());
+        assert!(Zipf::try_new(10, f64::INFINITY).is_err());
+        // s = -9000: k^s underflows to 0 for k >= 2, so the weight 1/k^s
+        // is +inf — the zero-mass shape that used to surface as a NaN CDF
+        // and an abort inside sample()
+        let err = Zipf::try_new(10, -9000.0).unwrap_err();
+        assert!(format!("{err}").contains("not a positive finite"),
+                "unexpected message: {err}");
+        // s = 9000 underflows the *tail* weights to zero instead
+        assert!(Zipf::try_new(10, 9000.0).is_err());
+    }
+
+    #[test]
+    fn zipf_sample_never_panics_and_stays_in_range() {
+        let z = Zipf::try_new(64, 1.1).unwrap();
+        let mut r = Rng::new(13);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut r) < 64);
+        }
+        // single-element support always returns 0
+        let one = Zipf::try_new(1, 2.0).unwrap();
+        assert_eq!(one.sample(&mut r), 0);
     }
 
     #[test]

@@ -1,14 +1,21 @@
-//! L3 serving coordinator: request router, dynamic batcher, per-model
-//! workers over a pluggable [`BatchExecutor`] — PJRT artifacts or the
-//! native Rust CAT executor, per [`crate::runtime::Backend`] (vLLM-router
-//! shaped; the paper's contribution lives at L1/L2 so this layer is a
-//! production-grade driver, per DESIGN.md §3 and §6).
+//! L3 serving coordinator: request router, dynamic batcher, data-parallel
+//! replica sets with health checks + backpressure ([`router`]),
+//! head-parallel model shards ([`shard`]), and per-replica workers over a
+//! pluggable [`BatchExecutor`] — PJRT artifacts or the native Rust CAT
+//! executor, per [`crate::runtime::Backend`] (vLLM-router shaped; the
+//! paper's contribution lives at L1/L2 so this layer is a
+//! production-grade driver, per DESIGN.md §3, §6 and §10).
 
 pub mod batcher;
+pub mod router;
 pub mod server;
+pub mod shard;
 pub mod workload;
 
 pub use batcher::{DynamicBatcher, Flush, Pending};
-pub use server::{split_rows, BatchExecutor, InferRequest, ServeHandle,
+pub use router::{Rejection, RouterStats, ServeError, MAX_MISSED_PINGS};
+pub use server::{aggregate_stats, split_rows, BatchExecutor,
+                 ExecutorFactory, InferRequest, ModelStats, ServeHandle,
                  ServeOptions, Server, WorkerSpec, WorkerStats};
+pub use shard::{ShardStatsSnapshot, ShardedNativeModel};
 pub use workload::{ArrivalSampler, Arrivals};

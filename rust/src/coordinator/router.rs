@@ -1,0 +1,439 @@
+//! Replica routing: the data-parallel half of sharded serving
+//! (DESIGN.md §10).
+//!
+//! Each model runs R replica workers behind the router, every replica
+//! with its own bounded queue. Dispatch is rotating round-robin over the
+//! replicas the health monitor considers live, probing with `try_send`
+//! so a saturated replica is skipped rather than blocked on:
+//!
+//! * every live replica full → the request is rejected with
+//!   [`ServeError::Busy`] carrying a retry-after hint (the batcher's
+//!   flush cadence) — **backpressure is an explicit, immediate signal**,
+//!   not an ever-growing queue;
+//! * a replica whose queue endpoint is gone (worker thread died) is
+//!   marked dead on the spot and never routed to again;
+//! * no live replica at all → [`ServeError::Failed`], a terminal error.
+//!
+//! The health monitor thread pings every replica each `health_every`
+//! through the same queue the requests use (so a ping measures real
+//! dequeue latency). Pings are only sent to **idle** replicas (queue
+//! depth 0): a replica holding queued work is demonstrably accepting
+//! requests, and a ping behind its backlog would measure queue length,
+//! not health — loaded-but-live replicas must never be routed around
+//! (saturation is backpressure's business; a dead replica still
+//! surfaces immediately through its disconnected queue endpoint). For
+//! an idle replica, a reply within `ping_timeout` marks it healthy and
+//! [`MAX_MISSED_PINGS`] consecutive timeouts mark it unhealthy —
+//! skipped by dispatch until a later ping succeeds, so slow replicas
+//! heal themselves.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::tensor::HostTensor;
+
+use super::server::InferRequest;
+
+/// Consecutive ping timeouts before a replica is routed around.
+pub const MAX_MISSED_PINGS: u32 = 3;
+
+/// Typed serving error. The vendored `anyhow` deliberately has no
+/// downcasting, so backpressure is a dedicated variant on a dedicated
+/// type rather than a string to be sniffed: [`ServeHandle::try_infer`]
+/// surfaces it directly, and `ServeHandle::infer` retries `Busy` with
+/// the embedded hint.
+///
+/// [`ServeHandle::try_infer`]: super::server::ServeHandle::try_infer
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// Every live replica's queue is full; retry after the hint.
+    Busy { retry_after: Duration },
+    /// The request failed terminally (unknown model, dead replicas,
+    /// executor error).
+    Failed(String),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Busy { retry_after } => {
+                write!(f, "server busy: every replica queue is full \
+                           (retry after {retry_after:?})")
+            }
+            ServeError::Failed(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A rejected request: the typed error plus — whenever the rejecting
+/// side still owned it — the original input handed back, so retrying
+/// callers (`ServeHandle::infer`) never clone tensors on the hot path.
+/// `Busy` rejections always return the input; terminal failures may
+/// not (an executor error consumed it).
+#[derive(Debug)]
+pub struct Rejection {
+    pub error: ServeError,
+    pub input: Option<HostTensor>,
+}
+
+impl Rejection {
+    pub(crate) fn terminal(error: ServeError) -> Rejection {
+        Rejection { error, input: None }
+    }
+}
+
+/// What flows through a replica's queue: client work or a monitor ping.
+pub(crate) enum WorkerMsg {
+    Infer(InferRequest),
+    /// Health probe; the worker replies on dequeue. The sender is
+    /// unbounded so the reply can never block the worker.
+    Ping(mpsc::Sender<()>),
+}
+
+/// Shared liveness/health state of one replica.
+///
+/// `alive` is permanent-once-false (the queue endpoint is gone);
+/// `healthy` is the monitor's recoverable verdict; `depth` counts
+/// router-dispatched requests not yet *completed* — incremented before
+/// the dispatch send (and undone if the send fails) and decremented
+/// only when the worker finishes the request, so queued **and
+/// in-flight** work both register: the monitor must treat a replica
+/// mid-way through a long batch as busy, not idle.
+#[derive(Debug)]
+pub(crate) struct ReplicaState {
+    alive: AtomicBool,
+    healthy: AtomicBool,
+    depth: AtomicUsize,
+}
+
+impl ReplicaState {
+    pub(crate) fn new() -> Arc<ReplicaState> {
+        Arc::new(ReplicaState {
+            alive: AtomicBool::new(true),
+            healthy: AtomicBool::new(true),
+            depth: AtomicUsize::new(0),
+        })
+    }
+
+    pub(crate) fn is_routable(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+            && self.healthy.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn mark_dead(&self) {
+        self.alive.store(false, Ordering::Relaxed);
+        self.healthy.store(false, Ordering::Relaxed);
+    }
+
+    fn set_healthy(&self, ok: bool) {
+        self.healthy.store(ok, Ordering::Relaxed);
+    }
+
+    /// Router-dispatched requests this replica has not completed yet
+    /// (queued + in-flight).
+    pub(crate) fn outstanding(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    fn note_enqueued(&self) {
+        self.depth.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request finished (responded to) — or an optimistic
+    /// `note_enqueued` is being undone after a failed send. Saturating:
+    /// the worker completes only what the router counted, but stay
+    /// defensive against double-decrement bugs.
+    pub(crate) fn note_completed(&self) {
+        let _ = self.depth.fetch_update(Ordering::Relaxed,
+                                        Ordering::Relaxed,
+                                        |d| Some(d.saturating_sub(1)));
+    }
+}
+
+/// Router/monitor counters, shared across threads and snapshotted into
+/// [`RouterStats`].
+#[derive(Debug, Default)]
+pub(crate) struct RouterCounters {
+    pub(crate) dispatched: AtomicU64,
+    pub(crate) busy_rejected: AtomicU64,
+    pub(crate) replicas_died: AtomicU64,
+    pub(crate) pings_ok: AtomicU64,
+    pub(crate) pings_missed: AtomicU64,
+}
+
+impl RouterCounters {
+    pub(crate) fn snapshot(&self) -> RouterStats {
+        RouterStats {
+            dispatched: self.dispatched.load(Ordering::Relaxed),
+            busy_rejected: self.busy_rejected.load(Ordering::Relaxed),
+            replicas_died: self.replicas_died.load(Ordering::Relaxed),
+            pings_ok: self.pings_ok.load(Ordering::Relaxed),
+            pings_missed: self.pings_missed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time router statistics (`Server::router_stats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouterStats {
+    /// Requests handed to a replica queue.
+    pub dispatched: u64,
+    /// Requests rejected with [`ServeError::Busy`] (backpressure).
+    pub busy_rejected: u64,
+    /// Replicas discovered dead (disconnected queue endpoint).
+    pub replicas_died: u64,
+    /// Health pings answered in time.
+    pub pings_ok: u64,
+    /// Health pings that timed out.
+    pub pings_missed: u64,
+}
+
+/// One model's replica routing table (owned by the router thread).
+pub(crate) struct ReplicaSet {
+    txs: Vec<SyncSender<WorkerMsg>>,
+    states: Vec<Arc<ReplicaState>>,
+    /// Rotating round-robin cursor.
+    next: usize,
+}
+
+impl ReplicaSet {
+    pub(crate) fn new(txs: Vec<SyncSender<WorkerMsg>>,
+                      states: Vec<Arc<ReplicaState>>) -> ReplicaSet {
+        debug_assert_eq!(txs.len(), states.len());
+        ReplicaSet { txs, states, next: 0 }
+    }
+
+    /// Route `req` to a live replica, or reply `Busy`/`Failed` per the
+    /// module docs. Never blocks.
+    pub(crate) fn dispatch(&mut self, req: InferRequest,
+                           retry_after: Duration,
+                           counters: &RouterCounters) {
+        let k = self.txs.len();
+        let mut msg = WorkerMsg::Infer(req);
+        let mut any_alive = false;
+        for i in 0..k {
+            let idx = (self.next + i) % k;
+            if !self.states[idx].is_alive() {
+                continue;
+            }
+            if !self.states[idx].is_routable() {
+                // alive but flagged unhealthy: skip, may recover later
+                any_alive = true;
+                continue;
+            }
+            // count the request *before* the send: a fast worker could
+            // otherwise dequeue (and decrement) before the increment
+            // lands, leaving the depth permanently off by one — which
+            // would silently disable health pings for this replica
+            self.states[idx].note_enqueued();
+            match self.txs[idx].try_send(msg) {
+                Ok(()) => {
+                    self.next = (idx + 1) % k;
+                    counters.dispatched.fetch_add(1, Ordering::Relaxed);
+                    return;
+                }
+                Err(TrySendError::Full(back)) => {
+                    // saturated but alive: Busy territory
+                    self.states[idx].note_completed(); // undo the count
+                    any_alive = true;
+                    msg = back;
+                }
+                Err(TrySendError::Disconnected(back)) => {
+                    // discovered dead right here: NOT alive — a lone
+                    // replica dying must produce Failed, not a Busy the
+                    // client would retry forever
+                    self.states[idx].note_completed(); // undo the count
+                    msg = back;
+                    self.states[idx].mark_dead();
+                    counters.replicas_died.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        let WorkerMsg::Infer(req) = msg else {
+            unreachable!("dispatch only routes Infer messages");
+        };
+        let InferRequest { model, input, resp, .. } = req;
+        let error = if any_alive {
+            counters.busy_rejected.fetch_add(1, Ordering::Relaxed);
+            ServeError::Busy { retry_after }
+        } else {
+            ServeError::Failed(format!("model '{model}': no live replicas"))
+        };
+        // hand the input back so a retrying caller reuses it clone-free
+        let _ = resp.send(Err(Rejection { error, input: Some(input) }));
+    }
+}
+
+/// The health monitor loop (one thread per server). Owns clones of every
+/// replica queue sender; exits when `stop` is set, dropping its clones
+/// so draining workers can finish.
+///
+/// Each round fans every ping out first and then collects the replies
+/// against **one** shared deadline, so round latency (and therefore
+/// shutdown latency and detection time) is `ping_timeout`, not
+/// `replicas × ping_timeout`.
+pub(crate) fn monitor_loop(
+    replicas: Vec<(SyncSender<WorkerMsg>, Arc<ReplicaState>)>,
+    stop: Arc<AtomicBool>, health_every: Duration, ping_timeout: Duration,
+    counters: Arc<RouterCounters>,
+) {
+    let mut missed = vec![0u32; replicas.len()];
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(health_every);
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // phase 1: fan out pings to every idle, live replica
+        let mut waiting: Vec<(usize, mpsc::Receiver<()>)> = Vec::new();
+        for (i, (tx, state)) in replicas.iter().enumerate() {
+            if !state.is_alive() {
+                continue;
+            }
+            if state.outstanding() > 0 {
+                // replica holds queued or in-flight work: it is
+                // demonstrably accepting requests, and a ping behind
+                // that work would measure load, not health — never
+                // route around a loaded-but-live replica (a dead one
+                // surfaces via its disconnected endpoint)
+                continue;
+            }
+            let (ping_tx, ping_rx) = mpsc::channel();
+            match tx.try_send(WorkerMsg::Ping(ping_tx)) {
+                Err(TrySendError::Full(_)) => {
+                    // saturated queue: that's backpressure, not death —
+                    // don't burn a miss on it
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    state.mark_dead();
+                    counters.replicas_died.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(()) => waiting.push((i, ping_rx)),
+            }
+        }
+        // phase 2: collect replies against one shared deadline
+        let deadline = Instant::now() + ping_timeout;
+        for (i, ping_rx) in waiting {
+            let state = &replicas[i].1;
+            let left = deadline.saturating_duration_since(Instant::now());
+            match ping_rx.recv_timeout(left) {
+                Ok(()) => {
+                    missed[i] = 0;
+                    state.set_healthy(true);
+                    counters.pings_ok.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    missed[i] += 1;
+                    counters.pings_missed.fetch_add(1, Ordering::Relaxed);
+                    if missed[i] >= MAX_MISSED_PINGS {
+                        state.set_healthy(false);
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // the worker dropped the reply sender without
+                    // answering: it exited between accept and reply
+                    state.mark_dead();
+                    counters.replicas_died.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::HostTensor;
+    use std::time::Instant;
+
+    fn test_req(model: &str)
+                -> (InferRequest,
+                    mpsc::Receiver<Result<HostTensor, Rejection>>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        let req = InferRequest {
+            model: model.to_string(),
+            input: HostTensor::scalar_f32(0.0),
+            resp: tx,
+            enqueued: Instant::now(),
+        };
+        (req, rx)
+    }
+
+    #[test]
+    fn serve_error_displays_and_converts() {
+        let busy = ServeError::Busy {
+            retry_after: Duration::from_millis(4),
+        };
+        assert!(format!("{busy}").contains("busy"));
+        let failed = ServeError::Failed("boom".into());
+        let as_anyhow: anyhow::Error = failed.into();
+        assert_eq!(format!("{as_anyhow}"), "boom");
+    }
+
+    #[test]
+    fn dispatch_round_robins_over_replicas() {
+        let (tx_a, rx_a) = mpsc::sync_channel(4);
+        let (tx_b, rx_b) = mpsc::sync_channel(4);
+        let states = vec![ReplicaState::new(), ReplicaState::new()];
+        let mut set = ReplicaSet::new(vec![tx_a, tx_b], states);
+        let counters = RouterCounters::default();
+        for _ in 0..4 {
+            let (req, _rx) = test_req("m");
+            set.dispatch(req, Duration::from_millis(1), &counters);
+        }
+        assert_eq!(counters.snapshot().dispatched, 4);
+        assert_eq!(rx_a.try_iter().count(), 2);
+        assert_eq!(rx_b.try_iter().count(), 2);
+    }
+
+    #[test]
+    fn dispatch_skips_full_queue_then_rejects_busy() {
+        let (tx, _rx_keep) = mpsc::sync_channel(1);
+        let mut set = ReplicaSet::new(vec![tx], vec![ReplicaState::new()]);
+        let counters = RouterCounters::default();
+        let (first, _first_rx) = test_req("m");
+        set.dispatch(first, Duration::from_millis(7), &counters);
+        // queue of 1 is now full: the next dispatch must reject Busy
+        let (second, second_rx) = test_req("m");
+        set.dispatch(second, Duration::from_millis(7), &counters);
+        let rejection = second_rx.recv().expect("reply").unwrap_err();
+        assert_eq!(rejection.error,
+                   ServeError::Busy { retry_after: Duration::from_millis(7) });
+        assert!(rejection.input.is_some(),
+                "Busy must hand the input back for clone-free retries");
+        assert_eq!(counters.snapshot().busy_rejected, 1);
+        assert_eq!(counters.snapshot().dispatched, 1);
+        // the accepted request counts as outstanding; the Busy-rejected
+        // one was un-counted when its send failed
+        assert_eq!(set.states[0].outstanding(), 1);
+    }
+
+    #[test]
+    fn dispatch_marks_disconnected_replicas_dead() {
+        let (tx_dead, _) = mpsc::sync_channel(1); // receiver dropped
+        let states = vec![ReplicaState::new()];
+        let dead_state = states[0].clone();
+        let mut set = ReplicaSet::new(vec![tx_dead], states);
+        let counters = RouterCounters::default();
+        let (req, rx) = test_req("m");
+        set.dispatch(req, Duration::from_millis(1), &counters);
+        let rejection = rx.recv().expect("reply").unwrap_err();
+        assert!(matches!(rejection.error, ServeError::Failed(_)),
+                "dead replica set must fail, got {:?}", rejection.error);
+        assert!(!dead_state.is_alive());
+        assert_eq!(counters.snapshot().replicas_died, 1);
+        // subsequent dispatches fail immediately without a queue probe
+        let (req2, rx2) = test_req("m");
+        set.dispatch(req2, Duration::from_millis(1), &counters);
+        assert!(matches!(rx2.recv().expect("reply").unwrap_err().error,
+                         ServeError::Failed(_)));
+    }
+}

@@ -12,26 +12,40 @@
 //!      └──────────────── oneshot responses ◀─────────────┘
 //! ```
 //!
-//! The router owns a registry of model workers keyed by config name and
-//! forwards requests; each worker runs a dynamic batcher
-//! ([`super::batcher`]) in front of one [`BatchExecutor`]:
+//! The router owns a registry of model replica sets keyed by config name
+//! and dispatches requests round-robin over each model's R data-parallel
+//! replica workers ([`super::router`]); every replica runs a dynamic
+//! batcher ([`super::batcher`]) in front of one [`BatchExecutor`]:
 //!
 //! * [`Backend::Pjrt`] (feature `pjrt`) — the compiled `forward` artifact;
 //!   short batches are padded to the artifact's fixed batch size.
 //! * [`Backend::Native`] — [`crate::native::NativeCatModel`], the pure-Rust
 //!   CAT-FFT executor; shape-flexible, so batches run unpadded and serving
-//!   works in a fresh checkout with no artifacts and no XLA runtime.
+//!   works in a fresh checkout with no artifacts and no XLA runtime. With
+//!   `ServeOptions::shards > 1` each replica further splits its model
+//!   head-wise across K model-parallel shards ([`super::shard`]).
 //!
-//! Backpressure is bounded sync_channels end-to-end.
+//! Backpressure: every queue is bounded and the router never blocks —
+//! when all of a model's live replicas are saturated the request is
+//! rejected with [`ServeError::Busy`] + a retry-after hint
+//! ([`ServeHandle::try_infer`] surfaces it, [`ServeHandle::infer`]
+//! retries it). A health monitor pings replicas through their queues and
+//! routes around the unhealthy ones (DESIGN.md §10).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::atomic::AtomicBool;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
+                      TrySendError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure};
 
 use super::batcher::{DynamicBatcher, Flush};
+use super::router::{monitor_loop, Rejection, ReplicaSet, ReplicaState,
+                    RouterCounters, RouterStats, ServeError, WorkerMsg};
+use super::shard::{ShardStatsSnapshot, ShardedNativeModel};
 use crate::metrics::LatencyHistogram;
 use crate::native::{NativeCatModel, NativeVitConfig};
 use crate::runtime::Backend;
@@ -48,6 +62,12 @@ pub trait BatchExecutor {
     /// Run `inputs` (each a single example, no batch dim) and return one
     /// output row per input, in order.
     fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Model-shard counters, when this executor is sharded (reported
+    /// through [`WorkerStats`] at shutdown).
+    fn shard_stats(&self) -> Option<ShardStatsSnapshot> {
+        None
+    }
 }
 
 /// Everything a worker thread needs to build its own execution stack.
@@ -67,10 +87,14 @@ pub struct WorkerSpec {
 }
 
 /// One inference request: a single example (no batch dim) for `model`.
+/// The response channel is typed ([`Rejection`] wraps a [`ServeError`])
+/// so backpressure rejections stay distinguishable from terminal
+/// failures without downcasting (the vendored anyhow has none), and so
+/// `Busy` rejections can hand the input back for clone-free retries.
 pub struct InferRequest {
     pub model: String,
     pub input: HostTensor,
-    pub resp: SyncSender<Result<HostTensor>>,
+    pub resp: SyncSender<std::result::Result<HostTensor, Rejection>>,
     pub enqueued: Instant,
 }
 
@@ -78,11 +102,32 @@ pub struct InferRequest {
 #[derive(Clone)]
 pub struct ServeHandle {
     tx: SyncSender<InferRequest>,
+    /// The hint embedded in locally-raised `Busy` rejections and the
+    /// cadence `infer` retries at (the batcher flush delay).
+    retry_after: Duration,
 }
 
+/// How long [`ServeHandle::infer`] keeps retrying `Busy` before giving
+/// up — generous because the pre-backpressure behaviour was an unbounded
+/// blocking send.
+const INFER_BUSY_PATIENCE: Duration = Duration::from_secs(60);
+
 impl ServeHandle {
-    /// Submit one example and block until its logits row is ready.
-    pub fn infer(&self, model: &str, input: HostTensor) -> Result<HostTensor> {
+    /// Submit one example without blocking on a saturated server: a
+    /// `Busy` rejection (every live replica's queue full, or the router
+    /// intake full) comes back immediately with a retry-after hint.
+    /// Blocks only for the actual inference once the request is queued.
+    pub fn try_infer(&self, model: &str, input: HostTensor)
+                     -> std::result::Result<HostTensor, ServeError> {
+        self.try_infer_keep(model, input).map_err(|(e, _)| e)
+    }
+
+    /// [`Self::try_infer`], but rejections that still own the input
+    /// hand it back — the clone-free retry primitive behind `infer`.
+    fn try_infer_keep(&self, model: &str, input: HostTensor)
+                      -> std::result::Result<HostTensor,
+                                             (ServeError,
+                                              Option<HostTensor>)> {
         let (tx, rx) = mpsc::sync_channel(1);
         let req = InferRequest {
             model: model.to_string(),
@@ -90,22 +135,120 @@ impl ServeHandle {
             resp: tx,
             enqueued: Instant::now(),
         };
-        self.tx.send(req).map_err(|_| anyhow!("router is down"))?;
-        rx.recv().map_err(|_| anyhow!("worker dropped request"))?
+        match self.tx.try_send(req) {
+            Ok(()) => {}
+            Err(TrySendError::Full(req)) => {
+                return Err((ServeError::Busy {
+                    retry_after: self.retry_after,
+                }, Some(req.input)));
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err((ServeError::Failed("router is down".into()),
+                            None));
+            }
+        }
+        match rx.recv() {
+            Ok(Ok(row)) => Ok(row),
+            Ok(Err(rejection)) => Err((rejection.error, rejection.input)),
+            Err(_) => Err((ServeError::Failed(
+                "worker dropped request".into()), None)),
+        }
+    }
+
+    /// Submit one example and block until its logits row is ready,
+    /// absorbing backpressure: `Busy` rejections are retried at the
+    /// server's hinted cadence (up to [`INFER_BUSY_PATIENCE`]), so this
+    /// behaves like the old blocking path under load. The input is
+    /// never cloned — rejections hand it back for the next attempt.
+    /// Terminal failures return immediately; in particular, a request
+    /// lost to a worker dying mid-flight surfaces as
+    /// `Failed("worker dropped request")` (the input died with the
+    /// worker, so no automatic retry is possible) — idempotent callers
+    /// may resubmit with a fresh input, and the router routes the retry
+    /// around the dead replica.
+    pub fn infer(&self, model: &str, input: HostTensor) -> Result<HostTensor> {
+        let deadline = Instant::now() + INFER_BUSY_PATIENCE;
+        let mut input = input;
+        loop {
+            match self.try_infer_keep(model, input) {
+                Ok(row) => return Ok(row),
+                Err((ServeError::Busy { retry_after }, Some(returned)))
+                    if Instant::now() < deadline =>
+                {
+                    std::thread::sleep(retry_after.max(
+                        Duration::from_micros(100)));
+                    input = returned;
+                }
+                Err((e, _)) => return Err(e.into()),
+            }
+        }
     }
 }
 
-/// Final statistics from a drained worker.
+/// Final statistics from one drained replica worker.
 #[derive(Debug, Clone)]
 pub struct WorkerStats {
     pub model: String,
+    /// Which of the model's R replicas this worker was.
+    pub replica: usize,
     pub requests: u64,
     pub batches: u64,
     pub mean_occupancy: f64,
     pub latency: LatencyHistogram,
+    /// Present when the replica ran a sharded executor.
+    pub shard: Option<ShardStatsSnapshot>,
 }
 
-/// Options for batching behaviour and backend selection.
+/// Per-model aggregate over replica [`WorkerStats`].
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub model: String,
+    /// Replicas that reported stats (a replica that died mid-run is
+    /// missing from the aggregate).
+    pub replicas: usize,
+    pub requests: u64,
+    pub batches: u64,
+    /// Batch-weighted mean occupancy across replicas.
+    pub mean_occupancy: f64,
+    /// Merged latency histogram across replicas.
+    pub latency: LatencyHistogram,
+}
+
+/// Aggregate per-replica worker stats into per-model totals, sorted by
+/// model name.
+pub fn aggregate_stats(per_replica: &[WorkerStats]) -> Vec<ModelStats> {
+    let mut by_model: HashMap<&str, ModelStats> = HashMap::new();
+    for w in per_replica {
+        let entry = by_model.entry(&w.model).or_insert_with(|| ModelStats {
+            model: w.model.clone(),
+            replicas: 0,
+            requests: 0,
+            batches: 0,
+            mean_occupancy: 0.0,
+            latency: LatencyHistogram::default(),
+        });
+        entry.replicas += 1;
+        entry.requests += w.requests;
+        // accumulate batch-weighted occupancy; normalized below
+        entry.mean_occupancy += w.mean_occupancy * w.batches as f64;
+        entry.batches += w.batches;
+        entry.latency.merge(&w.latency);
+    }
+    let mut out: Vec<ModelStats> = by_model
+        .into_values()
+        .map(|mut m| {
+            if m.batches > 0 {
+                m.mean_occupancy /= m.batches as f64;
+            }
+            m
+        })
+        .collect();
+    out.sort_by(|a, b| a.model.cmp(&b.model));
+    out
+}
+
+/// Options for batching behaviour, backend selection, and the sharded
+/// serving topology.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     pub max_delay: Duration,
@@ -116,6 +259,16 @@ pub struct ServeOptions {
     pub native: NativeVitConfig,
     /// Batcher flush size for the (shape-flexible) native engine.
     pub native_max_batch: usize,
+    /// Model-parallel head shards per replica (native backend only;
+    /// 1 = unsharded). Must divide into `native.n_heads` slots.
+    pub shards: usize,
+    /// Data-parallel replica workers per model (each with its own
+    /// bounded queue). 1 = the pre-shard single-worker topology.
+    pub replicas: usize,
+    /// Health-check cadence (the monitor pings every replica this often).
+    pub health_every: Duration,
+    /// How long a ping may take before it counts as missed.
+    pub ping_timeout: Duration,
 }
 
 impl Default for ServeOptions {
@@ -126,16 +279,32 @@ impl Default for ServeOptions {
             backend: Backend::detect_env(),
             native: NativeVitConfig::default(),
             native_max_batch: 8,
+            shards: 1,
+            replicas: 1,
+            health_every: Duration::from_millis(250),
+            ping_timeout: Duration::from_millis(250),
         }
     }
 }
 
-/// Serving coordinator: router thread + one worker thread per model.
+/// How a replica worker thread builds its execution engine. Overridable
+/// via [`Server::spawn_with`] so tests and benches can serve custom
+/// executors (slow, failing, instrumented) through the full router
+/// stack; `None` builds the backend selected in [`ServeOptions`].
+pub type ExecutorFactory =
+    Arc<dyn Fn(&WorkerSpec, &ServeOptions) -> Result<Box<dyn BatchExecutor>>
+            + Send + Sync>;
+
+/// Serving coordinator: router thread + health monitor + R replica
+/// worker threads per model.
 pub struct Server {
     handle: ServeHandle,
     stats_rx: Receiver<WorkerStats>,
     router: std::thread::JoinHandle<()>,
+    monitor: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    counters: Arc<RouterCounters>,
 }
 
 impl Server {
@@ -151,37 +320,74 @@ impl Server {
         Self::spawn_specs(artifacts, specs, opts)
     }
 
-    /// Spawn one worker thread per spec. Each worker builds its own
-    /// executor over `artifacts` per `opts.backend` (PJRT handles are
-    /// `!Send`; see [`WorkerSpec`]).
+    /// Spawn `opts.replicas` worker threads per spec. Each worker builds
+    /// its own executor over `artifacts` per `opts.backend` (PJRT
+    /// handles are `!Send`; see [`WorkerSpec`]).
     pub fn spawn_specs(artifacts: PathBuf, specs: Vec<WorkerSpec>,
                        opts: ServeOptions) -> Result<Self> {
+        Self::spawn_with(artifacts, specs, opts, None)
+    }
+
+    /// [`Server::spawn_specs`] with an optional executor factory (see
+    /// [`ExecutorFactory`]). Every replica invokes the factory on its
+    /// own thread.
+    pub fn spawn_with(artifacts: PathBuf, specs: Vec<WorkerSpec>,
+                      opts: ServeOptions, factory: Option<ExecutorFactory>)
+                      -> Result<Self> {
+        ensure!(opts.replicas >= 1, "need at least one replica per model");
+        ensure!(opts.shards >= 1, "need at least one shard per replica");
+        if opts.backend == Backend::Pjrt && factory.is_none() {
+            ensure!(opts.shards == 1,
+                    "model-parallel sharding is a native-backend feature");
+        }
+        let retry_after = opts.max_delay.max(Duration::from_micros(100));
         let (tx, rx) = mpsc::sync_channel::<InferRequest>(opts.queue_depth);
         let (stats_tx, stats_rx) = mpsc::channel();
+        let counters = Arc::new(RouterCounters::default());
+        let stop = Arc::new(AtomicBool::new(false));
 
-        let mut worker_txs: HashMap<String, SyncSender<InferRequest>> =
-            HashMap::new();
+        let mut sets: HashMap<String, ReplicaSet> = HashMap::new();
+        let mut monitor_targets: Vec<(SyncSender<WorkerMsg>,
+                                      Arc<ReplicaState>)> = Vec::new();
         let mut workers = Vec::new();
         // workers report readiness so spawn() fails fast on bad configs
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         for spec in specs {
-            let (wtx, wrx) = mpsc::sync_channel(opts.queue_depth);
-            worker_txs.insert(spec.model.clone(), wtx);
-            let stats_tx = stats_tx.clone();
-            let ready_tx = ready_tx.clone();
-            let dir = artifacts.clone();
-            workers.push(std::thread::spawn(move || {
-                match build_worker(&dir, &spec, &opts) {
-                    Ok(exec) => {
-                        let _ = ready_tx.send(Ok(spec.model.clone()));
-                        drop(ready_tx);
-                        worker_loop(spec.model, exec, wrx, opts, stats_tx);
+            let spec = Arc::new(spec);
+            let mut txs = Vec::with_capacity(opts.replicas);
+            let mut states = Vec::with_capacity(opts.replicas);
+            for replica in 0..opts.replicas {
+                let (wtx, wrx) = mpsc::sync_channel(opts.queue_depth);
+                let state = ReplicaState::new();
+                monitor_targets.push((wtx.clone(), state.clone()));
+                txs.push(wtx);
+                let wstate = state.clone();
+                states.push(state);
+                let spec = spec.clone();
+                let stats_tx = stats_tx.clone();
+                let ready_tx = ready_tx.clone();
+                let dir = artifacts.clone();
+                let factory = factory.clone();
+                workers.push(std::thread::spawn(move || {
+                    let built = match &factory {
+                        Some(f) => f(spec.as_ref(), &opts),
+                        None => build_worker(&dir, spec.as_ref(), &opts),
+                    };
+                    match built {
+                        Ok(exec) => {
+                            let _ = ready_tx.send(Ok(spec.model.clone()));
+                            drop(ready_tx);
+                            worker_loop(spec.model.clone(), replica, exec,
+                                        wrx, wstate, opts, stats_tx);
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e.context(format!(
+                                "{} replica {replica}", spec.model))));
+                        }
                     }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                    }
-                }
-            }));
+                }));
+            }
+            sets.insert(spec.model.clone(), ReplicaSet::new(txs, states));
         }
         drop(ready_tx);
         for _ in 0..workers.len() {
@@ -192,36 +398,70 @@ impl Server {
             }
         }
 
+        let router_counters = counters.clone();
         let router = std::thread::spawn(move || {
+            let mut sets = sets;
             while let Ok(req) = rx.recv() {
-                match worker_txs.get(&req.model) {
-                    Some(wtx) => {
-                        // bounded channel -> this blocks when the worker is
-                        // saturated: backpressure to the client
-                        let _ = wtx.send(req);
+                match sets.get_mut(&req.model) {
+                    Some(set) => {
+                        set.dispatch(req, retry_after, &router_counters);
                     }
                     None => {
                         let model = req.model.clone();
-                        let _ = req.resp
-                            .send(Err(anyhow!("unknown model '{model}'")));
+                        let _ = req.resp.send(Err(Rejection::terminal(
+                            ServeError::Failed(format!(
+                                "unknown model '{model}'")))));
                     }
                 }
             }
-            // rx closed: worker_txs drop here, workers drain and exit
+            // rx closed: the replica senders drop here, workers drain
         });
 
-        Ok(Self { handle: ServeHandle { tx }, stats_rx, router, workers })
+        let monitor = {
+            let stop = stop.clone();
+            let counters = counters.clone();
+            let (every, timeout) = (opts.health_every, opts.ping_timeout);
+            Some(std::thread::spawn(move || {
+                monitor_loop(monitor_targets, stop, every, timeout,
+                             counters);
+            }))
+        };
+
+        Ok(Self {
+            handle: ServeHandle { tx, retry_after },
+            stats_rx,
+            router,
+            monitor,
+            workers,
+            stop,
+            counters,
+        })
     }
 
     pub fn handle(&self) -> ServeHandle {
         self.handle.clone()
     }
 
-    /// Close the intake, join every thread, collect worker statistics.
-    /// All outstanding `ServeHandle` clones must be dropped first.
+    /// Point-in-time router/monitor counters (dispatches, backpressure
+    /// rejections, ping outcomes). Callable while serving.
+    pub fn router_stats(&self) -> RouterStats {
+        self.counters.snapshot()
+    }
+
+    /// Close the intake, join every thread, collect per-replica worker
+    /// statistics (see [`aggregate_stats`] for per-model totals). All
+    /// outstanding `ServeHandle` clones must be dropped first.
     pub fn shutdown(self) -> Vec<WorkerStats> {
+        // order matters: stop the monitor's ping traffic, close the
+        // intake so the router exits and drops its replica senders, then
+        // join the monitor (it holds sender clones too — workers drain
+        // only once both are gone), then the workers.
+        self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
         drop(self.handle);
         let _ = self.router.join();
+        if let Some(m) = self.monitor {
+            let _ = m.join();
+        }
         for w in self.workers {
             let _ = w.join();
         }
@@ -242,6 +482,22 @@ fn build_worker(dir: &std::path::Path, spec: &WorkerSpec,
             ensure!(spec.params.is_none(),
                     "{}: the native backend initializes from the seed; \
                      checkpoint loading is a PJRT feature", spec.model);
+            if opts.shards > 1 {
+                // size each shard's dedicated pool against the whole
+                // serving topology: R replicas × K shards all compute
+                // concurrently, so dividing the hardware budget by
+                // shards alone would oversubscribe the cores R-fold
+                let per_shard = (crate::native::pool::hardware_workers()
+                                 / (opts.shards * opts.replicas))
+                    .max(1);
+                return Ok(Box::new(ShardedWorker {
+                    model: ShardedNativeModel::new(
+                        opts.native, spec.seed as u64, opts.shards,
+                        Some(per_shard))?,
+                    max_batch: opts.native_max_batch.max(1),
+                    assembly: std::cell::RefCell::new(Vec::new()),
+                }));
+            }
             Ok(Box::new(NativeWorker {
                 model: NativeCatModel::new(opts.native, spec.seed as u64),
                 max_batch: opts.native_max_batch.max(1),
@@ -279,6 +535,21 @@ struct NativeWorker {
     assembly: std::cell::RefCell<Vec<f32>>,
 }
 
+/// Validate + flatten a batch of CHW image tensors into `data` (shared
+/// by the unsharded and sharded native executors).
+fn assemble_images(cfg: &NativeVitConfig, inputs: &[&HostTensor],
+                   data: &mut Vec<f32>) -> Result<()> {
+    let row_shape = [cfg.n_channels, cfg.image_size, cfg.image_size];
+    data.clear();
+    for t in inputs {
+        if t.shape != row_shape {
+            bail!("request shape {:?} != expected {:?}", t.shape, row_shape);
+        }
+        data.extend_from_slice(t.as_f32()?);
+    }
+    Ok(())
+}
+
 impl BatchExecutor for NativeWorker {
     fn max_batch(&self) -> usize {
         self.max_batch
@@ -286,20 +557,41 @@ impl BatchExecutor for NativeWorker {
 
     fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
         let cfg = self.model.cfg;
-        let row_shape = vec![cfg.n_channels, cfg.image_size, cfg.image_size];
         let mut data = self.assembly.borrow_mut();
-        data.clear();
-        for t in inputs {
-            if t.shape != row_shape {
-                bail!("request shape {:?} != expected {:?}", t.shape,
-                      row_shape);
-            }
-            data.extend_from_slice(t.as_f32()?);
-        }
+        assemble_images(&cfg, inputs, &mut data)?;
         let logits = self.model.forward_batch(&data, inputs.len())?;
         let all = HostTensor::f32(vec![inputs.len(), cfg.n_classes],
                                   logits)?;
         split_rows(&all, inputs.len())
+    }
+}
+
+/// Sharded native CAT executor: one model split head-wise across K
+/// dedicated-pool shards ([`super::shard`]); bit-identical outputs to
+/// [`NativeWorker`] on the same `(config, seed)`.
+struct ShardedWorker {
+    model: ShardedNativeModel,
+    max_batch: usize,
+    assembly: std::cell::RefCell<Vec<f32>>,
+}
+
+impl BatchExecutor for ShardedWorker {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let cfg = *self.model.cfg();
+        let mut data = self.assembly.borrow_mut();
+        assemble_images(&cfg, inputs, &mut data)?;
+        let logits = self.model.forward_batch(&data, inputs.len())?;
+        let all = HostTensor::f32(vec![inputs.len(), cfg.n_classes],
+                                  logits)?;
+        split_rows(&all, inputs.len())
+    }
+
+    fn shard_stats(&self) -> Option<ShardStatsSnapshot> {
+        Some(self.model.stats())
     }
 }
 
@@ -411,10 +703,27 @@ impl BatchExecutor for PjrtWorker {
 // worker loop (backend-agnostic)
 // ---------------------------------------------------------------------------
 
-/// Worker thread: dynamic batcher in front of one executor.
-fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
-               rx: Receiver<InferRequest>, opts: ServeOptions,
-               stats_tx: mpsc::Sender<WorkerStats>) {
+/// Accept one queue message: batch client work, answer pings on the
+/// spot (the reply channel is unbounded and the monitor may have timed
+/// out, so replying never blocks). The replica's outstanding-work
+/// counter is decremented at request *completion* (in [`flush`]), not
+/// here — a replica mid-way through a long batch must still read as
+/// busy to the health monitor.
+fn accept(msg: WorkerMsg, batcher: &mut DynamicBatcher<InferRequest>) {
+    match msg {
+        WorkerMsg::Infer(req) => {
+            batcher.push(req);
+        }
+        WorkerMsg::Ping(reply) => {
+            let _ = reply.send(());
+        }
+    }
+}
+
+/// Replica worker thread: dynamic batcher in front of one executor.
+fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
+               rx: Receiver<WorkerMsg>, state: Arc<ReplicaState>,
+               opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>) {
     let mut batcher: DynamicBatcher<InferRequest> =
         DynamicBatcher::new(exec.max_batch(), opts.max_delay);
     let mut latency = LatencyHistogram::default();
@@ -425,9 +734,7 @@ fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
         // fill: block when empty, then drain whatever is ready
         if open && batcher.is_empty() {
             match rx.recv() {
-                Ok(req) => {
-                    batcher.push(req);
-                }
+                Ok(msg) => accept(msg, &mut batcher),
                 Err(_) => {
                     open = false;
                     continue;
@@ -436,9 +743,7 @@ fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
         }
         while open && batcher.len() < batcher.max_batch {
             match rx.try_recv() {
-                Ok(req) => {
-                    batcher.push(req);
-                }
+                Ok(msg) => accept(msg, &mut batcher),
                 Err(mpsc::TryRecvError::Empty) => break,
                 Err(mpsc::TryRecvError::Disconnected) => {
                     open = false;
@@ -448,15 +753,13 @@ fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
         }
         match batcher.poll(Instant::now()) {
             Flush::Emit(n) => {
-                flush(exec.as_ref(), &mut batcher, n, &mut latency,
-                      &mut requests);
+                flush(exec.as_ref(), &mut batcher, n, &state,
+                      &mut latency, &mut requests);
             }
             Flush::Wait(d) if open => {
                 // wait out the deadline, absorbing new arrivals
                 match rx.recv_timeout(d) {
-                    Ok(req) => {
-                        batcher.push(req);
-                    }
+                    Ok(msg) => accept(msg, &mut batcher),
                     Err(RecvTimeoutError::Timeout) => {}
                     Err(RecvTimeoutError::Disconnected) => {
                         open = false;
@@ -466,8 +769,8 @@ fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
             Flush::Wait(_) => {
                 // intake closed: flush the remainder immediately
                 let n = batcher.len();
-                flush(exec.as_ref(), &mut batcher, n, &mut latency,
-                      &mut requests);
+                flush(exec.as_ref(), &mut batcher, n, &state,
+                      &mut latency, &mut requests);
             }
             Flush::Idle => {}
         }
@@ -475,16 +778,21 @@ fn worker_loop(model: String, exec: Box<dyn BatchExecutor>,
 
     let _ = stats_tx.send(WorkerStats {
         model,
+        replica,
         requests,
         batches: batcher.emitted_batches,
         mean_occupancy: batcher.mean_occupancy(),
         latency,
+        shard: exec.shard_stats(),
     });
 }
 
-/// Execute one batch through the executor and fan results back out.
+/// Execute one batch through the executor and fan results back out,
+/// marking each request completed in the replica's outstanding-work
+/// counter (success and failure alike).
 fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
-         n: usize, latency: &mut LatencyHistogram, requests: &mut u64) {
+         n: usize, state: &ReplicaState, latency: &mut LatencyHistogram,
+         requests: &mut u64) {
     if n == 0 {
         return;
     }
@@ -501,20 +809,27 @@ fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
             let msg = format!("executor returned {} rows for a batch of {}",
                               rows.len(), pending.len());
             for p in pending {
-                let _ = p.payload.resp.send(Err(anyhow!("{msg}")));
+                state.note_completed();
+                let _ = p.payload.resp
+                    .send(Err(Rejection::terminal(
+                        ServeError::Failed(msg.clone()))));
             }
         }
         Ok(rows) => {
             for (p, row) in pending.into_iter().zip(rows) {
+                state.note_completed();
                 latency.record(p.payload.enqueued.elapsed());
                 *requests += 1;
                 let _ = p.payload.resp.send(Ok(row));
             }
         }
         Err(e) => {
-            let msg = format!("batch execute failed: {e}");
+            let msg = format!("batch execute failed: {e:#}");
             for p in pending {
-                let _ = p.payload.resp.send(Err(anyhow!("{msg}")));
+                state.note_completed();
+                let _ = p.payload.resp
+                    .send(Err(Rejection::terminal(
+                        ServeError::Failed(msg.clone()))));
             }
         }
     }

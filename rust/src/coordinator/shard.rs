@@ -1,0 +1,398 @@
+//! Head-parallel model shards: the model-parallel half of sharded
+//! serving (DESIGN.md §10).
+//!
+//! CAT's mixer is *separable over heads*: each head's softmax weight
+//! vector and circular cross-correlation touch only that head's slice of
+//! `W_A`/`W_V` and its own FFT stripes, and heads meet again only at the
+//! merge that interleaves their `dh`-wide outputs (Fast-FNet makes the
+//! same observation for Fourier-mixing layers). [`ShardedNativeModel`]
+//! exploits that: it splits a [`NativeCatModel`] head-wise into K shards,
+//! each owning head-sliced copies of every block's mixing weights
+//! ([`CatLayer::head_slice`]) and computing its heads' stripes on a
+//! **dedicated worker pool** ([`Pool::dedicated`]), so shards never
+//! contend for one task queue.
+//!
+//! Per block the router (the replica worker thread driving
+//! [`NativeCatModel::forward_batch_with`]):
+//!
+//! 1. **scatters** the LN'd activations once — each shard job borrows the
+//!    same `x` slice, no per-shard input copies;
+//! 2. shards compute `(b, n, hs·dh)` mixer outputs concurrently into
+//!    disjoint per-shard gather buffers (grow-only, reused across
+//!    requests);
+//! 3. **gathers** the head outputs back into the `(b, n, d)` `mixed`
+//!    buffer — a pure column concat — before the residual add, MLP, and
+//!    (at the top of the stack) the merged output projection.
+//!
+//! Everything non-separable (patchify, LayerNorms, residuals, MLPs,
+//! classifier head) runs on the replica thread exactly as unsharded.
+//! Because the head slices preserve every per-element accumulation order
+//! (`CatLayer::head_slice` docs), sharded and unsharded forwards are
+//! **bit-identical** — pinned by `tests/sharded_serving.rs` and the
+//! coordinator bench.
+//!
+//! Threading: each shard owns one long-lived dispatch thread (spawned at
+//! construction, never at request time) that installs its dedicated pool
+//! via [`pool::set_thread_pool`] and executes scatter jobs from a small
+//! channel. Job closures borrow the caller's frame; the dispatch follows
+//! `pool::run_scoped`'s erase-then-wait discipline (a latch blocks the
+//! caller until every shard finished or unwound), which is what makes the
+//! lifetime erasure sound. A dead dispatch thread degrades to inline
+//! execution on the caller — requests slow down, they never hang.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender};
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use crate::native::pool::{self, CountGuard, Latch, Pool};
+use crate::native::{CatLayer, NativeCatModel, NativeVitConfig};
+use crate::Result;
+
+/// One shard's erased scatter job (see module docs for why 'static).
+type ShardJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Erase a scoped shard job to feed the dispatch channel.
+///
+/// # Safety
+/// The caller must block on the section's latch before its frame ends
+/// (every job carries a [`CountGuard`] that fires on completion *and* on
+/// unwind), so no borrow captured by `job` survives the erasing frame.
+unsafe fn erase_job<'scope>(job: Box<dyn FnOnce() + Send + 'scope>)
+                            -> ShardJob {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, ShardJob>(job)
+}
+
+/// Per-instance shard counters (atomics so shard jobs and the driving
+/// replica thread can bump them without locks).
+#[derive(Default)]
+struct ShardCounters {
+    threads_spawned: AtomicU64,
+    jobs: AtomicU64,
+    scatters: AtomicU64,
+    gathers: AtomicU64,
+    inline_fallbacks: AtomicU64,
+}
+
+/// Snapshot of one sharded model's counters, surfaced through
+/// [`crate::coordinator::WorkerStats`] and the coordinator bench JSON.
+/// `threads_spawned` counts this instance's dispatch threads plus its
+/// dedicated pool workers — it moves only during construction, so
+/// "steady-state serving spawns zero threads" is asserted as this field
+/// staying flat across traffic.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardStatsSnapshot {
+    /// Model-parallel shard count K.
+    pub shards: usize,
+    /// Dedicated pool workers per shard.
+    pub workers_per_shard: usize,
+    /// OS threads this instance ever spawned (dispatch + pool workers).
+    pub threads_spawned: u64,
+    /// Shard jobs dispatched (K per block per forward).
+    pub jobs: u64,
+    /// Scatter fan-outs performed (one per block per forward).
+    pub scatters: u64,
+    /// Gather concats performed (one per block per forward).
+    pub gathers: u64,
+    /// Jobs run inline on the caller because a dispatch thread was gone.
+    pub inline_fallbacks: u64,
+}
+
+/// A shard's long-lived dispatch thread. Jobs are erased closures; the
+/// thread installs its dedicated pool so the CAT forward's parallel
+/// sections fan out over shard-private workers.
+struct ShardWorker {
+    tx: Option<SyncSender<ShardJob>>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ShardWorker {
+    fn spawn(shard_idx: usize, pool_workers: usize,
+             counters: Arc<ShardCounters>) -> Result<ShardWorker> {
+        // dispatch thread + its dedicated pool workers, all at startup
+        counters.threads_spawned
+            .fetch_add(1 + pool_workers as u64, Ordering::Relaxed);
+        let (tx, rx) = mpsc::sync_channel::<ShardJob>(4);
+        let join = std::thread::Builder::new()
+            .name(format!("cat-shard-{shard_idx}"))
+            .spawn(move || {
+                let dedicated = Pool::dedicated(pool_workers);
+                pool::set_thread_pool(Some(dedicated));
+                while let Ok(job) = rx.recv() {
+                    // a panicking job must not kill the dispatch thread;
+                    // its CountGuard has already flagged the latch
+                    let _ = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(job));
+                }
+                // thread exit drops the thread-local pool handle, which
+                // closes the dedicated queue and releases its workers
+            })?;
+        Ok(ShardWorker { tx: Some(tx), join: Some(join) })
+    }
+}
+
+impl Drop for ShardWorker {
+    fn drop(&mut self) {
+        drop(self.tx.take()); // hang up: the dispatch loop ends
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+/// A [`NativeCatModel`] split head-wise into K model-parallel shards.
+///
+/// Construction slices the (seed-deterministic) full model's mixing
+/// weights per shard and spawns the shard substrate; `forward_batch`
+/// then matches `NativeCatModel::forward_batch` bit-for-bit (see module
+/// docs). The full model is retained for the non-separable trunk.
+pub struct ShardedNativeModel {
+    model: NativeCatModel,
+    /// Head range `[start, end)` owned by each shard.
+    ranges: Vec<(usize, usize)>,
+    /// `slices[s][block]`: shard `s`'s head-sliced mixing layer.
+    slices: Vec<Vec<CatLayer>>,
+    workers: Vec<ShardWorker>,
+    /// Per-shard gather buffers, grow-only, reused across requests.
+    outs: RefCell<Vec<Vec<f32>>>,
+    counters: Arc<ShardCounters>,
+    workers_per_shard: usize,
+}
+
+impl ShardedNativeModel {
+    /// Split the `(cfg, seed)` model into `shards` head shards. Head
+    /// counts not divisible by K are split as evenly as possible (the
+    /// first `h % K` shards own one extra head). `workers_per_shard`
+    /// defaults to the machine's pool budget divided across shards.
+    pub fn new(cfg: NativeVitConfig, seed: u64, shards: usize,
+               workers_per_shard: Option<usize>)
+               -> Result<ShardedNativeModel> {
+        ensure!(shards >= 1, "need at least one shard");
+        ensure!(shards <= cfg.n_heads,
+                "cannot split {} heads into {} shards", cfg.n_heads, shards);
+        let workers_per_shard = workers_per_shard
+            .unwrap_or_else(|| (pool::hardware_workers() / shards).max(1))
+            .max(1);
+        let mut model = NativeCatModel::new(cfg, seed);
+        let counters = Arc::new(ShardCounters::default());
+
+        let (h, base, rem) = (cfg.n_heads, cfg.n_heads / shards,
+                              cfg.n_heads % shards);
+        let mut ranges = Vec::with_capacity(shards);
+        let mut start = 0usize;
+        for s in 0..shards {
+            let len = base + usize::from(s < rem);
+            ranges.push((start, start + len));
+            start += len;
+        }
+        debug_assert_eq!(start, h);
+
+        let slices: Vec<Vec<CatLayer>> = ranges
+            .iter()
+            .map(|&(h0, h1)| model.sliced_cat_layers(h0, h1))
+            .collect();
+        // the shards now hold the only copies of the mixing weights;
+        // keeping them in the trunk too would double per-replica memory
+        // on exactly the axis sharding is meant to scale
+        model.strip_mixer_weights();
+        let workers = (0..shards)
+            .map(|s| ShardWorker::spawn(s, workers_per_shard,
+                                        counters.clone()))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedNativeModel {
+            model,
+            ranges,
+            slices,
+            workers,
+            outs: RefCell::new(vec![Vec::new(); shards]),
+            counters,
+            workers_per_shard,
+        })
+    }
+
+    pub fn cfg(&self) -> &NativeVitConfig {
+        &self.model.cfg
+    }
+
+    /// The underlying trunk model. Its per-block mixing weights are
+    /// **stripped** (they live in the head slices instead); drive it
+    /// only through `forward_batch_with`.
+    pub fn model(&self) -> &NativeCatModel {
+        &self.model
+    }
+
+    pub fn shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn stats(&self) -> ShardStatsSnapshot {
+        ShardStatsSnapshot {
+            shards: self.ranges.len(),
+            workers_per_shard: self.workers_per_shard,
+            threads_spawned:
+                self.counters.threads_spawned.load(Ordering::Relaxed),
+            jobs: self.counters.jobs.load(Ordering::Relaxed),
+            scatters: self.counters.scatters.load(Ordering::Relaxed),
+            gathers: self.counters.gathers.load(Ordering::Relaxed),
+            inline_fallbacks:
+                self.counters.inline_fallbacks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Classify a batch of CHW images; bit-identical to the unsharded
+    /// `NativeCatModel::forward_batch` on the same `(cfg, seed)`.
+    pub fn forward_batch(&self, images: &[f32], b: usize)
+                         -> Result<Vec<f32>> {
+        self.model.forward_batch_with(images, b, |li, x, bb, n, mixed| {
+            self.mix_sharded(li, x, bb, n, mixed)
+        })
+    }
+
+    /// One block's mixer, scattered across the shards and gathered back
+    /// into `mixed: (b, n, d)`.
+    fn mix_sharded(&self, li: usize, x: &[f32], b: usize, n: usize,
+                   mixed: &mut [f32]) -> Result<()> {
+        let k = self.ranges.len();
+        let cfg = &self.model.cfg;
+        let (d, dh) = (cfg.d_model, cfg.d_model / cfg.n_heads);
+        let mode = cfg.cat_impl;
+
+        let mut outs = self.outs.borrow_mut();
+        for (&(h0, h1), out) in self.ranges.iter().zip(outs.iter_mut()) {
+            let need = b * n * (h1 - h0) * dh;
+            if out.len() < need {
+                out.resize(need, 0.0);
+            }
+        }
+
+        self.counters.scatters.fetch_add(1, Ordering::Relaxed);
+        let latch = Arc::new(Latch::new(k));
+        for ((layer, worker), out) in self.slices.iter()
+            .map(|layers| &layers[li])
+            .zip(&self.workers)
+            .zip(outs.iter_mut())
+        {
+            let ws = layer.width();
+            let dst = &mut out[..b * n * ws];
+            let guard_latch = latch.clone();
+            let job = Box::new(move || {
+                let _guard = CountGuard::new(guard_latch);
+                // the slice layer re-validates shapes; a failure here is
+                // a construction bug, and the panic is surfaced to the
+                // caller through the latch flag below
+                layer.forward_into(x, b, n, mode, dst)
+                    .expect("shard mixer forward");
+            });
+            // SAFETY: same discipline as pool::Pool::run_scoped — the
+            // latch.wait() below blocks this frame until every job has
+            // completed or unwound (CountGuard fires in both cases), so
+            // the borrows of `x`, `dst`, and the slice layer never
+            // outlive this call even though the channel stores the job
+            // as 'static. The job moves to exactly one dispatch thread.
+            let job: ShardJob = unsafe { erase_job(job) };
+            self.counters.jobs.fetch_add(1, Ordering::Relaxed);
+            match worker.tx.as_ref().expect("live worker tx").send(job) {
+                Ok(()) => {}
+                Err(send_err) => {
+                    // dispatch thread is gone: run the job inline so the
+                    // request still completes (and the latch still
+                    // counts down via the job's own guard)
+                    self.counters.inline_fallbacks
+                        .fetch_add(1, Ordering::Relaxed);
+                    (send_err.0)();
+                }
+            }
+        }
+        latch.wait();
+        ensure!(!latch.panicked(),
+                "block {li}: a model shard panicked during the mixer \
+                 scatter");
+
+        // gather: concat each shard's head columns into (b, n, d)
+        for (&(h0, h1), out) in self.ranges.iter().zip(outs.iter()) {
+            let ws = (h1 - h0) * dh;
+            let c0 = h0 * dh;
+            for row in 0..b * n {
+                mixed[row * d + c0..row * d + c0 + ws]
+                    .copy_from_slice(&out[row * ws..(row + 1) * ws]);
+            }
+        }
+        self.counters.gathers.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::native::CatImpl;
+
+    fn test_images(cfg: &NativeVitConfig, b: usize, seed: u64) -> Vec<f32> {
+        let len = b * cfg.n_channels * cfg.image_size * cfg.image_size;
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn sharded_matches_unsharded_bitwise() {
+        let cfg = NativeVitConfig::default(); // d=64 h=4 L=2, FFT
+        let full = NativeCatModel::new(cfg, 7);
+        let images = test_images(&cfg, 2, 11);
+        let want = full.forward_batch(&images, 2).unwrap();
+        for k in [1usize, 2, 3, 4] {
+            let sharded =
+                ShardedNativeModel::new(cfg, 7, k, Some(1)).unwrap();
+            let got = sharded.forward_batch(&images, 2).unwrap();
+            assert_eq!(got, want, "K={k} diverged from unsharded");
+            let stats = sharded.stats();
+            assert_eq!(stats.shards, k);
+            // one scatter+gather per block per forward, K jobs each
+            assert_eq!(stats.scatters, cfg.n_layers as u64);
+            assert_eq!(stats.jobs, (cfg.n_layers * k) as u64);
+            assert_eq!(stats.inline_fallbacks, 0);
+        }
+    }
+
+    #[test]
+    fn sharded_gather_mode_and_uneven_heads() {
+        let cfg = NativeVitConfig {
+            cat_impl: CatImpl::Gather,
+            ..Default::default()
+        };
+        let images = test_images(&cfg, 1, 13);
+        let want = NativeCatModel::new(cfg, 3).forward_batch(&images, 1)
+            .unwrap();
+        // 4 heads over 3 shards: ranges (0,2) (2,3) (3,4)
+        let sharded = ShardedNativeModel::new(cfg, 3, 3, Some(1)).unwrap();
+        assert_eq!(sharded.ranges, vec![(0, 2), (2, 3), (3, 4)]);
+        let got = sharded.forward_batch(&images, 1).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn steady_state_forwards_spawn_no_threads() {
+        let cfg = NativeVitConfig::default();
+        let sharded = ShardedNativeModel::new(cfg, 2, 2, Some(1)).unwrap();
+        let images = test_images(&cfg, 1, 17);
+        sharded.forward_batch(&images, 1).unwrap(); // warmup
+        let spawned = sharded.stats().threads_spawned;
+        // 2 dispatch threads + 2 pools × 1 worker
+        assert_eq!(spawned, 4);
+        for _ in 0..8 {
+            sharded.forward_batch(&images, 1).unwrap();
+        }
+        assert_eq!(sharded.stats().threads_spawned, spawned,
+                   "steady-state sharded forwards spawned threads");
+    }
+
+    #[test]
+    fn too_many_shards_rejected() {
+        let cfg = NativeVitConfig::default(); // 4 heads
+        assert!(ShardedNativeModel::new(cfg, 0, 5, None).is_err());
+        assert!(ShardedNativeModel::new(cfg, 0, 0, None).is_err());
+        assert!(ShardedNativeModel::new(cfg, 0, 4, Some(1)).is_ok());
+    }
+}

@@ -52,6 +52,11 @@ commands:
                 pjrt extras: [--checkpoint PATH] [--fused] [--augment])
   eval         --config NAME [--checkpoint PATH] [--batches N]  [pjrt]
   serve        [--config NAME] [--requests N] [--backend pjrt|native]
+               [--shards K] [--replicas R]
+               (K>1 splits each native model head-wise across K
+                model-parallel shards on dedicated pools; R>1 runs R
+                data-parallel replicas behind the router with health
+                checks + Busy backpressure — DESIGN.md §10)
   table1       [--fast] [--steps N] [--json PATH]    (Table 1)  [pjrt]
   table2       [--fast] [--steps N] [--json PATH]    (Table 2)  [pjrt]
   table3       [--steps N] [--json PATH]   (Table 3 / Fig 2)    [pjrt]
@@ -64,7 +69,8 @@ serve/train/list/complexity run hermetically on the native backend
 
 const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "batches", "requests", "json", "artifacts",
-                          "backend", "save", "resume"];
+                          "backend", "save", "resume", "shards",
+                          "replicas"];
 
 fn main() {
     if let Err(e) = run() {
@@ -348,6 +354,13 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
     };
     let config = args.get_or("config", default_model).to_string();
     let requests: usize = args.parse_or("requests", 256)?;
+    let shards: usize = args.parse_or("shards", 1)?;
+    let replicas: usize = args.parse_or("replicas", 1)?;
+    anyhow::ensure!(shards >= 1 && replicas >= 1,
+                    "--shards and --replicas must be at least 1");
+    anyhow::ensure!(backend == Backend::Native || shards == 1,
+                    "--shards is a native-backend feature (head-parallel \
+                     model shards); drop it or add --backend native");
 
     // Fail fast on the silent-misconfiguration path: a named config with
     // no artifacts would otherwise serve the untrained native demo model
@@ -376,11 +389,14 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
 
     match backend {
         Backend::Native => eprintln!(
-            "[serve] backend=native model={config} (hermetic demo model: \
-             untrained CAT-FFT ViT, d=64 h=4 L=2)"),
-        Backend::Pjrt => eprintln!("[serve] backend=pjrt model={config}"),
+            "[serve] backend=native model={config} shards={shards} \
+             replicas={replicas} (hermetic demo model: untrained CAT-FFT \
+             ViT, d=64 h=4 L=2)"),
+        Backend::Pjrt => eprintln!(
+            "[serve] backend=pjrt model={config} replicas={replicas}"),
     }
-    let opts = ServeOptions { backend, ..Default::default() };
+    let opts = ServeOptions { backend, shards, replicas,
+                              ..Default::default() };
     let server = Server::spawn(cat::artifacts_dir(), &[config.clone()],
                                opts, 0)?;
     let handle = server.handle();
@@ -417,18 +433,33 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
     }
     let wall = t0.elapsed().as_secs_f64();
     drop(handle);
+    let router = server.router_stats();
     let stats = server.shutdown();
     let served = n_clients * per_client;
     println!("served {served} requests in {wall:.2}s ({:.1} req/s)",
              served as f64 / wall);
     println!("accuracy (untrained init): {:.3}",
              correct as f64 / served as f64);
+    println!("router: {} dispatched, {} busy-rejected, {} replicas died, \
+              pings {} ok / {} missed",
+             router.dispatched, router.busy_rejected, router.replicas_died,
+             router.pings_ok, router.pings_missed);
+    for m in cat::coordinator::aggregate_stats(&stats) {
+        println!("model {}: {} reqs / {} batches over {} replicas, \
+                  occupancy {:.2}, p50 {}us p99 {}us max {}us",
+                 m.model, m.requests, m.batches, m.replicas,
+                 m.mean_occupancy, m.latency.quantile_us(0.5),
+                 m.latency.quantile_us(0.99), m.latency.max_us());
+    }
     for s in stats {
-        println!("worker {}: {} reqs / {} batches, occupancy {:.2}, \
-                  p50 {}us p99 {}us max {}us",
-                 s.model, s.requests, s.batches, s.mean_occupancy,
-                 s.latency.quantile_us(0.5), s.latency.quantile_us(0.99),
-                 s.latency.max_us());
+        let shard_note = s.shard
+            .map(|sh| format!(" [{} shards x {} workers, {} scatters]",
+                              sh.shards, sh.workers_per_shard, sh.scatters))
+            .unwrap_or_default();
+        println!("  replica {}/{}: {} reqs / {} batches, occupancy \
+                  {:.2}{shard_note}",
+                 s.model, s.replica, s.requests, s.batches,
+                 s.mean_occupancy);
     }
     Ok(())
 }

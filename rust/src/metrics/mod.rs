@@ -129,6 +129,17 @@ impl LatencyHistogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Fold another histogram into this one (replica-stats aggregation:
+    /// buckets and totals add, max takes the larger).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
     pub fn count(&self) -> u64 {
         self.count
     }
@@ -252,6 +263,19 @@ mod tests {
         assert_eq!(h.count(), 4);
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn histogram_merge_adds_counts_and_keeps_max() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record(Duration::from_micros(10));
+        b.record(Duration::from_micros(1000));
+        b.record(Duration::from_micros(50));
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.max_us(), 1000);
+        assert!((a.mean_us() - (10.0 + 1000.0 + 50.0) / 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -151,10 +151,21 @@ fn merge_heads(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 // the CAT mixing layer
 // ---------------------------------------------------------------------------
 
-/// One CAT mixing layer: merged `W_A: (d, h)` plus `W_V: (d, d)`.
+/// One CAT mixing layer: merged `W_A: (d, h)` plus `W_V: (d, h·dh)`.
+///
+/// A *full* layer has `h·dh == d` (so `W_V` is the paper's `(d, d)`
+/// projection). A **head slice** ([`CatLayer::head_slice`]) keeps the
+/// input dim `d` and per-head width `dh` but owns only a contiguous run
+/// of heads — the model-parallel unit of sharded serving: per-head
+/// spectra never interact before the merge, so a slice computes columns
+/// `[h0·dh, h1·dh)` of the full layer's output bit-for-bit.
 pub struct CatLayer {
+    /// Input dim (always the full model width, even for a slice).
     pub d: usize,
+    /// Heads owned by this layer (the full head count, or a slice of it).
     pub h: usize,
+    /// Channels per head (`d_model / n_heads` of the *full* layer).
+    pub dh: usize,
     w_a: Vec<f32>,
     w_v: Vec<f32>,
 }
@@ -166,35 +177,70 @@ impl CatLayer {
         assert!(h > 0 && d % h == 0, "d ({d}) must divide into h ({h}) heads");
         let w_a = (0..d * h).map(|_| 0.02 * rng.normal()).collect();
         let w_v = (0..d * d).map(|_| 0.02 * rng.normal()).collect();
-        CatLayer { d, h, w_a, w_v }
+        CatLayer { d, h, dh: d / h, w_a, w_v }
     }
 
-    /// Learnable parameters: `(d + h)·d`, the paper's CAT budget.
+    /// Output width of this layer: `h·dh` (`== d` for a full layer).
+    pub fn width(&self) -> usize {
+        self.h * self.dh
+    }
+
+    /// Copy out heads `[h0, h1)` as a standalone slice layer: its `W_A`
+    /// keeps columns `h0..h1`, its `W_V` keeps columns
+    /// `h0·dh..h1·dh`. Every per-output-element accumulation order is
+    /// unchanged (matmuls sum over the input dim, softmax/FFT act per
+    /// head), so a slice's output equals the matching columns of the
+    /// full forward **bit-exactly** — the invariant the sharded serving
+    /// tests pin.
+    pub fn head_slice(&self, h0: usize, h1: usize) -> CatLayer {
+        assert!(h0 < h1 && h1 <= self.h,
+                "bad head slice [{h0}, {h1}) of {} heads", self.h);
+        let (d, dh, w) = (self.d, self.dh, self.width());
+        let hs = h1 - h0;
+        let mut w_a = Vec::with_capacity(d * hs);
+        let mut w_v = Vec::with_capacity(d * hs * dh);
+        for k in 0..d {
+            w_a.extend_from_slice(&self.w_a[k * self.h + h0..
+                                            k * self.h + h1]);
+            w_v.extend_from_slice(&self.w_v[k * w + h0 * dh..
+                                            k * w + h1 * dh]);
+        }
+        CatLayer { d, h: hs, dh, w_a, w_v }
+    }
+
+    /// Learnable parameters: `(d + h)·d` for a full layer, the paper's
+    /// CAT budget (a head slice counts only its own columns).
     pub fn param_count(&self) -> usize {
-        (self.d + self.h) * self.d
+        self.w_a.len() + self.w_v.len()
     }
 
     /// Mix tokens: `x: (b, n, d)` row-major → freshly allocated
-    /// `(b, n, d)`. Benchmark/test convenience over [`Self::forward_into`].
+    /// `(b, n, width)`. Benchmark/test convenience over
+    /// [`Self::forward_into`].
     pub fn forward(&self, x: &[f32], b: usize, n: usize, mode: CatImpl)
                    -> Result<Vec<f32>> {
-        let mut out = vec![0.0f32; b * n * self.d];
+        let mut out = vec![0.0f32; b * n * self.width()];
         self.forward_into(x, b, n, mode, &mut out)?;
         Ok(out)
     }
 
-    /// Mix tokens into `out` (fully overwritten). All tensor
-    /// intermediates come from the thread-local arenas, so after warmup
-    /// the only heap traffic is the pool's small per-section dispatch
-    /// state (task list + one boxed job per chunk) when a section fans
-    /// out — nothing proportional to the tensor sizes.
+    /// Mix tokens into `out: (b, n, width)` (fully overwritten; for a
+    /// full layer `width == d`, for a head slice it is the slice's
+    /// `h·dh` columns). All tensor intermediates come from the
+    /// thread-local arenas, so after warmup the only heap traffic is the
+    /// pool's small per-section dispatch state (task list + one boxed
+    /// job per chunk) when a section fans out — nothing proportional to
+    /// the tensor sizes.
     pub fn forward_into(&self, x: &[f32], b: usize, n: usize, mode: CatImpl,
                         out: &mut [f32]) -> Result<()> {
-        let (d, h) = (self.d, self.h);
+        let (d, w) = (self.d, self.width());
         ensure!(x.len() == b * n * d,
                 "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
-        ensure!(out.len() == b * n * d,
-                "out has {} elements, expected {}x{}x{}", out.len(), b, n, d);
+        ensure!(out.len() == b * n * w,
+                "out has {} elements, expected {}x{}x{}", out.len(), b, n, w);
+        ensure!(self.w_a.len() == d * self.h && self.w_v.len() == d * w,
+                "CAT mixing weights are absent — this layer was stripped \
+                 (sharded serving trunk) and cannot mix tokens itself");
         if mode == CatImpl::Fft {
             ensure!(n.is_power_of_two(),
                     "CAT-FFT needs power-of-two N, got {n}");
@@ -221,15 +267,15 @@ impl CatLayer {
                 }
             }
         }
-        matmul(x, b * n, d, &self.w_v, d, v);
+        matmul(x, b * n, d, &self.w_v, self.width(), v);
     }
 
     /// O(N log N) path: stripe-transposed values, batched split-complex
     /// real FFTs, frequency-domain conjugate product.
     fn forward_fft_into(&self, x: &[f32], b: usize, n: usize,
                         out: &mut [f32]) {
-        let (d, h) = (self.d, self.h);
-        let dh = d / h;
+        let h = self.h;
+        let (dh, w) = (self.dh, self.width());
         let plan = split_rfft_plan(n);
         let f = plan.spectrum_len();
         let log_term = n.trailing_zeros() as usize + 1;
@@ -237,8 +283,8 @@ impl CatLayer {
             let [z, zs, v, vt, zf_re, zf_im] = la.frame([
                 b * n * h, // z: (b·n, h) projection
                 b * h * n, // zs: head-major softmax stripes
-                b * n * d, // v: (b·n, d) projection
-                b * n * d, // vt: stripe-transposed (b·h, dh, n) values
+                b * n * w, // v: (b·n, w) projection
+                b * n * w, // vt: stripe-transposed (b·h, dh, n) values
                 b * h * f, // zf: weight spectra, split re/im
                 b * h * f,
             ]);
@@ -255,9 +301,9 @@ impl CatLayer {
                 pool::run(tasks, 4 * n * dh, |(si, stripe)| {
                     let (bi, head) = (si / h, si % h);
                     for (c, row) in stripe.chunks_exact_mut(n).enumerate() {
-                        let base = bi * n * d + head * dh + c;
+                        let base = bi * n * w + head * dh + c;
                         for (i, slot) in row.iter_mut().enumerate() {
-                            *slot = v[base + i * d];
+                            *slot = v[base + i * w];
                         }
                     }
                 });
@@ -309,19 +355,19 @@ impl CatLayer {
                 });
             }
 
-            // un-transpose the stripes into (b, n, d)
+            // un-transpose the stripes into (b, n, w)
             {
                 let vt = &*vt;
                 let tasks: Vec<(usize, &mut [f32])> =
-                    out.chunks_mut(n * d).enumerate().collect();
-                pool::run(tasks, 4 * n * d, |(bi, obatch)| {
+                    out.chunks_mut(n * w).enumerate().collect();
+                pool::run(tasks, 4 * n * w, |(bi, obatch)| {
                     for head in 0..h {
                         for c in 0..dh {
                             let row = &vt[((bi * h + head) * dh + c) * n..]
                                 [..n];
                             let off = head * dh + c;
                             for (i, &val) in row.iter().enumerate() {
-                                obatch[i * d + off] = val;
+                                obatch[i * w + off] = val;
                             }
                         }
                     }
@@ -333,15 +379,15 @@ impl CatLayer {
     /// O(N²) path: the naive rolled gather, head-major.
     fn forward_gather_into(&self, x: &[f32], b: usize, n: usize,
                            out: &mut [f32]) {
-        let (d, h) = (self.d, self.h);
-        let dh = d / h;
+        let h = self.h;
+        let (dh, w) = (self.dh, self.width());
         arena::with_layer_arena(|la| {
             let [z, zs, v, vh, oh] = la.frame([
                 b * n * h,
                 b * h * n,
-                b * n * d,
-                b * n * d,
-                b * n * d,
+                b * n * w,
+                b * n * w,
+                b * n * w,
             ]);
             self.project(x, b, n, z, zs, v);
             for row in zs.chunks_mut(n) {
@@ -632,8 +678,54 @@ impl NativeCatModel {
             + self.head_w.len() + self.head_b.len()
     }
 
+    /// Number of transformer blocks in the stack.
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Head-sliced copies of every block's CAT mixing layer for heads
+    /// `[h0, h1)` — the per-shard weights of sharded serving
+    /// (`coordinator::shard`). Slice `i` of the returned vec pairs with
+    /// block `i` of this model.
+    pub fn sliced_cat_layers(&self, h0: usize, h1: usize) -> Vec<CatLayer> {
+        self.blocks.iter().map(|bl| bl.cat.head_slice(h0, h1)).collect()
+    }
+
+    /// Drop every block's mixing weights, keeping only the trunk (patch
+    /// embed, LayerNorms, MLPs, classifier head). Sharded serving calls
+    /// this after slicing so each replica's mixing weights exist exactly
+    /// once — in the head slices — instead of twice. A stripped model
+    /// must be driven through [`Self::forward_batch_with`]; the built-in
+    /// mixer path errors cleanly (`forward_into` checks weight lengths).
+    pub(crate) fn strip_mixer_weights(&mut self) {
+        for block in &mut self.blocks {
+            block.cat.w_a = Vec::new();
+            block.cat.w_v = Vec::new();
+        }
+    }
+
     /// Classify a batch of CHW images: `(b, C·H·W)` flat → `(b, classes)`.
     pub fn forward_batch(&self, images: &[f32], b: usize) -> Result<Vec<f32>> {
+        self.forward_batch_with(images, b, |li, norm, bb, n, mixed| {
+            self.blocks[li].cat.forward_into(norm, bb, n, self.cfg.cat_impl,
+                                             mixed)
+        })
+    }
+
+    /// The trunk with a pluggable token mixer: identical to
+    /// [`Self::forward_batch`] except that each block's CAT mixing is
+    /// delegated to `mix(block_idx, normed_x, b, n, mixed_out)`, which
+    /// must fully overwrite `mixed_out: (b, n, d)`. This is the seam the
+    /// sharded serving path uses to scatter the mixer across
+    /// model-parallel head shards while the non-separable parts
+    /// (patchify, LayerNorms, residuals, MLPs, classifier head) run
+    /// unchanged — keeping sharded and unsharded forwards bit-identical
+    /// by construction.
+    pub fn forward_batch_with<F>(&self, images: &[f32], b: usize, mut mix: F)
+                                 -> Result<Vec<f32>>
+    where
+        F: FnMut(usize, &[f32], usize, usize, &mut [f32]) -> Result<()>,
+    {
         let cfg = &self.cfg;
         let (d, n, pd) = (cfg.d_model, cfg.n_tokens(), cfg.patch_dim());
         let image_len = cfg.n_channels * cfg.image_size * cfg.image_size;
@@ -688,9 +780,9 @@ impl NativeCatModel {
             }
 
             // block stack (buffers reused across blocks)
-            for block in &self.blocks {
+            for (li, block) in self.blocks.iter().enumerate() {
                 block.ln1.apply(x, norm);
-                block.cat.forward_into(norm, b, n, cfg.cat_impl, mixed)?;
+                mix(li, norm, b, n, mixed)?;
                 for (xv, mv) in x.iter_mut().zip(mixed.iter()) {
                     *xv += mv;
                 }
@@ -797,6 +889,36 @@ mod tests {
         }
         assert_eq!(arena::thread_arena_capacities(), caps,
                    "steady-state forward_into grew this thread's arenas");
+    }
+
+    #[test]
+    fn head_slice_matches_full_forward_bitwise() {
+        // the sharding invariant: a head slice's output equals the
+        // matching columns of the full forward bit-for-bit, on both
+        // circulant applies — uneven and single-head slices included
+        let (b, n, d, h) = (2, 32, 24, 4);
+        let dh = d / h;
+        let mut rng = Rng::new(31);
+        let layer = CatLayer::init(d, h, &mut rng);
+        let x = random_x(b, n, d, 37);
+        for mode in [CatImpl::Fft, CatImpl::Gather] {
+            let full = layer.forward(&x, b, n, mode).unwrap();
+            for (h0, h1) in [(0, 1), (1, 3), (2, 4), (0, 4)] {
+                let slice = layer.head_slice(h0, h1);
+                assert_eq!(slice.width(), (h1 - h0) * dh);
+                assert_eq!(slice.param_count(),
+                           (h1 - h0) * d + (h1 - h0) * dh * d);
+                let part = slice.forward(&x, b, n, mode).unwrap();
+                let ws = slice.width();
+                for row in 0..b * n {
+                    assert_eq!(
+                        &part[row * ws..(row + 1) * ws],
+                        &full[row * d + h0 * dh..row * d + h1 * dh],
+                        "{} slice [{h0},{h1}) row {row} diverged",
+                        mode.name());
+                }
+            }
+        }
     }
 
     #[test]

@@ -39,9 +39,13 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 struct Queue {
     jobs: Mutex<VecDeque<Job>>,
     available: Condvar,
+    /// Dedicated pools flip this on drop so their workers exit; the
+    /// global pool's queue never closes.
+    closed: AtomicBool,
 }
 
 static THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
+static DEDICATED_THREADS_SPAWNED: AtomicU64 = AtomicU64::new(0);
 static CHUNKS_EXECUTED: AtomicU64 = AtomicU64::new(0);
 static PAR_SECTIONS: AtomicU64 = AtomicU64::new(0);
 static INLINE_SECTIONS: AtomicU64 = AtomicU64::new(0);
@@ -56,6 +60,21 @@ thread_local! {
     static FORCE_INLINE: std::cell::Cell<bool> = const {
         std::cell::Cell::new(false)
     };
+    /// Per-thread pool override: sections issued from this thread fan out
+    /// over this pool instead of the global one (see [`set_thread_pool`]).
+    static CURRENT_POOL: std::cell::RefCell<Option<Arc<Pool>>> = const {
+        std::cell::RefCell::new(None)
+    };
+}
+
+/// Route every parallel section issued from the *calling thread* to
+/// `pool` (or back to the global pool with `None`). The sharded serving
+/// path installs one dedicated pool per model shard on that shard's
+/// dispatch thread, so concurrent shards never contend for the same
+/// worker queue (`coordinator::shard`). Thread-local on purpose, like
+/// [`set_force_inline`].
+pub fn set_thread_pool(pool: Option<Arc<Pool>>) {
+    CURRENT_POOL.with(|p| *p.borrow_mut() = pool);
 }
 
 /// Force (or stop forcing) every parallel section issued from the
@@ -74,8 +93,13 @@ pub fn set_force_inline(on: bool) {
 pub struct PoolStats {
     /// Worker threads the global pool runs (0 until first use).
     pub workers: usize,
-    /// OS threads ever spawned by the pool (== `workers` after warmup).
+    /// OS threads ever spawned by the *global* pool (== `workers` after
+    /// warmup).
     pub threads_spawned: u64,
+    /// OS threads ever spawned by dedicated pools ([`Pool::dedicated`]).
+    /// Moves only while a dedicated pool is being constructed (server /
+    /// shard startup) — steady-state serving keeps it flat.
+    pub dedicated_threads_spawned: u64,
     /// Task chunks executed on pool workers.
     pub chunks_executed: u64,
     /// Parallel sections that engaged the pool.
@@ -89,6 +113,8 @@ pub fn stats() -> PoolStats {
     PoolStats {
         workers: POOL.get().map_or(0, |p| p.workers),
         threads_spawned: THREADS_SPAWNED.load(Ordering::Relaxed),
+        dedicated_threads_spawned:
+            DEDICATED_THREADS_SPAWNED.load(Ordering::Relaxed),
         chunks_executed: CHUNKS_EXECUTED.load(Ordering::Relaxed),
         par_sections: PAR_SECTIONS.load(Ordering::Relaxed),
         inline_sections: INLINE_SECTIONS.load(Ordering::Relaxed),
@@ -97,12 +123,20 @@ pub fn stats() -> PoolStats {
 
 /// Upper bound on concurrent chunks one section should produce (pool
 /// workers + the participating caller). Chunk-count sizing for `matmul`
-/// and the CAT stripe sweep.
+/// and the CAT stripe sweep; honours the calling thread's dedicated-pool
+/// override so a shard sizes its sections to its own pool.
 pub fn max_parallel_tasks() -> usize {
-    hardware_workers() + 1
+    let dedicated =
+        CURRENT_POOL.with(|p| p.borrow().as_ref().map(|p| p.workers));
+    match dedicated {
+        Some(w) => w + 1,
+        None => hardware_workers() + 1,
+    }
 }
 
-fn hardware_workers() -> usize {
+/// Worker-thread budget the global pool uses (capped hardware
+/// parallelism); dedicated pools size themselves against this.
+pub fn hardware_workers() -> usize {
     static WORKERS: OnceLock<usize> = OnceLock::new();
     // effectively immutable for the process; cache to keep the per-section
     // gate check syscall-free on the hot path
@@ -116,14 +150,16 @@ fn hardware_workers() -> usize {
 
 /// Completion latch for one parallel section. Counted down by every
 /// chunk's drop guard, so unwinding chunks still release the caller.
-struct Latch {
+/// Shared with `coordinator::shard`, whose scatter/gather dispatch uses
+/// the same erase-then-wait discipline.
+pub(crate) struct Latch {
     remaining: Mutex<usize>,
     done: Condvar,
     panicked: AtomicBool,
 }
 
 impl Latch {
-    fn new(count: usize) -> Latch {
+    pub(crate) fn new(count: usize) -> Latch {
         Latch {
             remaining: Mutex::new(count),
             done: Condvar::new(),
@@ -139,17 +175,28 @@ impl Latch {
         }
     }
 
-    fn wait(&self) {
+    pub(crate) fn wait(&self) {
         let mut r = self.remaining.lock().expect("latch poisoned");
         while *r > 0 {
             r = self.done.wait(r).expect("latch poisoned");
         }
     }
+
+    /// Did any guarded chunk unwind? Valid after [`Latch::wait`] returns.
+    pub(crate) fn panicked(&self) -> bool {
+        self.panicked.load(Ordering::Relaxed)
+    }
 }
 
 /// Fires `count_down` on normal completion and on unwind; records the
 /// panic so the caller can re-raise after `wait`.
-struct CountGuard(Arc<Latch>);
+pub(crate) struct CountGuard(Arc<Latch>);
+
+impl CountGuard {
+    pub(crate) fn new(latch: Arc<Latch>) -> CountGuard {
+        CountGuard(latch)
+    }
+}
 
 impl Drop for CountGuard {
     fn drop(&mut self) {
@@ -176,6 +223,7 @@ impl Pool {
             let queue = Arc::new(Queue {
                 jobs: Mutex::new(VecDeque::new()),
                 available: Condvar::new(),
+                closed: AtomicBool::new(false),
             });
             for _ in 0..workers {
                 let q = queue.clone();
@@ -184,6 +232,32 @@ impl Pool {
             }
             Pool { queue, workers }
         })
+    }
+
+    /// A dedicated pool with its own workers and task queue, independent
+    /// of the global one — the per-shard compute substrate for sharded
+    /// serving. Spawned **once** at construction (startup, not request
+    /// time; tracked by `dedicated_threads_spawned` in [`stats`]); the
+    /// workers exit when the last `Arc` drops. Install it on a thread
+    /// with [`set_thread_pool`] to route that thread's sections here.
+    pub fn dedicated(workers: usize) -> Arc<Pool> {
+        let workers = workers.max(1);
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            closed: AtomicBool::new(false),
+        });
+        for _ in 0..workers {
+            let q = queue.clone();
+            DEDICATED_THREADS_SPAWNED.fetch_add(1, Ordering::Relaxed);
+            std::thread::spawn(move || worker_loop(&q));
+        }
+        Arc::new(Pool { queue, workers })
+    }
+
+    /// Worker threads this pool runs (excluding the participating caller).
+    pub fn worker_count(&self) -> usize {
+        self.workers
     }
 
     fn enqueue(&self, job: Job) {
@@ -259,6 +333,19 @@ impl Pool {
     }
 }
 
+/// Dropping the last handle to a *dedicated* pool closes its queue so
+/// the workers exit instead of parking forever (the global pool lives in
+/// a `OnceLock` and is never dropped, so its queue never closes). Any
+/// queued job still runs first: `run_scoped` waits on its latch before
+/// returning, so a closing queue is always already drained of live
+/// borrows.
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.queue.closed.store(true, Ordering::SeqCst);
+        self.queue.available.notify_all();
+    }
+}
+
 fn worker_loop(queue: &Queue) {
     IS_POOL_WORKER.with(|w| w.set(true));
     loop {
@@ -267,6 +354,9 @@ fn worker_loop(queue: &Queue) {
             loop {
                 if let Some(job) = jobs.pop_front() {
                     break job;
+                }
+                if queue.closed.load(Ordering::SeqCst) {
+                    return;
                 }
                 jobs = queue.available.wait(jobs).expect("pool queue");
             }
@@ -281,7 +371,9 @@ fn worker_loop(queue: &Queue) {
 /// Parallel-for over `tasks`: the section entry point the native layers
 /// use. Tiny sections (under [`PAR_THRESHOLD`] estimated FLOPs), lone
 /// tasks, and sections issued from inside a pool worker run inline on the
-/// caller; everything else fans out through [`Pool::global`].
+/// caller; everything else fans out through the calling thread's
+/// dedicated pool ([`set_thread_pool`]) when one is installed, else
+/// [`Pool::global`].
 pub fn run<'scope, T, F>(tasks: Vec<T>, est_flops_per_task: usize, f: F)
 where
     T: Send + 'scope,
@@ -290,16 +382,24 @@ where
     let total = tasks.len().saturating_mul(est_flops_per_task);
     let nested = IS_POOL_WORKER.with(|w| w.get());
     let forced = FORCE_INLINE.with(|f| f.get());
-    if tasks.len() <= 1 || total < PAR_THRESHOLD || nested || forced
-        || hardware_workers() <= 1
-    {
+    if tasks.len() <= 1 || total < PAR_THRESHOLD || nested || forced {
         INLINE_SECTIONS.fetch_add(1, Ordering::Relaxed);
         for t in tasks {
             f(t);
         }
         return;
     }
-    Pool::global().run_scoped(tasks, &f);
+    let dedicated = CURRENT_POOL.with(|p| p.borrow().clone());
+    match dedicated {
+        Some(pool) => pool.run_scoped(tasks, &f),
+        None if hardware_workers() <= 1 => {
+            INLINE_SECTIONS.fetch_add(1, Ordering::Relaxed);
+            for t in tasks {
+                f(t);
+            }
+        }
+        None => Pool::global().run_scoped(tasks, &f),
+    }
 }
 
 #[cfg(test)]
@@ -368,6 +468,36 @@ mod tests {
         assert_eq!(stats().threads_spawned, spawned,
                    "steady-state sections spawned new threads");
         assert_eq!(stats().workers as u64, spawned);
+    }
+
+    #[test]
+    fn dedicated_pool_runs_sections_then_shuts_down() {
+        // NOTE: the global dedicated-spawn counter is process-wide and
+        // other tests construct dedicated pools concurrently, so only
+        // monotonicity is asserted against it — exact accounting is
+        // pinned per-instance by `coordinator::shard`'s tests.
+        let before = stats().dedicated_threads_spawned;
+        let pool = Pool::dedicated(2);
+        assert_eq!(pool.worker_count(), 2);
+        assert!(stats().dedicated_threads_spawned >= before + 2,
+                "dedicated workers spawn at construction");
+        set_thread_pool(Some(pool.clone()));
+        // while the override is installed, section sizing follows the
+        // dedicated pool, not the machine
+        assert_eq!(max_parallel_tasks(), 3);
+        let mut out = vec![0usize; 256];
+        let tasks: Vec<(usize, &mut [usize])> =
+            out.chunks_mut(16).enumerate().collect();
+        run(tasks, PAR_THRESHOLD, |(ci, chunk)| {
+            chunk.fill(ci);
+        });
+        set_thread_pool(None);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i / 16, "element {i}");
+        }
+        // dropping the last handle closes the queue; the workers exit on
+        // their own (nothing to join — just must not wedge the process)
+        drop(pool);
     }
 
     #[test]

@@ -1,0 +1,350 @@
+//! Sharded serving integration tests: head-parallel model shards +
+//! data-parallel replicas behind the router, with health checks and
+//! Busy backpressure (DESIGN.md §10).
+//!
+//! The acceptance invariant is pinned here end-to-end: a K-sharded
+//! server produces **bit-identical** logits to an unsharded server on
+//! the same `(config, seed)` and the same hermetic eval inputs, and
+//! steady-state sharded traffic spawns zero threads.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex, OnceLock};
+use std::time::Duration;
+
+use cat::coordinator::{aggregate_stats, BatchExecutor, ExecutorFactory,
+                       ServeError, ServeOptions, Server, WorkerSpec};
+use cat::data::ShapeDataset;
+use cat::native::pool;
+use cat::runtime::Backend;
+use cat::tensor::HostTensor;
+use cat::Result;
+
+/// Server-creating tests run serialized: dedicated shard pools bump the
+/// process-wide spawn counters at construction, which would race the
+/// steady-state flatness assertion if another test built a server
+/// mid-measurement.
+fn server_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn native_opts(shards: usize, replicas: usize) -> ServeOptions {
+    ServeOptions {
+        backend: Backend::Native,
+        shards,
+        replicas,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    }
+}
+
+fn sample_input(ds: &ShapeDataset, tag: u64) -> HostTensor {
+    let sample = ds.sample(tag);
+    HostTensor::f32(vec![3, 32, 32], sample.pixels).expect("input")
+}
+
+#[test]
+fn sharded_serving_matches_unsharded_bitwise() {
+    let _guard = server_lock();
+    let ds = ShapeDataset::new(42);
+    let inputs: Vec<HostTensor> = (0..8).map(|i| sample_input(&ds, i))
+        .collect();
+
+    let plain = Server::spawn(PathBuf::from("no_artifacts"),
+                              &["m".to_string()], native_opts(1, 1), 9)
+        .expect("unsharded server");
+    let want: Vec<HostTensor> = {
+        let h = plain.handle();
+        let rows = inputs.iter()
+            .map(|t| h.infer("m", t.clone()).expect("unsharded infer"))
+            .collect();
+        drop(h);
+        rows
+    };
+    plain.shutdown();
+
+    let sharded = Server::spawn(PathBuf::from("no_artifacts"),
+                                &["m".to_string()], native_opts(2, 2), 9)
+        .expect("sharded server");
+    let handle = sharded.handle();
+    for (i, input) in inputs.iter().enumerate() {
+        let got = handle.infer("m", input.clone()).expect("sharded infer");
+        assert_eq!(got, want[i],
+                   "sharded (K=2,R=2) logits diverged on input {i}");
+    }
+    drop(handle);
+    let router = sharded.router_stats();
+    assert_eq!(router.dispatched, 8);
+    let stats = sharded.shutdown();
+    assert_eq!(stats.len(), 2, "one stats row per replica");
+    for s in &stats {
+        let shard = s.shard.expect("sharded replica reports shard stats");
+        assert_eq!(shard.shards, 2);
+        assert_eq!(shard.inline_fallbacks, 0);
+    }
+    let agg = aggregate_stats(&stats);
+    assert_eq!(agg.len(), 1);
+    assert_eq!(agg[0].model, "m");
+    assert_eq!(agg[0].replicas, 2);
+    assert_eq!(agg[0].requests, 8);
+    assert_eq!(agg[0].latency.count(), 8);
+}
+
+#[test]
+fn sharded_steady_state_spawns_zero_threads() {
+    let _guard = server_lock();
+    let server = Server::spawn(PathBuf::from("no_artifacts"),
+                               &["steady".to_string()], native_opts(2, 2),
+                               3)
+        .expect("sharded server");
+    let handle = server.handle();
+    let ds = ShapeDataset::new(7);
+    for i in 0..8 {
+        handle.infer("steady", sample_input(&ds, i)).expect("warmup");
+    }
+    let before = pool::stats();
+    for i in 0..32 {
+        handle.infer("steady", sample_input(&ds, 100 + i)).expect("infer");
+    }
+    let after = pool::stats();
+    assert_eq!(after.threads_spawned, before.threads_spawned,
+               "steady-state sharded traffic spawned global-pool threads");
+    assert_eq!(after.dedicated_threads_spawned,
+               before.dedicated_threads_spawned,
+               "steady-state sharded traffic spawned dedicated-pool \
+                threads");
+    drop(handle);
+    let stats = server.shutdown();
+    for s in &stats {
+        let shard = s.shard.expect("shard stats");
+        // 2 dispatch threads + 2 dedicated pools, all from construction
+        assert!(shard.threads_spawned >= 4);
+        assert_eq!(shard.inline_fallbacks, 0);
+    }
+}
+
+/// Echoes a constant row per input; sleeps to hold the worker busy so
+/// queue overflow (backpressure) is reachable deterministically.
+struct SlowEcho {
+    delay: Duration,
+}
+
+impl BatchExecutor for SlowEcho {
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        std::thread::sleep(self.delay);
+        inputs.iter()
+            .map(|_| HostTensor::f32(vec![1], vec![1.0]))
+            .collect()
+    }
+}
+
+#[test]
+fn backpressure_rejects_busy_with_retry_hint_then_recovers() {
+    let _guard = server_lock();
+    let factory: ExecutorFactory = Arc::new(|_spec: &WorkerSpec,
+                                             _opts: &ServeOptions| {
+        Ok(Box::new(SlowEcho { delay: Duration::from_millis(100) })
+            as Box<dyn BatchExecutor>)
+    });
+    let opts = ServeOptions {
+        queue_depth: 1,
+        ..native_opts(1, 1)
+    };
+    let specs = vec![WorkerSpec { model: "slow".into(), params: None,
+                                  seed: 0 }];
+    let server = Server::spawn_with(PathBuf::from("no_artifacts"), specs,
+                                    opts, Some(factory))
+        .expect("slow server");
+    let handle = server.handle();
+
+    let n_clients = 12usize;
+    let barrier = Arc::new(Barrier::new(n_clients));
+    let busy = Arc::new(AtomicU64::new(0));
+    let ok = Arc::new(AtomicU64::new(0));
+    let mut clients = Vec::new();
+    for _ in 0..n_clients {
+        let h = handle.clone();
+        let barrier = barrier.clone();
+        let busy = busy.clone();
+        let ok = ok.clone();
+        clients.push(std::thread::spawn(move || {
+            barrier.wait();
+            let input = HostTensor::f32(vec![1], vec![0.0]).expect("input");
+            match h.try_infer("slow", input) {
+                Ok(_) => {
+                    ok.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(ServeError::Busy { retry_after }) => {
+                    assert!(retry_after > Duration::ZERO,
+                            "Busy must carry a usable retry hint");
+                    busy.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(e) => panic!("unexpected failure under overload: {e}"),
+            }
+        }));
+    }
+    for c in clients {
+        c.join().expect("client thread");
+    }
+    let busy = busy.load(Ordering::Relaxed);
+    let ok = ok.load(Ordering::Relaxed);
+    assert_eq!(busy + ok, n_clients as u64);
+    assert!(busy > 0,
+            "12 concurrent clients against queue_depth=1 and a 100ms \
+             executor must overflow ({ok} served, {busy} busy)");
+    // the blocking path absorbs backpressure by retrying the hint
+    let input = HostTensor::f32(vec![1], vec![0.0]).expect("input");
+    handle.infer("slow", input).expect("retrying infer succeeds");
+    drop(handle);
+    server.shutdown();
+}
+
+/// Panics when an input's first element is the trigger value — the
+/// "worker dies mid-request" fault injector.
+struct PanicOnTrigger;
+
+const TRIGGER: f32 = 666.0;
+
+impl BatchExecutor for PanicOnTrigger {
+    fn max_batch(&self) -> usize {
+        2
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        for t in inputs {
+            if t.as_f32()?[0] == TRIGGER {
+                panic!("injected executor fault");
+            }
+        }
+        inputs.iter()
+            .map(|_| HostTensor::f32(vec![1], vec![2.0]))
+            .collect()
+    }
+}
+
+fn panic_factory() -> ExecutorFactory {
+    Arc::new(|_spec: &WorkerSpec, _opts: &ServeOptions| {
+        Ok(Box::new(PanicOnTrigger) as Box<dyn BatchExecutor>)
+    })
+}
+
+#[test]
+fn dead_worker_propagates_error_and_never_hangs() {
+    let _guard = server_lock();
+    let specs = vec![WorkerSpec { model: "frail".into(), params: None,
+                                  seed: 0 }];
+    let server = Server::spawn_with(PathBuf::from("no_artifacts"), specs,
+                                    native_opts(1, 1),
+                                    Some(panic_factory()))
+        .expect("frail server");
+    let handle = server.handle();
+    // the in-flight request whose worker dies must error, not hang
+    let trigger = HostTensor::f32(vec![1], vec![TRIGGER]).expect("input");
+    let err = handle.try_infer("frail", trigger).unwrap_err();
+    assert!(matches!(err, ServeError::Failed(_)),
+            "expected a terminal failure, got {err:?}");
+    // the lone replica is now dead. During the crash-detection window a
+    // request can still land in the dying replica's open queue and come
+    // back as "worker dropped request"; once the router observes the
+    // disconnected queue it must answer "no live replicas" immediately.
+    // Every attempt errors — none may hang or succeed.
+    let mut saw_no_live_replicas = false;
+    for _ in 0..50 {
+        let input = HostTensor::f32(vec![1], vec![0.0]).expect("input");
+        match handle.try_infer("frail", input) {
+            Ok(_) => panic!("a dead replica served a request"),
+            Err(ServeError::Failed(msg))
+                if msg.contains("no live replicas") =>
+            {
+                saw_no_live_replicas = true;
+                break;
+            }
+            Err(ServeError::Failed(msg)) => {
+                assert!(msg.contains("worker dropped"),
+                        "unhelpful dead-replica error: {msg}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            Err(ServeError::Busy { retry_after }) => {
+                std::thread::sleep(retry_after);
+            }
+        }
+    }
+    assert!(saw_no_live_replicas,
+            "router never settled on 'no live replicas'");
+    drop(handle);
+    let router = server.router_stats();
+    assert!(router.replicas_died >= 1,
+            "router never noticed the dead replica");
+    server.shutdown();
+}
+
+#[test]
+fn dead_replica_reroutes_to_survivor() {
+    let _guard = server_lock();
+    let specs = vec![WorkerSpec { model: "duo".into(), params: None,
+                                  seed: 0 }];
+    let server = Server::spawn_with(PathBuf::from("no_artifacts"), specs,
+                                    native_opts(1, 2),
+                                    Some(panic_factory()))
+        .expect("duo server");
+    let handle = server.handle();
+    // kill one of the two replicas
+    let trigger = HostTensor::f32(vec![1], vec![TRIGGER]).expect("input");
+    assert!(handle.try_infer("duo", trigger).is_err());
+    // traffic keeps flowing through the survivor. There is an inherent
+    // crash-detection window: until the router observes the dead
+    // replica's disconnected queue, a request can land in its still-open
+    // queue and die with it ("worker dropped request") — an idempotent
+    // client retries those with a fresh input, exactly as here.
+    for i in 0..8 {
+        let row = (0..50)
+            .find_map(|_| {
+                let input = HostTensor::f32(vec![1], vec![i as f32])
+                    .expect("in");
+                match handle.try_infer("duo", input) {
+                    Ok(row) => Some(row),
+                    Err(ServeError::Busy { retry_after }) => {
+                        std::thread::sleep(retry_after);
+                        None
+                    }
+                    Err(ServeError::Failed(msg))
+                        if msg.contains("worker dropped") => None,
+                    Err(e) => panic!("unexpected serving error: {e}"),
+                }
+            })
+            .expect("survivor must keep serving within 50 attempts");
+        assert_eq!(row.as_f32().expect("f32"), &[2.0]);
+    }
+    drop(handle);
+    let stats = server.shutdown();
+    // only the survivor reports stats (the dead replica never drained)
+    assert_eq!(stats.len(), 1);
+    assert_eq!(stats[0].requests, 8);
+    assert_eq!(stats[0].model, "duo");
+}
+
+#[test]
+fn health_monitor_pings_replicas() {
+    let _guard = server_lock();
+    let opts = ServeOptions {
+        health_every: Duration::from_millis(25),
+        ping_timeout: Duration::from_millis(250),
+        ..native_opts(1, 2)
+    };
+    let server = Server::spawn(PathBuf::from("no_artifacts"),
+                               &["pinged".to_string()], opts, 1)
+        .expect("server");
+    // idle replicas answer pings promptly from their blocking recv
+    std::thread::sleep(Duration::from_millis(400));
+    let router = server.router_stats();
+    assert!(router.pings_ok >= 2,
+            "monitor should have pinged both replicas by now: {router:?}");
+    server.shutdown();
+}

@@ -1,22 +1,32 @@
 //! L3 coordinator microbenches: the pure-rust hot paths that wrap every
 //! PJRT call — dynamic batcher push/poll/take, batch assembly from the
-//! synthetic substrates, logits post-processing. These must be negligible
-//! next to the executable runtime (EXPERIMENTS.md §Perf verifies).
+//! synthetic substrates, logits post-processing — plus the sharded
+//! serving steady state (head-parallel shards × data-parallel replicas,
+//! DESIGN.md §10): asserts sharded == unsharded outputs bit-exactly,
+//! zero per-request thread spawns, and backpressure engaging under
+//! queue overflow. Emits `BENCH_coordinator.json` with the shard
+//! counters (CI's perf-smoke runs `--smoke` and uploads it).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use cat::bench::Bench;
-use cat::coordinator::DynamicBatcher;
+use cat::coordinator::{aggregate_stats, BatchExecutor, DynamicBatcher,
+                       ExecutorFactory, ServeError, ServeOptions, Server,
+                       WorkerSpec};
 use cat::data::{Rng, ShapeDataset, TextCorpus};
+use cat::json::Json;
 use cat::metrics::{accuracy, token_nll};
+use cat::native::pool;
+use cat::runtime::Backend;
 use cat::tensor::HostTensor;
 
 fn main() {
-    // no flags — but a typoed one must still error, not pass silently
-    let _args = cat::bench::bench_args("coordinator", &[], &[]);
+    let args = cat::bench::bench_args("coordinator", &["smoke"], &[]);
+    let smoke = args.has("smoke");
     let mut bench = Bench::new("coordinator hot paths");
     bench.warmup = 2;
-    bench.samples = 20;
+    bench.samples = if smoke { 5 } else { 20 };
 
     bench.case("batcher_push_take_64", || {
         let mut batcher = DynamicBatcher::new(8, Duration::from_millis(1));
@@ -70,9 +80,6 @@ fn main() {
     // 64 requests from 4 client threads (hermetic — no artifacts)
     bench.samples = 5;
     bench.case("native_serve_64_reqs", || {
-        use cat::coordinator::{ServeOptions, Server};
-        use cat::runtime::Backend;
-
         let opts = ServeOptions {
             backend: Backend::Native,
             ..Default::default()
@@ -109,9 +116,7 @@ fn main() {
     // forward fans out over the persistent pool; PR 1 spawned scoped
     // threads per parallel section). Asserted via the pool spawn counter.
     {
-        use cat::coordinator::{ServeOptions, Server};
-        use cat::native::{pool, NativeVitConfig};
-        use cat::runtime::Backend;
+        use cat::native::NativeVitConfig;
 
         // big enough that forwards genuinely engage the pool
         let native = NativeVitConfig {
@@ -157,5 +162,190 @@ fn main() {
         server.shutdown();
     }
 
+    // sharded steady state (DESIGN.md §10): K=2 head shards × R=2
+    // replicas. Pins the acceptance criteria: sharded == unsharded
+    // outputs bit-exactly on the hermetic eval inputs, and zero
+    // per-request thread spawns (global AND dedicated pools) across
+    // steady-state traffic. Shard counters land in the JSON below.
+    let shard_json = {
+        let ds = ShapeDataset::new(77);
+        let eval_inputs: Vec<HostTensor> = (0..16)
+            .map(|i| {
+                let s = ds.sample(i);
+                HostTensor::f32(vec![3, 32, 32], s.pixels).expect("input")
+            })
+            .collect();
+
+        let unsharded_opts = ServeOptions {
+            backend: Backend::Native,
+            ..Default::default()
+        };
+        let plain = Server::spawn(cat::artifacts_dir(),
+                                  &["flat".to_string()], unsharded_opts, 0)
+            .expect("spawn unsharded server");
+        let want: Vec<HostTensor> = {
+            let h = plain.handle();
+            let rows = eval_inputs.iter()
+                .map(|t| h.infer("flat", t.clone()).expect("flat infer"))
+                .collect();
+            drop(h);
+            rows
+        };
+        plain.shutdown();
+
+        let opts = ServeOptions {
+            backend: Backend::Native,
+            shards: 2,
+            replicas: 2,
+            ..Default::default()
+        };
+        let server = Server::spawn(cat::artifacts_dir(),
+                                   &["sharded".to_string()], opts, 0)
+            .expect("spawn sharded server");
+        let handle = server.handle();
+        for (i, input) in eval_inputs.iter().enumerate() {
+            let got = handle.infer("sharded", input.clone())
+                .expect("sharded infer");
+            assert_eq!(got, want[i],
+                       "sharded (K=2,R=2) logits diverged from unsharded \
+                        on eval input {i}");
+        }
+        let before = pool::stats();
+        let reqs_per_iter = if smoke { 32u64 } else { 64 };
+        bench.case("sharded_serve_steady_k2_r2", || {
+            for i in 0..reqs_per_iter {
+                let input = eval_inputs[(i % 16) as usize].clone();
+                handle.infer("sharded", input).expect("sharded infer");
+            }
+        });
+        let after = pool::stats();
+        assert_eq!(after.threads_spawned, before.threads_spawned,
+                   "sharded steady state spawned global-pool threads");
+        assert_eq!(after.dedicated_threads_spawned,
+                   before.dedicated_threads_spawned,
+                   "sharded steady state spawned dedicated-pool threads");
+        println!("sharded steady state: 0 thread spawns across {} \
+                  requests (K=2 shards, R=2 replicas)",
+                 reqs_per_iter * (bench.warmup + bench.samples) as u64);
+        drop(handle);
+        let router = server.router_stats();
+        let stats = server.shutdown();
+        let agg = aggregate_stats(&stats);
+        assert_eq!(agg[0].requests as usize,
+                   16 + reqs_per_iter as usize * (bench.warmup
+                                                  + bench.samples));
+
+        let mut replicas = Vec::new();
+        for s in &stats {
+            let sh = s.shard.expect("sharded replica stats");
+            assert_eq!(sh.inline_fallbacks, 0,
+                       "healthy shards must never fall back inline");
+            replicas.push(Json::Obj(vec![
+                ("replica".into(), Json::from(s.replica)),
+                ("requests".into(), Json::Num(s.requests as f64)),
+                ("batches".into(), Json::Num(s.batches as f64)),
+                ("shards".into(), Json::from(sh.shards)),
+                ("workers_per_shard".into(),
+                 Json::from(sh.workers_per_shard)),
+                ("shard_threads_spawned".into(),
+                 Json::Num(sh.threads_spawned as f64)),
+                ("shard_jobs".into(), Json::Num(sh.jobs as f64)),
+                ("scatters".into(), Json::Num(sh.scatters as f64)),
+                ("gathers".into(), Json::Num(sh.gathers as f64)),
+                ("inline_fallbacks".into(),
+                 Json::Num(sh.inline_fallbacks as f64)),
+            ]));
+        }
+        Json::Obj(vec![
+            ("shards".into(), Json::from(2usize)),
+            ("replicas".into(), Json::from(2usize)),
+            ("sharded_equals_unsharded".into(), Json::from(true)),
+            ("steady_state_thread_spawns".into(), Json::from(0usize)),
+            ("dispatched".into(), Json::Num(router.dispatched as f64)),
+            ("busy_rejected".into(),
+             Json::Num(router.busy_rejected as f64)),
+            ("pings_ok".into(), Json::Num(router.pings_ok as f64)),
+            ("pings_missed".into(), Json::Num(router.pings_missed as f64)),
+            ("per_replica".into(), Json::Arr(replicas)),
+        ])
+    };
+
+    // backpressure: a deliberately slow executor behind a depth-1 queue
+    // must reject overflow with Busy + retry-after, engaging the
+    // explicit backpressure path rather than queueing unboundedly
+    let backpressure_json = {
+        struct SlowExec;
+        impl BatchExecutor for SlowExec {
+            fn max_batch(&self) -> usize {
+                1
+            }
+            fn infer_batch(&self, inputs: &[&HostTensor])
+                           -> cat::Result<Vec<HostTensor>> {
+                std::thread::sleep(Duration::from_millis(20));
+                Ok(inputs.iter()
+                    .map(|_| HostTensor::scalar_f32(0.0))
+                    .collect())
+            }
+        }
+        let factory: ExecutorFactory =
+            Arc::new(|_s: &WorkerSpec, _o: &ServeOptions| {
+                Ok(Box::new(SlowExec) as Box<dyn BatchExecutor>)
+            });
+        let opts = ServeOptions {
+            backend: Backend::Native,
+            queue_depth: 1,
+            ..Default::default()
+        };
+        let server = Server::spawn_with(
+            cat::artifacts_dir(),
+            vec![WorkerSpec { model: "slow".into(), params: None, seed: 0 }],
+            opts, Some(factory))
+            .expect("spawn slow server");
+        let handle = server.handle();
+        let mut busy = 0u64;
+        let mut served = 0u64;
+        let clients: Vec<_> = (0..8)
+            .map(|_| {
+                let h = handle.clone();
+                std::thread::spawn(move || {
+                    match h.try_infer("slow", HostTensor::scalar_f32(1.0)) {
+                        Ok(_) => (1u64, 0u64),
+                        Err(ServeError::Busy { .. }) => (0, 1),
+                        Err(e) => panic!("unexpected overload error: {e}"),
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            let (s, b) = c.join().expect("client");
+            served += s;
+            busy += b;
+        }
+        assert!(busy > 0,
+                "8 concurrent clients against a depth-1 queue and a 20ms \
+                 executor must trip backpressure (served {served})");
+        drop(handle);
+        let router = server.router_stats();
+        server.shutdown();
+        println!("backpressure: {busy} Busy rejections / {served} served \
+                  under deliberate overflow");
+        Json::Obj(vec![
+            ("clients".into(), Json::from(8usize)),
+            ("served".into(), Json::Num(served as f64)),
+            ("busy_rejected_observed".into(), Json::Num(busy as f64)),
+            ("busy_rejected_router".into(),
+             Json::Num(router.busy_rejected as f64)),
+        ])
+    };
+
     print!("{}", bench.report());
+    let out = Json::Obj(vec![
+        ("bench".into(), Json::from("coordinator")),
+        ("timing".into(), bench.to_json()),
+        ("sharded_steady_state".into(), shard_json),
+        ("backpressure".into(), backpressure_json),
+    ]);
+    std::fs::write("BENCH_coordinator.json", out.to_string_pretty())
+        .expect("write BENCH_coordinator.json");
+    eprintln!("results -> BENCH_coordinator.json");
 }

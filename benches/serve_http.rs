@@ -1,0 +1,193 @@
+//! HTTP serving-layer bench (DESIGN.md §11): the full wire path —
+//! socket → hardened parser → routes → router → native CAT executor —
+//! measured over real TCP on loopback with keep-alive clients. Emits
+//! `BENCH_serve_http.json` (request latency quantiles from the live
+//! `/metrics` histogram plus HTTP/router counters); CI's perf-smoke
+//! runs `--smoke` and uploads it.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use cat::bench::Bench;
+use cat::coordinator::{ServeOptions, Server};
+use cat::data::ShapeDataset;
+use cat::json::Json;
+use cat::metrics::LatencyHistogram;
+use cat::runtime::Backend;
+use cat::serve::routes::AppState;
+use cat::serve::{HttpCounters, HttpServer, HttpServerConfig};
+
+/// Read one keep-alive response (head + Content-Length body).
+fn read_response(s: &mut TcpStream) -> (u16, Vec<u8>) {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        let n = s.read(&mut byte).expect("read head");
+        assert!(n > 0, "connection closed mid-response");
+        head.push(byte[0]);
+    }
+    let text = String::from_utf8_lossy(&head).to_string();
+    let status: u16 = text.split_whitespace().nth(1)
+        .and_then(|v| v.parse().ok())
+        .expect("status line");
+    let len: usize = text.lines()
+        .find_map(|l| l.to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(|v| v.trim().parse().expect("length")))
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body).expect("read body");
+    (status, body)
+}
+
+fn main() {
+    let args = cat::bench::bench_args("serve_http", &["smoke"], &[]);
+    let smoke = args.has("smoke");
+    let mut bench = Bench::new("HTTP serving layer");
+    bench.warmup = 1;
+    bench.samples = if smoke { 3 } else { 10 };
+
+    // one long-lived stack: native demo model behind the router, HTTP
+    // front end on an ephemeral loopback port
+    let opts = ServeOptions {
+        backend: Backend::Native,
+        ..Default::default()
+    };
+    let server = Server::spawn(cat::artifacts_dir(),
+                               &["http_bench".to_string()], opts, 0)
+        .expect("spawn native server");
+    let state = AppState {
+        handle: server.handle(),
+        stats: server.stats_handle(),
+        http: HttpCounters::new(),
+        model: "http_bench".to_string(),
+        input_shape: vec![3, 32, 32],
+        request_timeout: Duration::from_secs(30),
+    };
+    let stats = state.stats.clone();
+    let http_counters = state.http.clone();
+    let http = HttpServer::start(HttpServerConfig::new("127.0.0.1:0"),
+                                 state)
+        .expect("http server");
+    let addr: SocketAddr = http.addr();
+
+    // pre-render one classify request (3·32·32 pixels, keep-alive)
+    let sample = ShapeDataset::new(5).sample(0);
+    let pixels = sample.pixels.iter()
+        .map(|p| format!("{p}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let body = format!("{{\"pixels\":[{pixels}]}}");
+    let classify = format!(
+        "POST /v1/classify HTTP/1.1\r\nHost: b\r\nContent-Length: {}\
+         \r\n\r\n{}", body.len(), body);
+    let healthz = "GET /healthz HTTP/1.1\r\nHost: b\r\n\r\n";
+    let metrics = "GET /metrics HTTP/1.1\r\nHost: b\r\n\r\n";
+
+    let connect = || {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_nodelay(true).expect("nodelay");
+        s.set_read_timeout(Some(Duration::from_secs(30)))
+            .expect("timeout");
+        s
+    };
+
+    // wire-path overhead floor: tiny request, no inference
+    let mut conn = connect();
+    let per_iter_health = if smoke { 32u64 } else { 256 };
+    bench.case("healthz_keepalive", || {
+        for _ in 0..per_iter_health {
+            conn.write_all(healthz.as_bytes()).expect("write");
+            let (status, _) = read_response(&mut conn);
+            assert_eq!(status, 200);
+        }
+    });
+
+    // the serving product: full classify round-trips on one connection
+    let mut conn = connect();
+    let per_iter = if smoke { 8u64 } else { 32 };
+    bench.case("classify_keepalive", || {
+        for _ in 0..per_iter {
+            conn.write_all(classify.as_bytes()).expect("write");
+            let (status, body) = read_response(&mut conn);
+            assert_eq!(status, 200, "classify failed: {}",
+                       String::from_utf8_lossy(&body));
+        }
+    });
+
+    // concurrent clients: 4 connections in flight (batcher coalesces)
+    let per_client = if smoke { 8u64 } else { 32 };
+    bench.case("classify_4_clients", || {
+        let clients: Vec<_> = (0..4)
+            .map(|_| {
+                let classify = classify.clone();
+                let mut conn = connect();
+                std::thread::spawn(move || {
+                    for _ in 0..per_client {
+                        conn.write_all(classify.as_bytes()).expect("write");
+                        let (status, _) = read_response(&mut conn);
+                        assert_eq!(status, 200);
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().expect("client");
+        }
+    });
+
+    // scrape cost (the payload observability tax)
+    let mut conn = connect();
+    bench.case("metrics_scrape", || {
+        conn.write_all(metrics.as_bytes()).expect("write");
+        let (status, body) = read_response(&mut conn);
+        assert_eq!(status, 200);
+        assert!(body.len() > 256, "metrics payload suspiciously small");
+    });
+
+    print!("{}", bench.report());
+
+    // request-latency quantiles from the same live histogram /metrics
+    // serves (enqueue→reply, microseconds)
+    let mut merged = LatencyHistogram::default();
+    for r in stats.replicas() {
+        merged.merge(&r.latency);
+    }
+    let router = stats.router();
+    let snap = http_counters.snapshot();
+    let out = Json::Obj(vec![
+        ("bench".into(), Json::from("serve_http")),
+        ("timing".into(), bench.to_json()),
+        ("request_latency_us".into(), Json::Obj(vec![
+            ("count".into(), Json::Num(merged.count() as f64)),
+            ("p50".into(), Json::Num(merged.quantile_us(0.5) as f64)),
+            ("p99".into(), Json::Num(merged.quantile_us(0.99) as f64)),
+            ("max".into(), Json::Num(merged.max_us() as f64)),
+        ])),
+        ("http".into(), Json::Obj(vec![
+            ("accepted".into(), Json::Num(snap.accepted as f64)),
+            ("requests".into(), Json::Num(snap.requests as f64)),
+            ("responses_2xx".into(), Json::Num(snap.status_2xx as f64)),
+            ("responses_4xx".into(), Json::Num(snap.status_4xx as f64)),
+            ("responses_5xx".into(), Json::Num(snap.status_5xx as f64)),
+            ("shed".into(), Json::Num(snap.shed as f64)),
+        ])),
+        ("router".into(), Json::Obj(vec![
+            ("dispatched".into(), Json::Num(router.dispatched as f64)),
+            ("busy_rejected".into(),
+             Json::Num(router.busy_rejected as f64)),
+            ("replicas_died".into(),
+             Json::Num(router.replicas_died as f64)),
+        ])),
+    ]);
+
+    http.shutdown();
+    server.shutdown();
+    assert_eq!(snap.status_4xx + snap.status_5xx, 0,
+               "bench traffic must be all-2xx");
+
+    std::fs::write("BENCH_serve_http.json", out.to_string_pretty())
+        .expect("write BENCH_serve_http.json");
+    eprintln!("results -> BENCH_serve_http.json");
+}

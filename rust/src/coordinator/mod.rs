@@ -7,15 +7,18 @@
 //! production-grade driver, per DESIGN.md §3, §6 and §10).
 
 pub mod batcher;
+pub mod retry;
 pub mod router;
 pub mod server;
 pub mod shard;
 pub mod workload;
 
 pub use batcher::{DynamicBatcher, Flush, Pending};
+pub use retry::{Backoff, BackoffPolicy};
 pub use router::{Rejection, RouterStats, ServeError, MAX_MISSED_PINGS};
-pub use server::{aggregate_stats, split_rows, BatchExecutor,
-                 ExecutorFactory, InferRequest, ModelStats, ServeHandle,
-                 ServeOptions, Server, WorkerSpec, WorkerStats};
+pub use server::{aggregate_stats, default_factory, split_rows,
+                 BatchExecutor, ExecutorFactory, InferRequest, ModelStats,
+                 ReplicaSnapshot, ServeHandle, ServeOptions, Server,
+                 StatsHandle, WorkerSpec, WorkerStats};
 pub use shard::{ShardStatsSnapshot, ShardedNativeModel};
 pub use workload::{ArrivalSampler, Arrivals};

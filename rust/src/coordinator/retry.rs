@@ -1,0 +1,217 @@
+//! Jittered exponential backoff with a retry budget — the one retry
+//! schedule every `Busy`-absorbing client shares (DESIGN.md §11).
+//!
+//! Both retrying surfaces route through here: `ServeHandle::infer`'s
+//! in-process loop and the HTTP integration tests' 429 recovery client.
+//! The schedule honors the server's `retry_after` hint as a **floor**
+//! (never retry sooner than the server asked), grows exponentially from
+//! there, and jitters multiplicatively so a thundering herd of rejected
+//! clients decorrelates instead of re-colliding on the next flush tick.
+//!
+//! The scheduler is split from the sleeper: [`Backoff::next_delay`]
+//! *computes* the schedule and tracks the budget, the caller sleeps.
+//! Tests drive the schedule directly — deterministically, with no
+//! wall-clock sleeps.
+
+use std::time::Duration;
+
+use crate::data::Rng;
+
+/// Shape of a backoff schedule. All fields are plain data so call sites
+/// can build variants from one base policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BackoffPolicy {
+    /// First delay (before jitter), also the growth origin.
+    pub base: Duration,
+    /// Multiplier per attempt (≥ 1.0; 2.0 = classic doubling).
+    pub factor: f64,
+    /// Per-attempt ceiling (before jitter).
+    pub max_delay: Duration,
+    /// Multiplicative jitter half-width in [0, 1): each delay is scaled
+    /// by a uniform factor in `[1 - jitter, 1 + jitter]`. 0 disables.
+    pub jitter: f64,
+    /// Total sleep budget: once the accumulated delays would exceed
+    /// this, the schedule ends (`next_delay` returns `None`).
+    pub budget: Duration,
+}
+
+impl BackoffPolicy {
+    /// The serving default: start at the router's flush cadence, double
+    /// per attempt, cap per-delay at 100ms, ±50% jitter.
+    pub fn serving(base: Duration, budget: Duration) -> BackoffPolicy {
+        BackoffPolicy {
+            base: base.max(Duration::from_micros(100)),
+            factor: 2.0,
+            max_delay: Duration::from_millis(100),
+            jitter: 0.5,
+            budget,
+        }
+    }
+
+    /// Start a schedule; `seed` decorrelates concurrent clients.
+    pub fn start(self, seed: u64) -> Backoff {
+        Backoff {
+            policy: self,
+            attempt: 0,
+            slept: Duration::ZERO,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+/// One in-progress retry schedule (one per request attempt sequence).
+#[derive(Debug)]
+pub struct Backoff {
+    policy: BackoffPolicy,
+    attempt: u32,
+    slept: Duration,
+    rng: Rng,
+}
+
+impl Backoff {
+    /// Next delay to sleep before retrying, or `None` when the budget
+    /// is exhausted (the caller surfaces the last error).
+    ///
+    /// `hint` is the server's `retry_after` — a floor on the raw delay,
+    /// so backoff never undercuts explicit server guidance.
+    pub fn next_delay(&mut self, hint: Option<Duration>)
+                      -> Option<Duration> {
+        let p = &self.policy;
+        let growth = p.factor.max(1.0).powi(self.attempt as i32);
+        let mut raw = p.base.as_secs_f64() * growth;
+        raw = raw.min(p.max_delay.as_secs_f64());
+        if let Some(h) = hint {
+            raw = raw.max(h.as_secs_f64());
+        }
+        let jitter = p.jitter.clamp(0.0, 0.999);
+        let scale = if jitter > 0.0 {
+            1.0 - jitter + 2.0 * jitter * self.rng.uniform()
+        } else {
+            1.0
+        };
+        let delay = Duration::from_secs_f64(raw * scale);
+        if self.slept + delay > p.budget {
+            return None;
+        }
+        self.attempt = self.attempt.saturating_add(1);
+        self.slept += delay;
+        Some(delay)
+    }
+
+    /// Attempts granted so far (delays returned, not counting the
+    /// initial try).
+    pub fn attempts(&self) -> u32 {
+        self.attempt
+    }
+
+    /// Total sleep granted so far.
+    pub fn slept(&self) -> Duration {
+        self.slept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> BackoffPolicy {
+        BackoffPolicy {
+            base: Duration::from_millis(1),
+            factor: 2.0,
+            max_delay: Duration::from_millis(100),
+            jitter: 0.5,
+            budget: Duration::from_secs(1),
+        }
+    }
+
+    #[test]
+    fn delays_stay_inside_jitter_bounds_and_grow() {
+        let mut b = policy().start(7);
+        let mut raws = Vec::new();
+        for attempt in 0..8 {
+            let d = b.next_delay(None).expect("inside budget");
+            let raw = 0.001 * 2f64.powi(attempt).min(100.0);
+            let raw = raw.min(0.1);
+            let secs = d.as_secs_f64();
+            assert!(secs >= raw * 0.5 - 1e-9 && secs <= raw * 1.5 + 1e-9,
+                    "attempt {attempt}: {secs}s outside [{}, {}]",
+                    raw * 0.5, raw * 1.5);
+            raws.push(raw);
+        }
+        // the raw schedule is monotone until the cap
+        assert!(raws.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(b.attempts(), 8);
+    }
+
+    #[test]
+    fn per_delay_cap_applies() {
+        let mut p = policy();
+        p.jitter = 0.0;
+        let mut b = p.start(0);
+        // attempt 10 raw = 1ms * 2^10 = 1.024s, capped at 100ms
+        let mut last = Duration::ZERO;
+        for _ in 0..9 {
+            last = b.next_delay(None).unwrap();
+        }
+        assert_eq!(last, Duration::from_millis(100));
+    }
+
+    #[test]
+    fn hint_floors_the_delay() {
+        let mut p = policy();
+        p.jitter = 0.0;
+        let mut b = p.start(0);
+        // base 1ms but the server said 50ms: honor the server
+        let d = b.next_delay(Some(Duration::from_millis(50))).unwrap();
+        assert_eq!(d, Duration::from_millis(50));
+        // once growth passes the hint, growth wins
+        for _ in 0..6 {
+            b.next_delay(None).unwrap();
+        }
+        let d = b.next_delay(Some(Duration::from_millis(50))).unwrap();
+        assert!(d > Duration::from_millis(50), "{d:?}");
+    }
+
+    #[test]
+    fn budget_exhausts_and_accounts() {
+        let mut p = policy();
+        p.jitter = 0.0;
+        p.budget = Duration::from_millis(10);
+        let mut b = p.start(0);
+        // 1 + 2 + 4 = 7ms granted; +8ms would blow the 10ms budget
+        assert!(b.next_delay(None).is_some());
+        assert!(b.next_delay(None).is_some());
+        assert!(b.next_delay(None).is_some());
+        assert!(b.next_delay(None).is_none(), "budget must exhaust");
+        assert_eq!(b.slept(), Duration::from_millis(7));
+        assert_eq!(b.attempts(), 3);
+        // exhausted stays exhausted
+        assert!(b.next_delay(None).is_none());
+    }
+
+    #[test]
+    fn schedules_are_deterministic_per_seed() {
+        let run = |seed| {
+            let mut b = policy().start(seed);
+            (0..6).map(|_| b.next_delay(None).unwrap()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43), "seeds must decorrelate schedules");
+    }
+
+    #[test]
+    fn zero_jitter_zero_growth_is_constant() {
+        let p = BackoffPolicy {
+            base: Duration::from_millis(5),
+            factor: 1.0,
+            max_delay: Duration::from_millis(100),
+            jitter: 0.0,
+            budget: Duration::from_millis(50),
+        };
+        let mut b = p.start(0);
+        for _ in 0..10 {
+            assert_eq!(b.next_delay(None), Some(Duration::from_millis(5)));
+        }
+        assert!(b.next_delay(None).is_none());
+    }
+}

@@ -54,6 +54,10 @@ pub enum ServeError {
     /// The request failed terminally (unknown model, dead replicas,
     /// executor error).
     Failed(String),
+    /// The caller's deadline expired before a result arrived (the HTTP
+    /// layer's per-request timeout → 504). The request may still
+    /// complete server-side; its response is discarded.
+    DeadlineExceeded,
 }
 
 impl fmt::Display for ServeError {
@@ -64,6 +68,9 @@ impl fmt::Display for ServeError {
                            (retry after {retry_after:?})")
             }
             ServeError::Failed(msg) => f.write_str(msg),
+            ServeError::DeadlineExceeded => {
+                f.write_str("request deadline exceeded")
+            }
         }
     }
 }

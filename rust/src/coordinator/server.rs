@@ -34,15 +34,16 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::AtomicBool;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
                       TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure};
 
 use super::batcher::{DynamicBatcher, Flush};
+use super::retry::BackoffPolicy;
 use super::router::{monitor_loop, Rejection, ReplicaSet, ReplicaState,
                     RouterCounters, RouterStats, ServeError, WorkerMsg};
 use super::shard::{ShardStatsSnapshot, ShardedNativeModel};
@@ -112,6 +113,14 @@ pub struct ServeHandle {
 /// blocking send.
 const INFER_BUSY_PATIENCE: Duration = Duration::from_secs(60);
 
+/// Seed source for per-call backoff schedules: concurrent retrying
+/// clients must jitter *differently* or they re-collide on every tick.
+static BACKOFF_SEED: AtomicU64 = AtomicU64::new(0x5E_ED);
+
+fn next_backoff_seed() -> u64 {
+    BACKOFF_SEED.fetch_add(1, Ordering::Relaxed)
+}
+
 impl ServeHandle {
     /// Submit one example without blocking on a saturated server: a
     /// `Busy` rejection (every live replica's queue full, or the router
@@ -119,15 +128,25 @@ impl ServeHandle {
     /// Blocks only for the actual inference once the request is queued.
     pub fn try_infer(&self, model: &str, input: HostTensor)
                      -> std::result::Result<HostTensor, ServeError> {
-        self.try_infer_keep(model, input).map_err(|(e, _)| e)
+        self.try_infer_keep(model, input, None).map_err(|(e, _)| e)
     }
 
     /// [`Self::try_infer`], but rejections that still own the input
-    /// hand it back — the clone-free retry primitive behind `infer`.
-    fn try_infer_keep(&self, model: &str, input: HostTensor)
+    /// hand it back — the clone-free retry primitive behind `infer` —
+    /// and an optional deadline bounds the wait for the response:
+    /// expiry surfaces [`ServeError::DeadlineExceeded`] (the request
+    /// may still complete server-side; its response is discarded when
+    /// the channel drops).
+    fn try_infer_keep(&self, model: &str, input: HostTensor,
+                      deadline: Option<Instant>)
                       -> std::result::Result<HostTensor,
                                              (ServeError,
                                               Option<HostTensor>)> {
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err((ServeError::DeadlineExceeded, Some(input)));
+            }
+        }
         let (tx, rx) = mpsc::sync_channel(1);
         let req = InferRequest {
             model: model.to_string(),
@@ -147,17 +166,32 @@ impl ServeHandle {
                             None));
             }
         }
-        match rx.recv() {
+        let outcome = match deadline {
+            None => rx.recv().map_err(|_| None),
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                rx.recv_timeout(left).map_err(|e| match e {
+                    RecvTimeoutError::Timeout => {
+                        Some(ServeError::DeadlineExceeded)
+                    }
+                    RecvTimeoutError::Disconnected => None,
+                })
+            }
+        };
+        match outcome {
             Ok(Ok(row)) => Ok(row),
             Ok(Err(rejection)) => Err((rejection.error, rejection.input)),
-            Err(_) => Err((ServeError::Failed(
+            Err(Some(e)) => Err((e, None)),
+            Err(None) => Err((ServeError::Failed(
                 "worker dropped request".into()), None)),
         }
     }
 
     /// Submit one example and block until its logits row is ready,
-    /// absorbing backpressure: `Busy` rejections are retried at the
-    /// server's hinted cadence (up to [`INFER_BUSY_PATIENCE`]), so this
+    /// absorbing backpressure: `Busy` rejections are retried on the
+    /// shared jittered-exponential schedule ([`BackoffPolicy`]), which
+    /// floors every delay at the server's hint and stops once
+    /// [`INFER_BUSY_PATIENCE`] of sleep has been spent — so this
     /// behaves like the old blocking path under load. The input is
     /// never cloned — rejections hand it back for the next attempt.
     /// Terminal failures return immediately; in particular, a request
@@ -167,19 +201,58 @@ impl ServeHandle {
     /// may resubmit with a fresh input, and the router routes the retry
     /// around the dead replica.
     pub fn infer(&self, model: &str, input: HostTensor) -> Result<HostTensor> {
-        let deadline = Instant::now() + INFER_BUSY_PATIENCE;
+        let mut backoff =
+            BackoffPolicy::serving(self.retry_after, INFER_BUSY_PATIENCE)
+                .start(next_backoff_seed());
         let mut input = input;
         loop {
-            match self.try_infer_keep(model, input) {
+            match self.try_infer_keep(model, input, None) {
                 Ok(row) => return Ok(row),
-                Err((ServeError::Busy { retry_after }, Some(returned)))
-                    if Instant::now() < deadline =>
-                {
-                    std::thread::sleep(retry_after.max(
-                        Duration::from_micros(100)));
-                    input = returned;
+                Err((ServeError::Busy { retry_after }, Some(returned))) => {
+                    match backoff.next_delay(Some(retry_after)) {
+                        Some(d) => {
+                            std::thread::sleep(d);
+                            input = returned;
+                        }
+                        None => {
+                            return Err(ServeError::Busy {
+                                retry_after,
+                            }.into());
+                        }
+                    }
                 }
                 Err((e, _)) => return Err(e.into()),
+            }
+        }
+    }
+
+    /// [`Self::infer`] bounded by an absolute deadline: `Busy` is
+    /// retried (jittered, hint-floored) only while the deadline allows,
+    /// and the wait for an accepted request's response is capped at the
+    /// deadline too. On expiry the caller sees either
+    /// [`ServeError::DeadlineExceeded`] (accepted but not answered in
+    /// time → HTTP 504) or the last [`ServeError::Busy`] (never
+    /// accepted → HTTP 429); terminal failures surface immediately.
+    pub fn infer_deadline(&self, model: &str, input: HostTensor,
+                          deadline: Instant)
+                          -> std::result::Result<HostTensor, ServeError> {
+        let budget = deadline.saturating_duration_since(Instant::now());
+        let mut backoff = BackoffPolicy::serving(self.retry_after, budget)
+            .start(next_backoff_seed());
+        let mut input = input;
+        loop {
+            match self.try_infer_keep(model, input, Some(deadline)) {
+                Ok(row) => return Ok(row),
+                Err((ServeError::Busy { retry_after }, Some(returned))) => {
+                    match backoff.next_delay(Some(retry_after)) {
+                        Some(d) if Instant::now() + d < deadline => {
+                            std::thread::sleep(d);
+                            input = returned;
+                        }
+                        _ => return Err(ServeError::Busy { retry_after }),
+                    }
+                }
+                Err((e, _)) => return Err(e),
             }
         }
     }
@@ -247,6 +320,88 @@ pub fn aggregate_stats(per_replica: &[WorkerStats]) -> Vec<ModelStats> {
     out
 }
 
+/// Per-replica counters updated **while serving** (under a mutex the
+/// worker touches once per flush), so `/metrics` can report request
+/// totals and latency without waiting for shutdown-time
+/// [`WorkerStats`]. The final stats are derived from the same counters
+/// — one bookkeeping path, two read sides.
+#[derive(Debug, Default)]
+pub(crate) struct LiveCounters {
+    pub(crate) requests: u64,
+    pub(crate) batches: u64,
+    pub(crate) latency: LatencyHistogram,
+}
+
+fn lock_live(live: &Mutex<LiveCounters>)
+             -> std::sync::MutexGuard<'_, LiveCounters> {
+    // a poisoned lock only means a worker panicked outside the guarded
+    // section; the counters themselves are always consistent
+    live.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// One replica's identity + shared observability state.
+struct ReplicaRef {
+    model: String,
+    replica: usize,
+    state: Arc<ReplicaState>,
+    live: Arc<Mutex<LiveCounters>>,
+}
+
+/// Point-in-time view of one replica for `/metrics` and `/healthz`.
+#[derive(Debug, Clone)]
+pub struct ReplicaSnapshot {
+    pub model: String,
+    pub replica: usize,
+    /// False once the replica's queue endpoint is gone (worker died).
+    pub alive: bool,
+    /// Dispatched-but-uncompleted requests (queued + in-flight).
+    pub outstanding: usize,
+    pub requests: u64,
+    pub batches: u64,
+    pub latency: LatencyHistogram,
+}
+
+/// Cloneable, lock-cheap observability handle over a running
+/// [`Server`]: router counters + per-replica live state. The HTTP
+/// layer holds one of these; unlike [`Server`] it is `Send + Sync` and
+/// does not keep the intake open.
+#[derive(Clone)]
+pub struct StatsHandle {
+    counters: Arc<RouterCounters>,
+    replicas: Arc<Vec<ReplicaRef>>,
+}
+
+impl StatsHandle {
+    pub fn router(&self) -> RouterStats {
+        self.counters.snapshot()
+    }
+
+    pub fn replicas(&self) -> Vec<ReplicaSnapshot> {
+        self.replicas
+            .iter()
+            .map(|r| {
+                let live = lock_live(&r.live);
+                ReplicaSnapshot {
+                    model: r.model.clone(),
+                    replica: r.replica,
+                    alive: r.state.is_alive(),
+                    outstanding: r.state.outstanding(),
+                    requests: live.requests,
+                    batches: live.batches,
+                    latency: live.latency.clone(),
+                }
+            })
+            .collect()
+    }
+
+    /// Degraded = at least one replica is dead (`/healthz` → 503): the
+    /// server still serves from survivors, but capacity is reduced and
+    /// an orchestrator should rotate the instance.
+    pub fn degraded(&self) -> bool {
+        self.replicas.iter().any(|r| !r.state.is_alive())
+    }
+}
+
 /// Options for batching behaviour, backend selection, and the sharded
 /// serving topology.
 #[derive(Debug, Clone, Copy)]
@@ -305,6 +460,7 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
     stop: Arc<AtomicBool>,
     counters: Arc<RouterCounters>,
+    replicas: Arc<Vec<ReplicaRef>>,
 }
 
 impl Server {
@@ -350,6 +506,7 @@ impl Server {
         let mut monitor_targets: Vec<(SyncSender<WorkerMsg>,
                                       Arc<ReplicaState>)> = Vec::new();
         let mut workers = Vec::new();
+        let mut replica_refs: Vec<ReplicaRef> = Vec::new();
         // workers report readiness so spawn() fails fast on bad configs
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         for spec in specs {
@@ -359,6 +516,13 @@ impl Server {
             for replica in 0..opts.replicas {
                 let (wtx, wrx) = mpsc::sync_channel(opts.queue_depth);
                 let state = ReplicaState::new();
+                let live = Arc::new(Mutex::new(LiveCounters::default()));
+                replica_refs.push(ReplicaRef {
+                    model: spec.model.clone(),
+                    replica,
+                    state: state.clone(),
+                    live: live.clone(),
+                });
                 monitor_targets.push((wtx.clone(), state.clone()));
                 txs.push(wtx);
                 let wstate = state.clone();
@@ -378,7 +542,7 @@ impl Server {
                             let _ = ready_tx.send(Ok(spec.model.clone()));
                             drop(ready_tx);
                             worker_loop(spec.model.clone(), replica, exec,
-                                        wrx, wstate, opts, stats_tx);
+                                        wrx, wstate, opts, stats_tx, live);
                         }
                         Err(e) => {
                             let _ = ready_tx.send(Err(e.context(format!(
@@ -435,6 +599,7 @@ impl Server {
             workers,
             stop,
             counters,
+            replicas: Arc::new(replica_refs),
         })
     }
 
@@ -446,6 +611,17 @@ impl Server {
     /// rejections, ping outcomes). Callable while serving.
     pub fn router_stats(&self) -> RouterStats {
         self.counters.snapshot()
+    }
+
+    /// Cloneable observability handle ([`StatsHandle`]) for `/metrics`
+    /// and `/healthz`: live per-replica counters + router stats,
+    /// readable concurrently with serving and safe to hold across
+    /// [`Server::shutdown`] (it keeps no queue open).
+    pub fn stats_handle(&self) -> StatsHandle {
+        StatsHandle {
+            counters: self.counters.clone(),
+            replicas: self.replicas.clone(),
+        }
     }
 
     /// Close the intake, join every thread, collect per-replica worker
@@ -471,6 +647,16 @@ impl Server {
         }
         out
     }
+}
+
+/// The production executor factory as a composable [`ExecutorFactory`]:
+/// what `spawn_with(..., None)` builds, but wrappable — the
+/// fault-injection seam (`serve::fault::injected_factory`) decorates
+/// this to delay/poison/kill real executors mid-stream.
+pub fn default_factory(artifacts: PathBuf) -> ExecutorFactory {
+    Arc::new(move |spec: &WorkerSpec, opts: &ServeOptions| {
+        build_worker(&artifacts, spec, opts)
+    })
 }
 
 /// Build a worker's thread-local executor from its spec and the backend
@@ -721,13 +907,16 @@ fn accept(msg: WorkerMsg, batcher: &mut DynamicBatcher<InferRequest>) {
 }
 
 /// Replica worker thread: dynamic batcher in front of one executor.
+/// Request/latency counters live in the shared `live` cell (one lock
+/// per flush) so `/metrics` observes them while serving; the
+/// shutdown-time [`WorkerStats`] is derived from the same counters.
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
                rx: Receiver<WorkerMsg>, state: Arc<ReplicaState>,
-               opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>) {
+               opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>,
+               live: Arc<Mutex<LiveCounters>>) {
     let mut batcher: DynamicBatcher<InferRequest> =
         DynamicBatcher::new(exec.max_batch(), opts.max_delay);
-    let mut latency = LatencyHistogram::default();
-    let mut requests = 0u64;
     let mut open = true;
 
     while open || !batcher.is_empty() {
@@ -753,8 +942,7 @@ fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
         }
         match batcher.poll(Instant::now()) {
             Flush::Emit(n) => {
-                flush(exec.as_ref(), &mut batcher, n, &state,
-                      &mut latency, &mut requests);
+                flush(exec.as_ref(), &mut batcher, n, &state, &live);
             }
             Flush::Wait(d) if open => {
                 // wait out the deadline, absorbing new arrivals
@@ -769,13 +957,16 @@ fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
             Flush::Wait(_) => {
                 // intake closed: flush the remainder immediately
                 let n = batcher.len();
-                flush(exec.as_ref(), &mut batcher, n, &state,
-                      &mut latency, &mut requests);
+                flush(exec.as_ref(), &mut batcher, n, &state, &live);
             }
             Flush::Idle => {}
         }
     }
 
+    let (requests, latency) = {
+        let live = lock_live(&live);
+        (live.requests, live.latency.clone())
+    };
     let _ = stats_tx.send(WorkerStats {
         model,
         replica,
@@ -791,8 +982,7 @@ fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
 /// marking each request completed in the replica's outstanding-work
 /// counter (success and failure alike).
 fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
-         n: usize, state: &ReplicaState, latency: &mut LatencyHistogram,
-         requests: &mut u64) {
+         n: usize, state: &ReplicaState, live: &Mutex<LiveCounters>) {
     if n == 0 {
         return;
     }
@@ -816,10 +1006,12 @@ fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
             }
         }
         Ok(rows) => {
+            let mut counters = lock_live(live);
+            counters.batches += 1;
             for (p, row) in pending.into_iter().zip(rows) {
                 state.note_completed();
-                latency.record(p.payload.enqueued.elapsed());
-                *requests += 1;
+                counters.latency.record(p.payload.enqueued.elapsed());
+                counters.requests += 1;
                 let _ = p.payload.resp.send(Ok(row));
             }
         }

@@ -187,8 +187,14 @@ fn write_escaped(out: &mut String, s: &str) {
 // parser
 // ---------------------------------------------------------------------------
 
+/// Nesting cap: recursion in `value()` is bounded so hostile inputs
+/// (e.g. 100k `[`s) report an error instead of overflowing the stack.
+/// Deep enough for every structure this crate produces by an order of
+/// magnitude.
+const MAX_DEPTH: usize = 128;
+
 pub fn parse(text: &str) -> Result<Json> {
-    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -201,6 +207,8 @@ pub fn parse(text: &str) -> Result<Json> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current `value()` recursion depth (capped at [`MAX_DEPTH`]).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -226,7 +234,11 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
-        match self.peek() {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH} (byte {})", self.pos);
+        }
+        let v = match self.peek() {
             Some(b'{') => self.object(),
             Some(b'[') => self.array(),
             Some(b'"') => Ok(Json::Str(self.string()?)),
@@ -236,7 +248,9 @@ impl<'a> Parser<'a> {
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             other => bail!("unexpected {:?} at byte {}",
                            other.map(|c| c as char), self.pos),
-        }
+        };
+        self.depth -= 1;
+        v
     }
 
     fn keyword(&mut self, word: &str, val: Json) -> Result<Json> {
@@ -364,8 +378,14 @@ impl<'a> Parser<'a> {
             self.pos += 1;
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos])?;
-        Ok(Json::Num(text.parse::<f64>()
-            .map_err(|e| anyhow!("bad number '{text}': {e}"))?))
+        let n = text.parse::<f64>()
+            .map_err(|e| anyhow!("bad number '{text}': {e}"))?;
+        // `"1e999".parse::<f64>()` succeeds with ±inf; JSON has no
+        // non-finite literals and the writer could not round-trip one
+        if !n.is_finite() {
+            bail!("number '{text}' overflows f64");
+        }
+        Ok(Json::Num(n))
     }
 }
 
@@ -453,6 +473,29 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn deep_nesting_errors_instead_of_overflowing() {
+        // comfortably inside the cap
+        let ok = format!("{}0{}", "[".repeat(100), "]".repeat(100));
+        assert!(parse(&ok).is_ok());
+        // hostile depth: typed error, not a stack overflow
+        let deep = format!("{}0{}", "[".repeat(100_000),
+                           "]".repeat(100_000));
+        let err = parse(&deep).unwrap_err();
+        assert!(format!("{err}").contains("nested deeper"));
+        // objects recurse through the same guard
+        let objs = "{\"k\":".repeat(100_000);
+        assert!(parse(&objs).is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_rejected() {
+        assert!(parse("1e999").is_err());
+        assert!(parse("-1e999").is_err());
+        // large but finite still parses
+        assert_eq!(parse("1e308").unwrap(), Json::Num(1e308));
     }
 
     #[test]

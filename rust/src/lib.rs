@@ -38,6 +38,7 @@ pub mod json;
 pub mod metrics;
 pub mod native;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 

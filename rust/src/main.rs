@@ -57,6 +57,12 @@ commands:
                 model-parallel shards on dedicated pools; R>1 runs R
                 data-parallel replicas behind the router with health
                 checks + Busy backpressure — DESIGN.md §10)
+               [--listen ADDR] serve over HTTP instead of the built-in
+               demo loop: POST /v1/classify, GET /healthz, GET /metrics;
+               SIGINT drains in-flight requests then exits
+               (extras: [--max-conns N] [--request-timeout-ms MS]
+                [--queue-depth N] [--drain-timeout-ms MS]
+                [--fault-delay-ms MS] — DESIGN.md §11)
   table1       [--fast] [--steps N] [--json PATH]    (Table 1)  [pjrt]
   table2       [--fast] [--steps N] [--json PATH]    (Table 2)  [pjrt]
   table3       [--steps N] [--json PATH]   (Table 3 / Fig 2)    [pjrt]
@@ -70,7 +76,9 @@ serve/train/list/complexity run hermetically on the native backend
 const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "batches", "requests", "json", "artifacts",
                           "backend", "save", "resume", "shards",
-                          "replicas"];
+                          "replicas", "listen", "max-conns",
+                          "request-timeout-ms", "queue-depth",
+                          "drain-timeout-ms", "fault-delay-ms"];
 
 fn main() {
     if let Err(e) = run() {
@@ -387,6 +395,11 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
                     "built without the `pjrt` feature — use --backend \
                      native");
 
+    if let Some(listen) = args.get("listen") {
+        return cmd_serve_http(args, backend, &config, shards, replicas,
+                              listen);
+    }
+
     match backend {
         Backend::Native => eprintln!(
             "[serve] backend=native model={config} shards={shards} \
@@ -462,4 +475,120 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
                  s.mean_occupancy);
     }
     Ok(())
+}
+
+/// `cat serve --listen ADDR`: the HTTP front end over the same router
+/// (DESIGN.md §11). Serves `POST /v1/classify`, `GET /healthz`, and
+/// `GET /metrics` until SIGINT, then drains in-flight requests and
+/// reports the usual serving stats.
+fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
+                  shards: usize, replicas: usize, listen: &str)
+                  -> cat::Result<()> {
+    use cat::coordinator::{default_factory, WorkerSpec};
+    use cat::serve::fault::{injected_factory, FaultPlan};
+    use cat::serve::routes::AppState;
+    use cat::serve::{HttpCounters, HttpServer, HttpServerConfig};
+    use std::time::Duration;
+
+    let max_conns: usize = args.parse_or("max-conns", 64)?;
+    let request_timeout_ms: u64 =
+        args.parse_or("request-timeout-ms", 10_000)?;
+    let queue_depth: usize = args.parse_or("queue-depth", 256)?;
+    let drain_timeout_ms: u64 = args.parse_or("drain-timeout-ms", 5_000)?;
+    let fault_delay_ms: u64 = args.parse_or("fault-delay-ms", 0)?;
+    anyhow::ensure!(max_conns >= 1, "--max-conns must be at least 1");
+    anyhow::ensure!(queue_depth >= 1, "--queue-depth must be at least 1");
+    anyhow::ensure!(request_timeout_ms >= 1,
+                    "--request-timeout-ms must be at least 1");
+
+    let opts = ServeOptions { backend, shards, replicas, queue_depth,
+                              ..Default::default() };
+    let mut factory = default_factory(cat::artifacts_dir());
+    if fault_delay_ms > 0 {
+        // test/bench hook: every batch sleeps this long in the executor,
+        // which makes 429 backpressure reproducible from the CLI
+        let plan = FaultPlan::new();
+        plan.set_delay(Duration::from_millis(fault_delay_ms));
+        eprintln!("[serve] fault injection armed: +{fault_delay_ms}ms \
+                   per batch");
+        factory = injected_factory(&plan, factory);
+    }
+    let specs = vec![WorkerSpec { model: config.to_string(),
+                                  params: None, seed: 0 }];
+    let server = Server::spawn_with(cat::artifacts_dir(), specs, opts,
+                                    Some(factory))?;
+    let request_timeout = Duration::from_millis(request_timeout_ms);
+    let state = AppState {
+        handle: server.handle(),
+        stats: server.stats_handle(),
+        http: HttpCounters::new(),
+        model: config.to_string(),
+        input_shape: vec![3, 32, 32],
+        request_timeout,
+    };
+    let mut cfg = HttpServerConfig::new(listen);
+    cfg.max_conns = max_conns;
+    cfg.request_timeout = request_timeout;
+    cfg.drain_timeout = Duration::from_millis(drain_timeout_ms);
+    let http = HttpServer::start(cfg, state)?;
+    eprintln!("[serve] backend={backend:?} model={config} \
+               shards={shards} replicas={replicas}; SIGINT drains");
+    // parents (CI smoke, benches) poll stdout for this exact line
+    println!("listening on {}", http.addr());
+    use std::io::Write as _;
+    let _ = std::io::stdout().flush();
+
+    install_sigint_handler();
+    while !sigint_received() {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    eprintln!("[serve] SIGINT: draining in-flight requests");
+    // order matters: joining the HTTP layer drops every ServeHandle
+    // clone held by connection threads, which Server::shutdown requires
+    http.shutdown();
+    let router = server.router_stats();
+    let stats = server.shutdown();
+    println!("router: {} dispatched, {} busy-rejected, {} replicas died, \
+              pings {} ok / {} missed",
+             router.dispatched, router.busy_rejected, router.replicas_died,
+             router.pings_ok, router.pings_missed);
+    for m in cat::coordinator::aggregate_stats(&stats) {
+        println!("model {}: {} reqs / {} batches over {} replicas, \
+                  occupancy {:.2}, p50 {}us p99 {}us max {}us",
+                 m.model, m.requests, m.batches, m.replicas,
+                 m.mean_occupancy, m.latency.quantile_us(0.5),
+                 m.latency.quantile_us(0.99), m.latency.max_us());
+    }
+    Ok(())
+}
+
+static SIGINT_FLAG: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+fn sigint_received() -> bool {
+    SIGINT_FLAG.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Route SIGINT into [`SIGINT_FLAG`]. The crate stays dependency-free:
+/// instead of the `libc` crate this binds the C `signal` symbol
+/// directly (the handler only stores to an atomic, which is
+/// async-signal-safe).
+#[cfg(unix)]
+fn install_sigint_handler() {
+    extern "C" fn on_sigint(_sig: i32) {
+        SIGINT_FLAG.store(true, std::sync::atomic::Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint_handler() {
+    // no signal plumbing here; the process runs until killed
+    eprintln!("[serve] warning: SIGINT handling is unix-only");
 }

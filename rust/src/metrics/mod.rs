@@ -152,6 +152,26 @@ impl LatencyHistogram {
         self.max_us
     }
 
+    /// Total recorded microseconds (Prometheus `_sum`).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    /// Cumulative buckets for Prometheus histogram exposition:
+    /// `(upper_bound_us, cumulative_count)` pairs in ascending bound
+    /// order. Bound `i` is `2^i` µs (bucket `i` holds samples in
+    /// `(2^(i-1), 2^i]`); counts are monotone non-decreasing and the
+    /// last equals [`Self::count`], so a renderer appends `+Inf` with
+    /// the same total. Stable: empty buckets are included, so series
+    /// never appear or vanish between scrapes.
+    pub fn cumulative_buckets(&self)
+                              -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.buckets.iter().scan(0u64, |acc, &c| {
+            *acc += c;
+            Some(*acc)
+        }).enumerate().map(|(i, cum)| (1u64 << i, cum))
+    }
+
     /// Approximate quantile from bucket upper bounds.
     pub fn quantile_us(&self, q: f64) -> u64 {
         if self.count == 0 {
@@ -276,6 +296,52 @@ mod tests {
         assert_eq!(a.count(), 3);
         assert_eq!(a.max_us(), 1000);
         assert!((a.mean_us() - (10.0 + 1000.0 + 50.0) / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeros() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean_us(), 0.0);
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.sum_us(), 0);
+        let buckets: Vec<(u64, u64)> = h.cumulative_buckets().collect();
+        assert_eq!(buckets.len(), 32);
+        assert!(buckets.iter().all(|&(_, c)| c == 0));
+        assert_eq!(buckets.last().unwrap().1, h.count());
+    }
+
+    #[test]
+    fn single_sample_cumulative_buckets() {
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(300)); // 256 < 300 <= 512 = 2^9
+        let buckets: Vec<(u64, u64)> = h.cumulative_buckets().collect();
+        // bounds are the powers of two, in order
+        assert!(buckets.iter().enumerate().all(|(i, &(b, _))| b == 1 << i));
+        // cumulative count steps from 0 to 1 exactly at bound 512
+        for &(bound, cum) in &buckets {
+            assert_eq!(cum, u64::from(bound >= 512), "bound {bound}");
+        }
+        assert_eq!(buckets.last().unwrap().1, h.count());
+        assert_eq!(h.sum_us(), 300);
+    }
+
+    #[test]
+    fn merged_histogram_cumulative_buckets_stay_monotone() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        for us in [5u64, 80, 3000] {
+            a.record(Duration::from_micros(us));
+        }
+        for us in [1u64, 80, 1_000_000] {
+            b.record(Duration::from_micros(us));
+        }
+        a.merge(&b);
+        let buckets: Vec<(u64, u64)> = a.cumulative_buckets().collect();
+        assert!(buckets.windows(2).all(|w| w[0].1 <= w[1].1),
+                "cumulative counts must be monotone: {buckets:?}");
+        assert_eq!(buckets.last().unwrap().1, 6);
+        assert_eq!(a.sum_us(), 5 + 80 + 3000 + 1 + 80 + 1_000_000);
     }
 
     #[test]

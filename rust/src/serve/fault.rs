@@ -1,0 +1,221 @@
+//! Fault injection for the serving stack (DESIGN.md §11).
+//!
+//! A [`FaultInjector`] wraps any [`BatchExecutor`] and misbehaves on
+//! command — *after* the request has been accepted, mid-stream, which
+//! is exactly where production failures live and where unit tests of
+//! the parser or router can't reach:
+//!
+//! * **delay** — every batch sleeps first (slow replica / long batch:
+//!   drives deadline-504 and overflow-429 paths deterministically);
+//! * **poison** — the next N batches return an executor error (clients
+//!   see `Failed` → HTTP 502; the replica survives);
+//! * **kill** — the next batch panics the worker thread (the replica
+//!   dies mid-request: in-flight clients see "worker dropped request",
+//!   the router marks the replica dead, `/healthz` degrades).
+//!
+//! The seam composes with PR 5's `spawn_with`: [`injected_factory`]
+//! decorates any inner [`ExecutorFactory`] (including the production
+//! one, [`crate::coordinator::default_factory`]), so the full router +
+//! batcher + executor stack runs under fault — nothing is mocked.
+//! `cat serve --fault-delay-ms` exposes the delay knob so the CI HTTP
+//! smoke can hold workers busy long enough to overflow queues.
+//!
+//! A [`FaultPlan`] is a cheap clone sharing one atomic control block;
+//! tests hold one side and flip faults while the server runs.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::{BatchExecutor, ExecutorFactory, ServeOptions,
+                         WorkerSpec};
+use crate::tensor::HostTensor;
+use crate::Result;
+
+#[derive(Debug, Default)]
+struct FaultState {
+    /// Sleep this long before every batch (0 = off).
+    delay_us: AtomicU64,
+    /// Fail this many upcoming batches with an executor error.
+    poison_next: AtomicUsize,
+    /// Panic the worker on its next batch (one-shot).
+    kill_next: AtomicBool,
+}
+
+/// Shared remote control over every executor built from one
+/// [`injected_factory`]. Clones address the same faults.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    state: Arc<FaultState>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Delay every subsequent batch by `d` (replica-is-slow fault).
+    pub fn set_delay(&self, d: Duration) {
+        self.state.delay_us.store(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    pub fn clear_delay(&self) {
+        self.state.delay_us.store(0, Ordering::Relaxed);
+    }
+
+    /// Fail the next `n` batches with an executor error (502 path).
+    pub fn poison_next(&self, n: usize) {
+        self.state.poison_next.store(n, Ordering::Relaxed);
+    }
+
+    /// Panic the executing worker on its next batch (dead-replica path).
+    pub fn kill_next(&self) {
+        self.state.kill_next.store(true, Ordering::Relaxed);
+    }
+}
+
+/// A [`BatchExecutor`] decorator that applies the faults armed in its
+/// [`FaultPlan`] before delegating to the real executor.
+pub struct FaultInjector {
+    inner: Box<dyn BatchExecutor>,
+    plan: FaultPlan,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Box<dyn BatchExecutor>, plan: FaultPlan)
+               -> FaultInjector {
+        FaultInjector { inner, plan }
+    }
+}
+
+impl BatchExecutor for FaultInjector {
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        let s = &self.plan.state;
+        if s.kill_next.swap(false, Ordering::Relaxed) {
+            // the worker thread dies exactly like a real executor crash:
+            // in-flight requests are dropped, the queue disconnects, the
+            // router marks the replica dead
+            panic!("fault injection: replica killed mid-request");
+        }
+        let delay = s.delay_us.load(Ordering::Relaxed);
+        if delay > 0 {
+            std::thread::sleep(Duration::from_micros(delay));
+        }
+        let poisoned = s.poison_next
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed,
+                          |n| n.checked_sub(1))
+            .is_ok();
+        if poisoned {
+            anyhow::bail!("fault injection: poisoned batch");
+        }
+        self.inner.infer_batch(inputs)
+    }
+
+    fn shard_stats(&self) -> Option<crate::coordinator::ShardStatsSnapshot> {
+        self.inner.shard_stats()
+    }
+}
+
+/// Wrap `inner` so every executor it builds obeys `plan`. The returned
+/// factory plugs into `Server::spawn_with` unchanged.
+pub fn injected_factory(plan: &FaultPlan, inner: ExecutorFactory)
+                        -> ExecutorFactory {
+    let plan = plan.clone();
+    Arc::new(move |spec: &WorkerSpec, opts: &ServeOptions| {
+        let exec = inner(spec, opts)?;
+        Ok(Box::new(FaultInjector::new(exec, plan.clone()))
+            as Box<dyn BatchExecutor>)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    struct Echo;
+
+    impl BatchExecutor for Echo {
+        fn max_batch(&self) -> usize {
+            4
+        }
+
+        fn infer_batch(&self, inputs: &[&HostTensor])
+                       -> Result<Vec<HostTensor>> {
+            Ok(inputs.iter().map(|t| (*t).clone()).collect())
+        }
+    }
+
+    fn injector() -> (FaultInjector, FaultPlan) {
+        let plan = FaultPlan::new();
+        (FaultInjector::new(Box::new(Echo), plan.clone()), plan)
+    }
+
+    #[test]
+    fn passes_through_when_unarmed() {
+        let (inj, _plan) = injector();
+        let t = HostTensor::scalar_f32(1.5);
+        let rows = inj.infer_batch(&[&t]).unwrap();
+        assert_eq!(rows[0], t);
+        assert_eq!(inj.max_batch(), 4);
+    }
+
+    #[test]
+    fn delay_applies_and_clears() {
+        let (inj, plan) = injector();
+        plan.set_delay(Duration::from_millis(30));
+        let t = HostTensor::scalar_f32(0.0);
+        let start = Instant::now();
+        inj.infer_batch(&[&t]).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(30));
+        plan.clear_delay();
+        let start = Instant::now();
+        inj.infer_batch(&[&t]).unwrap();
+        assert!(start.elapsed() < Duration::from_millis(30));
+    }
+
+    #[test]
+    fn poison_fails_exactly_n_batches() {
+        let (inj, plan) = injector();
+        plan.poison_next(2);
+        let t = HostTensor::scalar_f32(0.0);
+        assert!(inj.infer_batch(&[&t]).is_err());
+        assert!(inj.infer_batch(&[&t]).is_err());
+        assert!(inj.infer_batch(&[&t]).is_ok());
+    }
+
+    #[test]
+    fn kill_panics_once() {
+        let (inj, plan) = injector();
+        plan.kill_next();
+        let t = HostTensor::scalar_f32(0.0);
+        let died = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _ = inj.infer_batch(&[&t]);
+            }))
+            .is_err();
+        assert!(died, "armed kill must panic the executing thread");
+        // one-shot: the kill disarms itself, the next batch runs
+        assert!(inj.infer_batch(&[&t]).is_ok());
+    }
+
+    #[test]
+    fn factory_wraps_inner_executors() {
+        let plan = FaultPlan::new();
+        let inner: ExecutorFactory = Arc::new(|_s: &WorkerSpec,
+                                               _o: &ServeOptions| {
+            Ok(Box::new(Echo) as Box<dyn BatchExecutor>)
+        });
+        let factory = injected_factory(&plan, inner);
+        let spec = WorkerSpec { model: "m".into(), params: None, seed: 0 };
+        let exec = factory(&spec, &ServeOptions::default()).unwrap();
+        plan.poison_next(1);
+        let t = HostTensor::scalar_f32(0.0);
+        assert!(exec.infer_batch(&[&t]).is_err());
+        assert!(exec.infer_batch(&[&t]).is_ok());
+    }
+}

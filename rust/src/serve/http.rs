@@ -1,0 +1,615 @@
+//! Hardened incremental HTTP/1.1 request parser + response writer.
+//!
+//! The parser is the trust boundary of the serving layer: everything on
+//! the other side of the socket is hostile until proven otherwise
+//! (DESIGN.md §11). Hardening discipline, ported from mik-sdk's
+//! request-parsing proptests:
+//!
+//! * **Hard caps before allocation.** The request head accumulates into
+//!   a buffer capped at `max_request_line + max_header_bytes`; the body
+//!   buffer is only allocated after `Content-Length` has been validated
+//!   against `max_body`. No attacker-controlled value ever sizes an
+//!   allocation — memory use is bounded by the configured limits, never
+//!   proportional to claimed input.
+//! * **Every malformed input is a typed 4xx**, never a panic, a hang,
+//!   or silent acceptance: oversized request line → 414, oversized or
+//!   too-many headers → 431, oversized body → 413, missing
+//!   `Content-Length` on a body-bearing method → 411,
+//!   `Transfer-Encoding` → 501 (chunked bodies are unsupported, and
+//!   ignoring the header would desync the connection), everything else
+//!   malformed → 400.
+//! * **Read deadlines are the caller's job** (see `DeadlineReader` in
+//!   [`super`]): this module maps `TimedOut`/`WouldBlock` I/O errors to
+//!   [`ParseError::Timeout`] (→ 408) so slowloris writers are evicted.
+//!
+//! The parser reads from any `Read`, one buffered chunk at a time, and
+//! is insensitive to how the bytes are split across reads — pinned by
+//! proptests feeding 1-byte chunks (`tests/proptests.rs`).
+
+use std::io::{ErrorKind, Read, Write};
+
+/// Hard limits enforced while parsing a request. Defaults are generous
+/// for the classify payload (a 3·32·32 image as JSON floats is ~30 KiB)
+/// yet small enough that a saturating attacker costs ~1 MiB per
+/// connection, bounded by the accept-side connection cap.
+#[derive(Debug, Clone, Copy)]
+pub struct HttpLimits {
+    /// Max bytes in the request line (`METHOD SP PATH SP VERSION CRLF`).
+    pub max_request_line: usize,
+    /// Max total header bytes (after the request line, before the body).
+    pub max_header_bytes: usize,
+    /// Max number of header fields.
+    pub max_headers: usize,
+    /// Max declared (and therefore allocated) body size.
+    pub max_body: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        Self {
+            max_request_line: 8 * 1024,
+            max_header_bytes: 16 * 1024,
+            max_headers: 64,
+            max_body: 1024 * 1024,
+        }
+    }
+}
+
+/// Why a request failed to parse; [`ParseError::status`] maps each case
+/// to the HTTP status the connection handler answers with before
+/// closing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ParseError {
+    /// Malformed syntax, truncated stream, conflicting lengths… → 400.
+    BadRequest(String),
+    /// Request line exceeded `max_request_line` → 414.
+    RequestLineTooLong,
+    /// Headers exceeded `max_header_bytes` or `max_headers` → 431.
+    HeadersTooLarge,
+    /// Declared `Content-Length` exceeded `max_body` → 413.
+    BodyTooLarge,
+    /// Body-bearing method without a `Content-Length` → 411.
+    LengthRequired,
+    /// `Transfer-Encoding` present: unsupported, must not be ignored
+    /// (desyncs the connection) → 501.
+    UnsupportedEncoding,
+    /// The read deadline expired mid-request (slowloris) → 408.
+    Timeout,
+}
+
+impl ParseError {
+    pub fn status(&self) -> u16 {
+        match self {
+            ParseError::BadRequest(_) => 400,
+            ParseError::RequestLineTooLong => 414,
+            ParseError::HeadersTooLarge => 431,
+            ParseError::BodyTooLarge => 413,
+            ParseError::LengthRequired => 411,
+            ParseError::UnsupportedEncoding => 501,
+            ParseError::Timeout => 408,
+        }
+    }
+
+    fn bad(msg: impl Into<String>) -> ParseError {
+        ParseError::BadRequest(msg.into())
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::BadRequest(m) => write!(f, "bad request: {m}"),
+            ParseError::RequestLineTooLong => {
+                f.write_str("request line too long")
+            }
+            ParseError::HeadersTooLarge => f.write_str("headers too large"),
+            ParseError::BodyTooLarge => f.write_str("body too large"),
+            ParseError::LengthRequired => f.write_str("length required"),
+            ParseError::UnsupportedEncoding => {
+                f.write_str("transfer-encoding unsupported")
+            }
+            ParseError::Timeout => f.write_str("request read timed out"),
+        }
+    }
+}
+
+/// A parsed request: method + path + lowercased headers + body.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path as sent (query string not split off; routes don't use one).
+    pub path: String,
+    /// `(name, value)` pairs; names lowercased, values trimmed.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header with this (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Did the client ask to close the connection after this exchange?
+    pub fn wants_close(&self) -> bool {
+        self.header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+/// Read one request off `r`.
+///
+/// * `Ok(Some(req))` — a complete request.
+/// * `Ok(None)` — clean EOF before any byte (client closed an idle
+///   keep-alive connection); not an error.
+/// * `Err(e)` — malformed/hostile input or a read timeout; the caller
+///   answers `e.status()` and closes.
+pub fn read_request(r: &mut dyn Read, limits: &HttpLimits)
+                    -> Result<Option<Request>, ParseError> {
+    let head_cap = limits.max_request_line + limits.max_header_bytes;
+    let mut head: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    // accumulate until the blank line ending the head
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&head) {
+            break pos;
+        }
+        if head.len() > head_cap {
+            // no terminator within the cap: decide which limit to blame
+            return Err(oversized_head(&head));
+        }
+        let n = match r.read(&mut chunk) {
+            Ok(n) => n,
+            Err(e) => return Err(io_to_parse(e)),
+        };
+        if n == 0 {
+            if head.is_empty() {
+                return Ok(None); // idle connection closed cleanly
+            }
+            return Err(ParseError::bad("truncated request head"));
+        }
+        head.extend_from_slice(&chunk[..n]);
+    };
+
+    let mut rest = head.split_off(head_end + 4); // bytes after CRLFCRLF
+    head.truncate(head_end); // head now ends before the blank line
+
+    let (method, path) = parse_request_line(&head, limits)?;
+    let headers = parse_headers(&head, limits)?;
+
+    // body: only with a validated Content-Length
+    let mut content_length: Option<usize> = None;
+    for (name, value) in &headers {
+        match name.as_str() {
+            "content-length" => {
+                let n: usize = value
+                    .parse()
+                    .map_err(|_| ParseError::bad("bad content-length"))?;
+                if let Some(prev) = content_length {
+                    if prev != n {
+                        return Err(ParseError::bad(
+                            "conflicting content-length headers"));
+                    }
+                }
+                content_length = Some(n);
+            }
+            "transfer-encoding" => {
+                return Err(ParseError::UnsupportedEncoding);
+            }
+            _ => {}
+        }
+    }
+
+    let body = match content_length {
+        Some(n) if n > limits.max_body => {
+            return Err(ParseError::BodyTooLarge);
+        }
+        Some(n) => {
+            // cap validated: allocating n is now bounded by max_body
+            if rest.len() > n {
+                // bytes past the declared body would desync keep-alive
+                return Err(ParseError::bad("body longer than declared"));
+            }
+            let mut body = rest;
+            body.reserve(n - body.len());
+            while body.len() < n {
+                let want = (n - body.len()).min(chunk.len());
+                let got = match r.read(&mut chunk[..want]) {
+                    Ok(0) => {
+                        return Err(ParseError::bad("truncated body"));
+                    }
+                    Ok(got) => got,
+                    Err(e) => return Err(io_to_parse(e)),
+                };
+                body.extend_from_slice(&chunk[..got]);
+            }
+            body
+        }
+        None if method == "POST" || method == "PUT" => {
+            return Err(ParseError::LengthRequired);
+        }
+        None => {
+            if !rest.is_empty() {
+                return Err(ParseError::bad("unexpected body"));
+            }
+            rest
+        }
+    };
+
+    Ok(Some(Request { method, path, headers, body }))
+}
+
+/// Position of the `\r\n\r\n` separating head from body.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// An oversized head with no terminator: blame the request line if the
+/// first line itself never ended within its cap, else the headers.
+fn oversized_head(head: &[u8]) -> ParseError {
+    match head.iter().position(|&b| b == b'\n') {
+        None => ParseError::RequestLineTooLong,
+        Some(_) => ParseError::HeadersTooLarge,
+    }
+}
+
+fn io_to_parse(e: std::io::Error) -> ParseError {
+    match e.kind() {
+        ErrorKind::TimedOut | ErrorKind::WouldBlock => ParseError::Timeout,
+        // a reset mid-request is indistinguishable from truncation
+        _ => ParseError::bad(format!("read failed: {}", e.kind())),
+    }
+}
+
+/// Parse and validate `METHOD SP PATH SP HTTP/1.x` (first line of
+/// `head`, CRLF-terminated).
+fn parse_request_line(head: &[u8], limits: &HttpLimits)
+                      -> Result<(String, String), ParseError> {
+    let line_end = head
+        .windows(2)
+        .position(|w| w == b"\r\n")
+        .unwrap_or(head.len());
+    if line_end > limits.max_request_line {
+        return Err(ParseError::RequestLineTooLong);
+    }
+    let line = &head[..line_end];
+    if line.iter().any(|&b| b < 0x20 || b == 0x7f) {
+        return Err(ParseError::bad("control bytes in request line"));
+    }
+    let line = std::str::from_utf8(line)
+        .map_err(|_| ParseError::bad("request line is not utf-8"))?;
+    let mut parts = line.split(' ');
+    let (method, path, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(p), Some(v), None)
+                if !m.is_empty() && !p.is_empty() => (m, p, v),
+            _ => return Err(ParseError::bad("malformed request line")),
+        };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(ParseError::bad("malformed method"));
+    }
+    if !path.starts_with('/') {
+        return Err(ParseError::bad("path must be absolute"));
+    }
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(ParseError::bad("unsupported http version"));
+    }
+    Ok((method.to_string(), path.to_string()))
+}
+
+/// Parse the header block (everything after the first CRLF of `head`).
+fn parse_headers(head: &[u8], limits: &HttpLimits)
+                 -> Result<Vec<(String, String)>, ParseError> {
+    let block_start = match head.windows(2).position(|w| w == b"\r\n") {
+        Some(p) => p + 2,
+        None => return Ok(Vec::new()), // head was just the request line
+    };
+    let block = &head[block_start..];
+    if block.len() > limits.max_header_bytes {
+        return Err(ParseError::HeadersTooLarge);
+    }
+    let mut headers = Vec::new();
+    for raw in block.split(|&b| b == b'\n') {
+        let raw = raw.strip_suffix(b"\r").unwrap_or(raw);
+        if raw.is_empty() {
+            continue;
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        if raw.iter().any(|&b| b < 0x20 || b == 0x7f) {
+            return Err(ParseError::bad("control bytes in header"));
+        }
+        let line = std::str::from_utf8(raw)
+            .map_err(|_| ParseError::bad("header is not utf-8"))?;
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| ParseError::bad("header missing colon"))?;
+        if name.is_empty()
+            || name.contains(' ')
+            || name.contains('\t')
+        {
+            return Err(ParseError::bad("malformed header name"));
+        }
+        headers.push((name.to_ascii_lowercase(),
+                      value.trim().to_string()));
+    }
+    Ok(headers)
+}
+
+/// An HTTP response staged for writing.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// Extra headers (e.g. `Retry-After`, `Allow`).
+    pub headers: Vec<(String, String)>,
+    /// Force `Connection: close` after this response.
+    pub close: bool,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            content_type: "application/json",
+            body: body.into_bytes(),
+            headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain; charset=utf-8",
+            body: body.into().into_bytes(),
+            headers: Vec::new(),
+            close: false,
+        }
+    }
+
+    pub fn with_header(mut self, name: &str, value: String) -> Response {
+        self.headers.push((name.to_string(), value));
+        self
+    }
+
+    pub fn closing(mut self) -> Response {
+        self.close = true;
+        self
+    }
+
+    /// Serialize status line + headers + body to `w`.
+    pub fn write_to(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        let mut out = Vec::with_capacity(128 + self.body.len());
+        out.extend_from_slice(
+            format!("HTTP/1.1 {} {}\r\n", self.status,
+                    reason_phrase(self.status)).as_bytes());
+        out.extend_from_slice(
+            format!("Content-Type: {}\r\n", self.content_type).as_bytes());
+        out.extend_from_slice(
+            format!("Content-Length: {}\r\n", self.body.len()).as_bytes());
+        for (name, value) in &self.headers {
+            out.extend_from_slice(
+                format!("{name}: {value}\r\n").as_bytes());
+        }
+        if self.close {
+            out.extend_from_slice(b"Connection: close\r\n");
+        }
+        out.extend_from_slice(b"\r\n");
+        out.extend_from_slice(&self.body);
+        w.write_all(&out)?;
+        w.flush()
+    }
+}
+
+/// The error response for a parse failure (always closes: the stream
+/// position is unknown after a malformed request).
+pub fn error_response(err: &ParseError) -> Response {
+    let msg = crate::json::Json::Str(err.to_string()).to_string();
+    Response::json(err.status(), format!("{{\"error\":{msg}}}")).closing()
+}
+
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        414 => "URI Too Long",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        502 => "Bad Gateway",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8]) -> Result<Option<Request>, ParseError> {
+        read_request(&mut Cursor::new(raw.to_vec()),
+                     &HttpLimits::default())
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.wants_close());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let req = parse(
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn clean_eof_is_none_truncated_is_400() {
+        assert!(parse(b"").unwrap().is_none());
+        let err = parse(b"GET / HTTP/1.1\r\nHost").unwrap_err();
+        assert_eq!(err.status(), 400);
+        let err = parse(
+            b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc")
+            .unwrap_err();
+        assert_eq!(err.status(), 400);
+    }
+
+    #[test]
+    fn post_without_length_is_411() {
+        let err = parse(b"POST /v1/classify HTTP/1.1\r\n\r\n").unwrap_err();
+        assert_eq!(err, ParseError::LengthRequired);
+    }
+
+    #[test]
+    fn declared_body_over_cap_is_413_without_allocation() {
+        // a huge claimed length must be rejected from the header alone
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 99999999999\r\n\r\n";
+        // usize::try overflow path: absurd length is either a parse
+        // error (400) on 32-bit or 413 on 64-bit; both are 4xx
+        let err = parse(raw).unwrap_err();
+        assert!(err.status() == 413 || err.status() == 400);
+        let raw =
+            b"POST / HTTP/1.1\r\nContent-Length: 2000000\r\n\r\n";
+        assert_eq!(parse(raw).unwrap_err(), ParseError::BodyTooLarge);
+    }
+
+    #[test]
+    fn transfer_encoding_is_501() {
+        let raw =
+            b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        assert_eq!(parse(raw).unwrap_err(),
+                   ParseError::UnsupportedEncoding);
+    }
+
+    #[test]
+    fn oversized_request_line_is_414() {
+        let mut raw = b"GET /".to_vec();
+        raw.extend(vec![b'a'; 40 * 1024]);
+        assert_eq!(parse(&raw).unwrap_err(),
+                   ParseError::RequestLineTooLong);
+    }
+
+    #[test]
+    fn oversized_headers_are_431() {
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..4000 {
+            raw.extend_from_slice(format!("X-H{i}: aaaaaaaa\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        assert_eq!(parse(&raw).unwrap_err(), ParseError::HeadersTooLarge);
+        // too many headers (but under the byte cap) also 431
+        let mut raw = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..100 {
+            raw.extend_from_slice(format!("H{i}: a\r\n").as_bytes());
+        }
+        raw.extend_from_slice(b"\r\n");
+        assert_eq!(parse(&raw).unwrap_err(), ParseError::HeadersTooLarge);
+    }
+
+    #[test]
+    fn conflicting_content_lengths_rejected() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 3\r\n\
+                    Content-Length: 4\r\n\r\nabc";
+        assert_eq!(parse(raw).unwrap_err().status(), 400);
+        // duplicate-but-equal is tolerated
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 3\r\n\
+                    Content-Length: 3\r\n\r\nabc";
+        assert!(parse(raw).unwrap().is_some());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        for raw in [
+            b"GARBAGE\r\n\r\n".to_vec(),
+            b"GET /x HTTP/2.0\r\n\r\n".to_vec(),
+            b"get /x HTTP/1.1\r\n\r\n".to_vec(),
+            b"GET x HTTP/1.1\r\n\r\n".to_vec(),
+            b"GET /x HTTP/1.1 extra\r\n\r\n".to_vec(),
+            b"GET /x HTTP/1.1\r\nNoColonHere\r\n\r\n".to_vec(),
+            b"GET /\x01 HTTP/1.1\r\n\r\n".to_vec(),
+        ] {
+            let err = parse(&raw).unwrap_err();
+            assert_eq!(err.status(), 400, "input {:?} -> {err:?}", raw);
+        }
+    }
+
+    #[test]
+    fn split_across_reads_equivalent() {
+        // 1-byte-at-a-time reader must parse identically to one chunk
+        struct OneByte(Vec<u8>, usize);
+        impl Read for OneByte {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.1 >= self.0.len() {
+                    return Ok(0);
+                }
+                buf[0] = self.0[self.1];
+                self.1 += 1;
+                Ok(1)
+            }
+        }
+        let raw =
+            b"POST /v1/classify HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        let whole = parse(raw).unwrap().unwrap();
+        let split = read_request(&mut OneByte(raw.to_vec(), 0),
+                                 &HttpLimits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(whole.method, split.method);
+        assert_eq!(whole.path, split.path);
+        assert_eq!(whole.body, split.body);
+    }
+
+    #[test]
+    fn timeout_io_maps_to_408() {
+        struct TimesOut;
+        impl Read for TimesOut {
+            fn read(&mut self, _buf: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(ErrorKind::TimedOut, "deadline"))
+            }
+        }
+        let err = read_request(&mut TimesOut, &HttpLimits::default())
+            .unwrap_err();
+        assert_eq!(err, ParseError::Timeout);
+        assert_eq!(err.status(), 408);
+    }
+
+    #[test]
+    fn response_writes_wire_format() {
+        let resp = Response::json(429, "{\"e\":1}".into())
+            .with_header("Retry-After", "1".into())
+            .closing();
+        let mut out = Vec::new();
+        resp.write_to(&mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Content-Length: 7\r\n"));
+        assert!(text.ends_with("\r\n\r\n{\"e\":1}"));
+    }
+}

@@ -1,0 +1,468 @@
+//! Fault-tolerant HTTP/1.1 serving layer over the sharded router
+//! (DESIGN.md §11): `cat serve --listen` binds this front end to a
+//! [`crate::coordinator::Server`].
+//!
+//! Hermetic by construction — std `TcpListener` + the in-repo JSON, no
+//! new dependencies — and hardened at every layer:
+//!
+//! * **Parser** ([`http`]): hard caps on request line / headers / body,
+//!   typed 4xx for every malformed input, allocation never proportional
+//!   to attacker-claimed sizes.
+//! * **Deadlines**: every connection read runs under a [`DeadlineReader`]
+//!   (slowloris → 408), every inference under
+//!   `ServeHandle::infer_deadline` (expiry → 504) — an accept thread can
+//!   not be wedged by a slow client or a slow replica.
+//! * **Load shedding**: beyond `max_conns` concurrent connections the
+//!   acceptor answers 503 inline and closes — queues never build behind
+//!   the limit. Router backpressure surfaces as 429 + `Retry-After`;
+//!   dead replicas as 502 while `/healthz` reports degradation (503).
+//! * **Graceful shutdown**: the shutdown flag stops the acceptor,
+//!   in-flight requests drain against `drain_timeout`, stragglers are
+//!   unblocked by shutting their sockets down, every connection thread
+//!   is joined — and only then does the caller tear down the router
+//!   ([`HttpServer::shutdown`] guarantees no `ServeHandle` clone
+//!   outlives it, which `Server::shutdown` requires).
+//!
+//! Fault injection ([`fault`]) wraps executors behind the same router,
+//! so integration tests drive delays, poisoned batches, and mid-request
+//! replica death through real sockets.
+
+pub mod fault;
+pub mod http;
+pub mod prometheus;
+pub mod routes;
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Context as _;
+
+use crate::Result;
+
+use http::{error_response, read_request, HttpLimits, Response};
+use routes::AppState;
+
+/// HTTP-layer counters (accepts, sheds, responses by class), shared
+/// between the acceptor, every connection thread, and `/metrics`.
+#[derive(Debug, Clone, Default)]
+pub struct HttpCounters {
+    inner: Arc<HttpCountersInner>,
+}
+
+#[derive(Debug, Default)]
+struct HttpCountersInner {
+    accepted: AtomicU64,
+    shed: AtomicU64,
+    requests: AtomicU64,
+    status_2xx: AtomicU64,
+    status_4xx: AtomicU64,
+    status_5xx: AtomicU64,
+}
+
+/// Point-in-time copy of [`HttpCounters`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HttpSnapshot {
+    pub accepted: u64,
+    pub shed: u64,
+    pub requests: u64,
+    pub status_2xx: u64,
+    pub status_4xx: u64,
+    pub status_5xx: u64,
+}
+
+impl HttpCounters {
+    pub fn new() -> HttpCounters {
+        HttpCounters::default()
+    }
+
+    fn note_accepted(&self) {
+        self.inner.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_shed(&self) {
+        self.inner.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_request(&self) {
+        self.inner.requests.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn note_status(&self, status: u16) {
+        let c = match status {
+            200..=299 => &self.inner.status_2xx,
+            400..=499 => &self.inner.status_4xx,
+            _ => &self.inner.status_5xx,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HttpSnapshot {
+        let i = &self.inner;
+        HttpSnapshot {
+            accepted: i.accepted.load(Ordering::Relaxed),
+            shed: i.shed.load(Ordering::Relaxed),
+            requests: i.requests.load(Ordering::Relaxed),
+            status_2xx: i.status_2xx.load(Ordering::Relaxed),
+            status_4xx: i.status_4xx.load(Ordering::Relaxed),
+            status_5xx: i.status_5xx.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Registry of live connection sockets (duplicated handles). On a
+/// drain-deadline overrun, [`ConnRegistry::shutdown_all`] shuts every
+/// socket down so blocked reads/writes in connection threads return
+/// immediately — the join that follows is bounded, never wedged on a
+/// client that stopped talking.
+#[derive(Clone, Default)]
+struct ConnRegistry {
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl ConnRegistry {
+    fn register(&self, stream: &TcpStream) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Ok(dup) = stream.try_clone() {
+            let mut conns = self.conns.lock()
+                .unwrap_or_else(|p| p.into_inner());
+            conns.insert(id, dup);
+        }
+        id
+    }
+
+    fn deregister(&self, id: u64) {
+        let mut conns = self.conns.lock()
+            .unwrap_or_else(|p| p.into_inner());
+        conns.remove(&id);
+    }
+
+    fn shutdown_all(&self) {
+        let conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+        for stream in conns.values() {
+            let _ = stream.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+/// `Read` adapter enforcing an absolute deadline over a `TcpStream` by
+/// reading in short `set_read_timeout` slices. Between slices it also
+/// observes the server shutdown flag: a connection that has not started
+/// a request yet (`started == false`) reports clean EOF so idle
+/// keep-alive threads exit promptly during drain, while a mid-request
+/// read keeps its full deadline (the in-flight request is drained, not
+/// dropped). Deadline expiry surfaces as `TimedOut`, which the parser
+/// maps to 408.
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+    shutdown: &'a AtomicBool,
+    started: bool,
+}
+
+/// Granularity of deadline/shutdown checks while blocked in `read`.
+const READ_SLICE: Duration = Duration::from_millis(50);
+
+impl<'a> DeadlineReader<'a> {
+    fn new(stream: &'a TcpStream, deadline: Instant,
+           shutdown: &'a AtomicBool) -> DeadlineReader<'a> {
+        DeadlineReader { stream, deadline, shutdown, started: false }
+    }
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        loop {
+            if !self.started && self.shutdown.load(Ordering::Relaxed) {
+                return Ok(0); // draining: close idle connections cleanly
+            }
+            let left = self.deadline.saturating_duration_since(
+                Instant::now());
+            if left.is_zero() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::TimedOut, "read deadline"));
+            }
+            // never pass zero: set_read_timeout(Some(0)) is an error
+            let slice = left.min(READ_SLICE)
+                .max(Duration::from_millis(1));
+            self.stream.set_read_timeout(Some(slice))?;
+            match self.stream.read(buf) {
+                Ok(0) => return Ok(0),
+                Ok(n) => {
+                    self.started = true;
+                    return Ok(n);
+                }
+                Err(e) if matches!(e.kind(),
+                                   std::io::ErrorKind::TimedOut
+                                   | std::io::ErrorKind::WouldBlock) => {
+                    // slice expired: loop to re-check deadline/shutdown
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+/// Configuration of the HTTP front end (`cat serve --listen ...`).
+#[derive(Debug, Clone)]
+pub struct HttpServerConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` picks a free port).
+    pub listen: String,
+    /// Concurrent-connection cap; the acceptor sheds beyond it (503).
+    pub max_conns: usize,
+    pub limits: HttpLimits,
+    /// Per-request deadline: bounds both the request read (408) and
+    /// the inference wait (504).
+    pub request_timeout: Duration,
+    /// How long shutdown waits for in-flight connections to finish
+    /// before forcing their sockets closed.
+    pub drain_timeout: Duration,
+}
+
+impl HttpServerConfig {
+    pub fn new(listen: impl Into<String>) -> HttpServerConfig {
+        HttpServerConfig {
+            listen: listen.into(),
+            max_conns: 64,
+            limits: HttpLimits::default(),
+            request_timeout: Duration::from_secs(10),
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// The running HTTP front end: one nonblocking acceptor thread +
+/// bounded per-connection threads.
+pub struct HttpServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: std::thread::JoinHandle<()>,
+}
+
+impl HttpServer {
+    /// Bind and start serving `state` at `cfg.listen`.
+    pub fn start(cfg: HttpServerConfig, state: AppState)
+                 -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("bind {}", cfg.listen))?;
+        let addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                accept_loop(listener, cfg, state, shutdown);
+            })
+        };
+        Ok(HttpServer { addr, shutdown, acceptor })
+    }
+
+    /// The bound address (with the real port when `:0` was requested).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shutdown flag: setting it is equivalent to starting
+    /// [`HttpServer::shutdown`] (the acceptor notices within one poll
+    /// tick). Exposed so signal handlers can request shutdown from a
+    /// context that can't call methods.
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        self.shutdown.clone()
+    }
+
+    /// Graceful shutdown: stop accepting, drain in-flight connections
+    /// against the drain deadline, force-close stragglers, join every
+    /// thread. On return no connection thread (and therefore no
+    /// `ServeHandle` clone held by one) survives — safe to proceed to
+    /// `Server::shutdown`.
+    pub fn shutdown(self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = self.acceptor.join();
+    }
+}
+
+/// Poll cadence of the nonblocking accept loop.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+fn accept_loop(listener: TcpListener, cfg: HttpServerConfig,
+               state: AppState, shutdown: Arc<AtomicBool>) {
+    let active = Arc::new(AtomicUsize::new(0));
+    let registry = ConnRegistry::default();
+    let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    while !shutdown.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                state.http.note_accepted();
+                if active.load(Ordering::Relaxed) >= cfg.max_conns {
+                    shed(&stream, &state);
+                    continue;
+                }
+                // reap finished threads so the handle list stays small
+                conn_threads.retain(|t| !t.is_finished());
+                active.fetch_add(1, Ordering::Relaxed);
+                let id = registry.register(&stream);
+                let state = state.clone();
+                let cfg = cfg.clone();
+                let shutdown = shutdown.clone();
+                let active = active.clone();
+                let registry = registry.clone();
+                conn_threads.push(std::thread::spawn(move || {
+                    serve_connection(stream, &cfg, &state, &shutdown);
+                    registry.deregister(id);
+                    active.fetch_sub(1, Ordering::Relaxed);
+                }));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => {
+                // transient accept errors (e.g. aborted handshake)
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+
+    // drain phase: no new connections; in-flight requests run to
+    // completion (connection threads see the flag and close after
+    // their current request) until the drain deadline
+    let deadline = Instant::now() + cfg.drain_timeout;
+    while active.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // force any stragglers off their sockets, then the joins are bounded
+    registry.shutdown_all();
+    for t in conn_threads {
+        let _ = t.join();
+    }
+}
+
+/// Answer 503 inline on the acceptor thread (bounded by a short write
+/// timeout so a non-reading client can't stall accepts) and close.
+fn shed(stream: &TcpStream, state: &AppState) {
+    state.http.note_shed();
+    let resp = Response::json(
+        503, "{\"error\":\"connection limit reached\"}".to_string())
+        .closing();
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(100)));
+    let mut w = stream;
+    let _ = resp.write_to(&mut w);
+    state.http.note_status(503);
+}
+
+/// One connection: keep-alive request loop under per-request deadlines.
+fn serve_connection(stream: TcpStream, cfg: &HttpServerConfig,
+                    state: &AppState, shutdown: &AtomicBool) {
+    let _ = stream.set_nodelay(true);
+    // a response write may not block past the request budget either
+    let _ = stream.set_write_timeout(Some(cfg.request_timeout
+        .max(Duration::from_millis(100))));
+    loop {
+        let deadline = Instant::now() + cfg.request_timeout;
+        let mut reader = DeadlineReader::new(&stream, deadline, shutdown);
+        let outcome = read_request(&mut reader, &cfg.limits);
+        // idle connections that never started a request time out
+        // quietly (no 408 spam into an empty pipe)
+        let idle_timeout = !reader.started
+            && matches!(outcome, Err(http::ParseError::Timeout));
+        match outcome {
+            Ok(None) => break, // client closed between requests
+            _ if idle_timeout => break,
+            Ok(Some(req)) => {
+                state.http.note_request();
+                let mut resp = routes::handle_request(state, &req);
+                // drain: finish this response, then close
+                resp.close = resp.close
+                    || req.wants_close()
+                    || shutdown.load(Ordering::Relaxed);
+                state.http.note_status(resp.status);
+                let mut w = &stream;
+                if resp.write_to(&mut w).is_err() || resp.close {
+                    break;
+                }
+            }
+            Err(e) => {
+                // stream position unknown after a malformed request:
+                // answer and close
+                let resp = error_response(&e);
+                state.http.note_status(resp.status);
+                let mut w = &stream;
+                let _ = resp.write_to(&mut w);
+                break;
+            }
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_snapshot_tracks_classes() {
+        let c = HttpCounters::new();
+        c.note_accepted();
+        c.note_request();
+        c.note_status(200);
+        c.note_status(404);
+        c.note_status(502);
+        c.note_shed();
+        let s = c.snapshot();
+        assert_eq!(s.accepted, 1);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.status_2xx, 1);
+        assert_eq!(s.status_4xx, 1);
+        assert_eq!(s.status_5xx, 1);
+        assert_eq!(s.shed, 1);
+    }
+
+    #[test]
+    fn registry_registers_and_forgets() {
+        let reg = ConnRegistry::default();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let id = reg.register(&client);
+        assert_eq!(reg.conns.lock().unwrap().len(), 1);
+        reg.deregister(id);
+        assert!(reg.conns.lock().unwrap().is_empty());
+        // shutdown_all on an empty registry is a no-op
+        reg.shutdown_all();
+    }
+
+    #[test]
+    fn deadline_reader_times_out_on_silent_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let stop = AtomicBool::new(false);
+        let mut r = DeadlineReader::new(
+            &server_side, Instant::now() + Duration::from_millis(120),
+            &stop);
+        let mut buf = [0u8; 16];
+        let start = Instant::now();
+        let err = r.read(&mut buf).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut);
+        assert!(start.elapsed() >= Duration::from_millis(100));
+    }
+
+    #[test]
+    fn deadline_reader_honors_shutdown_before_first_byte() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpStream::connect(addr).unwrap();
+        let (server_side, _) = listener.accept().unwrap();
+        let stop = AtomicBool::new(true);
+        let mut r = DeadlineReader::new(
+            &server_side, Instant::now() + Duration::from_secs(30), &stop);
+        let mut buf = [0u8; 16];
+        // idle + shutdown = clean EOF, immediately
+        assert_eq!(r.read(&mut buf).unwrap(), 0);
+    }
+}

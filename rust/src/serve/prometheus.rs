@@ -1,0 +1,133 @@
+//! Prometheus text exposition (version 0.0.4) for `GET /metrics`.
+//!
+//! Renders the router counters, per-replica live state, and the merged
+//! request-latency histogram from [`StatsHandle`], plus the HTTP
+//! layer's own counters. Histograms follow the Prometheus contract:
+//! cumulative `_bucket{le=...}` series in ascending bound order ending
+//! with `le="+Inf"` equal to `_count` (the stable cumulative iterator
+//! is `LatencyHistogram::cumulative_buckets`, pinned by regression
+//! tests in `crate::metrics`).
+
+use std::fmt::Write as _;
+
+use crate::coordinator::StatsHandle;
+use crate::metrics::LatencyHistogram;
+
+use super::HttpSnapshot;
+
+/// Escape a label value per the exposition format.
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render the full `/metrics` payload.
+pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
+    let mut out = String::with_capacity(4096);
+    let router = stats.router();
+
+    let counter = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    };
+
+    counter(&mut out, "cat_router_dispatched_total",
+            "Requests handed to a replica queue.", router.dispatched);
+    counter(&mut out, "cat_router_busy_rejected_total",
+            "Requests rejected with backpressure (HTTP 429).",
+            router.busy_rejected);
+    counter(&mut out, "cat_router_replicas_died_total",
+            "Replicas discovered dead.", router.replicas_died);
+    counter(&mut out, "cat_router_pings_ok_total",
+            "Health pings answered in time.", router.pings_ok);
+    counter(&mut out, "cat_router_pings_missed_total",
+            "Health pings that timed out.", router.pings_missed);
+
+    counter(&mut out, "cat_http_connections_accepted_total",
+            "TCP connections accepted.", http.accepted);
+    counter(&mut out, "cat_http_connections_shed_total",
+            "Connections shed at the accept-side limit (HTTP 503).",
+            http.shed);
+    counter(&mut out, "cat_http_requests_total",
+            "HTTP requests parsed off accepted connections.",
+            http.requests);
+    counter(&mut out, "cat_http_responses_2xx_total",
+            "Successful HTTP responses.", http.status_2xx);
+    counter(&mut out, "cat_http_responses_4xx_total",
+            "Client-error HTTP responses.", http.status_4xx);
+    counter(&mut out, "cat_http_responses_5xx_total",
+            "Server-error HTTP responses.", http.status_5xx);
+
+    let replicas = stats.replicas();
+
+    let _ = writeln!(out, "# HELP cat_replica_up Replica liveness \
+                           (0 = worker dead).");
+    let _ = writeln!(out, "# TYPE cat_replica_up gauge");
+    for r in &replicas {
+        let _ = writeln!(out,
+                         "cat_replica_up{{model=\"{}\",replica=\"{}\"}} {}",
+                         escape_label(&r.model), r.replica,
+                         u8::from(r.alive));
+    }
+
+    let _ = writeln!(out, "# HELP cat_replica_outstanding Dispatched \
+                           requests not yet completed.");
+    let _ = writeln!(out, "# TYPE cat_replica_outstanding gauge");
+    for r in &replicas {
+        let _ = writeln!(
+            out,
+            "cat_replica_outstanding{{model=\"{}\",replica=\"{}\"}} {}",
+            escape_label(&r.model), r.replica, r.outstanding);
+    }
+
+    let _ = writeln!(out, "# HELP cat_replica_requests_total Requests \
+                           completed by this replica.");
+    let _ = writeln!(out, "# TYPE cat_replica_requests_total counter");
+    for r in &replicas {
+        let _ = writeln!(
+            out,
+            "cat_replica_requests_total{{model=\"{}\",replica=\"{}\"}} {}",
+            escape_label(&r.model), r.replica, r.requests);
+    }
+
+    let _ = writeln!(out, "# HELP cat_replica_batches_total Batches \
+                           executed by this replica.");
+    let _ = writeln!(out, "# TYPE cat_replica_batches_total counter");
+    for r in &replicas {
+        let _ = writeln!(
+            out,
+            "cat_replica_batches_total{{model=\"{}\",replica=\"{}\"}} {}",
+            escape_label(&r.model), r.replica, r.batches);
+    }
+
+    // one merged latency histogram across all replicas: queue-to-reply
+    // time per request, in microseconds
+    let mut merged = LatencyHistogram::default();
+    for r in &replicas {
+        merged.merge(&r.latency);
+    }
+    let name = "cat_request_latency_us";
+    let _ = writeln!(out, "# HELP {name} Request latency (enqueue to \
+                           reply) in microseconds.");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (bound, cum) in merged.cumulative_buckets() {
+        let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}",
+                     merged.count());
+    let _ = writeln!(out, "{name}_sum {}", merged.sum_us());
+    let _ = writeln!(out, "{name}_count {}", merged.count());
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escape_label_handles_specials() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_label("plain"), "plain");
+    }
+}

@@ -1,0 +1,198 @@
+//! Typed routes over the router: request → [`ServeHandle`] → response,
+//! with every [`ServeError`] mapped to its HTTP status (DESIGN.md §11):
+//!
+//! | condition                         | status             |
+//! |-----------------------------------|--------------------|
+//! | inference complete                | 200                |
+//! | malformed body / wrong shape      | 400                |
+//! | unknown path                      | 404                |
+//! | known path, wrong method          | 405 (+ `Allow`)    |
+//! | `Busy { retry_after }`            | 429 (+ `Retry-After`) |
+//! | replica dead / executor error     | 502                |
+//! | degraded (dead replica) `/healthz`| 503                |
+//! | per-request deadline expired      | 504                |
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{ServeError, ServeHandle, StatsHandle};
+use crate::json::{self, Json};
+use crate::tensor::HostTensor;
+
+use super::http::{Request, Response};
+use super::{prometheus, HttpCounters};
+
+/// Everything a connection thread needs to answer requests. Cheap to
+/// clone (handles + Arcs).
+#[derive(Clone)]
+pub struct AppState {
+    pub handle: ServeHandle,
+    pub stats: StatsHandle,
+    pub http: HttpCounters,
+    /// Default model for `/v1/classify` when the body names none.
+    pub model: String,
+    /// Expected input tensor shape (`pixels` length must match its
+    /// product). The native default is `[3, 32, 32]`; tests shrink it.
+    pub input_shape: Vec<usize>,
+    /// Per-request inference deadline (`--request-timeout-ms`).
+    pub request_timeout: Duration,
+}
+
+fn err_body(msg: &str) -> String {
+    Json::Obj(vec![("error".to_string(), Json::from(msg))]).to_string()
+}
+
+/// Dispatch one parsed request. Never panics; every outcome is a
+/// well-formed response.
+pub fn handle_request(state: &AppState, req: &Request) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET" | "HEAD", "/healthz") => {
+            let (status, body) = if state.stats.degraded() {
+                (503, "{\"status\":\"degraded\"}")
+            } else {
+                (200, "{\"status\":\"ok\"}")
+            };
+            let body = if req.method == "HEAD" { "" } else { body };
+            Response::json(status, body.to_string())
+        }
+        ("GET", "/metrics") => {
+            let text = prometheus::render(&state.stats,
+                                          &state.http.snapshot());
+            Response {
+                status: 200,
+                content_type: "text/plain; version=0.0.4",
+                body: text.into_bytes(),
+                headers: Vec::new(),
+                close: false,
+            }
+        }
+        ("POST", "/v1/classify") => classify(state, req),
+        (_, "/healthz") => method_not_allowed("GET, HEAD"),
+        (_, "/metrics") => method_not_allowed("GET"),
+        (_, "/v1/classify") => method_not_allowed("POST"),
+        _ => Response::json(404, err_body("no such route")),
+    }
+}
+
+fn method_not_allowed(allow: &str) -> Response {
+    Response::json(405, err_body("method not allowed"))
+        .with_header("Allow", allow.to_string())
+}
+
+/// `POST /v1/classify`: `{"pixels": [f32; prod(input_shape)],
+/// "model"?: "name"}` → `{"model", "argmax", "logits"}`.
+fn classify(state: &AppState, req: &Request) -> Response {
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => {
+            return Response::json(400, err_body("body is not utf-8"));
+        }
+    };
+    let parsed = match json::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return Response::json(
+                400, err_body(&format!("invalid JSON body: {e}")));
+        }
+    };
+    let model = match parsed.get("model") {
+        None => state.model.clone(),
+        Some(v) => match v.as_str() {
+            Ok(s) => s.to_string(),
+            Err(_) => {
+                return Response::json(
+                    400, err_body("\"model\" must be a string"));
+            }
+        },
+    };
+    let want: usize = state.input_shape.iter().product();
+    let pixels = match parsed.get("pixels").map(|p| p.as_arr()) {
+        Some(Ok(arr)) => arr,
+        Some(Err(_)) => {
+            return Response::json(
+                400, err_body("\"pixels\" must be an array of numbers"));
+        }
+        None => {
+            return Response::json(
+                400, err_body("missing \"pixels\" array"));
+        }
+    };
+    if pixels.len() != want {
+        return Response::json(400, err_body(&format!(
+            "\"pixels\" has {} values, expected {} (shape {:?})",
+            pixels.len(), want, state.input_shape)));
+    }
+    let mut data = Vec::with_capacity(want);
+    for p in pixels {
+        match p.as_f64() {
+            Ok(v) => data.push(v as f32),
+            Err(_) => {
+                return Response::json(
+                    400, err_body("\"pixels\" must be all numbers"));
+            }
+        }
+    }
+    let input = match HostTensor::f32(state.input_shape.clone(), data) {
+        Ok(t) => t,
+        Err(e) => {
+            return Response::json(400, err_body(&format!("{e}")));
+        }
+    };
+
+    let deadline = Instant::now() + state.request_timeout;
+    match state.handle.infer_deadline(&model, input, deadline) {
+        Ok(row) => {
+            let logits = match row.as_f32() {
+                Ok(l) => l,
+                Err(e) => {
+                    return Response::json(
+                        502, err_body(&format!("bad logits row: {e}")));
+                }
+            };
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let body = Json::Obj(vec![
+                ("model".to_string(), Json::from(model.as_str())),
+                ("argmax".to_string(), Json::from(argmax)),
+                ("logits".to_string(),
+                 Json::Arr(logits.iter()
+                     .map(|&v| Json::Num(v as f64))
+                     .collect())),
+            ]);
+            Response::json(200, body.to_string())
+        }
+        Err(ServeError::Busy { retry_after }) => {
+            // Retry-After is whole seconds; round up so clients never
+            // retry sooner than the hint
+            let secs = retry_after.as_secs_f64().ceil().max(1.0) as u64;
+            let body = Json::Obj(vec![
+                ("error".to_string(), Json::from("server busy")),
+                ("retry_after_ms".to_string(),
+                 Json::from(retry_after.as_millis() as usize)),
+            ]);
+            Response::json(429, body.to_string())
+                .with_header("Retry-After", secs.to_string())
+        }
+        Err(ServeError::DeadlineExceeded) => {
+            Response::json(504, err_body("inference deadline exceeded"))
+        }
+        Err(ServeError::Failed(msg)) => {
+            Response::json(502, err_body(&format!(
+                "inference failed: {msg}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn err_body_is_json() {
+        let v = json::parse(&err_body("boo\"m")).unwrap();
+        assert_eq!(v.req("error").unwrap().as_str().unwrap(), "boo\"m");
+    }
+}

@@ -1,0 +1,187 @@
+//! CLI smoke for `cat serve --listen` (DESIGN.md §11): spawns the real
+//! binary, drives 200/400/429 over raw TCP, then SIGINTs it and asserts
+//! a clean drain (exit 0 + final stats on stdout). Unix-only: the drain
+//! path is signal-driven.
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// One child server at a time (each holds replica worker threads).
+fn server_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+struct ServeProc {
+    child: Child,
+    addr: String,
+    lines: Receiver<String>,
+}
+
+/// Spawn `cat serve --listen 127.0.0.1:0 ...` and wait for it to print
+/// its bound address.
+fn spawn_serve(extra: &[&str]) -> ServeProc {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_cat"))
+        .args(["serve", "--backend", "native",
+               "--listen", "127.0.0.1:0"])
+        .args(extra)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn cat serve");
+    let stdout = child.stdout.take().expect("child stdout");
+    let (tx, rx) = std::sync::mpsc::channel();
+    // keep consuming stdout for the child's whole life so the final
+    // stats report can never block on a full pipe
+    std::thread::spawn(move || {
+        for line in BufReader::new(stdout).lines() {
+            match line {
+                Ok(l) => {
+                    if tx.send(l).is_err() {
+                        break;
+                    }
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let addr = loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        match rx.recv_timeout(left) {
+            Ok(l) => {
+                if let Some(a) = l.strip_prefix("listening on ") {
+                    break a.trim().to_string();
+                }
+            }
+            Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected)
+                => panic!("server never printed its listen address"),
+        }
+    };
+    ServeProc { child, addr, lines: rx }
+}
+
+/// SIGINT the child, require a clean exit, return its remaining stdout.
+fn interrupt_and_reap(mut proc: ServeProc) -> Vec<String> {
+    let pid = proc.child.id().to_string();
+    let killed = Command::new("kill").args(["-INT", &pid])
+        .status()
+        .expect("run kill");
+    assert!(killed.success(), "kill -INT failed");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let status = loop {
+        match proc.child.try_wait().expect("try_wait") {
+            Some(status) => break status,
+            None => {
+                assert!(Instant::now() < deadline,
+                        "server did not drain+exit within 30s of SIGINT");
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    };
+    assert!(status.success(), "server exited uncleanly: {status:?}");
+    let mut out = Vec::new();
+    while let Ok(l) = proc.lines.recv_timeout(Duration::from_secs(5)) {
+        out.push(l);
+    }
+    out
+}
+
+/// One-shot raw HTTP request (Connection: close), returns (status, body).
+fn request(addr: &str, raw: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    s.write_all(raw.as_bytes()).expect("write");
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).expect("read");
+    let text = String::from_utf8_lossy(&buf).to_string();
+    let status = text.split_whitespace().nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let body = text.split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    (status, body)
+}
+
+/// A `POST /v1/classify` with `n` zero pixels.
+fn classify_raw(n: usize) -> String {
+    let body = format!("{{\"pixels\":[{}]}}", vec!["0"; n].join(","));
+    format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+             Connection: close\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(), body)
+}
+
+#[test]
+fn serve_http_smoke_roundtrip_and_clean_drain() {
+    let _guard = server_lock();
+    let proc = spawn_serve(&["--shards", "2", "--replicas", "2"]);
+    let addr = proc.addr.clone();
+
+    let (status, body) = request(
+        &addr, "GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 200, "healthz body: {body}");
+    assert!(body.contains("ok"));
+
+    let (status, body) = request(&addr, &classify_raw(3 * 32 * 32));
+    assert_eq!(status, 200, "classify body: {body}");
+    assert!(body.contains("argmax"));
+
+    let (status, _) = request(
+        &addr, "POST /v1/classify HTTP/1.1\r\nConnection: close\r\n\
+                Content-Length: 7\r\n\r\nnot{json");
+    assert_eq!(status, 400);
+
+    let (status, body) = request(
+        &addr, "GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    assert!(body.contains("cat_router_dispatched_total"),
+            "metrics body: {body}");
+    assert!(body.contains("cat_replica_up"), "metrics body: {body}");
+
+    let out = interrupt_and_reap(proc);
+    assert!(out.iter().any(|l| l.starts_with("router:")),
+            "drained server must report router stats, got: {out:?}");
+}
+
+#[test]
+fn serve_http_smoke_overload_yields_429() {
+    let _guard = server_lock();
+    // 300ms injected batch delay against queue_depth 1 and a 400ms
+    // request budget: the first batch fills, one request queues, the
+    // rest exhaust their retry budget against a full queue → 429
+    let proc = spawn_serve(&["--queue-depth", "1",
+                             "--fault-delay-ms", "300",
+                             "--request-timeout-ms", "400"]);
+    let addr = proc.addr.clone();
+
+    let n_clients = 16usize;
+    let mut clients = Vec::new();
+    for _ in 0..n_clients {
+        let addr = addr.clone();
+        clients.push(std::thread::spawn(move || {
+            request(&addr, &classify_raw(3 * 32 * 32)).0
+        }));
+    }
+    let mut counts = std::collections::HashMap::new();
+    for c in clients {
+        *counts.entry(c.join().expect("client")).or_insert(0usize) += 1;
+    }
+    for status in counts.keys() {
+        assert!(matches!(status, 200 | 429 | 504),
+                "unexpected status under overload: {status} ({counts:?})");
+    }
+    assert!(counts.get(&429).copied().unwrap_or(0) >= 1,
+            "overload never surfaced a 429: {counts:?}");
+
+    let out = interrupt_and_reap(proc);
+    assert!(out.iter().any(|l| l.starts_with("router:")),
+            "drained server must report router stats, got: {out:?}");
+}

@@ -1,0 +1,673 @@
+//! HTTP serving integration tests (DESIGN.md §11): the full stack —
+//! `TcpListener` front end → typed routes → router → replica workers —
+//! driven over real sockets, with the fault harness
+//! (`cat::serve::fault`) injecting delays, poisoned batches, and
+//! mid-request replica death.
+//!
+//! The acceptance invariants pinned here:
+//! * malformed / oversized / slowloris input → typed 4xx, the server
+//!   keeps serving (never wedges, never panics);
+//! * queue overflow → 429 with a parseable `Retry-After`, and a client
+//!   retrying through `cat::coordinator::Backoff` recovers;
+//! * a replica killed mid-request → 502 (never a hang) and `/healthz`
+//!   degrades to 503;
+//! * graceful shutdown drains in-flight requests to completion.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use cat::coordinator::{BackoffPolicy, BatchExecutor, ExecutorFactory,
+                       ServeOptions, Server, WorkerSpec};
+use cat::data::ShapeDataset;
+use cat::json;
+use cat::runtime::Backend;
+use cat::serve::fault::{injected_factory, FaultPlan};
+use cat::serve::routes::AppState;
+use cat::serve::{HttpCounters, HttpServer, HttpServerConfig};
+use cat::tensor::HostTensor;
+use cat::Result;
+
+/// Server-creating tests run serialized (same rationale as
+/// `tests/sharded_serving.rs`: process-wide pool counters, plus bounded
+/// ephemeral-port churn).
+fn server_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Echoes a fixed 3-logit row per input (argmax = 1). `max_batch` 1
+/// keeps queue-overflow arithmetic deterministic under injected delays.
+struct Echo;
+
+impl BatchExecutor for Echo {
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        inputs.iter()
+            .map(|_| HostTensor::f32(vec![3], vec![0.1, 0.9, 0.2]))
+            .collect()
+    }
+}
+
+fn echo_factory() -> ExecutorFactory {
+    Arc::new(|_spec: &WorkerSpec, _opts: &ServeOptions| {
+        Ok(Box::new(Echo) as Box<dyn BatchExecutor>)
+    })
+}
+
+struct StackCfg {
+    queue_depth: usize,
+    replicas: usize,
+    request_timeout: Duration,
+    max_conns: usize,
+    drain_timeout: Duration,
+}
+
+impl Default for StackCfg {
+    fn default() -> StackCfg {
+        StackCfg {
+            queue_depth: 8,
+            replicas: 1,
+            request_timeout: Duration::from_secs(5),
+            max_conns: 64,
+            drain_timeout: Duration::from_secs(3),
+        }
+    }
+}
+
+/// Spin the full stack on an ephemeral port: router + one replica set
+/// over `factory`, HTTP front end with a tiny `[4]` input shape.
+fn start_stack(factory: ExecutorFactory, cfg: StackCfg)
+               -> (HttpServer, Server, SocketAddr) {
+    let opts = ServeOptions {
+        backend: Backend::Native,
+        queue_depth: cfg.queue_depth,
+        replicas: cfg.replicas,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let specs = vec![WorkerSpec { model: "m".into(), params: None,
+                                  seed: 0 }];
+    let server = Server::spawn_with(PathBuf::from("no_artifacts"), specs,
+                                    opts, Some(factory))
+        .expect("server");
+    let state = AppState {
+        handle: server.handle(),
+        stats: server.stats_handle(),
+        http: HttpCounters::new(),
+        model: "m".to_string(),
+        input_shape: vec![4],
+        request_timeout: cfg.request_timeout,
+    };
+    let mut hcfg = HttpServerConfig::new("127.0.0.1:0");
+    hcfg.max_conns = cfg.max_conns;
+    hcfg.request_timeout = cfg.request_timeout;
+    hcfg.drain_timeout = cfg.drain_timeout;
+    let http = HttpServer::start(hcfg, state).expect("http server");
+    let addr = http.addr();
+    (http, server, addr)
+}
+
+fn stop_stack(http: HttpServer, server: Server) {
+    http.shutdown();
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------- client
+
+#[derive(Debug)]
+struct Resp {
+    status: u16,
+    headers: Vec<(String, String)>,
+    body: String,
+}
+
+impl Resp {
+    fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+fn connect(addr: SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    s.set_read_timeout(Some(Duration::from_secs(30))).expect("timeout");
+    s
+}
+
+/// Read one response off the stream (status line + headers +
+/// `Content-Length` body). Byte-at-a-time head reads are fine at test
+/// payload sizes.
+fn read_response(s: &mut TcpStream) -> std::io::Result<Resp> {
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        if s.read(&mut byte)? == 0 {
+            break;
+        }
+        head.push(byte[0]);
+        assert!(head.len() <= 64 * 1024, "response head never terminated");
+    }
+    let text = String::from_utf8_lossy(&head);
+    let mut lines = text.split("\r\n");
+    let status: u16 = lines.next().unwrap_or("")
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(),
+                          v.trim().to_string()));
+        }
+    }
+    let len: usize = headers.iter()
+        .find(|(k, _)| k == "content-length")
+        .and_then(|(_, v)| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    s.read_exact(&mut body)?;
+    Ok(Resp { status, headers,
+              body: String::from_utf8_lossy(&body).to_string() })
+}
+
+/// One-shot request: write `raw`, read the response.
+fn roundtrip(addr: SocketAddr, raw: &str) -> Resp {
+    let mut s = connect(addr);
+    s.write_all(raw.as_bytes()).expect("write");
+    read_response(&mut s).expect("response")
+}
+
+fn classify_raw(pixels: &[f32], close: bool) -> String {
+    let joined = pixels.iter()
+        .map(|p| format!("{p}"))
+        .collect::<Vec<_>>()
+        .join(",");
+    let body = format!("{{\"pixels\":[{joined}]}}");
+    format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\n{}\
+             Content-Length: {}\r\n\r\n{}",
+            if close { "Connection: close\r\n" } else { "" },
+            body.len(), body)
+}
+
+fn post_classify(addr: SocketAddr, pixels: &[f32]) -> Resp {
+    roundtrip(addr, &classify_raw(pixels, true))
+}
+
+fn get(addr: SocketAddr, path: &str) -> Resp {
+    roundtrip(addr, &format!(
+        "GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"))
+}
+
+// ----------------------------------------------------------------- tests
+
+#[test]
+fn classify_healthz_and_errors_over_one_server() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+
+    // happy path: 200 with the echo executor's argmax
+    let ok = post_classify(addr, &[0.0, 0.25, 0.5, 0.75]);
+    assert_eq!(ok.status, 200, "body: {}", ok.body);
+    let v = json::parse(&ok.body).expect("json body");
+    assert_eq!(v.req("argmax").unwrap().as_f64().unwrap() as usize, 1);
+    assert_eq!(v.req("model").unwrap().as_str().unwrap(), "m");
+    assert_eq!(v.req("logits").unwrap().as_arr().unwrap().len(), 3);
+
+    let health = get(addr, "/healthz");
+    assert_eq!(health.status, 200);
+    assert!(health.body.contains("ok"));
+
+    // typed client errors, server keeps serving after each
+    let bad = roundtrip(addr, "POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+                               Connection: close\r\nContent-Length: 9\r\n\
+                               \r\nnot json!");
+    assert_eq!(bad.status, 400);
+    assert!(bad.body.contains("invalid JSON"), "body: {}", bad.body);
+
+    let short = post_classify(addr, &[1.0, 2.0]);
+    assert_eq!(short.status, 400);
+    assert!(short.body.contains("expected 4"), "body: {}", short.body);
+
+    assert_eq!(get(addr, "/nope").status, 404);
+    let wrong = roundtrip(addr, "DELETE /healthz HTTP/1.1\r\nHost: t\r\n\
+                                 Connection: close\r\n\r\n");
+    assert_eq!(wrong.status, 405);
+    assert_eq!(wrong.header("allow"), Some("GET, HEAD"));
+
+    // garbage on the wire is a 400, not a hang or a dropped connection
+    let garbage = roundtrip(addr, "GARBAGE\r\n\r\n");
+    assert_eq!(garbage.status, 400);
+
+    // still alive after the abuse
+    assert_eq!(post_classify(addr, &[0.0; 4]).status, 200);
+    stop_stack(http, server);
+}
+
+#[test]
+fn keep_alive_pipelines_sequential_requests() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+    let mut s = connect(addr);
+    for i in 0..3 {
+        s.write_all(classify_raw(&[i as f32; 4], false).as_bytes())
+            .expect("write");
+        let resp = read_response(&mut s).expect("keep-alive response");
+        assert_eq!(resp.status, 200, "request {i} on shared connection");
+    }
+    // the final request may ask to close and the server obliges
+    s.write_all(classify_raw(&[9.0; 4], true).as_bytes()).expect("write");
+    assert_eq!(read_response(&mut s).expect("last").status, 200);
+    stop_stack(http, server);
+}
+
+#[test]
+fn metrics_exposition_is_wellformed_and_monotone() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+    for i in 0..5 {
+        assert_eq!(post_classify(addr, &[i as f32; 4]).status, 200);
+    }
+    let m = get(addr, "/metrics");
+    assert_eq!(m.status, 200);
+    assert!(m.header("content-type").unwrap().starts_with("text/plain"));
+    for name in ["cat_router_dispatched_total", "cat_http_requests_total",
+                 "cat_http_responses_2xx_total", "cat_replica_up",
+                 "cat_request_latency_us_bucket"] {
+        assert!(m.body.contains(name), "missing metric {name}");
+    }
+
+    // histogram contract: cumulative buckets never decrease and +Inf
+    // equals _count
+    let mut last = 0u64;
+    let mut inf = None;
+    for line in m.body.lines() {
+        if let Some(rest) = line.strip_prefix(
+            "cat_request_latency_us_bucket{le=\"") {
+            let (bound, val) = rest.split_once("\"} ").expect("bucket line");
+            let val: u64 = val.parse().expect("bucket value");
+            assert!(val >= last,
+                    "cumulative bucket le={bound} decreased: {val} < {last}");
+            last = val;
+            if bound == "+Inf" {
+                inf = Some(val);
+            }
+        }
+    }
+    let count: u64 = m.body.lines()
+        .find_map(|l| l.strip_prefix("cat_request_latency_us_count "))
+        .expect("histogram count")
+        .parse()
+        .expect("count value");
+    assert_eq!(inf, Some(count), "+Inf bucket must equal _count");
+    assert!(count >= 5, "5 served requests must be in the histogram");
+    stop_stack(http, server);
+}
+
+#[test]
+fn oversized_and_truncated_requests_get_4xx_and_service_survives() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+
+    // claimed 2 MB body: rejected from the header alone (413), before
+    // any body bytes exist to read
+    let big = roundtrip(addr, "POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+                               Content-Length: 2000000\r\n\r\n");
+    assert_eq!(big.status, 413);
+
+    // truncated mid-head (FIN before CRLFCRLF) → 400
+    let mut s = connect(addr);
+    s.write_all(b"POST /v1/classify HTTP/1.1\r\nHost: tru").expect("write");
+    s.shutdown(std::net::Shutdown::Write).expect("half-close");
+    let trunc = read_response(&mut s).expect("truncated response");
+    assert_eq!(trunc.status, 400);
+
+    // oversized request line → 414
+    let mut long = String::from("GET /");
+    long.push_str(&"a".repeat(40 * 1024));
+    long.push_str(" HTTP/1.1\r\n\r\n");
+    assert_eq!(roundtrip(addr, &long).status, 414);
+
+    // the server took all of that and keeps serving
+    assert_eq!(post_classify(addr, &[0.0; 4]).status, 200);
+    stop_stack(http, server);
+}
+
+#[test]
+fn slowloris_is_evicted_with_408_not_a_wedged_acceptor() {
+    let _guard = server_lock();
+    let cfg = StackCfg {
+        request_timeout: Duration::from_millis(300),
+        ..StackCfg::default()
+    };
+    let (http, server, addr) = start_stack(echo_factory(), cfg);
+
+    // drip a few bytes of a request line, then stall
+    let mut s = connect(addr);
+    s.write_all(b"POST /v1/cla").expect("drip");
+    let t0 = Instant::now();
+    let resp = read_response(&mut s).expect("slowloris eviction");
+    assert_eq!(resp.status, 408);
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "eviction must come from the deadline, not TCP give-up");
+
+    // the stalled connection never blocked anyone else
+    assert_eq!(post_classify(addr, &[0.0; 4]).status, 200);
+    stop_stack(http, server);
+}
+
+#[test]
+fn overflow_yields_429_with_retry_after_and_backoff_recovers() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    // 200ms per batch against queue_depth 1 and a 300ms request budget:
+    // one request executes, one queues, the rest exhaust their retry
+    // budget against a full queue → 429
+    plan.set_delay(Duration::from_millis(200));
+    let cfg = StackCfg {
+        queue_depth: 1,
+        request_timeout: Duration::from_millis(300),
+        ..StackCfg::default()
+    };
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()), cfg);
+
+    let n_clients = 12usize;
+    let mut clients = Vec::new();
+    for i in 0..n_clients {
+        clients.push(std::thread::spawn(move || {
+            post_classify(addr, &[i as f32; 4])
+        }));
+    }
+    let mut busy = Vec::new();
+    let mut served = 0usize;
+    for c in clients {
+        let resp = c.join().expect("client thread");
+        match resp.status {
+            429 => busy.push(resp),
+            200 => served += 1,
+            504 => {} // accepted but the 200ms batch outlived the budget
+            other => panic!("unexpected status under overload: {other} \
+                             ({})", resp.body),
+        }
+    }
+    assert!(!busy.is_empty(),
+            "12 clients against queue_depth=1 + 200ms batches must \
+             overflow (served {served})");
+    let hint_secs: u64 = busy[0].header("retry-after")
+        .expect("429 must carry Retry-After")
+        .parse()
+        .expect("Retry-After must be integral seconds");
+    assert!(hint_secs >= 1);
+    let hinted: f64 = json::parse(&busy[0].body)
+        .expect("429 body is JSON")
+        .req("retry_after_ms").expect("retry_after_ms field")
+        .as_f64().expect("retry_after_ms is a number");
+    assert!(hinted >= 0.0);
+
+    // recovery: lift the fault, let the in-flight delayed batches
+    // finish, then retry through the shared backoff helper until the
+    // server accepts again
+    plan.clear_delay();
+    std::thread::sleep(Duration::from_millis(500));
+    let policy = BackoffPolicy::serving(Duration::from_millis(5),
+                                        Duration::from_secs(10));
+    let mut backoff = policy.start(7);
+    loop {
+        let resp = post_classify(addr, &[1.0; 4]);
+        if resp.status == 200 {
+            break;
+        }
+        // 429 while the backlog drains; a straggler delayed batch may
+        // still push one request past its deadline (504) — both are
+        // retryable, anything else is a bug
+        assert!(resp.status == 429 || resp.status == 504,
+                "only backpressure may block recovery, got {} ({})",
+                resp.status, resp.body);
+        let hint = resp.header("retry-after")
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_secs);
+        let delay = backoff.next_delay(hint.map(|h| h.min(
+            Duration::from_millis(50))))
+            .expect("server must recover within the retry budget");
+        std::thread::sleep(delay);
+    }
+    stop_stack(http, server);
+}
+
+#[test]
+fn replica_death_maps_to_502_and_healthz_degrades() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()), StackCfg::default());
+    assert_eq!(get(addr, "/healthz").status, 200);
+
+    // kill the lone replica mid-request: the in-flight request must
+    // come back 502, never hang
+    plan.kill_next();
+    let t0 = Instant::now();
+    let dead = post_classify(addr, &[0.0; 4]);
+    assert_eq!(dead.status, 502, "body: {}", dead.body);
+    assert!(t0.elapsed() < Duration::from_secs(10));
+
+    // /healthz degrades once the death is observed (dispatch attempts
+    // prod the router; the ping monitor finds it on its own cadence
+    // too). Subsequent requests are fast 502s, never hangs.
+    let mut degraded = false;
+    for _ in 0..100 {
+        if get(addr, "/healthz").status == 503 {
+            degraded = true;
+            break;
+        }
+        let t0 = Instant::now();
+        assert_eq!(post_classify(addr, &[0.0; 4]).status, 502,
+                   "a dead lone replica must fail requests");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(degraded, "/healthz never reported the dead replica");
+
+    // and the replica-up gauge agrees
+    let m = get(addr, "/metrics");
+    assert!(m.body.contains("cat_replica_up{model=\"m\",replica=\"0\"} 0"),
+            "metrics: {}", m.body);
+    stop_stack(http, server);
+}
+
+#[test]
+fn poisoned_batches_surface_as_502_then_clear() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()),
+        StackCfg { replicas: 1, ..StackCfg::default() });
+    plan.poison_next(2);
+    // executor errors (not deaths): each poisoned batch fails its
+    // requests with 502, then the replica keeps serving
+    let mut failed = 0usize;
+    for _ in 0..4 {
+        let resp = post_classify(addr, &[0.0; 4]);
+        match resp.status {
+            502 => failed += 1,
+            200 => {}
+            other => panic!("unexpected status {other}: {}", resp.body),
+        }
+    }
+    assert_eq!(failed, 2, "exactly the two poisoned batches must fail");
+    assert_eq!(post_classify(addr, &[0.0; 4]).status, 200);
+    assert_eq!(get(addr, "/healthz").status, 200,
+               "poison is an error, not a death — health must hold");
+    stop_stack(http, server);
+}
+
+#[test]
+fn slow_inference_deadline_maps_to_504() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    plan.set_delay(Duration::from_millis(600));
+    let cfg = StackCfg {
+        request_timeout: Duration::from_millis(200),
+        ..StackCfg::default()
+    };
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()), cfg);
+    let t0 = Instant::now();
+    let resp = post_classify(addr, &[0.0; 4]);
+    assert_eq!(resp.status, 504, "body: {}", resp.body);
+    assert!(t0.elapsed() < Duration::from_secs(5),
+            "504 must arrive at the deadline, not after the batch");
+    stop_stack(http, server);
+}
+
+#[test]
+fn accept_side_limit_sheds_with_503() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    plan.set_delay(Duration::from_millis(400));
+    let cfg = StackCfg {
+        max_conns: 1,
+        request_timeout: Duration::from_secs(5),
+        ..StackCfg::default()
+    };
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()), cfg);
+
+    // occupy the single slot with an in-flight request
+    let mut busy_conn = connect(addr);
+    busy_conn.write_all(classify_raw(&[0.0; 4], true).as_bytes())
+        .expect("write");
+    std::thread::sleep(Duration::from_millis(100)); // let it be accepted
+
+    // the next connection is shed inline with 503
+    let mut shed_conn = connect(addr);
+    let shed = read_response(&mut shed_conn).expect("shed response");
+    assert_eq!(shed.status, 503, "body: {}", shed.body);
+
+    // the occupant still completes
+    let resp = read_response(&mut busy_conn).expect("occupant response");
+    assert_eq!(resp.status, 200);
+    stop_stack(http, server);
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    plan.set_delay(Duration::from_millis(300));
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()),
+        StackCfg { request_timeout: Duration::from_secs(5),
+                   ..StackCfg::default() });
+
+    // put a request in flight, then shut down while it is executing
+    let inflight = std::thread::spawn(move || {
+        post_classify(addr, &[0.0; 4])
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    let t0 = Instant::now();
+    http.shutdown();
+    let drained = t0.elapsed();
+    let resp = inflight.join().expect("in-flight client");
+    assert_eq!(resp.status, 200,
+               "the in-flight request must drain to completion, \
+                got {} ({})", resp.status, resp.body);
+    assert!(drained < Duration::from_secs(4),
+            "drain must be bounded, took {drained:?}");
+
+    // after drain no new connection is served
+    assert!(TcpStream::connect(addr).map(|mut s| {
+        let _ = s.set_read_timeout(Some(Duration::from_millis(300)));
+        s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").is_err()
+            || read_response(&mut s).map(|r| r.status).unwrap_or(0) == 0
+    }).unwrap_or(true), "connections after shutdown must not be served");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.len(), 1);
+    assert!(stats[0].requests >= 1);
+}
+
+#[test]
+fn shutdown_races_with_concurrent_clients_without_hanging() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+    let mut clients = Vec::new();
+    for i in 0..6 {
+        clients.push(std::thread::spawn(move || {
+            // a client may lose the race: refused connect or reset
+            // mid-read are both acceptable — hangs and panics are not
+            let mut s = match TcpStream::connect(addr) {
+                Ok(s) => s,
+                Err(_) => return,
+            };
+            let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+            if s.write_all(classify_raw(&[i as f32; 4], true).as_bytes())
+                .is_err() {
+                return;
+            }
+            if let Ok(resp) = read_response(&mut s) {
+                assert!(resp.status == 200 || resp.status == 0,
+                        "race may drop the connection but never \
+                         half-answer: {}", resp.status);
+            }
+        }));
+    }
+    std::thread::sleep(Duration::from_millis(20));
+    http.shutdown();
+    for c in clients {
+        c.join().expect("racing client must terminate");
+    }
+    server.shutdown();
+}
+
+/// End-to-end over the real native executor (no fault seam): default
+/// demo model, full `[3, 32, 32]` input, 10 logits out.
+#[test]
+fn native_backend_classifies_full_image_end_to_end() {
+    let _guard = server_lock();
+    let opts = ServeOptions {
+        backend: Backend::Native,
+        max_delay: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::spawn(PathBuf::from("no_artifacts"),
+                               &["m".to_string()], opts, 0)
+        .expect("native server");
+    let state = AppState {
+        handle: server.handle(),
+        stats: server.stats_handle(),
+        http: HttpCounters::new(),
+        model: "m".to_string(),
+        input_shape: vec![3, 32, 32],
+        request_timeout: Duration::from_secs(30),
+    };
+    let http = HttpServer::start(HttpServerConfig::new("127.0.0.1:0"),
+                                 state)
+        .expect("http server");
+    let addr = http.addr();
+
+    let sample = ShapeDataset::new(77).sample(0);
+    let resp = post_classify(addr, &sample.pixels);
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    let v = json::parse(&resp.body).expect("json");
+    let logits = v.req("logits").unwrap().as_arr().unwrap();
+    assert_eq!(logits.len(), 10, "native demo model emits 10 classes");
+    let argmax = v.req("argmax").unwrap().as_f64().unwrap() as usize;
+    assert!(argmax < 10);
+    stop_stack(http, server);
+}

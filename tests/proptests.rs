@@ -437,6 +437,201 @@ fn json_roundtrip_random_values() {
     });
 }
 
+// ---------------- parser hardening (json + http wire surface) ----------
+
+#[test]
+fn json_deep_nesting_bounded_not_stack_overflow() {
+    // depths comfortably inside the guard parse; absurd depths error
+    // instead of overflowing the stack (the serve layer feeds this
+    // parser attacker bytes)
+    for_all("json_depth_bounded", |rng| {
+        let d = 1 + rng.below(100);
+        let deep = format!("{}1{}", "[".repeat(d), "]".repeat(d));
+        cat::json::parse(&deep).expect("within-limit nesting parses");
+        let d = 150 + rng.below(100_000);
+        let bomb = "[".repeat(d);
+        assert!(cat::json::parse(&bomb).is_err(),
+                "unclosed {d}-deep nesting must error, not overflow");
+        let closed = format!("{}1{}", "[".repeat(d), "]".repeat(d));
+        assert!(cat::json::parse(&closed).is_err(),
+                "closed {d}-deep nesting must exceed the depth cap");
+    });
+}
+
+#[test]
+fn json_numbers_parse_finite_or_error() {
+    // huge/malformed numeric literals must never yield inf/nan (logits
+    // math downstream assumes finite) and never panic
+    for_all("json_numbers_finite", |rng| {
+        let mantissa: String = (0..1 + rng.below(40))
+            .map(|_| (b'0' + rng.below(10) as u8) as char)
+            .collect();
+        let exp = rng.below(1200);
+        let neg = if rng.bernoulli(0.5) { "-" } else { "" };
+        let text = format!("{neg}{mantissa}e{exp}");
+        match cat::json::parse(&text) {
+            Ok(v) => {
+                let n = v.as_f64().expect("numeric literal parses to Num");
+                assert!(n.is_finite(), "'{text}' parsed to non-finite {n}");
+            }
+            Err(_) => {} // overflow rejected: fine
+        }
+    });
+}
+
+#[test]
+fn json_invalid_escapes_rejected() {
+    for_all("json_invalid_escapes", |rng| {
+        let c = (b' ' + rng.below(95) as u8) as char;
+        let text = format!("\"a\\{c}b\"");
+        let valid = matches!(c, '"' | '\\' | '/' | 'b' | 'f' | 'n' | 'r'
+                                | 't');
+        // \u needs four hex digits, which 'b' after it is not
+        match cat::json::parse(&text) {
+            Ok(_) => assert!(valid, "escape '\\{c}' must be rejected"),
+            Err(_) => assert!(!valid, "escape '\\{c}' must parse"),
+        }
+    });
+}
+
+#[test]
+fn json_garbage_never_panics() {
+    // arbitrary byte soup: any outcome but a panic/hang is acceptable
+    // (for_all turns panics into failures)
+    for_all_n("json_garbage_total", 256, |rng| {
+        let len = rng.below(200);
+        let garbage: String = (0..len)
+            .map(|_| {
+                // bias toward JSON structural bytes to reach deep paths
+                let structural = b"{}[]\",:.0123456789eE+-\\ truefalsn";
+                if rng.bernoulli(0.7) {
+                    structural[rng.below(structural.len())] as char
+                } else {
+                    char::from_u32(rng.below(0xD7FF) as u32).unwrap_or('?')
+                }
+            })
+            .collect();
+        let _ = cat::json::parse(&garbage);
+    });
+}
+
+/// Feeds an inner buffer in pseudo-random chunk sizes — the adversarial
+/// TCP segmentation a real socket can produce.
+struct Chunked {
+    data: Vec<u8>,
+    pos: usize,
+    sizes: Vec<usize>,
+    turn: usize,
+}
+
+impl std::io::Read for Chunked {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.data.len() {
+            return Ok(0);
+        }
+        let want = self.sizes[self.turn % self.sizes.len()].max(1);
+        self.turn += 1;
+        let n = want.min(buf.len()).min(self.data.len() - self.pos);
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+#[test]
+fn http_parser_is_split_insensitive() {
+    use cat::serve::http::{read_request, HttpLimits};
+    // the same request bytes must parse identically no matter how the
+    // transport fragments them
+    for_all("http_split_insensitive", |rng| {
+        let body: String = (0..rng.below(64))
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect();
+        let raw = format!(
+            "POST /v1/classify HTTP/1.1\r\nHost: x\r\nX-Tag: t{}\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            rng.below(1000), body.len(), body);
+        let limits = HttpLimits::default();
+        let whole = read_request(&mut Chunked {
+            data: raw.clone().into_bytes(),
+            pos: 0,
+            sizes: vec![usize::MAX],
+            turn: 0,
+        }, &limits).expect("whole").expect("some");
+        let sizes: Vec<usize> =
+            (0..1 + rng.below(8)).map(|_| 1 + rng.below(7)).collect();
+        let split = read_request(&mut Chunked {
+            data: raw.into_bytes(),
+            pos: 0,
+            sizes,
+            turn: 0,
+        }, &limits).expect("split").expect("some");
+        assert_eq!(whole.method, split.method);
+        assert_eq!(whole.path, split.path);
+        assert_eq!(whole.headers, split.headers);
+        assert_eq!(whole.body, split.body);
+    });
+}
+
+#[test]
+fn http_hostile_corpus_is_4xx_never_panic_never_unbounded() {
+    use cat::serve::http::{read_request, HttpLimits};
+    // mutated requests and raw byte soup: every outcome is Ok or a
+    // typed error whose status is 4xx/501 — no panic, no unbounded
+    // allocation (limits cap the accumulation), no hang (input is
+    // finite and EOF terminates)
+    for_all_n("http_hostile_total", 256, |rng| {
+        let mut raw = if rng.bernoulli(0.5) {
+            b"POST /v1/classify HTTP/1.1\r\nHost: x\r\n\
+              Content-Length: 5\r\n\r\nhello".to_vec()
+        } else {
+            (0..rng.below(300)).map(|_| rng.below(256) as u8).collect()
+        };
+        // a few random byte mutations
+        for _ in 0..rng.below(6) {
+            if raw.is_empty() {
+                break;
+            }
+            let i = rng.below(raw.len());
+            raw[i] = rng.below(256) as u8;
+        }
+        let limits = HttpLimits::default();
+        let sizes: Vec<usize> =
+            (0..1 + rng.below(4)).map(|_| 1 + rng.below(700)).collect();
+        match read_request(&mut Chunked { data: raw, pos: 0, sizes,
+                                          turn: 0 }, &limits) {
+            Ok(_) => {}
+            Err(e) => {
+                let status = e.status();
+                assert!((400..=501).contains(&status),
+                        "hostile input must map to a client/unsupported \
+                         status, got {status} ({e:?})");
+            }
+        }
+    });
+}
+
+#[test]
+fn http_huge_claimed_bodies_rejected_from_header_alone() {
+    use cat::serve::http::{read_request, HttpLimits};
+    for_all("http_claimed_body_bounded", |rng| {
+        let limits = HttpLimits::default();
+        let claim = limits.max_body as u64 + 1
+            + rng.below(1_000_000) as u64 * 1_000;
+        let raw = format!(
+            "POST / HTTP/1.1\r\nContent-Length: {claim}\r\n\r\n");
+        let err = read_request(&mut Chunked {
+            data: raw.into_bytes(),
+            pos: 0,
+            sizes: vec![usize::MAX],
+            turn: 0,
+        }, &limits).expect_err("over-cap claim must be rejected");
+        // 413 for in-range claims, 400 if the literal overflows usize
+        assert!(err.status() == 413 || err.status() == 400,
+                "got {err:?}");
+    });
+}
+
 // ---------------- native autograd (gradients of the core identity) --------
 
 /// Shared tolerance: |fd − g| within 1e-2 relative (f32 central

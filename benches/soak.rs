@@ -1,0 +1,299 @@
+//! Chaos soak (DESIGN.md §12): sustained Zipf workload against a
+//! supervised K-model × R-replica server while faults fire mid-stream —
+//! kills, poisoned batches, injected delay. The gate is the PR-7
+//! acceptance contract: every request gets a definitive answer (200-
+//! shaped Ok / Busy / Failed / DeadlineExceeded — never a hang), killed
+//! replicas respawn through backoff + probation, and time-to-recovery
+//! is bounded. Emits `BENCH_soak.json` (goodput, latency quantiles,
+//! Busy rate, recovery histogram); CI's perf-smoke runs
+//! `--smoke --check` and fails the build on any violated gate.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cat::coordinator::{ArrivalSampler, Arrivals, BatchExecutor,
+                       ExecutorFactory, ReplicaPhase, ServeError,
+                       ServeHandle, ServeOptions, Server, StatsHandle,
+                       WorkerSpec};
+use cat::data::{Rng, Zipf};
+use cat::json::Json;
+use cat::metrics::LatencyHistogram;
+use cat::serve::fault::{injected_factory, FaultPlan};
+use cat::tensor::HostTensor;
+
+/// Cheap deterministic stand-in executor: the soak stresses the
+/// supervision + routing machinery, not the model math.
+struct SoakModel;
+
+impl BatchExecutor for SoakModel {
+    fn max_batch(&self) -> usize {
+        4
+    }
+
+    fn infer_batch(&self, inputs: &[&HostTensor])
+                   -> cat::Result<Vec<HostTensor>> {
+        inputs
+            .iter()
+            .map(|t| {
+                let s: f32 = t.as_f32()?.iter().sum();
+                HostTensor::f32(vec![4], vec![s, 0.5 * s, -s, 1.0])
+            })
+            .collect()
+    }
+}
+
+/// Per-client outcome tally: every issued request lands in exactly one
+/// bucket — `unanswered` (issued minus the buckets) must end at zero.
+#[derive(Default)]
+struct Tally {
+    issued: u64,
+    ok: u64,
+    busy: u64,
+    failed: u64,
+    deadline: u64,
+    latency: LatencyHistogram,
+}
+
+/// One closed-loop client: Poisson arrivals, Zipf-popular inputs over
+/// two models, 500ms per-request deadline.
+fn client(handle: ServeHandle, models: Vec<String>, stop: Arc<AtomicBool>,
+          rate: f64, seed: u64) -> Tally {
+    let mut tally = Tally::default();
+    let mut arrivals = ArrivalSampler::new(Arrivals::Poisson { rate },
+                                           seed);
+    let zipf = Zipf::new(64, 1.1);
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let inputs: Vec<HostTensor> = (0..zipf.len())
+        .map(|i| {
+            let x = (i as f32).mul_add(0.25, 1.0);
+            HostTensor::f32(vec![4], vec![x, -x, 0.5 * x, 2.0])
+                .expect("soak input tensor")
+        })
+        .collect();
+    while !stop.load(Ordering::Relaxed) {
+        std::thread::sleep(arrivals.next_gap());
+        let idx = zipf.sample(&mut rng);
+        let model = &models[idx % models.len()];
+        let t0 = Instant::now();
+        let deadline = t0 + Duration::from_millis(500);
+        tally.issued += 1;
+        match handle.infer_deadline(model, inputs[idx].clone(), deadline) {
+            Ok(_) => {
+                tally.ok += 1;
+                tally.latency.record(t0.elapsed());
+            }
+            Err(ServeError::Busy { .. }) => tally.busy += 1,
+            Err(ServeError::DeadlineExceeded) => tally.deadline += 1,
+            Err(ServeError::Failed(_)) => tally.failed += 1,
+        }
+    }
+    tally
+}
+
+/// Poll until every replica is routable again (phase `Live`).
+fn await_all_live(stats: &StatsHandle, patience: Duration) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < patience {
+        if stats
+            .replicas()
+            .iter()
+            .all(|r| r.alive && r.phase == ReplicaPhase::Live)
+        {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+fn main() {
+    let args = cat::bench::bench_args("soak", &["smoke", "check"], &[]);
+    let smoke = args.has("smoke");
+    let check = args.has("check");
+
+    let opts = ServeOptions {
+        replicas: 2,
+        queue_depth: 64,
+        max_delay: Duration::from_millis(1),
+        health_every: Duration::from_millis(20),
+        ping_timeout: Duration::from_millis(200),
+        restart_budget: 32,
+        restart_base: Duration::from_millis(10),
+        probation_pings: 2,
+        ..Default::default()
+    };
+    let models = vec!["soak_a".to_string(), "soak_b".to_string()];
+    let specs: Vec<WorkerSpec> = models
+        .iter()
+        .map(|m| WorkerSpec { model: m.clone(), params: None, seed: 0 })
+        .collect();
+    let plan = FaultPlan::new();
+    let inner: ExecutorFactory = Arc::new(|_s: &WorkerSpec,
+                                           _o: &ServeOptions| {
+        Ok(Box::new(SoakModel) as Box<dyn BatchExecutor>)
+    });
+    let factory = injected_factory(&plan, inner);
+    let server = Server::spawn_with(cat::artifacts_dir(), specs, opts,
+                                    Some(factory))
+        .expect("spawn soak server");
+    let stats = server.stats_handle();
+
+    // sustained load: 4 closed-loop clients
+    let stop = Arc::new(AtomicBool::new(false));
+    let per_client_rate = if smoke { 40.0 } else { 150.0 };
+    let clients: Vec<_> = (0..4)
+        .map(|i| {
+            let handle = server.handle();
+            let models = models.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                client(handle, models, stop, per_client_rate,
+                       0xCA7 + i as u64)
+            })
+        })
+        .collect();
+    let t_start = Instant::now();
+
+    // the chaos schedule: two explicit kills with full recovery waits
+    // (the gated path), plus poison + delay riding along, plus — in the
+    // full run — a periodic-kill window for sustained churn
+    let settle = Duration::from_millis(if smoke { 250 } else { 1000 });
+    let patience = Duration::from_secs(5);
+    std::thread::sleep(settle);
+
+    plan.kill_next();
+    let healed_1 = await_all_live(&stats, patience);
+    eprintln!("[soak] kill #1 healed: {healed_1}");
+
+    plan.poison_next(3);
+    std::thread::sleep(settle / 2);
+    plan.set_delay(Duration::from_millis(2));
+    std::thread::sleep(settle / 2);
+    plan.clear_delay();
+
+    plan.kill_next();
+    let healed_2 = await_all_live(&stats, patience);
+    eprintln!("[soak] kill #2 healed: {healed_2}");
+
+    if !smoke {
+        // every 200th batch dies for a while: overlapping outages
+        plan.kill_every(200);
+        std::thread::sleep(Duration::from_secs(3));
+        plan.kill_every(0);
+        let healed = await_all_live(&stats, patience);
+        eprintln!("[soak] periodic-kill window healed: {healed}");
+    }
+
+    std::thread::sleep(settle);
+    stop.store(true, Ordering::Relaxed);
+    let mut total = Tally::default();
+    for c in clients {
+        let t = c.join().expect("client thread");
+        total.issued += t.issued;
+        total.ok += t.ok;
+        total.busy += t.busy;
+        total.failed += t.failed;
+        total.deadline += t.deadline;
+        total.latency.merge(&t.latency);
+    }
+    let elapsed = t_start.elapsed().as_secs_f64();
+    let healed_final = await_all_live(&stats, patience);
+
+    let router = stats.router();
+    let recovery = stats.recovery_latency();
+    let answered =
+        total.ok + total.busy + total.failed + total.deadline;
+    let unanswered = total.issued - answered;
+    let goodput = total.ok as f64 / elapsed;
+    let busy_rate = total.busy as f64 / total.issued.max(1) as f64;
+
+    eprintln!("\n== chaos soak ==");
+    eprintln!("  requests {:>8}  ok {} busy {} failed {} deadline {}",
+              total.issued, total.ok, total.busy, total.failed,
+              total.deadline);
+    eprintln!("  goodput  {goodput:>8.1} req/s   busy rate {:.4}",
+              busy_rate);
+    eprintln!("  latency  p50 {}us  p99 {}us  max {}us",
+              total.latency.quantile_us(0.5),
+              total.latency.quantile_us(0.99), total.latency.max_us());
+    eprintln!("  deaths {}  restarts {}  recoveries {} (p50 {}us, max \
+               {}us)",
+              router.replicas_died, router.replicas_restarted,
+              recovery.count(), recovery.quantile_us(0.5),
+              recovery.max_us());
+
+    let out = Json::Obj(vec![
+        ("bench".into(), Json::from("soak")),
+        ("smoke".into(), Json::Bool(smoke)),
+        ("elapsed_s".into(), Json::Num(elapsed)),
+        ("requests".into(), Json::Num(total.issued as f64)),
+        ("ok".into(), Json::Num(total.ok as f64)),
+        ("busy".into(), Json::Num(total.busy as f64)),
+        ("failed".into(), Json::Num(total.failed as f64)),
+        ("deadline".into(), Json::Num(total.deadline as f64)),
+        ("unanswered".into(), Json::Num(unanswered as f64)),
+        ("goodput_rps".into(), Json::Num(goodput)),
+        ("busy_rate".into(), Json::Num(busy_rate)),
+        ("latency_us".into(), Json::Obj(vec![
+            ("p50".into(),
+             Json::Num(total.latency.quantile_us(0.5) as f64)),
+            ("p99".into(),
+             Json::Num(total.latency.quantile_us(0.99) as f64)),
+            ("max".into(), Json::Num(total.latency.max_us() as f64)),
+        ])),
+        ("kills".into(), Json::Num(router.replicas_died as f64)),
+        ("restarts".into(),
+         Json::Num(router.replicas_restarted as f64)),
+        ("recovery_us".into(), Json::Obj(vec![
+            ("count".into(), Json::Num(recovery.count() as f64)),
+            ("p50".into(),
+             Json::Num(recovery.quantile_us(0.5) as f64)),
+            ("max".into(), Json::Num(recovery.max_us() as f64)),
+        ])),
+        ("healed_final".into(), Json::Bool(healed_final)),
+    ]);
+    std::fs::write("BENCH_soak.json", out.to_string_pretty())
+        .expect("write BENCH_soak.json");
+    eprintln!("results -> BENCH_soak.json");
+
+    server.shutdown();
+
+    if check {
+        let mut violations = Vec::new();
+        if unanswered != 0 {
+            violations.push(format!("{unanswered} requests unanswered"));
+        }
+        if total.ok == 0 {
+            violations.push("no request ever succeeded".to_string());
+        }
+        if router.replicas_died == 0 {
+            violations.push("no replica ever died (faults not \
+                             injected?)".to_string());
+        }
+        if router.replicas_restarted == 0 {
+            violations.push("supervisor never restarted a \
+                             replica".to_string());
+        }
+        if recovery.count() == 0 {
+            violations.push("no recovery was ever recorded".to_string());
+        }
+        if recovery.count() > 0 && recovery.max_us() > 5_000_000 {
+            violations.push(format!(
+                "worst time-to-recovery {}us exceeds the 5s bound",
+                recovery.max_us()));
+        }
+        if !healed_final {
+            violations.push("server did not heal to all-Live by the \
+                             end".to_string());
+        }
+        if violations.is_empty() {
+            eprintln!("soak --check: all gates passed");
+        } else {
+            for v in &violations {
+                eprintln!("soak --check FAILED: {v}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

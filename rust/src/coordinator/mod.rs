@@ -1,21 +1,24 @@
 //! L3 serving coordinator: request router, dynamic batcher, data-parallel
 //! replica sets with health checks + backpressure ([`router`]),
-//! head-parallel model shards ([`shard`]), and per-replica workers over a
+//! head-parallel model shards ([`shard`]), replica supervision with
+//! respawn + probation ([`supervisor`]), and per-replica workers over a
 //! pluggable [`BatchExecutor`] — PJRT artifacts or the native Rust CAT
 //! executor, per [`crate::runtime::Backend`] (vLLM-router shaped; the
 //! paper's contribution lives at L1/L2 so this layer is a
-//! production-grade driver, per DESIGN.md §3, §6 and §10).
+//! production-grade driver, per DESIGN.md §3, §6, §10 and §12).
 
 pub mod batcher;
 pub mod retry;
 pub mod router;
 pub mod server;
 pub mod shard;
+pub mod supervisor;
 pub mod workload;
 
 pub use batcher::{DynamicBatcher, Flush, Pending};
 pub use retry::{Backoff, BackoffPolicy};
-pub use router::{Rejection, RouterStats, ServeError, MAX_MISSED_PINGS};
+pub use router::{Rejection, ReplicaPhase, RouterStats, ServeError,
+                 MAX_MISSED_PINGS};
 pub use server::{aggregate_stats, default_factory, split_rows,
                  BatchExecutor, ExecutorFactory, InferRequest, ModelStats,
                  ReplicaSnapshot, ServeHandle, ServeOptions, Server,

@@ -1,5 +1,6 @@
 //! Replica routing: the data-parallel half of sharded serving
-//! (DESIGN.md §10).
+//! (DESIGN.md §10) and the per-replica lifecycle the supervisor drives
+//! (DESIGN.md §12).
 //!
 //! Each model runs R replica workers behind the router, every replica
 //! with its own bounded queue. Dispatch is rotating round-robin over the
@@ -11,8 +12,18 @@
 //!   flush cadence) — **backpressure is an explicit, immediate signal**,
 //!   not an ever-growing queue;
 //! * a replica whose queue endpoint is gone (worker thread died) is
-//!   marked dead on the spot and never routed to again;
+//!   marked dead on the spot — permanently when supervision is off,
+//!   until the supervisor respawns it when `restart_budget > 0`;
 //! * no live replica at all → [`ServeError::Failed`], a terminal error.
+//!
+//! Every replica carries a [`ReplicaPhase`]: `Live` replicas take
+//! traffic; a death moves them to `Dead`, the supervisor's restart
+//! delay shows as `Backoff`, and a respawned replica sits in
+//! `Probation` — answering health pings but receiving no dispatch —
+//! until it has `P` consecutive ping successes, so a crash-looping
+//! executor cannot flap live traffic. The router, monitor, and
+//! supervisor all share [`ReplicaSlot`]s, whose queue sender is
+//! swapped in place on respawn; the routing table itself never changes.
 //!
 //! The health monitor thread pings every replica each `health_every`
 //! through the same queue the requests use (so a ping measures real
@@ -28,11 +39,13 @@
 //! heal themselves.
 
 use std::fmt;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicU8,
+                        AtomicUsize, Ordering};
 use std::sync::mpsc::{self, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::metrics::{lock_recovering, LatencyHistogram};
 use crate::tensor::HostTensor;
 
 use super::server::InferRequest;
@@ -102,20 +115,71 @@ pub(crate) enum WorkerMsg {
     Ping(mpsc::Sender<()>),
 }
 
+/// Where a replica stands in the supervision lifecycle (DESIGN.md §12).
+///
+/// `Live` is the only phase dispatch routes to. `Dead` is how every
+/// death starts — and where it ends when supervision is off or the
+/// restart budget is exhausted. With supervision on, the supervisor
+/// moves a dead replica through `Backoff` (waiting out the restart
+/// delay) into `Probation` (respawned; serving health pings but no
+/// traffic until `P` consecutive successes) and back to `Live`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaPhase {
+    Live,
+    Probation,
+    Backoff,
+    Dead,
+}
+
+impl ReplicaPhase {
+    /// Stable lower-case label (the Prometheus `state` label values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaPhase::Live => "live",
+            ReplicaPhase::Probation => "probation",
+            ReplicaPhase::Backoff => "backoff",
+            ReplicaPhase::Dead => "dead",
+        }
+    }
+
+    /// All phases, in display order (Prometheus state-gauge series).
+    pub fn all() -> [ReplicaPhase; 4] {
+        [ReplicaPhase::Live, ReplicaPhase::Probation,
+         ReplicaPhase::Backoff, ReplicaPhase::Dead]
+    }
+}
+
+const PHASE_LIVE: u8 = 0;
+const PHASE_PROBATION: u8 = 1;
+const PHASE_BACKOFF: u8 = 2;
+const PHASE_DEAD: u8 = 3;
+
 /// Shared liveness/health state of one replica.
 ///
-/// `alive` is permanent-once-false (the queue endpoint is gone);
-/// `healthy` is the monitor's recoverable verdict; `depth` counts
-/// router-dispatched requests not yet *completed* — incremented before
-/// the dispatch send (and undone if the send fails) and decremented
-/// only when the worker finishes the request, so queued **and
-/// in-flight** work both register: the monitor must treat a replica
-/// mid-way through a long batch as busy, not idle.
+/// `alive` is false exactly while the worker thread is gone (forever,
+/// unless the supervisor revives the replica); `healthy` is the
+/// monitor's recoverable verdict; `depth` counts router-dispatched
+/// requests not yet *completed* — incremented before the dispatch send
+/// (and undone if the send fails) and decremented only when the worker
+/// finishes the request, so queued **and in-flight** work both
+/// register: the monitor must treat a replica mid-way through a long
+/// batch as busy, not idle. `phase`/`restarts`/probation counters back
+/// the supervision lifecycle ([`ReplicaPhase`]).
 #[derive(Debug)]
 pub(crate) struct ReplicaState {
     alive: AtomicBool,
     healthy: AtomicBool,
     depth: AtomicUsize,
+    phase: AtomicU8,
+    restarts: AtomicU64,
+    probation_left: AtomicU32,
+    probation_need: AtomicU32,
+    /// A supervisor watches this replica (restart budget > 0): a fresh
+    /// death is *recovering*, not *permanent*, even before the
+    /// supervisor's next tick classifies it.
+    supervised: AtomicBool,
+    /// The supervisor gave up on this replica — terminal.
+    exhausted: AtomicBool,
 }
 
 impl ReplicaState {
@@ -124,25 +188,130 @@ impl ReplicaState {
             alive: AtomicBool::new(true),
             healthy: AtomicBool::new(true),
             depth: AtomicUsize::new(0),
+            phase: AtomicU8::new(PHASE_LIVE),
+            restarts: AtomicU64::new(0),
+            probation_left: AtomicU32::new(0),
+            probation_need: AtomicU32::new(0),
+            supervised: AtomicBool::new(false),
+            exhausted: AtomicBool::new(false),
         })
+    }
+
+    /// Declare that a supervisor watches this replica (set once at
+    /// spawn when `restart_budget > 0`).
+    pub(crate) fn set_supervised(&self) {
+        self.supervised.store(true, Ordering::Relaxed);
+    }
+
+    pub(crate) fn is_supervised(&self) -> bool {
+        self.supervised.load(Ordering::Relaxed)
+    }
+
+    /// True once the restart budget is spent: this death is final.
+    pub(crate) fn is_exhausted(&self) -> bool {
+        self.exhausted.load(Ordering::Relaxed)
     }
 
     pub(crate) fn is_routable(&self) -> bool {
         self.alive.load(Ordering::Relaxed)
             && self.healthy.load(Ordering::Relaxed)
+            && self.phase.load(Ordering::Relaxed) == PHASE_LIVE
     }
 
     pub(crate) fn is_alive(&self) -> bool {
         self.alive.load(Ordering::Relaxed)
     }
 
-    pub(crate) fn mark_dead(&self) {
-        self.alive.store(false, Ordering::Relaxed);
-        self.healthy.store(false, Ordering::Relaxed);
+    pub(crate) fn phase(&self) -> ReplicaPhase {
+        match self.phase.load(Ordering::Relaxed) {
+            PHASE_LIVE => ReplicaPhase::Live,
+            PHASE_PROBATION => ReplicaPhase::Probation,
+            PHASE_BACKOFF => ReplicaPhase::Backoff,
+            _ => ReplicaPhase::Dead,
+        }
     }
 
-    fn set_healthy(&self, ok: bool) {
-        self.healthy.store(ok, Ordering::Relaxed);
+    /// Times this replica's worker has been respawned.
+    pub(crate) fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    /// Flip `alive` off; true only for the caller that saw the
+    /// transition, so `replicas_died` counts each death exactly once
+    /// even when dispatch and the monitor race on the same corpse.
+    pub(crate) fn mark_dead(&self) -> bool {
+        let was_alive = self.alive.swap(false, Ordering::Relaxed);
+        if was_alive {
+            self.healthy.store(false, Ordering::Relaxed);
+            self.phase.store(PHASE_DEAD, Ordering::Relaxed);
+        }
+        was_alive
+    }
+
+    /// Supervisor scheduled a respawn: the replica is still down but a
+    /// restart is pending (distinguishes recovering from permanent on
+    /// `/healthz`).
+    pub(crate) fn mark_backoff(&self) {
+        debug_assert!(!self.is_alive());
+        self.phase.store(PHASE_BACKOFF, Ordering::Relaxed);
+    }
+
+    /// Supervisor gave up (restart budget exhausted): terminal dead,
+    /// exactly like an unsupervised death.
+    pub(crate) fn mark_exhausted(&self) {
+        debug_assert!(!self.is_alive());
+        self.exhausted.store(true, Ordering::Relaxed);
+        self.phase.store(PHASE_DEAD, Ordering::Relaxed);
+    }
+
+    /// Supervisor respawned this replica's worker: reset the dispatch
+    /// depth (in-flight work died with the old worker — and the
+    /// monitor only pings idle replicas, so a stale depth would mute
+    /// pings forever), start probation, and only then flip `alive`
+    /// back on so observers never see a half-initialised revival.
+    pub(crate) fn revive(&self, probation: u32) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+        self.depth.store(0, Ordering::Relaxed);
+        self.probation_need.store(probation, Ordering::Relaxed);
+        self.probation_left.store(probation, Ordering::Relaxed);
+        if probation == 0 {
+            self.healthy.store(true, Ordering::Relaxed);
+            self.phase.store(PHASE_LIVE, Ordering::Relaxed);
+        } else {
+            self.healthy.store(false, Ordering::Relaxed);
+            self.phase.store(PHASE_PROBATION, Ordering::Relaxed);
+        }
+        self.alive.store(true, Ordering::Relaxed);
+    }
+
+    /// Monitor verdict: a ping answered in time. Marks the replica
+    /// healthy and advances probation; the `P`-th consecutive success
+    /// readmits it to dispatch.
+    pub(crate) fn note_ping_ok(&self) {
+        self.healthy.store(true, Ordering::Relaxed);
+        if self.phase.load(Ordering::Relaxed) == PHASE_PROBATION {
+            let left = self.probation_left.load(Ordering::Relaxed)
+                           .saturating_sub(1);
+            self.probation_left.store(left, Ordering::Relaxed);
+            if left == 0 {
+                self.phase.store(PHASE_LIVE, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Monitor verdict: a ping timed out. Any miss resets the
+    /// probation streak (readmission demands *consecutive* successes);
+    /// only a `hard` miss ([`MAX_MISSED_PINGS`] in a row) flags the
+    /// replica unhealthy.
+    pub(crate) fn note_ping_missed(&self, hard: bool) {
+        if hard {
+            self.healthy.store(false, Ordering::Relaxed);
+        }
+        if self.phase.load(Ordering::Relaxed) == PHASE_PROBATION {
+            self.probation_left.store(
+                self.probation_need.load(Ordering::Relaxed),
+                Ordering::Relaxed);
+        }
     }
 
     /// Router-dispatched requests this replica has not completed yet
@@ -166,23 +335,37 @@ impl ReplicaState {
     }
 }
 
-/// Router/monitor counters, shared across threads and snapshotted into
-/// [`RouterStats`].
+/// Router/monitor/supervisor counters, shared across threads and
+/// snapshotted into [`RouterStats`].
 #[derive(Debug, Default)]
 pub(crate) struct RouterCounters {
     pub(crate) dispatched: AtomicU64,
     pub(crate) busy_rejected: AtomicU64,
     pub(crate) replicas_died: AtomicU64,
+    pub(crate) replicas_restarted: AtomicU64,
     pub(crate) pings_ok: AtomicU64,
     pub(crate) pings_missed: AtomicU64,
+    /// Detected death → readmitted to dispatch, recorded by the
+    /// supervisor (`cat_recovery_time_us`).
+    pub(crate) recovery: Mutex<LatencyHistogram>,
 }
 
 impl RouterCounters {
+    /// Record a death iff `state` actually transitioned (first caller
+    /// wins; see [`ReplicaState::mark_dead`]).
+    pub(crate) fn note_death(&self, state: &ReplicaState) {
+        if state.mark_dead() {
+            self.replicas_died.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     pub(crate) fn snapshot(&self) -> RouterStats {
         RouterStats {
             dispatched: self.dispatched.load(Ordering::Relaxed),
             busy_rejected: self.busy_rejected.load(Ordering::Relaxed),
             replicas_died: self.replicas_died.load(Ordering::Relaxed),
+            replicas_restarted:
+                self.replicas_restarted.load(Ordering::Relaxed),
             pings_ok: self.pings_ok.load(Ordering::Relaxed),
             pings_missed: self.pings_missed.load(Ordering::Relaxed),
         }
@@ -196,27 +379,73 @@ pub struct RouterStats {
     pub dispatched: u64,
     /// Requests rejected with [`ServeError::Busy`] (backpressure).
     pub busy_rejected: u64,
-    /// Replicas discovered dead (disconnected queue endpoint).
+    /// Replicas discovered dead (disconnected queue endpoint or
+    /// captured worker panic).
     pub replicas_died: u64,
+    /// Replica workers respawned by the supervisor.
+    pub replicas_restarted: u64,
     /// Health pings answered in time.
     pub pings_ok: u64,
     /// Health pings that timed out.
     pub pings_missed: u64,
 }
 
+/// One replica's routing endpoint: shared state plus a swappable queue
+/// sender. Router, health monitor, and supervisor hold the same
+/// `Arc<ReplicaSlot>`; a respawn swaps the sender in place
+/// ([`Self::replace_sender`]) so dispatch picks up the new worker's
+/// queue with no routing-table surgery, and shutdown [`Self::close`]s
+/// the slot to drop the last sender and let the worker drain out.
+#[derive(Debug)]
+pub(crate) struct ReplicaSlot {
+    state: Arc<ReplicaState>,
+    tx: Mutex<Option<SyncSender<WorkerMsg>>>,
+}
+
+impl ReplicaSlot {
+    pub(crate) fn new(tx: SyncSender<WorkerMsg>,
+                      state: Arc<ReplicaState>) -> Arc<ReplicaSlot> {
+        Arc::new(ReplicaSlot { state, tx: Mutex::new(Some(tx)) })
+    }
+
+    pub(crate) fn state(&self) -> &Arc<ReplicaState> {
+        &self.state
+    }
+
+    /// `try_send` through the current sender; a closed slot behaves
+    /// like a disconnected queue.
+    pub(crate) fn try_send(&self, msg: WorkerMsg)
+                           -> Result<(), TrySendError<WorkerMsg>> {
+        match &*lock_recovering(&self.tx) {
+            Some(tx) => tx.try_send(msg),
+            None => Err(TrySendError::Disconnected(msg)),
+        }
+    }
+
+    /// Swap in a freshly spawned worker's queue (supervisor respawn).
+    /// The replaced sender drops here; the dead worker's queue loses
+    /// its last endpoint.
+    pub(crate) fn replace_sender(&self, tx: SyncSender<WorkerMsg>) {
+        *lock_recovering(&self.tx) = Some(tx);
+    }
+
+    /// Drop the sender for good (shutdown): the worker's receive loop
+    /// sees the disconnect and drains out.
+    pub(crate) fn close(&self) {
+        *lock_recovering(&self.tx) = None;
+    }
+}
+
 /// One model's replica routing table (owned by the router thread).
 pub(crate) struct ReplicaSet {
-    txs: Vec<SyncSender<WorkerMsg>>,
-    states: Vec<Arc<ReplicaState>>,
+    slots: Vec<Arc<ReplicaSlot>>,
     /// Rotating round-robin cursor.
     next: usize,
 }
 
 impl ReplicaSet {
-    pub(crate) fn new(txs: Vec<SyncSender<WorkerMsg>>,
-                      states: Vec<Arc<ReplicaState>>) -> ReplicaSet {
-        debug_assert_eq!(txs.len(), states.len());
-        ReplicaSet { txs, states, next: 0 }
+    pub(crate) fn from_slots(slots: Vec<Arc<ReplicaSlot>>) -> ReplicaSet {
+        ReplicaSet { slots, next: 0 }
     }
 
     /// Route `req` to a live replica, or reply `Busy`/`Failed` per the
@@ -224,16 +453,18 @@ impl ReplicaSet {
     pub(crate) fn dispatch(&mut self, req: InferRequest,
                            retry_after: Duration,
                            counters: &RouterCounters) {
-        let k = self.txs.len();
+        let k = self.slots.len();
         let mut msg = WorkerMsg::Infer(req);
         let mut any_alive = false;
         for i in 0..k {
             let idx = (self.next + i) % k;
-            if !self.states[idx].is_alive() {
+            let state = self.slots[idx].state();
+            if !state.is_alive() {
                 continue;
             }
-            if !self.states[idx].is_routable() {
-                // alive but flagged unhealthy: skip, may recover later
+            if !state.is_routable() {
+                // alive but unhealthy or on probation: skip, the
+                // monitor readmits it later
                 any_alive = true;
                 continue;
             }
@@ -241,8 +472,8 @@ impl ReplicaSet {
             // otherwise dequeue (and decrement) before the increment
             // lands, leaving the depth permanently off by one — which
             // would silently disable health pings for this replica
-            self.states[idx].note_enqueued();
-            match self.txs[idx].try_send(msg) {
+            state.note_enqueued();
+            match self.slots[idx].try_send(msg) {
                 Ok(()) => {
                     self.next = (idx + 1) % k;
                     counters.dispatched.fetch_add(1, Ordering::Relaxed);
@@ -250,7 +481,7 @@ impl ReplicaSet {
                 }
                 Err(TrySendError::Full(back)) => {
                     // saturated but alive: Busy territory
-                    self.states[idx].note_completed(); // undo the count
+                    state.note_completed(); // undo the count
                     any_alive = true;
                     msg = back;
                 }
@@ -258,10 +489,9 @@ impl ReplicaSet {
                     // discovered dead right here: NOT alive — a lone
                     // replica dying must produce Failed, not a Busy the
                     // client would retry forever
-                    self.states[idx].note_completed(); // undo the count
+                    state.note_completed(); // undo the count
                     msg = back;
-                    self.states[idx].mark_dead();
-                    counters.replicas_died.fetch_add(1, Ordering::Relaxed);
+                    counters.note_death(state);
                 }
             }
         }
@@ -280,28 +510,44 @@ impl ReplicaSet {
     }
 }
 
-/// The health monitor loop (one thread per server). Owns clones of every
-/// replica queue sender; exits when `stop` is set, dropping its clones
-/// so draining workers can finish.
+/// The health monitor loop (one thread per server). Pings through the
+/// shared [`ReplicaSlot`]s, so a respawned worker's fresh queue is
+/// picked up automatically; exits when `stop` is set.
 ///
 /// Each round fans every ping out first and then collects the replies
 /// against **one** shared deadline, so round latency (and therefore
 /// shutdown latency and detection time) is `ping_timeout`, not
 /// `replicas × ping_timeout`.
+///
+/// Verdicts carry the replica's restart epoch: a ping sent to a worker
+/// that was respawned before the reply deadline is stale — its timeout
+/// or disconnect says nothing about the *new* worker, so it must not
+/// burn a miss or (worse) re-kill the freshly revived replica.
 pub(crate) fn monitor_loop(
-    replicas: Vec<(SyncSender<WorkerMsg>, Arc<ReplicaState>)>,
+    slots: Vec<Arc<ReplicaSlot>>,
     stop: Arc<AtomicBool>, health_every: Duration, ping_timeout: Duration,
     counters: Arc<RouterCounters>,
 ) {
-    let mut missed = vec![0u32; replicas.len()];
+    let mut missed = vec![0u32; slots.len()];
+    let mut epochs: Vec<u64> =
+        slots.iter().map(|s| s.state().restarts()).collect();
     while !stop.load(Ordering::Relaxed) {
         std::thread::sleep(health_every);
         if stop.load(Ordering::Relaxed) {
             break;
         }
+        // a respawned replica starts its miss count from scratch
+        for (i, slot) in slots.iter().enumerate() {
+            let r = slot.state().restarts();
+            if epochs[i] != r {
+                epochs[i] = r;
+                missed[i] = 0;
+            }
+        }
         // phase 1: fan out pings to every idle, live replica
-        let mut waiting: Vec<(usize, mpsc::Receiver<()>)> = Vec::new();
-        for (i, (tx, state)) in replicas.iter().enumerate() {
+        let mut waiting: Vec<(usize, u64, mpsc::Receiver<()>)> = Vec::new();
+        for (i, slot) in slots.iter().enumerate() {
+            let state = slot.state();
             if !state.is_alive() {
                 continue;
             }
@@ -314,41 +560,42 @@ pub(crate) fn monitor_loop(
                 continue;
             }
             let (ping_tx, ping_rx) = mpsc::channel();
-            match tx.try_send(WorkerMsg::Ping(ping_tx)) {
+            match slot.try_send(WorkerMsg::Ping(ping_tx)) {
                 Err(TrySendError::Full(_)) => {
                     // saturated queue: that's backpressure, not death —
                     // don't burn a miss on it
                 }
                 Err(TrySendError::Disconnected(_)) => {
-                    state.mark_dead();
-                    counters.replicas_died.fetch_add(1, Ordering::Relaxed);
+                    counters.note_death(state);
                 }
-                Ok(()) => waiting.push((i, ping_rx)),
+                Ok(()) => waiting.push((i, state.restarts(), ping_rx)),
             }
         }
         // phase 2: collect replies against one shared deadline
         let deadline = Instant::now() + ping_timeout;
-        for (i, ping_rx) in waiting {
-            let state = &replicas[i].1;
+        for (i, epoch, ping_rx) in waiting {
+            let state = slots[i].state();
             let left = deadline.saturating_duration_since(Instant::now());
-            match ping_rx.recv_timeout(left) {
+            let verdict = ping_rx.recv_timeout(left);
+            if state.restarts() != epoch {
+                // respawned since the ping went out: stale verdict
+                continue;
+            }
+            match verdict {
                 Ok(()) => {
                     missed[i] = 0;
-                    state.set_healthy(true);
+                    state.note_ping_ok();
                     counters.pings_ok.fetch_add(1, Ordering::Relaxed);
                 }
                 Err(mpsc::RecvTimeoutError::Timeout) => {
                     missed[i] += 1;
                     counters.pings_missed.fetch_add(1, Ordering::Relaxed);
-                    if missed[i] >= MAX_MISSED_PINGS {
-                        state.set_healthy(false);
-                    }
+                    state.note_ping_missed(missed[i] >= MAX_MISSED_PINGS);
                 }
                 Err(mpsc::RecvTimeoutError::Disconnected) => {
                     // the worker dropped the reply sender without
                     // answering: it exited between accept and reply
-                    state.mark_dead();
-                    counters.replicas_died.fetch_add(1, Ordering::Relaxed);
+                    counters.note_death(state);
                 }
             }
         }
@@ -374,6 +621,16 @@ mod tests {
         (req, rx)
     }
 
+    fn set_of(txs: Vec<SyncSender<WorkerMsg>>)
+              -> (ReplicaSet, Vec<Arc<ReplicaState>>) {
+        let states: Vec<_> =
+            (0..txs.len()).map(|_| ReplicaState::new()).collect();
+        let slots = txs.into_iter().zip(&states)
+            .map(|(tx, st)| ReplicaSlot::new(tx, st.clone()))
+            .collect();
+        (ReplicaSet::from_slots(slots), states)
+    }
+
     #[test]
     fn serve_error_displays_and_converts() {
         let busy = ServeError::Busy {
@@ -389,8 +646,7 @@ mod tests {
     fn dispatch_round_robins_over_replicas() {
         let (tx_a, rx_a) = mpsc::sync_channel(4);
         let (tx_b, rx_b) = mpsc::sync_channel(4);
-        let states = vec![ReplicaState::new(), ReplicaState::new()];
-        let mut set = ReplicaSet::new(vec![tx_a, tx_b], states);
+        let (mut set, _states) = set_of(vec![tx_a, tx_b]);
         let counters = RouterCounters::default();
         for _ in 0..4 {
             let (req, _rx) = test_req("m");
@@ -404,7 +660,7 @@ mod tests {
     #[test]
     fn dispatch_skips_full_queue_then_rejects_busy() {
         let (tx, _rx_keep) = mpsc::sync_channel(1);
-        let mut set = ReplicaSet::new(vec![tx], vec![ReplicaState::new()]);
+        let (mut set, states) = set_of(vec![tx]);
         let counters = RouterCounters::default();
         let (first, _first_rx) = test_req("m");
         set.dispatch(first, Duration::from_millis(7), &counters);
@@ -420,15 +676,14 @@ mod tests {
         assert_eq!(counters.snapshot().dispatched, 1);
         // the accepted request counts as outstanding; the Busy-rejected
         // one was un-counted when its send failed
-        assert_eq!(set.states[0].outstanding(), 1);
+        assert_eq!(states[0].outstanding(), 1);
     }
 
     #[test]
     fn dispatch_marks_disconnected_replicas_dead() {
         let (tx_dead, _) = mpsc::sync_channel(1); // receiver dropped
-        let states = vec![ReplicaState::new()];
+        let (mut set, states) = set_of(vec![tx_dead]);
         let dead_state = states[0].clone();
-        let mut set = ReplicaSet::new(vec![tx_dead], states);
         let counters = RouterCounters::default();
         let (req, rx) = test_req("m");
         set.dispatch(req, Duration::from_millis(1), &counters);
@@ -436,11 +691,114 @@ mod tests {
         assert!(matches!(rejection.error, ServeError::Failed(_)),
                 "dead replica set must fail, got {:?}", rejection.error);
         assert!(!dead_state.is_alive());
+        assert_eq!(dead_state.phase(), ReplicaPhase::Dead);
         assert_eq!(counters.snapshot().replicas_died, 1);
         // subsequent dispatches fail immediately without a queue probe
         let (req2, rx2) = test_req("m");
         set.dispatch(req2, Duration::from_millis(1), &counters);
         assert!(matches!(rx2.recv().expect("reply").unwrap_err().error,
                          ServeError::Failed(_)));
+    }
+
+    #[test]
+    fn closed_slot_dispatch_fails_terminal() {
+        let (tx, _rx_keep) = mpsc::sync_channel(4);
+        let (mut set, states) = set_of(vec![tx]);
+        set.slots[0].close();
+        let counters = RouterCounters::default();
+        let (req, rx) = test_req("m");
+        set.dispatch(req, Duration::from_millis(1), &counters);
+        assert!(matches!(rx.recv().expect("reply").unwrap_err().error,
+                         ServeError::Failed(_)));
+        assert!(!states[0].is_alive());
+    }
+
+    #[test]
+    fn replace_sender_reroutes_to_new_queue() {
+        let (tx_old, rx_old) = mpsc::sync_channel(4);
+        let (mut set, states) = set_of(vec![tx_old]);
+        drop(rx_old); // old worker dies
+        let (req, rx) = test_req("m");
+        let counters = RouterCounters::default();
+        set.dispatch(req, Duration::from_millis(1), &counters);
+        assert!(rx.recv().expect("reply").is_err());
+        // supervisor swaps in a fresh queue and revives with P=0
+        let (tx_new, rx_new) = mpsc::sync_channel(4);
+        set.slots[0].replace_sender(tx_new);
+        states[0].revive(0);
+        assert!(states[0].is_routable());
+        let (req2, _rx2) = test_req("m");
+        set.dispatch(req2, Duration::from_millis(1), &counters);
+        assert_eq!(rx_new.try_iter().count(), 1,
+                   "dispatch must reach the replacement queue");
+    }
+
+    #[test]
+    fn phase_machine_dead_backoff_probation_live() {
+        let state = ReplicaState::new();
+        assert_eq!(state.phase(), ReplicaPhase::Live);
+        assert!(state.is_routable());
+
+        assert!(state.mark_dead(), "first death reports the transition");
+        assert!(!state.mark_dead(), "second death must not double-count");
+        assert_eq!(state.phase(), ReplicaPhase::Dead);
+        assert!(!state.is_routable());
+
+        state.mark_backoff();
+        assert_eq!(state.phase(), ReplicaPhase::Backoff);
+        assert!(!state.is_alive());
+
+        state.revive(2);
+        assert_eq!(state.phase(), ReplicaPhase::Probation);
+        assert!(state.is_alive());
+        assert!(!state.is_routable(), "probation takes no traffic");
+        assert_eq!(state.restarts(), 1);
+        assert_eq!(state.outstanding(), 0, "revive resets depth");
+
+        state.note_ping_ok();
+        assert_eq!(state.phase(), ReplicaPhase::Probation,
+                   "one ping of two is not enough");
+        // a miss resets the consecutive-success streak
+        state.note_ping_missed(false);
+        state.note_ping_ok();
+        assert_eq!(state.phase(), ReplicaPhase::Probation);
+        state.note_ping_ok();
+        assert_eq!(state.phase(), ReplicaPhase::Live);
+        assert!(state.is_routable());
+    }
+
+    #[test]
+    fn exhausted_budget_is_terminal_dead() {
+        let state = ReplicaState::new();
+        state.set_supervised();
+        let counters = RouterCounters::default();
+        counters.note_death(&state);
+        counters.note_death(&state); // racing second observer
+        assert_eq!(counters.snapshot().replicas_died, 1,
+                   "a death is counted exactly once");
+        // freshly dead under a supervisor: recoverable, not terminal
+        assert!(state.is_supervised());
+        assert!(!state.is_exhausted());
+        state.mark_backoff();
+        state.mark_exhausted();
+        assert_eq!(state.phase(), ReplicaPhase::Dead);
+        assert!(state.is_exhausted(), "exhaustion is terminal");
+        assert!(!state.is_alive());
+        assert!(!state.is_routable());
+    }
+
+    #[test]
+    fn probation_replica_yields_busy_not_failed() {
+        let (tx, _rx_keep) = mpsc::sync_channel(4);
+        let (mut set, states) = set_of(vec![tx]);
+        states[0].mark_dead();
+        states[0].revive(3); // alive again, but on probation
+        let counters = RouterCounters::default();
+        let (req, rx) = test_req("m");
+        set.dispatch(req, Duration::from_millis(5), &counters);
+        let rejection = rx.recv().expect("reply").unwrap_err();
+        assert_eq!(rejection.error,
+                   ServeError::Busy { retry_after: Duration::from_millis(5) },
+                   "an alive-but-probation replica is Busy, not Failed");
     }
 }

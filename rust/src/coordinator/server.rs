@@ -30,9 +30,13 @@
 //! rejected with [`ServeError::Busy`] + a retry-after hint
 //! ([`ServeHandle::try_infer`] surfaces it, [`ServeHandle::infer`]
 //! retries it). A health monitor pings replicas through their queues and
-//! routes around the unhealthy ones (DESIGN.md §10).
+//! routes around the unhealthy ones (DESIGN.md §10). With
+//! `ServeOptions::restart_budget > 0` a supervisor thread respawns dead
+//! replicas through the executor factory and walks them through
+//! probation before they take traffic again (DESIGN.md §12).
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender,
@@ -44,10 +48,12 @@ use anyhow::{anyhow, bail, ensure};
 
 use super::batcher::{DynamicBatcher, Flush};
 use super::retry::BackoffPolicy;
-use super::router::{monitor_loop, Rejection, ReplicaSet, ReplicaState,
-                    RouterCounters, RouterStats, ServeError, WorkerMsg};
+use super::router::{monitor_loop, Rejection, ReplicaPhase, ReplicaSet,
+                    ReplicaSlot, ReplicaState, RouterCounters, RouterStats,
+                    ServeError, WorkerMsg};
 use super::shard::{ShardStatsSnapshot, ShardedNativeModel};
-use crate::metrics::LatencyHistogram;
+use super::supervisor::{supervisor_loop, SupervisedSlot, Supervisor};
+use crate::metrics::{lock_recovering, LatencyHistogram};
 use crate::native::{NativeCatModel, NativeVitConfig};
 use crate::runtime::Backend;
 use crate::tensor::HostTensor;
@@ -335,8 +341,9 @@ pub(crate) struct LiveCounters {
 fn lock_live(live: &Mutex<LiveCounters>)
              -> std::sync::MutexGuard<'_, LiveCounters> {
     // a poisoned lock only means a worker panicked outside the guarded
-    // section; the counters themselves are always consistent
-    live.lock().unwrap_or_else(|p| p.into_inner())
+    // section; the counters themselves are always consistent — recover
+    // the guard and count it (`cat_lock_poison_recoveries_total`)
+    lock_recovering(live)
 }
 
 /// One replica's identity + shared observability state.
@@ -352,8 +359,13 @@ struct ReplicaRef {
 pub struct ReplicaSnapshot {
     pub model: String,
     pub replica: usize,
-    /// False once the replica's queue endpoint is gone (worker died).
+    /// False while the replica's queue endpoint is gone (worker died
+    /// and has not been respawned).
     pub alive: bool,
+    /// Where the replica stands in the supervision lifecycle.
+    pub phase: ReplicaPhase,
+    /// Times the supervisor respawned this replica's worker.
+    pub restarts: u64,
     /// Dispatched-but-uncompleted requests (queued + in-flight).
     pub outstanding: usize,
     pub requests: u64,
@@ -385,6 +397,8 @@ impl StatsHandle {
                     model: r.model.clone(),
                     replica: r.replica,
                     alive: r.state.is_alive(),
+                    phase: r.state.phase(),
+                    restarts: r.state.restarts(),
                     outstanding: r.state.outstanding(),
                     requests: live.requests,
                     batches: live.batches,
@@ -394,11 +408,44 @@ impl StatsHandle {
             .collect()
     }
 
-    /// Degraded = at least one replica is dead (`/healthz` → 503): the
-    /// server still serves from survivors, but capacity is reduced and
-    /// an orchestrator should rotate the instance.
+    /// Degraded = at least one replica is out of dispatch rotation
+    /// (`/healthz` → 503): the server still serves from survivors, but
+    /// capacity is reduced. [`Self::degraded_permanent`] vs
+    /// [`Self::degraded_recovering`] tells an orchestrator whether to
+    /// rotate the instance or just wait out the supervisor.
     pub fn degraded(&self) -> bool {
-        self.replicas.iter().any(|r| !r.state.is_alive())
+        self.degraded_permanent() || self.degraded_recovering()
+    }
+
+    /// At least one replica is terminally dead — supervision off, or
+    /// its restart budget is exhausted. Capacity will not come back on
+    /// its own; rotate the instance.
+    pub fn degraded_permanent(&self) -> bool {
+        self.replicas.iter().any(|r| {
+            r.state.phase() == ReplicaPhase::Dead
+                && (!r.state.is_supervised() || r.state.is_exhausted())
+        })
+    }
+
+    /// At least one replica is mid-recovery: restart backoff or
+    /// probation — or freshly dead under an unexhausted supervisor
+    /// (the next supervisor tick schedules its respawn). Capacity is
+    /// reduced but comes back on its own.
+    pub fn degraded_recovering(&self) -> bool {
+        self.replicas.iter().any(|r| match r.state.phase() {
+            ReplicaPhase::Backoff | ReplicaPhase::Probation => true,
+            ReplicaPhase::Dead => {
+                r.state.is_supervised() && !r.state.is_exhausted()
+            }
+            ReplicaPhase::Live => false,
+        })
+    }
+
+    /// Merged time-to-recovery histogram: detected replica death →
+    /// readmitted to dispatch, one sample per completed recovery
+    /// (`cat_recovery_time_us`).
+    pub fn recovery_latency(&self) -> LatencyHistogram {
+        lock_recovering(&self.counters.recovery).clone()
     }
 }
 
@@ -424,6 +471,16 @@ pub struct ServeOptions {
     pub health_every: Duration,
     /// How long a ping may take before it counts as missed.
     pub ping_timeout: Duration,
+    /// Respawn attempts the supervisor may spend per replica before it
+    /// declares the replica permanently dead. 0 disables supervision
+    /// entirely (the pre-§12 behaviour: a dead replica stays dead).
+    pub restart_budget: u32,
+    /// Base delay of the supervisor's jittered exponential backoff
+    /// between respawn attempts.
+    pub restart_base: Duration,
+    /// Consecutive successful health pings a respawned replica must
+    /// answer before it is readmitted to dispatch (floored at 1).
+    pub probation_pings: u32,
 }
 
 impl Default for ServeOptions {
@@ -438,6 +495,9 @@ impl Default for ServeOptions {
             replicas: 1,
             health_every: Duration::from_millis(250),
             ping_timeout: Duration::from_millis(250),
+            restart_budget: 0,
+            restart_base: Duration::from_millis(50),
+            probation_pings: 2,
         }
     }
 }
@@ -450,14 +510,20 @@ pub type ExecutorFactory =
     Arc<dyn Fn(&WorkerSpec, &ServeOptions) -> Result<Box<dyn BatchExecutor>>
             + Send + Sync>;
 
-/// Serving coordinator: router thread + health monitor + R replica
-/// worker threads per model.
+/// Serving coordinator: router thread + health monitor + optional
+/// supervisor + R replica worker threads per model.
 pub struct Server {
     handle: ServeHandle,
     stats_rx: Receiver<WorkerStats>,
     router: std::thread::JoinHandle<()>,
     monitor: Option<std::thread::JoinHandle<()>>,
+    /// The supervisor returns the handles of every worker it respawned
+    /// so shutdown can join them too.
+    supervisor: Option<std::thread::JoinHandle<Vec<std::thread::JoinHandle<()>>>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Every replica's routing endpoint; closed at shutdown to drop the
+    /// last queue senders so workers drain out.
+    slots: Vec<Arc<ReplicaSlot>>,
     stop: Arc<AtomicBool>,
     counters: Arc<RouterCounters>,
     replicas: Arc<Vec<ReplicaRef>>,
@@ -502,20 +568,28 @@ impl Server {
         let counters = Arc::new(RouterCounters::default());
         let stop = Arc::new(AtomicBool::new(false));
 
+        // one concrete factory for initial workers AND supervisor
+        // respawns — a respawned replica runs the exact stack the
+        // original did, fault-injection wrappers included
+        let factory =
+            factory.unwrap_or_else(|| default_factory(artifacts));
+
         let mut sets: HashMap<String, ReplicaSet> = HashMap::new();
-        let mut monitor_targets: Vec<(SyncSender<WorkerMsg>,
-                                      Arc<ReplicaState>)> = Vec::new();
+        let mut all_slots: Vec<Arc<ReplicaSlot>> = Vec::new();
+        let mut sup_slots: Vec<SupervisedSlot> = Vec::new();
         let mut workers = Vec::new();
         let mut replica_refs: Vec<ReplicaRef> = Vec::new();
         // workers report readiness so spawn() fails fast on bad configs
         let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
         for spec in specs {
             let spec = Arc::new(spec);
-            let mut txs = Vec::with_capacity(opts.replicas);
-            let mut states = Vec::with_capacity(opts.replicas);
+            let mut model_slots = Vec::with_capacity(opts.replicas);
             for replica in 0..opts.replicas {
                 let (wtx, wrx) = mpsc::sync_channel(opts.queue_depth);
                 let state = ReplicaState::new();
+                if opts.restart_budget > 0 {
+                    state.set_supervised();
+                }
                 let live = Arc::new(Mutex::new(LiveCounters::default()));
                 replica_refs.push(ReplicaRef {
                     model: spec.model.clone(),
@@ -523,26 +597,28 @@ impl Server {
                     state: state.clone(),
                     live: live.clone(),
                 });
-                monitor_targets.push((wtx.clone(), state.clone()));
-                txs.push(wtx);
-                let wstate = state.clone();
-                states.push(state);
+                let slot = ReplicaSlot::new(wtx, state.clone());
+                model_slots.push(slot.clone());
+                sup_slots.push(SupervisedSlot {
+                    slot,
+                    spec: spec.clone(),
+                    live: live.clone(),
+                    replica,
+                });
+                let wstate = state;
                 let spec = spec.clone();
                 let stats_tx = stats_tx.clone();
                 let ready_tx = ready_tx.clone();
-                let dir = artifacts.clone();
                 let factory = factory.clone();
+                let wcounters = counters.clone();
                 workers.push(std::thread::spawn(move || {
-                    let built = match &factory {
-                        Some(f) => f(spec.as_ref(), &opts),
-                        None => build_worker(&dir, spec.as_ref(), &opts),
-                    };
-                    match built {
+                    match factory(spec.as_ref(), &opts) {
                         Ok(exec) => {
                             let _ = ready_tx.send(Ok(spec.model.clone()));
                             drop(ready_tx);
                             worker_loop(spec.model.clone(), replica, exec,
-                                        wrx, wstate, opts, stats_tx, live);
+                                        wrx, wstate, opts, stats_tx, live,
+                                        wcounters);
                         }
                         Err(e) => {
                             let _ = ready_tx.send(Err(e.context(format!(
@@ -551,7 +627,9 @@ impl Server {
                     }
                 }));
             }
-            sets.insert(spec.model.clone(), ReplicaSet::new(txs, states));
+            all_slots.extend(model_slots.iter().cloned());
+            sets.insert(spec.model.clone(),
+                        ReplicaSet::from_slots(model_slots));
         }
         drop(ready_tx);
         for _ in 0..workers.len() {
@@ -584,11 +662,26 @@ impl Server {
         let monitor = {
             let stop = stop.clone();
             let counters = counters.clone();
+            let slots = all_slots.clone();
             let (every, timeout) = (opts.health_every, opts.ping_timeout);
             Some(std::thread::spawn(move || {
-                monitor_loop(monitor_targets, stop, every, timeout,
-                             counters);
+                monitor_loop(slots, stop, every, timeout, counters);
             }))
+        };
+
+        let supervisor = if opts.restart_budget > 0 {
+            let sup = Supervisor {
+                slots: sup_slots,
+                factory,
+                opts,
+                stats_tx,
+                counters: counters.clone(),
+                stop: stop.clone(),
+                seed: next_backoff_seed(),
+            };
+            Some(std::thread::spawn(move || supervisor_loop(sup)))
+        } else {
+            None
         };
 
         Ok(Self {
@@ -596,7 +689,9 @@ impl Server {
             stats_rx,
             router,
             monitor,
+            supervisor,
             workers,
+            slots: all_slots,
             stop,
             counters,
             replicas: Arc::new(replica_refs),
@@ -628,17 +723,28 @@ impl Server {
     /// statistics (see [`aggregate_stats`] for per-model totals). All
     /// outstanding `ServeHandle` clones must be dropped first.
     pub fn shutdown(self) -> Vec<WorkerStats> {
-        // order matters: stop the monitor's ping traffic, close the
-        // intake so the router exits and drops its replica senders, then
-        // join the monitor (it holds sender clones too — workers drain
-        // only once both are gone), then the workers.
+        // order matters: stop the monitor/supervisor loops and close
+        // the intake so the router exits; join the monitor, then the
+        // supervisor (it may be mid-respawn and hands back the worker
+        // threads it spawned); only then close every slot — dropping
+        // the last queue senders — so the workers drain out and the
+        // final joins are bounded.
         self.stop.store(true, std::sync::atomic::Ordering::Relaxed);
         drop(self.handle);
         let _ = self.router.join();
         if let Some(m) = self.monitor {
             let _ = m.join();
         }
-        for w in self.workers {
+        let mut workers = self.workers;
+        if let Some(s) = self.supervisor {
+            if let Ok(mut respawned) = s.join() {
+                workers.append(&mut respawned);
+            }
+        }
+        for slot in &self.slots {
+            slot.close();
+        }
+        for w in workers {
             let _ = w.join();
         }
         let mut out = Vec::new();
@@ -910,16 +1016,28 @@ fn accept(msg: WorkerMsg, batcher: &mut DynamicBatcher<InferRequest>) {
 /// Request/latency counters live in the shared `live` cell (one lock
 /// per flush) so `/metrics` observes them while serving; the
 /// shutdown-time [`WorkerStats`] is derived from the same counters.
+///
+/// An executor panic is caught in [`flush`]: the batch's clients get a
+/// typed `Failed` response, and the worker marks its replica dead,
+/// answers everything still queued (a client must never hang on a
+/// corpse), and exits **without** reporting [`WorkerStats`] — exactly
+/// like the pre-§12 unwinding death, so shutdown aggregation keeps
+/// counting survivors only. Dropping the executor on the way out tears
+/// down its dedicated shard pools; the supervisor (if any) rebuilds
+/// them on respawn.
 #[allow(clippy::too_many_arguments)]
-fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
-               rx: Receiver<WorkerMsg>, state: Arc<ReplicaState>,
-               opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>,
-               live: Arc<Mutex<LiveCounters>>) {
+pub(crate) fn worker_loop(
+    model: String, replica: usize, exec: Box<dyn BatchExecutor>,
+    rx: Receiver<WorkerMsg>, state: Arc<ReplicaState>,
+    opts: ServeOptions, stats_tx: mpsc::Sender<WorkerStats>,
+    live: Arc<Mutex<LiveCounters>>, counters: Arc<RouterCounters>,
+) {
     let mut batcher: DynamicBatcher<InferRequest> =
         DynamicBatcher::new(exec.max_batch(), opts.max_delay);
     let mut open = true;
+    let mut fatal: Option<String> = None;
 
-    while open || !batcher.is_empty() {
+    while fatal.is_none() && (open || !batcher.is_empty()) {
         // fill: block when empty, then drain whatever is ready
         if open && batcher.is_empty() {
             match rx.recv() {
@@ -942,7 +1060,8 @@ fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
         }
         match batcher.poll(Instant::now()) {
             Flush::Emit(n) => {
-                flush(exec.as_ref(), &mut batcher, n, &state, &live);
+                fatal = flush(exec.as_ref(), &mut batcher, n, &state,
+                              &live).err();
             }
             Flush::Wait(d) if open => {
                 // wait out the deadline, absorbing new arrivals
@@ -957,10 +1076,31 @@ fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
             Flush::Wait(_) => {
                 // intake closed: flush the remainder immediately
                 let n = batcher.len();
-                flush(exec.as_ref(), &mut batcher, n, &state, &live);
+                fatal = flush(exec.as_ref(), &mut batcher, n, &state,
+                              &live).err();
             }
             Flush::Idle => {}
         }
+    }
+
+    if let Some(msg) = fatal {
+        counters.note_death(&state);
+        let reject = |req: InferRequest| {
+            state.note_completed();
+            let _ = req.resp.send(Err(Rejection::terminal(
+                ServeError::Failed(msg.clone()))));
+        };
+        let n = batcher.len();
+        for p in batcher.take(n) {
+            reject(p.payload);
+        }
+        for m in rx.try_iter() {
+            match m {
+                WorkerMsg::Infer(req) => reject(req),
+                WorkerMsg::Ping(_) => {}
+            }
+        }
+        return;
     }
 
     let (requests, latency) = {
@@ -978,18 +1118,45 @@ fn worker_loop(model: String, replica: usize, exec: Box<dyn BatchExecutor>,
     });
 }
 
+/// Render a `catch_unwind` payload (panics carry `&str` or `String`).
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> &str {
+    payload.downcast_ref::<&str>().copied()
+        .or_else(|| payload.downcast_ref::<String>().map(String::as_str))
+        .unwrap_or("non-string panic payload")
+}
+
 /// Execute one batch through the executor and fan results back out,
 /// marking each request completed in the replica's outstanding-work
-/// counter (success and failure alike).
+/// counter (success and failure alike). A *returned* executor error is
+/// recoverable (the replica keeps serving: poison clears); a *panic*
+/// is captured so every client in the batch still gets a typed
+/// response, then surfaced as `Err` — the worker treats the executor
+/// as dead and exits.
 fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
-         n: usize, state: &ReplicaState, live: &Mutex<LiveCounters>) {
+         n: usize, state: &ReplicaState, live: &Mutex<LiveCounters>)
+         -> std::result::Result<(), String> {
     if n == 0 {
-        return;
+        return Ok(());
     }
     let pending = batcher.take(n);
-    let result = exec.infer_batch(&pending.iter()
-        .map(|p| &p.payload.input)
-        .collect::<Vec<_>>());
+    let inputs: Vec<&HostTensor> =
+        pending.iter().map(|p| &p.payload.input).collect();
+    let result = catch_unwind(AssertUnwindSafe(|| exec.infer_batch(&inputs)));
+    drop(inputs);
+    let result = match result {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = format!("replica worker panicked: {}",
+                              panic_text(payload.as_ref()));
+            for p in pending {
+                state.note_completed();
+                let _ = p.payload.resp
+                    .send(Err(Rejection::terminal(
+                        ServeError::Failed(msg.clone()))));
+            }
+            return Err(msg);
+        }
+    };
     match result {
         // an executor returning the wrong row count is a bug, but zip()
         // would hide it: the unmatched clients' response senders were
@@ -1025,6 +1192,7 @@ fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
             }
         }
     }
+    Ok(())
 }
 
 /// Split a (B, ...) logits tensor into the first n rows.

@@ -1,0 +1,248 @@
+//! Replica supervision (DESIGN.md §12): the self-healing loop over the
+//! router's replica slots.
+//!
+//! One supervisor thread per server (spawned when
+//! `ServeOptions::restart_budget > 0`) polls every replica's shared
+//! [`ReplicaState`] a few times per health interval. When a replica is
+//! found dead — queue disconnect, [`MAX_MISSED_PINGS`] hard misses
+//! escalating to a disconnect, or a `catch_unwind`-captured executor
+//! panic — the supervisor:
+//!
+//! 1. moves it to `Backoff` and waits out a jittered exponential delay
+//!    ([`BackoffPolicy`], base `restart_base`, doubling, capped), so a
+//!    crash-looping executor cannot hot-spin respawns;
+//! 2. respawns the worker through the **same** [`ExecutorFactory`] the
+//!    original was built with (fault-injection wrappers included) on a
+//!    fresh thread with a fresh bounded queue, swapping the queue
+//!    sender into the replica's [`ReplicaSlot`] in place;
+//! 3. revives the state into `Probation`: the health monitor pings it,
+//!    and only `probation_pings` *consecutive* successes readmit it to
+//!    dispatch ([`ReplicaState::note_ping_ok`]);
+//! 4. records detected-death → readmission into the recovery histogram
+//!    (`cat_recovery_time_us`).
+//!
+//! Respawn attempts are budgeted per replica across its whole lifetime:
+//! once `restart_budget` attempts are spent the replica is marked
+//! terminally dead ([`ReplicaState::mark_exhausted`]) — exactly the
+//! pre-supervision behaviour, and what `/healthz` reports as
+//! degraded-permanent.
+//!
+//! Thread teardown is leak-free by construction: the dead worker's
+//! executor `Box` is dropped when its thread unwinds out of
+//! `worker_loop`, which releases any dedicated shard pools
+//! (`Drop for ShardWorker` joins the pool threads); the respawned
+//! worker builds fresh ones. The supervisor returns every `JoinHandle`
+//! it spawned so `Server::shutdown` joins respawned workers exactly
+//! like original ones.
+//!
+//! [`ReplicaState`]: super::router::ReplicaState
+//! [`ReplicaState::note_ping_ok`]: super::router::ReplicaState::note_ping_ok
+//! [`ReplicaState::mark_exhausted`]:
+//!     super::router::ReplicaState::mark_exhausted
+//! [`MAX_MISSED_PINGS`]: super::router::MAX_MISSED_PINGS
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::retry::{Backoff, BackoffPolicy};
+use super::router::{ReplicaPhase, ReplicaSlot, RouterCounters};
+use super::server::{worker_loop, ExecutorFactory, LiveCounters,
+                    ServeOptions, WorkerSpec, WorkerStats};
+use crate::metrics::lock_recovering;
+use crate::Result;
+
+/// Everything the supervisor needs to rebuild one replica: its routing
+/// slot (shared with router + monitor), the worker spec the factory
+/// consumes, and the live-counter cell the respawned worker keeps
+/// appending to (restart survivors keep their request totals).
+pub(crate) struct SupervisedSlot {
+    pub(crate) slot: Arc<ReplicaSlot>,
+    pub(crate) spec: Arc<WorkerSpec>,
+    pub(crate) live: Arc<Mutex<LiveCounters>>,
+    pub(crate) replica: usize,
+}
+
+/// The supervisor thread's working set, built by `Server::spawn_with`.
+pub(crate) struct Supervisor {
+    pub(crate) slots: Vec<SupervisedSlot>,
+    pub(crate) factory: ExecutorFactory,
+    pub(crate) opts: ServeOptions,
+    pub(crate) stats_tx: mpsc::Sender<WorkerStats>,
+    pub(crate) counters: Arc<RouterCounters>,
+    pub(crate) stop: Arc<AtomicBool>,
+    /// Jitter seed for the restart backoff schedules.
+    pub(crate) seed: u64,
+}
+
+/// Per-replica bookkeeping private to the supervisor thread.
+#[derive(Default)]
+struct SlotWatch {
+    /// Restart backoff schedule for the current outage (fresh per
+    /// outage; attempts accumulate across outages via `attempts`).
+    backoff: Option<Backoff>,
+    /// Respawn attempts spent over this replica's lifetime — the
+    /// restart budget is cumulative, so a crash-looping executor
+    /// eventually goes terminally dead instead of flapping forever.
+    attempts: u32,
+    /// When the pending respawn fires.
+    resume_at: Option<Instant>,
+    /// When the current outage was first observed (time-to-recovery
+    /// anchor; spans repeated crash loops until dispatch readmission).
+    died_at: Option<Instant>,
+    /// Respawned and waiting for probation to complete.
+    awaiting_live: bool,
+    /// Budget spent: never look at this replica again.
+    exhausted: bool,
+}
+
+/// Restart delays: exponential from `base`, ±30% jitter, capped at 2s
+/// per attempt. The budget only bounds the schedule object — attempt
+/// counting (and exhaustion) is the supervisor's `restart_budget`.
+fn restart_policy(base: Duration) -> BackoffPolicy {
+    BackoffPolicy {
+        base: base.max(Duration::from_millis(1)),
+        factor: 2.0,
+        max_delay: Duration::from_secs(2),
+        jitter: 0.3,
+        budget: Duration::from_secs(86_400),
+    }
+}
+
+/// The supervisor loop. Returns the join handles of every worker
+/// thread it spawned (for `Server::shutdown`).
+pub(crate) fn supervisor_loop(sup: Supervisor)
+                              -> Vec<std::thread::JoinHandle<()>> {
+    // poll a few times per health interval: death detection is bounded
+    // by the monitor's cadence anyway, so finer polling buys nothing
+    let tick = (sup.opts.health_every / 4).max(Duration::from_millis(2));
+    let probation = sup.opts.probation_pings.max(1);
+    let mut watches: Vec<SlotWatch> =
+        sup.slots.iter().map(|_| SlotWatch::default()).collect();
+    let mut spawned = Vec::new();
+    let mut seed = sup.seed;
+    while !sup.stop.load(Ordering::Relaxed) {
+        std::thread::sleep(tick);
+        if sup.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        for (s, w) in sup.slots.iter().zip(watches.iter_mut()) {
+            if w.exhausted {
+                continue;
+            }
+            let state = s.slot.state();
+            if w.awaiting_live {
+                if state.phase() == ReplicaPhase::Live {
+                    // probation served: the outage is over
+                    if let Some(t0) = w.died_at.take() {
+                        lock_recovering(&sup.counters.recovery)
+                            .record(t0.elapsed());
+                    }
+                    w.awaiting_live = false;
+                    w.backoff = None; // next outage gets a fresh schedule
+                } else if !state.is_alive() {
+                    // died again (in probation or right after): fall
+                    // through to the outage handling below
+                    w.awaiting_live = false;
+                } else {
+                    continue;
+                }
+            }
+            if state.is_alive() {
+                continue;
+            }
+            // replica is down
+            if w.died_at.is_none() {
+                w.died_at = Some(Instant::now());
+            }
+            match w.resume_at {
+                None => {
+                    if w.attempts >= sup.opts.restart_budget {
+                        state.mark_exhausted();
+                        w.exhausted = true;
+                        continue;
+                    }
+                    let b = w.backoff.get_or_insert_with(|| {
+                        seed = seed.wrapping_add(0x9E37_79B9);
+                        restart_policy(sup.opts.restart_base).start(seed)
+                    });
+                    let delay = b.next_delay(None)
+                        .unwrap_or(Duration::from_secs(2));
+                    state.mark_backoff();
+                    w.resume_at = Some(Instant::now() + delay);
+                }
+                Some(at) if Instant::now() >= at => {
+                    w.resume_at = None;
+                    w.attempts += 1;
+                    match respawn(&sup, s) {
+                        Ok(handle) => {
+                            spawned.push(handle);
+                            state.revive(probation);
+                            sup.counters.replicas_restarted
+                                .fetch_add(1, Ordering::Relaxed);
+                            w.awaiting_live = true;
+                        }
+                        Err(_) => {
+                            // factory refused (or the thread died in
+                            // startup): the attempt is spent; the next
+                            // tick schedules the grown backoff delay
+                        }
+                    }
+                }
+                Some(_) => {} // still backing off
+            }
+        }
+    }
+    spawned
+}
+
+/// Spawn a replacement worker for `s`: fresh bounded queue, executor
+/// built by the factory **on the new thread** (PJRT handles are
+/// `!Send`), readiness confirmed before the slot's sender is swapped —
+/// a failed build leaves the slot untouched (still disconnected) and
+/// costs one budget attempt. The caller revives the replica state.
+fn respawn(sup: &Supervisor, s: &SupervisedSlot)
+           -> Result<std::thread::JoinHandle<()>> {
+    let (wtx, wrx) = mpsc::sync_channel(sup.opts.queue_depth);
+    let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+    let spec = s.spec.clone();
+    let opts = sup.opts;
+    let factory = sup.factory.clone();
+    let stats_tx = sup.stats_tx.clone();
+    let live = s.live.clone();
+    let state = s.slot.state().clone();
+    let counters = sup.counters.clone();
+    let replica = s.replica;
+    let handle = std::thread::spawn(move || {
+        match factory(spec.as_ref(), &opts) {
+            Ok(exec) => {
+                let _ = ready_tx.send(Ok(()));
+                drop(ready_tx);
+                worker_loop(spec.model.clone(), replica, exec, wrx, state,
+                            opts, stats_tx, live, counters);
+            }
+            Err(e) => {
+                let _ = ready_tx.send(Err(e));
+            }
+        }
+    });
+    match ready_rx.recv() {
+        Ok(Ok(())) => {
+            s.slot.replace_sender(wtx);
+            Ok(handle)
+        }
+        Ok(Err(e)) => {
+            let _ = handle.join();
+            Err(e.context(format!("respawn {} replica {replica}",
+                                  s.spec.model)))
+        }
+        Err(_) => {
+            let _ = handle.join();
+            Err(anyhow!("respawned worker for {} replica {replica} died \
+                         during startup", s.spec.model))
+        }
+    }
+}

@@ -63,6 +63,9 @@ commands:
                (extras: [--max-conns N] [--request-timeout-ms MS]
                 [--queue-depth N] [--drain-timeout-ms MS]
                 [--fault-delay-ms MS] — DESIGN.md §11)
+               [--restart-budget N] dead replicas are respawned by the
+               supervisor (jittered backoff + probation) up to N times
+               each; 0 (default) disables self-healing — DESIGN.md §12
   table1       [--fast] [--steps N] [--json PATH]    (Table 1)  [pjrt]
   table2       [--fast] [--steps N] [--json PATH]    (Table 2)  [pjrt]
   table3       [--steps N] [--json PATH]   (Table 3 / Fig 2)    [pjrt]
@@ -78,7 +81,8 @@ const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "backend", "save", "resume", "shards",
                           "replicas", "listen", "max-conns",
                           "request-timeout-ms", "queue-depth",
-                          "drain-timeout-ms", "fault-delay-ms"];
+                          "drain-timeout-ms", "fault-delay-ms",
+                          "restart-budget"];
 
 fn main() {
     if let Err(e) = run() {
@@ -364,6 +368,7 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
     let requests: usize = args.parse_or("requests", 256)?;
     let shards: usize = args.parse_or("shards", 1)?;
     let replicas: usize = args.parse_or("replicas", 1)?;
+    let restart_budget: u32 = args.parse_or("restart-budget", 0)?;
     anyhow::ensure!(shards >= 1 && replicas >= 1,
                     "--shards and --replicas must be at least 1");
     anyhow::ensure!(backend == Backend::Native || shards == 1,
@@ -397,7 +402,7 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
 
     if let Some(listen) = args.get("listen") {
         return cmd_serve_http(args, backend, &config, shards, replicas,
-                              listen);
+                              restart_budget, listen);
     }
 
     match backend {
@@ -408,7 +413,7 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
         Backend::Pjrt => eprintln!(
             "[serve] backend=pjrt model={config} replicas={replicas}"),
     }
-    let opts = ServeOptions { backend, shards, replicas,
+    let opts = ServeOptions { backend, shards, replicas, restart_budget,
                               ..Default::default() };
     let server = Server::spawn(cat::artifacts_dir(), &[config.clone()],
                                opts, 0)?;
@@ -482,7 +487,8 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
 /// `GET /metrics` until SIGINT, then drains in-flight requests and
 /// reports the usual serving stats.
 fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
-                  shards: usize, replicas: usize, listen: &str)
+                  shards: usize, replicas: usize, restart_budget: u32,
+                  listen: &str)
                   -> cat::Result<()> {
     use cat::coordinator::{default_factory, WorkerSpec};
     use cat::serve::fault::{injected_factory, FaultPlan};
@@ -502,7 +508,7 @@ fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
                     "--request-timeout-ms must be at least 1");
 
     let opts = ServeOptions { backend, shards, replicas, queue_depth,
-                              ..Default::default() };
+                              restart_budget, ..Default::default() };
     let mut factory = default_factory(cat::artifacts_dir());
     if fault_delay_ms > 0 {
         // test/bench hook: every batch sleeps this long in the executor,

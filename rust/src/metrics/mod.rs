@@ -1,10 +1,39 @@
 //! Host-side metrics: classification accuracy, masked/causal perplexity,
-//! loss curves, and latency histograms for the serving path.
+//! loss curves, latency histograms for the serving path, and the
+//! process-wide lock-poison recovery counter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
 
 use crate::data::Truth;
 use crate::tensor::HostTensor;
 use crate::Result;
 use anyhow::bail;
+
+/// Poisoned mutex guards recovered instead of cascading the panic
+/// (see [`lock_recovering`]).
+static LOCK_POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// Lock a mutex, recovering a poisoned guard instead of panicking. A
+/// worker that panicked while holding a stats lock must not take
+/// `/metrics` scrapes or `shutdown()` down with it — the guarded data
+/// (counters, histograms) is valid at every intermediate state, so the
+/// recovery is safe. Every recovery bumps a process-wide counter
+/// ([`lock_poison_recoveries`], exported as
+/// `cat_lock_poison_recoveries_total`) so silent poisoning is still
+/// observable.
+pub fn lock_recovering<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        LOCK_POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+        poisoned.into_inner()
+    })
+}
+
+/// Process-wide count of poisoned locks recovered by
+/// [`lock_recovering`].
+pub fn lock_poison_recoveries() -> u64 {
+    LOCK_POISON_RECOVERIES.load(Ordering::Relaxed)
+}
 
 /// Top-1 accuracy from (B, C) logits and (B,) labels.
 pub fn accuracy(logits: &HostTensor, labels: &[i32]) -> Result<f64> {
@@ -342,6 +371,22 @@ mod tests {
                 "cumulative counts must be monotone: {buckets:?}");
         assert_eq!(buckets.last().unwrap().1, 6);
         assert_eq!(a.sum_us(), 5 + 80 + 3000 + 1 + 80 + 1_000_000);
+    }
+
+    #[test]
+    fn lock_recovering_survives_poison_and_counts() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let before = lock_poison_recoveries();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock on purpose");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        *lock_recovering(&m) += 1;
+        assert_eq!(*lock_recovering(&m), 8);
+        assert!(lock_poison_recoveries() >= before + 1);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::time::Instant;
 use anyhow::{bail, Context};
 
 use super::artifact::{ConfigMeta, EntryMeta, Manifest};
+use crate::metrics::lock_recovering;
 use crate::tensor::HostTensor;
 use crate::Result;
 
@@ -42,7 +43,7 @@ impl Executable {
         let tuple = result[0][0].to_literal_sync()?;
         let outs = tuple.to_tuple()?;
         let dt = t0.elapsed().as_secs_f64();
-        let mut s = self.stats.lock().unwrap();
+        let mut s = lock_recovering(&self.stats);
         s.0 += 1;
         s.1 += dt;
         if outs.len() != self.meta.outputs.len() {
@@ -65,7 +66,7 @@ impl Executable {
 
     /// (calls, total seconds) since creation.
     pub fn exec_stats(&self) -> (u64, f64) {
-        *self.stats.lock().unwrap()
+        *lock_recovering(&self.stats)
     }
 }
 
@@ -103,7 +104,7 @@ impl Runtime {
     /// Compile (or fetch from cache) one entry point.
     pub fn load(&self, config: &str, entry: &str) -> Result<Arc<Executable>> {
         let key = (config.to_string(), entry.to_string());
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+        if let Some(e) = lock_recovering(&self.cache).get(&key) {
             return Ok(e.clone());
         }
         let meta = self.manifest.config(config)?.entry(entry)?.clone();
@@ -125,12 +126,12 @@ impl Runtime {
         });
         eprintln!("[runtime] compiled {config}.{entry} in {:.2}s",
                   t0.elapsed().as_secs_f64());
-        self.cache.lock().unwrap().insert(key, compiled.clone());
+        lock_recovering(&self.cache).insert(key, compiled.clone());
         Ok(compiled)
     }
 
     /// Number of cached executables (diagnostics).
     pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        lock_recovering(&self.cache).len()
     }
 }

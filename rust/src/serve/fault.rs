@@ -10,8 +10,13 @@
 //! * **poison** — the next N batches return an executor error (clients
 //!   see `Failed` → HTTP 502; the replica survives);
 //! * **kill** — the next batch panics the worker thread (the replica
-//!   dies mid-request: in-flight clients see "worker dropped request",
-//!   the router marks the replica dead, `/healthz` degrades).
+//!   dies mid-request: in-flight clients get a typed 502, the router
+//!   marks the replica dead, `/healthz` degrades, and — when
+//!   supervision is on — the supervisor respawns it). Also available
+//!   periodically ([`FaultPlan::kill_every`]) and as a seeded random
+//!   rate ([`FaultPlan::kill_rate`]) for chaos soaks;
+//! * **panic_next** — like kill but with a distinct one-shot payload,
+//!   for asserting the `catch_unwind` capture path specifically.
 //!
 //! The seam composes with PR 5's `spawn_with`: [`injected_factory`]
 //! decorates any inner [`ExecutorFactory`] (including the production
@@ -40,6 +45,30 @@ struct FaultState {
     poison_next: AtomicUsize,
     /// Panic the worker on its next batch (one-shot).
     kill_next: AtomicBool,
+    /// Panic the worker on its next batch with a distinct payload
+    /// (one-shot); exercises the `catch_unwind` capture path.
+    panic_next: AtomicBool,
+    /// Panic the worker on every `n`-th batch (0 = off).
+    kill_every: AtomicUsize,
+    /// Batches seen since `kill_every` was armed.
+    batch_counter: AtomicUsize,
+    /// Per-batch kill probability as `f64` bits (0 = off).
+    kill_rate_bits: AtomicU64,
+    /// splitmix64 state for the seeded kill-rate draws.
+    rng_state: AtomicU64,
+}
+
+/// One splitmix64 step over a shared atomic state; returns a uniform
+/// draw in `[0, 1)`. Good enough for chaos scheduling and fully
+/// reproducible from the seed.
+fn splitmix_unit(state: &AtomicU64) -> f64 {
+    let mut z = state
+        .fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed)
+        .wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z >> 11) as f64 / (1u64 << 53) as f64
 }
 
 /// Shared remote control over every executor built from one
@@ -72,6 +101,32 @@ impl FaultPlan {
     pub fn kill_next(&self) {
         self.state.kill_next.store(true, Ordering::Relaxed);
     }
+
+    /// Panic the worker on its next batch with a payload distinct from
+    /// [`FaultPlan::kill_next`], so tests can assert which capture path
+    /// (the worker's `catch_unwind`) surfaced the message.
+    pub fn panic_next(&self) {
+        self.state.panic_next.store(true, Ordering::Relaxed);
+    }
+
+    /// Panic the worker on every `n`-th batch from now on (`n = 0`
+    /// disarms). The period counts batches across all executors sharing
+    /// this plan.
+    pub fn kill_every(&self, n: usize) {
+        self.state.batch_counter.store(0, Ordering::Relaxed);
+        self.state.kill_every.store(n, Ordering::Relaxed);
+    }
+
+    /// Kill each batch independently with probability `rate` (clamped
+    /// to `[0, 1]`; `0.0` disarms), drawn from a splitmix64 stream
+    /// seeded with `seed` — the chaos schedule is reproducible.
+    pub fn kill_rate(&self, rate: f64, seed: u64) {
+        self.state.rng_state.store(seed, Ordering::Relaxed);
+        let clamped = rate.clamp(0.0, 1.0);
+        self.state
+            .kill_rate_bits
+            .store(clamped.to_bits(), Ordering::Relaxed);
+    }
 }
 
 /// A [`BatchExecutor`] decorator that applies the faults armed in its
@@ -97,9 +152,23 @@ impl BatchExecutor for FaultInjector {
         let s = &self.plan.state;
         if s.kill_next.swap(false, Ordering::Relaxed) {
             // the worker thread dies exactly like a real executor crash:
-            // in-flight requests are dropped, the queue disconnects, the
-            // router marks the replica dead
+            // in-flight requests get typed failures, the queue
+            // disconnects, the router marks the replica dead
             panic!("fault injection: replica killed mid-request");
+        }
+        if s.panic_next.swap(false, Ordering::Relaxed) {
+            panic!("fault injection: worker panic");
+        }
+        let every = s.kill_every.load(Ordering::Relaxed);
+        if every > 0 {
+            let seen = s.batch_counter.fetch_add(1, Ordering::Relaxed) + 1;
+            if seen % every == 0 {
+                panic!("fault injection: periodic kill (batch {seen})");
+            }
+        }
+        let rate = f64::from_bits(s.kill_rate_bits.load(Ordering::Relaxed));
+        if rate > 0.0 && splitmix_unit(&s.rng_state) < rate {
+            panic!("fault injection: random kill (rate {rate})");
         }
         let delay = s.delay_us.load(Ordering::Relaxed);
         if delay > 0 {
@@ -201,6 +270,71 @@ mod tests {
         assert!(died, "armed kill must panic the executing thread");
         // one-shot: the kill disarms itself, the next batch runs
         assert!(inj.infer_batch(&[&t]).is_ok());
+    }
+
+    /// `true` iff one `infer_batch` call on `inj` panics.
+    fn batch_dies(inj: &FaultInjector, t: &HostTensor) -> bool {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = inj.infer_batch(&[t]);
+        }))
+        .is_err()
+    }
+
+    #[test]
+    fn panic_next_is_one_shot_with_distinct_payload() {
+        let (inj, plan) = injector();
+        plan.panic_next();
+        let t = HostTensor::scalar_f32(0.0);
+        let payload = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                let _ = inj.infer_batch(&[&t]);
+            }))
+            .expect_err("armed panic_next must panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "fault injection: worker panic");
+        assert!(inj.infer_batch(&[&t]).is_ok(), "one-shot: disarms");
+    }
+
+    #[test]
+    fn kill_every_panics_periodically() {
+        let (inj, plan) = injector();
+        plan.kill_every(3);
+        let t = HostTensor::scalar_f32(0.0);
+        let deaths: Vec<bool> =
+            (0..9).map(|_| batch_dies(&inj, &t)).collect();
+        assert_eq!(deaths, [false, false, true,
+                            false, false, true,
+                            false, false, true]);
+        plan.kill_every(0);
+        assert!(!batch_dies(&inj, &t), "kill_every(0) disarms");
+    }
+
+    #[test]
+    fn kill_rate_extremes_always_and_never() {
+        let (inj, plan) = injector();
+        let t = HostTensor::scalar_f32(0.0);
+        plan.kill_rate(1.0, 42);
+        for _ in 0..5 {
+            assert!(batch_dies(&inj, &t), "rate 1.0 kills every batch");
+        }
+        plan.kill_rate(0.0, 42);
+        for _ in 0..5 {
+            assert!(!batch_dies(&inj, &t), "rate 0.0 never kills");
+        }
+    }
+
+    #[test]
+    fn kill_rate_schedule_is_seed_reproducible() {
+        let t = HostTensor::scalar_f32(0.0);
+        let run = |seed: u64| -> Vec<bool> {
+            let (inj, plan) = injector();
+            plan.kill_rate(0.5, seed);
+            (0..32).map(|_| batch_dies(&inj, &t)).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed, same chaos schedule");
+        let a = run(7);
+        assert!(a.iter().any(|d| *d) && a.iter().any(|d| !*d),
+                "rate 0.5 should mix kills and survivals over 32 draws");
     }
 
     #[test]

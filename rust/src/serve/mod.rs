@@ -41,6 +41,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Context as _;
 
+use crate::metrics::lock_recovering;
 use crate::Result;
 
 use http::{error_response, read_request, HttpLimits, Response};
@@ -128,21 +129,17 @@ impl ConnRegistry {
     fn register(&self, stream: &TcpStream) -> u64 {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if let Ok(dup) = stream.try_clone() {
-            let mut conns = self.conns.lock()
-                .unwrap_or_else(|p| p.into_inner());
-            conns.insert(id, dup);
+            lock_recovering(&self.conns).insert(id, dup);
         }
         id
     }
 
     fn deregister(&self, id: u64) {
-        let mut conns = self.conns.lock()
-            .unwrap_or_else(|p| p.into_inner());
-        conns.remove(&id);
+        lock_recovering(&self.conns).remove(&id);
     }
 
     fn shutdown_all(&self) {
-        let conns = self.conns.lock().unwrap_or_else(|p| p.into_inner());
+        let conns = lock_recovering(&self.conns);
         for stream in conns.values() {
             let _ = stream.shutdown(std::net::Shutdown::Both);
         }

@@ -10,8 +10,8 @@
 
 use std::fmt::Write as _;
 
-use crate::coordinator::StatsHandle;
-use crate::metrics::LatencyHistogram;
+use crate::coordinator::{ReplicaPhase, StatsHandle};
+use crate::metrics::{lock_poison_recoveries, LatencyHistogram};
 
 use super::HttpSnapshot;
 
@@ -42,6 +42,12 @@ pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
             "Health pings answered in time.", router.pings_ok);
     counter(&mut out, "cat_router_pings_missed_total",
             "Health pings that timed out.", router.pings_missed);
+    counter(&mut out, "cat_replica_restarts_total",
+            "Replica workers respawned by the supervisor.",
+            router.replicas_restarted);
+    counter(&mut out, "cat_lock_poison_recoveries_total",
+            "Poisoned mutexes recovered instead of cascading panics.",
+            lock_poison_recoveries());
 
     counter(&mut out, "cat_http_connections_accepted_total",
             "TCP connections accepted.", http.accepted);
@@ -68,6 +74,20 @@ pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
                          "cat_replica_up{{model=\"{}\",replica=\"{}\"}} {}",
                          escape_label(&r.model), r.replica,
                          u8::from(r.alive));
+    }
+
+    let _ = writeln!(out, "# HELP cat_replica_state Replica supervision \
+                           phase (one series per phase, 1 = current).");
+    let _ = writeln!(out, "# TYPE cat_replica_state gauge");
+    for r in &replicas {
+        for phase in ReplicaPhase::all() {
+            let _ = writeln!(
+                out,
+                "cat_replica_state{{model=\"{}\",replica=\"{}\",\
+                 state=\"{}\"}} {}",
+                escape_label(&r.model), r.replica, phase.as_str(),
+                u8::from(r.phase == phase));
+        }
     }
 
     let _ = writeln!(out, "# HELP cat_replica_outstanding Dispatched \
@@ -117,6 +137,21 @@ pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
                      merged.count());
     let _ = writeln!(out, "{name}_sum {}", merged.sum_us());
     let _ = writeln!(out, "{name}_count {}", merged.count());
+
+    // time-to-recovery: supervisor-observed death → dispatch readmission
+    let recovery = stats.recovery_latency();
+    let name = "cat_recovery_time_us";
+    let _ = writeln!(out, "# HELP {name} Replica time-to-recovery \
+                           (death observed to dispatch readmission) in \
+                           microseconds.");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (bound, cum) in recovery.cumulative_buckets() {
+        let _ = writeln!(out, "{name}_bucket{{le=\"{bound}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {}",
+                     recovery.count());
+    let _ = writeln!(out, "{name}_sum {}", recovery.sum_us());
+    let _ = writeln!(out, "{name}_count {}", recovery.count());
 
     out
 }

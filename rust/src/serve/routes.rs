@@ -46,8 +46,15 @@ fn err_body(msg: &str) -> String {
 pub fn handle_request(state: &AppState, req: &Request) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET" | "HEAD", "/healthz") => {
-            let (status, body) = if state.stats.degraded() {
-                (503, "{\"status\":\"degraded\"}")
+            // degraded-permanent (a replica is dead for good: restart
+            // budget exhausted or supervision off) is distinguished
+            // from degraded-recovering (supervisor mid-backoff or
+            // probation): both are 503, but orchestrators should only
+            // replace the process on "permanent"
+            let (status, body) = if state.stats.degraded_permanent() {
+                (503, "{\"status\":\"degraded\",\"mode\":\"permanent\"}")
+            } else if state.stats.degraded_recovering() {
+                (503, "{\"status\":\"degraded\",\"mode\":\"recovering\"}")
             } else {
                 (200, "{\"status\":\"ok\"}")
             };

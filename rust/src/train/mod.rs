@@ -322,16 +322,73 @@ impl TrainBackend for NativeTrainer {
 //
 // Layout (all integers u64 LE, all tensors f32 LE):
 //
-//   magic "CATCKPT1" | seed | cursor | config fingerprint (11 words) |
+//   magic "CATCKPT2" | seed | cursor | config fingerprint (11 words) |
 //   opt step | n_tensors | per tensor: name_len + name bytes + len +
-//   len·f32 | m: len + len·f32 | v: len + len·f32
+//   len·f32 | m: len + len·f32 | v: len + len·f32 | crc32 (u32 LE over
+//   every preceding byte)
 //
 // The fingerprint + seed + tensor names make resume-into-the-wrong-model
 // a hard error instead of silent drift; cursor + moments + step make the
-// resumed loss sequence bit-identical to the uninterrupted run.
+// resumed loss sequence bit-identical to the uninterrupted run. The
+// trailing CRC turns silent bit-rot (torn writes, disk corruption) into
+// a loud load error; version-1 files ("CATCKPT1", no trailer) still
+// load. Saves are atomic: temp file + fsync + rename, so a failed or
+// interrupted save never clobbers the previous checkpoint.
 
-/// Magic + version tag of the native checkpoint format.
-const CKPT_MAGIC: &[u8; 8] = b"CATCKPT1";
+/// Magic of the legacy v1 format (no integrity trailer) — read-only.
+const CKPT_MAGIC_V1: &[u8; 8] = b"CATCKPT1";
+/// Magic of the current format (trailing CRC32) — what we write.
+const CKPT_MAGIC_V2: &[u8; 8] = b"CATCKPT2";
+
+/// CRC32 lookup table (IEEE 802.3, reflected polynomial 0xEDB88320) —
+/// the same CRC as gzip/zip/PNG, built at compile time.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC32 (IEEE) of `bytes`.
+fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Write `bytes` to `path` atomically: a sibling `<path>.tmp` is
+/// written and fsynced first, then renamed over the target. A crash or
+/// failure anywhere before the rename leaves the previous file intact;
+/// rename-within-a-directory is atomic on POSIX filesystems.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write as _;
+    let mut tmp_name = path.as_os_str().to_os_string();
+    tmp_name.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp_name);
+    let attempt = (|| -> std::io::Result<()> {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+    })();
+    if let Err(e) = attempt {
+        let _ = std::fs::remove_file(&tmp);
+        bail!("writing checkpoint {}: {e}", path.display());
+    }
+    Ok(())
+}
 
 fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -418,7 +475,7 @@ impl NativeTrainer {
     /// [`Self::load_checkpoint`] continues with bit-identical losses.
     pub fn save_checkpoint(&mut self, path: &Path) -> Result<()> {
         let mut buf = Vec::new();
-        buf.extend_from_slice(CKPT_MAGIC);
+        buf.extend_from_slice(CKPT_MAGIC_V2);
         put_u64(&mut buf, self.seed);
         put_u64(&mut buf, self.cursor);
         for w in config_fingerprint(self.model.cfg()) {
@@ -436,10 +493,9 @@ impl NativeTrainer {
         let (_, m, v) = self.opt.state();
         put_f32s(&mut buf, m);
         put_f32s(&mut buf, v);
-        std::fs::write(path, &buf).map_err(|e| {
-            anyhow::anyhow!("writing checkpoint {}: {e}", path.display())
-        })?;
-        Ok(())
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        write_atomic(path, &buf)
     }
 
     /// Restore state saved by [`Self::save_checkpoint`]. The trainer
@@ -449,9 +505,28 @@ impl NativeTrainer {
         let raw = std::fs::read(path).map_err(|e| {
             anyhow::anyhow!("reading checkpoint {}: {e}", path.display())
         })?;
-        let mut r = CkptReader { buf: &raw, off: 0 };
-        ensure!(r.take(8)? == CKPT_MAGIC,
+        ensure!(raw.len() >= 8,
                 "{} is not a native CAT checkpoint", path.display());
+        let payload: &[u8] = if &raw[..8] == CKPT_MAGIC_V2 {
+            ensure!(raw.len() >= 12,
+                    "{} is truncated before the CRC trailer",
+                    path.display());
+            let body = &raw[..raw.len() - 4];
+            let stored = u32::from_le_bytes(
+                raw[raw.len() - 4..].try_into().expect("4 bytes"));
+            let got = crc32(body);
+            ensure!(got == stored,
+                    "checkpoint {} failed CRC32 (stored {stored:#010x}, \
+                     computed {got:#010x}): the file is corrupt",
+                    path.display());
+            body
+        } else if &raw[..8] == CKPT_MAGIC_V1 {
+            // legacy v1: no integrity trailer, payload is the whole file
+            &raw
+        } else {
+            bail!("{} is not a native CAT checkpoint", path.display());
+        };
+        let mut r = CkptReader { buf: payload, off: 8 };
         let seed = r.u64()?;
         ensure!(seed == self.seed,
                 "checkpoint was trained with seed {seed}, trainer uses {}",
@@ -488,9 +563,9 @@ impl NativeTrainer {
         }
         let m = r.f32s()?;
         let v = r.f32s()?;
-        ensure!(r.off == raw.len(),
+        ensure!(r.off == payload.len(),
                 "{} trailing bytes after checkpoint payload",
-                raw.len() - r.off);
+                payload.len() - r.off);
         ensure!(m.len() == v.len(),
                 "moment vectors disagree: m {} vs v {}", m.len(), v.len());
         // fully validated — commit atomically
@@ -847,6 +922,96 @@ mod tests {
         let mut d = NativeTrainer::new("native_vit_cat", 3).unwrap();
         assert!(d.load_checkpoint(&path).is_err(),
                 "config mismatch accepted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn crc32_matches_the_reference_vector() {
+        // the canonical IEEE check value, same as gzip/zip/PNG
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn failed_save_leaves_previous_checkpoint_intact() {
+        let path = std::env::temp_dir().join(format!(
+            "cat_ckpt_atomic_{}.bin", std::process::id()));
+        let mut tmp_name = path.as_os_str().to_os_string();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        let _ = std::fs::remove_file(&path);
+        let _ = std::fs::remove_dir(&tmp);
+
+        let mut a = NativeTrainer::new("native_tiny", 11).unwrap();
+        a.train_step(1e-3).unwrap();
+        a.save_checkpoint(&path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // wedge the temp path with a directory: the next save fails at
+        // File::create, before the rename — the old file must survive
+        std::fs::create_dir(&tmp).unwrap();
+        a.train_step(1e-3).unwrap();
+        let err = a.save_checkpoint(&path);
+        assert!(err.is_err(), "save through a wedged temp must fail");
+        assert_eq!(std::fs::read(&path).unwrap(), good,
+                   "failed save clobbered the previous checkpoint");
+
+        // and the surviving file still loads
+        let mut b = NativeTrainer::new("native_tiny", 11).unwrap();
+        b.load_checkpoint(&path).unwrap();
+        assert_eq!(b.cursor(), a.model.cfg().batch_size as u64);
+
+        std::fs::remove_dir(&tmp).unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_checkpoint_fails_crc() {
+        let path = std::env::temp_dir().join(format!(
+            "cat_ckpt_crc_{}.bin", std::process::id()));
+        let mut a = NativeTrainer::new("native_tiny", 5).unwrap();
+        a.save_checkpoint(&path).unwrap();
+
+        let mut raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..8], CKPT_MAGIC_V2);
+        // flip one payload bit mid-file: the CRC must catch it before
+        // any field validation runs
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        let mut b = NativeTrainer::new("native_tiny", 5).unwrap();
+        let err = b.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC32"), "wrong error for bit-rot: {err}");
+
+        // truncation is also a load error, never a panic
+        raw[mid] ^= 0x40; // restore
+        std::fs::write(&path, &raw[..raw.len() - 9]).unwrap();
+        assert!(b.load_checkpoint(&path).is_err(),
+                "truncated checkpoint accepted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_v1_checkpoint_still_loads() {
+        let path = std::env::temp_dir().join(format!(
+            "cat_ckpt_v1_{}.bin", std::process::id()));
+        let mut a = NativeTrainer::new("native_tiny", 9).unwrap();
+        a.train_step(1e-3).unwrap();
+        a.save_checkpoint(&path).unwrap();
+
+        // rewrite the v2 file as v1: old magic, no CRC trailer
+        let raw = std::fs::read(&path).unwrap();
+        let mut v1 = raw[..raw.len() - 4].to_vec();
+        v1[..8].copy_from_slice(CKPT_MAGIC_V1);
+        std::fs::write(&path, &v1).unwrap();
+
+        let mut b = NativeTrainer::new("native_tiny", 9).unwrap();
+        b.load_checkpoint(&path).unwrap();
+        assert_eq!(b.cursor(), a.cursor());
+        let la = a.train_step(1e-3).unwrap();
+        let lb = b.train_step(1e-3).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(),
+                   "v1-resumed run diverged from the saver");
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -68,6 +68,11 @@ struct StackCfg {
     request_timeout: Duration,
     max_conns: usize,
     drain_timeout: Duration,
+    /// 0 (default) = supervision off: a dead replica stays dead, which
+    /// is what the pre-§12 fault tests pin.
+    restart_budget: u32,
+    /// Shortened by supervision tests so probation clears quickly.
+    health_every: Duration,
 }
 
 impl Default for StackCfg {
@@ -78,6 +83,8 @@ impl Default for StackCfg {
             request_timeout: Duration::from_secs(5),
             max_conns: 64,
             drain_timeout: Duration::from_secs(3),
+            restart_budget: 0,
+            health_every: Duration::from_millis(250),
         }
     }
 }
@@ -91,6 +98,9 @@ fn start_stack(factory: ExecutorFactory, cfg: StackCfg)
         queue_depth: cfg.queue_depth,
         replicas: cfg.replicas,
         max_delay: Duration::from_millis(1),
+        restart_budget: cfg.restart_budget,
+        restart_base: Duration::from_millis(10),
+        health_every: cfg.health_every,
         ..Default::default()
     };
     let specs = vec![WorkerSpec { model: "m".into(), params: None,
@@ -486,6 +496,82 @@ fn replica_death_maps_to_502_and_healthz_degrades() {
     let m = get(addr, "/metrics");
     assert!(m.body.contains("cat_replica_up{model=\"m\",replica=\"0\"} 0"),
             "metrics: {}", m.body);
+    stop_stack(http, server);
+}
+
+/// PR-7 acceptance path over real sockets: kill the lone replica →
+/// typed 502 + degraded-recovering `/healthz` → the supervisor respawns
+/// it through backoff + probation → 200s again, restart visible in
+/// `/metrics`, health back to `ok`.
+#[test]
+fn killed_replica_respawns_and_serves_again() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    let cfg = StackCfg {
+        restart_budget: 4,
+        health_every: Duration::from_millis(20),
+        ..StackCfg::default()
+    };
+    let (http, server, addr) = start_stack(
+        injected_factory(&plan, echo_factory()), cfg);
+    assert_eq!(post_classify(addr, &[0.0; 4]).status, 200);
+
+    // kill the lone replica mid-request: the in-flight request still
+    // gets its definitive 502
+    plan.kill_next();
+    let dead = post_classify(addr, &[0.0; 4]);
+    assert_eq!(dead.status, 502, "body: {}", dead.body);
+
+    // while the outage lasts /healthz must say degraded + "recovering"
+    // (never "permanent": the budget is not exhausted); requests keep
+    // getting definitive answers (502 backoff-window / 429 probation)
+    let mut saw_recovering = false;
+    let mut healed = false;
+    let t0 = Instant::now();
+    while t0.elapsed() < Duration::from_secs(10) {
+        let h = get(addr, "/healthz");
+        match h.status {
+            503 => {
+                assert!(h.body.contains("degraded"), "body: {}", h.body);
+                assert!(!h.body.contains("permanent"),
+                        "budgeted outage must not be permanent: {}",
+                        h.body);
+                if h.body.contains("recovering") {
+                    saw_recovering = true;
+                }
+                let r = post_classify(addr, &[0.0; 4]);
+                assert!([200, 429, 502, 504].contains(&r.status),
+                        "no hang, no garbage during the outage: {} ({})",
+                        r.status, r.body);
+            }
+            200 => {
+                healed = true;
+                break;
+            }
+            other => panic!("healthz returned {other}: {}", h.body),
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(saw_recovering,
+            "/healthz never reported mode=recovering during the outage");
+    assert!(healed, "server never healed within 10s");
+
+    // healed: traffic flows and the restart shows up in /metrics
+    assert_eq!(post_classify(addr, &[1.0; 4]).status, 200);
+    let m = get(addr, "/metrics");
+    let restarts: u64 = m.body.lines()
+        .find_map(|l| l.strip_prefix("cat_replica_restarts_total "))
+        .expect("cat_replica_restarts_total exported")
+        .parse()
+        .expect("restart counter value");
+    assert!(restarts >= 1, "metrics: {}", m.body);
+    assert!(m.body.contains("cat_replica_up{model=\"m\",replica=\"0\"} 1"),
+            "revived replica must be up: {}", m.body);
+    assert!(m.body.contains(
+        "cat_replica_state{model=\"m\",replica=\"0\",state=\"live\"} 1"),
+            "revived replica must be Live: {}", m.body);
+    assert!(m.body.contains("cat_recovery_time_us_count"),
+            "recovery histogram must be exported: {}", m.body);
     stop_stack(http, server);
 }
 

@@ -6,17 +6,25 @@
 //! server produces **bit-identical** logits to an unsharded server on
 //! the same `(config, seed)` and the same hermetic eval inputs, and
 //! steady-state sharded traffic spawns zero threads.
+//!
+//! Supervision (DESIGN.md §12) is pinned here too: a killed sharded
+//! replica respawns without leaking pool threads, and a crash-looping
+//! replica that exhausts its restart budget degrades to permanent-dead
+//! instead of flapping forever.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex, OnceLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use cat::coordinator::{aggregate_stats, BatchExecutor, ExecutorFactory,
-                       ServeError, ServeOptions, Server, WorkerSpec};
+use cat::coordinator::{aggregate_stats, BatchExecutor, default_factory,
+                       ExecutorFactory, ReplicaPhase, ServeError,
+                       ServeHandle, ServeOptions, Server, StatsHandle,
+                       WorkerSpec};
 use cat::data::ShapeDataset;
 use cat::native::pool;
 use cat::runtime::Backend;
+use cat::serve::fault::{injected_factory, FaultPlan};
 use cat::tensor::HostTensor;
 use cat::Result;
 
@@ -274,6 +282,9 @@ fn dead_worker_propagates_error_and_never_hangs() {
             Err(ServeError::Busy { retry_after }) => {
                 std::thread::sleep(retry_after);
             }
+            Err(ServeError::DeadlineExceeded) => {
+                unreachable!("no deadline was set on this request")
+            }
         }
     }
     assert!(saw_no_live_replicas,
@@ -346,5 +357,214 @@ fn health_monitor_pings_replicas() {
     let router = server.router_stats();
     assert!(router.pings_ok >= 2,
             "monitor should have pinged both replicas by now: {router:?}");
+    server.shutdown();
+}
+
+/// Poll until every replica is alive and readmitted to dispatch
+/// (phase `Live`), or give up after `patience`.
+fn await_all_live(stats: &StatsHandle, patience: Duration) -> bool {
+    let deadline = Instant::now() + patience;
+    while Instant::now() < deadline {
+        if stats.replicas().iter()
+            .all(|r| r.alive && r.phase == ReplicaPhase::Live)
+        {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    false
+}
+
+/// Retry through the transient errors of a recovery window (Busy
+/// backpressure, a request lost to a dying worker) until the request
+/// is served; panics on anything terminal.
+fn infer_retrying(handle: &ServeHandle, model: &str, input: HostTensor)
+                  -> HostTensor {
+    for _ in 0..100 {
+        match handle.try_infer(model, input.clone()) {
+            Ok(row) => return row,
+            Err(ServeError::Busy { retry_after }) => {
+                std::thread::sleep(retry_after);
+            }
+            Err(ServeError::Failed(msg))
+                if msg.contains("worker dropped") =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("unexpected serving error: {e}"),
+        }
+    }
+    panic!("request not served within 100 attempts");
+}
+
+/// Self-healing on the sharded topology (DESIGN.md §12): a killed
+/// replica is respawned through the same factory, walks probation back
+/// into dispatch, and the rebuilt dedicated shard pools then serve
+/// steady-state traffic without spawning any further threads — the
+/// teardown/rebuild cycle must not leak.
+#[test]
+fn sharded_replica_respawn_keeps_pools_flat() {
+    let _guard = server_lock();
+    let plan = FaultPlan::new();
+    let factory = injected_factory(
+        &plan, default_factory(PathBuf::from("no_artifacts")));
+    let opts = ServeOptions {
+        health_every: Duration::from_millis(20),
+        restart_budget: 4,
+        restart_base: Duration::from_millis(10),
+        ..native_opts(2, 2)
+    };
+    let specs = vec![WorkerSpec { model: "heal".into(), params: None,
+                                  seed: 3 }];
+    let server = Server::spawn_with(PathBuf::from("no_artifacts"), specs,
+                                    opts, Some(factory))
+        .expect("supervised sharded server");
+    let handle = server.handle();
+    let stats = server.stats_handle();
+    let ds = ShapeDataset::new(11);
+    for i in 0..4 {
+        handle.infer("heal", sample_input(&ds, i)).expect("warmup");
+    }
+
+    // kill whichever replica serves the next batch; the in-flight
+    // request fails terminally (its input died with the worker)
+    plan.kill_next();
+    let mut killed = false;
+    for i in 0..50 {
+        match handle.try_infer("heal", sample_input(&ds, 50 + i)) {
+            Ok(_) => {}
+            Err(ServeError::Failed(_)) => {
+                killed = true;
+                break;
+            }
+            Err(ServeError::Busy { retry_after }) => {
+                std::thread::sleep(retry_after);
+            }
+            Err(e) => panic!("unexpected error during the kill: {e}"),
+        }
+    }
+    assert!(killed, "kill_next never reached a worker");
+    assert!(await_all_live(&stats, Duration::from_secs(10)),
+            "killed replica was not respawned and readmitted in time");
+
+    // post-recovery warmup, then the flatness measurement: the
+    // respawned replica's dedicated pools were built at respawn, so
+    // serving must not spawn anything further
+    for i in 0..8 {
+        infer_retrying(&handle, "heal", sample_input(&ds, 100 + i));
+    }
+    let before = pool::stats();
+    for i in 0..32 {
+        infer_retrying(&handle, "heal", sample_input(&ds, 200 + i));
+    }
+    let after = pool::stats();
+    assert_eq!(after.threads_spawned, before.threads_spawned,
+               "steady-state traffic after recovery spawned global-pool \
+                threads");
+    assert_eq!(after.dedicated_threads_spawned,
+               before.dedicated_threads_spawned,
+               "steady-state traffic after recovery spawned \
+                dedicated-pool threads");
+
+    let router = server.router_stats();
+    assert!(router.replicas_died >= 1, "the kill was never detected");
+    assert!(router.replicas_restarted >= 1,
+            "the supervisor never respawned the killed replica");
+    assert!(stats.recovery_latency().count() >= 1,
+            "time-to-recovery must be recorded: {router:?}");
+    drop(handle);
+    let worker_stats = server.shutdown();
+    assert_eq!(worker_stats.len(), 2,
+               "survivor and respawned worker both drain stats");
+}
+
+/// Crash-loops on every dispatched batch: the supervisor's worst case.
+struct AlwaysPanic;
+
+impl BatchExecutor for AlwaysPanic {
+    fn max_batch(&self) -> usize {
+        1
+    }
+
+    fn infer_batch(&self, _inputs: &[&HostTensor])
+                   -> Result<Vec<HostTensor>> {
+        panic!("crash loop");
+    }
+}
+
+/// Budget exhaustion degrades to permanent-dead (DESIGN.md §12): a
+/// replica that dies on every batch burns its whole restart budget and
+/// is then terminally dead — no further respawns, requests answered
+/// "no live replicas" immediately, and `/healthz` reports permanent
+/// (not recovering) degradation. Every request during the crash loop
+/// is answered; none may hang.
+#[test]
+fn exhausted_restart_budget_degrades_to_permanent_dead() {
+    let _guard = server_lock();
+    let factory: ExecutorFactory = Arc::new(|_spec: &WorkerSpec,
+                                             _opts: &ServeOptions| {
+        Ok(Box::new(AlwaysPanic) as Box<dyn BatchExecutor>)
+    });
+    let opts = ServeOptions {
+        health_every: Duration::from_millis(10),
+        restart_budget: 2,
+        restart_base: Duration::from_millis(5),
+        ..native_opts(1, 1)
+    };
+    let specs = vec![WorkerSpec { model: "crashy".into(), params: None,
+                                  seed: 0 }];
+    let server = Server::spawn_with(PathBuf::from("no_artifacts"), specs,
+                                    opts, Some(factory))
+        .expect("crash-looping server");
+    let handle = server.handle();
+    let stats = server.stats_handle();
+
+    // every dispatched request kills the worker again; keep offering
+    // traffic until the budget is spent. During backoff windows the
+    // lone replica is down, so "no live replicas" is a legitimate
+    // *transient* answer here — permanence is decided by the replica
+    // phase, not the error string.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while !stats.degraded_permanent() && Instant::now() < deadline {
+        let input = HostTensor::f32(vec![1], vec![0.0]).expect("input");
+        match handle.try_infer("crashy", input) {
+            Ok(_) => panic!("a crash-looping executor served a request"),
+            Err(ServeError::Busy { retry_after }) => {
+                std::thread::sleep(
+                    retry_after.min(Duration::from_millis(10)));
+            }
+            Err(ServeError::Failed(_)) => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => panic!("unexpected serving error: {e}"),
+        }
+    }
+    assert!(stats.degraded_permanent(),
+            "restart budget exhaustion never became permanent");
+    assert!(!stats.degraded_recovering(),
+            "a terminally dead replica must not read as recovering");
+
+    // terminal behaviour is the pre-supervision one: immediate Failed
+    let input = HostTensor::f32(vec![1], vec![0.0]).expect("input");
+    match handle.try_infer("crashy", input) {
+        Err(ServeError::Failed(msg)) => {
+            assert!(msg.contains("no live replicas"),
+                    "unhelpful terminal error: {msg}");
+        }
+        other => panic!("terminally dead replica must fail terminally, \
+                         got {other:?}"),
+    }
+
+    let snap = stats.replicas();
+    assert_eq!(snap.len(), 1);
+    assert!(!snap[0].alive);
+    assert_eq!(snap[0].phase, ReplicaPhase::Dead);
+    assert_eq!(snap[0].restarts, 2,
+               "a budget of 2 buys exactly two respawns");
+    let router = server.router_stats();
+    assert_eq!(router.replicas_restarted, 2);
+    assert!(router.replicas_died >= 3,
+            "initial death plus one per respawn: {router:?}");
+    drop(handle);
     server.shutdown();
 }

@@ -14,6 +14,8 @@ use cat::coordinator::{ServeOptions, Server};
 use cat::data::ShapeDataset;
 use cat::json::Json;
 use cat::metrics::LatencyHistogram;
+use cat::obs::trace::stage_snapshots;
+use cat::obs::FlightRecorder;
 use cat::runtime::Backend;
 use cat::serve::routes::AppState;
 use cat::serve::{HttpCounters, HttpServer, HttpServerConfig};
@@ -64,6 +66,9 @@ fn main() {
         model: "http_bench".to_string(),
         input_shape: vec![3, 32, 32],
         request_timeout: Duration::from_secs(30),
+        recorder: FlightRecorder::new(
+            cat::obs::recorder::DEFAULT_CAPACITY),
+        slow_request: Duration::ZERO,
     };
     let stats = state.stats.clone();
     let http_counters = state.http.clone();
@@ -180,6 +185,20 @@ fn main() {
             ("replicas_died".into(),
              Json::Num(router.replicas_died as f64)),
         ])),
+        // where the wall time went: per-stage attribution over the
+        // whole bench run (same histograms /metrics exports)
+        ("stages".into(), Json::Obj(
+            stage_snapshots().iter().map(|(stage, snap)| {
+                (stage.as_str().to_string(), Json::Obj(vec![
+                    ("count".into(), Json::Num(snap.count as f64)),
+                    ("sum_us".into(), Json::Num(snap.sum_us as f64)),
+                    ("mean_us".into(), Json::Num(snap.mean_us())),
+                    ("p50_us".into(),
+                     Json::Num(snap.quantile_us(0.5) as f64)),
+                    ("p99_us".into(),
+                     Json::Num(snap.quantile_us(0.99) as f64)),
+                ]))
+            }).collect())),
     ]);
 
     http.shutdown();

@@ -37,6 +37,11 @@ pub fn bench_args(bench: &str, switches: &[&str], valued: &[&str])
                   -> crate::cli::Args {
     let mut known: Vec<&str> = switches.to_vec();
     known.push("bench");
+    // benches are interactive tools: default their log level to info so
+    // harness progress banners stay visible (CAT_LOG still wins)
+    if std::env::var_os("CAT_LOG").is_none() {
+        crate::obs::log::set_level(crate::obs::log::Level::Info);
+    }
     let parsed = crate::cli::parse(valued)
         .and_then(|a| a.expect_no_unknown(&known, valued).map(|()| a));
     match parsed {

@@ -617,6 +617,7 @@ mod tests {
             input: HostTensor::scalar_f32(0.0),
             resp: tx,
             enqueued: Instant::now(),
+            timing: None,
         };
         (req, rx)
     }

@@ -55,6 +55,7 @@ use super::shard::{ShardStatsSnapshot, ShardedNativeModel};
 use super::supervisor::{supervisor_loop, SupervisedSlot, Supervisor};
 use crate::metrics::{lock_recovering, LatencyHistogram};
 use crate::native::{NativeCatModel, NativeVitConfig};
+use crate::obs::trace::{self as obs_trace, Stage, StageCells};
 use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use crate::Result;
@@ -103,6 +104,11 @@ pub struct InferRequest {
     pub input: HostTensor,
     pub resp: SyncSender<std::result::Result<HostTensor, Rejection>>,
     pub enqueued: Instant,
+    /// Optional per-request stage timing cells (DESIGN.md §13): the
+    /// worker that executes this request fills in queue-wait and
+    /// kernel-stage durations for the tracing HTTP layer. `None` for
+    /// untraced callers — the worker then skips attribution entirely.
+    pub timing: Option<Arc<StageCells>>,
 }
 
 /// Client handle to the router (cheap to clone, thread-safe).
@@ -134,7 +140,7 @@ impl ServeHandle {
     /// Blocks only for the actual inference once the request is queued.
     pub fn try_infer(&self, model: &str, input: HostTensor)
                      -> std::result::Result<HostTensor, ServeError> {
-        self.try_infer_keep(model, input, None).map_err(|(e, _)| e)
+        self.try_infer_keep(model, input, None, None).map_err(|(e, _)| e)
     }
 
     /// [`Self::try_infer`], but rejections that still own the input
@@ -144,7 +150,8 @@ impl ServeHandle {
     /// may still complete server-side; its response is discarded when
     /// the channel drops).
     fn try_infer_keep(&self, model: &str, input: HostTensor,
-                      deadline: Option<Instant>)
+                      deadline: Option<Instant>,
+                      timing: Option<Arc<StageCells>>)
                       -> std::result::Result<HostTensor,
                                              (ServeError,
                                               Option<HostTensor>)> {
@@ -159,6 +166,7 @@ impl ServeHandle {
             input,
             resp: tx,
             enqueued: Instant::now(),
+            timing,
         };
         match self.tx.try_send(req) {
             Ok(()) => {}
@@ -212,7 +220,7 @@ impl ServeHandle {
                 .start(next_backoff_seed());
         let mut input = input;
         loop {
-            match self.try_infer_keep(model, input, None) {
+            match self.try_infer_keep(model, input, None, None) {
                 Ok(row) => return Ok(row),
                 Err((ServeError::Busy { retry_after }, Some(returned))) => {
                     match backoff.next_delay(Some(retry_after)) {
@@ -242,12 +250,26 @@ impl ServeHandle {
     pub fn infer_deadline(&self, model: &str, input: HostTensor,
                           deadline: Instant)
                           -> std::result::Result<HostTensor, ServeError> {
+        self.infer_deadline_traced(model, input, deadline, None)
+    }
+
+    /// [`Self::infer_deadline`] with per-request stage attribution: the
+    /// executing worker fills `timing` (queue wait + kernel stages)
+    /// before the response is sent, so the HTTP layer can fold the
+    /// durations into the request's trace. The cells survive `Busy`
+    /// retries — only the attempt that is actually executed writes them.
+    pub fn infer_deadline_traced(&self, model: &str, input: HostTensor,
+                                 deadline: Instant,
+                                 timing: Option<Arc<StageCells>>)
+                                 -> std::result::Result<HostTensor,
+                                                        ServeError> {
         let budget = deadline.saturating_duration_since(Instant::now());
         let mut backoff = BackoffPolicy::serving(self.retry_after, budget)
             .start(next_backoff_seed());
         let mut input = input;
         loop {
-            match self.try_infer_keep(model, input, Some(deadline)) {
+            match self.try_infer_keep(model, input, Some(deadline),
+                                      timing.clone()) {
                 Ok(row) => return Ok(row),
                 Err((ServeError::Busy { retry_after }, Some(returned))) => {
                     match backoff.next_delay(Some(retry_after)) {
@@ -831,15 +853,18 @@ struct NativeWorker {
 /// by the unsharded and sharded native executors).
 fn assemble_images(cfg: &NativeVitConfig, inputs: &[&HostTensor],
                    data: &mut Vec<f32>) -> Result<()> {
-    let row_shape = [cfg.n_channels, cfg.image_size, cfg.image_size];
-    data.clear();
-    for t in inputs {
-        if t.shape != row_shape {
-            bail!("request shape {:?} != expected {:?}", t.shape, row_shape);
+    obs_trace::section(Stage::BatchAssembly, || {
+        let row_shape = [cfg.n_channels, cfg.image_size, cfg.image_size];
+        data.clear();
+        for t in inputs {
+            if t.shape != row_shape {
+                bail!("request shape {:?} != expected {:?}",
+                      t.shape, row_shape);
+            }
+            data.extend_from_slice(t.as_f32()?);
         }
-        data.extend_from_slice(t.as_f32()?);
-    }
-    Ok(())
+        Ok(())
+    })
 }
 
 impl BatchExecutor for NativeWorker {
@@ -1141,8 +1166,33 @@ fn flush(exec: &dyn BatchExecutor, batcher: &mut DynamicBatcher<InferRequest>,
     let pending = batcher.take(n);
     let inputs: Vec<&HostTensor> =
         pending.iter().map(|p| &p.payload.input).collect();
+    let ns_before = obs_trace::thread_stage_ns();
+    let t_exec = Instant::now();
     let result = catch_unwind(AssertUnwindSafe(|| exec.infer_batch(&inputs)));
+    let ns_after = obs_trace::thread_stage_ns();
     drop(inputs);
+    // Attribute queue wait plus the batch's kernel-stage time to every
+    // traced request: each request waited for the whole batch, so the
+    // batch-wide stage durations still sum within its own wall time.
+    // (Sharded shards time fft/matmul on their own threads; those land
+    // in the global stage histograms and fold into this thread's
+    // scatter/gather deltas here.)
+    for p in &pending {
+        let wait_us = t_exec
+            .saturating_duration_since(p.payload.enqueued)
+            .as_micros() as u64;
+        obs_trace::record_stage_us(Stage::QueueWait, wait_us);
+        if let Some(cells) = &p.payload.timing {
+            cells.add_us(Stage::QueueWait, wait_us);
+            for stage in Stage::all() {
+                let i = stage.index();
+                let d_us = ns_after[i].saturating_sub(ns_before[i]) / 1_000;
+                if d_us > 0 {
+                    cells.add_us(stage, d_us);
+                }
+            }
+        }
+    }
     let result = match result {
         Ok(r) => r,
         Err(payload) => {

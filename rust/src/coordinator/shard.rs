@@ -49,6 +49,7 @@ use anyhow::ensure;
 
 use crate::native::pool::{self, CountGuard, Latch, Pool};
 use crate::native::{CatLayer, NativeCatModel, NativeVitConfig};
+use crate::obs::trace::{self as obs_trace, Stage};
 use crate::Result;
 
 /// One shard's erased scatter job (see module docs for why 'static).
@@ -269,56 +270,65 @@ impl ShardedNativeModel {
 
         self.counters.scatters.fetch_add(1, Ordering::Relaxed);
         let latch = Arc::new(Latch::new(k));
-        for ((layer, worker), out) in self.slices.iter()
-            .map(|layers| &layers[li])
-            .zip(&self.workers)
-            .zip(outs.iter_mut())
-        {
-            let ws = layer.width();
-            let dst = &mut out[..b * n * ws];
-            let guard_latch = latch.clone();
-            let job = Box::new(move || {
-                let _guard = CountGuard::new(guard_latch);
-                // the slice layer re-validates shapes; a failure here is
-                // a construction bug, and the panic is surfaced to the
-                // caller through the latch flag below
-                layer.forward_into(x, b, n, mode, dst)
-                    .expect("shard mixer forward");
-            });
-            // SAFETY: same discipline as pool::Pool::run_scoped — the
-            // latch.wait() below blocks this frame until every job has
-            // completed or unwound (CountGuard fires in both cases), so
-            // the borrows of `x`, `dst`, and the slice layer never
-            // outlive this call even though the channel stores the job
-            // as 'static. The job moves to exactly one dispatch thread.
-            let job: ShardJob = unsafe { erase_job(job) };
-            self.counters.jobs.fetch_add(1, Ordering::Relaxed);
-            match worker.tx.as_ref().expect("live worker tx").send(job) {
-                Ok(()) => {}
-                Err(send_err) => {
-                    // dispatch thread is gone: run the job inline so the
-                    // request still completes (and the latch still
-                    // counts down via the job's own guard)
-                    self.counters.inline_fallbacks
-                        .fetch_add(1, Ordering::Relaxed);
-                    (send_err.0)();
+        // traced as `scatter` on the driving replica thread: fan-out plus
+        // the wait for every shard's mixer compute (the shard-side fft/
+        // matmul sections land on the shard threads' own accumulators
+        // and the global stage histograms — DESIGN.md §13)
+        obs_trace::section(Stage::Scatter, || {
+            for ((layer, worker), out) in self.slices.iter()
+                .map(|layers| &layers[li])
+                .zip(&self.workers)
+                .zip(outs.iter_mut())
+            {
+                let ws = layer.width();
+                let dst = &mut out[..b * n * ws];
+                let guard_latch = latch.clone();
+                let job = Box::new(move || {
+                    let _guard = CountGuard::new(guard_latch);
+                    // the slice layer re-validates shapes; a failure here
+                    // is a construction bug, and the panic is surfaced to
+                    // the caller through the latch flag below
+                    layer.forward_into(x, b, n, mode, dst)
+                        .expect("shard mixer forward");
+                });
+                // SAFETY: same discipline as pool::Pool::run_scoped — the
+                // latch.wait() below blocks this frame until every job has
+                // completed or unwound (CountGuard fires in both cases),
+                // so the borrows of `x`, `dst`, and the slice layer never
+                // outlive this call even though the channel stores the job
+                // as 'static. The job moves to exactly one dispatch
+                // thread.
+                let job: ShardJob = unsafe { erase_job(job) };
+                self.counters.jobs.fetch_add(1, Ordering::Relaxed);
+                match worker.tx.as_ref().expect("live worker tx").send(job) {
+                    Ok(()) => {}
+                    Err(send_err) => {
+                        // dispatch thread is gone: run the job inline so
+                        // the request still completes (and the latch still
+                        // counts down via the job's own guard)
+                        self.counters.inline_fallbacks
+                            .fetch_add(1, Ordering::Relaxed);
+                        (send_err.0)();
+                    }
                 }
             }
-        }
-        latch.wait();
+            latch.wait();
+        });
         ensure!(!latch.panicked(),
                 "block {li}: a model shard panicked during the mixer \
                  scatter");
 
         // gather: concat each shard's head columns into (b, n, d)
-        for (&(h0, h1), out) in self.ranges.iter().zip(outs.iter()) {
-            let ws = (h1 - h0) * dh;
-            let c0 = h0 * dh;
-            for row in 0..b * n {
-                mixed[row * d + c0..row * d + c0 + ws]
-                    .copy_from_slice(&out[row * ws..(row + 1) * ws]);
+        obs_trace::section(Stage::Gather, || {
+            for (&(h0, h1), out) in self.ranges.iter().zip(outs.iter()) {
+                let ws = (h1 - h0) * dh;
+                let c0 = h0 * dh;
+                for row in 0..b * n {
+                    mixed[row * d + c0..row * d + c0 + ws]
+                        .copy_from_slice(&out[row * ws..(row + 1) * ws]);
+                }
             }
-        }
+        });
         self.counters.gathers.fetch_add(1, Ordering::Relaxed);
         Ok(())
     }

@@ -53,6 +53,7 @@ use super::router::{ReplicaPhase, ReplicaSlot, RouterCounters};
 use super::server::{worker_loop, ExecutorFactory, LiveCounters,
                     ServeOptions, WorkerSpec, WorkerStats};
 use crate::metrics::lock_recovering;
+use crate::obs::log::{self as obs_log, Level};
 use crate::Result;
 
 /// Everything the supervisor needs to rebuild one replica: its routing
@@ -138,8 +139,16 @@ pub(crate) fn supervisor_loop(sup: Supervisor)
                 if state.phase() == ReplicaPhase::Live {
                     // probation served: the outage is over
                     if let Some(t0) = w.died_at.take() {
-                        lock_recovering(&sup.counters.recovery)
-                            .record(t0.elapsed());
+                        let dt = t0.elapsed();
+                        lock_recovering(&sup.counters.recovery).record(dt);
+                        obs_log::log_fields(
+                            Level::Info, "supervisor",
+                            "replica readmitted after probation",
+                            &[("replica", &s.replica.to_string()),
+                              ("model", &s.spec.model),
+                              ("epoch", &state.restarts().to_string()),
+                              ("recovery_ms",
+                               &dt.as_millis().to_string())]);
                     }
                     w.awaiting_live = false;
                     w.backoff = None; // next outage gets a fresh schedule
@@ -157,12 +166,27 @@ pub(crate) fn supervisor_loop(sup: Supervisor)
             // replica is down
             if w.died_at.is_none() {
                 w.died_at = Some(Instant::now());
+                obs_log::log_fields(
+                    Level::Warn, "supervisor", "replica death observed",
+                    &[("replica", &s.replica.to_string()),
+                      ("model", &s.spec.model),
+                      ("epoch", &state.restarts().to_string()),
+                      ("restarts_remaining",
+                       &sup.opts.restart_budget
+                            .saturating_sub(w.attempts).to_string())]);
             }
             match w.resume_at {
                 None => {
                     if w.attempts >= sup.opts.restart_budget {
                         state.mark_exhausted();
                         w.exhausted = true;
+                        obs_log::log_fields(
+                            Level::Error, "supervisor",
+                            "restart budget exhausted; replica is \
+                             terminally dead",
+                            &[("replica", &s.replica.to_string()),
+                              ("model", &s.spec.model),
+                              ("attempts", &w.attempts.to_string())]);
                         continue;
                     }
                     let b = w.backoff.get_or_insert_with(|| {
@@ -173,6 +197,12 @@ pub(crate) fn supervisor_loop(sup: Supervisor)
                         .unwrap_or(Duration::from_secs(2));
                     state.mark_backoff();
                     w.resume_at = Some(Instant::now() + delay);
+                    obs_log::log_fields(
+                        Level::Debug, "supervisor", "respawn scheduled",
+                        &[("replica", &s.replica.to_string()),
+                          ("model", &s.spec.model),
+                          ("delay_ms", &delay.as_millis().to_string()),
+                          ("attempt", &(w.attempts + 1).to_string())]);
                 }
                 Some(at) if Instant::now() >= at => {
                     w.resume_at = None;
@@ -184,11 +214,28 @@ pub(crate) fn supervisor_loop(sup: Supervisor)
                             sup.counters.replicas_restarted
                                 .fetch_add(1, Ordering::Relaxed);
                             w.awaiting_live = true;
+                            obs_log::log_fields(
+                                Level::Info, "supervisor",
+                                "replica respawned; entering probation",
+                                &[("replica", &s.replica.to_string()),
+                                  ("model", &s.spec.model),
+                                  ("epoch", &state.restarts().to_string()),
+                                  ("restarts_remaining",
+                                   &sup.opts.restart_budget
+                                        .saturating_sub(w.attempts)
+                                        .to_string())]);
                         }
-                        Err(_) => {
+                        Err(e) => {
                             // factory refused (or the thread died in
                             // startup): the attempt is spent; the next
                             // tick schedules the grown backoff delay
+                            obs_log::log_fields(
+                                Level::Warn, "supervisor",
+                                "respawn attempt failed",
+                                &[("replica", &s.replica.to_string()),
+                                  ("model", &s.spec.model),
+                                  ("attempt", &w.attempts.to_string()),
+                                  ("error", &format!("{e:#}"))]);
                         }
                     }
                 }

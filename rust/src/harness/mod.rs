@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 
 use crate::native::{TaskKind, TrainConfig};
+use crate::obs::log::{self as obs_log, Level};
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
 use crate::train::{native_spec, run_training, NativeTrainer, Schedule,
@@ -184,7 +185,10 @@ pub fn run_native_cfgs(grid: &[(String, TrainConfig, Option<&str>)],
                        -> Result<Vec<Row>> {
     let mut rows = Vec::with_capacity(grid.len());
     for (label, cfg, paper_key) in grid {
-        eprintln!("=== {label} ({steps} steps, native) ===");
+        obs_log::log_fields(Level::Info, "harness", "grid entry",
+                            &[("config", label),
+                              ("steps", &steps.to_string()),
+                              ("backend", "native")]);
         rows.push(run_native_cfg(label, *cfg, *paper_key, steps, seed,
                                  eval_batches)?);
     }
@@ -222,7 +226,8 @@ pub fn write_bench_json(path: &str, bench: &str, smoke: bool, steps: u64,
         ("rows".into(), rows_to_json(rows)),
     ]);
     std::fs::write(path, out.to_string_pretty())?;
-    eprintln!("results -> {path}");
+    obs_log::log_fields(Level::Info, "harness", "results written",
+                        &[("path", path), ("bench", bench)]);
     Ok(())
 }
 
@@ -271,7 +276,10 @@ pub fn run_grid(rt: &Runtime, names: &[String], steps: u64, seed: u64,
                 eval_batches: u64) -> Result<Vec<Row>> {
     let mut rows = Vec::with_capacity(names.len());
     for name in names {
-        eprintln!("=== {name} ({steps} steps) ===");
+        obs_log::log_fields(Level::Info, "harness", "grid entry",
+                            &[("config", name),
+                              ("steps", &steps.to_string()),
+                              ("backend", "pjrt")]);
         rows.push(run_one(rt, name, steps, seed, eval_batches)?);
     }
     Ok(rows)

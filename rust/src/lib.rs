@@ -37,6 +37,7 @@ pub mod harness;
 pub mod json;
 pub mod metrics;
 pub mod native;
+pub mod obs;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

@@ -26,6 +26,7 @@ use cat::cli;
 use cat::complexity::{crossover_n, layer_cost, Mechanism};
 use cat::coordinator::{ServeOptions, Server};
 use cat::data::ShapeDataset;
+use cat::obs::log::{self as obs_log, Level};
 use cat::runtime::Backend;
 use cat::tensor::HostTensor;
 use cat::train::{native_specs, run_training, NativeTrainer, Schedule,
@@ -66,12 +67,21 @@ commands:
                [--restart-budget N] dead replicas are respawned by the
                supervisor (jittered backoff + probation) up to N times
                each; 0 (default) disables self-healing — DESIGN.md §12
+               observability (DESIGN.md §13): every HTTP request is
+               traced (X-Request-Id echoed, per-stage spans); GET
+               /debug/traces and /debug/slowest dump the flight
+               recorder; [--slow-request-ms MS] logs requests slower
+               than MS with their span breakdown (default 1000, 0 off)
   table1       [--fast] [--steps N] [--json PATH]    (Table 1)  [pjrt]
   table2       [--fast] [--steps N] [--json PATH]    (Table 2)  [pjrt]
   table3       [--steps N] [--json PATH]   (Table 3 / Fig 2)    [pjrt]
   complexity                                          (paper Fig 1)
   validate     [--deep]   check manifest/artifact consistency   [pjrt]
 global: --artifacts DIR (or env CAT_ARTIFACTS)
+        --log-level error|warn|info|debug (or env CAT_LOG; default warn)
+        --log-json  structured JSON-lines logs on stderr
+        train extra: [--metrics-out PATH] append per-step training
+        metrics as JSON lines (step/loss/lr, evals, final summary)
 [pjrt] commands need a build with `--features pjrt` + `make artifacts`;
 serve/train/list/complexity run hermetically on the native backend
 (hermetic table runs: `cargo bench --bench table1_imagenet` etc.).";
@@ -82,7 +92,8 @@ const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "replicas", "listen", "max-conns",
                           "request-timeout-ms", "queue-depth",
                           "drain-timeout-ms", "fault-delay-ms",
-                          "restart-budget"];
+                          "restart-budget", "slow-request-ms",
+                          "log-level", "metrics-out"];
 
 fn main() {
     if let Err(e) = run() {
@@ -96,6 +107,16 @@ fn run() -> cat::Result<()> {
     let args = cli::parse(VALUED)?;
     if let Some(dir) = args.get("artifacts") {
         std::env::set_var("CAT_ARTIFACTS", dir);
+    }
+    // explicit flags beat the CAT_LOG env (obs::log lazily reads the
+    // env on first use; a set_level/set_json here wins that race)
+    if let Some(lv) = args.get("log-level") {
+        let level = Level::parse(lv).ok_or_else(|| anyhow::anyhow!(
+            "unknown log level '{lv}' (expected error|warn|info|debug)"))?;
+        obs_log::set_level(level);
+    }
+    if args.has("log-json") {
+        obs_log::set_json(true);
     }
     let cmd = args.expect_command(
         &["list", "train", "eval", "serve", "table1", "table2", "table3",
@@ -193,12 +214,18 @@ fn cmd_train_native(args: &cli::Args) -> cat::Result<()> {
     let lr: f32 = args.parse_or("lr", 1e-3)?;
     let seed: u64 = args.parse_or("seed", 0)?;
     let mut trainer = NativeTrainer::new(config, seed)?;
-    eprintln!("[train] backend=native config={config} params={}",
-              trainer.param_count());
+    obs_log::log_fields(
+        Level::Info, "train", "native training starting",
+        &[("config", config),
+          ("params", &trainer.param_count().to_string()),
+          ("steps", &steps.to_string())]);
     if let Some(path) = args.get("resume") {
         trainer.load_checkpoint(std::path::Path::new(path))?;
-        eprintln!("[train] resumed from {path} (opt step {}, stream \
-                   cursor {})", trainer.opt_steps(), trainer.cursor());
+        obs_log::log_fields(
+            Level::Info, "train", "resumed from checkpoint",
+            &[("path", path),
+              ("opt_step", &trainer.opt_steps().to_string()),
+              ("cursor", &trainer.cursor().to_string())]);
     }
     // a resumed run re-plans the warmup+cosine schedule over the
     // combined past+new step count and enters it at the checkpoint's
@@ -213,6 +240,7 @@ fn cmd_train_native(args: &cli::Args) -> cat::Result<()> {
         seed,
         eval_every: (steps / 4).max(1),
         eval_batches: args.parse_or("batches", 8)?,
+        metrics_out: args.get("metrics-out").map(std::path::PathBuf::from),
         ..Default::default()
     };
     let report = run_training(&mut trainer, &opts)?;
@@ -325,7 +353,8 @@ fn cmd_table(args: &cli::Args, which: u8) -> cat::Result<()> {
     if let Some(path) = args.get("json") {
         std::fs::write(path,
                        harness::rows_to_json(&rows).to_string_pretty())?;
-        eprintln!("rows -> {path}");
+        obs_log::log_fields(Level::Info, "table", "rows written",
+                            &[("path", path)]);
     }
     Ok(())
 }
@@ -405,14 +434,17 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
                               restart_budget, listen);
     }
 
-    match backend {
-        Backend::Native => eprintln!(
-            "[serve] backend=native model={config} shards={shards} \
-             replicas={replicas} (hermetic demo model: untrained CAT-FFT \
-             ViT, d=64 h=4 L=2)"),
-        Backend::Pjrt => eprintln!(
-            "[serve] backend=pjrt model={config} replicas={replicas}"),
-    }
+    let note = match backend {
+        Backend::Native => "serving hermetic demo model (untrained \
+                            CAT-FFT ViT, d=64 h=4 L=2)",
+        Backend::Pjrt => "serving pjrt model",
+    };
+    obs_log::log_fields(
+        Level::Info, "serve", note,
+        &[("backend", &format!("{backend:?}")),
+          ("model", &config),
+          ("shards", &shards.to_string()),
+          ("replicas", &replicas.to_string())]);
     let opts = ServeOptions { backend, shards, replicas, restart_budget,
                               ..Default::default() };
     let server = Server::spawn(cat::artifacts_dir(), &[config.clone()],
@@ -502,6 +534,7 @@ fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
     let queue_depth: usize = args.parse_or("queue-depth", 256)?;
     let drain_timeout_ms: u64 = args.parse_or("drain-timeout-ms", 5_000)?;
     let fault_delay_ms: u64 = args.parse_or("fault-delay-ms", 0)?;
+    let slow_request_ms: u64 = args.parse_or("slow-request-ms", 1_000)?;
     anyhow::ensure!(max_conns >= 1, "--max-conns must be at least 1");
     anyhow::ensure!(queue_depth >= 1, "--queue-depth must be at least 1");
     anyhow::ensure!(request_timeout_ms >= 1,
@@ -515,8 +548,9 @@ fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
         // which makes 429 backpressure reproducible from the CLI
         let plan = FaultPlan::new();
         plan.set_delay(Duration::from_millis(fault_delay_ms));
-        eprintln!("[serve] fault injection armed: +{fault_delay_ms}ms \
-                   per batch");
+        obs_log::log_fields(
+            Level::Warn, "serve", "fault injection armed",
+            &[("delay_ms", &fault_delay_ms.to_string())]);
         factory = injected_factory(&plan, factory);
     }
     let specs = vec![WorkerSpec { model: config.to_string(),
@@ -531,14 +565,21 @@ fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
         model: config.to_string(),
         input_shape: vec![3, 32, 32],
         request_timeout,
+        recorder: cat::obs::FlightRecorder::new(
+            cat::obs::recorder::DEFAULT_CAPACITY),
+        slow_request: Duration::from_millis(slow_request_ms),
     };
     let mut cfg = HttpServerConfig::new(listen);
     cfg.max_conns = max_conns;
     cfg.request_timeout = request_timeout;
     cfg.drain_timeout = Duration::from_millis(drain_timeout_ms);
     let http = HttpServer::start(cfg, state)?;
-    eprintln!("[serve] backend={backend:?} model={config} \
-               shards={shards} replicas={replicas}; SIGINT drains");
+    obs_log::log_fields(
+        Level::Info, "serve", "http serving; SIGINT drains",
+        &[("backend", &format!("{backend:?}")),
+          ("model", config),
+          ("shards", &shards.to_string()),
+          ("replicas", &replicas.to_string())]);
     // parents (CI smoke, benches) poll stdout for this exact line
     println!("listening on {}", http.addr());
     use std::io::Write as _;
@@ -548,7 +589,7 @@ fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
     while !sigint_received() {
         std::thread::sleep(Duration::from_millis(50));
     }
-    eprintln!("[serve] SIGINT: draining in-flight requests");
+    obs_log::info("serve", "SIGINT: draining in-flight requests");
     // order matters: joining the HTTP layer drops every ServeHandle
     // clone held by connection threads, which Server::shutdown requires
     http.shutdown();
@@ -596,5 +637,5 @@ fn install_sigint_handler() {
 #[cfg(not(unix))]
 fn install_sigint_handler() {
     // no signal plumbing here; the process runs until killed
-    eprintln!("[serve] warning: SIGINT handling is unix-only");
+    obs_log::warn("serve", "SIGINT handling is unix-only");
 }

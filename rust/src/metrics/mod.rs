@@ -158,6 +158,16 @@ impl LatencyHistogram {
         self.max_us = self.max_us.max(us);
     }
 
+    /// Zero every bucket and total, keeping the backing allocation —
+    /// lets a scrape-path scratch histogram be reused per `/metrics`
+    /// render instead of reallocated (DESIGN.md §13).
+    pub fn reset(&mut self) {
+        self.buckets.iter_mut().for_each(|b| *b = 0);
+        self.count = 0;
+        self.sum_us = 0;
+        self.max_us = 0;
+    }
+
     /// Fold another histogram into this one (replica-stats aggregation:
     /// buckets and totals add, max takes the larger).
     pub fn merge(&mut self, other: &LatencyHistogram) {

@@ -41,6 +41,16 @@ pub fn arena_grows() -> u64 {
     GROWS.load(Ordering::Relaxed)
 }
 
+/// Largest single-arena backing store ever reached, in bytes, across
+/// all threads and levels. Only moves when an arena grows, so the
+/// gauge (`cat_arena_high_water_bytes`) is flat at steady state.
+static HIGH_WATER_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// High-water arena size in bytes (see [`HIGH_WATER_BYTES`]).
+pub fn arena_high_water_bytes() -> u64 {
+    HIGH_WATER_BYTES.load(Ordering::Relaxed)
+}
+
 /// A grow-only f32 bump arena. One [`Arena::frame`] call carves the
 /// backing store into disjoint mutable slices for one logical frame.
 #[derive(Default)]
@@ -69,6 +79,9 @@ impl Arena {
         if self.buf.len() < total {
             GROWS.fetch_add(1, Ordering::Relaxed);
             self.buf.resize(total, 0.0);
+            HIGH_WATER_BYTES.fetch_max(
+                (total * std::mem::size_of::<f32>()) as u64,
+                Ordering::Relaxed);
         }
         let mut rest = self.buf.as_mut_slice();
         lens.map(|len| {
@@ -142,6 +155,22 @@ mod tests {
         assert_eq!(arena.capacity(), cap);
         assert_eq!(arena_grows(), before,
                    "same-shape frames must not reallocate");
+    }
+
+    #[test]
+    fn high_water_tracks_largest_frame() {
+        // 4 MiB: larger than any arena the other unit tests build, so
+        // the global max is ours even with tests running in parallel
+        let mut arena = Arena::new();
+        let _ = arena.frame([1 << 20]);
+        let mark = arena_high_water_bytes();
+        assert!(mark >= (1u64 << 22),
+                "high water must cover the largest frame, got {mark}");
+        for _ in 0..10 {
+            let _ = arena.frame([1 << 20]);
+        }
+        assert!(arena_high_water_bytes() >= mark,
+                "high water is monotone");
     }
 
     #[test]

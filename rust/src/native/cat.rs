@@ -36,6 +36,7 @@ use super::arena;
 use super::fft::split_rfft_plan;
 use super::pool;
 use crate::data::Rng;
+use crate::obs::trace::{self as obs_trace, Stage};
 use crate::Result;
 
 /// Which circulant apply computes the mixing contraction.
@@ -289,12 +290,13 @@ impl CatLayer {
                 b * h * f,
             ]);
 
-            self.project(x, b, n, z, zs, v);
+            obs_trace::section(Stage::MixerMatmul,
+                               || self.project(x, b, n, z, zs, v));
 
             // stripe-transpose v: channel c of stripe (bi, head) becomes
             // one contiguous length-n row, the layout rfft_many consumes
-            // directly
-            {
+            // directly (traced as the `scatter` stage, DESIGN.md §13)
+            obs_trace::section(Stage::Scatter, || {
                 let v = &*v;
                 let tasks: Vec<(usize, &mut [f32])> =
                     vt.chunks_mut(dh * n).enumerate().collect();
@@ -307,10 +309,10 @@ impl CatLayer {
                         }
                     }
                 });
-            }
+            });
 
             // softmax each weight row, then one batched rfft per chunk
-            {
+            obs_trace::section(Stage::Fft, || {
                 let tasks: Vec<((&mut [f32], &mut [f32]), &mut [f32])> = zs
                     .chunks_mut(n)
                     .zip(zf_re.chunks_mut(f))
@@ -323,12 +325,12 @@ impl CatLayer {
                         plan.rfft(row, sre, sim, scratch);
                     });
                 });
-            }
+            });
 
             // per-stripe: batched rfft over the dh value rows, conjugate
             // pointwise product with the stripe's weight spectrum, batched
             // irfft back into the stripe in place
-            {
+            obs_trace::section(Stage::Fft, || {
                 let zf_re = &*zf_re;
                 let zf_im = &*zf_im;
                 let tasks: Vec<(usize, &mut [f32])> =
@@ -353,10 +355,10 @@ impl CatLayer {
                         plan.irfft_many(vre, vim, dh, stripe, scratch);
                     });
                 });
-            }
+            });
 
             // un-transpose the stripes into (b, n, w)
-            {
+            obs_trace::section(Stage::Gather, || {
                 let vt = &*vt;
                 let tasks: Vec<(usize, &mut [f32])> =
                     out.chunks_mut(n * w).enumerate().collect();
@@ -372,7 +374,7 @@ impl CatLayer {
                         }
                     }
                 });
-            }
+            });
         });
     }
 
@@ -389,7 +391,8 @@ impl CatLayer {
                 b * n * w,
                 b * n * w,
             ]);
-            self.project(x, b, n, z, zs, v);
+            obs_trace::section(Stage::MixerMatmul,
+                               || self.project(x, b, n, z, zs, v));
             for row in zs.chunks_mut(n) {
                 softmax_in_place(row);
             }
@@ -402,19 +405,22 @@ impl CatLayer {
                 .zip(vh.chunks(n * dh))
                 .zip(oh.chunks_mut(n * dh))
                 .collect();
-            pool::run(tasks, 2 * n * n * dh, |((zc, vc), oc)| {
-                for i in 0..n {
-                    let orow = &mut oc[i * dh..(i + 1) * dh];
-                    orow.fill(0.0);
-                    for k in 0..n {
-                        let w = zc[k];
-                        let j = (i + k) % n;
-                        let vrow = &vc[j * dh..j * dh + dh];
-                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                            *ov += w * vv;
+            // the rolled O(N²) apply is this path's whole mixing stage
+            obs_trace::section(Stage::Gather, || {
+                pool::run(tasks, 2 * n * n * dh, |((zc, vc), oc)| {
+                    for i in 0..n {
+                        let orow = &mut oc[i * dh..(i + 1) * dh];
+                        orow.fill(0.0);
+                        for k in 0..n {
+                            let w = zc[k];
+                            let j = (i + k) % n;
+                            let vrow = &vc[j * dh..j * dh + dh];
+                            for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                                *ov += w * vv;
+                            }
                         }
                     }
-                }
+                });
             });
 
             merge_heads(oh, b, n, h, dh, out);

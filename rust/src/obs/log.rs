@@ -1,0 +1,217 @@
+//! Leveled structured logging for the whole stack (DESIGN.md §13).
+//!
+//! Replaces the ad-hoc `eprintln!` call sites with one funnel:
+//! `error`/`warn`/`info`/`debug` plus a structured-fields variant
+//! ([`log_fields`]) used by the supervisor and the slow-request
+//! auto-logger. Hermetic by construction — writes lines to stderr, no
+//! subscriber registry, no dependencies.
+//!
+//! Configuration, in precedence order:
+//!
+//! 1. `--log-level <error|warn|info|debug>` / `--log-json` on the CLI
+//!    ([`set_level`], [`set_json`]);
+//! 2. the `CAT_LOG` environment variable, a comma list of a level name
+//!    and the `json` token (e.g. `CAT_LOG=debug,json`), read once on
+//!    first use;
+//! 3. default: `warn`, human-readable text (progress chatter stays
+//!    opt-in; benches opt into `info` themselves).
+//!
+//! Text mode emits `[level target] msg k=v ...`; JSON mode emits one
+//! JSON object per line (`ts_ms`, `level`, `target`, `msg`, then one
+//! key per field) built with the in-repo [`crate::json`] writer, so
+//! field values are always correctly escaped.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::Once;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::json::Json;
+
+/// Log severity, most severe first. The active level admits itself and
+/// everything more severe (`Info` admits error/warn/info).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl Level {
+    /// Stable lower-case name (JSON `level` field, `CAT_LOG` values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    /// Parse a level name, case-insensitive. `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+}
+
+/// `u8::MAX` = not yet configured (first log initialises from `CAT_LOG`).
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static JSON_MODE: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        let mut level = Level::Warn;
+        let mut json = false;
+        if let Ok(spec) = std::env::var("CAT_LOG") {
+            for part in spec.split(',') {
+                if part.trim().eq_ignore_ascii_case("json") {
+                    json = true;
+                } else if let Some(l) = Level::parse(part) {
+                    level = l;
+                }
+            }
+        }
+        // an explicit set_level that ran before the first log wins
+        let _ = LEVEL.compare_exchange(u8::MAX, level as u8,
+                                       Ordering::Relaxed, Ordering::Relaxed);
+        if json {
+            JSON_MODE.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Set the active level (the `--log-level` flag; overrides `CAT_LOG`).
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Switch to JSON-lines output (the `--log-json` flag).
+pub fn set_json(json: bool) {
+    JSON_MODE.store(json, Ordering::Relaxed);
+}
+
+/// Would a record at `level` be emitted right now? Callers building
+/// expensive messages should gate on this first.
+pub fn enabled(level: Level) -> bool {
+    let mut current = LEVEL.load(Ordering::Relaxed);
+    if current == u8::MAX {
+        init_from_env();
+        current = LEVEL.load(Ordering::Relaxed);
+    }
+    (level as u8) <= current
+}
+
+fn timestamp_ms() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// Render one record to its final line (text or JSON), without the
+/// trailing newline. Split out so tests can pin both formats without
+/// capturing stderr.
+fn render_line(json_mode: bool, ts_ms: u64, level: Level, target: &str,
+               msg: &str, fields: &[(&str, &str)]) -> String {
+    if json_mode {
+        let mut pairs = vec![
+            ("ts_ms".to_string(), Json::Num(ts_ms as f64)),
+            ("level".to_string(), Json::from(level.as_str())),
+            ("target".to_string(), Json::from(target)),
+            ("msg".to_string(), Json::from(msg)),
+        ];
+        for (k, v) in fields {
+            pairs.push(((*k).to_string(), Json::from(*v)));
+        }
+        Json::Obj(pairs).to_string()
+    } else {
+        let mut line = format!("[{} {}] {}", level.as_str(), target, msg);
+        for (k, v) in fields {
+            line.push(' ');
+            line.push_str(k);
+            line.push('=');
+            line.push_str(v);
+        }
+        line
+    }
+}
+
+/// Emit one record with structured fields. Values are plain strings —
+/// callers format numbers themselves (logging is off the hot path).
+pub fn log_fields(level: Level, target: &str, msg: &str,
+                  fields: &[(&str, &str)]) {
+    if !enabled(level) {
+        return;
+    }
+    let line = render_line(JSON_MODE.load(Ordering::Relaxed),
+                           timestamp_ms(), level, target, msg, fields);
+    let stderr = std::io::stderr();
+    let mut w = stderr.lock();
+    let _ = writeln!(w, "{line}");
+}
+
+pub fn error(target: &str, msg: &str) {
+    log_fields(Level::Error, target, msg, &[]);
+}
+
+pub fn warn(target: &str, msg: &str) {
+    log_fields(Level::Warn, target, msg, &[]);
+}
+
+pub fn info(target: &str, msg: &str) {
+    log_fields(Level::Info, target, msg, &[]);
+}
+
+pub fn debug(target: &str, msg: &str) {
+    log_fields(Level::Debug, target, msg, &[]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_names_round_trip() {
+        for l in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(l.as_str()), Some(l));
+        }
+        assert_eq!(Level::parse("WARNING"), Some(Level::Warn));
+        assert_eq!(Level::parse("verbose"), None);
+    }
+
+    #[test]
+    fn text_line_appends_fields() {
+        let line = render_line(false, 0, Level::Warn, "supervisor",
+                               "replica died",
+                               &[("replica", "2"), ("epoch", "1")]);
+        assert_eq!(line, "[warn supervisor] replica died replica=2 epoch=1");
+    }
+
+    #[test]
+    fn json_line_is_parseable_and_escaped() {
+        let line = render_line(true, 42, Level::Info, "serve",
+                               "slow \"request\"", &[("id", "a\\b")]);
+        let parsed = crate::json::parse(&line).expect("valid JSON line");
+        assert_eq!(parsed.get("ts_ms").unwrap().as_f64().unwrap(), 42.0);
+        assert_eq!(parsed.get("level").unwrap().as_str().unwrap(), "info");
+        assert_eq!(parsed.get("msg").unwrap().as_str().unwrap(),
+                   "slow \"request\"");
+        assert_eq!(parsed.get("id").unwrap().as_str().unwrap(), "a\\b");
+    }
+
+    #[test]
+    fn severity_ordering_matches_admission() {
+        assert!(Level::Error < Level::Debug);
+        // can't assert on the global level (other tests share it), but
+        // the admission rule itself is just an ordering check
+        assert!((Level::Warn as u8) <= (Level::Info as u8));
+    }
+}

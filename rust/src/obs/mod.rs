@@ -1,0 +1,22 @@
+//! Observability subsystem: request tracing, stage-level latency
+//! attribution, a flight recorder, and leveled structured logging
+//! (DESIGN.md §13). Hermetic and zero-dependency, like everything else
+//! in the crate.
+//!
+//! * [`trace`] — request IDs, stage spans, the global per-stage atomic
+//!   histograms behind `cat_stage_duration_us`, and the thread-local
+//!   accumulators that carry kernel time out of `native/cat.rs`;
+//! * [`recorder`] — the lock-striped ring of the last K completed
+//!   traces plus the slowest-since-boot set (`/debug/traces`,
+//!   `/debug/slowest`);
+//! * [`log`] — `error`/`warn`/`info`/`debug` with `CAT_LOG` /
+//!   `--log-level` control and an optional JSON-lines mode;
+//! * [`promlint`] — the test/CI-only Prometheus exposition linter.
+
+pub mod log;
+pub mod promlint;
+pub mod recorder;
+pub mod trace;
+
+pub use recorder::{FlightRecorder, TraceRecord};
+pub use trace::{Span, Stage, StageCells, TraceBuilder};

@@ -1,0 +1,411 @@
+//! In-repo Prometheus text-exposition linter (promtool is unavailable
+//! in the hermetic build). Test/CI-only: `tests/http_serving.rs` and
+//! the CLI smoke run every live `/metrics` scrape through [`lint`];
+//! nothing on the serving path calls this.
+//!
+//! Checks, per the exposition format 0.0.4:
+//!
+//! * every series has `# HELP` and `# TYPE` for its family *before*
+//!   the first sample (histogram `_bucket`/`_sum`/`_count` series
+//!   resolve to their base family);
+//! * metric and label names are well-formed, label values use only the
+//!   legal escapes (`\\`, `\"`, `\n`);
+//! * sample values parse as floats (`+Inf`/`-Inf`/`NaN` allowed);
+//! * histogram buckets are cumulative-monotone in `le` order and end
+//!   with an `+Inf` bucket whose count equals the family's `_count`.
+
+use std::collections::{BTreeMap, HashSet};
+
+/// Lint a full exposition body. `Ok(())` or the first/most-salient
+/// violation, with its line for context.
+pub fn lint(body: &str) -> Result<(), String> {
+    let mut helped: HashSet<String> = HashSet::new();
+    let mut typed: BTreeMap<String, String> = BTreeMap::new();
+    // (family, non-le labels) -> ordered (le, cumulative count)
+    let mut buckets: BTreeMap<(String, String), Vec<(f64, f64)>> =
+        BTreeMap::new();
+    let mut counts: BTreeMap<(String, String), f64> = BTreeMap::new();
+
+    for (ln, raw) in body.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: String| format!("line {}: {msg}: {line}", ln + 1);
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next()
+                .ok_or_else(|| err("HELP without a metric name".into()))?;
+            check_name(name).map_err(err)?;
+            helped.insert(name.to_string());
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut parts = rest.split_whitespace();
+            let name = parts.next()
+                .ok_or_else(|| err("TYPE without a metric name".into()))?;
+            let kind = parts.next()
+                .ok_or_else(|| err("TYPE without a kind".into()))?;
+            check_name(name).map_err(err)?;
+            if !matches!(kind,
+                         "counter" | "gauge" | "histogram" | "summary"
+                         | "untyped") {
+                return Err(err(format!("unknown TYPE kind '{kind}'")));
+            }
+            typed.insert(name.to_string(), kind.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // plain comment
+        }
+
+        let sample = parse_sample(line).map_err(err)?;
+        let family = base_family(&sample.name, &typed);
+        if !helped.contains(&family) {
+            return Err(err(format!(
+                "series for '{family}' before its # HELP")));
+        }
+        let kind = typed.get(&family).ok_or_else(|| {
+            err(format!("series for '{family}' before its # TYPE"))
+        })?;
+        if kind == "histogram" {
+            let key = (family.clone(), sample.labels_without_le());
+            if sample.name.ends_with("_bucket") {
+                let le = sample.label("le").ok_or_else(|| {
+                    err("histogram _bucket without an le label".into())
+                })?;
+                let bound = parse_float(le)
+                    .ok_or_else(|| err(format!("bad le value '{le}'")))?;
+                buckets.entry(key).or_default()
+                    .push((bound, sample.value));
+            } else if sample.name.ends_with("_count") {
+                counts.insert(key, sample.value);
+            } else if !sample.name.ends_with("_sum") {
+                return Err(err(format!(
+                    "histogram family '{family}' has a bare series")));
+            }
+        }
+    }
+
+    for ((family, labels), series) in &buckets {
+        let ctx = if labels.is_empty() {
+            family.clone()
+        } else {
+            format!("{family}{{{labels}}}")
+        };
+        let mut prev_le = f64::NEG_INFINITY;
+        let mut prev_cum = -1.0f64;
+        for &(le, cum) in series {
+            if le <= prev_le {
+                return Err(format!(
+                    "{ctx}: bucket le values not increasing \
+                     ({prev_le} then {le})"));
+            }
+            if cum < prev_cum {
+                return Err(format!(
+                    "{ctx}: cumulative bucket counts decreased \
+                     ({prev_cum} then {cum} at le={le})"));
+            }
+            prev_le = le;
+            prev_cum = cum;
+        }
+        let (last_le, last_cum) = *series.last().expect("non-empty");
+        if !last_le.is_infinite() {
+            return Err(format!("{ctx}: buckets must end at le=\"+Inf\""));
+        }
+        match counts.get(&(family.clone(), labels.clone())) {
+            None => {
+                return Err(format!("{ctx}: histogram without a _count"));
+            }
+            Some(&count) if count != last_cum => {
+                return Err(format!(
+                    "{ctx}: +Inf bucket {last_cum} != _count {count}"));
+            }
+            Some(_) => {}
+        }
+    }
+    Ok(())
+}
+
+struct Sample {
+    name: String,
+    /// `(key, unescaped value)` pairs in series order.
+    labels: Vec<(String, String)>,
+    value: f64,
+}
+
+impl Sample {
+    fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Canonical non-`le` label signature (histogram grouping key).
+    fn labels_without_le(&self) -> String {
+        let mut parts: Vec<String> = self.labels.iter()
+            .filter(|(k, _)| k != "le")
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect();
+        parts.sort();
+        parts.join(",")
+    }
+}
+
+fn check_name(name: &str) -> Result<(), String> {
+    let mut chars = name.chars();
+    let ok_first = chars.next().map_or(false, |c| {
+        c.is_ascii_alphabetic() || c == '_' || c == ':'
+    });
+    if !ok_first
+        || !name.chars().all(|c| {
+            c.is_ascii_alphanumeric() || c == '_' || c == ':'
+        })
+    {
+        return Err(format!("bad metric name '{name}'"));
+    }
+    Ok(())
+}
+
+fn check_label_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.chars().next()
+            .map_or(false, |c| c.is_ascii_alphabetic() || c == '_')
+        && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Histogram child series fold into their base family for HELP/TYPE
+/// lookup; everything else is its own family.
+fn base_family(name: &str, typed: &BTreeMap<String, String>) -> String {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if typed.get(base).map(String::as_str) == Some("histogram") {
+                return base.to_string();
+            }
+        }
+    }
+    name.to_string()
+}
+
+fn parse_float(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" | "Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => s.parse().ok(),
+    }
+}
+
+fn parse_sample(line: &str) -> Result<Sample, String> {
+    let (head, rest) = match line.find('{') {
+        Some(brace) => {
+            let (name, tail) = line.split_at(brace);
+            let close = find_label_close(tail)
+                .ok_or("unterminated label set")?;
+            let labels = parse_labels(&tail[1..close])?;
+            (Sample { name: name.to_string(), labels, value: 0.0 },
+             tail[close + 1..].trim_start())
+        }
+        None => {
+            let mut parts = line.splitn(2, char::is_whitespace);
+            let name = parts.next().unwrap_or_default().to_string();
+            (Sample { name, labels: Vec::new(), value: 0.0 },
+             parts.next().unwrap_or_default().trim_start())
+        }
+    };
+    check_name(&head.name)?;
+    let value_text = rest.split_whitespace().next()
+        .ok_or("sample without a value")?;
+    let value = parse_float(value_text)
+        .ok_or_else(|| format!("bad sample value '{value_text}'"))?;
+    Ok(Sample { value, ..head })
+}
+
+/// Index of the `}` closing the label set, honouring quoted values.
+fn find_label_close(tail: &str) -> Option<usize> {
+    let bytes = tail.as_bytes();
+    let mut in_quotes = false;
+    let mut escaped = false;
+    for (i, &b) in bytes.iter().enumerate().skip(1) {
+        if escaped {
+            escaped = false;
+        } else if in_quotes && b == b'\\' {
+            escaped = true;
+        } else if b == b'"' {
+            in_quotes = !in_quotes;
+        } else if !in_quotes && b == b'}' {
+            return Some(i);
+        }
+    }
+    None
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut rest = body.trim();
+    while !rest.is_empty() {
+        let eq = rest.find('=')
+            .ok_or_else(|| format!("label without '=': '{rest}'"))?;
+        let key = rest[..eq].trim();
+        if !check_label_name(key) {
+            return Err(format!("bad label name '{key}'"));
+        }
+        let after = rest[eq + 1..].trim_start();
+        if !after.starts_with('"') {
+            return Err(format!("label value for '{key}' not quoted"));
+        }
+        let (value, consumed) = unescape_label_value(&after[1..])
+            .map_err(|e| format!("label '{key}': {e}"))?;
+        labels.push((key.to_string(), value));
+        rest = after[1 + consumed..].trim_start();
+        if let Some(stripped) = rest.strip_prefix(',') {
+            rest = stripped.trim_start();
+        } else if !rest.is_empty() {
+            return Err(format!("junk after label value: '{rest}'"));
+        }
+    }
+    Ok(labels)
+}
+
+/// Unescape a quoted label value; returns (value, bytes consumed
+/// including the closing quote). Only `\\`, `\"`, `\n` are legal.
+fn unescape_label_value(s: &str) -> Result<(String, usize), String> {
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((out, i + 1)),
+            '\\' => match chars.next() {
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, '"')) => out.push('"'),
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, other)) => {
+                    return Err(format!("illegal escape '\\{other}'"));
+                }
+                None => return Err("dangling backslash".to_string()),
+            },
+            '\n' => return Err("raw newline in label value".to_string()),
+            _ => out.push(c),
+        }
+    }
+    Err("unterminated label value".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+# HELP cat_up whether up
+# TYPE cat_up gauge
+cat_up 1
+# HELP cat_req_total requests
+# TYPE cat_req_total counter
+cat_req_total{route=\"/v1/classify\"} 12
+# HELP cat_lat_us latency
+# TYPE cat_lat_us histogram
+cat_lat_us_bucket{stage=\"fft\",le=\"1\"} 0
+cat_lat_us_bucket{stage=\"fft\",le=\"2\"} 3
+cat_lat_us_bucket{stage=\"fft\",le=\"+Inf\"} 5
+cat_lat_us_sum{stage=\"fft\"} 9
+cat_lat_us_count{stage=\"fft\"} 5
+";
+
+    #[test]
+    fn accepts_a_wellformed_body() {
+        lint(GOOD).expect("well-formed body must lint clean");
+    }
+
+    #[test]
+    fn rejects_series_before_help_or_type() {
+        let body = "cat_up 1\n# HELP cat_up u\n# TYPE cat_up gauge\n";
+        let e = lint(body).unwrap_err();
+        assert!(e.contains("HELP"), "{e}");
+        let body = "# HELP cat_up u\ncat_up 1\n";
+        let e = lint(body).unwrap_err();
+        assert!(e.contains("TYPE"), "{e}");
+    }
+
+    #[test]
+    fn rejects_non_monotone_or_unterminated_histograms() {
+        let body = "\
+# HELP h x
+# TYPE h histogram
+h_bucket{le=\"1\"} 5
+h_bucket{le=\"2\"} 3
+h_bucket{le=\"+Inf\"} 6
+h_sum 1
+h_count 6
+";
+        let e = lint(body).unwrap_err();
+        assert!(e.contains("decreased"), "{e}");
+
+        let body = "\
+# HELP h x
+# TYPE h histogram
+h_bucket{le=\"1\"} 1
+h_bucket{le=\"2\"} 2
+h_sum 1
+h_count 2
+";
+        let e = lint(body).unwrap_err();
+        assert!(e.contains("+Inf"), "{e}");
+    }
+
+    #[test]
+    fn rejects_inf_count_mismatch() {
+        let body = "\
+# HELP h x
+# TYPE h histogram
+h_bucket{le=\"+Inf\"} 4
+h_sum 1
+h_count 5
+";
+        let e = lint(body).unwrap_err();
+        assert!(e.contains("_count"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_escapes_and_accepts_good_ones() {
+        let body = "\
+# HELP m x
+# TYPE m gauge
+m{model=\"a\\\\b\\\"c\\nd\"} 1
+";
+        lint(body).expect("legal escapes must pass");
+        let body = "\
+# HELP m x
+# TYPE m gauge
+m{model=\"a\\qb\"} 1
+";
+        let e = lint(body).unwrap_err();
+        assert!(e.contains("escape"), "{e}");
+    }
+
+    #[test]
+    fn histogram_groups_split_by_label_set() {
+        // two stages interleaved: each group checked independently
+        let body = "\
+# HELP h x
+# TYPE h histogram
+h_bucket{stage=\"a\",le=\"1\"} 1
+h_bucket{stage=\"b\",le=\"1\"} 9
+h_bucket{stage=\"a\",le=\"+Inf\"} 2
+h_bucket{stage=\"b\",le=\"+Inf\"} 9
+h_sum{stage=\"a\"} 1
+h_count{stage=\"a\"} 2
+h_sum{stage=\"b\"} 1
+h_count{stage=\"b\"} 9
+";
+        lint(body).expect("per-label-set grouping");
+    }
+
+    #[test]
+    fn rejects_malformed_samples() {
+        let base = "# HELP m x\n# TYPE m gauge\n";
+        for bad in ["m{a=\"v\" 1", "m{a=v} 1", "m{1a=\"v\"} 1",
+                    "m{a=\"v\"} x", "m"] {
+            let body = format!("{base}{bad}\n");
+            assert!(lint(&body).is_err(), "should reject: {bad}");
+        }
+    }
+}

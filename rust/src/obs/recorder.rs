@@ -1,0 +1,283 @@
+//! Flight recorder: the last K completed request traces plus the
+//! slowest-since-boot set, dumpable as JSON (DESIGN.md §13).
+//!
+//! A fixed-size, lock-striped ring: sequence numbers are handed out by
+//! one relaxed atomic, and `seq` picks both the stripe and the slot
+//! inside it, so concurrent connection threads committing traces only
+//! contend when they land on the same stripe (1/8th of the time).
+//! Slots are preallocated and reused in place — the slot's ID string
+//! and span vector keep their capacity across wraps, so steady-state
+//! commits allocate nothing once warm.
+//!
+//! Memory bound: `capacity` slots + [`SLOWEST_KEEP`] pinned traces,
+//! each holding at most one span per stage — a few KiB total,
+//! regardless of uptime.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::json::Json;
+use crate::metrics::lock_recovering;
+
+use super::trace::Span;
+
+/// Stripe count: bounds commit contention, not capacity.
+const STRIPES: usize = 8;
+
+/// Slowest-since-boot traces pinned outside the ring.
+pub const SLOWEST_KEEP: usize = 8;
+
+/// Default ring capacity (`K` last completed traces).
+pub const DEFAULT_CAPACITY: usize = 64;
+
+/// One completed request trace as held by the recorder. `seq == 0`
+/// marks a never-written slot.
+#[derive(Debug, Clone, Default)]
+pub struct TraceRecord {
+    pub seq: u64,
+    pub id: String,
+    pub status: u16,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl TraceRecord {
+    /// JSON shape served by `/debug/traces` and `/debug/slowest`.
+    pub fn to_json(&self) -> Json {
+        let spans = self.spans.iter().map(|s| {
+            Json::Obj(vec![
+                ("stage".to_string(), Json::from(s.stage.as_str())),
+                ("start_us".to_string(), Json::Num(s.start_us as f64)),
+                ("dur_us".to_string(), Json::Num(s.dur_us as f64)),
+            ])
+        }).collect();
+        Json::Obj(vec![
+            ("seq".to_string(), Json::Num(self.seq as f64)),
+            ("id".to_string(), Json::from(self.id.as_str())),
+            ("status".to_string(), Json::Num(self.status as f64)),
+            ("total_us".to_string(), Json::Num(self.total_us as f64)),
+            ("spans".to_string(), Json::Arr(spans)),
+        ])
+    }
+}
+
+/// Lock-striped ring of the last `capacity` completed traces plus the
+/// pinned slowest set. Cheap to clone behind an `Arc` in `AppState`.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    stripes: Vec<Mutex<Vec<TraceRecord>>>,
+    per_stripe: usize,
+    seq: AtomicU64,
+    slowest: Mutex<Vec<TraceRecord>>,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize) -> Arc<FlightRecorder> {
+        let capacity = capacity.max(1);
+        let stripes = STRIPES.min(capacity);
+        let per_stripe = (capacity + stripes - 1) / stripes;
+        Arc::new(FlightRecorder {
+            stripes: (0..stripes)
+                .map(|_| Mutex::new(vec![TraceRecord::default();
+                                         per_stripe]))
+                .collect(),
+            per_stripe,
+            seq: AtomicU64::new(0),
+            slowest: Mutex::new(Vec::with_capacity(SLOWEST_KEEP)),
+        })
+    }
+
+    /// Total ring slots (≥ the requested capacity, rounded up to a
+    /// whole number of stripes).
+    pub fn capacity(&self) -> usize {
+        self.stripes.len() * self.per_stripe
+    }
+
+    /// Traces committed since boot.
+    pub fn committed(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    /// Record one completed request. Returns its sequence number
+    /// (1-based). Reuses the target slot's buffers in place.
+    pub fn commit(&self, id: &str, status: u16, total_us: u64,
+                  spans: &[Span]) -> u64 {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let k = self.stripes.len();
+        let stripe = (seq as usize) % k;
+        let slot_idx = (seq as usize / k) % self.per_stripe;
+        {
+            let mut guard = lock_recovering(&self.stripes[stripe]);
+            let slot = &mut guard[slot_idx];
+            slot.seq = seq;
+            slot.id.clear();
+            slot.id.push_str(id);
+            slot.status = status;
+            slot.total_us = total_us;
+            slot.spans.clear();
+            slot.spans.extend_from_slice(spans);
+        }
+        self.note_slowest(seq, id, status, total_us, spans);
+        seq
+    }
+
+    fn note_slowest(&self, seq: u64, id: &str, status: u16, total_us: u64,
+                    spans: &[Span]) {
+        let mut slow = lock_recovering(&self.slowest);
+        if slow.len() >= SLOWEST_KEEP {
+            let min = slow.iter().map(|t| t.total_us).min().unwrap_or(0);
+            if total_us <= min {
+                return;
+            }
+        }
+        slow.push(TraceRecord {
+            seq,
+            id: id.to_string(),
+            status,
+            total_us,
+            spans: spans.to_vec(),
+        });
+        slow.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        slow.truncate(SLOWEST_KEEP);
+    }
+
+    /// The retained completed traces, oldest first (≤ `capacity`).
+    pub fn recent(&self) -> Vec<TraceRecord> {
+        let mut out = Vec::with_capacity(self.capacity());
+        for stripe in &self.stripes {
+            let guard = lock_recovering(stripe);
+            out.extend(guard.iter().filter(|t| t.seq != 0).cloned());
+        }
+        out.sort_by_key(|t| t.seq);
+        out
+    }
+
+    /// The pinned slowest-since-boot traces, slowest first.
+    pub fn slowest(&self) -> Vec<TraceRecord> {
+        lock_recovering(&self.slowest).clone()
+    }
+
+    /// `{"capacity": K, "committed": n, "traces": [...]}`.
+    pub fn dump_json(&self, traces: &[TraceRecord]) -> Json {
+        Json::Obj(vec![
+            ("capacity".to_string(), Json::Num(self.capacity() as f64)),
+            ("committed".to_string(), Json::Num(self.committed() as f64)),
+            ("traces".to_string(),
+             Json::Arr(traces.iter().map(TraceRecord::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Stage;
+
+    fn span(stage: Stage, start_us: u64, dur_us: u64) -> Span {
+        Span { stage, start_us, dur_us }
+    }
+
+    #[test]
+    fn ring_retains_exactly_the_last_capacity_traces() {
+        let rec = FlightRecorder::new(8); // 8 stripes x 1 slot
+        assert_eq!(rec.capacity(), 8);
+        for i in 0..24u64 {
+            rec.commit(&format!("r{i}"), 200, 10 + i,
+                       &[span(Stage::HttpParse, 0, 5)]);
+        }
+        let recent = rec.recent();
+        assert_eq!(recent.len(), 8, "ring must wrap, not grow");
+        let seqs: Vec<u64> = recent.iter().map(|t| t.seq).collect();
+        assert_eq!(seqs, (17..=24).collect::<Vec<u64>>(),
+                   "wraparound must keep the newest traces");
+        assert_eq!(recent.last().unwrap().id, "r23");
+        assert_eq!(rec.committed(), 24);
+    }
+
+    #[test]
+    fn slot_reuse_keeps_latest_contents() {
+        let rec = FlightRecorder::new(4);
+        rec.commit("long-identifier-aaaa", 200, 5,
+                   &[span(Stage::HttpParse, 0, 1),
+                     span(Stage::Serialize, 1, 1)]);
+        for _ in 0..rec.capacity() {
+            rec.commit("x", 429, 7, &[span(Stage::HttpParse, 0, 2)]);
+        }
+        for t in rec.recent() {
+            assert_eq!(t.id, "x", "reused slot must not leak old id");
+            assert_eq!(t.spans.len(), 1,
+                       "reused slot must not leak old spans");
+            assert_eq!(t.status, 429);
+        }
+    }
+
+    #[test]
+    fn slowest_set_pins_the_worst_since_boot() {
+        let rec = FlightRecorder::new(4);
+        // slow early traces must survive any amount of later fast ones
+        rec.commit("slow-1", 200, 900_000, &[]);
+        rec.commit("slow-2", 200, 800_000, &[]);
+        for i in 0..40u64 {
+            rec.commit("fast", 200, 100 + i, &[]);
+        }
+        let slow = rec.slowest();
+        assert_eq!(slow[0].id, "slow-1");
+        assert_eq!(slow[0].total_us, 900_000);
+        assert_eq!(slow[1].id, "slow-2");
+        assert!(slow.len() <= SLOWEST_KEEP);
+        assert!(!rec.recent().iter().any(|t| t.id == "slow-1"),
+                "the ring itself wrapped past the slow trace");
+    }
+
+    #[test]
+    fn concurrent_writers_never_lose_the_ring_shape() {
+        let rec = FlightRecorder::new(16);
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let rec = rec.clone();
+                std::thread::spawn(move || {
+                    for i in 0..200u64 {
+                        rec.commit(&format!("t{t}-{i}"), 200, i,
+                                   &[span(Stage::QueueWait, 0, 3)]);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(rec.committed(), 800);
+        let recent = rec.recent();
+        assert_eq!(recent.len(), rec.capacity());
+        for t in &recent {
+            assert!(t.seq > 0 && t.seq <= 800);
+            assert!(t.id.starts_with('t'), "torn record: {t:?}");
+            assert_eq!(t.spans.len(), 1);
+        }
+        // every retained seq is unique
+        let mut seqs: Vec<u64> = recent.iter().map(|t| t.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), rec.capacity());
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let rec = FlightRecorder::new(4);
+        rec.commit("abc", 200, 120,
+                   &[span(Stage::HttpParse, 0, 30),
+                     span(Stage::Serialize, 90, 20)]);
+        let dump = rec.dump_json(&rec.recent());
+        let traces = dump.get("traces").unwrap().as_arr().unwrap();
+        assert_eq!(traces.len(), 1);
+        let t = &traces[0];
+        assert_eq!(t.get("id").unwrap().as_str().unwrap(), "abc");
+        assert_eq!(t.get("total_us").unwrap().as_f64().unwrap(), 120.0);
+        let spans = t.get("spans").unwrap().as_arr().unwrap();
+        assert_eq!(spans[0].get("stage").unwrap().as_str().unwrap(),
+                   "http_parse");
+        assert_eq!(spans[1].get("dur_us").unwrap().as_f64().unwrap(), 20.0);
+        // round-trips through the in-repo parser
+        let text = dump.to_string();
+        assert_eq!(crate::json::parse(&text).unwrap(), dump);
+    }
+}

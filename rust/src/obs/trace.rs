@@ -1,0 +1,476 @@
+//! Per-request tracing and stage-level latency attribution
+//! (DESIGN.md §13).
+//!
+//! Every HTTP request owns a trace: a request ID (client-supplied
+//! `X-Request-Id` or generated) plus monotonic stage spans covering the
+//! wire path (`http_parse`, `serialize`), the router (`queue_wait`),
+//! and the kernel (`batch_assembly`, `scatter`, `fft`, `mixer_matmul`,
+//! `gather`). Three recording surfaces cooperate:
+//!
+//! * **global atomic histograms** ([`stage_snapshots`]) — every timed
+//!   section lands here regardless of request context; exported as
+//!   `cat_stage_duration_us{stage=...}` by `serve/prometheus.rs`.
+//!   Buckets mirror [`crate::metrics::LatencyHistogram`] (32
+//!   power-of-two µs buckets) so stage and end-to-end histograms line
+//!   up in dashboards.
+//! * **thread-local accumulators** — kernel seams ([`section`]) run on
+//!   the replica worker thread with no request in scope; the batcher's
+//!   `flush` reads the per-thread cumulative counters before and after
+//!   `infer_batch` and attributes the delta to the batch it just ran.
+//! * **per-request [`StageCells`]** — a tiny block of atomics riding on
+//!   `InferRequest` that carries worker-side durations back to the HTTP
+//!   connection thread, which folds them into the request's span list.
+//!
+//! Steady state allocates nothing on the timing path: sections are two
+//! `Instant::now()` calls plus relaxed atomics, and the per-connection
+//! [`TraceBuilder`] reuses its span buffer and ID string across
+//! requests (the pooled span buffer of DESIGN.md §13).
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Number of trace stages (the `stage` label cardinality).
+pub const N_STAGES: usize = 8;
+
+/// One pipeline stage of a request's life, in execution order. The
+/// discriminants index the histogram/accumulator arrays, and the order
+/// `QueueWait..=Gather` is the layout order for worker-attributed
+/// spans ([`StageCells`] consumers rely on it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    HttpParse = 0,
+    QueueWait = 1,
+    BatchAssembly = 2,
+    Scatter = 3,
+    Fft = 4,
+    MixerMatmul = 5,
+    Gather = 6,
+    Serialize = 7,
+}
+
+impl Stage {
+    /// Stable label value (`cat_stage_duration_us{stage=...}`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::HttpParse => "http_parse",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::Scatter => "scatter",
+            Stage::Fft => "fft",
+            Stage::MixerMatmul => "mixer_matmul",
+            Stage::Gather => "gather",
+            Stage::Serialize => "serialize",
+        }
+    }
+
+    /// All stages in execution order.
+    pub fn all() -> [Stage; N_STAGES] {
+        [Stage::HttpParse, Stage::QueueWait, Stage::BatchAssembly,
+         Stage::Scatter, Stage::Fft, Stage::MixerMatmul, Stage::Gather,
+         Stage::Serialize]
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+}
+
+// -- global per-stage histograms -----------------------------------------
+
+/// Lock-free latency histogram: the atomic twin of
+/// [`crate::metrics::LatencyHistogram`], same 32 power-of-two µs
+/// buckets, recordable from any thread without a mutex (kernel seams
+/// must never serialize on observability).
+pub struct AtomicHistogram {
+    buckets: [AtomicU64; 32],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl AtomicHistogram {
+    const ZERO: AtomicU64 = AtomicU64::new(0);
+
+    pub const fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            buckets: [Self::ZERO; 32],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in microseconds. Same bucket rule as
+    /// `LatencyHistogram::record`: bucket `i` holds `(2^(i-1), 2^i]`.
+    pub fn record_us(&self, us: u64) {
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(31);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; 32];
+        for (dst, src) in buckets.iter_mut().zip(&self.buckets) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+/// Point-in-time copy of one stage histogram.
+#[derive(Debug, Clone, Copy)]
+pub struct HistSnapshot {
+    pub buckets: [u64; 32],
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+}
+
+impl HistSnapshot {
+    /// `(upper_bound_us, cumulative_count)` per bucket, for Prometheus
+    /// exposition — same bounds as `LatencyHistogram`.
+    pub fn cumulative_buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        let mut acc = 0u64;
+        self.buckets.iter().enumerate().map(move |(i, &c)| {
+            acc += c;
+            (1u64 << i, acc)
+        })
+    }
+
+    /// Upper bound of the bucket holding quantile `q` (0 when empty).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil() as u64;
+        for (bound, cum) in self.cumulative_buckets() {
+            if cum >= rank.max(1) {
+                return bound;
+            }
+        }
+        self.max_us
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+}
+
+const STAGE_HIST: AtomicHistogram = AtomicHistogram::new();
+static STAGE_HISTS: [AtomicHistogram; N_STAGES] = [STAGE_HIST; N_STAGES];
+
+thread_local! {
+    /// Cumulative ns this thread has spent in each stage — the seam
+    /// that carries kernel time from `native/cat.rs` (no request in
+    /// scope) up to the batcher's flush, which diffs it around
+    /// `infer_batch`.
+    static THREAD_STAGE_NS: Cell<[u64; N_STAGES]> =
+        const { Cell::new([0; N_STAGES]) };
+}
+
+/// Record one completed stage section: global histogram + this
+/// thread's cumulative counter. Allocation-free.
+pub fn record_section(stage: Stage, dur: Duration) {
+    STAGE_HISTS[stage.index()].record_us(dur.as_micros() as u64);
+    THREAD_STAGE_NS.with(|c| {
+        let mut v = c.get();
+        v[stage.index()] += dur.as_nanos() as u64;
+        c.set(v);
+    });
+}
+
+/// Record a request-level observation (http_parse / queue_wait /
+/// serialize) into the global histogram only — these already belong to
+/// a known request, so the thread-local accumulator stays kernel-only.
+pub fn record_stage_us(stage: Stage, us: u64) {
+    STAGE_HISTS[stage.index()].record_us(us);
+}
+
+/// Time `f` as one `stage` section.
+#[inline]
+pub fn section<T>(stage: Stage, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    record_section(stage, t0.elapsed());
+    out
+}
+
+/// This thread's cumulative per-stage nanoseconds (see module docs).
+pub fn thread_stage_ns() -> [u64; N_STAGES] {
+    THREAD_STAGE_NS.with(|c| c.get())
+}
+
+/// Snapshot every stage histogram, in [`Stage::all`] order.
+pub fn stage_snapshots() -> [(Stage, HistSnapshot); N_STAGES] {
+    Stage::all().map(|s| (s, STAGE_HISTS[s.index()].snapshot()))
+}
+
+// -- per-request carriers -------------------------------------------------
+
+/// Worker-attributed stage durations for one request: filled (relaxed
+/// atomics) by the replica worker during `flush`, read by the HTTP
+/// connection thread after the response arrives. Rides on
+/// `InferRequest` as an `Arc` so the worker never learns about HTTP.
+#[derive(Debug, Default)]
+pub struct StageCells {
+    us: [AtomicU64; N_STAGES],
+}
+
+impl StageCells {
+    pub fn new() -> Arc<StageCells> {
+        Arc::new(StageCells::default())
+    }
+
+    pub fn add_us(&self, stage: Stage, us: u64) {
+        self.us[stage.index()].fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn get_us(&self, stage: Stage) -> u64 {
+        self.us[stage.index()].load(Ordering::Relaxed)
+    }
+}
+
+/// One recorded span: stage plus µs offsets relative to trace start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub stage: Stage,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A client-supplied request ID is adopted only if it is short and
+/// plain ASCII — anything else gets a generated ID (the raw value
+/// would otherwise flow into headers and logs).
+fn valid_client_id(s: &str) -> bool {
+    !s.is_empty()
+        && s.len() <= 64
+        && s.bytes().all(|b| {
+            b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.' | b':')
+        })
+}
+
+/// Per-connection reusable trace builder: the ID string and span buffer
+/// keep their capacity across requests, so steady-state tracing is
+/// allocation-free once warm.
+pub struct TraceBuilder {
+    id: String,
+    spans: Vec<Span>,
+    started: Option<Instant>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> TraceBuilder {
+        TraceBuilder {
+            id: String::with_capacity(32),
+            spans: Vec::with_capacity(N_STAGES),
+            started: None,
+        }
+    }
+
+    /// Open a trace at `start` (the request's first byte). Adopts a
+    /// valid client ID, otherwise generates `req-<seq>`.
+    pub fn begin(&mut self, client_id: Option<&str>, start: Instant) {
+        self.spans.clear();
+        self.id.clear();
+        match client_id.filter(|s| valid_client_id(s)) {
+            Some(cid) => self.id.push_str(cid),
+            None => {
+                use std::fmt::Write as _;
+                let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+                let _ = write!(self.id, "req-{n:012x}");
+            }
+        }
+        self.started = Some(start);
+    }
+
+    pub fn active(&self) -> bool {
+        self.started.is_some()
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// µs between trace start and `t` (0 when inactive or before start).
+    pub fn offset_us(&self, t: Instant) -> u64 {
+        match self.started {
+            Some(t0) => t.saturating_duration_since(t0).as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Record a span from absolute instants.
+    pub fn span(&mut self, stage: Stage, from: Instant, to: Instant) {
+        if self.started.is_some() {
+            let start_us = self.offset_us(from);
+            let dur_us =
+                to.saturating_duration_since(from).as_micros() as u64;
+            self.spans.push(Span { stage, start_us, dur_us });
+        }
+    }
+
+    /// Record a span from a µs offset + duration (worker-attributed
+    /// stages whose absolute instants the connection thread never saw).
+    pub fn span_us(&mut self, stage: Stage, start_us: u64, dur_us: u64) {
+        if self.started.is_some() {
+            self.spans.push(Span { stage, start_us, dur_us });
+        }
+    }
+
+    /// Close the trace and return its wall time in µs.
+    pub fn finish(&mut self, end: Instant) -> u64 {
+        let total = self.offset_us(end);
+        self.started = None;
+        total
+    }
+}
+
+impl Default for TraceBuilder {
+    fn default() -> Self {
+        TraceBuilder::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_match_latency_histogram() {
+        let h = AtomicHistogram::new();
+        h.record_us(0); // clamps to 1
+        h.record_us(1);
+        h.record_us(2);
+        h.record_us(3);
+        h.record_us(1_000_000);
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 5);
+        assert_eq!(snap.max_us, 1_000_000);
+        // 0 and 1 land in bucket 0 (bound 1), 2 in bucket 1, 3 in 2
+        assert_eq!(snap.buckets[0], 2);
+        assert_eq!(snap.buckets[1], 1);
+        assert_eq!(snap.buckets[2], 1);
+        let last = snap.cumulative_buckets().last().unwrap();
+        assert_eq!(last.1, snap.count,
+                   "+Inf cumulative must equal count");
+        // mirror the metrics::LatencyHistogram rule exactly
+        let mut reference = crate::metrics::LatencyHistogram::default();
+        for us in [0u64, 1, 2, 3, 1_000_000] {
+            reference.record(Duration::from_micros(us));
+        }
+        let got: Vec<_> = snap.cumulative_buckets().collect();
+        let want: Vec<_> = reference.cumulative_buckets().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn section_feeds_thread_accumulator() {
+        let before = thread_stage_ns();
+        let v = section(Stage::Fft, || {
+            std::thread::sleep(Duration::from_millis(2));
+            7
+        });
+        assert_eq!(v, 7);
+        let after = thread_stage_ns();
+        let idx = Stage::Fft.index();
+        assert!(after[idx] > before[idx],
+                "section must bump this thread's fft counter");
+        assert_eq!(after[Stage::Gather.index()],
+                   before[Stage::Gather.index()],
+                   "other stages must stay put");
+    }
+
+    #[test]
+    fn trace_builder_reuses_buffers_and_generates_ids() {
+        let mut b = TraceBuilder::new();
+        let t0 = Instant::now();
+        b.begin(None, t0);
+        assert!(b.id().starts_with("req-"), "generated id: {}", b.id());
+        b.span_us(Stage::HttpParse, 0, 5);
+        b.span_us(Stage::QueueWait, 5, 10);
+        assert_eq!(b.spans().len(), 2);
+        let total = b.finish(t0 + Duration::from_micros(40));
+        assert_eq!(total, 40);
+        assert!(!b.active());
+
+        // client id adopted when valid, rejected when hostile
+        b.begin(Some("abc-123.x:y"), t0);
+        assert_eq!(b.id(), "abc-123.x:y");
+        assert!(b.spans().is_empty(), "begin must clear prior spans");
+        b.begin(Some("bad id with spaces\n"), t0);
+        assert!(b.id().starts_with("req-"));
+        let long = "x".repeat(65);
+        b.begin(Some(&long), t0);
+        assert!(b.id().starts_with("req-"));
+    }
+
+    #[test]
+    fn spans_from_instants_are_relative_and_clamped() {
+        let mut b = TraceBuilder::new();
+        let t0 = Instant::now();
+        b.begin(None, t0);
+        let a = t0 + Duration::from_micros(10);
+        let z = t0 + Duration::from_micros(25);
+        b.span(Stage::Serialize, a, z);
+        let s = b.spans()[0];
+        assert_eq!(s.start_us, 10);
+        assert_eq!(s.dur_us, 15);
+        // a span "before" the trace start clamps to zero, no panic
+        b.span(Stage::HttpParse, t0 - Duration::from_micros(5), t0);
+        assert_eq!(b.spans()[1].start_us, 0);
+    }
+
+    #[test]
+    fn stage_cells_accumulate_across_threads() {
+        let cells = StageCells::new();
+        let c2 = cells.clone();
+        let h = std::thread::spawn(move || {
+            c2.add_us(Stage::QueueWait, 30);
+        });
+        cells.add_us(Stage::QueueWait, 12);
+        h.join().unwrap();
+        assert_eq!(cells.get_us(Stage::QueueWait), 42);
+        assert_eq!(cells.get_us(Stage::Fft), 0);
+    }
+
+    #[test]
+    fn quantiles_and_means_are_sane() {
+        let h = AtomicHistogram::new();
+        assert_eq!(h.snapshot().quantile_us(0.5), 0);
+        for _ in 0..90 {
+            h.record_us(100);
+        }
+        for _ in 0..10 {
+            h.record_us(10_000);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.quantile_us(0.5), 128, "p50 bucket bound");
+        assert_eq!(snap.quantile_us(0.99), 16_384, "p99 bucket bound");
+        assert!((snap.mean_us() - 1090.0).abs() < 1e-9);
+    }
+}

@@ -124,8 +124,11 @@ impl Runtime {
             exe,
             stats: Mutex::new((0, 0.0)),
         });
-        eprintln!("[runtime] compiled {config}.{entry} in {:.2}s",
-                  t0.elapsed().as_secs_f64());
+        crate::obs::log::log_fields(
+            crate::obs::log::Level::Info, "runtime", "compiled entry",
+            &[("config", config), ("entry", entry),
+              ("seconds",
+               &format!("{:.2}", t0.elapsed().as_secs_f64()))]);
         lock_recovering(&self.cache).insert(key, compiled.clone());
         Ok(compiled)
     }

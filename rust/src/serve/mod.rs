@@ -42,10 +42,12 @@ use std::time::{Duration, Instant};
 use anyhow::Context as _;
 
 use crate::metrics::lock_recovering;
+use crate::obs::log::{self as obs_log, Level};
+use crate::obs::trace::{self as obs_trace, Stage};
 use crate::Result;
 
 use http::{error_response, read_request, HttpLimits, Response};
-use routes::AppState;
+use routes::{AppState, ConnScratch};
 
 /// HTTP-layer counters (accepts, sheds, responses by class), shared
 /// between the acceptor, every connection thread, and `/metrics`.
@@ -158,7 +160,9 @@ struct DeadlineReader<'a> {
     stream: &'a TcpStream,
     deadline: Instant,
     shutdown: &'a AtomicBool,
-    started: bool,
+    /// When the first byte of the current request arrived — the
+    /// request's trace anchor (`http_parse` starts here).
+    first_byte: Option<Instant>,
 }
 
 /// Granularity of deadline/shutdown checks while blocked in `read`.
@@ -167,14 +171,19 @@ const READ_SLICE: Duration = Duration::from_millis(50);
 impl<'a> DeadlineReader<'a> {
     fn new(stream: &'a TcpStream, deadline: Instant,
            shutdown: &'a AtomicBool) -> DeadlineReader<'a> {
-        DeadlineReader { stream, deadline, shutdown, started: false }
+        DeadlineReader { stream, deadline, shutdown, first_byte: None }
+    }
+
+    /// Has the current request started (any byte read)?
+    fn started(&self) -> bool {
+        self.first_byte.is_some()
     }
 }
 
 impl Read for DeadlineReader<'_> {
     fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
         loop {
-            if !self.started && self.shutdown.load(Ordering::Relaxed) {
+            if !self.started() && self.shutdown.load(Ordering::Relaxed) {
                 return Ok(0); // draining: close idle connections cleanly
             }
             let left = self.deadline.saturating_duration_since(
@@ -190,7 +199,9 @@ impl Read for DeadlineReader<'_> {
             match self.stream.read(buf) {
                 Ok(0) => return Ok(0),
                 Ok(n) => {
-                    self.started = true;
+                    if self.first_byte.is_none() {
+                        self.first_byte = Some(Instant::now());
+                    }
                     return Ok(n);
                 }
                 Err(e) if matches!(e.kind(),
@@ -248,6 +259,9 @@ impl HttpServer {
             .with_context(|| format!("bind {}", cfg.listen))?;
         let addr = listener.local_addr().context("local_addr")?;
         listener.set_nonblocking(true).context("set_nonblocking")?;
+        obs_log::log_fields(Level::Info, "http", "http front end up",
+                            &[("addr", &addr.to_string()),
+                              ("max_conns", &cfg.max_conns.to_string())]);
         let shutdown = Arc::new(AtomicBool::new(false));
         let acceptor = {
             let shutdown = shutdown.clone();
@@ -332,10 +346,14 @@ fn accept_loop(listener: TcpListener, cfg: HttpServerConfig,
         std::thread::sleep(Duration::from_millis(5));
     }
     // force any stragglers off their sockets, then the joins are bounded
+    let stragglers = active.load(Ordering::Relaxed);
     registry.shutdown_all();
     for t in conn_threads {
         let _ = t.join();
     }
+    obs_log::log_fields(Level::Debug, "http",
+                        "drain complete; connection threads joined",
+                        &[("forced_closed", &stragglers.to_string())]);
 }
 
 /// Answer 503 inline on the acceptor thread (bounded by a short write
@@ -352,33 +370,69 @@ fn shed(stream: &TcpStream, state: &AppState) {
 }
 
 /// One connection: keep-alive request loop under per-request deadlines.
+/// Every parsed request gets a trace (DESIGN.md §13): anchored at its
+/// first byte, `http_parse` and `serialize` timed here, router/kernel
+/// spans folded in by `routes::classify`, committed to the flight
+/// recorder once the response hits the socket.
 fn serve_connection(stream: TcpStream, cfg: &HttpServerConfig,
                     state: &AppState, shutdown: &AtomicBool) {
     let _ = stream.set_nodelay(true);
     // a response write may not block past the request budget either
     let _ = stream.set_write_timeout(Some(cfg.request_timeout
         .max(Duration::from_millis(100))));
+    let mut scratch = ConnScratch::new();
     loop {
         let deadline = Instant::now() + cfg.request_timeout;
         let mut reader = DeadlineReader::new(&stream, deadline, shutdown);
         let outcome = read_request(&mut reader, &cfg.limits);
         // idle connections that never started a request time out
         // quietly (no 408 spam into an empty pipe)
-        let idle_timeout = !reader.started
+        let idle_timeout = !reader.started()
             && matches!(outcome, Err(http::ParseError::Timeout));
         match outcome {
             Ok(None) => break, // client closed between requests
             _ if idle_timeout => break,
             Ok(Some(req)) => {
                 state.http.note_request();
-                let mut resp = routes::handle_request(state, &req);
+                let parse_end = Instant::now();
+                let start = reader.first_byte.unwrap_or(parse_end);
+                scratch.trace.begin(req.header("x-request-id"), start);
+                scratch.trace.span(Stage::HttpParse, start, parse_end);
+                obs_trace::record_stage_us(
+                    Stage::HttpParse,
+                    parse_end.saturating_duration_since(start)
+                        .as_micros() as u64);
+                let mut resp =
+                    routes::handle_request(state, &req, &mut scratch);
                 // drain: finish this response, then close
                 resp.close = resp.close
                     || req.wants_close()
                     || shutdown.load(Ordering::Relaxed);
+                resp = resp.with_header("X-Request-Id",
+                                        scratch.trace.id().to_string());
                 state.http.note_status(resp.status);
+                let ser_start = Instant::now();
                 let mut w = &stream;
-                if resp.write_to(&mut w).is_err() || resp.close {
+                let write_ok = resp.write_to(&mut w).is_ok();
+                let ser_end = Instant::now();
+                scratch.trace.span(Stage::Serialize, ser_start, ser_end);
+                obs_trace::record_stage_us(
+                    Stage::Serialize,
+                    ser_end.saturating_duration_since(ser_start)
+                        .as_micros() as u64);
+                let total_us = scratch.trace.finish(ser_end);
+                state.recorder.commit(scratch.trace.id(), resp.status,
+                                      total_us, scratch.trace.spans());
+                let slow_us = state.slow_request.as_micros() as u64;
+                if slow_us > 0 && total_us > slow_us {
+                    obs_log::log_fields(
+                        Level::Warn, "http", "slow request",
+                        &[("id", scratch.trace.id()),
+                          ("status", &resp.status.to_string()),
+                          ("total_us", &total_us.to_string()),
+                          ("path", &req.path)]);
+                }
+                if !write_ok || resp.close {
                     break;
                 }
             }

@@ -12,6 +12,9 @@ use std::fmt::Write as _;
 
 use crate::coordinator::{ReplicaPhase, StatsHandle};
 use crate::metrics::{lock_poison_recoveries, LatencyHistogram};
+use crate::native::arena::arena_high_water_bytes;
+use crate::native::pool;
+use crate::obs::trace::stage_snapshots;
 
 use super::HttpSnapshot;
 
@@ -20,9 +23,44 @@ fn escape_label(v: &str) -> String {
     v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
 }
 
-/// Render the full `/metrics` payload.
+/// Reusable `/metrics` render state: the output buffer and the merged
+/// latency histogram keep their capacity across scrapes, so a warm
+/// scrape loop does not grow the heap (pinned by the zero-heap-growth
+/// regression test in `tests/http_serving.rs`). One per connection,
+/// owned by `routes::ConnScratch`.
+#[derive(Default)]
+pub struct RenderScratch {
+    buf: String,
+    merged: LatencyHistogram,
+}
+
+impl RenderScratch {
+    pub fn new() -> RenderScratch {
+        RenderScratch::default()
+    }
+
+    /// The last rendered payload.
+    pub fn buf(&self) -> &str {
+        &self.buf
+    }
+}
+
+/// Render the full `/metrics` payload into fresh buffers. Prefer
+/// [`render_into`] on a hot path — this wrapper allocates per call.
 pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
-    let mut out = String::with_capacity(4096);
+    let mut scratch = RenderScratch::new();
+    render_into(&mut scratch, stats, http);
+    scratch.buf
+}
+
+/// Render the full `/metrics` payload, reusing `scratch`'s buffers.
+pub fn render_into(scratch: &mut RenderScratch, stats: &StatsHandle,
+                   http: &HttpSnapshot) {
+    let RenderScratch { buf: out, merged } = scratch;
+    out.clear();
+    if out.capacity() < 4096 {
+        out.reserve(4096 - out.capacity());
+    }
     let router = stats.router();
 
     let counter = |out: &mut String, name: &str, help: &str, v: u64| {
@@ -31,37 +69,37 @@ pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
         let _ = writeln!(out, "{name} {v}");
     };
 
-    counter(&mut out, "cat_router_dispatched_total",
+    counter(out, "cat_router_dispatched_total",
             "Requests handed to a replica queue.", router.dispatched);
-    counter(&mut out, "cat_router_busy_rejected_total",
+    counter(out, "cat_router_busy_rejected_total",
             "Requests rejected with backpressure (HTTP 429).",
             router.busy_rejected);
-    counter(&mut out, "cat_router_replicas_died_total",
+    counter(out, "cat_router_replicas_died_total",
             "Replicas discovered dead.", router.replicas_died);
-    counter(&mut out, "cat_router_pings_ok_total",
+    counter(out, "cat_router_pings_ok_total",
             "Health pings answered in time.", router.pings_ok);
-    counter(&mut out, "cat_router_pings_missed_total",
+    counter(out, "cat_router_pings_missed_total",
             "Health pings that timed out.", router.pings_missed);
-    counter(&mut out, "cat_replica_restarts_total",
+    counter(out, "cat_replica_restarts_total",
             "Replica workers respawned by the supervisor.",
             router.replicas_restarted);
-    counter(&mut out, "cat_lock_poison_recoveries_total",
+    counter(out, "cat_lock_poison_recoveries_total",
             "Poisoned mutexes recovered instead of cascading panics.",
             lock_poison_recoveries());
 
-    counter(&mut out, "cat_http_connections_accepted_total",
+    counter(out, "cat_http_connections_accepted_total",
             "TCP connections accepted.", http.accepted);
-    counter(&mut out, "cat_http_connections_shed_total",
+    counter(out, "cat_http_connections_shed_total",
             "Connections shed at the accept-side limit (HTTP 503).",
             http.shed);
-    counter(&mut out, "cat_http_requests_total",
+    counter(out, "cat_http_requests_total",
             "HTTP requests parsed off accepted connections.",
             http.requests);
-    counter(&mut out, "cat_http_responses_2xx_total",
+    counter(out, "cat_http_responses_2xx_total",
             "Successful HTTP responses.", http.status_2xx);
-    counter(&mut out, "cat_http_responses_4xx_total",
+    counter(out, "cat_http_responses_4xx_total",
             "Client-error HTTP responses.", http.status_4xx);
-    counter(&mut out, "cat_http_responses_5xx_total",
+    counter(out, "cat_http_responses_5xx_total",
             "Server-error HTTP responses.", http.status_5xx);
 
     let replicas = stats.replicas();
@@ -121,8 +159,9 @@ pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
     }
 
     // one merged latency histogram across all replicas: queue-to-reply
-    // time per request, in microseconds
-    let mut merged = LatencyHistogram::default();
+    // time per request, in microseconds (merged in the reusable scratch
+    // histogram — no per-scrape rebuild)
+    merged.reset();
     for r in &replicas {
         merged.merge(&r.latency);
     }
@@ -153,7 +192,48 @@ pub fn render(stats: &StatsHandle, http: &HttpSnapshot) -> String {
     let _ = writeln!(out, "{name}_sum {}", recovery.sum_us());
     let _ = writeln!(out, "{name}_count {}", recovery.count());
 
-    out
+    // per-stage latency attribution (DESIGN.md §13): one histogram
+    // family, one series set per pipeline stage. Families render even
+    // while empty so dashboards can pin all eight stages from boot.
+    let name = "cat_stage_duration_us";
+    let _ = writeln!(out, "# HELP {name} Time spent per request \
+                           pipeline stage in microseconds.");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    for (stage, snap) in stage_snapshots() {
+        let label = stage.as_str();
+        for (bound, cum) in snap.cumulative_buckets() {
+            let _ = writeln!(
+                out,
+                "{name}_bucket{{stage=\"{label}\",le=\"{bound}\"}} {cum}");
+        }
+        let _ = writeln!(out,
+                         "{name}_bucket{{stage=\"{label}\",le=\"+Inf\"}} {}",
+                         snap.count);
+        let _ = writeln!(out, "{name}_sum{{stage=\"{label}\"}} {}",
+                         snap.sum_us);
+        let _ = writeln!(out, "{name}_count{{stage=\"{label}\"}} {}",
+                         snap.count);
+    }
+
+    // compute-pool and arena health: flat gauges at steady state, so a
+    // moving value is itself the signal (thread churn / arena growth)
+    let pstats = pool::stats();
+    let gauge = |out: &mut String, name: &str, help: &str, v: u64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    gauge(out, "cat_pool_workers",
+          "Worker threads in the global compute pool.",
+          pstats.workers as u64);
+    gauge(out, "cat_pool_threads_spawned",
+          "OS threads ever spawned by the compute pools (global + \
+           dedicated); flat once warm.",
+          pstats.threads_spawned + pstats.dedicated_threads_spawned);
+    gauge(out, "cat_arena_high_water_bytes",
+          "Largest single bump-arena backing store ever reached, in \
+           bytes.",
+          arena_high_water_bytes());
 }
 
 #[cfg(test)]

@@ -12,10 +12,13 @@
 //! | degraded (dead replica) `/healthz`| 503                |
 //! | per-request deadline expired      | 504                |
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{ServeError, ServeHandle, StatsHandle};
 use crate::json::{self, Json};
+use crate::obs::trace::{Stage, StageCells, TraceBuilder};
+use crate::obs::FlightRecorder;
 use crate::tensor::HostTensor;
 
 use super::http::{Request, Response};
@@ -35,6 +38,26 @@ pub struct AppState {
     pub input_shape: Vec<usize>,
     /// Per-request inference deadline (`--request-timeout-ms`).
     pub request_timeout: Duration,
+    /// Ring of completed request traces (`/debug/traces`).
+    pub recorder: Arc<FlightRecorder>,
+    /// Requests slower than this are logged at warn with their span
+    /// breakdown (`--slow-request-ms`; zero disables).
+    pub slow_request: Duration,
+}
+
+/// Per-connection reusable scratch: the request trace and the
+/// `/metrics` render buffers keep their capacity across requests, so a
+/// warm keep-alive connection answers without heap growth.
+#[derive(Default)]
+pub struct ConnScratch {
+    pub trace: TraceBuilder,
+    pub prom: prometheus::RenderScratch,
+}
+
+impl ConnScratch {
+    pub fn new() -> ConnScratch {
+        ConnScratch::default()
+    }
 }
 
 fn err_body(msg: &str) -> String {
@@ -43,7 +66,8 @@ fn err_body(msg: &str) -> String {
 
 /// Dispatch one parsed request. Never panics; every outcome is a
 /// well-formed response.
-pub fn handle_request(state: &AppState, req: &Request) -> Response {
+pub fn handle_request(state: &AppState, req: &Request,
+                      scratch: &mut ConnScratch) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET" | "HEAD", "/healthz") => {
             // degraded-permanent (a replica is dead for good: restart
@@ -62,19 +86,31 @@ pub fn handle_request(state: &AppState, req: &Request) -> Response {
             Response::json(status, body.to_string())
         }
         ("GET", "/metrics") => {
-            let text = prometheus::render(&state.stats,
-                                          &state.http.snapshot());
+            prometheus::render_into(&mut scratch.prom, &state.stats,
+                                    &state.http.snapshot());
             Response {
                 status: 200,
                 content_type: "text/plain; version=0.0.4",
-                body: text.into_bytes(),
+                body: scratch.prom.buf().as_bytes().to_vec(),
                 headers: Vec::new(),
                 close: false,
             }
         }
-        ("POST", "/v1/classify") => classify(state, req),
+        ("GET", "/debug/traces") => {
+            let rec = &state.recorder;
+            Response::json(200, rec.dump_json(&rec.recent()).to_string())
+        }
+        ("GET", "/debug/slowest") => {
+            let rec = &state.recorder;
+            Response::json(200, rec.dump_json(&rec.slowest()).to_string())
+        }
+        ("POST", "/v1/classify") => {
+            classify(state, req, &mut scratch.trace)
+        }
         (_, "/healthz") => method_not_allowed("GET, HEAD"),
         (_, "/metrics") => method_not_allowed("GET"),
+        (_, "/debug/traces") => method_not_allowed("GET"),
+        (_, "/debug/slowest") => method_not_allowed("GET"),
         (_, "/v1/classify") => method_not_allowed("POST"),
         _ => Response::json(404, err_body("no such route")),
     }
@@ -85,9 +121,32 @@ fn method_not_allowed(allow: &str) -> Response {
         .with_header("Allow", allow.to_string())
 }
 
+/// Fold worker-attributed stage durations ([`StageCells`]) into the
+/// request's trace as back-to-back spans laid out from the moment the
+/// request was handed to the router. The worker reports durations, not
+/// absolute instants, so the spans are synthesized in execution order
+/// (`queue_wait` → `batch_assembly` → `scatter` → `fft` →
+/// `mixer_matmul` → `gather`); each starts where the previous ended,
+/// keeping the trace monotone with the stage sum bounded by the
+/// request's wall time (every batched request waited for its whole
+/// batch).
+fn fold_worker_spans(trace: &mut TraceBuilder, cells: &StageCells,
+                     infer_start: Instant) {
+    let mut cursor = trace.offset_us(infer_start);
+    for stage in &Stage::all()[Stage::QueueWait.index()
+                               ..=Stage::Gather.index()] {
+        let d = cells.get_us(*stage);
+        if d > 0 {
+            trace.span_us(*stage, cursor, d);
+            cursor += d;
+        }
+    }
+}
+
 /// `POST /v1/classify`: `{"pixels": [f32; prod(input_shape)],
 /// "model"?: "name"}` → `{"model", "argmax", "logits"}`.
-fn classify(state: &AppState, req: &Request) -> Response {
+fn classify(state: &AppState, req: &Request,
+            trace: &mut TraceBuilder) -> Response {
     let text = match std::str::from_utf8(&req.body) {
         Ok(t) => t,
         Err(_) => {
@@ -146,7 +205,19 @@ fn classify(state: &AppState, req: &Request) -> Response {
     };
 
     let deadline = Instant::now() + state.request_timeout;
-    match state.handle.infer_deadline(&model, input, deadline) {
+    let timing = if trace.active() {
+        Some(StageCells::new())
+    } else {
+        None
+    };
+    let infer_start = Instant::now();
+    let result = state.handle.infer_deadline_traced(&model, input,
+                                                    deadline,
+                                                    timing.clone());
+    if let Some(cells) = &timing {
+        fold_worker_spans(trace, cells, infer_start);
+    }
+    match result {
         Ok(row) => {
             let logits = match row.as_f32() {
                 Ok(l) => l,

@@ -19,13 +19,16 @@ pub mod schedule;
 
 pub use schedule::Schedule;
 
-use std::path::Path;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{bail, ensure};
 
 use crate::data::{ShapeDataset, TextCorpus};
+use crate::json::Json;
 use crate::metrics::LossCurve;
+use crate::obs::log::{self as obs_log, Level};
 use crate::native::{AdamW, Mixer, TaskKind, TrainBatch, TrainConfig,
                     TrainModel};
 use crate::Result;
@@ -59,6 +62,12 @@ pub struct TrainOptions {
     pub log_every: u64,
     /// stop early if the loss goes non-finite (records divergence)
     pub stop_on_divergence: bool,
+    /// When set, [`run_training`] appends one JSON object per line to
+    /// this file — `{"kind":"step",...}` for every optimizer step,
+    /// `{"kind":"eval",...}` per evaluation, and a final
+    /// `{"kind":"summary",...}` — so external tooling can tail the run
+    /// without scraping log text (`cat train --metrics-out`).
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for TrainOptions {
@@ -72,6 +81,7 @@ impl Default for TrainOptions {
             eval_batches: 8,
             log_every: 25,
             stop_on_divergence: true,
+            metrics_out: None,
         }
     }
 }
@@ -116,6 +126,50 @@ pub trait TrainBackend {
     fn evaluate(&mut self, n_batches: u64) -> Result<(&'static str, f64)>;
 }
 
+/// Newline-delimited JSON metrics writer behind
+/// [`TrainOptions::metrics_out`]. One object per line; non-finite
+/// floats serialize as `null` (JSON has no NaN/Inf literal).
+struct MetricsSink {
+    w: std::io::BufWriter<std::fs::File>,
+    path: PathBuf,
+}
+
+impl MetricsSink {
+    fn open(path: &Path) -> Result<MetricsSink> {
+        let f = std::fs::File::create(path).map_err(|e| {
+            anyhow::anyhow!("creating metrics file {}: {e}",
+                            path.display())
+        })?;
+        Ok(MetricsSink {
+            w: std::io::BufWriter::new(f),
+            path: path.to_path_buf(),
+        })
+    }
+
+    fn emit(&mut self, line: &Json) -> Result<()> {
+        writeln!(self.w, "{}", line.to_string()).map_err(|e| {
+            anyhow::anyhow!("writing metrics file {}: {e}",
+                            self.path.display())
+        })
+    }
+
+    fn finish(mut self) -> Result<()> {
+        self.w.flush().map_err(|e| {
+            anyhow::anyhow!("flushing metrics file {}: {e}",
+                            self.path.display())
+        })
+    }
+}
+
+/// `f64` → JSON number, with non-finite values mapped to `null`.
+fn json_num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
 /// The shared training loop: LR schedule, loss curve, divergence stop,
 /// periodic + final eval. Both backends run through here, so reports are
 /// comparable across them.
@@ -124,6 +178,10 @@ pub fn run_training(backend: &mut dyn TrainBackend, opts: &TrainOptions)
     let label = backend.label().to_string();
     let mut curve = LossCurve::default();
     let mut evals = Vec::new();
+    let mut sink = match &opts.metrics_out {
+        Some(path) => Some(MetricsSink::open(path)?),
+        None => None,
+    };
     let t0 = Instant::now();
     let mut diverged_at = None;
     let mut done = 0;
@@ -132,34 +190,86 @@ pub fn run_training(backend: &mut dyn TrainBackend, opts: &TrainOptions)
         let loss = backend.train_step(lr)?;
         curve.push(step, loss);
         done = step + 1;
+        if let Some(sink) = &mut sink {
+            sink.emit(&Json::Obj(vec![
+                ("kind".to_string(), Json::from("step")),
+                ("step".to_string(), Json::from((step + 1) as usize)),
+                ("loss".to_string(), json_num(loss as f64)),
+                ("lr".to_string(), json_num(lr as f64)),
+            ]))?;
+        }
         if opts.log_every > 0 && (step + 1) % opts.log_every == 0 {
-            eprintln!("[{label}] step {:>5} loss {:.4} (ema {:.4}) lr {:.2e}",
-                      step + 1, loss, curve.ema().unwrap_or(f64::NAN), lr);
+            obs_log::log_fields(
+                Level::Info, "train", "step",
+                &[("config", &label),
+                  ("step", &(step + 1).to_string()),
+                  ("loss", &format!("{loss:.4}")),
+                  ("ema", &format!("{:.4}",
+                                   curve.ema().unwrap_or(f64::NAN))),
+                  ("lr", &format!("{lr:.2e}"))]);
         }
         if !loss.is_finite() {
             diverged_at = Some(step);
             if opts.stop_on_divergence {
-                eprintln!("[{label}] diverged at step {step} (loss={loss})");
+                obs_log::log_fields(
+                    Level::Warn, "train", "training diverged",
+                    &[("config", &label),
+                      ("step", &step.to_string()),
+                      ("loss", &loss.to_string())]);
                 break;
             }
         }
         if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
             let (k, v) = backend.evaluate(opts.eval_batches)?;
-            eprintln!("[{label}] step {:>5} {k} {:.4}", step + 1, v);
+            obs_log::log_fields(
+                Level::Info, "train", "eval",
+                &[("config", &label),
+                  ("step", &(step + 1).to_string()),
+                  (k, &format!("{v:.4}"))]);
             evals.push((step + 1, k, v));
+            if let Some(sink) = &mut sink {
+                sink.emit(&Json::Obj(vec![
+                    ("kind".to_string(), Json::from("eval")),
+                    ("step".to_string(), Json::from((step + 1) as usize)),
+                    ("metric".to_string(), Json::from(k)),
+                    ("value".to_string(), json_num(v)),
+                ]))?;
+            }
         }
     }
     // final eval, unless the last periodic eval already covered `done`
     if diverged_at.is_none() && evals.last().map(|e| e.0) != Some(done) {
         let (k, v) = backend.evaluate(opts.eval_batches)?;
         evals.push((done, k, v));
+        if let Some(sink) = &mut sink {
+            sink.emit(&Json::Obj(vec![
+                ("kind".to_string(), Json::from("eval")),
+                ("step".to_string(), Json::from(done as usize)),
+                ("metric".to_string(), Json::from(k)),
+                ("value".to_string(), json_num(v)),
+            ]))?;
+        }
+    }
+    let wall_seconds = t0.elapsed().as_secs_f64();
+    if let Some(mut sink) = sink.take() {
+        sink.emit(&Json::Obj(vec![
+            ("kind".to_string(), Json::from("summary")),
+            ("config".to_string(), Json::from(label.as_str())),
+            ("steps".to_string(), Json::from(done as usize)),
+            ("wall_seconds".to_string(), json_num(wall_seconds)),
+            ("diverged_at".to_string(), match diverged_at {
+                Some(s) => Json::from(s as usize),
+                None => Json::Null,
+            }),
+        ]))?;
+        sink.finish()?;
     }
     Ok(TrainReport {
         config: label,
         curve,
         evals,
         steps_done: done,
-        wall_seconds: t0.elapsed().as_secs_f64(),
+        wall_seconds,
         diverged_at,
     })
 }
@@ -864,6 +974,42 @@ mod tests {
         let (k, v) = report.final_metric().unwrap();
         assert_eq!(k, "acc");
         assert!((0.0..=1.0).contains(&v));
+    }
+
+    #[test]
+    fn metrics_out_writes_parseable_jsonl() {
+        use crate::json;
+        let path = std::env::temp_dir().join(format!(
+            "cat_metrics_{}.jsonl", std::process::id()));
+        let mut t = NativeTrainer::new("native_tiny", 0).unwrap();
+        let opts = TrainOptions {
+            steps: 4,
+            schedule: Schedule::constant(1e-3),
+            eval_every: 2,
+            eval_batches: 1,
+            log_every: 0,
+            metrics_out: Some(path.clone()),
+            ..Default::default()
+        };
+        let report = run_training(&mut t, &opts).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // 4 step lines + evals at steps 2 and 4 (the step-4 eval also
+        // serves as the final one) + the summary line
+        assert_eq!(lines.len(), 4 + 2 + 1,
+                   "unexpected metrics line count:\n{text}");
+        for l in &lines {
+            json::parse(l).unwrap();
+        }
+        let first = json::parse(lines[0]).unwrap();
+        assert_eq!(first.req("kind").unwrap().as_str().unwrap(), "step");
+        assert_eq!(first.req("step").unwrap().as_f64().unwrap() as u64, 1);
+        assert!(first.req("loss").unwrap().as_f64().unwrap().is_finite());
+        let last = json::parse(lines[lines.len() - 1]).unwrap();
+        assert_eq!(last.req("kind").unwrap().as_str().unwrap(), "summary");
+        assert_eq!(last.req("steps").unwrap().as_f64().unwrap() as u64,
+                   report.steps_done);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -145,6 +145,31 @@ fn serve_http_smoke_roundtrip_and_clean_drain() {
     assert!(body.contains("cat_router_dispatched_total"),
             "metrics body: {body}");
     assert!(body.contains("cat_replica_up"), "metrics body: {body}");
+    assert!(body.contains("cat_stage_duration_us_bucket"),
+            "metrics body: {body}");
+    // the real binary's scrape passes the in-repo exposition linter
+    cat::obs::promlint::lint(&body).unwrap_or_else(|e| {
+        panic!("live /metrics failed the exposition linter: {e}\n{body}")
+    });
+
+    // the flight recorder serves the traffic just sent
+    let (status, body) = request(
+        &addr, "GET /debug/traces HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    let v = cat::json::parse(&body).expect("trace dump is JSON");
+    assert!(v.req("capacity").unwrap().as_f64().unwrap() > 0.0);
+    assert!(v.req("committed").unwrap().as_f64().unwrap() >= 4.0,
+            "every request must commit a trace: {body}");
+    let traces = v.req("traces").unwrap().as_arr().unwrap();
+    assert!(!traces.is_empty(), "dump: {body}");
+    for tr in traces {
+        let total = tr.req("total_us").unwrap().as_f64().unwrap() as u64;
+        let sum: u64 = tr.req("spans").unwrap().as_arr().unwrap().iter()
+            .map(|s| s.req("dur_us").unwrap().as_f64().unwrap() as u64)
+            .sum();
+        assert!(sum <= total,
+                "stage sum {sum}us exceeds wall {total}us in {body}");
+    }
 
     let out = interrupt_and_reap(proc);
     assert!(out.iter().any(|l| l.starts_with("router:")),

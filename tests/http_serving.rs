@@ -11,11 +11,17 @@
 //!   retrying through `cat::coordinator::Backoff` recovers;
 //! * a replica killed mid-request → 502 (never a hang) and `/healthz`
 //!   degrades to 503;
-//! * graceful shutdown drains in-flight requests to completion.
+//! * graceful shutdown drains in-flight requests to completion;
+//! * observability (DESIGN.md §13): `X-Request-Id` round-trips, every
+//!   request commits a well-formed trace to the flight recorder, the
+//!   `/metrics` exposition passes the in-repo linter, and warm scrapes
+//!   do not grow the heap.
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
@@ -23,12 +29,49 @@ use cat::coordinator::{BackoffPolicy, BatchExecutor, ExecutorFactory,
                        ServeOptions, Server, WorkerSpec};
 use cat::data::ShapeDataset;
 use cat::json;
+use cat::obs::{promlint, FlightRecorder};
 use cat::runtime::Backend;
 use cat::serve::fault::{injected_factory, FaultPlan};
+use cat::serve::prometheus::{self, RenderScratch};
 use cat::serve::routes::AppState;
 use cat::serve::{HttpCounters, HttpServer, HttpServerConfig};
 use cat::tensor::HostTensor;
 use cat::Result;
+
+/// Counting allocator: tracks live heap bytes so the zero-heap-growth
+/// regression test can assert that warm `/metrics` renders reuse their
+/// buffers instead of allocating per scrape.
+struct CountingAlloc;
+
+static LIVE_BYTES: AtomicIsize = AtomicIsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        let p = System.alloc(l);
+        if !p.is_null() {
+            LIVE_BYTES.fetch_add(l.size() as isize, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        LIVE_BYTES.fetch_sub(l.size() as isize, Ordering::Relaxed);
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new: usize)
+                      -> *mut u8 {
+        let q = System.realloc(p, l, new);
+        if !q.is_null() {
+            LIVE_BYTES.fetch_add(new as isize - l.size() as isize,
+                                 Ordering::Relaxed);
+        }
+        q
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
 
 /// Server-creating tests run serialized (same rationale as
 /// `tests/sharded_serving.rs`: process-wide pool counters, plus bounded
@@ -115,6 +158,8 @@ fn start_stack(factory: ExecutorFactory, cfg: StackCfg)
         model: "m".to_string(),
         input_shape: vec![4],
         request_timeout: cfg.request_timeout,
+        recorder: FlightRecorder::new(8),
+        slow_request: Duration::ZERO,
     };
     let mut hcfg = HttpServerConfig::new("127.0.0.1:0");
     hcfg.max_conns = cfg.max_conns;
@@ -296,8 +341,36 @@ fn metrics_exposition_is_wellformed_and_monotone() {
     assert!(m.header("content-type").unwrap().starts_with("text/plain"));
     for name in ["cat_router_dispatched_total", "cat_http_requests_total",
                  "cat_http_responses_2xx_total", "cat_replica_up",
-                 "cat_request_latency_us_bucket"] {
+                 "cat_request_latency_us_bucket",
+                 "cat_stage_duration_us_bucket", "cat_pool_workers",
+                 "cat_pool_threads_spawned",
+                 "cat_arena_high_water_bytes"] {
         assert!(m.body.contains(name), "missing metric {name}");
+    }
+
+    // the whole payload passes the in-repo exposition linter
+    promlint::lint(&m.body).unwrap_or_else(|e| {
+        panic!("/metrics failed the exposition linter: {e}\n{}", m.body)
+    });
+
+    // stage attribution: all eight pipeline stages export series (empty
+    // stages render zeroed histograms so dashboards can pin them)
+    let stages: Vec<&str> = m.body.lines()
+        .filter(|l| l.starts_with("cat_stage_duration_us_count{stage=\""))
+        .collect();
+    assert_eq!(stages.len(), 8,
+               "expected all 8 stage series, got {stages:?}");
+    // the HTTP seams are hot even with the echo executor
+    for stage in ["http_parse", "serialize"] {
+        let count: u64 = m.body.lines()
+            .find_map(|l| l.strip_prefix(&format!(
+                "cat_stage_duration_us_count{{stage=\"{stage}\"}} ")))
+            .expect("stage count line")
+            .parse()
+            .expect("stage count value");
+        assert!(count >= 5,
+                "stage {stage} must have recorded the 5 requests, \
+                 got {count}");
     }
 
     // histogram contract: cumulative buckets never decrease and +Inf
@@ -325,6 +398,137 @@ fn metrics_exposition_is_wellformed_and_monotone() {
     assert_eq!(inf, Some(count), "+Inf bucket must equal _count");
     assert!(count >= 5, "5 served requests must be in the histogram");
     stop_stack(http, server);
+}
+
+#[test]
+fn request_ids_round_trip_and_flight_recorder_serves_traces() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+    let body = "{\"pixels\":[0,0,0,0]}";
+
+    // a valid client-supplied id echoes back on the response
+    let raw = format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+                       X-Request-Id: client-id-42\r\n\
+                       Connection: close\r\nContent-Length: {}\r\n\r\n{}",
+                      body.len(), body);
+    let resp = roundtrip(addr, &raw);
+    assert_eq!(resp.status, 200, "body: {}", resp.body);
+    assert_eq!(resp.header("x-request-id"), Some("client-id-42"));
+
+    // absent and invalid ids both get a generated one instead
+    let absent = post_classify(addr, &[0.0; 4]);
+    assert!(absent.header("x-request-id").unwrap().starts_with("req-"),
+            "absent id must be generated, got {:?}",
+            absent.header("x-request-id"));
+    let raw = format!("POST /v1/classify HTTP/1.1\r\nHost: t\r\n\
+                       X-Request-Id: spaces are not valid\r\n\
+                       Connection: close\r\nContent-Length: {}\r\n\r\n{}",
+                      body.len(), body);
+    let invalid = roundtrip(addr, &raw);
+    assert!(invalid.header("x-request-id").unwrap().starts_with("req-"),
+            "invalid id must be replaced, got {:?}",
+            invalid.header("x-request-id"));
+
+    // overflow the 8-slot ring, then audit the dump
+    for i in 0..12 {
+        assert_eq!(post_classify(addr, &[i as f32; 4]).status, 200);
+    }
+    let t = get(addr, "/debug/traces");
+    assert_eq!(t.status, 200);
+    let v = json::parse(&t.body).expect("trace dump is JSON");
+    let capacity = v.req("capacity").unwrap().as_f64().unwrap() as usize;
+    assert_eq!(capacity, 8);
+    let committed = v.req("committed").unwrap().as_f64().unwrap() as u64;
+    assert!(committed >= 15,
+            "every request must commit a trace, committed {committed}");
+    let traces = v.req("traces").unwrap().as_arr().unwrap();
+    assert!(!traces.is_empty() && traces.len() <= capacity,
+            "the ring must wrap, not grow: {} traces", traces.len());
+
+    // every retained trace: non-empty id, monotone non-overlapping
+    // spans, and the stage sum bounded by the wall time
+    for tr in traces {
+        let id = tr.req("id").unwrap().as_str().unwrap();
+        assert!(!id.is_empty());
+        let total = tr.req("total_us").unwrap().as_f64().unwrap() as u64;
+        let spans = tr.req("spans").unwrap().as_arr().unwrap();
+        assert!(!spans.is_empty(), "completed trace {id} has no spans");
+        let mut cursor = 0u64;
+        let mut sum = 0u64;
+        for s in spans {
+            let stage = s.req("stage").unwrap().as_str().unwrap();
+            let start = s.req("start_us").unwrap().as_f64().unwrap() as u64;
+            let dur = s.req("dur_us").unwrap().as_f64().unwrap() as u64;
+            assert!(start >= cursor,
+                    "span {stage} of {id} starts at {start}us before the \
+                     previous span ended at {cursor}us");
+            cursor = start + dur;
+            sum += dur;
+        }
+        assert!(sum <= total,
+                "stage sum {sum}us exceeds wall time {total}us for {id}");
+        assert!(cursor <= total,
+                "last span of {id} ends at {cursor}us past the wall \
+                 time {total}us");
+    }
+
+    // the pinned slowest set is served too, slowest first
+    let s = get(addr, "/debug/slowest");
+    assert_eq!(s.status, 200);
+    let v = json::parse(&s.body).expect("slowest dump is JSON");
+    let slow = v.req("traces").unwrap().as_arr().unwrap();
+    assert!(!slow.is_empty());
+    let totals: Vec<u64> = slow.iter()
+        .map(|t| t.req("total_us").unwrap().as_f64().unwrap() as u64)
+        .collect();
+    let mut sorted = totals.clone();
+    sorted.sort_by(|a, b| b.cmp(a));
+    assert_eq!(totals, sorted, "slowest set must be ordered worst-first");
+
+    // wrong method on the debug routes is a 405, not a 404
+    let wrong = roundtrip(addr, "POST /debug/traces HTTP/1.1\r\nHost: t\
+                                 \r\nConnection: close\r\n\
+                                 Content-Length: 0\r\n\r\n");
+    assert_eq!(wrong.status, 405);
+    assert_eq!(wrong.header("allow"), Some("GET"));
+    stop_stack(http, server);
+}
+
+#[test]
+fn warm_metrics_renders_do_not_grow_the_heap() {
+    let _guard = server_lock();
+    let (http, server, addr) = start_stack(echo_factory(),
+                                           StackCfg::default());
+    for i in 0..4 {
+        assert_eq!(post_classify(addr, &[i as f32; 4]).status, 200);
+    }
+    let stats = server.stats_handle();
+    let counters = HttpCounters::new();
+    // stop the stack first so no background thread muddies the meter;
+    // the stats handles stay readable after shutdown
+    stop_stack(http, server);
+
+    let snap = counters.snapshot();
+    let mut scratch = RenderScratch::new();
+    for _ in 0..4 {
+        prometheus::render_into(&mut scratch, &stats, &snap);
+    }
+    // a handful of attempts tolerates unrelated allocator traffic from
+    // already-parked threads; one clean window is proof of reuse
+    let mut delta = isize::MAX;
+    for _ in 0..5 {
+        let before = LIVE_BYTES.load(Ordering::Relaxed);
+        for _ in 0..32 {
+            prometheus::render_into(&mut scratch, &stats, &snap);
+        }
+        delta = LIVE_BYTES.load(Ordering::Relaxed) - before;
+        if delta <= 0 {
+            break;
+        }
+    }
+    assert!(delta <= 0,
+            "32 warm /metrics renders grew live heap by {delta} bytes");
 }
 
 #[test]
@@ -741,6 +945,8 @@ fn native_backend_classifies_full_image_end_to_end() {
         model: "m".to_string(),
         input_shape: vec![3, 32, 32],
         request_timeout: Duration::from_secs(30),
+        recorder: FlightRecorder::new(64),
+        slow_request: Duration::ZERO,
     };
     let http = HttpServer::start(HttpServerConfig::new("127.0.0.1:0"),
                                  state)

@@ -1,9 +1,11 @@
 //! Table 3 / Fig. 2, hermetic: the circular-parameterization ablation,
 //! trained natively. The grid covers the mechanism axis (softmax
 //! attention vs the merged-CAT apply via FFT vs the O(N²) gather
-//! reference — identical math, so their accuracies should agree) and the
-//! head-count axis (h ∈ {2, 4, 8}, which moves the `(d+h)·d` budget),
-//! reporting accuracy + whole-model parameter counts. No artifacts.
+//! reference — identical math, so their accuracies should agree — plus
+//! the registry's zoo rows: parameter-free FNet and the 3d²-budget
+//! circulant-attention variant) and the head-count axis (h ∈ {2, 4, 8},
+//! which moves the `(d+h)·d` budget), reporting accuracy + whole-model
+//! parameter counts. No artifacts.
 //!
 //!   cargo bench --bench table3_ablation              # full proxy run
 //!   cargo bench --bench table3_ablation -- --smoke   # CI smoke
@@ -32,6 +34,12 @@ fn main() {
          Some("vit_b_avg_cat")),
         ("native_vit_cat_gather".into(),
          TrainConfig::vit(Mixer::CatGather, false), None),
+        // registry zoo rows: in the smoke grid too, so CI's
+        // BENCH_table3.json always carries their accuracy + budgets
+        ("native_vit_fnet".into(), TrainConfig::vit(Mixer::Fnet, false),
+         None),
+        ("native_vit_circulant".into(),
+         TrainConfig::vit(Mixer::Circulant, false), None),
     ];
     if !smoke {
         for heads in [2usize, 8] {

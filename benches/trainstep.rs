@@ -30,6 +30,7 @@ fn lm_cfg(mixer: Mixer, causal: bool, n: usize) -> TrainConfig {
         batch_size: 8,
         mixer,
         alternate: false,
+        fnet_truncate: false,
         task: TaskKind::Lm { vocab: 512, seq_len: n, causal },
     }
 }

@@ -8,9 +8,12 @@
 //! same observation for Fourier-mixing layers). [`ShardedNativeModel`]
 //! exploits that: it splits a [`NativeCatModel`] head-wise into K shards,
 //! each owning head-sliced copies of every block's mixing weights
-//! ([`CatLayer::head_slice`]) and computing its heads' stripes on a
+//! ([`ServeMixer::head_slice`]) and computing its heads' stripes on a
 //! **dedicated worker pool** ([`Pool::dedicated`]), so shards never
-//! contend for one task queue.
+//! contend for one task queue. Only mixers whose registry spec says
+//! `head_separable` (CAT and the circulant-attention variant) admit
+//! K > 1; FNet and softmax attention mix across the full hidden axis, so
+//! construction rejects sharding them with a clear error.
 //!
 //! Per block the router (the replica worker thread driving
 //! [`NativeCatModel::forward_batch_with`]):
@@ -48,7 +51,7 @@ use std::sync::Arc;
 use anyhow::ensure;
 
 use crate::native::pool::{self, CountGuard, Latch, Pool};
-use crate::native::{CatLayer, NativeCatModel, NativeVitConfig};
+use crate::native::{NativeCatModel, NativeVitConfig, ServeMixer};
 use crate::obs::trace::{self as obs_trace, Stage};
 use crate::Result;
 
@@ -154,7 +157,7 @@ pub struct ShardedNativeModel {
     /// Head range `[start, end)` owned by each shard.
     ranges: Vec<(usize, usize)>,
     /// `slices[s][block]`: shard `s`'s head-sliced mixing layer.
-    slices: Vec<Vec<CatLayer>>,
+    slices: Vec<Vec<ServeMixer>>,
     workers: Vec<ShardWorker>,
     /// Per-shard gather buffers, grow-only, reused across requests.
     outs: RefCell<Vec<Vec<f32>>>,
@@ -173,6 +176,10 @@ impl ShardedNativeModel {
         ensure!(shards >= 1, "need at least one shard");
         ensure!(shards <= cfg.n_heads,
                 "cannot split {} heads into {} shards", cfg.n_heads, shards);
+        ensure!(shards == 1 || cfg.mixer.spec().head_separable,
+                "mixer '{}' is not head-separable and cannot be split \
+                 into {} model-parallel shards; serve it with --shards 1",
+                cfg.mixer.name(), shards);
         let workers_per_shard = workers_per_shard
             .unwrap_or_else(|| (pool::hardware_workers() / shards).max(1))
             .max(1);
@@ -190,9 +197,9 @@ impl ShardedNativeModel {
         }
         debug_assert_eq!(start, h);
 
-        let slices: Vec<Vec<CatLayer>> = ranges
+        let slices: Vec<Vec<ServeMixer>> = ranges
             .iter()
-            .map(|&(h0, h1)| model.sliced_cat_layers(h0, h1))
+            .map(|&(h0, h1)| model.sliced_mixer_layers(h0, h1))
             .collect();
         // the shards now hold the only copies of the mixing weights;
         // keeping them in the trunk too would double per-replica memory
@@ -338,7 +345,7 @@ impl ShardedNativeModel {
 mod tests {
     use super::*;
     use crate::data::Rng;
-    use crate::native::CatImpl;
+    use crate::native::{CatImpl, Mixer};
 
     fn test_images(cfg: &NativeVitConfig, b: usize, seed: u64) -> Vec<f32> {
         let len = b * cfg.n_channels * cfg.image_size * cfg.image_size;
@@ -404,5 +411,54 @@ mod tests {
         assert!(ShardedNativeModel::new(cfg, 0, 5, None).is_err());
         assert!(ShardedNativeModel::new(cfg, 0, 0, None).is_err());
         assert!(ShardedNativeModel::new(cfg, 0, 4, Some(1)).is_ok());
+    }
+
+    #[test]
+    fn non_separable_mixer_rejected_at_k_above_one() {
+        let cfg = NativeVitConfig {
+            mixer: Mixer::Fnet,
+            ..Default::default()
+        };
+        let err = ShardedNativeModel::new(cfg, 0, 2, Some(1)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("not head-separable")
+                    && msg.contains("fnet"),
+                "unexpected error: {msg}");
+        let cfg = NativeVitConfig {
+            mixer: Mixer::Attention,
+            ..Default::default()
+        };
+        assert!(ShardedNativeModel::new(cfg, 0, 2, Some(1)).is_err());
+    }
+
+    #[test]
+    fn non_separable_mixer_serves_at_k_equals_one() {
+        let cfg = NativeVitConfig {
+            mixer: Mixer::Fnet,
+            ..Default::default()
+        };
+        let images = test_images(&cfg, 2, 19);
+        let want = NativeCatModel::new(cfg, 5).forward_batch(&images, 2)
+            .unwrap();
+        let sharded = ShardedNativeModel::new(cfg, 5, 1, Some(1)).unwrap();
+        let got = sharded.forward_batch(&images, 2).unwrap();
+        assert_eq!(got, want, "K=1 fnet diverged from unsharded");
+    }
+
+    #[test]
+    fn circulant_sharded_matches_unsharded_bitwise() {
+        let cfg = NativeVitConfig {
+            mixer: Mixer::Circulant,
+            ..Default::default()
+        }; // d=64 h=4 L=2, N=64 (power of two)
+        let full = NativeCatModel::new(cfg, 23);
+        let images = test_images(&cfg, 2, 29);
+        let want = full.forward_batch(&images, 2).unwrap();
+        for k in [1usize, 2, 4] {
+            let sharded =
+                ShardedNativeModel::new(cfg, 23, k, Some(1)).unwrap();
+            let got = sharded.forward_batch(&images, 2).unwrap();
+            assert_eq!(got, want, "circulant K={k} diverged");
+        }
     }
 }

@@ -58,28 +58,10 @@ pub fn paper_reference() -> BTreeMap<&'static str, f64> {
     ])
 }
 
-fn budget_formula(mech: &str) -> &'static str {
-    match mech {
-        "attention" | "linear" | "cat_qkv" => "3d^2",
-        "cat" | "cat_gather" => "(d+h)d",
-        "cat_alter" => "(2d+h/2)d",
-        "cat_q" => "(n+h)d",
-        "cat_v" => "(n+d)d",
-        _ => "?",
-    }
-}
-
-fn complexity_cols(mech: &str, causal: bool) -> (&'static str, &'static str) {
-    match (mech, causal) {
-        ("cat", false) | ("cat_qkv", false) | ("cat_q", false)
-        | ("cat_v", false) => ("O(N log N)", "O(N)"),
-        // our causal CAT uses the zero-padded FFT -> also sub-quadratic
-        // (the paper lists O(N^2) for its gather-based causal variant)
-        ("cat", true) => ("O(N log N)*", "O(N)"),
-        ("linear", _) => ("O(N)", "O(N)"),
-        _ => ("O(N^2)", "O(N^2)"),
-    }
-}
+// Mechanism labels, paper param-count formulas, and complexity columns
+// all come from the mixer registry — the single source of truth shared
+// with the trainer, CLI, and serving layer.
+use crate::native::mixer::{budget_formula, complexity_cols};
 
 /// Train one config and evaluate; shared by every table driver.
 #[cfg(feature = "pjrt")]
@@ -362,9 +344,14 @@ mod tests {
     }
 
     #[test]
-    fn budget_formulas() {
+    fn budget_formulas_come_from_the_registry() {
         assert_eq!(budget_formula("cat"), "(d+h)d");
         assert_eq!(budget_formula("attention"), "3d^2");
+        assert_eq!(budget_formula("fnet"), "0");
+        assert_eq!(budget_formula("circulant"), "3d^2");
+        assert_eq!(budget_formula("cat_alter"), "(2d+h/2)d");
+        assert_eq!(complexity_cols("fnet", false), ("O(N log N)", "O(N)"));
+        assert_eq!(complexity_cols("cat", true), ("O(N log N)*", "O(N)"));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use cat::cli;
 use cat::complexity::{crossover_n, layer_cost, Mechanism};
 use cat::coordinator::{ServeOptions, Server};
 use cat::data::ShapeDataset;
+use cat::native::{CatImpl, Mixer, NativeVitConfig};
 use cat::obs::log::{self as obs_log, Level};
 use cat::runtime::Backend;
 use cat::tensor::HostTensor;
@@ -53,7 +54,10 @@ commands:
                 pjrt extras: [--checkpoint PATH] [--fused] [--augment])
   eval         --config NAME [--checkpoint PATH] [--batches N]  [pjrt]
   serve        [--config NAME] [--requests N] [--backend pjrt|native]
-               [--shards K] [--replicas R]
+               [--shards K] [--replicas R] [--mixer NAME]
+               (--mixer picks the native demo model's token mixer from
+                the registry — cat, cat_gather, attention, fnet,
+                circulant; non-head-separable mixers need --shards 1)
                (K>1 splits each native model head-wise across K
                 model-parallel shards on dedicated pools; R>1 runs R
                 data-parallel replicas behind the router with health
@@ -93,7 +97,7 @@ const VALUED: &[&str] = &["config", "steps", "lr", "seed", "checkpoint",
                           "request-timeout-ms", "queue-depth",
                           "drain-timeout-ms", "fault-delay-ms",
                           "restart-budget", "slow-request-ms",
-                          "log-level", "metrics-out"];
+                          "log-level", "metrics-out", "mixer"];
 
 fn main() {
     if let Err(e) = run() {
@@ -153,11 +157,23 @@ fn run() -> cat::Result<()> {
 }
 
 fn cmd_list() -> cat::Result<()> {
-    println!("native training configs (hermetic, `cat train`):");
+    println!("mixer zoo (registry; `cat serve --backend native --mixer \
+              NAME`):");
+    for s in cat::native::REGISTRY {
+        println!("{:<12} params={:<8} time={:<11} mem={:<7} causal={:<5} \
+                  head_separable={}",
+                 s.name, s.params_formula, s.complexity, s.memory,
+                 s.causal, s.head_separable);
+    }
+    println!("\nnative training configs (hermetic, `cat train`):");
     for spec in native_specs() {
         let cfg = spec.cfg;
-        println!("{:<28} mech={:<12} d={} h={} L={} N={} batch={}",
-                 spec.name, cfg.mechanism(), cfg.d_model, cfg.n_heads,
+        let mech = cfg.mechanism();
+        println!("{:<28} mech={:<12} params={:<10} causal={:<5} d={} \
+                  h={} L={} N={} batch={}",
+                 spec.name, mech,
+                 cat::native::mixer::budget_formula(&mech),
+                 cfg.causal(), cfg.d_model, cfg.n_heads,
                  cfg.n_layers, cfg.n_tokens(), cfg.batch_size);
     }
     #[cfg(feature = "pjrt")]
@@ -404,6 +420,32 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
                     "--shards is a native-backend feature (head-parallel \
                      model shards); drop it or add --backend native");
 
+    // --mixer: pick the native demo model's token mixer from the registry
+    let native_cfg = match args.get("mixer") {
+        Some(name) => {
+            anyhow::ensure!(backend == Backend::Native,
+                            "--mixer picks the native demo model's token \
+                             mixer; add --backend native");
+            let mixer = Mixer::parse(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown mixer '{name}' (expected one of: {})",
+                    cat::native::REGISTRY.iter().map(|s| s.name)
+                        .collect::<Vec<_>>().join(", "))
+            })?;
+            NativeVitConfig {
+                mixer,
+                // cat_gather is CAT routed through the O(N²) apply
+                cat_impl: if mixer == Mixer::CatGather {
+                    CatImpl::Gather
+                } else {
+                    CatImpl::Fft
+                },
+                ..Default::default()
+            }
+        }
+        None => NativeVitConfig::default(),
+    };
+
     // Fail fast on the silent-misconfiguration path: a named config with
     // no artifacts would otherwise serve the untrained native demo model
     // under that label. Explicit --backend native opts back in.
@@ -430,22 +472,25 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
                      native");
 
     if let Some(listen) = args.get("listen") {
-        return cmd_serve_http(args, backend, &config, shards, replicas,
-                              restart_budget, listen);
+        return cmd_serve_http(args, backend, &config, native_cfg, shards,
+                              replicas, restart_budget, listen);
     }
 
     let note = match backend {
-        Backend::Native => "serving hermetic demo model (untrained \
-                            CAT-FFT ViT, d=64 h=4 L=2)",
-        Backend::Pjrt => "serving pjrt model",
+        Backend::Native => format!(
+            "serving hermetic demo model (untrained {} ViT, d=64 h=4 \
+             L=2)", native_cfg.mixer.name()),
+        Backend::Pjrt => "serving pjrt model".to_string(),
     };
     obs_log::log_fields(
-        Level::Info, "serve", note,
+        Level::Info, "serve", &note,
         &[("backend", &format!("{backend:?}")),
           ("model", &config),
+          ("mixer", &native_cfg.mixer.name().to_string()),
           ("shards", &shards.to_string()),
           ("replicas", &replicas.to_string())]);
     let opts = ServeOptions { backend, shards, replicas, restart_budget,
+                              native: native_cfg,
                               ..Default::default() };
     let server = Server::spawn(cat::artifacts_dir(), &[config.clone()],
                                opts, 0)?;
@@ -518,9 +563,10 @@ fn cmd_serve(args: &cli::Args) -> cat::Result<()> {
 /// (DESIGN.md §11). Serves `POST /v1/classify`, `GET /healthz`, and
 /// `GET /metrics` until SIGINT, then drains in-flight requests and
 /// reports the usual serving stats.
+#[allow(clippy::too_many_arguments)]
 fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
-                  shards: usize, replicas: usize, restart_budget: u32,
-                  listen: &str)
+                  native_cfg: NativeVitConfig, shards: usize,
+                  replicas: usize, restart_budget: u32, listen: &str)
                   -> cat::Result<()> {
     use cat::coordinator::{default_factory, WorkerSpec};
     use cat::serve::fault::{injected_factory, FaultPlan};
@@ -541,7 +587,8 @@ fn cmd_serve_http(args: &cli::Args, backend: Backend, config: &str,
                     "--request-timeout-ms must be at least 1");
 
     let opts = ServeOptions { backend, shards, replicas, queue_depth,
-                              restart_budget, ..Default::default() };
+                              restart_budget, native: native_cfg,
+                              ..Default::default() };
     let mut factory = default_factory(cat::artifacts_dir());
     if fault_delay_ms > 0 {
         // test/bench hook: every batch sleeps this long in the executor,

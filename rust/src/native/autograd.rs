@@ -47,6 +47,7 @@ use anyhow::{bail, ensure};
 use super::arena;
 use super::cat::{matmul, softmax_in_place};
 use super::fft::{split_rfft_plan, SplitRfftPlan};
+use super::mixer::{self, train::MixerParams, Mixer};
 use super::pool;
 use crate::data::Rng;
 use crate::Result;
@@ -115,7 +116,7 @@ fn with_partials<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
     })
 }
 
-fn ensure_len(buf: &mut Vec<f32>, len: usize) {
+pub(crate) fn ensure_len(buf: &mut Vec<f32>, len: usize) {
     if buf.len() != len {
         buf.resize(len, 0.0);
     }
@@ -428,7 +429,7 @@ fn layernorm_bwd(dy: &[f32], gamma: &[f32], cache: &LnCache,
 }
 
 /// In-place softmax backward over one row: `dp ← p ⊙ (dp − p·dp)`.
-fn softmax_bwd_in_place(p: &[f32], dp: &mut [f32]) {
+pub(crate) fn softmax_bwd_in_place(p: &[f32], dp: &mut [f32]) {
     let mut dot = 0.0f32;
     for (pv, dv) in p.iter().zip(dp.iter()) {
         dot += pv * dv;
@@ -443,13 +444,13 @@ fn softmax_bwd_in_place(p: &[f32], dp: &mut [f32]) {
 // ---------------------------------------------------------------------------
 
 #[inline]
-fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+pub(crate) fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
     (ar * br - ai * bi, ar * bi + ai * br)
 }
 
 /// `conj(a) · b`.
 #[inline]
-fn cmul_conj_a(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+pub(crate) fn cmul_conj_a(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
     (ar * br + ai * bi, ar * bi - ai * br)
 }
 
@@ -458,7 +459,8 @@ fn cmul_conj_a(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
 /// rFFT sweep. Buffer lengths: `zre/zim: f`, `vre/vim: dh·f`,
 /// `scratch`: [`SplitRfftPlan::scratch_len`] where `f = n/2+1`.
 #[allow(clippy::too_many_arguments)]
-fn corr_fwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32], dh: usize,
+pub(crate) fn corr_fwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32],
+                              dh: usize,
                    out: &mut [f32], zre: &mut [f32], zim: &mut [f32],
                    vre: &mut [f32], vim: &mut [f32], scratch: &mut [f32]) {
     let f = plan.spectrum_len();
@@ -480,7 +482,7 @@ fn corr_fwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32], dh: usize,
 /// `dv[c] = conv(dout[c], p) = irfft(dOf_c ⊙ Zf)` and
 /// `dp = Σ_c corr(dout[c], v[c]) = irfft(Σ_c conj(dOf_c) ⊙ Vf_c)`.
 #[allow(clippy::too_many_arguments)]
-fn corr_bwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32],
+pub(crate) fn corr_bwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32],
                    dout: &[f32], dh: usize, dp: &mut [f32],
                    dv: &mut [f32], zre: &mut [f32], zim: &mut [f32],
                    vre: &mut [f32], vim: &mut [f32], gre: &mut [f32],
@@ -542,7 +544,7 @@ fn causal_fwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32], dh: usize,
 /// `dv[c] = irfft(conj(Zf₂) ⊙ dOf₂_c)[..n]` and
 /// `dp = irfft(Σ_c conj(Vf₂_c) ⊙ dOf₂_c)[..n]`.
 #[allow(clippy::too_many_arguments)]
-fn causal_bwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
+pub(crate) fn causal_bwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
                      dout: &[f32], dh: usize, dp: &mut [f32],
                      dv: &mut [f32], pad: &mut [f32], zre: &mut [f32],
                      zim: &mut [f32], vre: &mut [f32], vim: &mut [f32],
@@ -587,7 +589,8 @@ fn causal_bwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
 /// per-row loop). Buffers: `pad2`/`out2`: `dh·2n`, `zre/zim`: `f₂`,
 /// `vre/vim`: `dh·f₂` where `f₂ = n + 1`.
 #[allow(clippy::too_many_arguments)]
-fn causal_fwd_stripe_batched(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
+pub(crate) fn causal_fwd_stripe_batched(
+    plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
                              dh: usize, out: &mut [f32], pad2: &mut [f32],
                              zre: &mut [f32], zim: &mut [f32],
                              vre: &mut [f32], vim: &mut [f32],
@@ -625,7 +628,8 @@ fn causal_fwd_stripe_batched(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
 /// Bit-identical to [`causal_bwd_stripe`] (same per-row math, same
 /// ascending-channel accumulation into the `dp` spectrum).
 #[allow(clippy::too_many_arguments)]
-fn causal_bwd_stripe_batched(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
+pub(crate) fn causal_bwd_stripe_batched(
+    plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
                              dout: &[f32], dh: usize, dp: &mut [f32],
                              dv: &mut [f32], pad2: &mut [f32],
                              zre: &mut [f32], zim: &mut [f32],
@@ -809,8 +813,8 @@ pub fn causal_corr_backward_batched(p: &[f32], v: &[f32], dout: &[f32],
 // ---------------------------------------------------------------------------
 
 /// `(b, n, d)` → channel-major stripes `(b·h, dh, n)` (the rFFT layout).
-fn to_stripes(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
-              dst: &mut [f32]) {
+pub(crate) fn to_stripes(src: &[f32], b: usize, n: usize, h: usize,
+                         dh: usize, dst: &mut [f32]) {
     let d = h * dh;
     for bi in 0..b {
         for head in 0..h {
@@ -826,8 +830,8 @@ fn to_stripes(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 }
 
 /// Channel-major stripes `(b·h, dh, n)` → `(b, n, d)`.
-fn from_stripes(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
-                dst: &mut [f32]) {
+pub(crate) fn from_stripes(src: &[f32], b: usize, n: usize, h: usize,
+                           dh: usize, dst: &mut [f32]) {
     let d = h * dh;
     for bi in 0..b {
         for head in 0..h {
@@ -843,8 +847,8 @@ fn from_stripes(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 }
 
 /// `(b, n, d)` → token-major head rows `(b·h, n, dh)` (attention layout).
-fn to_head_rows(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
-                dst: &mut [f32]) {
+pub(crate) fn to_head_rows(src: &[f32], b: usize, n: usize, h: usize,
+                           dh: usize, dst: &mut [f32]) {
     let d = h * dh;
     for bi in 0..b {
         for head in 0..h {
@@ -858,8 +862,8 @@ fn to_head_rows(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 }
 
 /// Token-major head rows `(b·h, n, dh)` → `(b, n, d)`.
-fn from_head_rows(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
-                  dst: &mut [f32]) {
+pub(crate) fn from_head_rows(src: &[f32], b: usize, n: usize, h: usize,
+                             dh: usize, dst: &mut [f32]) {
     let d = h * dh;
     for bi in 0..b {
         for head in 0..h {
@@ -882,7 +886,8 @@ fn from_head_rows(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 /// `trainstep` naive baseline. `q`/`k`/`v`/`dost`: `(n, dh)`;
 /// `ps`: `(n, n)` softmax rows (zero above the diagonal when causal).
 #[allow(clippy::too_many_arguments)]
-fn attn_bwd_stripe_rows(q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
+pub(crate) fn attn_bwd_stripe_rows(
+    q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
                         dost: &[f32], n: usize, dh: usize, scale: f32,
                         causal: bool, dqs: &mut [f32], dks: &mut [f32],
                         dvs: &mut [f32]) {
@@ -935,7 +940,8 @@ fn attn_bwd_stripe_rows(q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
 /// once per row. Per-slot accumulation order is flat row-ascending, so
 /// the outputs are bit-identical to [`attn_bwd_stripe_rows`].
 #[allow(clippy::too_many_arguments)]
-fn attn_bwd_stripe_panels(q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
+pub(crate) fn attn_bwd_stripe_panels(
+    q: &[f32], k: &[f32], v: &[f32], ps: &[f32],
                           dost: &[f32], n: usize, dh: usize, scale: f32,
                           causal: bool, dqs: &mut [f32], dks: &mut [f32],
                           dvs: &mut [f32]) {
@@ -1058,27 +1064,6 @@ pub fn attention_backward(q: &[f32], k: &[f32], v: &[f32], probs: &[f32],
 // configuration
 // ---------------------------------------------------------------------------
 
-/// Which token-mixing mechanism a block trains with.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Mixer {
-    /// CAT via the planned batched rFFT path (O(N log N)).
-    CatFft,
-    /// CAT via the naive rolled gather (O(N²) correctness baseline).
-    CatGather,
-    /// Standard softmax attention (the parity baseline).
-    Attention,
-}
-
-impl Mixer {
-    pub fn name(self) -> &'static str {
-        match self {
-            Mixer::CatFft => "cat",
-            Mixer::CatGather => "cat_gather",
-            Mixer::Attention => "attention",
-        }
-    }
-}
-
 /// What the model is trained on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TaskKind {
@@ -1103,6 +1088,9 @@ pub struct TrainConfig {
     pub mixer: Mixer,
     /// CAT-Alter: odd layers swap to softmax attention.
     pub alternate: bool,
+    /// FNet half-spectrum truncation: zero hidden channels above `d/2`
+    /// (Fast-FNet-style low-pass; ignored by every other mixer).
+    pub fnet_truncate: bool,
     pub task: TaskKind,
 }
 
@@ -1116,6 +1104,7 @@ impl TrainConfig {
             batch_size: 16,
             mixer,
             alternate,
+            fnet_truncate: false,
             task: TaskKind::Vit {
                 image_size: 32,
                 patch_size: 4,
@@ -1134,6 +1123,7 @@ impl TrainConfig {
             batch_size: 8,
             mixer,
             alternate,
+            fnet_truncate: false,
             task: TaskKind::Lm { vocab: 512, seq_len: 128, causal },
         }
     }
@@ -1147,6 +1137,7 @@ impl TrainConfig {
             batch_size: 16,
             mixer: Mixer::CatFft,
             alternate: false,
+            fnet_truncate: false,
             task: TaskKind::Vit {
                 image_size: 32,
                 patch_size: 8,
@@ -1174,20 +1165,12 @@ impl TrainConfig {
 
     /// The mixer of layer `l` (CAT-Alter alternates CAT and attention).
     pub fn mixer_at(&self, layer: usize) -> Mixer {
-        if self.alternate && layer % 2 == 1 {
-            Mixer::Attention
-        } else {
-            self.mixer
-        }
+        mixer::schedule_at(self.mixer, self.alternate, layer)
     }
 
     /// Mechanism label for tables ("cat", "cat_alter", "attention", ...).
     pub fn mechanism(&self) -> String {
-        if self.alternate {
-            format!("{}_alter", self.mixer.name())
-        } else {
-            self.mixer.name().to_string()
-        }
+        mixer::mechanism_label(self.mixer, self.alternate)
     }
 
     fn validate(&self) -> Result<()> {
@@ -1198,18 +1181,8 @@ impl TrainConfig {
                 "need at least one layer and a nonempty batch");
         let n = self.n_tokens();
         ensure!(n >= 2, "need at least 2 tokens, got {n}");
-        let uses_fft = (0..self.n_layers)
-            .any(|l| self.mixer_at(l) == Mixer::CatFft);
-        if uses_fft {
-            ensure!(n.is_power_of_two(),
-                    "CAT-FFT training needs power-of-two N, got {n}");
-        }
-        if self.causal() {
-            ensure!(!(0..self.n_layers)
-                        .any(|l| self.mixer_at(l) == Mixer::CatGather),
-                    "causal training supports cat (zero-padded FFT) and \
-                     attention mixers, not the gather baseline");
-        }
+        mixer::validate_schedule(self.mixer, self.alternate, self.n_layers,
+                                 n, self.d_model, self.causal())?;
         if let TaskKind::Vit { image_size, patch_size, .. } = self.task {
             ensure!(patch_size > 0 && image_size % patch_size == 0,
                     "patch size {patch_size} must divide image {image_size}");
@@ -1224,15 +1197,6 @@ impl TrainConfig {
 // ---------------------------------------------------------------------------
 // parameters (and their mirrored gradients)
 // ---------------------------------------------------------------------------
-
-/// Mixing-layer parameters; the variant must match [`TrainConfig::mixer_at`].
-enum MixerParams {
-    /// Merged CAT projections: `w_a: (d, h)`, `w_v: (d, d)` — the paper's
-    /// `(d+h)·d` budget.
-    Cat { w_a: Vec<f32>, w_v: Vec<f32> },
-    /// Softmax attention: `3·d²`.
-    Attention { w_q: Vec<f32>, w_k: Vec<f32>, w_v: Vec<f32> },
-}
 
 struct BlockParams {
     ln1_g: Vec<f32>,
@@ -1293,17 +1257,8 @@ impl ModelParams {
             let mut bmk = |len: usize| -> Vec<f32> {
                 (0..len).map(|_| 0.02 * brng.normal()).collect()
             };
-            let mixer = match cfg.mixer_at(layer) {
-                Mixer::CatFft | Mixer::CatGather => MixerParams::Cat {
-                    w_a: bmk(d * cfg.n_heads),
-                    w_v: bmk(d * d),
-                },
-                Mixer::Attention => MixerParams::Attention {
-                    w_q: bmk(d * d),
-                    w_k: bmk(d * d),
-                    w_v: bmk(d * d),
-                },
-            };
+            let mixer = mixer::train::init_params(cfg.mixer_at(layer), d,
+                                                  cfg.n_heads, &mut bmk);
             blocks.push(BlockParams {
                 ln1_g: vec![1.0; d],
                 ln1_b: vec![0.0; d],
@@ -1347,19 +1302,7 @@ impl ModelParams {
                 .map(|b| BlockParams {
                     ln1_g: z(&b.ln1_g),
                     ln1_b: z(&b.ln1_b),
-                    mixer: match &b.mixer {
-                        MixerParams::Cat { w_a, w_v } => MixerParams::Cat {
-                            w_a: z(w_a),
-                            w_v: z(w_v),
-                        },
-                        MixerParams::Attention { w_q, w_k, w_v } => {
-                            MixerParams::Attention {
-                                w_q: z(w_q),
-                                w_k: z(w_k),
-                                w_v: z(w_v),
-                            }
-                        }
-                    },
+                    mixer: b.mixer.zeros_like(),
                     ln2_g: z(&b.ln2_g),
                     ln2_b: z(&b.ln2_b),
                     mlp_w1: z(&b.mlp_w1),
@@ -1394,17 +1337,7 @@ impl ModelParams {
         for b in self.blocks.iter_mut() {
             out.push(("ln1_g", &mut b.ln1_g, false));
             out.push(("ln1_b", &mut b.ln1_b, false));
-            match &mut b.mixer {
-                MixerParams::Cat { w_a, w_v } => {
-                    out.push(("w_a", w_a, true));
-                    out.push(("w_v", w_v, true));
-                }
-                MixerParams::Attention { w_q, w_k, w_v } => {
-                    out.push(("w_q", w_q, true));
-                    out.push(("w_k", w_k, true));
-                    out.push(("w_v", w_v, true));
-                }
-            }
+            out.extend(b.mixer.tensors_mut());
             out.push(("ln2_g", &mut b.ln2_g, false));
             out.push(("ln2_b", &mut b.ln2_b, false));
             out.push(("mlp_w1", &mut b.mlp_w1, true));
@@ -1429,23 +1362,28 @@ impl ModelParams {
 // ---------------------------------------------------------------------------
 
 /// Per-block forward caches consumed by the backward pass. Only the
-/// buffers the block's mixer actually uses ever grow.
+/// buffers the block's mixer actually uses ever grow. The mixer-facing
+/// fields are `pub(crate)` for `super::mixer::train`, the single match
+/// over [`Mixer`] on the training path.
 #[derive(Default)]
-struct LayerCache {
+pub(crate) struct LayerCache {
     /// LN1 output — the mixer input (b·n·d).
-    xn1: Vec<f32>,
+    pub(crate) xn1: Vec<f32>,
     ln1: LnCache,
-    /// CAT: softmax weight stripes (b·h·n).
-    p: Vec<f32>,
-    /// CAT: stripe-transposed values (b·h, dh, n).
-    vt: Vec<f32>,
+    /// CAT / circulant: softmax weight stripes (b·h·n).
+    pub(crate) p: Vec<f32>,
+    /// CAT / circulant: stripe-transposed values (b·h, dh, n).
+    pub(crate) vt: Vec<f32>,
+    /// Circulant: stripe-transposed q/k projections (b·h, dh, n).
+    pub(crate) qt: Vec<f32>,
+    pub(crate) kt: Vec<f32>,
     /// Attention: token-major head rows (b·h, n, dh) each.
-    qh: Vec<f32>,
-    kh: Vec<f32>,
-    vh: Vec<f32>,
+    pub(crate) qh: Vec<f32>,
+    pub(crate) kh: Vec<f32>,
+    pub(crate) vh: Vec<f32>,
     /// Attention: softmax rows (b·h, n, n); zero above the diagonal when
     /// causal.
-    aprobs: Vec<f32>,
+    pub(crate) aprobs: Vec<f32>,
     /// LN2 output — the MLP input (b·n·d).
     xn2: Vec<f32>,
     ln2: LnCache,
@@ -1628,8 +1566,8 @@ fn forward_pass(cfg: &TrainConfig, params: &ModelParams, s: &mut Scratch,
         let lc = &mut s.layers[l];
         ensure_len(&mut lc.xn1, bn * d);
         layernorm_fwd(&s.x, &bp.ln1_g, &bp.ln1_b, &mut lc.xn1, &mut lc.ln1);
-        mixer_fwd(cfg, l, bp, lc, b, &mut s.tmp1, &mut s.znh, &mut s.tmp2,
-                  &mut s.tmp3)?;
+        mixer::train::fwd(cfg, l, &bp.mixer, lc, b, &mut s.tmp1,
+                          &mut s.znh, &mut s.tmp2, &mut s.tmp3)?;
         for (xv, mv) in s.x.iter_mut().zip(s.tmp3.iter()) {
             *xv += mv;
         }
@@ -1656,149 +1594,6 @@ fn forward_pass(cfg: &TrainConfig, params: &ModelParams, s: &mut Scratch,
     layernorm_fwd(&s.x, &params.ln_f_g, &params.ln_f_b, &mut s.norm,
                   &mut s.lnf);
     head_fwd(cfg, params, s, b)
-}
-
-/// Mixer forward for one block: reads `lc.xn1`, fills the mixer caches,
-/// writes the mixed output into `out`.
-#[allow(clippy::too_many_arguments)]
-fn mixer_fwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
-             lc: &mut LayerCache, b: usize, tmp1: &mut [f32],
-             znh: &mut [f32], tmp2: &mut [f32], out: &mut [f32])
-             -> Result<()> {
-    let d = cfg.d_model;
-    let n = cfg.n_tokens();
-    let h = cfg.n_heads;
-    let dh = d / h;
-    let bn = b * n;
-    let mixer = cfg.mixer_at(layer);
-    match &bp.mixer {
-        MixerParams::Cat { w_a, w_v } => {
-            matmul(&lc.xn1, bn, d, w_a, h, znh);
-            ensure_len(&mut lc.p, b * h * n);
-            for bi in 0..b {
-                for head in 0..h {
-                    for i in 0..n {
-                        lc.p[(bi * h + head) * n + i] =
-                            znh[(bi * n + i) * h + head];
-                    }
-                }
-            }
-            for row in lc.p.chunks_exact_mut(n) {
-                softmax_in_place(row);
-            }
-            matmul(&lc.xn1, bn, d, w_v, d, tmp1);
-            ensure_len(&mut lc.vt, bn * d);
-            to_stripes(tmp1, b, n, h, dh, &mut lc.vt);
-
-            let p = &lc.p;
-            let vt = &lc.vt;
-            let log_term = n.trailing_zeros() as usize + 1;
-            let tasks: Vec<(usize, &mut [f32])> =
-                tmp2.chunks_mut(dh * n).enumerate().collect();
-            match mixer {
-                Mixer::CatFft if !cfg.causal() => {
-                    let plan = split_rfft_plan(n);
-                    let f = plan.spectrum_len();
-                    pool::run(tasks, 8 * n * log_term * dh, |(si, os)| {
-                        arena::with_task_arena(|ta| {
-                            let [zre, zim, vre, vim, scratch] = ta.frame(
-                                [f, f, dh * f, dh * f, plan.scratch_len()]);
-                            corr_fwd_stripe(
-                                &plan, &p[si * n..(si + 1) * n],
-                                &vt[si * dh * n..(si + 1) * dh * n], dh,
-                                os, zre, zim, vre, vim, scratch);
-                        });
-                    });
-                }
-                Mixer::CatFft => {
-                    let plan2 = split_rfft_plan(2 * n);
-                    let f2 = plan2.spectrum_len();
-                    pool::run(tasks, 16 * n * log_term * dh, |(si, os)| {
-                        arena::with_task_arena(|ta| {
-                            let [pad2, out2, zre, zim, vre, vim, scratch] =
-                                ta.frame([2 * n * dh, 2 * n * dh, f2, f2,
-                                          dh * f2, dh * f2,
-                                          plan2.scratch_len()]);
-                            causal_fwd_stripe_batched(
-                                &plan2, &p[si * n..(si + 1) * n],
-                                &vt[si * dh * n..(si + 1) * dh * n], dh,
-                                os, pad2, zre, zim, vre, vim, out2,
-                                scratch);
-                        });
-                    });
-                }
-                Mixer::CatGather => {
-                    pool::run(tasks, 2 * n * n * dh, |(si, os)| {
-                        let prow = &p[si * n..(si + 1) * n];
-                        let vs = &vt[si * dh * n..(si + 1) * dh * n];
-                        for (c, orow) in os.chunks_exact_mut(n).enumerate() {
-                            let vrow = &vs[c * n..(c + 1) * n];
-                            for (i, o) in orow.iter_mut().enumerate() {
-                                let mut acc = 0.0f32;
-                                for (k, &pv) in prow.iter().enumerate() {
-                                    acc += pv * vrow[(i + k) % n];
-                                }
-                                *o = acc;
-                            }
-                        }
-                    });
-                }
-                Mixer::Attention => bail!("mixer/params mismatch"),
-            }
-            from_stripes(tmp2, b, n, h, dh, out);
-        }
-        MixerParams::Attention { w_q, w_k, w_v } => {
-            ensure!(mixer == Mixer::Attention, "mixer/params mismatch");
-            ensure_len(&mut lc.qh, bn * d);
-            ensure_len(&mut lc.kh, bn * d);
-            ensure_len(&mut lc.vh, bn * d);
-            ensure_len(&mut lc.aprobs, b * h * n * n);
-            matmul(&lc.xn1, bn, d, w_q, d, tmp1);
-            to_head_rows(tmp1, b, n, h, dh, &mut lc.qh);
-            matmul(&lc.xn1, bn, d, w_k, d, tmp1);
-            to_head_rows(tmp1, b, n, h, dh, &mut lc.kh);
-            matmul(&lc.xn1, bn, d, w_v, d, tmp1);
-            to_head_rows(tmp1, b, n, h, dh, &mut lc.vh);
-            let scale = 1.0 / (dh as f32).sqrt();
-            let causal = cfg.causal();
-            let (qh, kh, vh) = (&lc.qh, &lc.kh, &lc.vh);
-            let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp2
-                .chunks_mut(n * dh)
-                .enumerate()
-                .zip(lc.aprobs.chunks_mut(n * n))
-                .collect();
-            pool::run(tasks, 4 * n * n * dh, |((si, os), ps)| {
-                let q = &qh[si * n * dh..(si + 1) * n * dh];
-                let k = &kh[si * n * dh..(si + 1) * n * dh];
-                let v = &vh[si * n * dh..(si + 1) * n * dh];
-                for i in 0..n {
-                    let lim = if causal { i + 1 } else { n };
-                    let qi = &q[i * dh..(i + 1) * dh];
-                    let prow = &mut ps[i * n..(i + 1) * n];
-                    for (j, slot) in prow.iter_mut().take(lim).enumerate() {
-                        let kj = &k[j * dh..(j + 1) * dh];
-                        let mut dot = 0.0f32;
-                        for (qv, kv) in qi.iter().zip(kj) {
-                            dot += qv * kv;
-                        }
-                        *slot = dot * scale;
-                    }
-                    softmax_in_place(&mut prow[..lim]);
-                    prow[lim..].fill(0.0);
-                    let orow = &mut os[i * dh..(i + 1) * dh];
-                    orow.fill(0.0);
-                    for (j, &w) in prow.iter().take(lim).enumerate() {
-                        let vrow = &v[j * dh..(j + 1) * dh];
-                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                            *ov += w * vv;
-                        }
-                    }
-                }
-            });
-            from_head_rows(tmp2, b, n, h, dh, out);
-        }
-    }
-    Ok(())
 }
 
 /// Head forward: pooled classifier (ViT) or per-token LM logits, loss +
@@ -2001,9 +1796,10 @@ fn backward_pass(cfg: &TrainConfig, params: &ModelParams,
             *xv += tv;
         }
         // mixer path: x_mid = x_in + mix(LN₁(x_in))
-        mixer_bwd(cfg, l, bp, gb, lc, b, &s.dx, &mut s.tmp2, &mut s.tmp1,
-                  &mut s.tmp3, &mut s.zs, &mut s.znh, &mut s.dqh,
-                  &mut s.dkh, &mut s.dvh)?;
+        mixer::train::bwd(cfg, l, &bp.mixer, &mut gb.mixer, lc, b, &s.dx,
+                          &mut s.tmp2, &mut s.tmp1, &mut s.tmp3, &mut s.zs,
+                          &mut s.znh, &mut s.dqh, &mut s.dkh,
+                          &mut s.dvh)?;
         layernorm_bwd(&s.tmp2, &bp.ln1_g, &lc.ln1, &mut gb.ln1_g,
                       &mut gb.ln1_b, &mut s.tmp3);
         for (xv, &tv) in s.dx.iter_mut().zip(s.tmp3.iter()) {
@@ -2037,205 +1833,6 @@ fn backward_pass(cfg: &TrainConfig, params: &ModelParams,
                 *pv += dv;
             }
         }
-    }
-    Ok(())
-}
-
-/// Mixer backward for one block: consumes the upstream gradient `dx`
-/// (the mix output's gradient), accumulates mixer parameter grads into
-/// `gb`, and writes the gradient w.r.t. the mixer *input* (`lc.xn1`)
-/// into `dxn`.
-#[allow(clippy::too_many_arguments)]
-fn mixer_bwd(cfg: &TrainConfig, layer: usize, bp: &BlockParams,
-             gb: &mut BlockParams, lc: &LayerCache, b: usize, dx: &[f32],
-             dxn: &mut [f32], tmp1: &mut [f32], tmp3: &mut [f32],
-             zs: &mut [f32], znh: &mut [f32], dqh: &mut Vec<f32>,
-             dkh: &mut Vec<f32>, dvh: &mut Vec<f32>) -> Result<()> {
-    let d = cfg.d_model;
-    let n = cfg.n_tokens();
-    let h = cfg.n_heads;
-    let dh = d / h;
-    let bn = b * n;
-    let mixer = cfg.mixer_at(layer);
-    match (&bp.mixer, &mut gb.mixer) {
-        (MixerParams::Cat { w_a, w_v },
-         MixerParams::Cat { w_a: gw_a, w_v: gw_v }) => {
-            to_stripes(dx, b, n, h, dh, tmp3);
-            let p = &lc.p;
-            let vt = &lc.vt;
-            let dout_s = &*tmp3;
-            let naive = naive_backward();
-            let log_term = n.trailing_zeros() as usize + 1;
-            let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp1
-                .chunks_mut(dh * n)
-                .enumerate()
-                .zip(zs.chunks_mut(n))
-                .collect();
-            match mixer {
-                Mixer::CatFft if !cfg.causal() => {
-                    let plan = split_rfft_plan(n);
-                    let f = plan.spectrum_len();
-                    pool::run(tasks, 12 * n * log_term * dh,
-                              |((si, dvs), dps)| {
-                        arena::with_task_arena(|ta| {
-                            let [zre, zim, vre, vim, gre, gim, are, aim,
-                                 scratch] = ta.frame(
-                                [f, f, dh * f, dh * f, dh * f, dh * f, f,
-                                 f, plan.scratch_len()]);
-                            corr_bwd_stripe(
-                                &plan, &p[si * n..(si + 1) * n],
-                                &vt[si * dh * n..(si + 1) * dh * n],
-                                &dout_s[si * dh * n..(si + 1) * dh * n],
-                                dh, dps, dvs, zre, zim, vre, vim, gre,
-                                gim, are, aim, scratch);
-                        });
-                        if !naive {
-                            // fused: the p row is still cache-hot
-                            softmax_bwd_in_place(
-                                &p[si * n..(si + 1) * n], dps);
-                        }
-                    });
-                }
-                Mixer::CatFft => {
-                    let plan2 = split_rfft_plan(2 * n);
-                    let f2 = plan2.spectrum_len();
-                    pool::run(tasks, 24 * n * log_term * dh,
-                              |((si, dvs), dps)| {
-                        if naive {
-                            arena::with_task_arena(|ta| {
-                                let [pad, row2, zre, zim, vre, vim, gre,
-                                     gim, tre, tim, are, aim, scratch] =
-                                    ta.frame(
-                                    [2 * n, 2 * n, f2, f2, f2, f2, f2,
-                                     f2, f2, f2, f2, f2,
-                                     plan2.scratch_len()]);
-                                causal_bwd_stripe(
-                                    &plan2, &p[si * n..(si + 1) * n],
-                                    &vt[si * dh * n..(si + 1) * dh * n],
-                                    &dout_s[si * dh * n..(si + 1) * dh * n],
-                                    dh, dps, dvs, pad, zre, zim, vre,
-                                    vim, gre, gim, tre, tim, are, aim,
-                                    row2, scratch);
-                            });
-                        } else {
-                            arena::with_task_arena(|ta| {
-                                let [pad2, out2, zre, zim, vre, vim, gre,
-                                     gim, are, aim, scratch] = ta.frame(
-                                    [2 * n * dh, 2 * n * dh, f2, f2,
-                                     dh * f2, dh * f2, dh * f2, dh * f2,
-                                     f2, f2, plan2.scratch_len()]);
-                                causal_bwd_stripe_batched(
-                                    &plan2, &p[si * n..(si + 1) * n],
-                                    &vt[si * dh * n..(si + 1) * dh * n],
-                                    &dout_s[si * dh * n..(si + 1) * dh * n],
-                                    dh, dps, dvs, pad2, zre, zim, vre,
-                                    vim, gre, gim, are, aim, out2,
-                                    scratch);
-                            });
-                            softmax_bwd_in_place(
-                                &p[si * n..(si + 1) * n], dps);
-                        }
-                    });
-                }
-                Mixer::CatGather => {
-                    pool::run(tasks, 4 * n * n * dh, |((si, dvs), dps)| {
-                        let prow = &p[si * n..(si + 1) * n];
-                        let vs = &vt[si * dh * n..(si + 1) * dh * n];
-                        let dos = &dout_s[si * dh * n..(si + 1) * dh * n];
-                        for (c, dvrow) in
-                            dvs.chunks_exact_mut(n).enumerate() {
-                            let dorow = &dos[c * n..(c + 1) * n];
-                            for (j, slot) in dvrow.iter_mut().enumerate() {
-                                let mut acc = 0.0f32;
-                                for (i, &dov) in dorow.iter().enumerate() {
-                                    acc += dov * prow[(j + n - i) % n];
-                                }
-                                *slot = acc;
-                            }
-                        }
-                        for (kk, slot) in dps.iter_mut().enumerate() {
-                            let mut acc = 0.0f32;
-                            for c in 0..dh {
-                                let dorow = &dos[c * n..(c + 1) * n];
-                                let vrow = &vs[c * n..(c + 1) * n];
-                                for (i, &dov) in dorow.iter().enumerate() {
-                                    acc += dov * vrow[(i + kk) % n];
-                                }
-                            }
-                            *slot = acc;
-                        }
-                        if !naive {
-                            softmax_bwd_in_place(prow, dps);
-                        }
-                    });
-                }
-                Mixer::Attention => bail!("mixer/params mismatch"),
-            }
-            from_stripes(tmp1, b, n, h, dh, tmp3); // dV in (b, n, d)
-            matmul_xt_acc(&lc.xn1, bn, d, tmp3, d, gw_v);
-            matmul_wt(tmp3, bn, d, w_v, d, dxn, false);
-            if naive {
-                // reference path: separate softmax-backward sweep
-                for (prow, dprow) in
-                    lc.p.chunks_exact(n).zip(zs.chunks_exact_mut(n)) {
-                    softmax_bwd_in_place(prow, dprow);
-                }
-            }
-            for bi in 0..b {
-                for head in 0..h {
-                    for i in 0..n {
-                        znh[(bi * n + i) * h + head] =
-                            zs[(bi * h + head) * n + i];
-                    }
-                }
-            }
-            matmul_xt_acc(&lc.xn1, bn, d, znh, h, gw_a);
-            matmul_wt(znh, bn, h, w_a, d, dxn, true);
-        }
-        (MixerParams::Attention { w_q, w_k, w_v },
-         MixerParams::Attention { w_q: gw_q, w_k: gw_k, w_v: gw_v }) => {
-            to_head_rows(dx, b, n, h, dh, tmp3);
-            ensure_len(dqh, bn * d);
-            ensure_len(dkh, bn * d);
-            ensure_len(dvh, bn * d);
-            let (qh, kh, vh) = (&lc.qh, &lc.kh, &lc.vh);
-            let probs = &lc.aprobs;
-            let dos = &*tmp3;
-            let scale = 1.0 / (dh as f32).sqrt();
-            let causal = cfg.causal();
-            let tasks: Vec<(((usize, &mut [f32]), &mut [f32]),
-                            &mut [f32])> = dqh
-                .chunks_mut(n * dh)
-                .enumerate()
-                .zip(dkh.chunks_mut(n * dh))
-                .zip(dvh.chunks_mut(n * dh))
-                .collect();
-            let naive = naive_backward();
-            pool::run(tasks, 6 * n * n * dh, |(((si, dqs), dks), dvs)| {
-                let q = &qh[si * n * dh..(si + 1) * n * dh];
-                let k = &kh[si * n * dh..(si + 1) * n * dh];
-                let v = &vh[si * n * dh..(si + 1) * n * dh];
-                let ps = &probs[si * n * n..(si + 1) * n * n];
-                let dost = &dos[si * n * dh..(si + 1) * n * dh];
-                if naive {
-                    attn_bwd_stripe_rows(q, k, v, ps, dost, n, dh, scale,
-                                         causal, dqs, dks, dvs);
-                } else {
-                    attn_bwd_stripe_panels(q, k, v, ps, dost, n, dh, scale,
-                                           causal, dqs, dks, dvs);
-                }
-            });
-            from_head_rows(dqh, b, n, h, dh, tmp1);
-            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_q);
-            matmul_wt(tmp1, bn, d, w_q, d, dxn, false);
-            from_head_rows(dkh, b, n, h, dh, tmp1);
-            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_k);
-            matmul_wt(tmp1, bn, d, w_k, d, dxn, true);
-            from_head_rows(dvh, b, n, h, dh, tmp1);
-            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_v);
-            matmul_wt(tmp1, bn, d, w_v, d, dxn, true);
-        }
-        _ => bail!("mixer params/grads variant mismatch"),
     }
     Ok(())
 }
@@ -2514,6 +2111,7 @@ mod tests {
                 batch_size: 2,
                 mixer: Mixer::CatFft,
                 alternate: true, // covers the attention mixer too
+                fnet_truncate: false,
                 task: TaskKind::Lm { vocab: 64, seq_len: 16, causal },
             };
             let mut m = TrainModel::new(cfg, 9).unwrap();

@@ -34,6 +34,7 @@ use anyhow::ensure;
 
 use super::arena;
 use super::fft::split_rfft_plan;
+use super::mixer::{serve::ServeMixer, Mixer};
 use super::pool;
 use crate::data::Rng;
 use crate::obs::trace::{self as obs_trace, Stage};
@@ -160,6 +161,7 @@ fn merge_heads(src: &[f32], b: usize, n: usize, h: usize, dh: usize,
 /// of heads — the model-parallel unit of sharded serving: per-head
 /// spectra never interact before the merge, so a slice computes columns
 /// `[h0·dh, h1·dh)` of the full layer's output bit-for-bit.
+#[derive(Clone)]
 pub struct CatLayer {
     /// Input dim (always the full model width, even for a slice).
     pub d: usize,
@@ -213,6 +215,13 @@ impl CatLayer {
     /// CAT budget (a head slice counts only its own columns).
     pub fn param_count(&self) -> usize {
         self.w_a.len() + self.w_v.len()
+    }
+
+    /// Drop the mixing weights (sharded serving trunk); a stripped layer
+    /// errors cleanly from [`Self::forward_into`].
+    pub(crate) fn strip(&mut self) {
+        self.w_a = Vec::new();
+        self.w_v = Vec::new();
     }
 
     /// Mix tokens: `x: (b, n, d)` row-major → freshly allocated
@@ -433,6 +442,7 @@ impl CatLayer {
 // ---------------------------------------------------------------------------
 
 /// Standard multi-head softmax attention, row-streamed (O(N) scratch).
+#[derive(Clone)]
 pub struct AttentionLayer {
     pub d: usize,
     pub h: usize,
@@ -458,7 +468,14 @@ impl AttentionLayer {
 
     /// Paper accounting: `3·d²` learnables.
     pub fn param_count(&self) -> usize {
-        3 * self.d * self.d
+        self.w_q.len() + self.w_k.len() + self.w_v.len()
+    }
+
+    /// Drop the mixing weights (sharded serving trunk).
+    pub(crate) fn strip(&mut self) {
+        self.w_q = Vec::new();
+        self.w_k = Vec::new();
+        self.w_v = Vec::new();
     }
 
     /// `x: (b, n, d)` → freshly allocated `(b, n, d)` via
@@ -478,6 +495,11 @@ impl AttentionLayer {
                 "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
         ensure!(out.len() == b * n * d,
                 "out has {} elements, expected {}x{}x{}", out.len(), b, n, d);
+        ensure!(self.w_q.len() == d * d && self.w_k.len() == d * d
+                    && self.w_v.len() == d * d,
+                "attention mixing weights are absent — this layer was \
+                 stripped (sharded serving trunk) and cannot mix tokens \
+                 itself");
         let scale = 1.0 / (dh as f32).sqrt();
         arena::with_layer_arena(|la| {
             let [proj, qh, kh, vh, oh] = la.frame([
@@ -550,6 +572,9 @@ pub struct NativeVitConfig {
     pub n_channels: usize,
     pub n_classes: usize,
     pub cat_impl: CatImpl,
+    /// Token mixer of every block (registry id; `--mixer` on the CLI).
+    /// `cat_impl` only routes the CAT variant's apply, as before.
+    pub mixer: Mixer,
 }
 
 impl Default for NativeVitConfig {
@@ -563,6 +588,7 @@ impl Default for NativeVitConfig {
             n_channels: 3,
             n_classes: 10,
             cat_impl: CatImpl::Fft,
+            mixer: Mixer::CatFft,
         }
     }
 }
@@ -605,10 +631,10 @@ impl LayerNorm {
     }
 }
 
-/// One transformer block: pre-LN CAT mixing + pre-LN 2×-wide ReLU MLP.
+/// One transformer block: pre-LN token mixing + pre-LN 2×-wide ReLU MLP.
 struct Block {
     ln1: LayerNorm,
-    cat: CatLayer,
+    mixer: ServeMixer,
     ln2: LayerNorm,
     mlp_w1: Vec<f32>,
     mlp_b1: Vec<f32>,
@@ -649,7 +675,8 @@ impl NativeCatModel {
             let mut brng = rng.fork(layer as u64);
             blocks.push(Block {
                 ln1: LayerNorm::identity(d),
-                cat: CatLayer::init(d, cfg.n_heads, &mut brng),
+                mixer: ServeMixer::init(cfg.mixer, d, cfg.n_heads,
+                                        &mut brng),
                 ln2: LayerNorm::identity(d),
                 mlp_w1: (0..d * 2 * d).map(|_| 0.02 * brng.normal()).collect(),
                 mlp_b1: vec![0.0; 2 * d],
@@ -673,7 +700,7 @@ impl NativeCatModel {
     pub fn param_count(&self) -> usize {
         let d = self.cfg.d_model;
         let per_block = self.blocks.first().map_or(0, |b| {
-            b.cat.param_count()
+            b.mixer.param_count()
                 + b.mlp_w1.len() + b.mlp_b1.len()
                 + b.mlp_w2.len() + b.mlp_b2.len()
                 + 2 * 2 * d
@@ -689,12 +716,14 @@ impl NativeCatModel {
         self.blocks.len()
     }
 
-    /// Head-sliced copies of every block's CAT mixing layer for heads
+    /// Head-sliced copies of every block's mixing layer for heads
     /// `[h0, h1)` — the per-shard weights of sharded serving
     /// (`coordinator::shard`). Slice `i` of the returned vec pairs with
-    /// block `i` of this model.
-    pub fn sliced_cat_layers(&self, h0: usize, h1: usize) -> Vec<CatLayer> {
-        self.blocks.iter().map(|bl| bl.cat.head_slice(h0, h1)).collect()
+    /// block `i` of this model. Non-head-separable mixers only admit the
+    /// degenerate full-range slice (the shard planner enforces this).
+    pub fn sliced_mixer_layers(&self, h0: usize, h1: usize)
+                               -> Vec<ServeMixer> {
+        self.blocks.iter().map(|bl| bl.mixer.head_slice(h0, h1)).collect()
     }
 
     /// Drop every block's mixing weights, keeping only the trunk (patch
@@ -705,16 +734,15 @@ impl NativeCatModel {
     /// mixer path errors cleanly (`forward_into` checks weight lengths).
     pub(crate) fn strip_mixer_weights(&mut self) {
         for block in &mut self.blocks {
-            block.cat.w_a = Vec::new();
-            block.cat.w_v = Vec::new();
+            block.mixer.strip();
         }
     }
 
     /// Classify a batch of CHW images: `(b, C·H·W)` flat → `(b, classes)`.
     pub fn forward_batch(&self, images: &[f32], b: usize) -> Result<Vec<f32>> {
         self.forward_batch_with(images, b, |li, norm, bb, n, mixed| {
-            self.blocks[li].cat.forward_into(norm, bb, n, self.cfg.cat_impl,
-                                             mixed)
+            self.blocks[li].mixer.forward_into(norm, bb, n,
+                                               self.cfg.cat_impl, mixed)
         })
     }
 

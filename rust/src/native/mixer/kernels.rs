@@ -1,0 +1,348 @@
+//! Fast-path kernels of the new zoo mixers, each pinned to a naive
+//! oracle in the unit tests below (and to finite differences in
+//! `tests/proptests.rs`).
+//!
+//! **FNet slab** ([`fnet_slab`]): the parameter-free 2D Fourier mixer.
+//! For one batch element's `(n, d)` activation slab,
+//!
+//! ```text
+//!   y[i, c] = s · Re( Σ_{j,e} x[j, e] · exp(-2πi·(ij/n + ce/d)) )
+//!           = s · Σ_{j,e} x[j, e] · cos(2π·(ij/n + ce/d)),
+//!   s = 1 / sqrt(n·d)
+//! ```
+//!
+//! The `1/sqrt(n·d)` output scale keeps the residual stream at unit
+//! order inside the pre-LN trunk (an unnormalized 2D DFT would inflate
+//! it by ~sqrt(n·d)); the naive oracle and the backward use the same
+//! scale. The cosine kernel is symmetric under `(i,c) ↔ (j,e)`, so the
+//! operator is **self-adjoint**: the backward is the same transform
+//! applied to the output gradient — no activation cache at all. The
+//! optional half-spectrum truncation knob zeroes output channels
+//! `c > d/2` (forward = mask∘F); by self-adjointness its backward is
+//! F∘mask.
+//!
+//! The fast path runs entirely on split-complex real FFTs: one batched
+//! hidden-axis rfft over the slab's rows, then per hidden bin a
+//! token-axis rfft of the (complex) spectrum column via FFT linearity —
+//! `FFT(a + ib) = FFT(a) + i·FFT(b)` — keeping every buffer a plain
+//! `&mut [f32]` arena frame. Only the real part is ever materialized.
+//!
+//! **Circulant attention scores** ([`circ_scores_stripe`]): per
+//! `(batch, head)` stripe with channel-major `(dh, n)` projections, one
+//! shared relative-offset score row
+//!
+//! ```text
+//!   s_raw[t] = Σ_c Σ_j q_c[j] · k_c[(j+t) % n]
+//!            = irfft( Σ_c conj(Qf_c) ⊙ Kf_c )[t]
+//! ```
+//!
+//! i.e. the channel-summed circular cross-correlation of q with k —
+//! O(N log N) instead of attention's O(N²) score matrix. The caller
+//! scales by `1/sqrt(dh·n)` (the summand-count analog of attention's
+//! `1/sqrt(dh)`), softmaxes the row, and applies it with the existing
+//! CAT correlation kernel. [`circ_scores_bwd_stripe`] is the exact
+//! reverse: `dq_c = corr(ds, k_c)` (spectrum `conj(DSf)⊙Kf`) and
+//! `dk_c = conv(ds, q_c)` (spectrum `DSf⊙Qf`).
+
+use super::super::arena;
+use super::super::autograd::{cmul, cmul_conj_a};
+use super::super::fft::{split_rfft_plan, SplitRfftPlan};
+
+/// FNet 2D Fourier mix of one `(n, d)` slab into `out` (fully
+/// overwritten). `n` and `d` must be powers of two. With `truncate`,
+/// output channels `c > d/2` are zeroed (half-spectrum truncation).
+/// All intermediates live in the calling thread's task arena.
+pub fn fnet_slab(x: &[f32], n: usize, d: usize, truncate: bool,
+                 out: &mut [f32]) {
+    assert!(n.is_power_of_two() && d.is_power_of_two(),
+            "fnet needs power-of-two n and d, got n={n} d={d}");
+    assert_eq!(x.len(), n * d);
+    assert_eq!(out.len(), n * d);
+    let plan_d = split_rfft_plan(d);
+    let plan_n = split_rfft_plan(n);
+    let fd = plan_d.spectrum_len(); // d/2 + 1
+    let fnh = plan_n.spectrum_len(); // n/2 + 1
+    let scale = 1.0 / ((n * d) as f32).sqrt();
+    arena::with_task_arena(|ta| {
+        let [hre, him, col_a, col_b, ar, ai, br, bi, g, scratch] = ta.frame([
+            n * fd,
+            n * fd,
+            n,
+            n,
+            fnh,
+            fnh,
+            fnh,
+            fnh,
+            fd * n,
+            plan_d.scratch_len().max(plan_n.scratch_len()),
+        ]);
+        // hidden-axis spectrum H: (n, fd) — one batched rfft per slab
+        plan_d.rfft_many(x, n, hre, him, scratch);
+        // token-axis DFT of each hidden bin's (complex) column via
+        // linearity: G[·, f] = FFT(a) + i·FFT(b). Only Re G survives;
+        // the upper token half comes from Hermitian symmetry of the
+        // real columns a and b.
+        for f in 0..fd {
+            for i in 0..n {
+                col_a[i] = hre[i * fd + f];
+                col_b[i] = him[i * fd + f];
+            }
+            plan_n.rfft(col_a, ar, ai, scratch);
+            plan_n.rfft(col_b, br, bi, scratch);
+            let grow = &mut g[f * n..(f + 1) * n];
+            for (k, slot) in grow.iter_mut().enumerate() {
+                *slot = if k <= n / 2 {
+                    ar[k] - bi[k]
+                } else {
+                    ar[n - k] + bi[n - k]
+                };
+            }
+        }
+        // scatter Re G back to (n, d): hidden bins above d/2 mirror the
+        // conjugate bin at the negated token frequency
+        for i in 0..n {
+            let yrow = &mut out[i * d..(i + 1) * d];
+            for (c, slot) in yrow.iter_mut().enumerate() {
+                *slot = if c <= d / 2 {
+                    scale * g[c * n + i]
+                } else if truncate {
+                    0.0
+                } else {
+                    scale * g[(d - c) * n + (n - i) % n]
+                };
+            }
+        }
+    });
+}
+
+/// Direct O(n²·d²) FNet oracle — the definition, term by term.
+pub fn fnet_naive(x: &[f32], n: usize, d: usize, truncate: bool)
+                  -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    let scale = 1.0 / ((n * d) as f32).sqrt();
+    let mut out = vec![0.0f32; n * d];
+    for i in 0..n {
+        for c in 0..d {
+            if truncate && c > d / 2 {
+                continue;
+            }
+            let mut acc = 0.0f64;
+            for j in 0..n {
+                for e in 0..d {
+                    let theta = 2.0 * std::f64::consts::PI
+                        * (i as f64 * j as f64 / n as f64
+                            + c as f64 * e as f64 / d as f64);
+                    acc += x[j * d + e] as f64 * theta.cos();
+                }
+            }
+            out[i * d + c] = (scale as f64 * acc) as f32;
+        }
+    }
+    out
+}
+
+/// Score scale shared by the circulant train and serve paths:
+/// `1/sqrt(dh·n)`, the summand-count analog of attention's `1/sqrt(dh)`.
+pub(crate) fn circ_scale(dh: usize, n: usize) -> f32 {
+    1.0 / ((dh * n) as f32).sqrt()
+}
+
+/// Circulant-attention raw score row of one stripe:
+/// `s[t] = Σ_c Σ_j q_c[j]·k_c[(j+t)%n]` via the frequency domain.
+/// `q`, `k`: channel-major `(dh, n)`; `s`: length `n` (overwritten).
+/// Buffers: `qre/qim/kre/kim` hold `dh·f`, `acc_re/acc_im` hold `f`,
+/// `scratch` holds `plan.scratch_len()`, where `f = n/2 + 1`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn circ_scores_stripe(plan: &SplitRfftPlan, q: &[f32], k: &[f32],
+                                 dh: usize, s: &mut [f32],
+                                 qre: &mut [f32], qim: &mut [f32],
+                                 kre: &mut [f32], kim: &mut [f32],
+                                 acc_re: &mut [f32], acc_im: &mut [f32],
+                                 scratch: &mut [f32]) {
+    let f = plan.spectrum_len();
+    plan.rfft_many(q, dh, qre, qim, scratch);
+    plan.rfft_many(k, dh, kre, kim, scratch);
+    acc_re.fill(0.0);
+    acc_im.fill(0.0);
+    // fixed ascending-channel accumulation: pool-width invariant
+    for c in 0..dh {
+        let (qr, qi) = (&qre[c * f..(c + 1) * f], &qim[c * f..(c + 1) * f]);
+        let (kr, ki) = (&kre[c * f..(c + 1) * f], &kim[c * f..(c + 1) * f]);
+        for t in 0..f {
+            let (re, im) = cmul_conj_a(qr[t], qi[t], kr[t], ki[t]);
+            acc_re[t] += re;
+            acc_im[t] += im;
+        }
+    }
+    plan.irfft(acc_re, acc_im, s, scratch);
+}
+
+/// Backward of [`circ_scores_stripe`]: given `ds` (gradient w.r.t. the
+/// raw score row), write `dq`, `dk` (channel-major `(dh, n)`, fully
+/// overwritten). Same buffer contract as the forward plus `sre/sim`
+/// of length `f` for the `ds` spectrum.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn circ_scores_bwd_stripe(plan: &SplitRfftPlan, q: &[f32],
+                                     k: &[f32], ds: &[f32], dh: usize,
+                                     dq: &mut [f32], dk: &mut [f32],
+                                     sre: &mut [f32], sim: &mut [f32],
+                                     qre: &mut [f32], qim: &mut [f32],
+                                     kre: &mut [f32], kim: &mut [f32],
+                                     scratch: &mut [f32]) {
+    let f = plan.spectrum_len();
+    plan.rfft(ds, sre, sim, scratch);
+    plan.rfft_many(q, dh, qre, qim, scratch);
+    plan.rfft_many(k, dh, kre, kim, scratch);
+    for c in 0..dh {
+        let (qr, qi) =
+            (&mut qre[c * f..(c + 1) * f], &mut qim[c * f..(c + 1) * f]);
+        let (kr, ki) =
+            (&mut kre[c * f..(c + 1) * f], &mut kim[c * f..(c + 1) * f]);
+        for t in 0..f {
+            // dq_c = corr(ds, k_c): spectrum conj(DS)·K, in place over K
+            let (re, im) = cmul_conj_a(sre[t], sim[t], kr[t], ki[t]);
+            kr[t] = re;
+            ki[t] = im;
+            // dk_c = conv(ds, q_c): spectrum DS·Q, in place over Q
+            let (re, im) = cmul(sre[t], sim[t], qr[t], qi[t]);
+            qr[t] = re;
+            qi[t] = im;
+        }
+    }
+    plan.irfft_many(kre, kim, dh, dq, scratch);
+    plan.irfft_many(qre, qim, dh, dk, scratch);
+}
+
+/// Direct O(n²·dh) circulant-score oracle.
+pub fn circ_scores_naive(q: &[f32], k: &[f32], dh: usize, n: usize)
+                         -> Vec<f32> {
+    assert_eq!(q.len(), dh * n);
+    assert_eq!(k.len(), dh * n);
+    let mut s = vec![0.0f32; n];
+    for (t, slot) in s.iter_mut().enumerate() {
+        let mut acc = 0.0f32;
+        for c in 0..dh {
+            let (qc, kc) = (&q[c * n..(c + 1) * n], &k[c * n..(c + 1) * n]);
+            for (j, &qv) in qc.iter().enumerate() {
+                acc += qv * kc[(j + t) % n];
+            }
+        }
+        *slot = acc;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    #[test]
+    fn fnet_fast_path_matches_naive_dft() {
+        for (n, d, seed) in [(8usize, 8usize, 1u64), (16, 8, 2), (8, 16, 3),
+                             (16, 32, 4), (4, 2, 5)] {
+            let x = randv(n * d, seed);
+            for truncate in [false, true] {
+                let want = fnet_naive(&x, n, d, truncate);
+                let mut got = vec![0.0f32; n * d];
+                fnet_slab(&x, n, d, truncate, &mut got);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!((g - w).abs() < 1e-3,
+                            "n={n} d={d} trunc={truncate} elem {i}: \
+                             {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fnet_is_self_adjoint() {
+        // <F(x), y> == <x, F(y)>: the property the backward relies on
+        let (n, d) = (16usize, 8usize);
+        let x = randv(n * d, 7);
+        let y = randv(n * d, 8);
+        let mut fx = vec![0.0f32; n * d];
+        let mut fy = vec![0.0f32; n * d];
+        fnet_slab(&x, n, d, false, &mut fx);
+        fnet_slab(&y, n, d, false, &mut fy);
+        let a: f64 = fx.iter().zip(&y).map(|(&u, &v)| (u * v) as f64).sum();
+        let b: f64 = x.iter().zip(&fy).map(|(&u, &v)| (u * v) as f64).sum();
+        assert!((a - b).abs() < 1e-3 * a.abs().max(b.abs()).max(1.0),
+                "<Fx,y>={a} vs <x,Fy>={b}");
+    }
+
+    #[test]
+    fn fnet_rejects_non_power_of_two() {
+        let x = vec![0.0f32; 12 * 8];
+        let mut out = vec![0.0f32; 12 * 8];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || fnet_slab(&x, 12, 8, false, &mut out)));
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn circ_scores_match_naive() {
+        let (n, dh) = (16usize, 3usize);
+        let plan = split_rfft_plan(n);
+        let f = plan.spectrum_len();
+        let q = randv(dh * n, 11);
+        let k = randv(dh * n, 12);
+        let want = circ_scores_naive(&q, &k, dh, n);
+        let mut s = vec![0.0f32; n];
+        let mut qre = vec![0.0f32; dh * f];
+        let mut qim = vec![0.0f32; dh * f];
+        let mut kre = vec![0.0f32; dh * f];
+        let mut kim = vec![0.0f32; dh * f];
+        let mut are = vec![0.0f32; f];
+        let mut aim = vec![0.0f32; f];
+        let mut scratch = vec![0.0f32; plan.scratch_len()];
+        circ_scores_stripe(&plan, &q, &k, dh, &mut s, &mut qre, &mut qim,
+                           &mut kre, &mut kim, &mut are, &mut aim,
+                           &mut scratch);
+        for (t, (g, w)) in s.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-3, "t={t}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn circ_scores_backward_matches_direct_adjoint() {
+        // dq_c[j] = Σ_t ds[t]·k_c[(j+t)%n]; dk_c[m] = Σ_t ds[t]·q_c[(m-t)%n]
+        let (n, dh) = (8usize, 2usize);
+        let plan = split_rfft_plan(n);
+        let f = plan.spectrum_len();
+        let q = randv(dh * n, 21);
+        let k = randv(dh * n, 22);
+        let ds = randv(n, 23);
+        let mut dq = vec![0.0f32; dh * n];
+        let mut dk = vec![0.0f32; dh * n];
+        let mut sre = vec![0.0f32; f];
+        let mut sim = vec![0.0f32; f];
+        let mut qre = vec![0.0f32; dh * f];
+        let mut qim = vec![0.0f32; dh * f];
+        let mut kre = vec![0.0f32; dh * f];
+        let mut kim = vec![0.0f32; dh * f];
+        let mut scratch = vec![0.0f32; plan.scratch_len()];
+        circ_scores_bwd_stripe(&plan, &q, &k, &ds, dh, &mut dq, &mut dk,
+                               &mut sre, &mut sim, &mut qre, &mut qim,
+                               &mut kre, &mut kim, &mut scratch);
+        for c in 0..dh {
+            for j in 0..n {
+                let mut want_q = 0.0f32;
+                let mut want_k = 0.0f32;
+                for (t, &dv) in ds.iter().enumerate() {
+                    want_q += dv * k[c * n + (j + t) % n];
+                    want_k += dv * q[c * n + (j + n - t % n) % n];
+                }
+                assert!((dq[c * n + j] - want_q).abs() < 1e-4,
+                        "dq c={c} j={j}: {} vs {want_q}", dq[c * n + j]);
+                assert!((dk[c * n + j] - want_k).abs() < 1e-4,
+                        "dk c={c} j={j}: {} vs {want_k}", dk[c * n + j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,352 @@
+//! The mixer registry: the single source of truth for every token-mixing
+//! mechanism the native backend knows how to train and serve.
+//!
+//! The paper's EIT framing treats CAT as one member of a family of
+//! sub-quadratic mixers; this module makes that family a first-class
+//! axis. One [`MixerSpec`] row per mixer carries everything the rest of
+//! the codebase used to hardcode in scattered `match` statements:
+//!
+//! * identity — enum variant, display name, checkpoint id;
+//! * accounting — the paper-style param-count formula and the
+//!   complexity/memory columns of the result tables;
+//! * capabilities — causal support, head separability (whether sharded
+//!   serving may split it), power-of-two shape requirements.
+//!
+//! The per-layer schedule (CAT-Alter's odd-layer attention swap) and the
+//! mechanism label ("cat_alter") also live here, so `TrainConfig`,
+//! the harness, the CLI, checkpointing, and the shard planner all
+//! consult one table. **Adding a mixer** means: one enum variant, one
+//! `REGISTRY` row, one arm in [`train::init_params`] /
+//! [`train::fwd`] / [`train::bwd`], one arm in
+//! [`serve::ServeMixer`] — all in this directory (DESIGN.md §14).
+
+pub mod kernels;
+pub(crate) mod serve;
+pub(crate) mod train;
+
+use crate::Result;
+use anyhow::{bail, ensure};
+
+/// Which token-mixing mechanism a layer runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mixer {
+    /// CAT via batched real FFTs — the paper's O(N log N) mechanism.
+    CatFft,
+    /// CAT via the naive rolled gather — the O(N²) reference.
+    CatGather,
+    /// Standard softmax attention — the quality/wallclock baseline.
+    Attention,
+    /// FNet-style parameter-free 2D Fourier mixer (real part of the
+    /// token×hidden DFT), with an optional half-spectrum truncation
+    /// knob (`TrainConfig::fnet_truncate`).
+    Fnet,
+    /// Circulant attention (ViT variant): one shared softmax row of
+    /// relative-offset scores per head, applied as a circular
+    /// cross-correlation — O(N log N) with attention's 3d² budget.
+    Circulant,
+}
+
+/// One registry row: everything the harness, trainer, server, CLI, and
+/// checkpoint format need to know about a mixer.
+#[derive(Debug, Clone, Copy)]
+pub struct MixerSpec {
+    pub mixer: Mixer,
+    /// CLI / spec / table name ("cat", "fnet", ...).
+    pub name: &'static str,
+    /// Stable id written into checkpoint config fingerprints. Ids 0–2
+    /// predate the registry and are frozen by the `CATCKPT2` format;
+    /// ids ≥ 3 force the versioned `CATCKPT3` fingerprint.
+    pub ckpt_id: u64,
+    /// Paper-style learnable-parameter formula (Tables 1–3 accounting).
+    pub params_formula: &'static str,
+    /// Time-complexity column of the result tables.
+    pub complexity: &'static str,
+    /// Memory column of the result tables.
+    pub memory: &'static str,
+    /// Does the mixer support causal (autoregressive) training?
+    pub causal: bool,
+    /// May sharded serving split this mixer head-wise? True only when a
+    /// head's output depends on nothing outside that head's weight
+    /// columns (the bit-exact column-slicing invariant).
+    pub head_separable: bool,
+    /// Does the fast path need a power-of-two token count N?
+    pub needs_pow2_n: bool,
+    /// Does the fast path need a power-of-two model width d?
+    pub needs_pow2_d: bool,
+}
+
+/// The mixer zoo. Exactly one row per [`Mixer`] variant (pinned by a
+/// test); row order is display order for `cat list` and the README.
+pub const REGISTRY: &[MixerSpec] = &[
+    MixerSpec {
+        mixer: Mixer::CatFft,
+        name: "cat",
+        ckpt_id: 0,
+        params_formula: "(d+h)d",
+        complexity: "O(N log N)",
+        memory: "O(N)",
+        causal: true,
+        head_separable: true,
+        needs_pow2_n: true,
+        needs_pow2_d: false,
+    },
+    MixerSpec {
+        mixer: Mixer::CatGather,
+        name: "cat_gather",
+        ckpt_id: 1,
+        params_formula: "(d+h)d",
+        complexity: "O(N^2)",
+        memory: "O(N^2)",
+        causal: false,
+        head_separable: true,
+        needs_pow2_n: false,
+        needs_pow2_d: false,
+    },
+    MixerSpec {
+        mixer: Mixer::Attention,
+        name: "attention",
+        ckpt_id: 2,
+        params_formula: "3d^2",
+        complexity: "O(N^2)",
+        memory: "O(N^2)",
+        causal: true,
+        head_separable: false,
+        needs_pow2_n: false,
+        needs_pow2_d: false,
+    },
+    MixerSpec {
+        mixer: Mixer::Fnet,
+        name: "fnet",
+        ckpt_id: 3,
+        params_formula: "0",
+        complexity: "O(N log N)",
+        memory: "O(N)",
+        causal: false,
+        head_separable: false,
+        needs_pow2_n: true,
+        needs_pow2_d: true,
+    },
+    MixerSpec {
+        mixer: Mixer::Circulant,
+        name: "circulant",
+        ckpt_id: 4,
+        params_formula: "3d^2",
+        complexity: "O(N log N)",
+        memory: "O(N)",
+        causal: false,
+        head_separable: true,
+        needs_pow2_n: true,
+        needs_pow2_d: false,
+    },
+];
+
+impl Mixer {
+    /// This mixer's registry row.
+    pub fn spec(self) -> &'static MixerSpec {
+        REGISTRY
+            .iter()
+            .find(|s| s.mixer == self)
+            .expect("every Mixer variant has a REGISTRY row")
+    }
+
+    /// Display / CLI / spec name.
+    pub fn name(self) -> &'static str {
+        self.spec().name
+    }
+
+    /// Resolve a registry name ("cat", "fnet", ...) back to a mixer.
+    pub fn parse(name: &str) -> Option<Mixer> {
+        REGISTRY.iter().find(|s| s.name == name).map(|s| s.mixer)
+    }
+}
+
+/// The per-layer mixer schedule: CAT-Alter (and any `*_alter` config)
+/// swaps odd layers to softmax attention, even layers keep the base
+/// mixer.
+pub fn schedule_at(base: Mixer, alternate: bool, layer: usize) -> Mixer {
+    if alternate && layer % 2 == 1 {
+        Mixer::Attention
+    } else {
+        base
+    }
+}
+
+/// Mechanism label for tables and specs ("cat", "cat_alter", ...).
+pub fn mechanism_label(base: Mixer, alternate: bool) -> String {
+    if alternate {
+        format!("{}_alter", base.name())
+    } else {
+        base.name().to_string()
+    }
+}
+
+/// Paper-style learnable-parameter formula for a mechanism label.
+/// Registered mixers come straight from their spec; the remaining arms
+/// cover schedule labels (`cat_alter` averages the two budgets per the
+/// paper) and PJRT-side mechanisms that have no native mixer.
+pub fn budget_formula(mech: &str) -> &'static str {
+    if let Some(m) = Mixer::parse(mech) {
+        return m.spec().params_formula;
+    }
+    match mech {
+        "cat_alter" => "(2d+h/2)d",
+        "cat_q" => "(n+h)d",
+        "cat_v" => "(n+d)d",
+        "cat_qkv" | "linear" => "3d^2",
+        _ => "?",
+    }
+}
+
+/// `(complexity, memory)` table columns for a mechanism label.
+/// Registered mixers come from their spec (causal CAT-FFT is starred:
+/// the zero-padded linear convolution doubles the transform length).
+pub fn complexity_cols(mech: &str, causal: bool) -> (&'static str, &'static str) {
+    if let Some(m) = Mixer::parse(mech) {
+        let spec = m.spec();
+        if m == Mixer::CatFft && causal {
+            return ("O(N log N)*", "O(N)");
+        }
+        return (spec.complexity, spec.memory);
+    }
+    match (mech, causal) {
+        ("cat_qkv", false) | ("cat_q", false) | ("cat_v", false) => {
+            ("O(N log N)", "O(N)")
+        }
+        ("linear", _) => ("O(N)", "O(N)"),
+        _ => ("O(N^2)", "O(N^2)"),
+    }
+}
+
+/// Validate a `(base, alternate)` schedule against the registry's
+/// capability flags for every layer: power-of-two shape requirements
+/// and causal support. The single mixer-capability gate behind
+/// `TrainConfig::validate`.
+pub fn validate_schedule(base: Mixer, alternate: bool, n_layers: usize,
+                         n_tokens: usize, d_model: usize, causal: bool)
+                         -> Result<()> {
+    for layer in 0..n_layers {
+        let m = schedule_at(base, alternate, layer);
+        let spec = m.spec();
+        if spec.needs_pow2_n {
+            ensure!(n_tokens.is_power_of_two(),
+                    "{} training needs power-of-two N, got {n_tokens}",
+                    spec.name);
+        }
+        if spec.needs_pow2_d {
+            ensure!(d_model.is_power_of_two(),
+                    "{} training needs power-of-two d_model, got {d_model}",
+                    spec.name);
+        }
+        if causal && !spec.causal {
+            bail!("causal training supports cat (zero-padded FFT) and \
+                   attention mixers; '{}' has no causal form", spec.name);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [Mixer; 5] = [Mixer::CatFft, Mixer::CatGather,
+                             Mixer::Attention, Mixer::Fnet,
+                             Mixer::Circulant];
+
+    #[test]
+    fn registry_covers_every_mixer_exactly_once() {
+        assert_eq!(REGISTRY.len(), ALL.len());
+        for m in ALL {
+            assert_eq!(REGISTRY.iter().filter(|s| s.mixer == m).count(), 1,
+                       "{m:?} must have exactly one registry row");
+            // name round-trips through parse
+            assert_eq!(Mixer::parse(m.name()), Some(m));
+        }
+        // names and checkpoint ids are unique
+        for (i, a) in REGISTRY.iter().enumerate() {
+            for b in &REGISTRY[i + 1..] {
+                assert_ne!(a.name, b.name);
+                assert_ne!(a.ckpt_id, b.ckpt_id);
+            }
+        }
+        assert_eq!(Mixer::parse("nope"), None);
+    }
+
+    #[test]
+    fn every_mixer_has_a_param_formula_matching_the_paper() {
+        for spec in REGISTRY {
+            assert_ne!(spec.params_formula, "?",
+                       "{} lacks a param-count formula", spec.name);
+            assert_ne!(spec.params_formula, "",
+                       "{} lacks a param-count formula", spec.name);
+        }
+        // the paper's Table 1-3 budgets for the pre-registry mixers
+        assert_eq!(budget_formula("cat"), "(d+h)d");
+        assert_eq!(budget_formula("cat_gather"), "(d+h)d");
+        assert_eq!(budget_formula("attention"), "3d^2");
+        assert_eq!(budget_formula("cat_alter"), "(2d+h/2)d");
+        // the new zoo members
+        assert_eq!(budget_formula("fnet"), "0");
+        assert_eq!(budget_formula("circulant"), "3d^2");
+        // PJRT-side mechanisms keep their formulas
+        assert_eq!(budget_formula("cat_q"), "(n+h)d");
+        assert_eq!(budget_formula("cat_qkv"), "3d^2");
+        assert_eq!(budget_formula("unknown"), "?");
+    }
+
+    #[test]
+    fn complexity_columns_come_from_the_registry() {
+        assert_eq!(complexity_cols("cat", false), ("O(N log N)", "O(N)"));
+        assert_eq!(complexity_cols("cat", true), ("O(N log N)*", "O(N)"));
+        assert_eq!(complexity_cols("cat_gather", false),
+                   ("O(N^2)", "O(N^2)"));
+        assert_eq!(complexity_cols("attention", true),
+                   ("O(N^2)", "O(N^2)"));
+        assert_eq!(complexity_cols("fnet", false), ("O(N log N)", "O(N)"));
+        assert_eq!(complexity_cols("circulant", false),
+                   ("O(N log N)", "O(N)"));
+        assert_eq!(complexity_cols("linear", true), ("O(N)", "O(N)"));
+        assert_eq!(complexity_cols("cat_alter", false),
+                   ("O(N^2)", "O(N^2)"));
+    }
+
+    #[test]
+    fn schedule_alternates_odd_layers_to_attention() {
+        for m in ALL {
+            assert_eq!(schedule_at(m, false, 0), m);
+            assert_eq!(schedule_at(m, false, 1), m);
+            assert_eq!(schedule_at(m, true, 0), m);
+            assert_eq!(schedule_at(m, true, 1), Mixer::Attention);
+            assert_eq!(schedule_at(m, true, 2), m);
+        }
+        assert_eq!(mechanism_label(Mixer::CatFft, true), "cat_alter");
+        assert_eq!(mechanism_label(Mixer::Fnet, false), "fnet");
+    }
+
+    #[test]
+    fn schedule_validation_enforces_capability_flags() {
+        // fnet: pow2 N and pow2 d, no causal
+        assert!(validate_schedule(Mixer::Fnet, false, 2, 64, 64, false)
+            .is_ok());
+        assert!(validate_schedule(Mixer::Fnet, false, 2, 48, 64, false)
+            .is_err());
+        assert!(validate_schedule(Mixer::Fnet, false, 2, 64, 48, false)
+            .is_err());
+        assert!(validate_schedule(Mixer::Fnet, false, 2, 64, 64, true)
+            .is_err());
+        // circulant: pow2 N, non-pow2 d fine, no causal
+        assert!(validate_schedule(Mixer::Circulant, false, 1, 32, 24, false)
+            .is_ok());
+        assert!(validate_schedule(Mixer::Circulant, false, 1, 32, 24, true)
+            .is_err());
+        // the legacy rules are unchanged
+        assert!(validate_schedule(Mixer::CatFft, false, 2, 48, 64, false)
+            .is_err());
+        assert!(validate_schedule(Mixer::CatFft, true, 2, 64, 64, true)
+            .is_ok());
+        assert!(validate_schedule(Mixer::CatGather, false, 1, 48, 64, true)
+            .is_err());
+        assert!(validate_schedule(Mixer::Attention, false, 2, 48, 48, true)
+            .is_ok());
+    }
+}

@@ -1,0 +1,437 @@
+//! Serving-side mixer dispatch: [`ServeMixer`] is the single `match`
+//! over [`Mixer`] on the inference path. `NativeCatModel` holds one per
+//! block, and sharded serving slices/strips it through the same API the
+//! CAT layer always had ([`ServeMixer::head_slice`] /
+//! [`ServeMixer::strip`]), so the shard planner never names a mixer.
+//!
+//! The circulant-attention layer ([`QkvLayer`]) is head-separable the
+//! same way CAT is: each head's score row is the channel-summed circular
+//! cross-correlation of that head's own q/k projections, so a column
+//! slice of `W_Q`/`W_K`/`W_V` computes the matching output columns
+//! bit-for-bit. FNet mixes across the full hidden axis and is therefore
+//! not separable (the registry's `head_separable: false`); attention's
+//! serving layer predates slicing and keeps the same flag.
+
+use anyhow::ensure;
+
+use super::super::arena;
+use super::super::autograd::{corr_fwd_stripe, from_stripes, to_stripes};
+use super::super::cat::{
+    matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
+};
+use super::super::fft::split_rfft_plan;
+use super::super::pool;
+use super::{kernels, Mixer};
+use crate::data::Rng;
+use crate::obs::trace::{self as obs_trace, Stage};
+use crate::Result;
+
+/// Q/K/V projections driving the circulant-attention serving forward.
+/// Like [`CatLayer`], a *full* layer has `h·dh == d`; a head slice owns
+/// a contiguous run of heads' weight columns.
+#[derive(Clone)]
+pub struct QkvLayer {
+    /// Input dim (always the full model width, even for a slice).
+    pub d: usize,
+    /// Heads owned by this layer.
+    pub h: usize,
+    /// Channels per head (`d_model / n_heads` of the *full* layer).
+    pub dh: usize,
+    w_q: Vec<f32>,
+    w_k: Vec<f32>,
+    w_v: Vec<f32>,
+}
+
+impl QkvLayer {
+    /// Deterministic init; the q→k→v draw order matches
+    /// [`super::train::init_params`].
+    pub fn init(d: usize, h: usize, rng: &mut Rng) -> QkvLayer {
+        assert!(h > 0 && d % h == 0,
+                "d ({d}) must divide into h ({h}) heads");
+        let mut mk = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| 0.02 * rng.normal()).collect()
+        };
+        QkvLayer {
+            d,
+            h,
+            dh: d / h,
+            w_q: mk(d * d),
+            w_k: mk(d * d),
+            w_v: mk(d * d),
+        }
+    }
+
+    /// Output width of this layer: `h·dh` (`== d` for a full layer).
+    pub fn width(&self) -> usize {
+        self.h * self.dh
+    }
+
+    /// Learnable parameters (`3·d²` for a full layer; a slice counts
+    /// only its own columns).
+    pub fn param_count(&self) -> usize {
+        self.w_q.len() + self.w_k.len() + self.w_v.len()
+    }
+
+    /// Copy out heads `[h0, h1)` as a standalone slice layer: each
+    /// projection keeps columns `h0·dh..h1·dh`. Accumulation orders are
+    /// unchanged (matmuls sum over the input dim; scores, softmax and
+    /// the correlation apply act per head), so the slice's output equals
+    /// the matching columns of the full forward bit-exactly.
+    pub fn head_slice(&self, h0: usize, h1: usize) -> QkvLayer {
+        assert!(h0 < h1 && h1 <= self.h,
+                "bad head slice [{h0}, {h1}) of {} heads", self.h);
+        let (d, dh, w) = (self.d, self.dh, self.width());
+        let hs = h1 - h0;
+        let slice_cols = |src: &[f32]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(d * hs * dh);
+            for k in 0..d {
+                out.extend_from_slice(&src[k * w + h0 * dh..
+                                           k * w + h1 * dh]);
+            }
+            out
+        };
+        QkvLayer {
+            d,
+            h: hs,
+            dh,
+            w_q: slice_cols(&self.w_q),
+            w_k: slice_cols(&self.w_k),
+            w_v: slice_cols(&self.w_v),
+        }
+    }
+
+    pub(crate) fn strip(&mut self) {
+        self.w_q = Vec::new();
+        self.w_k = Vec::new();
+        self.w_v = Vec::new();
+    }
+
+    /// Circulant-attention mix into `out: (b, n, width)` (fully
+    /// overwritten): per `(batch, head)` stripe one shared softmax score
+    /// row from the q/k circular cross-correlation, applied to v with
+    /// the CAT correlation kernel — O(N log N).
+    pub fn forward_into(&self, x: &[f32], b: usize, n: usize,
+                        out: &mut [f32]) -> Result<()> {
+        let (d, h) = (self.d, self.h);
+        let (dh, w) = (self.dh, self.width());
+        ensure!(x.len() == b * n * d,
+                "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
+        ensure!(out.len() == b * n * w,
+                "out has {} elements, expected {}x{}x{}", out.len(), b, n,
+                w);
+        ensure!(self.w_q.len() == d * w && self.w_k.len() == d * w
+                    && self.w_v.len() == d * w,
+                "circulant mixing weights are absent — this layer was \
+                 stripped (sharded serving trunk) and cannot mix tokens \
+                 itself");
+        ensure!(n.is_power_of_two(),
+                "circulant attention needs power-of-two N, got {n}");
+        let plan = split_rfft_plan(n);
+        let f = plan.spectrum_len();
+        let scale = kernels::circ_scale(dh, n);
+        let log_term = n.trailing_zeros() as usize + 1;
+        arena::with_layer_arena(|la| {
+            let [proj, qt, kt, vt, ot] = la.frame([
+                b * n * w, // (b·n, w) projection staging
+                b * n * w, // stripe-transposed (b·h, dh, n) q
+                b * n * w, // k
+                b * n * w, // v
+                b * n * w, // mixed stripes before the un-transpose
+            ]);
+            for (wm, dst) in [(&self.w_q, &mut *qt), (&self.w_k, &mut *kt),
+                              (&self.w_v, &mut *vt)] {
+                obs_trace::section(Stage::MixerMatmul,
+                                   || matmul(x, b * n, d, wm, w, proj));
+                obs_trace::section(Stage::Scatter,
+                                   || to_stripes(proj, b, n, h, dh, dst));
+            }
+            let (qt, kt, vt) = (&*qt, &*kt, &*vt);
+            obs_trace::section(Stage::Fft, || {
+                let tasks: Vec<(usize, &mut [f32])> =
+                    ot.chunks_mut(dh * n).enumerate().collect();
+                pool::run(tasks, 16 * n * log_term * dh, |(si, os)| {
+                    arena::with_task_arena(|ta| {
+                        let [b1, b2, b3, b4, s1, s2, prow, scratch] =
+                            ta.frame([dh * f, dh * f, dh * f, dh * f, f,
+                                      f, n, plan.scratch_len()]);
+                        let q = &qt[si * dh * n..(si + 1) * dh * n];
+                        let k = &kt[si * dh * n..(si + 1) * dh * n];
+                        let v = &vt[si * dh * n..(si + 1) * dh * n];
+                        kernels::circ_scores_stripe(&plan, q, k, dh, prow,
+                                                    b1, b2, b3, b4, s1,
+                                                    s2, scratch);
+                        for sv in prow.iter_mut() {
+                            *sv *= scale;
+                        }
+                        softmax_in_place(prow);
+                        corr_fwd_stripe(&plan, prow, v, dh, os, s1, s2,
+                                        b1, b2, scratch);
+                    });
+                });
+            });
+            obs_trace::section(Stage::Gather,
+                               || from_stripes(ot, b, n, h, dh, out));
+        });
+        Ok(())
+    }
+}
+
+/// One block's serving-side token mixer: the per-[`Mixer`] dispatch the
+/// trunk ([`super::super::NativeCatModel`]) and the shard planner drive.
+#[derive(Clone)]
+pub enum ServeMixer {
+    /// CAT (both the FFT and gather applies; [`CatImpl`] picks at call
+    /// time, exactly as before the registry).
+    Cat(CatLayer),
+    /// Softmax attention (O(N²) baseline).
+    Attention(AttentionLayer),
+    /// Circulant attention (O(N log N), 3d² budget).
+    Circulant(QkvLayer),
+    /// Parameter-free FNet Fourier mixer (width is always the full `d`).
+    Fnet { d: usize },
+}
+
+impl ServeMixer {
+    /// Deterministic init. For CAT configs the weight draw stream is
+    /// identical to the pre-registry `CatLayer::init` call, so every
+    /// `(config, seed)` model is bit-identical to before.
+    pub fn init(mixer: Mixer, d: usize, h: usize, rng: &mut Rng)
+                -> ServeMixer {
+        match mixer {
+            Mixer::CatFft | Mixer::CatGather => {
+                ServeMixer::Cat(CatLayer::init(d, h, rng))
+            }
+            Mixer::Attention => {
+                ServeMixer::Attention(AttentionLayer::init(d, h, rng))
+            }
+            Mixer::Circulant => {
+                ServeMixer::Circulant(QkvLayer::init(d, h, rng))
+            }
+            Mixer::Fnet => ServeMixer::Fnet { d },
+        }
+    }
+
+    /// Output width: `h·dh` for separable layers (`== d` when unsliced),
+    /// always `d` for FNet.
+    pub fn width(&self) -> usize {
+        match self {
+            ServeMixer::Cat(l) => l.width(),
+            ServeMixer::Attention(l) => l.d,
+            ServeMixer::Circulant(l) => l.width(),
+            ServeMixer::Fnet { d } => *d,
+        }
+    }
+
+    /// Learnable parameters of this mixer.
+    pub fn param_count(&self) -> usize {
+        match self {
+            ServeMixer::Cat(l) => l.param_count(),
+            ServeMixer::Attention(l) => l.param_count(),
+            ServeMixer::Circulant(l) => l.param_count(),
+            ServeMixer::Fnet { .. } => 0,
+        }
+    }
+
+    /// Head slice `[h0, h1)` for sharded serving. Only head-separable
+    /// mixers (registry flag) support proper sub-slices; the shard
+    /// planner rejects K>1 for the rest, so they only ever see the
+    /// degenerate full-range slice (shards=1), which is a clone.
+    pub fn head_slice(&self, h0: usize, h1: usize) -> ServeMixer {
+        match self {
+            ServeMixer::Cat(l) => ServeMixer::Cat(l.head_slice(h0, h1)),
+            ServeMixer::Circulant(l) => {
+                ServeMixer::Circulant(l.head_slice(h0, h1))
+            }
+            ServeMixer::Attention(l) => {
+                assert!(h0 == 0 && h1 == l.h,
+                        "attention serving is not head-separable; only \
+                         the full-range slice exists");
+                self.clone()
+            }
+            ServeMixer::Fnet { .. } => {
+                assert!(h0 == 0,
+                        "fnet is not head-separable; only the full-range \
+                         slice exists");
+                self.clone()
+            }
+        }
+    }
+
+    /// Drop the mixing weights (sharded serving trunk); parameter-free
+    /// mixers have nothing to strip.
+    pub(crate) fn strip(&mut self) {
+        match self {
+            ServeMixer::Cat(l) => l.strip(),
+            ServeMixer::Attention(l) => l.strip(),
+            ServeMixer::Circulant(l) => l.strip(),
+            ServeMixer::Fnet { .. } => {}
+        }
+    }
+
+    /// Mix tokens into `out: (b, n, width)` (fully overwritten).
+    /// `cat_impl` only routes the CAT variant, exactly as before.
+    pub fn forward_into(&self, x: &[f32], b: usize, n: usize,
+                        cat_impl: CatImpl, out: &mut [f32]) -> Result<()> {
+        match self {
+            ServeMixer::Cat(l) => l.forward_into(x, b, n, cat_impl, out),
+            ServeMixer::Attention(l) => l.forward_into(x, b, n, out),
+            ServeMixer::Circulant(l) => l.forward_into(x, b, n, out),
+            ServeMixer::Fnet { d } => {
+                let d = *d;
+                ensure!(x.len() == b * n * d,
+                        "x has {} elements, expected {}x{}x{}", x.len(),
+                        b, n, d);
+                ensure!(out.len() == b * n * d,
+                        "out has {} elements, expected {}x{}x{}",
+                        out.len(), b, n, d);
+                ensure!(n.is_power_of_two() && d.is_power_of_two(),
+                        "fnet needs power-of-two N and d, got N={n} \
+                         d={d}");
+                let log_n = n.trailing_zeros() as usize + 1;
+                let log_d = d.trailing_zeros() as usize + 1;
+                obs_trace::section(Stage::Fft, || {
+                    let tasks: Vec<(usize, &mut [f32])> =
+                        out.chunks_mut(n * d).enumerate().collect();
+                    pool::run(tasks, 6 * n * d * (log_n + log_d),
+                              |(bi, oslab)| {
+                        kernels::fnet_slab(
+                            &x[bi * n * d..(bi + 1) * n * d], n, d,
+                            false, oslab);
+                    });
+                });
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn random_x(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    /// Direct O(N²) circulant-attention oracle: per-stripe naive scores,
+    /// softmax, rolled gather apply.
+    fn circulant_naive(layer: &QkvLayer, x: &[f32], b: usize, n: usize)
+                       -> Vec<f32> {
+        let (d, h, dh) = (layer.d, layer.h, layer.dh);
+        let w = layer.width();
+        let mut proj = vec![0.0f32; b * n * w];
+        let mut qt = vec![0.0f32; b * n * w];
+        let mut kt = vec![0.0f32; b * n * w];
+        let mut vt = vec![0.0f32; b * n * w];
+        matmul(x, b * n, d, &layer.w_q, w, &mut proj);
+        to_stripes(&proj, b, n, h, dh, &mut qt);
+        matmul(x, b * n, d, &layer.w_k, w, &mut proj);
+        to_stripes(&proj, b, n, h, dh, &mut kt);
+        matmul(x, b * n, d, &layer.w_v, w, &mut proj);
+        to_stripes(&proj, b, n, h, dh, &mut vt);
+        let scale = kernels::circ_scale(dh, n);
+        let mut ot = vec![0.0f32; b * n * w];
+        for si in 0..b * h {
+            let q = &qt[si * dh * n..(si + 1) * dh * n];
+            let k = &kt[si * dh * n..(si + 1) * dh * n];
+            let v = &vt[si * dh * n..(si + 1) * dh * n];
+            let mut s = kernels::circ_scores_naive(q, k, dh, n);
+            for sv in s.iter_mut() {
+                *sv *= scale;
+            }
+            softmax_in_place(&mut s);
+            let os = &mut ot[si * dh * n..(si + 1) * dh * n];
+            for c in 0..dh {
+                for i in 0..n {
+                    let mut acc = 0.0f32;
+                    for (t, &sv) in s.iter().enumerate() {
+                        acc += sv * v[c * n + (i + t) % n];
+                    }
+                    os[c * n + i] = acc;
+                }
+            }
+        }
+        let mut out = vec![0.0f32; b * n * w];
+        from_stripes(&ot, b, n, h, dh, &mut out);
+        out
+    }
+
+    #[test]
+    fn circulant_serve_matches_naive_oracle() {
+        let (b, n, d, h) = (2usize, 16usize, 12usize, 3usize);
+        let mut rng = Rng::new(41);
+        let layer = QkvLayer::init(d, h, &mut rng);
+        let x = random_x(b * n * d, 43);
+        let want = circulant_naive(&layer, &x, b, n);
+        let mut got = vec![0.0f32; b * n * d];
+        layer.forward_into(&x, b, n, &mut got).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn circulant_head_slice_matches_full_forward_bitwise() {
+        let (b, n, d, h) = (2usize, 32usize, 24usize, 4usize);
+        let dh = d / h;
+        let mut rng = Rng::new(47);
+        let layer = QkvLayer::init(d, h, &mut rng);
+        let x = random_x(b * n * d, 53);
+        let mut full = vec![0.0f32; b * n * d];
+        layer.forward_into(&x, b, n, &mut full).unwrap();
+        for (h0, h1) in [(0, 1), (1, 3), (2, 4), (0, 4)] {
+            let slice = layer.head_slice(h0, h1);
+            let ws = slice.width();
+            assert_eq!(ws, (h1 - h0) * dh);
+            let mut part = vec![0.0f32; b * n * ws];
+            slice.forward_into(&x, b, n, &mut part).unwrap();
+            for row in 0..b * n {
+                assert_eq!(&part[row * ws..(row + 1) * ws],
+                           &full[row * d + h0 * dh..row * d + h1 * dh],
+                           "slice [{h0},{h1}) row {row} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn fnet_serve_matches_naive_per_slab() {
+        let (b, n, d) = (2usize, 16usize, 8usize);
+        let mixer = ServeMixer::init(Mixer::Fnet, d, 2, &mut Rng::new(1));
+        assert_eq!(mixer.param_count(), 0);
+        let x = random_x(b * n * d, 59);
+        let mut got = vec![0.0f32; b * n * d];
+        mixer.forward_into(&x, b, n, CatImpl::Fft, &mut got).unwrap();
+        for bi in 0..b {
+            let want = kernels::fnet_naive(
+                &x[bi * n * d..(bi + 1) * n * d], n, d, false);
+            for (i, (g, w)) in got[bi * n * d..(bi + 1) * n * d]
+                .iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-3,
+                        "slab {bi} elem {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn stripped_circulant_layer_errors_cleanly() {
+        let (b, n, d, h) = (1usize, 8usize, 8usize, 2usize);
+        let mut rng = Rng::new(2);
+        let mut layer = QkvLayer::init(d, h, &mut rng);
+        layer.strip();
+        let x = random_x(b * n * d, 3);
+        let mut out = vec![0.0f32; b * n * d];
+        let err = layer.forward_into(&x, b, n, &mut out).unwrap_err();
+        assert!(err.to_string().contains("stripped"), "{err}");
+    }
+
+    #[test]
+    fn fnet_serve_rejects_bad_shapes() {
+        let mixer = ServeMixer::init(Mixer::Fnet, 12, 2, &mut Rng::new(4));
+        let x = vec![0.0f32; 8 * 12];
+        let mut out = vec![0.0f32; 8 * 12];
+        assert!(mixer
+            .forward_into(&x, 1, 8, CatImpl::Fft, &mut out)
+            .is_err());
+    }
+}

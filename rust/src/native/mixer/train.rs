@@ -1,0 +1,578 @@
+//! Training-side mixer dispatch: parameter layout, deterministic init,
+//! and the forward/backward of every registered mixer.
+//!
+//! This is the single `match` over [`Mixer`] on the training path.
+//! Each arm obeys the determinism contract (DESIGN.md §8): parallel
+//! sections write disjoint outputs with fixed-order accumulation, so
+//! loss curves are bit-identical regardless of pool width.
+
+use anyhow::{bail, ensure};
+
+use super::super::arena;
+use super::super::autograd::{
+    attn_bwd_stripe_panels, attn_bwd_stripe_rows, causal_bwd_stripe,
+    causal_bwd_stripe_batched, causal_fwd_stripe_batched, corr_bwd_stripe,
+    corr_fwd_stripe, ensure_len, from_head_rows, from_stripes, matmul_wt,
+    matmul_xt_acc, naive_backward, softmax_bwd_in_place, to_head_rows,
+    to_stripes, LayerCache, TrainConfig,
+};
+use super::super::cat::{matmul, softmax_in_place};
+use super::super::fft::split_rfft_plan;
+use super::super::pool;
+use super::{kernels, Mixer};
+use crate::Result;
+
+/// Mixing-layer parameters; the variant must match
+/// [`TrainConfig::mixer_at`] (see [`init_params`]).
+pub(crate) enum MixerParams {
+    /// Merged CAT projections: `w_a: (d, h)`, `w_v: (d, d)` — the
+    /// paper's `(d+h)·d` budget.
+    Cat { w_a: Vec<f32>, w_v: Vec<f32> },
+    /// Q/K/V projections (`3·d²`): softmax attention and the circulant
+    /// attention variant share this layout (and tensor names, so their
+    /// checkpoints stay shape-compatible per mechanism).
+    Qkv { w_q: Vec<f32>, w_k: Vec<f32>, w_v: Vec<f32> },
+    /// Parameter-free mixers (FNet).
+    None,
+}
+
+impl MixerParams {
+    /// Same tree shape, all zeros (the gradient mirror).
+    pub(crate) fn zeros_like(&self) -> MixerParams {
+        let z = |v: &Vec<f32>| vec![0.0f32; v.len()];
+        match self {
+            MixerParams::Cat { w_a, w_v } => {
+                MixerParams::Cat { w_a: z(w_a), w_v: z(w_v) }
+            }
+            MixerParams::Qkv { w_q, w_k, w_v } => MixerParams::Qkv {
+                w_q: z(w_q),
+                w_k: z(w_k),
+                w_v: z(w_v),
+            },
+            MixerParams::None => MixerParams::None,
+        }
+    }
+
+    /// `(name, tensor, decays)` triples in the fixed visitor order the
+    /// optimizer and checkpoint serializer key off.
+    pub(crate) fn tensors_mut(&mut self)
+                              -> Vec<(&'static str, &mut Vec<f32>, bool)> {
+        match self {
+            MixerParams::Cat { w_a, w_v } => {
+                vec![("w_a", w_a, true), ("w_v", w_v, true)]
+            }
+            MixerParams::Qkv { w_q, w_k, w_v } => vec![
+                ("w_q", w_q, true),
+                ("w_k", w_k, true),
+                ("w_v", w_v, true),
+            ],
+            MixerParams::None => Vec::new(),
+        }
+    }
+}
+
+/// Deterministic per-layer mixer init. `bmk` is the block's
+/// 0.02-scaled-normal draw closure; the draw order per variant is
+/// frozen (checkpoints and the serving model's same-seed equivalence
+/// depend on it).
+pub(crate) fn init_params(mixer: Mixer, d: usize, h: usize,
+                          bmk: &mut dyn FnMut(usize) -> Vec<f32>)
+                          -> MixerParams {
+    match mixer {
+        Mixer::CatFft | Mixer::CatGather => MixerParams::Cat {
+            w_a: bmk(d * h),
+            w_v: bmk(d * d),
+        },
+        Mixer::Attention | Mixer::Circulant => MixerParams::Qkv {
+            w_q: bmk(d * d),
+            w_k: bmk(d * d),
+            w_v: bmk(d * d),
+        },
+        Mixer::Fnet => MixerParams::None,
+    }
+}
+
+/// Mixer forward for one block: reads `lc.xn1`, fills the mixer caches,
+/// writes the mixed output into `out`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fwd(cfg: &TrainConfig, layer: usize, mp: &MixerParams,
+                  lc: &mut LayerCache, b: usize, tmp1: &mut [f32],
+                  znh: &mut [f32], tmp2: &mut [f32], out: &mut [f32])
+                  -> Result<()> {
+    let d = cfg.d_model;
+    let n = cfg.n_tokens();
+    let h = cfg.n_heads;
+    let dh = d / h;
+    let bn = b * n;
+    let mixer = cfg.mixer_at(layer);
+    match mp {
+        MixerParams::Cat { w_a, w_v } => {
+            matmul(&lc.xn1, bn, d, w_a, h, znh);
+            ensure_len(&mut lc.p, b * h * n);
+            for bi in 0..b {
+                for head in 0..h {
+                    for i in 0..n {
+                        lc.p[(bi * h + head) * n + i] =
+                            znh[(bi * n + i) * h + head];
+                    }
+                }
+            }
+            for row in lc.p.chunks_exact_mut(n) {
+                softmax_in_place(row);
+            }
+            matmul(&lc.xn1, bn, d, w_v, d, tmp1);
+            ensure_len(&mut lc.vt, bn * d);
+            to_stripes(tmp1, b, n, h, dh, &mut lc.vt);
+
+            let p = &lc.p;
+            let vt = &lc.vt;
+            let log_term = n.trailing_zeros() as usize + 1;
+            let tasks: Vec<(usize, &mut [f32])> =
+                tmp2.chunks_mut(dh * n).enumerate().collect();
+            match mixer {
+                Mixer::CatFft if !cfg.causal() => {
+                    let plan = split_rfft_plan(n);
+                    let f = plan.spectrum_len();
+                    pool::run(tasks, 8 * n * log_term * dh, |(si, os)| {
+                        arena::with_task_arena(|ta| {
+                            let [zre, zim, vre, vim, scratch] = ta.frame(
+                                [f, f, dh * f, dh * f, plan.scratch_len()]);
+                            corr_fwd_stripe(
+                                &plan, &p[si * n..(si + 1) * n],
+                                &vt[si * dh * n..(si + 1) * dh * n], dh,
+                                os, zre, zim, vre, vim, scratch);
+                        });
+                    });
+                }
+                Mixer::CatFft => {
+                    let plan2 = split_rfft_plan(2 * n);
+                    let f2 = plan2.spectrum_len();
+                    pool::run(tasks, 16 * n * log_term * dh, |(si, os)| {
+                        arena::with_task_arena(|ta| {
+                            let [pad2, out2, zre, zim, vre, vim, scratch] =
+                                ta.frame([2 * n * dh, 2 * n * dh, f2, f2,
+                                          dh * f2, dh * f2,
+                                          plan2.scratch_len()]);
+                            causal_fwd_stripe_batched(
+                                &plan2, &p[si * n..(si + 1) * n],
+                                &vt[si * dh * n..(si + 1) * dh * n], dh,
+                                os, pad2, zre, zim, vre, vim, out2,
+                                scratch);
+                        });
+                    });
+                }
+                Mixer::CatGather => {
+                    pool::run(tasks, 2 * n * n * dh, |(si, os)| {
+                        let prow = &p[si * n..(si + 1) * n];
+                        let vs = &vt[si * dh * n..(si + 1) * dh * n];
+                        for (c, orow) in os.chunks_exact_mut(n).enumerate() {
+                            let vrow = &vs[c * n..(c + 1) * n];
+                            for (i, o) in orow.iter_mut().enumerate() {
+                                let mut acc = 0.0f32;
+                                for (k, &pv) in prow.iter().enumerate() {
+                                    acc += pv * vrow[(i + k) % n];
+                                }
+                                *o = acc;
+                            }
+                        }
+                    });
+                }
+                _ => bail!("mixer/params mismatch"),
+            }
+            from_stripes(tmp2, b, n, h, dh, out);
+        }
+        MixerParams::Qkv { w_q, w_k, w_v } if mixer == Mixer::Attention => {
+            ensure_len(&mut lc.qh, bn * d);
+            ensure_len(&mut lc.kh, bn * d);
+            ensure_len(&mut lc.vh, bn * d);
+            ensure_len(&mut lc.aprobs, b * h * n * n);
+            matmul(&lc.xn1, bn, d, w_q, d, tmp1);
+            to_head_rows(tmp1, b, n, h, dh, &mut lc.qh);
+            matmul(&lc.xn1, bn, d, w_k, d, tmp1);
+            to_head_rows(tmp1, b, n, h, dh, &mut lc.kh);
+            matmul(&lc.xn1, bn, d, w_v, d, tmp1);
+            to_head_rows(tmp1, b, n, h, dh, &mut lc.vh);
+            let scale = 1.0 / (dh as f32).sqrt();
+            let causal = cfg.causal();
+            let (qh, kh, vh) = (&lc.qh, &lc.kh, &lc.vh);
+            let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp2
+                .chunks_mut(n * dh)
+                .enumerate()
+                .zip(lc.aprobs.chunks_mut(n * n))
+                .collect();
+            pool::run(tasks, 4 * n * n * dh, |((si, os), ps)| {
+                let q = &qh[si * n * dh..(si + 1) * n * dh];
+                let k = &kh[si * n * dh..(si + 1) * n * dh];
+                let v = &vh[si * n * dh..(si + 1) * n * dh];
+                for i in 0..n {
+                    let lim = if causal { i + 1 } else { n };
+                    let qi = &q[i * dh..(i + 1) * dh];
+                    let prow = &mut ps[i * n..(i + 1) * n];
+                    for (j, slot) in prow.iter_mut().take(lim).enumerate() {
+                        let kj = &k[j * dh..(j + 1) * dh];
+                        let mut dot = 0.0f32;
+                        for (qv, kv) in qi.iter().zip(kj) {
+                            dot += qv * kv;
+                        }
+                        *slot = dot * scale;
+                    }
+                    softmax_in_place(&mut prow[..lim]);
+                    prow[lim..].fill(0.0);
+                    let orow = &mut os[i * dh..(i + 1) * dh];
+                    orow.fill(0.0);
+                    for (j, &w) in prow.iter().take(lim).enumerate() {
+                        let vrow = &v[j * dh..(j + 1) * dh];
+                        for (ov, &vv) in orow.iter_mut().zip(vrow) {
+                            *ov += w * vv;
+                        }
+                    }
+                }
+            });
+            from_head_rows(tmp2, b, n, h, dh, out);
+        }
+        MixerParams::Qkv { w_q, w_k, w_v } => {
+            ensure!(mixer == Mixer::Circulant, "mixer/params mismatch");
+            // circulant attention: one shared softmax score row per
+            // stripe (channel-summed circular cross-correlation of the
+            // q/k projections), applied with the CAT correlation kernel
+            ensure_len(&mut lc.qt, bn * d);
+            ensure_len(&mut lc.kt, bn * d);
+            ensure_len(&mut lc.vt, bn * d);
+            ensure_len(&mut lc.p, b * h * n);
+            matmul(&lc.xn1, bn, d, w_q, d, tmp1);
+            to_stripes(tmp1, b, n, h, dh, &mut lc.qt);
+            matmul(&lc.xn1, bn, d, w_k, d, tmp1);
+            to_stripes(tmp1, b, n, h, dh, &mut lc.kt);
+            matmul(&lc.xn1, bn, d, w_v, d, tmp1);
+            to_stripes(tmp1, b, n, h, dh, &mut lc.vt);
+            let scale = kernels::circ_scale(dh, n);
+            let (qt, kt, vt) = (&lc.qt, &lc.kt, &lc.vt);
+            let plan = split_rfft_plan(n);
+            let f = plan.spectrum_len();
+            let log_term = n.trailing_zeros() as usize + 1;
+            let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp2
+                .chunks_mut(dh * n)
+                .enumerate()
+                .zip(lc.p.chunks_mut(n))
+                .collect();
+            pool::run(tasks, 16 * n * log_term * dh, |((si, os), prow)| {
+                arena::with_task_arena(|ta| {
+                    let [b1, b2, b3, b4, s1, s2, scratch] = ta.frame([
+                        dh * f, dh * f, dh * f, dh * f, f, f,
+                        plan.scratch_len(),
+                    ]);
+                    let q = &qt[si * dh * n..(si + 1) * dh * n];
+                    let k = &kt[si * dh * n..(si + 1) * dh * n];
+                    let v = &vt[si * dh * n..(si + 1) * dh * n];
+                    kernels::circ_scores_stripe(&plan, q, k, dh, prow, b1,
+                                                b2, b3, b4, s1, s2,
+                                                scratch);
+                    for sv in prow.iter_mut() {
+                        *sv *= scale;
+                    }
+                    softmax_in_place(prow);
+                    corr_fwd_stripe(&plan, prow, v, dh, os, s1, s2, b1, b2,
+                                    scratch);
+                });
+            });
+            from_stripes(tmp2, b, n, h, dh, out);
+        }
+        MixerParams::None => {
+            ensure!(mixer == Mixer::Fnet, "mixer/params mismatch");
+            // parameter-free 2D Fourier mix, one task per batch slab;
+            // no caches: the operator is self-adjoint (kernels docs)
+            let truncate = cfg.fnet_truncate;
+            let xn1 = &lc.xn1;
+            let log_n = n.trailing_zeros() as usize + 1;
+            let log_d = d.trailing_zeros() as usize + 1;
+            let tasks: Vec<(usize, &mut [f32])> =
+                out[..bn * d].chunks_mut(n * d).enumerate().collect();
+            pool::run(tasks, 6 * n * d * (log_n + log_d), |(bi, oslab)| {
+                kernels::fnet_slab(&xn1[bi * n * d..(bi + 1) * n * d], n, d,
+                                   truncate, oslab);
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Mixer backward for one block: consumes the upstream gradient `dx`
+/// (the mix output's gradient), accumulates mixer parameter grads into
+/// `gmp`, and writes the gradient w.r.t. the mixer *input* (`lc.xn1`)
+/// into `dxn`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn bwd(cfg: &TrainConfig, layer: usize, mp: &MixerParams,
+                  gmp: &mut MixerParams, lc: &LayerCache, b: usize,
+                  dx: &[f32], dxn: &mut [f32], tmp1: &mut [f32],
+                  tmp3: &mut [f32], zs: &mut [f32], znh: &mut [f32],
+                  dqh: &mut Vec<f32>, dkh: &mut Vec<f32>,
+                  dvh: &mut Vec<f32>) -> Result<()> {
+    let d = cfg.d_model;
+    let n = cfg.n_tokens();
+    let h = cfg.n_heads;
+    let dh = d / h;
+    let bn = b * n;
+    let mixer = cfg.mixer_at(layer);
+    match (mp, gmp) {
+        (MixerParams::Cat { w_a, w_v },
+         MixerParams::Cat { w_a: gw_a, w_v: gw_v }) => {
+            to_stripes(dx, b, n, h, dh, tmp3);
+            let p = &lc.p;
+            let vt = &lc.vt;
+            let dout_s = &*tmp3;
+            let naive = naive_backward();
+            let log_term = n.trailing_zeros() as usize + 1;
+            let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp1
+                .chunks_mut(dh * n)
+                .enumerate()
+                .zip(zs.chunks_mut(n))
+                .collect();
+            match mixer {
+                Mixer::CatFft if !cfg.causal() => {
+                    let plan = split_rfft_plan(n);
+                    let f = plan.spectrum_len();
+                    pool::run(tasks, 12 * n * log_term * dh,
+                              |((si, dvs), dps)| {
+                        arena::with_task_arena(|ta| {
+                            let [zre, zim, vre, vim, gre, gim, are, aim,
+                                 scratch] = ta.frame(
+                                [f, f, dh * f, dh * f, dh * f, dh * f, f,
+                                 f, plan.scratch_len()]);
+                            corr_bwd_stripe(
+                                &plan, &p[si * n..(si + 1) * n],
+                                &vt[si * dh * n..(si + 1) * dh * n],
+                                &dout_s[si * dh * n..(si + 1) * dh * n],
+                                dh, dps, dvs, zre, zim, vre, vim, gre,
+                                gim, are, aim, scratch);
+                        });
+                        if !naive {
+                            // fused: the p row is still cache-hot
+                            softmax_bwd_in_place(
+                                &p[si * n..(si + 1) * n], dps);
+                        }
+                    });
+                }
+                Mixer::CatFft => {
+                    let plan2 = split_rfft_plan(2 * n);
+                    let f2 = plan2.spectrum_len();
+                    pool::run(tasks, 24 * n * log_term * dh,
+                              |((si, dvs), dps)| {
+                        if naive {
+                            arena::with_task_arena(|ta| {
+                                let [pad, row2, zre, zim, vre, vim, gre,
+                                     gim, tre, tim, are, aim, scratch] =
+                                    ta.frame(
+                                    [2 * n, 2 * n, f2, f2, f2, f2, f2,
+                                     f2, f2, f2, f2, f2,
+                                     plan2.scratch_len()]);
+                                causal_bwd_stripe(
+                                    &plan2, &p[si * n..(si + 1) * n],
+                                    &vt[si * dh * n..(si + 1) * dh * n],
+                                    &dout_s[si * dh * n..(si + 1) * dh * n],
+                                    dh, dps, dvs, pad, zre, zim, vre,
+                                    vim, gre, gim, tre, tim, are, aim,
+                                    row2, scratch);
+                            });
+                        } else {
+                            arena::with_task_arena(|ta| {
+                                let [pad2, out2, zre, zim, vre, vim, gre,
+                                     gim, are, aim, scratch] = ta.frame(
+                                    [2 * n * dh, 2 * n * dh, f2, f2,
+                                     dh * f2, dh * f2, dh * f2, dh * f2,
+                                     f2, f2, plan2.scratch_len()]);
+                                causal_bwd_stripe_batched(
+                                    &plan2, &p[si * n..(si + 1) * n],
+                                    &vt[si * dh * n..(si + 1) * dh * n],
+                                    &dout_s[si * dh * n..(si + 1) * dh * n],
+                                    dh, dps, dvs, pad2, zre, zim, vre,
+                                    vim, gre, gim, are, aim, out2,
+                                    scratch);
+                            });
+                            softmax_bwd_in_place(
+                                &p[si * n..(si + 1) * n], dps);
+                        }
+                    });
+                }
+                Mixer::CatGather => {
+                    pool::run(tasks, 4 * n * n * dh, |((si, dvs), dps)| {
+                        let prow = &p[si * n..(si + 1) * n];
+                        let vs = &vt[si * dh * n..(si + 1) * dh * n];
+                        let dos = &dout_s[si * dh * n..(si + 1) * dh * n];
+                        for (c, dvrow) in
+                            dvs.chunks_exact_mut(n).enumerate() {
+                            let dorow = &dos[c * n..(c + 1) * n];
+                            for (j, slot) in dvrow.iter_mut().enumerate() {
+                                let mut acc = 0.0f32;
+                                for (i, &dov) in dorow.iter().enumerate() {
+                                    acc += dov * prow[(j + n - i) % n];
+                                }
+                                *slot = acc;
+                            }
+                        }
+                        for (kk, slot) in dps.iter_mut().enumerate() {
+                            let mut acc = 0.0f32;
+                            for c in 0..dh {
+                                let dorow = &dos[c * n..(c + 1) * n];
+                                let vrow = &vs[c * n..(c + 1) * n];
+                                for (i, &dov) in dorow.iter().enumerate() {
+                                    acc += dov * vrow[(i + kk) % n];
+                                }
+                            }
+                            *slot = acc;
+                        }
+                        if !naive {
+                            softmax_bwd_in_place(prow, dps);
+                        }
+                    });
+                }
+                _ => bail!("mixer/params mismatch"),
+            }
+            from_stripes(tmp1, b, n, h, dh, tmp3); // dV in (b, n, d)
+            matmul_xt_acc(&lc.xn1, bn, d, tmp3, d, gw_v);
+            matmul_wt(tmp3, bn, d, w_v, d, dxn, false);
+            if naive {
+                // reference path: separate softmax-backward sweep
+                for (prow, dprow) in
+                    lc.p.chunks_exact(n).zip(zs.chunks_exact_mut(n)) {
+                    softmax_bwd_in_place(prow, dprow);
+                }
+            }
+            for bi in 0..b {
+                for head in 0..h {
+                    for i in 0..n {
+                        znh[(bi * n + i) * h + head] =
+                            zs[(bi * h + head) * n + i];
+                    }
+                }
+            }
+            matmul_xt_acc(&lc.xn1, bn, d, znh, h, gw_a);
+            matmul_wt(znh, bn, h, w_a, d, dxn, true);
+        }
+        (MixerParams::Qkv { w_q, w_k, w_v },
+         MixerParams::Qkv { w_q: gw_q, w_k: gw_k, w_v: gw_v })
+            if mixer == Mixer::Attention =>
+        {
+            to_head_rows(dx, b, n, h, dh, tmp3);
+            ensure_len(dqh, bn * d);
+            ensure_len(dkh, bn * d);
+            ensure_len(dvh, bn * d);
+            let (qh, kh, vh) = (&lc.qh, &lc.kh, &lc.vh);
+            let probs = &lc.aprobs;
+            let dos = &*tmp3;
+            let scale = 1.0 / (dh as f32).sqrt();
+            let causal = cfg.causal();
+            let tasks: Vec<(((usize, &mut [f32]), &mut [f32]),
+                            &mut [f32])> = dqh
+                .chunks_mut(n * dh)
+                .enumerate()
+                .zip(dkh.chunks_mut(n * dh))
+                .zip(dvh.chunks_mut(n * dh))
+                .collect();
+            let naive = naive_backward();
+            pool::run(tasks, 6 * n * n * dh, |(((si, dqs), dks), dvs)| {
+                let q = &qh[si * n * dh..(si + 1) * n * dh];
+                let k = &kh[si * n * dh..(si + 1) * n * dh];
+                let v = &vh[si * n * dh..(si + 1) * n * dh];
+                let ps = &probs[si * n * n..(si + 1) * n * n];
+                let dost = &dos[si * n * dh..(si + 1) * n * dh];
+                if naive {
+                    attn_bwd_stripe_rows(q, k, v, ps, dost, n, dh, scale,
+                                         causal, dqs, dks, dvs);
+                } else {
+                    attn_bwd_stripe_panels(q, k, v, ps, dost, n, dh, scale,
+                                           causal, dqs, dks, dvs);
+                }
+            });
+            from_head_rows(dqh, b, n, h, dh, tmp1);
+            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_q);
+            matmul_wt(tmp1, bn, d, w_q, d, dxn, false);
+            from_head_rows(dkh, b, n, h, dh, tmp1);
+            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_k);
+            matmul_wt(tmp1, bn, d, w_k, d, dxn, true);
+            from_head_rows(dvh, b, n, h, dh, tmp1);
+            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_v);
+            matmul_wt(tmp1, bn, d, w_v, d, dxn, true);
+        }
+        (MixerParams::Qkv { w_q, w_k, w_v },
+         MixerParams::Qkv { w_q: gw_q, w_k: gw_k, w_v: gw_v }) => {
+            ensure!(mixer == Mixer::Circulant, "mixer/params mismatch");
+            to_stripes(dx, b, n, h, dh, tmp3);
+            ensure_len(dqh, bn * d);
+            ensure_len(dkh, bn * d);
+            ensure_len(dvh, bn * d);
+            let (p, qt, kt, vt) = (&lc.p, &lc.qt, &lc.kt, &lc.vt);
+            let dout_s = &*tmp3;
+            let scale = kernels::circ_scale(dh, n);
+            let plan = split_rfft_plan(n);
+            let f = plan.spectrum_len();
+            let log_term = n.trailing_zeros() as usize + 1;
+            let tasks: Vec<((((usize, &mut [f32]), &mut [f32]),
+                             &mut [f32]), &mut [f32])> = dqh
+                .chunks_mut(dh * n)
+                .enumerate()
+                .zip(dkh.chunks_mut(dh * n))
+                .zip(dvh.chunks_mut(dh * n))
+                .zip(zs.chunks_mut(n))
+                .collect();
+            pool::run(tasks, 24 * n * log_term * dh,
+                      |((((si, dqs), dks), dvs), dps)| {
+                arena::with_task_arena(|ta| {
+                    let [s1, s2, b1, b2, b3, b4, a1, a2, scratch] =
+                        ta.frame([f, f, dh * f, dh * f, dh * f, dh * f,
+                                  f, f, plan.scratch_len()]);
+                    let prow = &p[si * n..(si + 1) * n];
+                    let q = &qt[si * dh * n..(si + 1) * dh * n];
+                    let k = &kt[si * dh * n..(si + 1) * dh * n];
+                    let v = &vt[si * dh * n..(si + 1) * dh * n];
+                    let dos = &dout_s[si * dh * n..(si + 1) * dh * n];
+                    // value/score halves reuse the CAT correlation bwd
+                    corr_bwd_stripe(&plan, prow, v, dos, dh, dps, dvs, s1,
+                                    s2, b1, b2, b3, b4, a1, a2, scratch);
+                    softmax_bwd_in_place(prow, dps);
+                    for dv in dps.iter_mut() {
+                        *dv *= scale;
+                    }
+                    kernels::circ_scores_bwd_stripe(&plan, q, k, dps, dh,
+                                                    dqs, dks, s1, s2, b1,
+                                                    b2, b3, b4, scratch);
+                });
+            });
+            from_stripes(dvh, b, n, h, dh, tmp1);
+            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_v);
+            matmul_wt(tmp1, bn, d, w_v, d, dxn, false);
+            from_stripes(dqh, b, n, h, dh, tmp1);
+            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_q);
+            matmul_wt(tmp1, bn, d, w_q, d, dxn, true);
+            from_stripes(dkh, b, n, h, dh, tmp1);
+            matmul_xt_acc(&lc.xn1, bn, d, tmp1, d, gw_k);
+            matmul_wt(tmp1, bn, d, w_k, d, dxn, true);
+        }
+        (MixerParams::None, MixerParams::None) => {
+            ensure!(mixer == Mixer::Fnet, "mixer/params mismatch");
+            // self-adjoint: dxn = F(mask(dx)); the mask is the
+            // truncation's own backward (forward = mask ∘ F)
+            let truncate = cfg.fnet_truncate;
+            let dxn = &mut dxn[..bn * d];
+            let src: &[f32] = if truncate {
+                let masked = &mut tmp1[..bn * d];
+                masked.copy_from_slice(&dx[..bn * d]);
+                for row in masked.chunks_exact_mut(d) {
+                    row[d / 2 + 1..].fill(0.0);
+                }
+                masked
+            } else {
+                &dx[..bn * d]
+            };
+            let log_n = n.trailing_zeros() as usize + 1;
+            let log_d = d.trailing_zeros() as usize + 1;
+            let tasks: Vec<(usize, &mut [f32])> =
+                dxn.chunks_mut(n * d).enumerate().collect();
+            pool::run(tasks, 6 * n * d * (log_n + log_d), |(bi, dslab)| {
+                kernels::fnet_slab(&src[bi * n * d..(bi + 1) * n * d], n,
+                                   d, false, dslab);
+            });
+        }
+        _ => bail!("mixer params/grads variant mismatch"),
+    }
+    Ok(())
+}

@@ -14,6 +14,10 @@
 //! * [`cat`] — the CAT mixing layer (batched-FFT and O(N²) gather
 //!   reference), a native softmax-attention baseline, and the hermetic
 //!   serving model ([`NativeCatModel`]);
+//! * [`mixer`] — the mixer registry ([`REGISTRY`]): ids, param-count
+//!   formulas, capability flags, per-layer schedules, and the single
+//!   train/serve dispatch over every registered mixer (FNet and the
+//!   circulant-attention variant live here);
 //! * [`autograd`] — reverse-mode gradients for the full CAT block
 //!   (frequency-domain circular-correlation backward, softmax-over-N,
 //!   LayerNorm/MLP/attention backwards) and the trainable
@@ -30,6 +34,7 @@ pub mod arena;
 pub mod autograd;
 pub mod cat;
 pub mod fft;
+pub mod mixer;
 pub mod optim;
 pub mod pool;
 
@@ -38,10 +43,12 @@ pub use autograd::{attention_backward, causal_corr_backward,
                    causal_corr_forward_batched, colsum_acc,
                    colsum_acc_naive, corr_backward, corr_forward,
                    matmul_xt_acc, matmul_xt_acc_naive, naive_backward,
-                   set_naive_backward, EvalOut, Mixer, TaskKind,
-                   TrainBatch, TrainConfig, TrainModel};
+                   set_naive_backward, EvalOut, TaskKind, TrainBatch,
+                   TrainConfig, TrainModel};
 pub use cat::{matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
               NativeCatModel, NativeVitConfig};
+pub use mixer::{Mixer, MixerSpec, REGISTRY};
+pub(crate) use mixer::serve::ServeMixer;
 pub use fft::{plan_cache_stats, rfft_plan, split_rfft_plan, Complex,
               FftPlan, RfftPlan, SplitRfftPlan};
 pub use optim::AdamW;

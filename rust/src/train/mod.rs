@@ -447,8 +447,22 @@ impl TrainBackend for NativeTrainer {
 
 /// Magic of the legacy v1 format (no integrity trailer) — read-only.
 const CKPT_MAGIC_V1: &[u8; 8] = b"CATCKPT1";
-/// Magic of the current format (trailing CRC32) — what we write.
+/// Magic of the legacy-config format (trailing CRC32). Still written,
+/// byte-identical, for every config that predates the mixer registry.
 const CKPT_MAGIC_V2: &[u8; 8] = b"CATCKPT2";
+/// Magic of the registry-era format: same layout as v2 except the
+/// config fingerprint ends with the `fnet_truncate` word. Written only
+/// when [`ckpt_uses_v3`] — a registry-era mixer id (≥ 3) or the
+/// truncation knob — so new mixers can never silently load into (or
+/// from) a pre-registry `CATCKPT2` file.
+const CKPT_MAGIC_V3: &[u8; 8] = b"CATCKPT3";
+
+/// Does this config need the versioned v3 fingerprint? Legacy configs
+/// (cat / cat_alter / cat_gather / attention, no truncation) must keep
+/// answering `false` forever: their `CATCKPT2` bytes are frozen.
+fn ckpt_uses_v3(cfg: &TrainConfig) -> bool {
+    cfg.mixer.spec().ckpt_id >= 3 || cfg.fnet_truncate
+}
 
 /// CRC32 lookup table (IEEE 802.3, reflected polynomial 0xEDB88320) —
 /// the same CRC as gzip/zip/PNG, built at compile time.
@@ -552,13 +566,11 @@ impl<'a> CkptReader<'a> {
 }
 
 /// Encode a [`TrainConfig`] as a fixed word sequence for the checkpoint
-/// header; any structural mismatch fails resume loudly.
-fn config_fingerprint(cfg: &TrainConfig) -> [u64; 11] {
-    let mixer = match cfg.mixer {
-        Mixer::CatFft => 0u64,
-        Mixer::CatGather => 1,
-        Mixer::Attention => 2,
-    };
+/// header; any structural mismatch fails resume loudly. The mixer word
+/// is the registry's stable `ckpt_id` (0–2 reproduce the pre-registry
+/// encoding exactly); v3 configs append the `fnet_truncate` word.
+fn config_fingerprint(cfg: &TrainConfig) -> Vec<u64> {
+    let mixer = cfg.mixer.spec().ckpt_id;
     let (tag, t0, t1, t2, t3) = match cfg.task {
         TaskKind::Vit { image_size, patch_size, n_channels, n_classes } => {
             (0u64, image_size as u64, patch_size as u64, n_channels as u64,
@@ -568,9 +580,15 @@ fn config_fingerprint(cfg: &TrainConfig) -> [u64; 11] {
             (1u64, vocab as u64, seq_len as u64, causal as u64, 0)
         }
     };
-    [cfg.d_model as u64, cfg.n_heads as u64, cfg.n_layers as u64,
-     cfg.batch_size as u64, mixer, cfg.alternate as u64, tag, t0, t1, t2,
-     t3]
+    let mut words = vec![
+        cfg.d_model as u64, cfg.n_heads as u64, cfg.n_layers as u64,
+        cfg.batch_size as u64, mixer, cfg.alternate as u64, tag, t0, t1,
+        t2, t3,
+    ];
+    if ckpt_uses_v3(cfg) {
+        words.push(cfg.fnet_truncate as u64);
+    }
+    words
 }
 
 impl NativeTrainer {
@@ -585,7 +603,11 @@ impl NativeTrainer {
     /// [`Self::load_checkpoint`] continues with bit-identical losses.
     pub fn save_checkpoint(&mut self, path: &Path) -> Result<()> {
         let mut buf = Vec::new();
-        buf.extend_from_slice(CKPT_MAGIC_V2);
+        buf.extend_from_slice(if ckpt_uses_v3(self.model.cfg()) {
+            CKPT_MAGIC_V3
+        } else {
+            CKPT_MAGIC_V2
+        });
         put_u64(&mut buf, self.seed);
         put_u64(&mut buf, self.cursor);
         for w in config_fingerprint(self.model.cfg()) {
@@ -617,7 +639,8 @@ impl NativeTrainer {
         })?;
         ensure!(raw.len() >= 8,
                 "{} is not a native CAT checkpoint", path.display());
-        let payload: &[u8] = if &raw[..8] == CKPT_MAGIC_V2 {
+        let file_is_v3 = &raw[..8] == CKPT_MAGIC_V3;
+        let payload: &[u8] = if &raw[..8] == CKPT_MAGIC_V2 || file_is_v3 {
             ensure!(raw.len() >= 12,
                     "{} is truncated before the CRC trailer",
                     path.display());
@@ -636,6 +659,22 @@ impl NativeTrainer {
         } else {
             bail!("{} is not a native CAT checkpoint", path.display());
         };
+        // version gate: registry-era configs (mixer ckpt_id ≥ 3 or
+        // fnet_truncate) only pair with CATCKPT3 files, legacy configs
+        // only with CATCKPT1/2 — a cross-version resume is always a
+        // config mismatch, caught here with a clear error instead of a
+        // confusing fingerprint-word diff
+        let want_v3 = ckpt_uses_v3(self.model.cfg());
+        ensure!(file_is_v3 == want_v3,
+                "checkpoint {} is the {} format but config '{}' {} — \
+                 registry-era mixers (fnet, circulant) and fnet_truncate \
+                 write CATCKPT3; legacy cat/attention configs keep \
+                 CATCKPT2",
+                path.display(),
+                if file_is_v3 { "CATCKPT3" } else { "CATCKPT1/2" },
+                self.model.cfg().mechanism(),
+                if want_v3 { "requires CATCKPT3" }
+                else { "predates it" });
         let mut r = CkptReader { buf: payload, off: 8 };
         let seed = r.u64()?;
         ensure!(seed == self.seed,
@@ -729,6 +768,16 @@ pub fn native_specs() -> Vec<TrainSpec> {
             paper_key: None,
         },
         TrainSpec {
+            name: "native_vit_fnet",
+            cfg: TrainConfig::vit(Mixer::Fnet, false),
+            paper_key: None,
+        },
+        TrainSpec {
+            name: "native_vit_circulant",
+            cfg: TrainConfig::vit(Mixer::Circulant, false),
+            paper_key: None,
+        },
+        TrainSpec {
             name: "native_lm_masked_attention",
             cfg: TrainConfig::lm(Mixer::Attention, false, false),
             paper_key: Some("lm_gpt2_masked_attention"),
@@ -742,6 +791,16 @@ pub fn native_specs() -> Vec<TrainSpec> {
             name: "native_lm_masked_cat_alter",
             cfg: TrainConfig::lm(Mixer::CatFft, false, true),
             paper_key: Some("lm_gpt2_masked_cat_alter"),
+        },
+        TrainSpec {
+            name: "native_lm_masked_fnet",
+            cfg: TrainConfig::lm(Mixer::Fnet, false, false),
+            paper_key: None,
+        },
+        TrainSpec {
+            name: "native_lm_masked_circulant",
+            cfg: TrainConfig::lm(Mixer::Circulant, false, false),
+            paper_key: None,
         },
         TrainSpec {
             name: "native_lm_causal_attention",
@@ -1134,6 +1193,80 @@ mod tests {
         std::fs::write(&path, &raw[..raw.len() - 9]).unwrap();
         assert!(b.load_checkpoint(&path).is_err(),
                 "truncated checkpoint accepted");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn legacy_fingerprints_are_frozen() {
+        // the exact pre-registry 11-word encodings; any drift here would
+        // orphan every existing CATCKPT2 file
+        let cases: [(TrainConfig, [u64; 11]); 4] = [
+            (TrainConfig::vit(Mixer::CatFft, false),
+             [64, 4, 2, 16, 0, 0, 0, 32, 4, 3, 10]),
+            (TrainConfig::vit(Mixer::CatFft, true),
+             [64, 4, 2, 16, 0, 1, 0, 32, 4, 3, 10]),
+            (TrainConfig::vit(Mixer::CatGather, false),
+             [64, 4, 2, 16, 1, 0, 0, 32, 4, 3, 10]),
+            (TrainConfig::lm(Mixer::Attention, true, false),
+             [64, 4, 2, 8, 2, 0, 1, 512, 128, 1, 0]),
+        ];
+        for (cfg, want) in cases {
+            assert!(!ckpt_uses_v3(&cfg), "{} drifted to v3",
+                    cfg.mechanism());
+            assert_eq!(config_fingerprint(&cfg), want.to_vec(),
+                       "legacy fingerprint drifted for {}",
+                       cfg.mechanism());
+        }
+        // registry-era configs get the extra truncation word and v3
+        let fnet = TrainConfig::vit(Mixer::Fnet, false);
+        assert!(ckpt_uses_v3(&fnet));
+        assert_eq!(config_fingerprint(&fnet).len(), 12);
+        let mut trunc = fnet;
+        trunc.fnet_truncate = true;
+        assert_ne!(config_fingerprint(&fnet), config_fingerprint(&trunc));
+        assert!(ckpt_uses_v3(&TrainConfig::vit(Mixer::Circulant, false)));
+    }
+
+    #[test]
+    fn v3_checkpoint_roundtrips_and_rejects_cross_version() {
+        let path = std::env::temp_dir().join(format!(
+            "cat_ckpt_v3_{}.bin", std::process::id()));
+        let cfg = TrainConfig {
+            batch_size: 4,
+            ..TrainConfig::vit(Mixer::Circulant, false)
+        };
+        let mut a = NativeTrainer::from_config("circ", cfg, 31).unwrap();
+        a.train_step(1e-3).unwrap();
+        a.save_checkpoint(&path).unwrap();
+        let raw = std::fs::read(&path).unwrap();
+        assert_eq!(&raw[..8], CKPT_MAGIC_V3,
+                   "registry-era mixer must write the v3 magic");
+
+        let mut b = NativeTrainer::from_config("circ", cfg, 31).unwrap();
+        b.load_checkpoint(&path).unwrap();
+        let la = a.train_step(1e-3).unwrap();
+        let lb = b.train_step(1e-3).unwrap();
+        assert_eq!(la.to_bits(), lb.to_bits(),
+                   "v3-resumed run diverged from the saver");
+
+        // a legacy config must refuse the v3 file with the version error
+        let legacy = TrainConfig {
+            batch_size: 4,
+            ..TrainConfig::vit(Mixer::CatFft, false)
+        };
+        let mut c = NativeTrainer::from_config("cat", legacy, 31).unwrap();
+        let err = c.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("CATCKPT3"), "wrong cross-version error: \
+                 {err}");
+
+        // and the reverse: a v2 file into a registry-era config
+        c.save_checkpoint(&path).unwrap();
+        assert_eq!(&std::fs::read(&path).unwrap()[..8], CKPT_MAGIC_V2,
+                   "legacy mixer must keep writing the v2 magic");
+        let mut d = NativeTrainer::from_config("circ", cfg, 31).unwrap();
+        let err = d.load_checkpoint(&path).unwrap_err().to_string();
+        assert!(err.contains("CATCKPT"), "wrong cross-version error: \
+                 {err}");
         let _ = std::fs::remove_file(&path);
     }
 

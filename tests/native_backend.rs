@@ -313,12 +313,15 @@ fn native_training_loss_curves_are_pool_width_invariant() {
     // bit-identical whether sections fan out across the pool or run
     // inline on one thread — and across same-seed repeat runs. The
     // config grid covers every tiled backward path: CAT-FFT (vit),
-    // softmax attention, and the zero-padded causal CAT.
+    // softmax attention, the zero-padded causal CAT, and the registry
+    // zoo mixers (FNet's slab FFT, circulant attention's score stripes).
     use cat::train::{run_training, NativeTrainer, Schedule, TrainOptions};
 
     for (config, steps) in [("native_vit_cat", 8u64),
                             ("native_vit_attention", 4),
-                            ("native_lm_causal_cat", 4)] {
+                            ("native_lm_causal_cat", 4),
+                            ("native_vit_fnet", 4),
+                            ("native_vit_circulant", 4)] {
         let opts = TrainOptions {
             steps,
             schedule: Schedule::new(1e-3, 2, steps),

@@ -864,6 +864,7 @@ fn model_gradients_match_between_tiled_and_naive_kernels() {
             batch_size: 2,
             mixer: Mixer::CatFft,
             alternate: true, // covers the attention mixer too
+            fnet_truncate: false,
             task: TaskKind::Lm { vocab: 64, seq_len: 16, causal: true },
         },
         TrainConfig {
@@ -873,6 +874,7 @@ fn model_gradients_match_between_tiled_and_naive_kernels() {
             batch_size: 2,
             mixer: Mixer::CatFft,
             alternate: false,
+            fnet_truncate: false,
             task: TaskKind::Vit {
                 image_size: 32,
                 patch_size: 8,
@@ -949,6 +951,7 @@ fn cat_block_gradients_match_finite_difference() {
         batch_size: 2,
         mixer: Mixer::CatFft,
         alternate: false,
+        fnet_truncate: false,
         task: TaskKind::Vit {
             image_size: 32,
             patch_size: 16, // 4 tokens
@@ -999,4 +1002,161 @@ fn cat_block_gradients_match_finite_difference() {
     }
     assert!(checked >= 8,
             "only {checked} gradient coordinates cleared the noise floor");
+}
+
+// ---------------- mixer zoo (registry mixers vs oracles + fd) ----------
+
+#[test]
+fn fnet_slab_matches_naive_oracle_randomized() {
+    use cat::native::mixer::kernels::{fnet_naive, fnet_slab};
+    // the fast split-rfft FNet path against the O(n²·d²) definition,
+    // random power-of-two shapes, both truncation modes
+    for_all_n("fnet_vs_naive", 24, |rng| {
+        let n = 1usize << (2 + rng.below(4)); // 4..=32
+        let d = 1usize << (1 + rng.below(4)); // 2..=16
+        let truncate = rng.below(2) == 1;
+        let x: Vec<f32> = (0..n * d).map(|_| rng.normal()).collect();
+        let want = fnet_naive(&x, n, d, truncate);
+        let mut got = vec![0.0f32; n * d];
+        fnet_slab(&x, n, d, truncate, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs()
+                        <= 1e-3 * g.abs().max(w.abs()).max(1.0),
+                    "n={n} d={d} trunc={truncate} elem {i}: {g} vs {w}");
+        }
+    });
+}
+
+#[test]
+fn circulant_scores_match_naive_oracle_randomized() {
+    use cat::native::mixer::kernels::circ_scores_naive;
+    use cat::native::{corr_forward, softmax_in_place};
+    // the circulant-attention score row (frequency-domain channel-summed
+    // cross-correlation) against the O(n²·dh) definition, then the full
+    // softmax→apply chain against a rolled-gather reference
+    for_all_n("circ_scores_vs_naive", 24, |rng| {
+        let n = 1usize << (2 + rng.below(4)); // 4..=32
+        let dh = 1 + rng.below(4);
+        let q: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let k: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let scale = 1.0 / ((dh * n) as f32).sqrt();
+        let mut p = circ_scores_naive(&q, &k, dh, n);
+        for s in &mut p {
+            *s *= scale;
+        }
+        softmax_in_place(&mut p);
+        // apply: o_c[i] = Σ_t p[t]·v_c[(i+t)%n] — the CAT corr kernel
+        let got = corr_forward(&p, &v, dh);
+        for c in 0..dh {
+            for i in 0..n {
+                let want: f32 = (0..n)
+                    .map(|t| p[t] * v[c * n + (i + t) % n])
+                    .sum();
+                let g = got[c * n + i];
+                assert!((g - want).abs()
+                            <= 1e-4 * g.abs().max(want.abs()).max(1.0),
+                        "n={n} dh={dh} c={c} i={i}: {g} vs {want}");
+            }
+        }
+    });
+}
+
+/// Shared FD harness for one-block ViT configs of the zoo mixers: the
+/// dominant gradient coordinate of every tensor (plus one random draw)
+/// against central differences, rel-err ≤ 1e-2 in f32. Mirrors
+/// `cat_block_gradients_match_finite_difference` for the new mixers.
+fn block_fd_check(cfg: cat::native::TrainConfig, seed: u64,
+                  min_checked: usize) {
+    use cat::native::{TrainBatch, TrainModel};
+    let mut model = TrainModel::new(cfg, seed).expect("model");
+    let image_len = 3 * 32 * 32;
+    let mut rng = Rng::new(0xFD ^ seed);
+    let batch = TrainBatch::Vit {
+        images: (0..2 * image_len).map(|_| rng.range_f32(-1.0, 1.0))
+            .collect(),
+        labels: vec![1, 7],
+    };
+    let loss0 = model.loss_and_grad(&batch).expect("loss+grad");
+    assert!(loss0.is_finite());
+    let infos = model.tensor_infos();
+    let mut checked = 0usize;
+    for (t, (name, len)) in infos.iter().enumerate() {
+        let mut best = (0usize, 0.0f32);
+        for e in 0..*len {
+            let g = model.grad_at(t, e);
+            if g.abs() > best.1.abs() {
+                best = (e, g);
+            }
+        }
+        for e in [best.0, rng.below(*len)] {
+            let g = model.grad_at(t, e);
+            if g.abs() < 2e-3 {
+                continue; // fd noise floor dominates
+            }
+            let eps = 1e-2f32;
+            let orig = model.param_at(t, e);
+            model.perturb(t, e, eps);
+            let lp = model.forward_eval(&batch).expect("fd +").loss;
+            model.perturb(t, e, -2.0 * eps);
+            let lm = model.forward_eval(&batch).expect("fd -").loss;
+            let drift = orig - model.param_at(t, e) - eps;
+            model.perturb(t, e, eps + drift);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(grad_close(fd, g),
+                    "{name}[{e}]: fd {fd} vs analytic {g}");
+            checked += 1;
+        }
+    }
+    assert!(checked >= min_checked,
+            "only {checked} gradient coordinates cleared the noise floor");
+}
+
+#[test]
+fn fnet_block_gradients_match_finite_difference() {
+    use cat::native::{Mixer, TaskKind, TrainConfig};
+    // the parameter-free Fourier mixer still shapes every gradient that
+    // flows through it (embed, LN, MLP, head) — pin the self-adjoint
+    // backward against central differences, both truncation modes
+    for truncate in [false, true] {
+        let cfg = TrainConfig {
+            d_model: 8, // power of two (fnet mixes the hidden axis too)
+            n_heads: 2,
+            n_layers: 1,
+            batch_size: 2,
+            mixer: Mixer::Fnet,
+            alternate: false,
+            fnet_truncate: truncate,
+            task: TaskKind::Vit {
+                image_size: 32,
+                patch_size: 16, // 4 tokens
+                n_channels: 3,
+                n_classes: 10,
+            },
+        };
+        block_fd_check(cfg, 5, 8);
+    }
+}
+
+#[test]
+fn circulant_block_gradients_match_finite_difference() {
+    use cat::native::{Mixer, TaskKind, TrainConfig};
+    // q/k enter only through the shared softmaxed score row — the
+    // chained softmax-bwd → score-bwd path is the novel surface here
+    let cfg = TrainConfig {
+        d_model: 8,
+        n_heads: 2,
+        n_layers: 1,
+        batch_size: 2,
+        mixer: Mixer::Circulant,
+        alternate: false,
+        fnet_truncate: false,
+        task: TaskKind::Vit {
+            image_size: 32,
+            patch_size: 16, // 4 tokens
+            n_channels: 3,
+            n_classes: 10,
+        },
+    };
+    block_fd_check(cfg, 7, 8);
 }

@@ -101,6 +101,63 @@ fn sharded_serving_matches_unsharded_bitwise() {
     assert_eq!(agg[0].latency.count(), 8);
 }
 
+/// The registry's head-separability flag gates the shard planner end to
+/// end (ISSUE 9): a non-separable mixer must be rejected at server
+/// startup when K>1 with an actionable error, while K=1 still serves
+/// it, and a separable zoo mixer (circulant) shards bit-identically.
+#[test]
+fn non_separable_mixer_rejected_by_sharded_serving() {
+    use cat::native::{Mixer, NativeVitConfig};
+    let _guard = server_lock();
+    let opts_with = |mixer: Mixer, shards: usize| ServeOptions {
+        native: NativeVitConfig { mixer, ..Default::default() },
+        ..native_opts(shards, 1)
+    };
+
+    // fnet mixes across the full hidden axis — no head slicing exists
+    let err = Server::spawn(PathBuf::from("no_artifacts"),
+                            &["m".to_string()],
+                            opts_with(Mixer::Fnet, 2), 9)
+        .expect_err("fnet at K=2 must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("not head-separable") && msg.contains("fnet")
+                && msg.contains("--shards 1"),
+            "unhelpful non-separable rejection: {msg}");
+
+    // the same mixer serves fine unsharded
+    let ds = ShapeDataset::new(42);
+    let server = Server::spawn(PathBuf::from("no_artifacts"),
+                               &["m".to_string()],
+                               opts_with(Mixer::Fnet, 1), 9)
+        .expect("fnet at K=1 serves");
+    let handle = server.handle();
+    handle.infer("m", sample_input(&ds, 0)).expect("fnet infer");
+    drop(handle);
+    server.shutdown();
+
+    // a head-separable zoo mixer shards bit-identically to K=1
+    let want = {
+        let server = Server::spawn(PathBuf::from("no_artifacts"),
+                                   &["m".to_string()],
+                                   opts_with(Mixer::Circulant, 1), 9)
+            .expect("circulant K=1 server");
+        let h = server.handle();
+        let row = h.infer("m", sample_input(&ds, 1)).expect("infer");
+        drop(h);
+        server.shutdown();
+        row
+    };
+    let server = Server::spawn(PathBuf::from("no_artifacts"),
+                               &["m".to_string()],
+                               opts_with(Mixer::Circulant, 2), 9)
+        .expect("circulant K=2 server");
+    let handle = server.handle();
+    let got = handle.infer("m", sample_input(&ds, 1)).expect("infer");
+    assert_eq!(got, want, "sharded circulant logits diverged from K=1");
+    drop(handle);
+    server.shutdown();
+}
+
 #[test]
 fn sharded_steady_state_spawns_zero_threads() {
     let _guard = server_lock();

@@ -9,10 +9,15 @@
 //! and additionally times the AOT executables when the crate is built with
 //! `--features pjrt` and `artifacts/` exists. Emits `BENCH_scaling.json`.
 //!
+//! Each CAT-FFT point is also re-timed with the vector layer forced
+//! onto its scalar oracles (`simd::set_force_scalar_global`, DESIGN.md
+//! §15) — the per-layer simd-vs-scalar margin.
+//!
 //!   cargo bench --bench scaling_nlogn              # full sweep
 //!   cargo bench --bench scaling_nlogn -- --smoke   # CI smoke (small N)
 //!   ... -- --smoke --check   # CI gate: exit 1 unless FFT beats gather
-//!                            # at N=1024
+//!                            # at N=1024 and the simd kernels are no
+//!                            # slower than scalar at every N
 //!
 //! The batch-8 series is the PR-2 acceptance surface: ≥1.5× FFT-path
 //! throughput at N≥1024 vs the PR-1 baseline (per-call thread spawns,
@@ -22,7 +27,7 @@ use cat::bench::Bench;
 use cat::complexity::{crossover_n, layer_cost, Mechanism};
 use cat::data::Rng;
 use cat::json::Json;
-use cat::native::{pool, AttentionLayer, CatImpl, CatLayer};
+use cat::native::{pool, simd, AttentionLayer, CatImpl, CatLayer};
 
 const D: usize = 256;
 const H: usize = 8;
@@ -66,6 +71,14 @@ fn main() {
         bench.case(&format!("native_{n}_cat_fft"), || {
             cat.forward(&x, 1, n, CatImpl::Fft).expect("cat_fft forward");
         });
+        // same layer, same input, vector kernels pinned to their scalar
+        // oracles (pool workers included) — the simd-vs-scalar column
+        simd::set_force_scalar_global(true);
+        bench.case(&format!("native_{n}_cat_fft_scalar"), || {
+            cat.forward(&x, 1, n, CatImpl::Fft)
+                .expect("cat_fft scalar forward");
+        });
+        simd::set_force_scalar_global(false);
         if n >= 1024 {
             // serving-shaped batched case: one call, B8 sequences
             let xb = layer_input(B8, n);
@@ -101,6 +114,18 @@ fn main() {
                  ms("attention"), ms("cat_fft"), ms("cat_gather"),
                  gflop(Mechanism::Attention, n), gflop(Mechanism::CatFft, n),
                  gflop(Mechanism::CatGather, n));
+    }
+
+    println!("\nsimd-vs-scalar margin, cat_fft forward [backend: {}]:",
+             simd::backend_name());
+    for &n in ns {
+        if let (Some(v), Some(s)) =
+            (bench.median_of(&format!("native_{n}_cat_fft")),
+             bench.median_of(&format!("native_{n}_cat_fft_scalar")))
+        {
+            println!("  N={n:<5} simd {:>9.3} ms   scalar {:>9.3} ms   \
+                      {:.2}x", v * 1e3, s * 1e3, s / v);
+        }
     }
 
     println!("\nbatched FFT-path throughput (batch {B8}, the serving shape):");
@@ -142,7 +167,23 @@ fn main() {
         ("h".to_string(), Json::Num(H as f64)),
         ("batch_b8".to_string(), Json::Num(B8 as f64)),
         ("smoke".to_string(), Json::Bool(smoke)),
+        ("simd_backend".to_string(), Json::from(simd::backend_name())),
         ("native".to_string(), bench.to_json()),
+        ("simd_vs_scalar".to_string(), Json::Arr(
+            ns.iter()
+                .filter_map(|&n| {
+                    let v = bench
+                        .median_of(&format!("native_{n}_cat_fft"))?;
+                    let s = bench
+                        .median_of(&format!("native_{n}_cat_fft_scalar"))?;
+                    Some(Json::Obj(vec![
+                        ("n".to_string(), Json::Num(n as f64)),
+                        ("simd_ms".to_string(), Json::Num(v * 1e3)),
+                        ("scalar_ms".to_string(), Json::Num(s * 1e3)),
+                        ("speedup".to_string(), Json::Num(s / v)),
+                    ]))
+                })
+                .collect())),
         ("fft_throughput_seq_per_s".to_string(), Json::Arr(
             ns.iter()
                 .filter(|&&n| n >= 1024)
@@ -201,6 +242,33 @@ fn main() {
                 eprintln!("perf gate FAILED: N=1024 cases missing");
                 std::process::exit(1);
             }
+        }
+
+        // simd gate: the vector kernels must be no slower than their
+        // scalar oracles at every measured N. Throughput-space margin
+        // matching the trainstep gate: simd must reach 97% of scalar
+        // (a shared-runner noise grace, not a license to regress).
+        const SIMD_GATE_MARGIN: f64 = 0.97;
+        let mut simd_regressions = Vec::new();
+        for &n in ns {
+            if let (Some(v), Some(s)) =
+                (bench.median_of(&format!("native_{n}_cat_fft")),
+                 bench.median_of(&format!("native_{n}_cat_fft_scalar")))
+            {
+                if v * SIMD_GATE_MARGIN >= s {
+                    simd_regressions.push(format!(
+                        "N={n} (simd {:.3} ms vs scalar {:.3} ms)",
+                        v * 1e3, s * 1e3));
+                }
+            }
+        }
+        if simd_regressions.is_empty() {
+            eprintln!("simd gate OK: vector kernels no slower than \
+                       forced-scalar at every measured N [{}]",
+                      simd::backend_name());
+        } else {
+            eprintln!("simd gate FAILED: {simd_regressions:?}");
+            std::process::exit(1);
         }
     }
 }

@@ -2,8 +2,9 @@
 //! trained natively. The grid covers the mechanism axis (softmax
 //! attention vs the merged-CAT apply via FFT vs the O(N²) gather
 //! reference — identical math, so their accuracies should agree — plus
-//! the registry's zoo rows: parameter-free FNet and the 3d²-budget
-//! circulant-attention variant) and the head-count axis (h ∈ {2, 4, 8},
+//! the registry's zoo rows: parameter-free FNet, the 3d²-budget
+//! circulant-attention variant, and the conv-augmented CAT hybrid)
+//! and the head-count axis (h ∈ {2, 4, 8},
 //! which moves the `(d+h)·d` budget), reporting accuracy + whole-model
 //! parameter counts. No artifacts.
 //!
@@ -40,6 +41,8 @@ fn main() {
          None),
         ("native_vit_circulant".into(),
          TrainConfig::vit(Mixer::Circulant, false), None),
+        ("native_vit_cat_conv".into(),
+         TrainConfig::vit(Mixer::CatConv, false), None),
     ];
     if !smoke {
         for heads in [2usize, 8] {

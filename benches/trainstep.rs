@@ -7,16 +7,23 @@
 //! (`tests/proptests.rs`), so this bench measures exactly the pair that
 //! is proven numerically interchangeable.
 //!
+//! A third column re-times the tiled backward with the vector layer
+//! forced onto its scalar oracles (`simd::set_force_scalar_global`,
+//! DESIGN.md §15) — the simd-vs-scalar margin of the whole train step.
+//!
 //!   cargo bench --bench trainstep              # full mixer × N grid
 //!   cargo bench --bench trainstep -- --smoke   # CI grid (small N)
 //!   ... -- --smoke --check   # CI gate: exit 1 unless the tiled
-//!                            # backward beats naive at every config
+//!                            # backward beats naive AND the simd
+//!                            # kernels are no slower than scalar
+//!                            # at every config
 //!
 //! Always emits `BENCH_trainstep.json`.
 
 use cat::bench::Bench;
 use cat::json::Json;
-use cat::native::{pool, set_naive_backward, Mixer, TaskKind, TrainConfig};
+use cat::native::{pool, set_naive_backward, simd, Mixer, TaskKind,
+                  TrainConfig};
 use cat::train::{NativeTrainer, TrainBackend};
 
 /// Table-2-shaped LM trunk (d=64, h=4, L=2, batch 8) at sequence length
@@ -77,17 +84,27 @@ fn main() {
     // band in tests/native_backend.rs). Raw medians land in the JSON.
     const GATE_MARGIN: f64 = 0.97;
 
-    let mut measure = |case: &Case, tag: &str| -> [f64; 2] {
-        let mut out = [0.0f64; 2]; // [tiled, naive] steps/s
-        for (slot, naive) in [(0usize, false), (1usize, true)] {
+    let mut measure = |case: &Case, tag: &str| -> [f64; 3] {
+        // [tiled, naive, tiled w/ forced-scalar kernels] steps/s
+        let mut out = [0.0f64; 3];
+        for (slot, naive, scalar) in [(0usize, false, false),
+                                      (1usize, true, false),
+                                      (2usize, false, true)] {
             set_naive_backward(naive);
+            simd::set_force_scalar_global(scalar);
             let mut t =
                 NativeTrainer::from_config(&case.label, case.cfg, 0)
                     .expect("trainer");
             // warm the plan caches / arenas / pool out of the timing
             let warm = t.train_step(1e-3).expect("warm step");
             assert!(warm.is_finite(), "{}: non-finite loss", case.label);
-            let mode = if naive { "naive" } else { "tiled" };
+            let mode = if naive {
+                "naive"
+            } else if scalar {
+                "scalar"
+            } else {
+                "tiled"
+            };
             let sample =
                 bench.case(&format!("{}_{mode}{tag}", case.label), || {
                     for _ in 0..steps_per_sample {
@@ -97,29 +114,41 @@ fn main() {
             out[slot] = steps_per_sample as f64 / sample.median();
         }
         set_naive_backward(false);
+        simd::set_force_scalar_global(false);
         out
     };
 
-    println!("steps/s per mixer × N, tiled backward vs the naive \
-              reference kernels:");
+    println!("steps/s per mixer × N: tiled backward vs the naive \
+              reference kernels, and the same tiled step with the \
+              vector layer forced scalar [simd backend: {}]:",
+             simd::backend_name());
     let mut rows = Vec::new();
     let mut regressions = Vec::new();
     for case in &cases {
         let mut steps_per_s = measure(case, "");
-        if steps_per_s[0] <= steps_per_s[1] {
-            eprintln!("  {}: tiled {:.2} <= naive {:.2} steps/s — noisy \
-                       sample? re-measuring once",
-                      case.label, steps_per_s[0], steps_per_s[1]);
+        if steps_per_s[0] <= steps_per_s[1]
+            || steps_per_s[0] <= steps_per_s[2]
+        {
+            eprintln!("  {}: tiled {:.2} steps/s vs naive {:.2} / scalar \
+                       {:.2} — noisy sample? re-measuring once",
+                      case.label, steps_per_s[0], steps_per_s[1],
+                      steps_per_s[2]);
             steps_per_s = measure(case, "_retry");
         }
         let speedup = steps_per_s[0] / steps_per_s[1];
-        let ok = steps_per_s[0] > steps_per_s[1] * GATE_MARGIN;
+        let simd_speedup = steps_per_s[0] / steps_per_s[2];
+        let tiled_ok = steps_per_s[0] > steps_per_s[1] * GATE_MARGIN;
+        let simd_ok = steps_per_s[0] > steps_per_s[2] * GATE_MARGIN;
         println!("  {:<18} tiled {:>8.2} steps/s   naive {:>8.2}   \
-                  speedup {:.2}x{}",
-                 case.label, steps_per_s[0], steps_per_s[1], speedup,
-                 if ok { "" } else { "  [REGRESSION]" });
-        if !ok {
-            regressions.push(case.label.clone());
+                  scalar {:>8.2}   vs-naive {:.2}x   vs-scalar {:.2}x{}",
+                 case.label, steps_per_s[0], steps_per_s[1],
+                 steps_per_s[2], speedup, simd_speedup,
+                 if tiled_ok && simd_ok { "" } else { "  [REGRESSION]" });
+        if !tiled_ok {
+            regressions.push(format!("{} (tiled vs naive)", case.label));
+        }
+        if !simd_ok {
+            regressions.push(format!("{} (simd vs scalar)", case.label));
         }
         rows.push(Json::Obj(vec![
             ("config".to_string(), Json::Str(case.label.clone())),
@@ -128,8 +157,10 @@ fn main() {
             ("n".to_string(), Json::Num(case.cfg.n_tokens() as f64)),
             ("tiled_steps_per_s".to_string(), Json::Num(steps_per_s[0])),
             ("naive_steps_per_s".to_string(), Json::Num(steps_per_s[1])),
+            ("scalar_steps_per_s".to_string(), Json::Num(steps_per_s[2])),
             ("speedup".to_string(), Json::Num(speedup)),
-            ("gate_pass".to_string(), Json::Bool(ok)),
+            ("simd_speedup".to_string(), Json::Num(simd_speedup)),
+            ("gate_pass".to_string(), Json::Bool(tiled_ok && simd_ok)),
         ]));
     }
     print!("{}", bench.report());
@@ -137,6 +168,7 @@ fn main() {
     let ps = pool::stats();
     let obj = Json::Obj(vec![
         ("bench".to_string(), Json::from("trainstep")),
+        ("simd_backend".to_string(), Json::from(simd::backend_name())),
         ("smoke".to_string(), Json::Bool(smoke)),
         ("steps_per_sample".to_string(),
          Json::Num(steps_per_sample as f64)),
@@ -157,10 +189,10 @@ fn main() {
     if check {
         if regressions.is_empty() {
             eprintln!("perf gate OK: tiled backward beat the naive \
-                       reference at every measured config");
+                       reference and the simd kernels were no slower \
+                       than forced-scalar at every measured config");
         } else {
-            eprintln!("perf gate FAILED: tiled backward lost to the naive \
-                       reference at {regressions:?}");
+            eprintln!("perf gate FAILED at {regressions:?}");
             std::process::exit(1);
         }
     }

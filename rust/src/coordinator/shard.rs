@@ -461,4 +461,21 @@ mod tests {
             assert_eq!(got, want, "circulant K={k} diverged");
         }
     }
+
+    #[test]
+    fn cat_conv_sharded_matches_unsharded_bitwise() {
+        let cfg = NativeVitConfig {
+            mixer: Mixer::CatConv,
+            ..Default::default()
+        };
+        let full = NativeCatModel::new(cfg, 31);
+        let images = test_images(&cfg, 2, 37);
+        let want = full.forward_batch(&images, 2).unwrap();
+        for k in [1usize, 2, 4] {
+            let sharded =
+                ShardedNativeModel::new(cfg, 31, k, Some(1)).unwrap();
+            let got = sharded.forward_batch(&images, 2).unwrap();
+            assert_eq!(got, want, "cat_conv K={k} diverged");
+        }
+    }
 }

@@ -73,9 +73,20 @@ impl Arena {
     /// Contents are unspecified (previous frame's data) — callers must
     /// fully overwrite. Heap-free at steady state: the carve-up itself
     /// allocates nothing.
+    ///
+    /// Alignment contract (DESIGN.md §15): every returned slice starts
+    /// on a 32-byte boundary, so `simd::F32xN` loads over arena frames
+    /// hit the aligned fast path at any lane width. Each requested
+    /// length is carved with up-to-7-element padding after it; the
+    /// padding is never handed out. The vector kernels use
+    /// unaligned-tolerant loads, so this is throughput, not safety.
     pub fn frame<const K: usize>(&mut self, lens: [usize; K])
                                  -> [&mut [f32]; K] {
-        let total: usize = lens.iter().sum();
+        // 32 bytes = 8 f32 lanes, the widest compiled-in vector tier.
+        const ALIGN_F32: usize = 8;
+        let pad = |len: usize| (len + ALIGN_F32 - 1) & !(ALIGN_F32 - 1);
+        let total: usize =
+            lens.iter().map(|&l| pad(l)).sum::<usize>() + ALIGN_F32 - 1;
         if self.buf.len() < total {
             GROWS.fetch_add(1, Ordering::Relaxed);
             self.buf.resize(total, 0.0);
@@ -83,11 +94,17 @@ impl Arena {
                 (total * std::mem::size_of::<f32>()) as u64,
                 Ordering::Relaxed);
         }
-        let mut rest = self.buf.as_mut_slice();
+        // Vec<f32> only guarantees 4-byte alignment; skip to the first
+        // 32-byte boundary (≤ 7 elements, covered by the slack above).
+        let addr = self.buf.as_ptr() as usize;
+        let base = (addr.wrapping_neg() & (4 * ALIGN_F32 - 1))
+            / std::mem::size_of::<f32>();
+        let mut rest = &mut self.buf[base..];
         lens.map(|len| {
-            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            let (head, tail) =
+                std::mem::take(&mut rest).split_at_mut(pad(len));
             rest = tail;
-            head
+            &mut head[..len]
         })
     }
 }
@@ -137,6 +154,21 @@ mod tests {
         c.fill(2.0);
         assert!(a.iter().all(|&v| v == 1.0));
         assert!(c.iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    fn frame_slices_are_32_byte_aligned() {
+        let mut arena = Arena::new();
+        // odd lengths force padding between slices
+        let [a, b, c, d] = arena.frame([1, 5, 13, 64]);
+        for (name, s) in [("a", &*a), ("b", &*b), ("c", &*c), ("d", &*d)] {
+            if s.is_empty() {
+                continue;
+            }
+            assert_eq!(s.as_ptr() as usize % 32, 0,
+                       "slice {name} not 32-byte aligned");
+        }
+        assert_eq!((a.len(), b.len(), c.len(), d.len()), (1, 5, 13, 64));
     }
 
     #[test]

@@ -49,6 +49,7 @@ use super::cat::{matmul, softmax_in_place};
 use super::fft::{split_rfft_plan, SplitRfftPlan};
 use super::mixer::{self, train::MixerParams, Mixer};
 use super::pool;
+use super::simd;
 use crate::data::Rng;
 use crate::Result;
 
@@ -137,11 +138,7 @@ pub fn matmul_wt(dy: &[f32], rows: usize, cols: usize, w: &[f32],
     debug_assert_eq!(dx.len(), rows * inner);
     let body = |dyrow: &[f32], dxrow: &mut [f32]| {
         for (k, slot) in dxrow.iter_mut().enumerate() {
-            let wrow = &w[k * cols..(k + 1) * cols];
-            let mut s = 0.0f32;
-            for (dv, wv) in dyrow.iter().zip(wrow) {
-                s += dv * wv;
-            }
+            let s = simd::dot(dyrow, &w[k * cols..(k + 1) * cols]);
             if accumulate {
                 *slot += s;
             } else {
@@ -191,10 +188,8 @@ fn xt_block(x: &[f32], inner: usize, dy: &[f32], cols: usize, r0: usize,
             for r in r0..r0 + rb {
                 let xv = x[r * inner + k];
                 if xv != 0.0 {
-                    let dyrow = &dy[r * cols + j0..r * cols + j0 + jb];
-                    for (w, &dv) in dwrow.iter_mut().zip(dyrow) {
-                        *w += xv * dv;
-                    }
+                    simd::axpy(dwrow,
+                               &dy[r * cols + j0..r * cols + j0 + jb], xv);
                 }
             }
         }
@@ -273,9 +268,7 @@ pub fn matmul_xt_acc(x: &[f32], rows: usize, inner: usize, dy: &[f32],
         });
         // fixed-order reduction: ascending block index, serial
         for part in partials.chunks_exact(tile) {
-            for (w, &pv) in dw.iter_mut().zip(part) {
-                *w += pv;
-            }
+            simd::add_assign(dw, part);
         }
     });
 }
@@ -296,9 +289,7 @@ pub fn matmul_xt_acc_naive(x: &[f32], rows: usize, inner: usize,
                 x.chunks_exact(inner).zip(dy.chunks_exact(cols)) {
                 let xv = xrow[k];
                 if xv != 0.0 {
-                    for (w, dv) in dwrow.iter_mut().zip(dyrow) {
-                        *w += xv * dv;
-                    }
+                    simd::axpy(dwrow, dyrow, xv);
                 }
             }
         }
@@ -338,15 +329,11 @@ pub fn colsum_acc(dy: &[f32], cols: usize, db: &mut [f32]) {
             let rb = ROW_BLOCK.min(rows - r0);
             for dyrow in
                 dy[r0 * cols..(r0 + rb) * cols].chunks_exact(cols) {
-                for (b, &dv) in part.iter_mut().zip(dyrow) {
-                    *b += dv;
-                }
+                simd::add_assign(part, dyrow);
             }
         });
         for part in partials.chunks_exact(cols) {
-            for (b, &pv) in db.iter_mut().zip(part) {
-                *b += pv;
-            }
+            simd::add_assign(db, part);
         }
     });
 }
@@ -356,9 +343,7 @@ pub fn colsum_acc(dy: &[f32], cols: usize, db: &mut [f32]) {
 pub fn colsum_acc_naive(dy: &[f32], cols: usize, db: &mut [f32]) {
     debug_assert_eq!(db.len(), cols);
     for dyrow in dy.chunks_exact(cols) {
-        for (b, dv) in db.iter_mut().zip(dyrow) {
-            *b += dv;
-        }
+        simd::add_assign(db, dyrow);
     }
 }
 
@@ -388,9 +373,8 @@ fn layernorm_fwd(x: &[f32], gamma: &[f32], beta: &[f32], y: &mut [f32],
         .zip(cache.xhat.chunks_exact_mut(d))
         .zip(cache.inv.iter_mut())
     {
-        let mean = xrow.iter().sum::<f32>() / d as f32;
-        let var = xrow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
-            / d as f32;
+        let mean = simd::sum(xrow) / d as f32;
+        let var = simd::sumsq_diff(xrow, mean) / d as f32;
         *inv = 1.0 / (var + LN_EPS).sqrt();
         for c in 0..d {
             hrow[c] = (xrow[c] - mean) * *inv;
@@ -410,17 +394,10 @@ fn layernorm_bwd(dy: &[f32], gamma: &[f32], cache: &LnCache,
         .zip(cache.inv.iter())
         .zip(dx.chunks_exact_mut(d))
     {
-        let mut m1 = 0.0f32;
-        let mut m2 = 0.0f32;
-        for c in 0..d {
-            dgamma[c] += dyrow[c] * hrow[c];
-            dbeta[c] += dyrow[c];
-            let dh = dyrow[c] * gamma[c];
-            m1 += dh;
-            m2 += dh * hrow[c];
-        }
-        m1 /= d as f32;
-        m2 /= d as f32;
+        simd::mul_acc(dgamma, dyrow, hrow);
+        simd::add_assign(dbeta, dyrow);
+        let m1 = simd::dot(dyrow, gamma) / d as f32;
+        let m2 = simd::dot3(dyrow, gamma, hrow) / d as f32;
         for c in 0..d {
             let dh = dyrow[c] * gamma[c];
             dxrow[c] = inv * (dh - m1 - hrow[c] * m2);
@@ -430,10 +407,7 @@ fn layernorm_bwd(dy: &[f32], gamma: &[f32], cache: &LnCache,
 
 /// In-place softmax backward over one row: `dp ← p ⊙ (dp − p·dp)`.
 pub(crate) fn softmax_bwd_in_place(p: &[f32], dp: &mut [f32]) {
-    let mut dot = 0.0f32;
-    for (pv, dv) in p.iter().zip(dp.iter()) {
-        dot += pv * dv;
-    }
+    let dot = simd::dot(p, dp);
     for (pv, dv) in p.iter().zip(dp.iter_mut()) {
         *dv = pv * (*dv - dot);
     }
@@ -442,17 +416,6 @@ pub(crate) fn softmax_bwd_in_place(p: &[f32], dp: &mut [f32]) {
 // ---------------------------------------------------------------------------
 // circular-correlation stripe kernels (forward + backward, FFT domain)
 // ---------------------------------------------------------------------------
-
-#[inline]
-pub(crate) fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
-    (ar * br - ai * bi, ar * bi + ai * br)
-}
-
-/// `conj(a) · b`.
-#[inline]
-pub(crate) fn cmul_conj_a(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
-    (ar * br + ai * bi, ar * bi - ai * br)
-}
 
 /// One stripe of the non-causal CAT apply:
 /// `out[c,i] = Σ_k p[k]·v[c,(i+k)%n]` over `dh` channel rows, one batched
@@ -467,13 +430,8 @@ pub(crate) fn corr_fwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32],
     plan.rfft(p, zre, zim, scratch);
     plan.rfft_many(v, dh, vre, vim, scratch);
     for c in 0..dh {
-        let vr = &mut vre[c * f..(c + 1) * f];
-        let vi = &mut vim[c * f..(c + 1) * f];
-        for k in 0..f {
-            let (re, im) = cmul_conj_a(zre[k], zim[k], vr[k], vi[k]);
-            vr[k] = re;
-            vi[k] = im;
-        }
+        simd::cmul_conj_a_rows(zre, zim, &mut vre[c * f..(c + 1) * f],
+                               &mut vim[c * f..(c + 1) * f]);
     }
     plan.irfft_many(vre, vim, dh, out, scratch);
 }
@@ -499,14 +457,9 @@ pub(crate) fn corr_bwd_stripe(plan: &SplitRfftPlan, p: &[f32], v: &[f32],
         let gi = &mut gim[c * f..(c + 1) * f];
         let vr = &vre[c * f..(c + 1) * f];
         let vi = &vim[c * f..(c + 1) * f];
-        for k in 0..f {
-            let (ar, ai) = cmul_conj_a(gr[k], gi[k], vr[k], vi[k]);
-            acc_re[k] += ar;
-            acc_im[k] += ai;
-            let (re, im) = cmul(gr[k], gi[k], zre[k], zim[k]);
-            gr[k] = re;
-            gi[k] = im;
-        }
+        // dp spectrum += conj(dOf_c) ⊙ Vf_c, then dOf_c ← dOf_c ⊙ Zf
+        simd::cmul_conj_a_acc_rows(gr, gi, vr, vi, acc_re, acc_im);
+        simd::cmul_rows(zre, zim, gr, gi);
     }
     plan.irfft_many(gre, gim, dh, dv, scratch);
     plan.irfft(acc_re, acc_im, dp, scratch);
@@ -530,11 +483,7 @@ fn causal_fwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32], dh: usize,
         pad[..n].copy_from_slice(&v[c * n..(c + 1) * n]);
         pad[n..].fill(0.0);
         plan2.rfft(pad, vre, vim, scratch);
-        for k in 0..f {
-            let (re, im) = cmul(zre[k], zim[k], vre[k], vim[k]);
-            vre[k] = re;
-            vim[k] = im;
-        }
+        simd::cmul_rows(zre, zim, vre, vim);
         plan2.irfft(vre, vim, row2, scratch);
         out[c * n..(c + 1) * n].copy_from_slice(&row2[..n]);
     }
@@ -566,14 +515,10 @@ pub(crate) fn causal_bwd_stripe(plan2: &SplitRfftPlan, p: &[f32], v: &[f32],
         pad[..n].copy_from_slice(&v[c * n..(c + 1) * n]);
         pad[n..].fill(0.0);
         plan2.rfft(pad, vre, vim, scratch);
-        for k in 0..f {
-            let (ar, ai) = cmul_conj_a(vre[k], vim[k], gre[k], gim[k]);
-            acc_re[k] += ar;
-            acc_im[k] += ai;
-            let (re, im) = cmul_conj_a(zre[k], zim[k], gre[k], gim[k]);
-            tre[k] = re;
-            tim[k] = im;
-        }
+        simd::cmul_conj_a_acc_rows(vre, vim, gre, gim, acc_re, acc_im);
+        tre.copy_from_slice(gre);
+        tim.copy_from_slice(gim);
+        simd::cmul_conj_a_rows(zre, zim, tre, tim);
         plan2.irfft(tre, tim, row2, scratch);
         dv[c * n..(c + 1) * n].copy_from_slice(&row2[..n]);
     }
@@ -608,13 +553,8 @@ pub(crate) fn causal_fwd_stripe_batched(
     }
     plan2.rfft_many(pad2, dh, vre, vim, scratch);
     for c in 0..dh {
-        let vr = &mut vre[c * f..(c + 1) * f];
-        let vi = &mut vim[c * f..(c + 1) * f];
-        for k in 0..f {
-            let (re, im) = cmul(zre[k], zim[k], vr[k], vi[k]);
-            vr[k] = re;
-            vi[k] = im;
-        }
+        simd::cmul_rows(zre, zim, &mut vre[c * f..(c + 1) * f],
+                        &mut vim[c * f..(c + 1) * f]);
     }
     plan2.irfft_many(vre, vim, dh, out2, scratch);
     for c in 0..dh {
@@ -662,14 +602,9 @@ pub(crate) fn causal_bwd_stripe_batched(
         let gi = &mut gim[c * f..(c + 1) * f];
         let vr = &vre[c * f..(c + 1) * f];
         let vi = &vim[c * f..(c + 1) * f];
-        for k in 0..f {
-            let (ar, ai) = cmul_conj_a(vr[k], vi[k], gr[k], gi[k]);
-            acc_re[k] += ar;
-            acc_im[k] += ai;
-            let (re, im) = cmul_conj_a(zre[k], zim[k], gr[k], gi[k]);
-            gr[k] = re;
-            gi[k] = im;
-        }
+        // dp spectrum += conj(Vf₂_c) ⊙ dOf₂_c, then dOf₂_c ← conj(Zf₂) ⊙ dOf₂_c
+        simd::cmul_conj_a_acc_rows(vr, vi, gr, gi, acc_re, acc_im);
+        simd::cmul_conj_a_rows(zre, zim, gr, gi);
     }
     plan2.irfft_many(gre, gim, dh, out2, scratch);
     for c in 0..dh {
@@ -901,11 +836,7 @@ pub(crate) fn attn_bwd_stripe_rows(
             let pi = &ps[i * n..(i + 1) * n];
             let mut dsum = 0.0f32;
             for (j, slot) in dprow.iter_mut().take(lim).enumerate() {
-                let vj = &v[j * dh..(j + 1) * dh];
-                let mut dot = 0.0f32;
-                for (a, bb) in doi.iter().zip(vj) {
-                    dot += a * bb;
-                }
+                let dot = simd::dot(doi, &v[j * dh..(j + 1) * dh]);
                 *slot = dot;
                 dsum += dot * pi[j];
             }
@@ -915,18 +846,9 @@ pub(crate) fn attn_bwd_stripe_rows(
             for j in 0..lim {
                 let pj = pi[j];
                 let ds = pj * (dprow[j] - dsum) * scale;
-                let kj = &k[j * dh..(j + 1) * dh];
-                for (dq, &kv) in dqi.iter_mut().zip(kj) {
-                    *dq += ds * kv;
-                }
-                let dkj = &mut dks[j * dh..(j + 1) * dh];
-                for (dk_, &qv) in dkj.iter_mut().zip(qi) {
-                    *dk_ += ds * qv;
-                }
-                let dvj = &mut dvs[j * dh..(j + 1) * dh];
-                for (dv_, &dov) in dvj.iter_mut().zip(doi) {
-                    *dv_ += pj * dov;
-                }
+                simd::axpy(dqi, &k[j * dh..(j + 1) * dh], ds);
+                simd::axpy(&mut dks[j * dh..(j + 1) * dh], qi, ds);
+                simd::axpy(&mut dvs[j * dh..(j + 1) * dh], doi, pj);
             }
         }
     });
@@ -967,12 +889,8 @@ pub(crate) fn attn_bwd_stripe_panels(
                     let doi = &dost[i * dh..(i + 1) * dh];
                     let dsrow = &mut ds[r * n + j0..r * n + j0 + je];
                     for (jj, slot) in dsrow.iter_mut().enumerate() {
-                        let vj = &v[(j0 + jj) * dh..(j0 + jj + 1) * dh];
-                        let mut dot = 0.0f32;
-                        for (a, bb) in doi.iter().zip(vj) {
-                            dot += a * bb;
-                        }
-                        *slot = dot;
+                        *slot = simd::dot(
+                            doi, &v[(j0 + jj) * dh..(j0 + jj + 1) * dh]);
                     }
                 }
                 j0 += jb;
@@ -1010,19 +928,10 @@ pub(crate) fn attn_bwd_stripe_panels(
                     let dsrow = &ds[r * n..(r + 1) * n];
                     for j in j0..j0 + je {
                         let dsv = dsrow[j];
-                        let kj = &k[j * dh..(j + 1) * dh];
-                        for (dq, &kv) in dqi.iter_mut().zip(kj) {
-                            *dq += dsv * kv;
-                        }
-                        let dkj = &mut dks[j * dh..(j + 1) * dh];
-                        for (dk_, &qv) in dkj.iter_mut().zip(qi) {
-                            *dk_ += dsv * qv;
-                        }
-                        let pj = pirow[j];
-                        let dvj = &mut dvs[j * dh..(j + 1) * dh];
-                        for (dv_, &dov) in dvj.iter_mut().zip(doi) {
-                            *dv_ += pj * dov;
-                        }
+                        simd::axpy(dqi, &k[j * dh..(j + 1) * dh], dsv);
+                        simd::axpy(&mut dks[j * dh..(j + 1) * dh], qi, dsv);
+                        simd::axpy(&mut dvs[j * dh..(j + 1) * dh], doi,
+                                   pirow[j]);
                     }
                 }
                 j0 += jb;

@@ -36,6 +36,7 @@ use super::arena;
 use super::fft::split_rfft_plan;
 use super::mixer::{serve::ServeMixer, Mixer};
 use super::pool;
+use super::simd;
 use crate::data::Rng;
 use crate::obs::trace::{self as obs_trace, Stage};
 use crate::Result;
@@ -91,32 +92,32 @@ pub fn matmul(x: &[f32], rows: usize, inner: usize, w: &[f32], cols: usize,
     });
 }
 
-/// Serial row-major matmul kernel (ikj order: streams `w` rows).
+/// Serial row-major matmul kernel (ikj order: streams `w` rows). Each
+/// output row accumulates rank-1 updates via [`simd::axpy`] — per-slot
+/// accumulation order matches the scalar oracle, so the kernel is
+/// bit-identical across dispatch tiers.
 fn matmul_rows(x: &[f32], inner: usize, w: &[f32], cols: usize,
                out: &mut [f32]) {
     out.fill(0.0);
     for (xrow, orow) in x.chunks_exact(inner).zip(out.chunks_exact_mut(cols)) {
         for (k, &xv) in xrow.iter().enumerate() {
-            let wrow = &w[k * cols..(k + 1) * cols];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += xv * wv;
-            }
+            simd::axpy(orow, &w[k * cols..(k + 1) * cols], xv);
         }
     }
 }
 
-/// Numerically stable in-place softmax over one row.
+/// Numerically stable in-place softmax over one row. The max scan and
+/// the final rescale run through [`simd`]; the exp+sum pass stays a
+/// fused scalar loop (`exp` has no vector form here, and fusing keeps
+/// the running sum's accumulation order identical to the oracle).
 pub fn softmax_in_place(row: &mut [f32]) {
-    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let max = simd::max(row);
     let mut sum = 0.0f32;
     for v in row.iter_mut() {
         *v = (*v - max).exp();
         sum += *v;
     }
-    let inv = 1.0 / sum;
-    for v in row.iter_mut() {
-        *v *= inv;
-    }
+    simd::scale(row, 1.0 / sum);
 }
 
 /// `(b, n, h·dh)` → head-major `(b, h, n, dh)`.
@@ -352,14 +353,11 @@ impl CatLayer {
                         let zr = &zf_re[si * f..(si + 1) * f];
                         let zi = &zf_im[si * f..(si + 1) * f];
                         for c in 0..dh {
-                            let vr = &mut vre[c * f..(c + 1) * f];
-                            let vi = &mut vim[c * f..(c + 1) * f];
-                            for k in 0..f {
-                                // conj(zf) ⊙ vf
-                                let (br, bi) = (vr[k], vi[k]);
-                                vr[k] = zr[k] * br + zi[k] * bi;
-                                vi[k] = zr[k] * bi - zi[k] * br;
-                            }
+                            // conj(zf) ⊙ vf
+                            simd::cmul_conj_a_rows(
+                                zr, zi,
+                                &mut vre[c * f..(c + 1) * f],
+                                &mut vim[c * f..(c + 1) * f]);
                         }
                         plan.irfft_many(vre, vim, dh, stripe, scratch);
                     });
@@ -421,12 +419,8 @@ impl CatLayer {
                         let orow = &mut oc[i * dh..(i + 1) * dh];
                         orow.fill(0.0);
                         for k in 0..n {
-                            let w = zc[k];
                             let j = (i + k) % n;
-                            let vrow = &vc[j * dh..j * dh + dh];
-                            for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                                *ov += w * vv;
-                            }
+                            simd::axpy(orow, &vc[j * dh..j * dh + dh], zc[k]);
                         }
                     }
                 });
@@ -530,21 +524,14 @@ impl AttentionLayer {
                         let q = &qc[i * dh..(i + 1) * dh];
                         for j in 0..n {
                             let k = &kc[j * dh..(j + 1) * dh];
-                            let mut dot = 0.0f32;
-                            for c in 0..dh {
-                                dot += q[c] * k[c];
-                            }
-                            row[j] = dot * scale;
+                            row[j] = simd::dot(q, k) * scale;
                         }
                         softmax_in_place(row);
                         let orow = &mut oc[i * dh..(i + 1) * dh];
                         orow.fill(0.0);
                         for j in 0..n {
-                            let w = row[j];
-                            let vrow = &vc[j * dh..(j + 1) * dh];
-                            for (ov, &vv) in orow.iter_mut().zip(vrow) {
-                                *ov += w * vv;
-                            }
+                            simd::axpy(orow, &vc[j * dh..(j + 1) * dh],
+                                       row[j]);
                         }
                     }
                 });
@@ -615,13 +602,14 @@ impl LayerNorm {
         LayerNorm { gamma: vec![1.0; d], beta: vec![0.0; d] }
     }
 
-    /// Normalize each `d`-sized row of `src` into `dst`.
+    /// Normalize each `d`-sized row of `src` into `dst`. The mean and
+    /// variance passes are [`simd`] reductions (tolerance-pinned); the
+    /// normalize itself is element-wise.
     fn apply(&self, src: &[f32], dst: &mut [f32]) {
         let d = self.gamma.len();
         for (srow, drow) in src.chunks_exact(d).zip(dst.chunks_exact_mut(d)) {
-            let mean = srow.iter().sum::<f32>() / d as f32;
-            let var = srow.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
-                / d as f32;
+            let mean = simd::sum(srow) / d as f32;
+            let var = simd::sumsq_diff(srow, mean) / d as f32;
             let inv = 1.0 / (var + 1e-5).sqrt();
             for c in 0..d {
                 drow[c] = (srow[c] - mean) * inv * self.gamma[c]

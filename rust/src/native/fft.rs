@@ -581,11 +581,16 @@ impl SplitRfftPlan {
 ///   y2 = ω²ᵖ·(t0 − t2)    y3 = ω³ᵖ·(t1 − t3)
 /// ```
 ///
-/// The `q` inner loops run over equal-length `f32` slices — flat FMA
-/// chains the compiler vectorizes.
+/// The `q` inner loops run over equal-length `f32` slices: the stride-`s`
+/// lanes map straight onto [`simd::F32xN`] vectors (twiddles are scalar
+/// per `p`, broadcast across the lane). Both the vector body and the
+/// scalar tail/oracle perform the identical mul/add sequence with no
+/// hardware FMA, so the stage is bit-exact across dispatch tiers.
 fn stage_apply(st: &SplitStage, src_re: &[f32], src_im: &[f32],
                dst_re: &mut [f32], dst_im: &mut [f32]) {
+    use super::simd::{self, F32xN, LANES};
     let s = st.s;
+    let vector = !simd::force_scalar() && s >= LANES;
     if st.radix == 4 {
         let m = st.n_cur / 4;
         for p in 0..m {
@@ -607,7 +612,50 @@ fn stage_apply(st: &SplitStage, src_re: &[f32], src_im: &[f32],
             let (y0i, rest) = dst_im[o..o + 4 * s].split_at_mut(s);
             let (y1i, rest) = rest.split_at_mut(s);
             let (y2i, y3i) = rest.split_at_mut(s);
-            for q in 0..s {
+            let mut q = 0;
+            if vector {
+                let v1r = F32xN::splat(w1r);
+                let v1i = F32xN::splat(w1i);
+                let v2r = F32xN::splat(w2r);
+                let v2i = F32xN::splat(w2i);
+                let v3r = F32xN::splat(w3r);
+                let v3i = F32xN::splat(w3i);
+                while q + LANES <= s {
+                    let ar = F32xN::load(&a_r[q..]);
+                    let ai = F32xN::load(&a_i[q..]);
+                    let br = F32xN::load(&b_r[q..]);
+                    let bi = F32xN::load(&b_i[q..]);
+                    let cr = F32xN::load(&c_r[q..]);
+                    let ci = F32xN::load(&c_i[q..]);
+                    let dr = F32xN::load(&d_r[q..]);
+                    let di = F32xN::load(&d_i[q..]);
+                    let t0r = ar.add(cr);
+                    let t0i = ai.add(ci);
+                    let t1r = ar.sub(cr);
+                    let t1i = ai.sub(ci);
+                    let t2r = br.add(dr);
+                    let t2i = bi.add(di);
+                    // t3 = -i·(b - d)
+                    let t3r = bi.sub(di);
+                    let t3i = dr.sub(br);
+                    t0r.add(t2r).store(&mut y0r[q..]);
+                    t0i.add(t2i).store(&mut y0i[q..]);
+                    let u1r = t1r.add(t3r);
+                    let u1i = t1i.add(t3i);
+                    u1r.mul(v1r).sub(u1i.mul(v1i)).store(&mut y1r[q..]);
+                    u1r.mul(v1i).add(u1i.mul(v1r)).store(&mut y1i[q..]);
+                    let u2r = t0r.sub(t2r);
+                    let u2i = t0i.sub(t2i);
+                    u2r.mul(v2r).sub(u2i.mul(v2i)).store(&mut y2r[q..]);
+                    u2r.mul(v2i).add(u2i.mul(v2r)).store(&mut y2i[q..]);
+                    let u3r = t1r.sub(t3r);
+                    let u3i = t1i.sub(t3i);
+                    u3r.mul(v3r).sub(u3i.mul(v3i)).store(&mut y3r[q..]);
+                    u3r.mul(v3i).add(u3i.mul(v3r)).store(&mut y3i[q..]);
+                    q += LANES;
+                }
+            }
+            while q < s {
                 let (ar, ai) = (a_r[q], a_i[q]);
                 let (br, bi) = (b_r[q], b_i[q]);
                 let (cr, ci) = (c_r[q], c_i[q]);
@@ -628,6 +676,7 @@ fn stage_apply(st: &SplitStage, src_re: &[f32], src_im: &[f32],
                 let (u3r, u3i) = (t1r - t3r, t1i - t3i);
                 y3r[q] = u3r * w3r - u3i * w3i;
                 y3i[q] = u3r * w3i + u3i * w3r;
+                q += 1;
             }
         }
     } else {
@@ -641,13 +690,28 @@ fn stage_apply(st: &SplitStage, src_re: &[f32], src_im: &[f32],
         let b_i = &src_im[s..2 * s];
         let (y0r, y1r) = dst_re[..2 * s].split_at_mut(s);
         let (y0i, y1i) = dst_im[..2 * s].split_at_mut(s);
-        for q in 0..s {
+        let mut q = 0;
+        if vector {
+            while q + LANES <= s {
+                let ar = F32xN::load(&a_r[q..]);
+                let ai = F32xN::load(&a_i[q..]);
+                let br = F32xN::load(&b_r[q..]);
+                let bi = F32xN::load(&b_i[q..]);
+                ar.add(br).store(&mut y0r[q..]);
+                ai.add(bi).store(&mut y0i[q..]);
+                ar.sub(br).store(&mut y1r[q..]);
+                ai.sub(bi).store(&mut y1i[q..]);
+                q += LANES;
+            }
+        }
+        while q < s {
             let (ar, ai) = (a_r[q], a_i[q]);
             let (br, bi) = (b_r[q], b_i[q]);
             y0r[q] = ar + br;
             y0i[q] = ai + bi;
             y1r[q] = ar - br;
             y1i[q] = ai - bi;
+            q += 1;
         }
     }
 }

@@ -45,8 +45,8 @@
 //! `dk_c = conv(ds, q_c)` (spectrum `DSf⊙Qf`).
 
 use super::super::arena;
-use super::super::autograd::{cmul, cmul_conj_a};
 use super::super::fft::{split_rfft_plan, SplitRfftPlan};
+use super::super::simd;
 
 /// FNet 2D Fourier mix of one `(n, d)` slab into `out` (fully
 /// overwritten). `n` and `d` must be powers of two. With `truncate`,
@@ -168,11 +168,7 @@ pub(crate) fn circ_scores_stripe(plan: &SplitRfftPlan, q: &[f32], k: &[f32],
     for c in 0..dh {
         let (qr, qi) = (&qre[c * f..(c + 1) * f], &qim[c * f..(c + 1) * f]);
         let (kr, ki) = (&kre[c * f..(c + 1) * f], &kim[c * f..(c + 1) * f]);
-        for t in 0..f {
-            let (re, im) = cmul_conj_a(qr[t], qi[t], kr[t], ki[t]);
-            acc_re[t] += re;
-            acc_im[t] += im;
-        }
+        simd::cmul_conj_a_acc_rows(qr, qi, kr, ki, acc_re, acc_im);
     }
     plan.irfft(acc_re, acc_im, s, scratch);
 }
@@ -198,16 +194,10 @@ pub(crate) fn circ_scores_bwd_stripe(plan: &SplitRfftPlan, q: &[f32],
             (&mut qre[c * f..(c + 1) * f], &mut qim[c * f..(c + 1) * f]);
         let (kr, ki) =
             (&mut kre[c * f..(c + 1) * f], &mut kim[c * f..(c + 1) * f]);
-        for t in 0..f {
-            // dq_c = corr(ds, k_c): spectrum conj(DS)·K, in place over K
-            let (re, im) = cmul_conj_a(sre[t], sim[t], kr[t], ki[t]);
-            kr[t] = re;
-            ki[t] = im;
-            // dk_c = conv(ds, q_c): spectrum DS·Q, in place over Q
-            let (re, im) = cmul(sre[t], sim[t], qr[t], qi[t]);
-            qr[t] = re;
-            qi[t] = im;
-        }
+        // dq_c = corr(ds, k_c): spectrum conj(DS)·K, in place over K
+        simd::cmul_conj_a_rows(sre, sim, kr, ki);
+        // dk_c = conv(ds, q_c): spectrum DS·Q, in place over Q
+        simd::cmul_rows(sre, sim, qr, qi);
     }
     plan.irfft_many(kre, kim, dh, dq, scratch);
     plan.irfft_many(qre, qim, dh, dk, scratch);
@@ -230,6 +220,83 @@ pub fn circ_scores_naive(q: &[f32], k: &[f32], dh: usize, n: usize)
         *slot = acc;
     }
     s
+}
+
+/// Per-channel short circular convolution of the `cat_conv` hybrid,
+/// accumulated onto channel-major `(dh, n)` stripes:
+///
+/// ```text
+///   out[c, i] += Σ_{t<k} taps[t·stride + c0 + c] · v[c, (i−t) mod n]
+/// ```
+///
+/// `taps` is tap-major `(k, stride)` over the layer's full channel axis;
+/// `c0` is this stripe's first global channel (head offset). Each tap is
+/// two contiguous [`simd::axpy`] runs over the rotation's split point,
+/// so the per-element op order (ascending `t` after the base value) is
+/// identical between the train-stripe and serve paths.
+pub fn conv_acc_stripe(taps: &[f32], k: usize, stride: usize,
+                       c0: usize, v: &[f32], dh: usize, n: usize,
+                       out: &mut [f32]) {
+    assert_eq!(v.len(), dh * n);
+    assert_eq!(out.len(), dh * n);
+    for c in 0..dh {
+        let vrow = &v[c * n..(c + 1) * n];
+        let orow = &mut out[c * n..(c + 1) * n];
+        for t in 0..k {
+            let w = taps[t * stride + c0 + c];
+            let r = t % n;
+            simd::axpy(&mut orow[r..], &vrow[..n - r], w);
+            simd::axpy(&mut orow[..r], &vrow[n - r..], w);
+        }
+    }
+}
+
+/// Backward of [`conv_acc_stripe`]: given `dout` (gradient w.r.t. the
+/// stripe output), **accumulate** the value gradient
+/// `dv[c, j] += Σ_t taps[t]·dout[c, (j+t) mod n]` and the tap gradient
+/// `dtaps[t·stride + c0 + c] += Σ_i dout[c, i]·v[c, (i−t) mod n]`.
+/// Callers keep the `dtaps` accumulation deterministic by walking
+/// stripes serially in ascending order (pool-width invariance).
+#[allow(clippy::too_many_arguments)]
+pub fn conv_bwd_stripe(taps: &[f32], k: usize, stride: usize,
+                       c0: usize, v: &[f32], dout: &[f32],
+                       dh: usize, n: usize, dv: &mut [f32],
+                       dtaps: &mut [f32]) {
+    assert_eq!(v.len(), dh * n);
+    assert_eq!(dout.len(), dh * n);
+    assert_eq!(dv.len(), dh * n);
+    for c in 0..dh {
+        let vrow = &v[c * n..(c + 1) * n];
+        let dorow = &dout[c * n..(c + 1) * n];
+        let dvrow = &mut dv[c * n..(c + 1) * n];
+        for t in 0..k {
+            let w = taps[t * stride + c0 + c];
+            let r = t % n;
+            simd::axpy(&mut dvrow[..n - r], &dorow[r..], w);
+            simd::axpy(&mut dvrow[n - r..], &dorow[..r], w);
+            dtaps[t * stride + c0 + c] +=
+                simd::dot(&dorow[r..], &vrow[..n - r])
+                + simd::dot(&dorow[..r], &vrow[n - r..]);
+        }
+    }
+}
+
+/// Direct O(dh·k·n) rolled-index oracle of [`conv_acc_stripe`].
+pub fn conv_naive(taps: &[f32], k: usize, stride: usize, c0: usize,
+                  v: &[f32], dh: usize, n: usize) -> Vec<f32> {
+    assert_eq!(v.len(), dh * n);
+    let mut out = vec![0.0f32; dh * n];
+    for c in 0..dh {
+        for i in 0..n {
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += taps[t * stride + c0 + c]
+                    * v[c * n + (i + n - t % n) % n];
+            }
+            out[c * n + i] = acc;
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -342,6 +409,58 @@ mod tests {
                         "dq c={c} j={j}: {} vs {want_q}", dq[c * n + j]);
                 assert!((dk[c * n + j] - want_k).abs() < 1e-4,
                         "dk c={c} j={j}: {} vs {want_k}", dk[c * n + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_stripe_matches_naive_oracle() {
+        // k > n exercises the t % n rotation wrap of short rows
+        for (dh, n, k, c0, stride) in [(3usize, 16usize, 9usize, 0usize,
+                                        3usize),
+                                       (2, 8, 9, 2, 6), (1, 4, 9, 0, 1),
+                                       (2, 16, 3, 4, 8)] {
+            let taps = randv(k * stride, 31);
+            let v = randv(dh * n, 32);
+            let want = conv_naive(&taps, k, stride, c0, &v, dh, n);
+            let mut got = vec![0.0f32; dh * n];
+            conv_acc_stripe(&taps, k, stride, c0, &v, dh, n, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((g - w).abs() < 1e-4,
+                        "dh={dh} n={n} k={k} elem {i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_backward_matches_direct_adjoint() {
+        let (dh, n, k, stride, c0) = (2usize, 16usize, 9usize, 4usize,
+                                      1usize);
+        let taps = randv(k * stride, 41);
+        let v = randv(dh * n, 42);
+        let dout = randv(dh * n, 43);
+        let mut dv = vec![0.0f32; dh * n];
+        let mut dtaps = vec![0.0f32; k * stride];
+        conv_bwd_stripe(&taps, k, stride, c0, &v, &dout, dh, n, &mut dv,
+                        &mut dtaps);
+        for c in 0..dh {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for t in 0..k {
+                    want += taps[t * stride + c0 + c]
+                        * dout[c * n + (j + t) % n];
+                }
+                assert!((dv[c * n + j] - want).abs() < 1e-4,
+                        "dv c={c} j={j}: {} vs {want}", dv[c * n + j]);
+            }
+            for t in 0..k {
+                let mut want = 0.0f32;
+                for i in 0..n {
+                    want += dout[c * n + i] * v[c * n + (i + n - t % n) % n];
+                }
+                let got = dtaps[t * stride + c0 + c];
+                assert!((got - want).abs() < 1e-3,
+                        "dtaps c={c} t={t}: {got} vs {want}");
             }
         }
     }

@@ -44,7 +44,17 @@ pub enum Mixer {
     /// relative-offset scores per head, applied as a circular
     /// cross-correlation — O(N log N) with attention's 3d² budget.
     Circulant,
+    /// Convolution-augmented CAT (Li et al., "On the Power of
+    /// Convolution Augmented Transformer"): the CAT circular
+    /// cross-correlation mix plus a learnable per-channel short
+    /// circular convolution ([`CONV_TAPS`] taps) over the value
+    /// stripes — O(N log N) + O(N·k) with a `(d+h)d + kd` budget.
+    CatConv,
 }
+
+/// Tap count `k` of the [`Mixer::CatConv`] per-channel convolution
+/// branch (the short-filter regime of Li et al.; `k ≪ N`).
+pub const CONV_TAPS: usize = 9;
 
 /// One registry row: everything the harness, trainer, server, CLI, and
 /// checkpoint format need to know about a mixer.
@@ -131,6 +141,18 @@ pub const REGISTRY: &[MixerSpec] = &[
         name: "circulant",
         ckpt_id: 4,
         params_formula: "3d^2",
+        complexity: "O(N log N)",
+        memory: "O(N)",
+        causal: false,
+        head_separable: true,
+        needs_pow2_n: true,
+        needs_pow2_d: false,
+    },
+    MixerSpec {
+        mixer: Mixer::CatConv,
+        name: "cat_conv",
+        ckpt_id: 5,
+        params_formula: "(d+h)d + kd",
         complexity: "O(N log N)",
         memory: "O(N)",
         causal: false,
@@ -249,9 +271,9 @@ pub fn validate_schedule(base: Mixer, alternate: bool, n_layers: usize,
 mod tests {
     use super::*;
 
-    const ALL: [Mixer; 5] = [Mixer::CatFft, Mixer::CatGather,
+    const ALL: [Mixer; 6] = [Mixer::CatFft, Mixer::CatGather,
                              Mixer::Attention, Mixer::Fnet,
-                             Mixer::Circulant];
+                             Mixer::Circulant, Mixer::CatConv];
 
     #[test]
     fn registry_covers_every_mixer_exactly_once() {
@@ -288,6 +310,7 @@ mod tests {
         // the new zoo members
         assert_eq!(budget_formula("fnet"), "0");
         assert_eq!(budget_formula("circulant"), "3d^2");
+        assert_eq!(budget_formula("cat_conv"), "(d+h)d + kd");
         // PJRT-side mechanisms keep their formulas
         assert_eq!(budget_formula("cat_q"), "(n+h)d");
         assert_eq!(budget_formula("cat_qkv"), "3d^2");
@@ -304,6 +327,8 @@ mod tests {
                    ("O(N^2)", "O(N^2)"));
         assert_eq!(complexity_cols("fnet", false), ("O(N log N)", "O(N)"));
         assert_eq!(complexity_cols("circulant", false),
+                   ("O(N log N)", "O(N)"));
+        assert_eq!(complexity_cols("cat_conv", false),
                    ("O(N log N)", "O(N)"));
         assert_eq!(complexity_cols("linear", true), ("O(N)", "O(N)"));
         assert_eq!(complexity_cols("cat_alter", false),
@@ -338,6 +363,13 @@ mod tests {
         assert!(validate_schedule(Mixer::Circulant, false, 1, 32, 24, false)
             .is_ok());
         assert!(validate_schedule(Mixer::Circulant, false, 1, 32, 24, true)
+            .is_err());
+        // cat_conv: pow2 N (FFT branch), no causal form (circular taps)
+        assert!(validate_schedule(Mixer::CatConv, false, 1, 32, 24, false)
+            .is_ok());
+        assert!(validate_schedule(Mixer::CatConv, false, 1, 48, 24, false)
+            .is_err());
+        assert!(validate_schedule(Mixer::CatConv, false, 1, 32, 24, true)
             .is_err());
         // the legacy rules are unchanged
         assert!(validate_schedule(Mixer::CatFft, false, 2, 48, 64, false)

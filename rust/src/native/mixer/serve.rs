@@ -21,7 +21,7 @@ use super::super::cat::{
 };
 use super::super::fft::split_rfft_plan;
 use super::super::pool;
-use super::{kernels, Mixer};
+use super::{kernels, Mixer, CONV_TAPS};
 use crate::data::Rng;
 use crate::obs::trace::{self as obs_trace, Stage};
 use crate::Result;
@@ -176,6 +176,167 @@ impl QkvLayer {
     }
 }
 
+/// Convolution-augmented CAT serving layer: the CAT correlation mix
+/// plus a learnable per-channel short circular convolution
+/// ([`CONV_TAPS`] taps, tap-major `(k, width)`) of the value stripes.
+/// Head-separable exactly like CAT: a head's output touches only that
+/// head's `w_a` column, `w_v` columns, and taps columns, and the conv
+/// accumulates per channel in ascending-tap order, so a column slice
+/// reproduces the matching full-forward columns bit-exactly.
+#[derive(Clone)]
+pub struct CatConvLayer {
+    /// Input dim (always the full model width, even for a slice).
+    pub d: usize,
+    /// Heads owned by this layer.
+    pub h: usize,
+    /// Channels per head (`d_model / n_heads` of the *full* layer).
+    pub dh: usize,
+    w_a: Vec<f32>,
+    w_v: Vec<f32>,
+    taps: Vec<f32>,
+}
+
+impl CatConvLayer {
+    /// Deterministic init; the `w_a → w_v → taps` draw order matches
+    /// [`super::train::init_params`].
+    pub fn init(d: usize, h: usize, rng: &mut Rng) -> CatConvLayer {
+        assert!(h > 0 && d % h == 0,
+                "d ({d}) must divide into h ({h}) heads");
+        let mut mk = |len: usize| -> Vec<f32> {
+            (0..len).map(|_| 0.02 * rng.normal()).collect()
+        };
+        CatConvLayer {
+            d,
+            h,
+            dh: d / h,
+            w_a: mk(d * h),
+            w_v: mk(d * d),
+            taps: mk(CONV_TAPS * d),
+        }
+    }
+
+    /// Output width of this layer: `h·dh` (`== d` for a full layer).
+    pub fn width(&self) -> usize {
+        self.h * self.dh
+    }
+
+    /// Learnable parameters (`(d+h)·d + k·d` for a full layer).
+    pub fn param_count(&self) -> usize {
+        self.w_a.len() + self.w_v.len() + self.taps.len()
+    }
+
+    /// Copy out heads `[h0, h1)` as a standalone slice layer: `w_a`
+    /// keeps head columns `h0..h1`, `w_v` and the taps keep channel
+    /// columns `h0·dh..h1·dh`.
+    pub fn head_slice(&self, h0: usize, h1: usize) -> CatConvLayer {
+        assert!(h0 < h1 && h1 <= self.h,
+                "bad head slice [{h0}, {h1}) of {} heads", self.h);
+        let (d, h, dh, w) = (self.d, self.h, self.dh, self.width());
+        let hs = h1 - h0;
+        let mut w_a = Vec::with_capacity(d * hs);
+        for r in 0..d {
+            w_a.extend_from_slice(&self.w_a[r * h + h0..r * h + h1]);
+        }
+        let slice_chans = |src: &[f32], rows: usize| -> Vec<f32> {
+            let mut out = Vec::with_capacity(rows * hs * dh);
+            for r in 0..rows {
+                out.extend_from_slice(&src[r * w + h0 * dh..
+                                           r * w + h1 * dh]);
+            }
+            out
+        };
+        CatConvLayer {
+            d,
+            h: hs,
+            dh,
+            w_a,
+            w_v: slice_chans(&self.w_v, d),
+            taps: slice_chans(&self.taps, CONV_TAPS),
+        }
+    }
+
+    pub(crate) fn strip(&mut self) {
+        self.w_a = Vec::new();
+        self.w_v = Vec::new();
+        self.taps = Vec::new();
+    }
+
+    /// CAT-plus-conv mix into `out: (b, n, width)` (fully overwritten):
+    /// per `(batch, head)` stripe one softmax attention row applied with
+    /// the CAT correlation kernel, then the per-channel tap convolution
+    /// accumulated on top — O(N log N) + O(N·k).
+    pub fn forward_into(&self, x: &[f32], b: usize, n: usize,
+                        out: &mut [f32]) -> Result<()> {
+        let (d, h) = (self.d, self.h);
+        let (dh, w) = (self.dh, self.width());
+        let k = CONV_TAPS;
+        ensure!(x.len() == b * n * d,
+                "x has {} elements, expected {}x{}x{}", x.len(), b, n, d);
+        ensure!(out.len() == b * n * w,
+                "out has {} elements, expected {}x{}x{}", out.len(), b, n,
+                w);
+        ensure!(self.w_a.len() == d * h && self.w_v.len() == d * w
+                    && self.taps.len() == k * w,
+                "cat_conv mixing weights are absent — this layer was \
+                 stripped (sharded serving trunk) and cannot mix tokens \
+                 itself");
+        ensure!(n.is_power_of_two(),
+                "cat_conv needs power-of-two N, got {n}");
+        let plan = split_rfft_plan(n);
+        let f = plan.spectrum_len();
+        let log_term = n.trailing_zeros() as usize + 1;
+        arena::with_layer_arena(|la| {
+            let [proj_a, p, proj, vt, ot] = la.frame([
+                b * n * h, // (b·n, h) attention-logit staging
+                b * h * n, // stripe rows (b·h, n): softmaxed scores
+                b * n * w, // (b·n, w) value projection staging
+                b * n * w, // stripe-transposed (b·h, dh, n) v
+                b * n * w, // mixed stripes before the un-transpose
+            ]);
+            obs_trace::section(Stage::MixerMatmul,
+                               || matmul(x, b * n, d, &self.w_a, h,
+                                         proj_a));
+            for bi in 0..b {
+                for head in 0..h {
+                    for i in 0..n {
+                        p[(bi * h + head) * n + i] =
+                            proj_a[(bi * n + i) * h + head];
+                    }
+                }
+            }
+            for row in p.chunks_exact_mut(n) {
+                softmax_in_place(row);
+            }
+            obs_trace::section(Stage::MixerMatmul,
+                               || matmul(x, b * n, d, &self.w_v, w, proj));
+            obs_trace::section(Stage::Scatter,
+                               || to_stripes(proj, b, n, h, dh, vt));
+            let (p, vt, taps) = (&*p, &*vt, &self.taps);
+            obs_trace::section(Stage::Fft, || {
+                let tasks: Vec<(usize, &mut [f32])> =
+                    ot.chunks_mut(dh * n).enumerate().collect();
+                pool::run(tasks, (8 * log_term + 2 * k) * n * dh,
+                          |(si, os)| {
+                    arena::with_task_arena(|ta| {
+                        let [zre, zim, vre, vim, scratch] = ta.frame(
+                            [f, f, dh * f, dh * f, plan.scratch_len()]);
+                        let vs = &vt[si * dh * n..(si + 1) * dh * n];
+                        corr_fwd_stripe(&plan, &p[si * n..(si + 1) * n],
+                                        vs, dh, os, zre, zim, vre, vim,
+                                        scratch);
+                        kernels::conv_acc_stripe(taps, k, w,
+                                                 (si % h) * dh, vs, dh,
+                                                 n, os);
+                    });
+                });
+            });
+            obs_trace::section(Stage::Gather,
+                               || from_stripes(ot, b, n, h, dh, out));
+        });
+        Ok(())
+    }
+}
+
 /// One block's serving-side token mixer: the per-[`Mixer`] dispatch the
 /// trunk ([`super::super::NativeCatModel`]) and the shard planner drive.
 #[derive(Clone)]
@@ -187,6 +348,8 @@ pub enum ServeMixer {
     Attention(AttentionLayer),
     /// Circulant attention (O(N log N), 3d² budget).
     Circulant(QkvLayer),
+    /// Convolution-augmented CAT (CAT correlation + per-channel taps).
+    CatConv(CatConvLayer),
     /// Parameter-free FNet Fourier mixer (width is always the full `d`).
     Fnet { d: usize },
 }
@@ -207,6 +370,9 @@ impl ServeMixer {
             Mixer::Circulant => {
                 ServeMixer::Circulant(QkvLayer::init(d, h, rng))
             }
+            Mixer::CatConv => {
+                ServeMixer::CatConv(CatConvLayer::init(d, h, rng))
+            }
             Mixer::Fnet => ServeMixer::Fnet { d },
         }
     }
@@ -218,6 +384,7 @@ impl ServeMixer {
             ServeMixer::Cat(l) => l.width(),
             ServeMixer::Attention(l) => l.d,
             ServeMixer::Circulant(l) => l.width(),
+            ServeMixer::CatConv(l) => l.width(),
             ServeMixer::Fnet { d } => *d,
         }
     }
@@ -228,6 +395,7 @@ impl ServeMixer {
             ServeMixer::Cat(l) => l.param_count(),
             ServeMixer::Attention(l) => l.param_count(),
             ServeMixer::Circulant(l) => l.param_count(),
+            ServeMixer::CatConv(l) => l.param_count(),
             ServeMixer::Fnet { .. } => 0,
         }
     }
@@ -241,6 +409,9 @@ impl ServeMixer {
             ServeMixer::Cat(l) => ServeMixer::Cat(l.head_slice(h0, h1)),
             ServeMixer::Circulant(l) => {
                 ServeMixer::Circulant(l.head_slice(h0, h1))
+            }
+            ServeMixer::CatConv(l) => {
+                ServeMixer::CatConv(l.head_slice(h0, h1))
             }
             ServeMixer::Attention(l) => {
                 assert!(h0 == 0 && h1 == l.h,
@@ -264,6 +435,7 @@ impl ServeMixer {
             ServeMixer::Cat(l) => l.strip(),
             ServeMixer::Attention(l) => l.strip(),
             ServeMixer::Circulant(l) => l.strip(),
+            ServeMixer::CatConv(l) => l.strip(),
             ServeMixer::Fnet { .. } => {}
         }
     }
@@ -276,6 +448,7 @@ impl ServeMixer {
             ServeMixer::Cat(l) => l.forward_into(x, b, n, cat_impl, out),
             ServeMixer::Attention(l) => l.forward_into(x, b, n, out),
             ServeMixer::Circulant(l) => l.forward_into(x, b, n, out),
+            ServeMixer::CatConv(l) => l.forward_into(x, b, n, out),
             ServeMixer::Fnet { d } => {
                 let d = *d;
                 ensure!(x.len() == b * n * d,
@@ -392,6 +565,102 @@ mod tests {
                            "slice [{h0},{h1}) row {row} diverged");
             }
         }
+    }
+
+    /// Direct cat_conv oracle: naive CAT correlation apply plus the
+    /// rolled-index conv oracle from `kernels`.
+    fn cat_conv_naive(layer: &CatConvLayer, x: &[f32], b: usize, n: usize)
+                      -> Vec<f32> {
+        let (d, h, dh) = (layer.d, layer.h, layer.dh);
+        let w = layer.width();
+        let k = CONV_TAPS;
+        let mut proj_a = vec![0.0f32; b * n * h];
+        matmul(x, b * n, d, &layer.w_a, h, &mut proj_a);
+        let mut p = vec![0.0f32; b * h * n];
+        for bi in 0..b {
+            for head in 0..h {
+                for i in 0..n {
+                    p[(bi * h + head) * n + i] =
+                        proj_a[(bi * n + i) * h + head];
+                }
+            }
+        }
+        for row in p.chunks_exact_mut(n) {
+            softmax_in_place(row);
+        }
+        let mut proj = vec![0.0f32; b * n * w];
+        let mut vt = vec![0.0f32; b * n * w];
+        matmul(x, b * n, d, &layer.w_v, w, &mut proj);
+        to_stripes(&proj, b, n, h, dh, &mut vt);
+        let mut ot = vec![0.0f32; b * n * w];
+        for si in 0..b * h {
+            let prow = &p[si * n..(si + 1) * n];
+            let v = &vt[si * dh * n..(si + 1) * dh * n];
+            let conv = kernels::conv_naive(&layer.taps, k, w,
+                                           (si % h) * dh, v, dh, n);
+            let os = &mut ot[si * dh * n..(si + 1) * dh * n];
+            for c in 0..dh {
+                for i in 0..n {
+                    let mut acc = 0.0f32;
+                    for (t, &pv) in prow.iter().enumerate() {
+                        acc += pv * v[c * n + (i + t) % n];
+                    }
+                    os[c * n + i] = acc + conv[c * n + i];
+                }
+            }
+        }
+        let mut out = vec![0.0f32; b * n * w];
+        from_stripes(&ot, b, n, h, dh, &mut out);
+        out
+    }
+
+    #[test]
+    fn cat_conv_serve_matches_naive_oracle() {
+        let (b, n, d, h) = (2usize, 16usize, 12usize, 3usize);
+        let mut rng = Rng::new(61);
+        let layer = CatConvLayer::init(d, h, &mut rng);
+        assert_eq!(layer.param_count(), d * h + d * d + CONV_TAPS * d);
+        let x = random_x(b * n * d, 62);
+        let want = cat_conv_naive(&layer, &x, b, n);
+        let mut got = vec![0.0f32; b * n * d];
+        layer.forward_into(&x, b, n, &mut got).unwrap();
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-4, "elem {i}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn cat_conv_head_slice_matches_full_forward_bitwise() {
+        let (b, n, d, h) = (2usize, 32usize, 24usize, 4usize);
+        let dh = d / h;
+        let mut rng = Rng::new(67);
+        let layer = CatConvLayer::init(d, h, &mut rng);
+        let x = random_x(b * n * d, 71);
+        let mut full = vec![0.0f32; b * n * d];
+        layer.forward_into(&x, b, n, &mut full).unwrap();
+        for (h0, h1) in [(0, 1), (1, 3), (2, 4), (0, 4)] {
+            let slice = layer.head_slice(h0, h1);
+            let ws = slice.width();
+            assert_eq!(ws, (h1 - h0) * dh);
+            let mut part = vec![0.0f32; b * n * ws];
+            slice.forward_into(&x, b, n, &mut part).unwrap();
+            for row in 0..b * n {
+                assert_eq!(&part[row * ws..(row + 1) * ws],
+                           &full[row * d + h0 * dh..row * d + h1 * dh],
+                           "slice [{h0},{h1}) row {row} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn stripped_cat_conv_layer_errors_cleanly() {
+        let (b, n, d, h) = (1usize, 8usize, 8usize, 2usize);
+        let mut layer = CatConvLayer::init(d, h, &mut Rng::new(5));
+        layer.strip();
+        let x = random_x(b * n * d, 6);
+        let mut out = vec![0.0f32; b * n * d];
+        let err = layer.forward_into(&x, b, n, &mut out).unwrap_err();
+        assert!(err.to_string().contains("stripped"), "{err}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use super::super::autograd::{
 use super::super::cat::{matmul, softmax_in_place};
 use super::super::fft::split_rfft_plan;
 use super::super::pool;
-use super::{kernels, Mixer};
+use super::{kernels, Mixer, CONV_TAPS};
 use crate::Result;
 
 /// Mixing-layer parameters; the variant must match
@@ -32,6 +32,10 @@ pub(crate) enum MixerParams {
     /// attention variant share this layout (and tensor names, so their
     /// checkpoints stay shape-compatible per mechanism).
     Qkv { w_q: Vec<f32>, w_k: Vec<f32>, w_v: Vec<f32> },
+    /// Convolution-augmented CAT: the CAT projections plus tap-major
+    /// `(CONV_TAPS, d)` per-channel circular-convolution filters —
+    /// the `(d+h)·d + k·d` budget.
+    CatConv { w_a: Vec<f32>, w_v: Vec<f32>, taps: Vec<f32> },
     /// Parameter-free mixers (FNet).
     None,
 }
@@ -49,6 +53,11 @@ impl MixerParams {
                 w_k: z(w_k),
                 w_v: z(w_v),
             },
+            MixerParams::CatConv { w_a, w_v, taps } => MixerParams::CatConv {
+                w_a: z(w_a),
+                w_v: z(w_v),
+                taps: z(taps),
+            },
             MixerParams::None => MixerParams::None,
         }
     }
@@ -65,6 +74,11 @@ impl MixerParams {
                 ("w_q", w_q, true),
                 ("w_k", w_k, true),
                 ("w_v", w_v, true),
+            ],
+            MixerParams::CatConv { w_a, w_v, taps } => vec![
+                ("w_a", w_a, true),
+                ("w_v", w_v, true),
+                ("taps", taps, true),
             ],
             MixerParams::None => Vec::new(),
         }
@@ -87,6 +101,11 @@ pub(crate) fn init_params(mixer: Mixer, d: usize, h: usize,
             w_q: bmk(d * d),
             w_k: bmk(d * d),
             w_v: bmk(d * d),
+        },
+        Mixer::CatConv => MixerParams::CatConv {
+            w_a: bmk(d * h),
+            w_v: bmk(d * d),
+            taps: bmk(CONV_TAPS * d),
         },
         Mixer::Fnet => MixerParams::None,
     }
@@ -179,6 +198,50 @@ pub(crate) fn fwd(cfg: &TrainConfig, layer: usize, mp: &MixerParams,
                 }
                 _ => bail!("mixer/params mismatch"),
             }
+            from_stripes(tmp2, b, n, h, dh, out);
+        }
+        MixerParams::CatConv { w_a, w_v, taps } => {
+            ensure!(mixer == Mixer::CatConv, "mixer/params mismatch");
+            // CAT correlation mix plus the learnable per-channel short
+            // circular convolution of the value stripes (Li et al.);
+            // the conv accumulates onto the correlation output inside
+            // the same stripe task, ascending-tap order.
+            matmul(&lc.xn1, bn, d, w_a, h, znh);
+            ensure_len(&mut lc.p, b * h * n);
+            for bi in 0..b {
+                for head in 0..h {
+                    for i in 0..n {
+                        lc.p[(bi * h + head) * n + i] =
+                            znh[(bi * n + i) * h + head];
+                    }
+                }
+            }
+            for row in lc.p.chunks_exact_mut(n) {
+                softmax_in_place(row);
+            }
+            matmul(&lc.xn1, bn, d, w_v, d, tmp1);
+            ensure_len(&mut lc.vt, bn * d);
+            to_stripes(tmp1, b, n, h, dh, &mut lc.vt);
+
+            let p = &lc.p;
+            let vt = &lc.vt;
+            let k = CONV_TAPS;
+            let log_term = n.trailing_zeros() as usize + 1;
+            let plan = split_rfft_plan(n);
+            let f = plan.spectrum_len();
+            let tasks: Vec<(usize, &mut [f32])> =
+                tmp2.chunks_mut(dh * n).enumerate().collect();
+            pool::run(tasks, (8 * log_term + 2 * k) * n * dh, |(si, os)| {
+                arena::with_task_arena(|ta| {
+                    let [zre, zim, vre, vim, scratch] = ta.frame(
+                        [f, f, dh * f, dh * f, plan.scratch_len()]);
+                    let vs = &vt[si * dh * n..(si + 1) * dh * n];
+                    corr_fwd_stripe(&plan, &p[si * n..(si + 1) * n], vs,
+                                    dh, os, zre, zim, vre, vim, scratch);
+                    kernels::conv_acc_stripe(taps, k, d, (si % h) * dh,
+                                             vs, dh, n, os);
+                });
+            });
             from_stripes(tmp2, b, n, h, dh, out);
         }
         MixerParams::Qkv { w_q, w_k, w_v } if mixer == Mixer::Attention => {
@@ -432,6 +495,69 @@ pub(crate) fn bwd(cfg: &TrainConfig, layer: usize, mp: &MixerParams,
             matmul_wt(tmp3, bn, d, w_v, d, dxn, false);
             if naive {
                 // reference path: separate softmax-backward sweep
+                for (prow, dprow) in
+                    lc.p.chunks_exact(n).zip(zs.chunks_exact_mut(n)) {
+                    softmax_bwd_in_place(prow, dprow);
+                }
+            }
+            for bi in 0..b {
+                for head in 0..h {
+                    for i in 0..n {
+                        znh[(bi * n + i) * h + head] =
+                            zs[(bi * h + head) * n + i];
+                    }
+                }
+            }
+            matmul_xt_acc(&lc.xn1, bn, d, znh, h, gw_a);
+            matmul_wt(znh, bn, h, w_a, d, dxn, true);
+        }
+        (MixerParams::CatConv { w_a, w_v, taps },
+         MixerParams::CatConv { w_a: gw_a, w_v: gw_v, taps: gtaps }) => {
+            ensure!(mixer == Mixer::CatConv, "mixer/params mismatch");
+            to_stripes(dx, b, n, h, dh, tmp3);
+            let p = &lc.p;
+            let vt = &lc.vt;
+            let dout_s = &*tmp3;
+            let k = CONV_TAPS;
+            let naive = naive_backward();
+            let log_term = n.trailing_zeros() as usize + 1;
+            let plan = split_rfft_plan(n);
+            let f = plan.spectrum_len();
+            let tasks: Vec<((usize, &mut [f32]), &mut [f32])> = tmp1
+                .chunks_mut(dh * n)
+                .enumerate()
+                .zip(zs.chunks_mut(n))
+                .collect();
+            pool::run(tasks, 12 * n * log_term * dh, |((si, dvs), dps)| {
+                arena::with_task_arena(|ta| {
+                    let [zre, zim, vre, vim, gre, gim, are, aim, scratch] =
+                        ta.frame([f, f, dh * f, dh * f, dh * f, dh * f, f,
+                                  f, plan.scratch_len()]);
+                    corr_bwd_stripe(
+                        &plan, &p[si * n..(si + 1) * n],
+                        &vt[si * dh * n..(si + 1) * dh * n],
+                        &dout_s[si * dh * n..(si + 1) * dh * n], dh, dps,
+                        dvs, zre, zim, vre, vim, gre, gim, are, aim,
+                        scratch);
+                });
+                if !naive {
+                    softmax_bwd_in_place(&p[si * n..(si + 1) * n], dps);
+                }
+            });
+            // conv branch: dv[c] += taps_c ⋆ dout[c] per stripe, and the
+            // tap gradient. Stripes walk serially in ascending order so
+            // the shared `gtaps` accumulation is pool-width invariant.
+            for si in 0..b * h {
+                kernels::conv_bwd_stripe(
+                    taps, k, d, (si % h) * dh,
+                    &vt[si * dh * n..(si + 1) * dh * n],
+                    &dout_s[si * dh * n..(si + 1) * dh * n], dh, n,
+                    &mut tmp1[si * dh * n..(si + 1) * dh * n], gtaps);
+            }
+            from_stripes(tmp1, b, n, h, dh, tmp3); // dV in (b, n, d)
+            matmul_xt_acc(&lc.xn1, bn, d, tmp3, d, gw_v);
+            matmul_wt(tmp3, bn, d, w_v, d, dxn, false);
+            if naive {
                 for (prow, dprow) in
                     lc.p.chunks_exact(n).zip(zs.chunks_exact_mut(n)) {
                     softmax_bwd_in_place(prow, dprow);

@@ -6,7 +6,12 @@
 //!   on: spawned once, channel-fed task chunks, zero thread spawns at
 //!   steady state ([`pool::stats`] is asserted by the serving benches);
 //! * [`arena`] — per-thread bump arenas (model / layer / task levels) so
-//!   forwards are allocation-free after warmup;
+//!   forwards are allocation-free after warmup; frames hand out
+//!   32-byte-aligned slices for the vector tier;
+//! * [`simd`] — the portable vector layer ([`simd::F32xN`] +
+//!   forced-scalar dispatch): every hot inner loop in [`fft`], [`cat`],
+//!   [`autograd`] and [`mixer::kernels`] runs through it, with the
+//!   scalar loops retained as equivalence oracles (DESIGN.md §15);
 //! * [`fft`] — planned FFTs: the radix-2 reference tier ([`FftPlan`],
 //!   [`RfftPlan`]) plus the split-complex Stockham radix-4 throughput
 //!   tier ([`SplitRfftPlan`]) with batched `rfft_many`/`irfft_many`,
@@ -37,6 +42,7 @@ pub mod fft;
 pub mod mixer;
 pub mod optim;
 pub mod pool;
+pub mod simd;
 
 pub use autograd::{attention_backward, causal_corr_backward,
                    causal_corr_backward_batched, causal_corr_forward,
@@ -47,7 +53,7 @@ pub use autograd::{attention_backward, causal_corr_backward,
                    TrainConfig, TrainModel};
 pub use cat::{matmul, softmax_in_place, AttentionLayer, CatImpl, CatLayer,
               NativeCatModel, NativeVitConfig};
-pub use mixer::{Mixer, MixerSpec, REGISTRY};
+pub use mixer::{Mixer, MixerSpec, CONV_TAPS, REGISTRY};
 pub(crate) use mixer::serve::ServeMixer;
 pub use fft::{plan_cache_stats, rfft_plan, split_rfft_plan, Complex,
               FftPlan, RfftPlan, SplitRfftPlan};

@@ -1,0 +1,879 @@
+//! Portable SIMD kernel layer: the one vector abstraction every hot
+//! loop in the native backend runs through (DESIGN.md §15).
+//!
+//! Two things live here:
+//!
+//! * [`F32xN`] — a fixed-width f32 vector chosen at *compile time*:
+//!   AVX2 (`__m256`, 8 lanes) when the build enables it
+//!   (`RUSTFLAGS="-C target-cpu=native"`), SSE2 (`__m128`, 4 lanes) on
+//!   baseline x86_64, NEON (`float32x4_t`, 4 lanes) on aarch64, and an
+//!   always-available `[f32; 4]` scalar-array fallback elsewhere. All
+//!   loads/stores are unaligned-tolerant, so correctness never depends
+//!   on alignment — the arena's 32-byte alignment (`arena.rs`) is a
+//!   throughput contract, not a safety one.
+//! * The row kernels (`axpy`, `dot`, `scale`, the `cmul_*_rows` complex
+//!   family, the reduction helpers) — each one carries its own scalar
+//!   loop, kept as the equivalence oracle and bench baseline, and
+//!   dispatches per call on [`force_scalar`].
+//!
+//! Dispatch tiers (mirroring `pool::set_force_inline`):
+//!
+//! * `CAT_FORCE_SCALAR=1` in the environment flips the process-global
+//!   default, so a whole test/bench run exercises the scalar oracles
+//!   (the CI forced-scalar variant);
+//! * [`set_force_scalar`] is a thread-local override for targeted
+//!   equivalence tests on the calling thread;
+//! * [`set_force_scalar_global`] flips the process-global default at
+//!   runtime — pool workers see it too, which is what the
+//!   simd-vs-scalar bench columns use.
+//!
+//! Numerics contract (the bit-identical-or-pinned discipline of
+//! PRs 2/4): every *element-wise* kernel performs exactly the same
+//! scalar operations in the same per-element order as its scalar loop —
+//! no hardware FMA anywhere, mul and add round separately — so those
+//! paths are bit-identical across all dispatch tiers and lane widths.
+//! *Reductions* (`dot`, `sum`, `sumsq_diff`, the tail of `max` on NaN
+//! inputs) fold LANES partial accumulators and therefore reassociate;
+//! they are pinned to the scalar oracle by tolerance proptests instead
+//! (`tests/proptests.rs`). `max` over finite floats is exact under any
+//! association.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+// ---------------------------------------------------------------------------
+// dispatch: forced-scalar tiers
+// ---------------------------------------------------------------------------
+
+/// Process-global forced-scalar default, seeded once from
+/// `CAT_FORCE_SCALAR` (any non-empty value other than `0`).
+static FORCE_SCALAR_GLOBAL: AtomicBool = AtomicBool::new(false);
+static FORCE_SCALAR_ENV: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+
+thread_local! {
+    /// Per-thread override: `None` defers to the global default.
+    static FORCE_SCALAR_TLS: std::cell::Cell<Option<bool>> =
+        const { std::cell::Cell::new(None) };
+}
+
+fn env_force_scalar() -> bool {
+    *FORCE_SCALAR_ENV.get_or_init(|| {
+        match std::env::var("CAT_FORCE_SCALAR") {
+            Ok(v) => !(v.is_empty() || v == "0"),
+            Err(_) => false,
+        }
+    })
+}
+
+/// Force every simd kernel on *this thread* onto its scalar oracle
+/// (equivalence tests). Mirrors `pool::set_force_inline`; pass `false`
+/// to drop back to the global default.
+pub fn set_force_scalar(on: bool) {
+    FORCE_SCALAR_TLS.with(|f| f.set(if on { Some(true) } else { None }));
+}
+
+/// Flip the process-global default — pool workers included. This is
+/// what the bench simd-vs-scalar columns toggle; tests that only need
+/// the calling thread should prefer [`set_force_scalar`].
+pub fn set_force_scalar_global(on: bool) {
+    FORCE_SCALAR_GLOBAL.store(on, Ordering::Relaxed);
+}
+
+/// Should kernels take their scalar path on this thread right now?
+#[inline]
+pub fn force_scalar() -> bool {
+    FORCE_SCALAR_TLS.with(|f| f.get()).unwrap_or_else(|| {
+        FORCE_SCALAR_GLOBAL.load(Ordering::Relaxed) || env_force_scalar()
+    })
+}
+
+/// Which vector backend this build compiled in (bench/report labels).
+pub fn backend_name() -> &'static str {
+    #[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+    {
+        "avx2_f32x8"
+    }
+    #[cfg(all(target_arch = "x86_64", not(target_feature = "avx2")))]
+    {
+        "sse2_f32x4"
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        "neon_f32x4"
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        "scalar_f32x4"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// F32xN: the compile-time-width vector type
+// ---------------------------------------------------------------------------
+
+/// Lanes per [`F32xN`]. Arena frames are padded so every handed-out
+/// slice starts `LANES`-aligned (32 bytes at the widest tier).
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+pub const LANES: usize = 8;
+#[cfg(not(all(target_arch = "x86_64", target_feature = "avx2")))]
+pub const LANES: usize = 4;
+
+/// A `LANES`-wide f32 vector. Operations never use hardware FMA so that
+/// element-wise kernels stay bit-identical to their scalar oracles.
+#[derive(Clone, Copy)]
+pub struct F32xN(Repr);
+
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+type Repr = std::arch::x86_64::__m256;
+#[cfg(all(target_arch = "x86_64", not(target_feature = "avx2")))]
+type Repr = std::arch::x86_64::__m128;
+#[cfg(target_arch = "aarch64")]
+type Repr = std::arch::aarch64::float32x4_t;
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+type Repr = [f32; LANES];
+
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+impl F32xN {
+    #[inline]
+    pub fn splat(x: f32) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm256_set1_ps(x)) }
+    }
+
+    /// Load the first `LANES` elements of `xs` (unaligned-tolerant).
+    #[inline]
+    pub fn load(xs: &[f32]) -> Self {
+        debug_assert!(xs.len() >= LANES);
+        unsafe { F32xN(std::arch::x86_64::_mm256_loadu_ps(xs.as_ptr())) }
+    }
+
+    /// Store into the first `LANES` elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        debug_assert!(out.len() >= LANES);
+        unsafe { std::arch::x86_64::_mm256_storeu_ps(out.as_mut_ptr(), self.0) }
+    }
+
+    #[inline]
+    pub fn add(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm256_add_ps(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm256_sub_ps(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm256_mul_ps(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn max(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm256_max_ps(self.0, o.0)) }
+    }
+
+    /// Lane values as an array (reduction folds run in lane order).
+    #[inline]
+    pub fn to_array(self) -> [f32; LANES] {
+        let mut a = [0.0f32; LANES];
+        self.store(&mut a);
+        a
+    }
+}
+
+#[cfg(all(target_arch = "x86_64", not(target_feature = "avx2")))]
+impl F32xN {
+    #[inline]
+    pub fn splat(x: f32) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm_set1_ps(x)) }
+    }
+
+    /// Load the first `LANES` elements of `xs` (unaligned-tolerant).
+    #[inline]
+    pub fn load(xs: &[f32]) -> Self {
+        debug_assert!(xs.len() >= LANES);
+        unsafe { F32xN(std::arch::x86_64::_mm_loadu_ps(xs.as_ptr())) }
+    }
+
+    /// Store into the first `LANES` elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        debug_assert!(out.len() >= LANES);
+        unsafe { std::arch::x86_64::_mm_storeu_ps(out.as_mut_ptr(), self.0) }
+    }
+
+    #[inline]
+    pub fn add(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm_add_ps(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm_sub_ps(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm_mul_ps(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn max(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::x86_64::_mm_max_ps(self.0, o.0)) }
+    }
+
+    /// Lane values as an array (reduction folds run in lane order).
+    #[inline]
+    pub fn to_array(self) -> [f32; LANES] {
+        let mut a = [0.0f32; LANES];
+        self.store(&mut a);
+        a
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+impl F32xN {
+    #[inline]
+    pub fn splat(x: f32) -> Self {
+        unsafe { F32xN(std::arch::aarch64::vdupq_n_f32(x)) }
+    }
+
+    /// Load the first `LANES` elements of `xs` (unaligned-tolerant).
+    #[inline]
+    pub fn load(xs: &[f32]) -> Self {
+        debug_assert!(xs.len() >= LANES);
+        unsafe { F32xN(std::arch::aarch64::vld1q_f32(xs.as_ptr())) }
+    }
+
+    /// Store into the first `LANES` elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        debug_assert!(out.len() >= LANES);
+        unsafe { std::arch::aarch64::vst1q_f32(out.as_mut_ptr(), self.0) }
+    }
+
+    #[inline]
+    pub fn add(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::aarch64::vaddq_f32(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn sub(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::aarch64::vsubq_f32(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::aarch64::vmulq_f32(self.0, o.0)) }
+    }
+
+    #[inline]
+    pub fn max(self, o: Self) -> Self {
+        unsafe { F32xN(std::arch::aarch64::vmaxq_f32(self.0, o.0)) }
+    }
+
+    /// Lane values as an array (reduction folds run in lane order).
+    #[inline]
+    pub fn to_array(self) -> [f32; LANES] {
+        let mut a = [0.0f32; LANES];
+        self.store(&mut a);
+        a
+    }
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+impl F32xN {
+    #[inline]
+    pub fn splat(x: f32) -> Self {
+        F32xN([x; LANES])
+    }
+
+    /// Load the first `LANES` elements of `xs`.
+    #[inline]
+    pub fn load(xs: &[f32]) -> Self {
+        let mut a = [0.0f32; LANES];
+        a.copy_from_slice(&xs[..LANES]);
+        F32xN(a)
+    }
+
+    /// Store into the first `LANES` elements of `out`.
+    #[inline]
+    pub fn store(self, out: &mut [f32]) {
+        out[..LANES].copy_from_slice(&self.0);
+    }
+
+    #[inline]
+    pub fn add(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (v, w) in a.iter_mut().zip(&o.0) {
+            *v += w;
+        }
+        F32xN(a)
+    }
+
+    #[inline]
+    pub fn sub(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (v, w) in a.iter_mut().zip(&o.0) {
+            *v -= w;
+        }
+        F32xN(a)
+    }
+
+    #[inline]
+    pub fn mul(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (v, w) in a.iter_mut().zip(&o.0) {
+            *v *= w;
+        }
+        F32xN(a)
+    }
+
+    #[inline]
+    pub fn max(self, o: Self) -> Self {
+        let mut a = self.0;
+        for (v, w) in a.iter_mut().zip(&o.0) {
+            *v = v.max(*w);
+        }
+        F32xN(a)
+    }
+
+    /// Lane values as an array (reduction folds run in lane order).
+    #[inline]
+    pub fn to_array(self) -> [f32; LANES] {
+        self.0
+    }
+}
+
+impl F32xN {
+    /// Horizontal sum, folding lanes in ascending order (one fixed
+    /// reassociation vs the scalar loop — tolerance-pinned).
+    #[inline]
+    pub fn hsum(self) -> f32 {
+        self.to_array().iter().sum()
+    }
+
+    /// Horizontal max in ascending lane order.
+    #[inline]
+    pub fn hmax(self) -> f32 {
+        self.to_array()
+            .iter()
+            .fold(f32::NEG_INFINITY, |m, &v| m.max(v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar complex helpers (the one true definition — moved from autograd)
+// ---------------------------------------------------------------------------
+
+/// `a · b` on split-complex scalars.
+#[inline]
+pub fn cmul(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+    (ar * br - ai * bi, ar * bi + ai * br)
+}
+
+/// `conj(a) · b` on split-complex scalars.
+#[inline]
+pub fn cmul_conj_a(ar: f32, ai: f32, br: f32, bi: f32) -> (f32, f32) {
+    (ar * br + ai * bi, ar * bi - ai * br)
+}
+
+// ---------------------------------------------------------------------------
+// real row kernels
+// ---------------------------------------------------------------------------
+
+/// `out[i] += a * x[i]` — element-wise, bit-identical across tiers.
+pub fn axpy(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    if force_scalar() {
+        for (o, &xv) in out.iter_mut().zip(x) {
+            *o += a * xv;
+        }
+        return;
+    }
+    let n = out.len();
+    let av = F32xN::splat(a);
+    let mut i = 0;
+    while i + LANES <= n {
+        let r = F32xN::load(&out[i..]).add(av.mul(F32xN::load(&x[i..])));
+        r.store(&mut out[i..]);
+        i += LANES;
+    }
+    for (o, &xv) in out[i..].iter_mut().zip(&x[i..]) {
+        *o += a * xv;
+    }
+}
+
+/// `out[i] += x[i]` — element-wise, bit-identical across tiers.
+pub fn add_assign(out: &mut [f32], x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    if force_scalar() {
+        for (o, &xv) in out.iter_mut().zip(x) {
+            *o += xv;
+        }
+        return;
+    }
+    let n = out.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let r = F32xN::load(&out[i..]).add(F32xN::load(&x[i..]));
+        r.store(&mut out[i..]);
+        i += LANES;
+    }
+    for (o, &xv) in out[i..].iter_mut().zip(&x[i..]) {
+        *o += xv;
+    }
+}
+
+/// `out[i] += a[i] * b[i]` — element-wise, bit-identical across tiers.
+pub fn mul_acc(out: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert_eq!(out.len(), a.len());
+    debug_assert_eq!(out.len(), b.len());
+    if force_scalar() {
+        for (o, (&av, &bv)) in out.iter_mut().zip(a.iter().zip(b)) {
+            *o += av * bv;
+        }
+        return;
+    }
+    let n = out.len();
+    let mut i = 0;
+    while i + LANES <= n {
+        let r = F32xN::load(&out[i..])
+            .add(F32xN::load(&a[i..]).mul(F32xN::load(&b[i..])));
+        r.store(&mut out[i..]);
+        i += LANES;
+    }
+    for (o, (&av, &bv)) in out[i..].iter_mut().zip(a[i..].iter().zip(&b[i..]))
+    {
+        *o += av * bv;
+    }
+}
+
+/// `xs[i] *= s` — element-wise, bit-identical across tiers.
+pub fn scale(xs: &mut [f32], s: f32) {
+    if force_scalar() {
+        for v in xs.iter_mut() {
+            *v *= s;
+        }
+        return;
+    }
+    let n = xs.len();
+    let sv = F32xN::splat(s);
+    let mut i = 0;
+    while i + LANES <= n {
+        F32xN::load(&xs[i..]).mul(sv).store(&mut xs[i..]);
+        i += LANES;
+    }
+    for v in xs[i..].iter_mut() {
+        *v *= s;
+    }
+}
+
+/// `Σ a[i]·b[i]` — LANES partial accumulators + ordered horizontal sum;
+/// reassociates vs the scalar fold, tolerance-pinned.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    if force_scalar() || a.len() < LANES {
+        let mut s = 0.0f32;
+        for (&av, &bv) in a.iter().zip(b) {
+            s += av * bv;
+        }
+        return s;
+    }
+    let n = a.len();
+    let mut acc = F32xN::splat(0.0);
+    let mut i = 0;
+    while i + LANES <= n {
+        acc = acc.add(F32xN::load(&a[i..]).mul(F32xN::load(&b[i..])));
+        i += LANES;
+    }
+    let mut s = acc.hsum();
+    for (&av, &bv) in a[i..].iter().zip(&b[i..]) {
+        s += av * bv;
+    }
+    s
+}
+
+/// `Σ a[i]·b[i]·c[i]` — the LayerNorm-backward second moment.
+/// Reassociates vs the scalar fold, tolerance-pinned.
+pub fn dot3(a: &[f32], b: &[f32], c: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), c.len());
+    if force_scalar() || a.len() < LANES {
+        let mut s = 0.0f32;
+        for ((&av, &bv), &cv) in a.iter().zip(b).zip(c) {
+            s += av * bv * cv;
+        }
+        return s;
+    }
+    let n = a.len();
+    let mut acc = F32xN::splat(0.0);
+    let mut i = 0;
+    while i + LANES <= n {
+        acc = acc.add(F32xN::load(&a[i..])
+            .mul(F32xN::load(&b[i..]))
+            .mul(F32xN::load(&c[i..])));
+        i += LANES;
+    }
+    let mut s = acc.hsum();
+    for ((&av, &bv), &cv) in a[i..].iter().zip(&b[i..]).zip(&c[i..]) {
+        s += av * bv * cv;
+    }
+    s
+}
+
+/// `Σ xs[i]` — reassociates vs the scalar fold, tolerance-pinned.
+pub fn sum(xs: &[f32]) -> f32 {
+    if force_scalar() || xs.len() < LANES {
+        return xs.iter().sum();
+    }
+    let n = xs.len();
+    let mut acc = F32xN::splat(0.0);
+    let mut i = 0;
+    while i + LANES <= n {
+        acc = acc.add(F32xN::load(&xs[i..]));
+        i += LANES;
+    }
+    let mut s = acc.hsum();
+    for &v in &xs[i..] {
+        s += v;
+    }
+    s
+}
+
+/// `Σ (xs[i] − mean)²` — reassociates, tolerance-pinned (LayerNorm
+/// variance pass).
+pub fn sumsq_diff(xs: &[f32], mean: f32) -> f32 {
+    if force_scalar() || xs.len() < LANES {
+        let mut s = 0.0f32;
+        for &v in xs {
+            let t = v - mean;
+            s += t * t;
+        }
+        return s;
+    }
+    let n = xs.len();
+    let mv = F32xN::splat(mean);
+    let mut acc = F32xN::splat(0.0);
+    let mut i = 0;
+    while i + LANES <= n {
+        let t = F32xN::load(&xs[i..]).sub(mv);
+        acc = acc.add(t.mul(t));
+        i += LANES;
+    }
+    let mut s = acc.hsum();
+    for &v in &xs[i..] {
+        let t = v - mean;
+        s += t * t;
+    }
+    s
+}
+
+/// Row maximum (`NEG_INFINITY` on empty). Exact under reassociation for
+/// the finite inputs the softmax path feeds it.
+pub fn max(xs: &[f32]) -> f32 {
+    if force_scalar() || xs.len() < LANES {
+        return xs.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+    }
+    let n = xs.len();
+    let mut acc = F32xN::load(xs);
+    let mut i = LANES;
+    while i + LANES <= n {
+        acc = acc.max(F32xN::load(&xs[i..]));
+        i += LANES;
+    }
+    let mut m = acc.hmax();
+    for &v in &xs[i..] {
+        m = m.max(v);
+    }
+    m
+}
+
+// ---------------------------------------------------------------------------
+// split-complex row kernels (the pointwise spectra products)
+// ---------------------------------------------------------------------------
+
+/// `b[k] ← a[k] · b[k]` on split-complex rows — element-wise,
+/// bit-identical across tiers.
+pub fn cmul_rows(ar: &[f32], ai: &[f32], br: &mut [f32], bi: &mut [f32]) {
+    let f = br.len();
+    debug_assert!(ar.len() == f && ai.len() == f && bi.len() == f);
+    if force_scalar() {
+        for k in 0..f {
+            let (re, im) = cmul(ar[k], ai[k], br[k], bi[k]);
+            br[k] = re;
+            bi[k] = im;
+        }
+        return;
+    }
+    let mut k = 0;
+    while k + LANES <= f {
+        let are = F32xN::load(&ar[k..]);
+        let aim = F32xN::load(&ai[k..]);
+        let bre = F32xN::load(&br[k..]);
+        let bim = F32xN::load(&bi[k..]);
+        are.mul(bre).sub(aim.mul(bim)).store(&mut br[k..]);
+        are.mul(bim).add(aim.mul(bre)).store(&mut bi[k..]);
+        k += LANES;
+    }
+    while k < f {
+        let (re, im) = cmul(ar[k], ai[k], br[k], bi[k]);
+        br[k] = re;
+        bi[k] = im;
+        k += 1;
+    }
+}
+
+/// `b[k] ← conj(a[k]) · b[k]` on split-complex rows — element-wise,
+/// bit-identical across tiers.
+pub fn cmul_conj_a_rows(ar: &[f32], ai: &[f32], br: &mut [f32],
+                        bi: &mut [f32]) {
+    let f = br.len();
+    debug_assert!(ar.len() == f && ai.len() == f && bi.len() == f);
+    if force_scalar() {
+        for k in 0..f {
+            let (re, im) = cmul_conj_a(ar[k], ai[k], br[k], bi[k]);
+            br[k] = re;
+            bi[k] = im;
+        }
+        return;
+    }
+    let mut k = 0;
+    while k + LANES <= f {
+        let are = F32xN::load(&ar[k..]);
+        let aim = F32xN::load(&ai[k..]);
+        let bre = F32xN::load(&br[k..]);
+        let bim = F32xN::load(&bi[k..]);
+        are.mul(bre).add(aim.mul(bim)).store(&mut br[k..]);
+        are.mul(bim).sub(aim.mul(bre)).store(&mut bi[k..]);
+        k += LANES;
+    }
+    while k < f {
+        let (re, im) = cmul_conj_a(ar[k], ai[k], br[k], bi[k]);
+        br[k] = re;
+        bi[k] = im;
+        k += 1;
+    }
+}
+
+/// `acc[k] += a[k] · b[k]` on split-complex rows — element-wise,
+/// bit-identical across tiers.
+pub fn cmul_acc_rows(ar: &[f32], ai: &[f32], br: &[f32], bi: &[f32],
+                     acc_re: &mut [f32], acc_im: &mut [f32]) {
+    let f = acc_re.len();
+    debug_assert!(ar.len() == f && ai.len() == f && br.len() == f
+                  && bi.len() == f && acc_im.len() == f);
+    if force_scalar() {
+        for k in 0..f {
+            let (re, im) = cmul(ar[k], ai[k], br[k], bi[k]);
+            acc_re[k] += re;
+            acc_im[k] += im;
+        }
+        return;
+    }
+    let mut k = 0;
+    while k + LANES <= f {
+        let are = F32xN::load(&ar[k..]);
+        let aim = F32xN::load(&ai[k..]);
+        let bre = F32xN::load(&br[k..]);
+        let bim = F32xN::load(&bi[k..]);
+        F32xN::load(&acc_re[k..])
+            .add(are.mul(bre).sub(aim.mul(bim)))
+            .store(&mut acc_re[k..]);
+        F32xN::load(&acc_im[k..])
+            .add(are.mul(bim).add(aim.mul(bre)))
+            .store(&mut acc_im[k..]);
+        k += LANES;
+    }
+    while k < f {
+        let (re, im) = cmul(ar[k], ai[k], br[k], bi[k]);
+        acc_re[k] += re;
+        acc_im[k] += im;
+        k += 1;
+    }
+}
+
+/// `acc[k] += conj(a[k]) · b[k]` on split-complex rows — element-wise,
+/// bit-identical across tiers.
+pub fn cmul_conj_a_acc_rows(ar: &[f32], ai: &[f32], br: &[f32], bi: &[f32],
+                            acc_re: &mut [f32], acc_im: &mut [f32]) {
+    let f = acc_re.len();
+    debug_assert!(ar.len() == f && ai.len() == f && br.len() == f
+                  && bi.len() == f && acc_im.len() == f);
+    if force_scalar() {
+        for k in 0..f {
+            let (re, im) = cmul_conj_a(ar[k], ai[k], br[k], bi[k]);
+            acc_re[k] += re;
+            acc_im[k] += im;
+        }
+        return;
+    }
+    let mut k = 0;
+    while k + LANES <= f {
+        let are = F32xN::load(&ar[k..]);
+        let aim = F32xN::load(&ai[k..]);
+        let bre = F32xN::load(&br[k..]);
+        let bim = F32xN::load(&bi[k..]);
+        F32xN::load(&acc_re[k..])
+            .add(are.mul(bre).add(aim.mul(bim)))
+            .store(&mut acc_re[k..]);
+        F32xN::load(&acc_im[k..])
+            .add(are.mul(bim).sub(aim.mul(bre)))
+            .store(&mut acc_im[k..]);
+        k += LANES;
+    }
+    while k < f {
+        let (re, im) = cmul_conj_a(ar[k], ai[k], br[k], bi[k]);
+        acc_re[k] += re;
+        acc_im[k] += im;
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adversarial lengths around the lane width, plus zero and one.
+    fn shapes() -> Vec<usize> {
+        vec![0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3, 37]
+    }
+
+    fn randv(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::data::Rng::new(seed);
+        (0..len).map(|_| rng.normal()).collect()
+    }
+
+    /// Run `f` once under vector dispatch and once forced-scalar,
+    /// returning both results.
+    fn both<T>(mut f: impl FnMut() -> T) -> (T, T) {
+        set_force_scalar(false);
+        let fast = f();
+        set_force_scalar(true);
+        let slow = f();
+        set_force_scalar(false);
+        (fast, slow)
+    }
+
+    #[test]
+    fn elementwise_kernels_bit_match_scalar() {
+        for n in shapes() {
+            let x = randv(n, 1);
+            let y = randv(n, 2);
+            let (a, b) = both(|| {
+                let mut o = y.clone();
+                axpy(&mut o, &x, 1.5);
+                o
+            });
+            assert_eq!(a, b, "axpy n={n}");
+            let (a, b) = both(|| {
+                let mut o = y.clone();
+                add_assign(&mut o, &x);
+                o
+            });
+            assert_eq!(a, b, "add_assign n={n}");
+            let (a, b) = both(|| {
+                let mut o = x.clone();
+                scale(&mut o, -0.37);
+                o
+            });
+            assert_eq!(a, b, "scale n={n}");
+            let (a, b) = both(|| {
+                let mut o = y.clone();
+                mul_acc(&mut o, &x, &y);
+                o
+            });
+            assert_eq!(a, b, "mul_acc n={n}");
+        }
+    }
+
+    #[test]
+    fn reductions_match_scalar_within_tolerance() {
+        for n in shapes() {
+            let x = randv(n, 3);
+            let y = randv(n, 4);
+            let (a, b) = both(|| dot(&x, &y));
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0),
+                    "dot n={n}: {a} vs {b}");
+            let (a, b) = both(|| dot3(&x, &y, &x));
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0),
+                    "dot3 n={n}: {a} vs {b}");
+            let (a, b) = both(|| sum(&x));
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0),
+                    "sum n={n}: {a} vs {b}");
+            let (a, b) = both(|| sumsq_diff(&x, 0.25));
+            assert!((a - b).abs() <= 1e-5 * a.abs().max(b.abs()).max(1.0),
+                    "sumsq n={n}: {a} vs {b}");
+            let (a, b) = both(|| max(&x));
+            assert_eq!(a.to_bits(), b.to_bits(), "max n={n}");
+        }
+    }
+
+    #[test]
+    fn complex_rows_bit_match_scalar() {
+        for n in shapes() {
+            let ar = randv(n, 5);
+            let ai = randv(n, 6);
+            let br = randv(n, 7);
+            let bi = randv(n, 8);
+            let (a, b) = both(|| {
+                let (mut r, mut i) = (br.clone(), bi.clone());
+                cmul_rows(&ar, &ai, &mut r, &mut i);
+                (r, i)
+            });
+            assert_eq!(a, b, "cmul_rows n={n}");
+            let (a, b) = both(|| {
+                let (mut r, mut i) = (br.clone(), bi.clone());
+                cmul_conj_a_rows(&ar, &ai, &mut r, &mut i);
+                (r, i)
+            });
+            assert_eq!(a, b, "cmul_conj_a_rows n={n}");
+            let (a, b) = both(|| {
+                let (mut r, mut i) = (vec![0.1f32; n], vec![-0.2f32; n]);
+                cmul_acc_rows(&ar, &ai, &br, &bi, &mut r, &mut i);
+                (r, i)
+            });
+            assert_eq!(a, b, "cmul_acc_rows n={n}");
+            let (a, b) = both(|| {
+                let (mut r, mut i) = (vec![0.1f32; n], vec![-0.2f32; n]);
+                cmul_conj_a_acc_rows(&ar, &ai, &br, &bi, &mut r, &mut i);
+                (r, i)
+            });
+            assert_eq!(a, b, "cmul_conj_a_acc_rows n={n}");
+        }
+    }
+
+    #[test]
+    fn negative_zero_and_subnormals_bit_match() {
+        // adversarial values: −0.0, subnormals, mixed tiny magnitudes
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        let x = vec![-0.0, tiny, -tiny, 1.0e-38, -1.0e-38, 0.0, 2.5,
+                     -0.0, tiny, -0.0, 1.5e-39];
+        let y = vec![-0.0, -tiny, tiny, -1.0e-38, 1.0e-38, -0.0, -2.5,
+                     tiny, -0.0, 0.0, -1.5e-39];
+        let (a, b) = both(|| {
+            let mut o = y.clone();
+            axpy(&mut o, &x, -0.0);
+            o.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        });
+        assert_eq!(a, b, "axpy on -0/subnormals");
+        let (a, b) = both(|| {
+            let (mut r, mut i) = (x.clone(), y.clone());
+            cmul_rows(&x, &y, &mut r, &mut i);
+            (r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+             i.iter().map(|v| v.to_bits()).collect::<Vec<_>>())
+        });
+        assert_eq!(a, b, "cmul_rows on -0/subnormals");
+        let (a, b) = both(|| max(&x));
+        assert_eq!(a.to_bits(), b.to_bits(), "max on -0/subnormals");
+    }
+
+    #[test]
+    fn global_force_scalar_reaches_other_threads() {
+        set_force_scalar_global(true);
+        let seen = std::thread::spawn(force_scalar).join().unwrap();
+        set_force_scalar_global(false);
+        assert!(seen, "global forced-scalar must reach spawned threads");
+        assert!(!force_scalar());
+    }
+}

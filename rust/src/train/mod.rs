@@ -778,6 +778,11 @@ pub fn native_specs() -> Vec<TrainSpec> {
             paper_key: None,
         },
         TrainSpec {
+            name: "native_vit_cat_conv",
+            cfg: TrainConfig::vit(Mixer::CatConv, false),
+            paper_key: None,
+        },
+        TrainSpec {
             name: "native_lm_masked_attention",
             cfg: TrainConfig::lm(Mixer::Attention, false, false),
             paper_key: Some("lm_gpt2_masked_attention"),
@@ -800,6 +805,11 @@ pub fn native_specs() -> Vec<TrainSpec> {
         TrainSpec {
             name: "native_lm_masked_circulant",
             cfg: TrainConfig::lm(Mixer::Circulant, false, false),
+            paper_key: None,
+        },
+        TrainSpec {
+            name: "native_lm_masked_cat_conv",
+            cfg: TrainConfig::lm(Mixer::CatConv, false, false),
             paper_key: None,
         },
         TrainSpec {

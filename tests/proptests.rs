@@ -1160,3 +1160,216 @@ fn circulant_block_gradients_match_finite_difference() {
     };
     block_fd_check(cfg, 7, 8);
 }
+
+#[test]
+fn cat_conv_block_gradients_match_finite_difference() {
+    use cat::native::{Mixer, TaskKind, TrainConfig};
+    // the conv branch shares dV with the correlation branch and owns the
+    // taps gradient; N=4 < CONV_TAPS also exercises the tap-rotation
+    // aliasing (t and t+n wrap to the same circular shift)
+    let cfg = TrainConfig {
+        d_model: 8,
+        n_heads: 2,
+        n_layers: 1,
+        batch_size: 2,
+        mixer: Mixer::CatConv,
+        alternate: false,
+        fnet_truncate: false,
+        task: TaskKind::Vit {
+            image_size: 32,
+            patch_size: 16, // 4 tokens
+            n_channels: 3,
+            n_classes: 10,
+        },
+    };
+    block_fd_check(cfg, 11, 8);
+}
+
+// ---------------- portable SIMD kernel layer ----------------
+
+/// Adversarial row lengths around the vector width: 1, lane−1, lane,
+/// lane+1, a non-multiple tail, 37, plus a random draw.
+fn simd_adversarial_len(rng: &mut Rng) -> usize {
+    use cat::native::simd::LANES;
+    let menu = [1, 2, LANES - 1, LANES, LANES + 1, 2 * LANES + 3, 37];
+    let pick = rng.below(menu.len() + 1);
+    if pick < menu.len() {
+        menu[pick]
+    } else {
+        1 + rng.below(96)
+    }
+}
+
+/// Adversarial f32 rows: normals across magnitudes, negative zero, and
+/// subnormals of both signs.
+fn simd_adversarial_vals(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|_| match rng.below(8) {
+            0 => -0.0,
+            1 => f32::from_bits(1 + rng.below(0x7f_ffff) as u32),
+            2 => -f32::from_bits(1 + rng.below(0x7f_ffff) as u32),
+            3 => rng.normal() * 1e-20,
+            4 => rng.normal() * 1e20,
+            _ => rng.normal(),
+        })
+        .collect()
+}
+
+#[test]
+fn simd_elementwise_kernels_bit_match_forced_scalar() {
+    use cat::native::simd;
+    // every element-wise kernel keeps per-element op order, so the
+    // vector tier must be bit-identical to the retained scalar oracle —
+    // including −0.0 and subnormal payloads
+    for_all("simd_elementwise_bit_match", |rng| {
+        let n = simd_adversarial_len(rng);
+        let a = simd_adversarial_vals(rng, n);
+        let b = simd_adversarial_vals(rng, n);
+        let c = simd_adversarial_vals(rng, n);
+        let d = simd_adversarial_vals(rng, n);
+        let s = rng.normal();
+        let bits =
+            |xs: &[f32]| xs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let mut run = |forced: bool| -> Vec<Vec<u32>> {
+            simd::set_force_scalar(forced);
+            let mut outs = Vec::new();
+            let mut o = a.clone();
+            simd::axpy(&mut o, &b, s);
+            outs.push(bits(&o));
+            let mut o = a.clone();
+            simd::add_assign(&mut o, &b);
+            outs.push(bits(&o));
+            let mut o = a.clone();
+            simd::mul_acc(&mut o, &b, &c);
+            outs.push(bits(&o));
+            let mut o = a.clone();
+            simd::scale(&mut o, s);
+            outs.push(bits(&o));
+            let (mut re, mut im) = (c.clone(), d.clone());
+            simd::cmul_rows(&a, &b, &mut re, &mut im);
+            outs.push(bits(&re));
+            outs.push(bits(&im));
+            let (mut re, mut im) = (c.clone(), d.clone());
+            simd::cmul_conj_a_rows(&a, &b, &mut re, &mut im);
+            outs.push(bits(&re));
+            outs.push(bits(&im));
+            let (mut re, mut im) = (a.clone(), b.clone());
+            simd::cmul_acc_rows(&a, &b, &c, &d, &mut re, &mut im);
+            outs.push(bits(&re));
+            outs.push(bits(&im));
+            let (mut re, mut im) = (a.clone(), b.clone());
+            simd::cmul_conj_a_acc_rows(&a, &b, &c, &d, &mut re, &mut im);
+            outs.push(bits(&re));
+            outs.push(bits(&im));
+            simd::set_force_scalar(false);
+            outs
+        };
+        let vec_out = run(false);
+        let sc_out = run(true);
+        assert_eq!(vec_out, sc_out,
+                   "n={n}: vector and forced-scalar paths disagree bitwise");
+        // max: value-equal (±0.0 compare equal; the sign bit is allowed
+        // to differ between the hardware and scalar fold)
+        simd::set_force_scalar(false);
+        let vm = simd::max(&a);
+        simd::set_force_scalar(true);
+        let sm = simd::max(&a);
+        simd::set_force_scalar(false);
+        assert!(vm == sm, "n={n}: max {vm} vs scalar {sm}");
+    });
+}
+
+#[test]
+fn simd_reductions_match_forced_scalar_within_tolerance() {
+    use cat::native::simd;
+    // dot/dot3/sum/sumsq_diff reassociate (lane partials + ordered
+    // horizontal sum) — pinned to the scalar fold at f32 tolerance
+    for_all("simd_reductions_tolerance", |rng| {
+        let n = simd_adversarial_len(rng);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let c: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mean = rng.normal();
+        let mut run = |forced: bool| -> [f32; 4] {
+            simd::set_force_scalar(forced);
+            let r = [simd::dot(&a, &b), simd::dot3(&a, &b, &c),
+                     simd::sum(&a), simd::sumsq_diff(&a, mean)];
+            simd::set_force_scalar(false);
+            r
+        };
+        let v = run(false);
+        let s = run(true);
+        for (i, (x, y)) in v.iter().zip(&s).enumerate() {
+            let tol = 1e-4 * (n as f32).sqrt().max(1.0)
+                * x.abs().max(y.abs()).max(1.0);
+            assert!((x - y).abs() <= tol,
+                    "reduction {i} n={n}: vector {x} vs scalar {y}");
+        }
+    });
+}
+
+#[test]
+fn conv_stripe_kernels_match_naive_on_adversarial_shapes() {
+    use cat::native::mixer::kernels::{conv_acc_stripe, conv_bwd_stripe,
+                                      conv_naive};
+    use cat::native::simd;
+    // the cat_conv tap convolution on short rows (k > n wraps), odd
+    // strides, and head offsets — forward pinned to the rolled-index
+    // oracle, backward to the direct adjoint; the vector and
+    // forced-scalar tiers must agree bitwise (axpy is element-wise)
+    for_all("conv_stripe_adversarial", |rng| {
+        let dh = 1 + rng.below(4);
+        let n: usize = [1usize, 2, 3, 4, 5, 8, 9, 16, 37][rng.below(9)];
+        let k = 1 + rng.below(12);
+        let heads = 1 + rng.below(3);
+        let stride = dh * heads;
+        let c0 = dh * rng.below(heads);
+        let taps: Vec<f32> =
+            (0..k * stride).map(|_| rng.normal()).collect();
+        let v: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let dout: Vec<f32> = (0..dh * n).map(|_| rng.normal()).collect();
+        let want = conv_naive(&taps, k, stride, c0, &v, dh, n);
+        let mut got = vec![0.0f32; dh * n];
+        conv_acc_stripe(&taps, k, stride, c0, &v, dh, n, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs()
+                        <= 1e-4 * g.abs().max(w.abs()).max(1.0),
+                    "fwd dh={dh} n={n} k={k} elem {i}: {g} vs {w}");
+        }
+        simd::set_force_scalar(true);
+        let mut scalar = vec![0.0f32; dh * n];
+        conv_acc_stripe(&taps, k, stride, c0, &v, dh, n, &mut scalar);
+        simd::set_force_scalar(false);
+        assert_eq!(got.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+                   scalar.iter().map(|g| g.to_bits()).collect::<Vec<_>>(),
+                   "conv forward tiers diverged bitwise");
+        let mut dv = vec![0.0f32; dh * n];
+        let mut dtaps = vec![0.0f32; k * stride];
+        conv_bwd_stripe(&taps, k, stride, c0, &v, &dout, dh, n, &mut dv,
+                        &mut dtaps);
+        for c in 0..dh {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for t in 0..k {
+                    want += taps[t * stride + c0 + c]
+                        * dout[c * n + (j + t) % n];
+                }
+                let g = dv[c * n + j];
+                assert!((g - want).abs()
+                            <= 1e-4 * g.abs().max(want.abs()).max(1.0),
+                        "dv c={c} j={j}: {g} vs {want}");
+            }
+            for t in 0..k {
+                let mut want = 0.0f32;
+                for i in 0..n {
+                    want += dout[c * n + i]
+                        * v[c * n + (i + n - t % n) % n];
+                }
+                let g = dtaps[t * stride + c0 + c];
+                assert!((g - want).abs()
+                            <= 1e-3 * g.abs().max(want.abs()).max(1.0),
+                        "dtaps c={c} t={t}: {g} vs {want}");
+            }
+        }
+    });
+}
